@@ -1,0 +1,93 @@
+//! Quickstart: build everything from a preset, then run each of the
+//! paper's query types once.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the native backend so it works before `make artifacts`; pass
+//! `--pjrt` (after `make artifacts`) to run the scoring through the
+//! AOT-compiled XLA executables instead.
+
+use gmips::prelude::*;
+use gmips::runtime::PjrtScorer;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+
+    // 1. configuration — the paper's ImageNet-like setting, scaled down
+    let mut cfg = Config::preset("imagenet")?;
+    cfg.data.n = 50_000;
+    cfg.data.d = 64;
+    println!("dataset: {} rows × {} dims ({})", cfg.data.n, cfg.data.d, cfg.data.kind.name());
+
+    // 2. data + scoring backend + MIPS index (the one-time preprocessing
+    //    that all queries amortize over)
+    let ds = Arc::new(gmips::data::generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = if use_pjrt {
+        println!("backend: PJRT (AOT artifacts)");
+        Arc::new(PjrtScorer::load("artifacts")?)
+    } else {
+        println!("backend: native");
+        Arc::new(NativeScorer)
+    };
+    let index = build_index(&ds, &cfg.index, backend.clone())?;
+    println!("index:   {}", index.describe());
+
+    let mut rng = Pcg64::new(7);
+    let theta = gmips::data::random_theta(&ds, cfg.data.temperature, &mut rng);
+
+    // 3. sampling (Algorithm 1): exact softmax samples in sublinear time
+    let sampler =
+        LazyGumbelSampler::new(ds.clone(), index.clone(), backend.clone(), cfg.sampler_k(), 0.0);
+    let outs = sampler.sample_many(&theta, 5, &mut rng);
+    println!(
+        "samples: {:?} (scanned {} of {} rows, k={}, lazy tail Gumbels per draw ≈ {})",
+        outs.iter().map(|o| o.id).collect::<Vec<_>>(),
+        outs[0].work.scanned,
+        ds.n,
+        outs[0].work.k,
+        outs.iter().map(|o| o.work.m).sum::<usize>() / outs.len()
+    );
+
+    // 4. partition function (Algorithm 3) vs exact
+    let est = PartitionEstimator::new(
+        ds.clone(),
+        index.clone(),
+        backend.clone(),
+        cfg.estimator_k(),
+        cfg.estimator_l(),
+    );
+    let log_z = est.estimate(&theta, &mut rng).log_z;
+    let exact = gmips::estimator::partition::exact_log_partition(&ds, backend.as_ref(), &theta);
+    println!(
+        "log Z:   estimate {:.4} vs exact {:.4} (relative error {:.2e})",
+        log_z,
+        exact,
+        ((log_z - exact).exp() - 1.0).abs()
+    );
+
+    // 5. feature expectation (Algorithm 4) — the gradient engine
+    let expect = ExpectationEstimator::new(
+        ds.clone(),
+        index.clone(),
+        backend.clone(),
+        cfg.estimator_k(),
+        cfg.estimator_l(),
+    );
+    let e = expect.expect_features(&theta, &mut rng);
+    println!(
+        "E[φ]:    estimated (‖·‖ = {:.4}), from k={} head + l={} tail rows",
+        gmips::linalg::norm(&e.mean),
+        e.work.k,
+        e.work.l
+    );
+
+    // 6. accuracy certificate (§4.2.1)
+    let top = index.top_k(&theta, cfg.sampler_k());
+    let brute = gmips::mips::brute::BruteForce::new(ds.clone(), backend.clone());
+    let mut all = vec![0f32; ds.n];
+    brute.all_scores(&theta, &mut all);
+    let tv = gmips::sampler::tv_bound::tv_bound(&all, &top);
+    println!("TV bound for this θ: {tv:.2e} (paper reports ~1e-4 at full scale)");
+    Ok(())
+}

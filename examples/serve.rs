@@ -1,0 +1,57 @@
+//! Serving demo: start the coordinator + TCP server in-process, connect a
+//! client, and run a mixed query workload — the paper's amortized
+//! inference as a service.
+//!
+//!     cargo run --release --example serve
+
+use gmips::config::Config;
+use gmips::coordinator::{Coordinator, Engine, Request, Response};
+use gmips::prelude::*;
+use gmips::server::{Client, Server};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::preset("imagenet")?;
+    cfg.data.n = 20_000;
+    cfg.data.d = 64;
+
+    println!("building engine (data + IVF index)…");
+    let engine = Arc::new(Engine::from_config(&cfg, None)?);
+    let ds = engine.ds.clone();
+    let coord = Arc::new(Coordinator::start(engine, 0, cfg.serve.queue_depth, 99));
+    let server = Server::bind(coord, "127.0.0.1:0")?;
+    let addr = server.local_addr()?;
+    println!("server on {addr}");
+    let handle = std::thread::spawn(move || server.serve());
+
+    let mut client = Client::connect(&addr)?;
+    let mut rng = Pcg64::new(3);
+
+    // mixed workload: the "sequence of related queries" the paper
+    // amortizes over — fresh θ per request
+    for i in 0..5 {
+        let theta = gmips::data::random_theta(&ds, cfg.data.temperature, &mut rng);
+        match client.call(&Request::Sample { theta: theta.clone(), count: 3 })? {
+            Response::Samples { ids, scanned, tail_m } => {
+                println!("req {i}: samples {ids:?} (scanned {scanned}, tail m {tail_m})")
+            }
+            other => println!("req {i}: unexpected {other:?}"),
+        }
+        match client.call(&Request::LogPartition { theta })? {
+            Response::LogPartition { log_z, k, l } => {
+                println!("        log Ẑ = {log_z:.4} (k={k}, l={l})")
+            }
+            other => println!("        unexpected {other:?}"),
+        }
+    }
+
+    match client.call(&Request::Stats)? {
+        Response::Stats { text } => println!("\nserver stats:\n{text}"),
+        other => println!("unexpected {other:?}"),
+    }
+
+    client.shutdown_server()?;
+    handle.join().unwrap()?;
+    println!("server stopped cleanly");
+    Ok(())
+}

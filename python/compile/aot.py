@@ -1,0 +1,113 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts for the rust
+runtime (L3).
+
+Emits, for the configured (block, d):
+
+    artifacts/scores_{B}x{d}.hlo.txt
+    artifacts/partition_{B}x{d}.hlo.txt
+    artifacts/expect_{B}x{d}.hlo.txt
+    artifacts/manifest.json
+
+HLO *text* is the interchange format (NOT ``lowered.compile()`` /
+serialized protos): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` rust crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONLY here, at build time. ``make artifacts`` re-runs this
+when the compile-path sources change; the rust binary then serves every
+request without touching Python.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--block 4096] [--dim 64]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entries(block: int, dim: int):
+    """Lower the three entry points for one (block, d) shape."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    v = jax.ShapeDtypeStruct((block, dim), f32)
+    q = jax.ShapeDtypeStruct((dim,), f32)
+    cnt = jax.ShapeDtypeStruct((), i32)
+
+    entries = [
+        (
+            "scores",
+            jax.jit(model.scores_entry).lower(v, q),
+            [[block, dim], [dim]],
+            [[block]],
+        ),
+        (
+            "partition",
+            jax.jit(model.partition_entry).lower(v, q, cnt),
+            [[block, dim], [dim], []],
+            [[1], [1]],
+        ),
+        (
+            "expect",
+            jax.jit(model.expect_entry).lower(v, q, cnt),
+            [[block, dim], [dim], []],
+            [[1], [1], [dim]],
+        ),
+    ]
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--block", type=int, default=4096, help="rows per executable call")
+    ap.add_argument("--dim", type=int, default=64, help="feature dimension d")
+    # legacy single-file mode kept for the Makefile's convenience target
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    out_dir = out_dir or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    if args.block % 256 != 0:
+        print(f"error: --block must be a multiple of the Pallas TILE (256)", file=sys.stderr)
+        sys.exit(2)
+
+    manifest = {"block": args.block, "d": args.dim, "entries": []}
+    for name, lowered, inputs, outputs in lower_entries(args.block, args.dim):
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{args.block}x{args.dim}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {"name": name, "file": fname, "inputs": inputs, "outputs": outputs}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+with nothing but `jax.numpy` ops. pytest (with hypothesis sweeps) asserts
+`assert_allclose(kernel(...), ref(...))` over shapes and inputs; the rust
+layer additionally cross-checks the AOT artifacts against its own native
+backend in `rust/tests/`.
+"""
+
+import jax.numpy as jnp
+
+# large-negative sentinel for masked lanes (safe in f32: avoids inf - inf)
+NEG = jnp.float32(-1e30)
+
+
+def scores(v, q):
+    """Scores of a row block: (B, d) @ (d,) -> (B,)."""
+    return v @ q
+
+
+def _masked_scores(v, q, count):
+    s = v @ q
+    idx = jnp.arange(v.shape[0])
+    return jnp.where(idx < count, s, NEG)
+
+
+def partition(v, q, count):
+    """Masked streaming-partition fragment of a block.
+
+    Returns (max, sumexp) with max over the first `count` rows and
+    sumexp = sum(exp(s - max)) over those rows.
+    """
+    s = _masked_scores(v, q, count)
+    m = jnp.max(s)
+    se = jnp.sum(jnp.where(jnp.arange(v.shape[0]) < count, jnp.exp(s - m), 0.0))
+    return m, se
+
+
+def expect(v, q, count):
+    """Masked expectation fragment: (max, sumexp, wsum) where
+    wsum = sum_r exp(s_r - max) * v_r over the first `count` rows.
+    """
+    s = _masked_scores(v, q, count)
+    m = jnp.max(s)
+    valid = (jnp.arange(v.shape[0]) < count).astype(v.dtype)
+    w = jnp.exp(s - m) * valid
+    se = jnp.sum(w)
+    wsum = w @ v
+    return m, se, wsum
+
+
+def log_partition_full(v, q):
+    """Direct log-sum-exp over all rows (model-level oracle)."""
+    s = v @ q
+    m = jnp.max(s)
+    return m + jnp.log(jnp.sum(jnp.exp(s - m)))
+
+
+def feature_expectation_full(v, q):
+    """Direct softmax-weighted feature mean (model-level oracle)."""
+    s = v @ q
+    w = jnp.exp(s - jnp.max(s))
+    return (w @ v) / jnp.sum(w)

@@ -1,0 +1,162 @@
+"""L1 Pallas kernels: the scoring hot-spot of the paper.
+
+Everything the paper's algorithms do against the database reduces to
+scoring a block of feature rows against a parameter vector, optionally
+fused with a masked (max, sum-exp, weighted-feature-sum) reduction:
+
+* ``scores_block``  — tiled matvec ``(B, d) @ (d,) -> (B,)``; grid over
+  row tiles so each tile's VMEM footprint is ``TILE × d`` floats.
+* ``partition_block`` — fused masked scoring + streaming-partition
+  fragment ``(max, Σ exp(s − max))`` of Algorithm 3; single pass, the
+  scores never hit HBM.
+* ``expect_block`` — additionally accumulates ``Σ exp(s − max)·v_r``
+  (Algorithm 4's unnormalized feature expectation / the MLE gradient's
+  model term).
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): on a real TPU the
+row tile sits in VMEM (TILE=256, d=64 ⇒ 64 KiB f32), θ is resident
+across the grid, the ``(TILE, d) @ (d, 1)`` product maps onto the MXU,
+and the fused reductions keep their accumulator in scratch across grid
+steps. Here the kernels run with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls), which exercises identical dataflow.
+
+All kernels are shape-polymorphic in ``B`` and ``d`` at trace time but
+are AOT-lowered for the fixed shapes recorded in ``artifacts/manifest.json``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height for the tiled scores kernel. 256 rows × d floats per
+# VMEM tile; must divide the AOT block size.
+TILE = 256
+
+NEG = jnp.float32(-1e30)
+
+
+# --------------------------------------------------------------------------
+# scores: tiled matvec
+# --------------------------------------------------------------------------
+
+def _scores_kernel(v_ref, q_ref, o_ref):
+    # (TILE, d) @ (d,) -> (TILE,)
+    o_ref[...] = v_ref[...] @ q_ref[...]
+
+
+def scores_block(v, q, tile=None):
+    """Tiled Pallas matvec: scores of a row block.
+
+    v: (B, d) f32, q: (d,) f32 -> (B,) f32.
+
+    `tile` selects the row-tile height (default [`TILE`]). On TPU the
+    VMEM-sized default is right; for the **CPU AOT schedule** the
+    interpret-mode grid lowers to a serialized HLO while-loop whose
+    per-iteration overhead dominates, so `aot.py` lowers with
+    `tile = B` (one grid step — §Perf L2 iteration). Both schedules are
+    numerically identical (tested).
+    """
+    b, d = v.shape
+    tile = tile or TILE
+    if b % tile == 0 and b >= tile:
+        grid = (b // tile,)
+        return pl.pallas_call(
+            _scores_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tile, d), lambda i: (i, 0)),
+                pl.BlockSpec((d,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((b,), v.dtype),
+            interpret=True,
+        )(v, q)
+    # ragged fallback: one whole-block tile
+    return pl.pallas_call(
+        _scores_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), v.dtype),
+        interpret=True,
+    )(v, q)
+
+
+# --------------------------------------------------------------------------
+# partition: fused masked (max, sumexp)
+# --------------------------------------------------------------------------
+
+def _partition_kernel(v_ref, q_ref, cnt_ref, m_ref, se_ref):
+    s = v_ref[...] @ q_ref[...]
+    cnt = cnt_ref[0]
+    valid = jnp.arange(s.shape[0]) < cnt
+    # literal sentinel (a module-level jnp constant would be captured and
+    # rejected by pallas_call)
+    s = jnp.where(valid, s, -1e30)
+    m = jnp.max(s)
+    se = jnp.sum(jnp.where(valid, jnp.exp(s - m), 0.0))
+    m_ref[0] = m
+    se_ref[0] = se
+
+
+def partition_block(v, q, count):
+    """Fused masked partition fragment.
+
+    v: (B, d), q: (d,), count: () i32 -> (max (1,), sumexp (1,)).
+    The whole block is one kernel invocation: scores stay in VMEM and are
+    reduced in place (single pass over HBM-resident rows).
+    """
+    b, _d = v.shape
+    cnt = jnp.reshape(count.astype(jnp.int32), (1,))
+    m, se = pl.pallas_call(
+        _partition_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), v.dtype),
+            jax.ShapeDtypeStruct((1,), v.dtype),
+        ),
+        interpret=True,
+    )(v, q, cnt)
+    return m, se
+
+
+# --------------------------------------------------------------------------
+# expect: fused masked (max, sumexp, weighted feature sum)
+# --------------------------------------------------------------------------
+
+def _expect_kernel(v_ref, q_ref, cnt_ref, m_ref, se_ref, ws_ref):
+    v = v_ref[...]
+    s = v @ q_ref[...]
+    cnt = cnt_ref[0]
+    valid = jnp.arange(s.shape[0]) < cnt
+    s = jnp.where(valid, s, -1e30)
+    m = jnp.max(s)
+    w = jnp.where(valid, jnp.exp(s - m), 0.0)
+    m_ref[0] = m
+    se_ref[0] = jnp.sum(w)
+    ws_ref[...] = w @ v
+
+
+def expect_block(v, q, count):
+    """Fused masked expectation fragment.
+
+    v: (B, d), q: (d,), count: () i32 ->
+    (max (1,), sumexp (1,), wsum (d,)).
+    """
+    b, d = v.shape
+    cnt = jnp.reshape(count.astype(jnp.int32), (1,))
+    m, se, ws = pl.pallas_call(
+        _expect_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1,), v.dtype),
+            jax.ShapeDtypeStruct((1,), v.dtype),
+            jax.ShapeDtypeStruct((d,), v.dtype),
+        ),
+        interpret=True,
+    )(v, q, cnt)
+    return m, se, ws
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_tile_bytes(d: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint estimate of one scores tile (DESIGN.md §Perf):
+    row tile + resident query + output lane."""
+    return TILE * d * dtype_bytes + d * dtype_bytes + TILE * dtype_bytes

@@ -1,0 +1,105 @@
+"""L2: the log-linear model's compute graph, composed from the L1 Pallas
+kernels.
+
+The model is ``Pr(x; θ) ∝ exp(θ·φ(x))`` over a fixed feature database.
+The rust coordinator (L3) drives three AOT entry points per (block, d)
+shape — see ``aot.py``:
+
+* ``scores(V, θ)``            — raw block scores (MIPS scans, tail scoring),
+* ``partition(V, θ, count)``  — masked (max, Σexp) fragment (Algorithm 3),
+* ``expect(V, θ, count)``     — + Σexp·φ fragment (Algorithm 4 / gradient).
+
+Block fragments are merged on the rust side with the same max-shift
+algebra (`linalg::MaxSumExp::merge`), so the full-database results are
+independent of the blocking. The model-level helpers below implement the
+whole-database compositions in JAX; they exist for testing that algebra
+(kernel fragments → whole answer) and as documentation of the math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import scores as K
+
+
+def scores_entry(v, q):
+    """AOT entry: block scores (CPU schedule — tile = whole block; the
+    interpret-mode grid loop serializes on CPU, see kernels.scores)."""
+    return (K.scores_block(v, q, tile=v.shape[0]),)
+
+
+def scores_entry_tpu(v, q):
+    """TPU-schedule variant: VMEM-sized row tiles (kept for parity tests
+    and as the real-TPU lowering target)."""
+    return (K.scores_block(v, q),)
+
+
+def partition_entry(v, q, count):
+    """AOT entry: masked partition fragment (max, sumexp)."""
+    m, se = K.partition_block(v, q, count)
+    return (m, se)
+
+
+def expect_entry(v, q, count):
+    """AOT entry: masked expectation fragment (max, sumexp, wsum)."""
+    m, se, ws = K.expect_block(v, q, count)
+    return (m, se, ws)
+
+
+# --------------------------------------------------------------------------
+# whole-database compositions (test/reference only; L3 does this in rust)
+# --------------------------------------------------------------------------
+
+def merge_fragments(ms, ses):
+    """Merge (max, sumexp) fragments with the max-shift algebra."""
+    ms = jnp.stack(ms)
+    ses = jnp.stack(ses)
+    m = jnp.max(ms)
+    return m, jnp.sum(ses * jnp.exp(ms - m))
+
+
+def log_partition_blocked(v, q, block):
+    """log Z via block fragments — must equal the direct logsumexp."""
+    n = v.shape[0]
+    ms, ses = [], []
+    for start in range(0, n, block):
+        blk = v[start : start + block]
+        pad = block - blk.shape[0]
+        if pad:
+            blk = jnp.pad(blk, ((0, pad), (0, 0)))
+        m, se = K.partition_block(blk, q, jnp.int32(min(block, n - start)))
+        ms.append(m[0])
+        ses.append(se[0])
+    m, se = merge_fragments(ms, ses)
+    return m + jnp.log(se)
+
+
+def feature_expectation_blocked(v, q, block):
+    """E_θ[φ] via block fragments — must equal the direct softmax mean."""
+    n, d = v.shape
+    ms, ses, wss = [], [], []
+    for start in range(0, n, block):
+        blk = v[start : start + block]
+        pad = block - blk.shape[0]
+        if pad:
+            blk = jnp.pad(blk, ((0, pad), (0, 0)))
+        m, se, ws = K.expect_block(blk, q, jnp.int32(min(block, n - start)))
+        ms.append(m[0])
+        ses.append(se[0])
+        wss.append(ws)
+    mstack = jnp.stack(ms)
+    m = jnp.max(mstack)
+    scale = jnp.exp(mstack - m)
+    se = jnp.sum(jnp.stack(ses) * scale)
+    wsum = jnp.sum(jnp.stack(wss) * scale[:, None], axis=0)
+    return wsum / se
+
+
+def log_likelihood(v, q, data_ids):
+    """Mean log-likelihood of a subset (θ-differentiable; the learning
+    objective of §4.4). Gradient identity used by tests:
+    ∇_θ logZ = E_θ[φ]."""
+    mean_score = jnp.mean(v[data_ids] @ q)
+    from compile.kernels import ref
+
+    return mean_score - ref.log_partition_full(v, q)

@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and inputs; fixed-seed numpy provides the data.
+These tests are the build-time gate: `make artifacts` output is only
+trusted because these pass.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import scores as K
+
+RNG = np.random.default_rng(0)
+
+
+def rand_block(b, d, scale=1.0):
+    v = RNG.normal(size=(b, d)).astype(np.float32) * scale
+    q = RNG.normal(size=(d,)).astype(np.float32) * scale
+    return jnp.asarray(v), jnp.asarray(q)
+
+
+# -------------------------------------------------------------------------
+# scores kernel
+# -------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    d=st.integers(min_value=1, max_value=96),
+)
+def test_scores_tiled_matches_ref(tiles, d):
+    b = tiles * K.TILE
+    v, q = rand_block(b, d)
+    got = K.scores_block(v, q)
+    want = ref.scores(v, q)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(min_value=1, max_value=300), d=st.integers(min_value=1, max_value=48))
+def test_scores_ragged_fallback(b, d):
+    v, q = rand_block(b, d)
+    got = K.scores_block(v, q)
+    np.testing.assert_allclose(got, ref.scores(v, q), rtol=1e-5, atol=1e-5)
+
+
+def test_scores_large_magnitude():
+    # temperature folding makes queries large (‖θ‖ ≈ 1/τ = 20)
+    v, q = rand_block(K.TILE, 64, scale=1.0)
+    q = q * 20.0
+    got = K.scores_block(v, q)
+    np.testing.assert_allclose(got, ref.scores(v, q), rtol=1e-4, atol=1e-3)
+
+
+# -------------------------------------------------------------------------
+# partition kernel (fused masked max/sumexp)
+# -------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=2, max_value=257),
+    d=st.integers(min_value=1, max_value=48),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+)
+def test_partition_masked_matches_ref(b, d, frac):
+    v, q = rand_block(b, d)
+    count = max(1, int(b * frac))
+    m, se = K.partition_block(v, q, jnp.int32(count))
+    rm, rse = ref.partition(v, q, jnp.int32(count))
+    np.testing.assert_allclose(m[0], rm, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(se[0], rse, rtol=1e-5, atol=1e-5)
+
+
+def test_partition_full_count_equals_logsumexp():
+    v, q = rand_block(512, 32)
+    m, se = K.partition_block(v, q, jnp.int32(512))
+    log_z = float(m[0]) + float(jnp.log(se[0]))
+    want = float(ref.log_partition_full(v, q))
+    assert abs(log_z - want) < 1e-4
+
+
+def test_partition_padding_rows_ignored():
+    # the masked rows' content must not affect the fragment
+    v, q = rand_block(128, 16)
+    v2 = v.at[100:].set(1e4)  # garbage in the padding region
+    m1, se1 = K.partition_block(v, q, jnp.int32(100))
+    m2, se2 = K.partition_block(v2, q, jnp.int32(100))
+    np.testing.assert_allclose(m1, m2)
+    np.testing.assert_allclose(se1, se2)
+
+
+def test_partition_count_one():
+    v, q = rand_block(64, 8)
+    m, se = K.partition_block(v, q, jnp.int32(1))
+    np.testing.assert_allclose(m[0], (v @ q)[0], rtol=1e-6)
+    np.testing.assert_allclose(se[0], 1.0, rtol=1e-6)
+
+
+# -------------------------------------------------------------------------
+# expect kernel (fused masked max/sumexp/weighted-feature-sum)
+# -------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=2, max_value=200),
+    d=st.integers(min_value=1, max_value=48),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+)
+def test_expect_masked_matches_ref(b, d, frac):
+    v, q = rand_block(b, d)
+    count = max(1, int(b * frac))
+    m, se, ws = K.expect_block(v, q, jnp.int32(count))
+    rm, rse, rws = ref.expect(v, q, jnp.int32(count))
+    np.testing.assert_allclose(m[0], rm, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(se[0], rse, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ws, rws, rtol=1e-4, atol=1e-4)
+
+
+def test_expect_full_equals_softmax_mean():
+    v, q = rand_block(256, 24)
+    m, se, ws = K.expect_block(v, q, jnp.int32(256))
+    got = np.asarray(ws) / float(se[0])
+    want = np.asarray(ref.feature_expectation_full(v, q))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_expect_padding_rows_ignored():
+    v, q = rand_block(96, 12)
+    v2 = v.at[80:].set(-777.0)
+    out1 = K.expect_block(v, q, jnp.int32(80))
+    out2 = K.expect_block(v2, q, jnp.int32(80))
+    for a, b_ in zip(out1, out2):
+        np.testing.assert_allclose(a, b_)
+
+
+def test_vmem_tile_budget_documented():
+    # DESIGN.md §Perf: the scores tile must fit comfortably in VMEM
+    assert K.vmem_tile_bytes(64) < 128 * 1024
+    assert K.vmem_tile_bytes(256) < 512 * 1024
+
+
+def test_cpu_and_tpu_schedules_agree():
+    # the whole-block CPU schedule and the VMEM-tiled TPU schedule must be
+    # numerically identical (same kernel, different BlockSpec grids)
+    v, q = rand_block(2 * K.TILE, 32)
+    tiled = K.scores_block(v, q)
+    whole = K.scores_block(v, q, tile=v.shape[0])
+    np.testing.assert_allclose(tiled, whole, rtol=1e-6, atol=1e-6)

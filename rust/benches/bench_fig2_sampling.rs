@@ -1,0 +1,8 @@
+//! Figure 2: per-query sampling time vs dataset size (paper: up to 5x at 1.28M)
+mod common;
+
+fn main() {
+    common::banner("bench_fig2_sampling", "Figure 2: per-query sampling time vs dataset size (paper: up to 5x at 1.28M)");
+    let opts = common::bench_opts(60000, 10);
+    gmips::eval::fig2::run(&opts);
+}

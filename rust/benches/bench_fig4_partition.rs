@@ -1,0 +1,8 @@
+//! Figure 4: partition estimate runtime-vs-error frontier
+mod common;
+
+fn main() {
+    common::banner("bench_fig4_partition", "Figure 4: partition estimate runtime-vs-error frontier");
+    let opts = common::bench_opts(40000, 8);
+    gmips::eval::fig4::run(&opts);
+}

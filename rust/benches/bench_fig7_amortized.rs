@@ -1,0 +1,8 @@
+//! Figure 7: amortized cost incl. index build (paper: break-even ~8600 samples)
+mod common;
+
+fn main() {
+    common::banner("bench_fig7_amortized", "Figure 7: amortized cost incl. index build (paper: break-even ~8600 samples)");
+    let opts = common::bench_opts(60000, 8);
+    gmips::eval::fig7::run(&opts);
+}

@@ -1,0 +1,8 @@
+//! Figure 8: histogram match + per-bin relative errors
+mod common;
+
+fn main() {
+    common::banner("bench_fig8_sampling_accuracy", "Figure 8: histogram match + per-bin relative errors");
+    let opts = common::bench_opts(12000, 6);
+    gmips::eval::fig8::run(&opts);
+}

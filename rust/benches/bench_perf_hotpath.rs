@@ -1,0 +1,135 @@
+//! Hot-path microbenches (the §Perf deliverable): every stage of a
+//! sampling/estimation query measured in isolation, so regressions are
+//! attributable. Not a paper figure — this is the optimization harness.
+//!
+//! Stages: native block scoring, PJRT block scoring (when artifacts
+//! exist), top-k collection, IVF probe, lazy tail draw, full Alg-1
+//! sample, Alg-3 estimate.
+
+mod common;
+
+use gmips::config::Config;
+use gmips::data;
+use gmips::estimator::partition::PartitionEstimator;
+use gmips::gumbel;
+use gmips::mips::{self, MipsIndex};
+use gmips::runtime::PjrtScorer;
+use gmips::sampler::{lazy_gumbel::LazyGumbelSampler, Sampler};
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::util::rng::Pcg64;
+use gmips::util::timing::Bench;
+use gmips::util::topk::TopK;
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+
+fn main() {
+    common::banner("bench_perf_hotpath", "§Perf: per-stage hot path microbenches");
+    let opts = common::bench_opts(100_000, 8);
+    let mut cfg = Config::preset("imagenet").unwrap();
+    cfg.data.n = opts.n;
+    cfg.data.d = 64;
+    let d = cfg.data.d;
+    let ds = Arc::new(data::generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut rng = Pcg64::new(1);
+    let q = data::random_theta(&ds, cfg.data.temperature, &mut rng);
+
+    let bench = Bench::default();
+    let mut results = Vec::new();
+
+    // ---- native block scoring ------------------------------------------------
+    let block = 4096.min(ds.n);
+    let rows = &ds.data[..block * d];
+    let mut out = vec![0f32; block];
+    let s = bench.run("native scores 4096x64", || {
+        NativeScorer.scores(std::hint::black_box(rows), d, &q, &mut out);
+    });
+    let gflops = (2.0 * block as f64 * d as f64) / s.mean_s / 1e9;
+    results.push((s.clone(), format!("{gflops:.2} GFLOP/s")));
+
+    // ---- PJRT block scoring (optional) ----------------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        match PjrtScorer::load("artifacts") {
+            Ok(scorer) if scorer.d() == d => {
+                let s = bench.run("pjrt scores 4096x64", || {
+                    scorer.scores(std::hint::black_box(rows), d, &q, &mut out);
+                });
+                let gflops = (2.0 * block as f64 * d as f64) / s.mean_s / 1e9;
+                results.push((s, format!("{gflops:.2} GFLOP/s")));
+                let sc = Arc::new(scorer);
+                let s = bench.run("pjrt fused partition 4096x64", || {
+                    std::hint::black_box(sc.max_sumexp(rows, d, &q));
+                });
+                results.push((s, String::new()));
+            }
+            _ => println!("(skipping pjrt benches: artifacts missing or wrong d)"),
+        }
+    }
+
+    // ---- top-k collection -----------------------------------------------------
+    let scores: Vec<f32> = (0..ds.n).map(|i| ((i * 2654435761) % 1000) as f32 / 1000.0).collect();
+    let k = cfg.sampler_k();
+    let s = bench.run(&format!("topk k={k} over n={}", ds.n), || {
+        let mut tk = TopK::new(k);
+        tk.push_block(0, std::hint::black_box(&scores));
+        std::hint::black_box(tk.into_sorted());
+    });
+    results.push((s, String::new()));
+
+    // ---- IVF index probe --------------------------------------------------------
+    let index: Arc<dyn MipsIndex> = {
+        let mut icfg = cfg.index.clone();
+        icfg.n_clusters = 0;
+        icfg.n_probe = 0;
+        icfg.kmeans_iters = 6;
+        icfg.train_sample = 20_000.min(ds.n);
+        mips::build_index(&ds, &icfg, backend.clone()).unwrap()
+    };
+    let s = bench.run("ivf top_k", || {
+        std::hint::black_box(index.top_k(&q, k));
+    });
+    results.push((s, String::new()));
+
+    // ---- lazy tail draw ---------------------------------------------------------
+    let exclude: FxHashSet<u32> = (0..k as u32).collect();
+    let b = gumbel::fixed_cutoff(ds.n, k);
+    let s = bench.run("lazy tail draw (m≈k)", || {
+        std::hint::black_box(gumbel::sample_tail(ds.n, &exclude, b, &mut rng));
+    });
+    results.push((s, String::new()));
+
+    // ---- full Algorithm 1 sample --------------------------------------------------
+    let sampler = LazyGumbelSampler::new(ds.clone(), index.clone(), backend.clone(), k, 0.0);
+    let s = bench.run("Alg1 sample (fresh θ)", || {
+        let theta = data::random_theta(&ds, cfg.data.temperature, &mut rng);
+        std::hint::black_box(sampler.sample(&theta, &mut rng));
+    });
+    results.push((s, String::new()));
+    // amortized: one MIPS call, many draws
+    let top = index.top_k(&q, k);
+    let s = bench.run("Alg1 draw (reused top-k)", || {
+        std::hint::black_box(sampler.sample_given_top(&top, &q, &mut rng));
+    });
+    results.push((s, String::new()));
+
+    // ---- Algorithm 3 estimate ------------------------------------------------------
+    let est = PartitionEstimator::new(ds.clone(), index, backend, k, k);
+    let s = bench.run("Alg3 partition estimate", || {
+        let theta = data::random_theta(&ds, cfg.data.temperature, &mut rng);
+        std::hint::black_box(est.estimate(&theta, &mut rng));
+    });
+    results.push((s, String::new()));
+
+    // ---- brute-force reference -------------------------------------------------------
+    let exact = gmips::sampler::exact::ExactSampler::new(ds.clone(), Arc::new(NativeScorer));
+    let s = bench.run("brute-force sample", || {
+        let theta = data::random_theta(&ds, cfg.data.temperature, &mut rng);
+        std::hint::black_box(exact.sample(&theta, &mut rng));
+    });
+    results.push((s, String::new()));
+
+    println!("\n{:<34} {:>12} {:>10}  note", "stage", "mean", "iters");
+    for (s, note) in &results {
+        println!("{:<34} {:>12} {:>10}  {note}", s.name, s.human(), s.iters);
+    }
+}

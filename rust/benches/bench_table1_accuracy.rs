@@ -1,0 +1,8 @@
+//! Table 1: sampling speedup + TV bound (paper: 4.65x/4.17x, TV ~1e-4)
+mod common;
+
+fn main() {
+    common::banner("bench_table1_accuracy", "Table 1: sampling speedup + TV bound (paper: 4.65x/4.17x, TV ~1e-4)");
+    let opts = common::bench_opts(60000, 12);
+    gmips::eval::table1::run(&opts);
+}

@@ -1,0 +1,12 @@
+//! Table 2 + Figure 5: learning by MLE — exact vs top-k vs ours
+//! (paper: LL -3.170/-4.062/-3.175, speedup 1x/22.7x/9.6x).
+mod common;
+
+fn main() {
+    common::banner(
+        "bench_table2_learning",
+        "Table 2/Fig 5: MLE learning, exact vs top-k vs ours",
+    );
+    let opts = common::bench_opts(30_000, 1);
+    gmips::eval::table2::run(&opts);
+}

@@ -1,0 +1,8 @@
+//! S4.2.2: random walk top-k overlap (paper: 73.6% between vs 69.3/72.9% within)
+mod common;
+
+fn main() {
+    common::banner("bench_walk", "S4.2.2: random walk top-k overlap (paper: 73.6% between vs 69.3/72.9% within)");
+    let opts = common::bench_opts(12000, 4);
+    gmips::eval::walk_exp::run(&opts);
+}

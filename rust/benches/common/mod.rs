@@ -1,0 +1,30 @@
+//! Shared bench plumbing: the offline registry has no criterion, so each
+//! bench is a `harness = false` binary that runs its eval driver at a
+//! bench-friendly scale and prints the paper-style table.
+//!
+//! Scale knobs (env): GMIPS_BENCH_N (dataset size), GMIPS_BENCH_Q
+//! (queries per config). Defaults keep each bench in the tens of seconds
+//! on one core; `GMIPS_BENCH_N=1281167` reproduces paper scale.
+
+use gmips::eval::EvalOpts;
+
+#[allow(dead_code)]
+pub fn bench_opts(default_n: usize, default_q: usize) -> EvalOpts {
+    let n = std::env::var("GMIPS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_n);
+    let queries = std::env::var("GMIPS_BENCH_Q")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_q);
+    EvalOpts { n, queries, seed: 42, write_csv: true }
+}
+
+#[allow(dead_code)]
+pub fn banner(name: &str, paper: &str) {
+    println!("\n######################################################################");
+    println!("# bench: {name}");
+    println!("# paper reference: {paper}");
+    println!("######################################################################");
+}

@@ -1,0 +1,540 @@
+//! Typed configuration for the whole system.
+//!
+//! Config is layered: built-in defaults ← preset (`--preset imagenet` /
+//! `wordemb`) ← TOML file (`--config path.toml`) ← CLI `--set sec.key=val`
+//! overrides. Every subsystem (data, index, sampler, estimator, learner,
+//! runtime, server) reads its parameters from here, so experiments are
+//! fully reproducible from a config file.
+
+pub mod toml;
+
+use crate::error::{Error, Result};
+use crate::util::cli::Args;
+use toml::TomlDoc;
+
+/// Which synthetic dataset family to generate (see `data::synth`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataKind {
+    /// ImageNet-like: ~1000 balanced Gaussian clusters on the unit sphere
+    /// (ResNet-feature geometry after PCA + unit-norm).
+    ImagenetLike,
+    /// Word-embedding-like: Zipf-sized anisotropic clusters (fastText
+    /// geometry).
+    WordembLike,
+    /// Uniform on the sphere (adversarially unstructured; MIPS-hostile).
+    UniformSphere,
+}
+
+impl DataKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "imagenet-like" | "imagenet" => Ok(DataKind::ImagenetLike),
+            "wordemb-like" | "wordemb" | "embeddings" => Ok(DataKind::WordembLike),
+            "uniform" | "uniform-sphere" => Ok(DataKind::UniformSphere),
+            other => Err(Error::config(format!("unknown data.kind '{other}'"))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataKind::ImagenetLike => "imagenet-like",
+            DataKind::WordembLike => "wordemb-like",
+            DataKind::UniformSphere => "uniform-sphere",
+        }
+    }
+}
+
+/// MIPS index family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKind {
+    /// Exact scan (baseline).
+    Brute,
+    /// k-means / IVF clustering index (Douze et al. 2016 — the paper's
+    /// experimental choice).
+    Ivf,
+    /// Signed-random-projection LSH (Charikar 2002) with the
+    /// Neyshabur–Srebro MIPS→cosine reduction.
+    Lsh,
+    /// Tiered LSH ladder (paper Theorem 3.6): approximate top-k with a
+    /// provable gap c.
+    Tiered,
+}
+
+impl IndexKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "brute" | "exact" => Ok(IndexKind::Brute),
+            "ivf" | "kmeans" => Ok(IndexKind::Ivf),
+            "lsh" => Ok(IndexKind::Lsh),
+            "tiered" | "tiered-lsh" => Ok(IndexKind::Tiered),
+            other => Err(Error::config(format!("unknown index.kind '{other}'"))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexKind::Brute => "brute",
+            IndexKind::Ivf => "ivf",
+            IndexKind::Lsh => "lsh",
+            IndexKind::Tiered => "tiered",
+        }
+    }
+}
+
+/// Score computation backend for block scans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust blocked matvec.
+    Native,
+    /// AOT-compiled XLA executables via PJRT (`artifacts/`).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" | "rust" => Ok(Backend::Native),
+            "pjrt" | "xla" => Ok(Backend::Pjrt),
+            other => Err(Error::config(format!("unknown runtime.backend '{other}'"))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Dataset generation parameters.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub kind: DataKind,
+    /// number of database vectors (paper: 1.28M / 2.0M; default scaled)
+    pub n: usize,
+    /// feature dimension (paper: 256 / 300)
+    pub d: usize,
+    /// number of latent clusters in the generator
+    pub clusters: usize,
+    /// within-cluster noise scale (before re-normalization)
+    pub noise: f64,
+    /// Zipf exponent for wordemb-like cluster sizes
+    pub zipf_s: f64,
+    /// softmax temperature τ: queries are scaled by 1/τ (paper: τ=0.05)
+    pub temperature: f64,
+    pub seed: u64,
+    /// optional on-disk cache path ("" = regenerate in memory)
+    pub path: String,
+}
+
+/// MIPS index parameters.
+#[derive(Clone, Debug)]
+pub struct IndexConfig {
+    pub kind: IndexKind,
+    /// IVF: number of clusters (0 = auto ≈ 4√n)
+    pub n_clusters: usize,
+    /// IVF: clusters probed per query (0 = auto)
+    pub n_probe: usize,
+    /// IVF: k-means iterations
+    pub kmeans_iters: usize,
+    /// IVF: sample size for k-means training (0 = all)
+    pub train_sample: usize,
+    /// LSH: number of hash tables
+    pub tables: usize,
+    /// LSH: bits per hash
+    pub bits: usize,
+    /// Tiered LSH: number of ladder rungs
+    pub rungs: usize,
+    pub seed: u64,
+}
+
+/// Sampler (Algorithms 1–2) parameters.
+#[derive(Clone, Debug)]
+pub struct SamplerConfig {
+    /// top set size k = k_mult · √n (paper uses 10√n in learning)
+    pub k_mult: f64,
+    /// fixed-B variant: expected tail count l = l_mult · √n
+    pub l_mult: f64,
+    /// approximate-MIPS gap allowance c (Algorithm 1 adapts B ← B − c)
+    pub gap_c: f64,
+}
+
+/// Estimator (Algorithms 3–4) parameters.
+#[derive(Clone, Debug)]
+pub struct EstimatorConfig {
+    pub k_mult: f64,
+    pub l_mult: f64,
+}
+
+/// Learner (§4.4) parameters.
+#[derive(Clone, Debug)]
+pub struct LearnConfig {
+    /// gradient ascent iterations (paper: 5000)
+    pub iters: usize,
+    /// learning rate α (paper: 10)
+    pub lr: f64,
+    /// halve LR every this many iters (paper: 1000)
+    pub lr_halve_every: usize,
+    /// |D|: training subset size (paper: 16)
+    pub train_size: usize,
+    /// ours: k = k_mult·√n, l = l_ratio·k (paper: k=10√n, l=10k)
+    pub k_mult: f64,
+    pub l_ratio: f64,
+    /// top-k baseline: k = topk_mult·√n (paper: 100√n)
+    pub topk_mult: f64,
+    /// evaluate exact log-likelihood every this many iters
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+/// Runtime (PJRT) parameters.
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    pub backend: Backend,
+    pub artifacts_dir: String,
+    /// block rows per scoring executable call (must match an AOT shape)
+    pub block: usize,
+}
+
+/// Coordinator/server parameters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub queue_depth: usize,
+}
+
+/// Full system config.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub data: DataConfig,
+    pub index: IndexConfig,
+    pub sampler: SamplerConfig,
+    pub estimator: EstimatorConfig,
+    pub learn: LearnConfig,
+    pub runtime: RuntimeConfig,
+    pub serve: ServeConfig,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            data: DataConfig {
+                kind: DataKind::ImagenetLike,
+                n: 200_000,
+                d: 64,
+                clusters: 1000,
+                // total perturbation norm (per-coord σ = noise/√d):
+                // within-cluster cosine ≈ 1/√(1+noise²) ≈ 0.71
+                noise: 1.0,
+                zipf_s: 1.07,
+                temperature: 0.05,
+                seed: 42,
+                path: String::new(),
+            },
+            index: IndexConfig {
+                kind: IndexKind::Ivf,
+                n_clusters: 0,
+                n_probe: 0,
+                kmeans_iters: 12,
+                train_sample: 50_000,
+                tables: 16,
+                bits: 14,
+                rungs: 12,
+                seed: 7,
+            },
+            sampler: SamplerConfig { k_mult: 5.0, l_mult: 5.0, gap_c: 0.0 },
+            estimator: EstimatorConfig { k_mult: 5.0, l_mult: 5.0 },
+            learn: LearnConfig {
+                iters: 5000,
+                lr: 10.0,
+                lr_halve_every: 1000,
+                train_size: 16,
+                k_mult: 10.0,
+                l_ratio: 10.0,
+                topk_mult: 100.0,
+                eval_every: 100,
+                seed: 1234,
+            },
+            runtime: RuntimeConfig {
+                backend: Backend::Native,
+                artifacts_dir: "artifacts".to_string(),
+                block: 4096,
+            },
+            serve: ServeConfig { addr: "127.0.0.1:7431".to_string(), workers: 0, queue_depth: 256 },
+        }
+    }
+}
+
+impl Config {
+    /// Paper-described presets for the two evaluation datasets.
+    pub fn preset(name: &str) -> Result<Config> {
+        let mut c = Config::default();
+        match name {
+            // ImageNet: N=1,281,167 d=256 τ=0.05 (§4.1.2); scaled default n
+            "imagenet" => {
+                c.data.kind = DataKind::ImagenetLike;
+                c.data.d = 256;
+                c.data.clusters = 1000;
+                c.data.temperature = 0.05;
+            }
+            "imagenet-paper-scale" => {
+                c.data.kind = DataKind::ImagenetLike;
+                c.data.n = 1_281_167;
+                c.data.d = 256;
+                c.data.clusters = 1000;
+                c.data.temperature = 0.05;
+            }
+            // Word embeddings: N=2,000,126 d=300 unit-norm (§4.1.2)
+            "wordemb" => {
+                c.data.kind = DataKind::WordembLike;
+                c.data.d = 300;
+                c.data.clusters = 4000;
+                c.data.temperature = 0.05;
+            }
+            "wordemb-paper-scale" => {
+                c.data.kind = DataKind::WordembLike;
+                c.data.n = 2_000_126;
+                c.data.d = 300;
+                c.data.clusters = 4000;
+                c.data.temperature = 0.05;
+            }
+            // small config for tests / CI
+            "tiny" => {
+                c.data.n = 20_000;
+                c.data.d = 32;
+                c.data.clusters = 100;
+                c.index.train_sample = 10_000;
+                c.learn.iters = 200;
+                c.learn.eval_every = 20;
+            }
+            other => return Err(Error::config(format!("unknown preset '{other}'"))),
+        }
+        Ok(c)
+    }
+
+    /// Load from a parsed TOML doc on top of `self`.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        let c = self;
+        if let Some(v) = doc.get("data.kind") {
+            c.data.kind = DataKind::parse(v.as_str()?)?;
+        }
+        c.data.n = doc.get_usize("data.n", c.data.n)?;
+        c.data.d = doc.get_usize("data.d", c.data.d)?;
+        c.data.clusters = doc.get_usize("data.clusters", c.data.clusters)?;
+        c.data.noise = doc.get_f64("data.noise", c.data.noise)?;
+        c.data.zipf_s = doc.get_f64("data.zipf_s", c.data.zipf_s)?;
+        c.data.temperature = doc.get_f64("data.temperature", c.data.temperature)?;
+        c.data.seed = doc.get_u64("data.seed", c.data.seed)?;
+        c.data.path = doc.get_str("data.path", &c.data.path)?;
+
+        if let Some(v) = doc.get("index.kind") {
+            c.index.kind = IndexKind::parse(v.as_str()?)?;
+        }
+        c.index.n_clusters = doc.get_usize("index.n_clusters", c.index.n_clusters)?;
+        c.index.n_probe = doc.get_usize("index.n_probe", c.index.n_probe)?;
+        c.index.kmeans_iters = doc.get_usize("index.kmeans_iters", c.index.kmeans_iters)?;
+        c.index.train_sample = doc.get_usize("index.train_sample", c.index.train_sample)?;
+        c.index.tables = doc.get_usize("index.tables", c.index.tables)?;
+        c.index.bits = doc.get_usize("index.bits", c.index.bits)?;
+        c.index.rungs = doc.get_usize("index.rungs", c.index.rungs)?;
+        c.index.seed = doc.get_u64("index.seed", c.index.seed)?;
+
+        c.sampler.k_mult = doc.get_f64("sampler.k_mult", c.sampler.k_mult)?;
+        c.sampler.l_mult = doc.get_f64("sampler.l_mult", c.sampler.l_mult)?;
+        c.sampler.gap_c = doc.get_f64("sampler.gap_c", c.sampler.gap_c)?;
+
+        c.estimator.k_mult = doc.get_f64("estimator.k_mult", c.estimator.k_mult)?;
+        c.estimator.l_mult = doc.get_f64("estimator.l_mult", c.estimator.l_mult)?;
+
+        c.learn.iters = doc.get_usize("learn.iters", c.learn.iters)?;
+        c.learn.lr = doc.get_f64("learn.lr", c.learn.lr)?;
+        c.learn.lr_halve_every = doc.get_usize("learn.lr_halve_every", c.learn.lr_halve_every)?;
+        c.learn.train_size = doc.get_usize("learn.train_size", c.learn.train_size)?;
+        c.learn.k_mult = doc.get_f64("learn.k_mult", c.learn.k_mult)?;
+        c.learn.l_ratio = doc.get_f64("learn.l_ratio", c.learn.l_ratio)?;
+        c.learn.topk_mult = doc.get_f64("learn.topk_mult", c.learn.topk_mult)?;
+        c.learn.eval_every = doc.get_usize("learn.eval_every", c.learn.eval_every)?;
+        c.learn.seed = doc.get_u64("learn.seed", c.learn.seed)?;
+
+        if let Some(v) = doc.get("runtime.backend") {
+            c.runtime.backend = Backend::parse(v.as_str()?)?;
+        }
+        c.runtime.artifacts_dir = doc.get_str("runtime.artifacts_dir", &c.runtime.artifacts_dir)?;
+        c.runtime.block = doc.get_usize("runtime.block", c.runtime.block)?;
+
+        c.serve.addr = doc.get_str("serve.addr", &c.serve.addr)?;
+        c.serve.workers = doc.get_usize("serve.workers", c.serve.workers)?;
+        c.serve.queue_depth = doc.get_usize("serve.queue_depth", c.serve.queue_depth)?;
+        Ok(())
+    }
+
+    /// Full layered load from parsed CLI args:
+    /// defaults ← `--preset` ← `--config file` ← repeated `--set k=v`
+    /// (`--set` uses the flat `section.key=value` form) ← common shorthand
+    /// options (`--n`, `--d`, `--backend`, `--index`).
+    pub fn from_args(args: &Args) -> Result<Config> {
+        let mut c = match args.get("preset") {
+            Some(p) => Config::preset(p)?,
+            None => Config::default(),
+        };
+        if let Some(path) = args.get("config") {
+            let doc = TomlDoc::load(path)?;
+            c.apply_toml(&doc)?;
+        }
+        if let Some(sets) = args.get("set") {
+            // --set a.b=1,c.d=2
+            let mut text = String::new();
+            for pair in sets.split(',') {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| Error::config(format!("--set expects key=value, got '{pair}'")))?;
+                text.push_str(&format!("{k} = {v}\n"));
+            }
+            let doc = TomlDoc::parse(&text)?;
+            c.apply_toml(&doc)?;
+        }
+        // common shorthands
+        c.data.n = args.get_usize("n", c.data.n)?;
+        c.data.d = args.get_usize("d", c.data.d)?;
+        c.data.seed = args.get_u64("seed", c.data.seed)?;
+        if let Some(b) = args.get("backend") {
+            c.runtime.backend = Backend::parse(b)?;
+        }
+        if let Some(i) = args.get("index") {
+            c.index.kind = IndexKind::parse(i)?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Sanity-check invariants between sections.
+    pub fn validate(&self) -> Result<()> {
+        if self.data.n == 0 || self.data.d == 0 {
+            return Err(Error::config("data.n and data.d must be positive"));
+        }
+        if self.data.temperature <= 0.0 {
+            return Err(Error::config("data.temperature must be positive"));
+        }
+        if self.sampler.k_mult <= 0.0 || self.sampler.l_mult <= 0.0 {
+            return Err(Error::config("sampler multipliers must be positive"));
+        }
+        if self.runtime.block == 0 {
+            return Err(Error::config("runtime.block must be positive"));
+        }
+        if self.learn.train_size == 0 || self.learn.train_size > self.data.n {
+            return Err(Error::config("learn.train_size must be in [1, n]"));
+        }
+        Ok(())
+    }
+
+    /// Effective k for samplers: `k_mult · √n`, clamped to `[1, n]`.
+    pub fn sampler_k(&self) -> usize {
+        eff(self.sampler.k_mult, self.data.n)
+    }
+    /// Effective l for the fixed-B sampler.
+    pub fn sampler_l(&self) -> usize {
+        eff(self.sampler.l_mult, self.data.n)
+    }
+    /// Effective k for estimators.
+    pub fn estimator_k(&self) -> usize {
+        eff(self.estimator.k_mult, self.data.n)
+    }
+    /// Effective l for estimators.
+    pub fn estimator_l(&self) -> usize {
+        eff(self.estimator.l_mult, self.data.n)
+    }
+    /// Worker count for serving (0 = all cores).
+    pub fn serve_workers(&self) -> usize {
+        if self.serve.workers == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            self.serve.workers
+        }
+    }
+}
+
+/// `mult · √n` clamped to `[1, n]`.
+pub fn eff(mult: f64, n: usize) -> usize {
+    ((mult * (n as f64).sqrt()).round() as usize).clamp(1, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Spec;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn default_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn presets_match_paper() {
+        let c = Config::preset("imagenet-paper-scale").unwrap();
+        assert_eq!(c.data.n, 1_281_167);
+        assert_eq!(c.data.d, 256);
+        assert_eq!(c.data.temperature, 0.05);
+        let c = Config::preset("wordemb-paper-scale").unwrap();
+        assert_eq!(c.data.n, 2_000_126);
+        assert_eq!(c.data.d, 300);
+        assert!(Config::preset("nope").is_err());
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let mut c = Config::default();
+        let doc = TomlDoc::parse("[data]\nn = 999\nkind = \"wordemb\"\n[index]\nkind = \"lsh\"").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.data.n, 999);
+        assert_eq!(c.data.kind, DataKind::WordembLike);
+        assert_eq!(c.index.kind, IndexKind::Lsh);
+    }
+
+    #[test]
+    fn cli_layering() {
+        let spec = Spec::new(&["preset", "set", "n", "d", "seed", "backend", "index", "config"]);
+        let a = spec
+            .parse(argv("gmips run --preset tiny --set sampler.k_mult=3.5,data.d=16 --n 5000"))
+            .unwrap();
+        let c = Config::from_args(&a).unwrap();
+        assert_eq!(c.data.n, 5000); // CLI shorthand wins
+        assert_eq!(c.data.d, 16); // --set applied
+        assert_eq!(c.sampler.k_mult, 3.5);
+    }
+
+    #[test]
+    fn effective_sizes() {
+        let mut c = Config::default();
+        c.data.n = 10_000;
+        c.sampler.k_mult = 5.0;
+        assert_eq!(c.sampler_k(), 500);
+        c.sampler.k_mult = 1e9; // clamped to n
+        assert_eq!(c.sampler_k(), 10_000);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut c = Config::default();
+        c.data.temperature = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.learn.train_size = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in ["imagenet-like", "wordemb-like", "uniform-sphere"] {
+            assert_eq!(DataKind::parse(k).unwrap().name(), k);
+        }
+        for k in ["brute", "ivf", "lsh", "tiered"] {
+            assert_eq!(IndexKind::parse(k).unwrap().name(), k);
+        }
+        for b in ["native", "pjrt"] {
+            assert_eq!(Backend::parse(b).unwrap().name(), b);
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! TOML-subset parser for gmips config files (no serde/toml crate offline).
+//!
+//! Supported grammar — the subset real config files use:
+//!
+//! * `[section]` and `[section.sub]` headers,
+//! * `key = value` with value ∈ {string `"…"`, integer, float, bool,
+//!   array of scalars `[1, 2, 3]`},
+//! * `#` comments, blank lines,
+//! * keys are bare (`[A-Za-z0-9_-]+`).
+//!
+//! Values are stored flat as `"section.sub.key" → TomlValue`, which is all
+//! the typed [`super::Config`] loader needs.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A scalar or array TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => Err(Error::config(format!("expected string, got {self:?}"))),
+        }
+    }
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => Err(Error::config(format!("expected non-negative integer, got {self:?}"))),
+        }
+    }
+    pub fn as_u64(&self) -> Result<u64> {
+        Ok(self.as_usize()? as u64)
+    }
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => Err(Error::config(format!("expected number, got {self:?}"))),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => Err(Error::config(format!("expected bool, got {self:?}"))),
+        }
+    }
+}
+
+/// Flat `section.key → value` document.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document from text.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::config(format!("line {}: unterminated section", lineno + 1)))?
+                    .trim();
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                    return Err(Error::config(format!("line {}: bad section name '{name}'", lineno + 1)));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::config(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = k.trim();
+            // dotted keys (`a.b = 1`) are accepted and treated as an
+            // inline section path — the CLI's `--set sampler.k_mult=3`
+            // form depends on this
+            if key.is_empty()
+                || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+            {
+                return Err(Error::config(format!("line {}: bad key '{key}'", lineno + 1)));
+            }
+            let value = parse_value(v.trim())
+                .map_err(|e| Error::config(format!("line {}: {e}", lineno + 1)))?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            doc.values.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &str) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::config(format!("cannot read config '{path}': {e}")))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => Ok(v.as_str()?.to_string()),
+        }
+    }
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize(),
+        }
+    }
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_u64(),
+        }
+    }
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64(),
+        }
+    }
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool(),
+        }
+    }
+
+    /// Overlay another document's values on top of this one (CLI overrides).
+    pub fn overlay(&mut self, other: &TomlDoc) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a string literal is respected
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        // minimal escapes
+        let un = body.replace("\\\"", "\"").replace("\\\\", "\\").replace("\\n", "\n");
+        return Ok(TomlValue::Str(un));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: std::result::Result<Vec<TomlValue>, String> =
+            split_top_level(body).into_iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    let cleaned = s.replace('_', "");
+    if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split an array body on commas (no nested arrays supported / needed).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# gmips config
+[data]
+kind = "imagenet-like"   # synthetic mixture
+n = 200_000
+d = 64
+temperature = 0.05
+unit_norm = true
+
+[index]
+kind = "ivf"
+n_clusters = 1024
+n_probe = 32
+
+[sampler]
+k_mult = 10.0
+ls = [1, 2, 3]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("data.kind", "").unwrap(), "imagenet-like");
+        assert_eq!(doc.get_usize("data.n", 0).unwrap(), 200_000);
+        assert_eq!(doc.get_f64("data.temperature", 0.0).unwrap(), 0.05);
+        assert!(doc.get_bool("data.unit_norm", false).unwrap());
+        assert_eq!(doc.get_str("index.kind", "").unwrap(), "ivf");
+        assert_eq!(doc.get_f64("sampler.k_mult", 0.0).unwrap(), 10.0);
+        match doc.get("sampler.ls").unwrap() {
+            TomlValue::Arr(xs) => assert_eq!(xs.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let doc = TomlDoc::parse("[a]\nx = 1").unwrap();
+        assert_eq!(doc.get_usize("a.y", 9).unwrap(), 9);
+        assert_eq!(doc.get_str("b.z", "d").unwrap(), "d");
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = TomlDoc::parse("s = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.get_str("s", "").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn overlay_overrides() {
+        let mut base = TomlDoc::parse("[a]\nx = 1\ny = 2").unwrap();
+        let over = TomlDoc::parse("[a]\nx = 5").unwrap();
+        base.overlay(&over);
+        assert_eq!(base.get_usize("a.x", 0).unwrap(), 5);
+        assert_eq!(base.get_usize("a.y", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("keyonly").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn type_errors() {
+        let doc = TomlDoc::parse("x = \"s\"\ny = -3").unwrap();
+        assert!(doc.get_usize("x", 0).is_err());
+        assert!(doc.get_usize("y", 0).is_err());
+        assert!(doc.get_bool("x", false).is_err());
+        // int promotes to float
+        let doc = TomlDoc::parse("z = 4").unwrap();
+        assert_eq!(doc.get_f64("z", 0.0).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let doc = TomlDoc::parse("eps = 1e-4\nbig = 2.5E3").unwrap();
+        assert_eq!(doc.get_f64("eps", 0.0).unwrap(), 1e-4);
+        assert_eq!(doc.get_f64("big", 0.0).unwrap(), 2500.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Typed request/response API of the inference service, with JSON codecs
+//! for the TCP wire protocol.
+//!
+//! The service model mirrors the paper's amortized setting: the engine
+//! owns one preprocessed database + MIPS index; every request carries its
+//! own parameter vector θ.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A query against the engine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Draw `count` fresh samples from Pr(x) ∝ exp(θ·φ(x)) (Algorithm 1;
+    /// one MIPS retrieval amortized across the batch).
+    Sample { theta: Vec<f32>, count: usize },
+    /// Retrieve the approximate top-k states by score.
+    TopK { theta: Vec<f32>, k: usize },
+    /// Estimate log Z(θ) (Algorithm 3).
+    LogPartition { theta: Vec<f32> },
+    /// Estimate E_θ[φ] and log Z (Algorithm 4).
+    ExpectFeatures { theta: Vec<f32> },
+    /// Exact-scan TV certificate for θ (§4.2.1; heavyweight audit).
+    TvCertify { theta: Vec<f32> },
+    /// Engine + metrics snapshot.
+    Stats,
+}
+
+impl Request {
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Sample { .. } => "sample",
+            Request::TopK { .. } => "topk",
+            Request::LogPartition { .. } => "log_partition",
+            Request::ExpectFeatures { .. } => "expect_features",
+            Request::TvCertify { .. } => "tv_certify",
+            Request::Stats => "stats",
+        }
+    }
+
+    /// Parse from a JSON wire object `{"op": ..., ...}`.
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let op = j.req("op")?.as_str()?;
+        let theta = |j: &Json| -> Result<Vec<f32>> { j.req("theta")?.as_f32_vec() };
+        Ok(match op {
+            "sample" => Request::Sample {
+                theta: theta(j)?,
+                count: j.get("count").map(|c| c.as_usize()).transpose()?.unwrap_or(1),
+            },
+            "topk" => Request::TopK { theta: theta(j)?, k: j.req("k")?.as_usize()? },
+            "log_partition" => Request::LogPartition { theta: theta(j)? },
+            "expect_features" => Request::ExpectFeatures { theta: theta(j)? },
+            "tv_certify" => Request::TvCertify { theta: theta(j)? },
+            "stats" => Request::Stats,
+            other => return Err(Error::serve(format!("unknown op '{other}'"))),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Sample { theta, count } => Json::obj(vec![
+                ("op", Json::str("sample")),
+                ("theta", Json::arr_f32(theta)),
+                ("count", Json::num(*count as f64)),
+            ]),
+            Request::TopK { theta, k } => Json::obj(vec![
+                ("op", Json::str("topk")),
+                ("theta", Json::arr_f32(theta)),
+                ("k", Json::num(*k as f64)),
+            ]),
+            Request::LogPartition { theta } => Json::obj(vec![
+                ("op", Json::str("log_partition")),
+                ("theta", Json::arr_f32(theta)),
+            ]),
+            Request::ExpectFeatures { theta } => Json::obj(vec![
+                ("op", Json::str("expect_features")),
+                ("theta", Json::arr_f32(theta)),
+            ]),
+            Request::TvCertify { theta } => Json::obj(vec![
+                ("op", Json::str("tv_certify")),
+                ("theta", Json::arr_f32(theta)),
+            ]),
+            Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
+        }
+    }
+}
+
+/// A query result.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Samples { ids: Vec<u32>, scanned: usize, tail_m: usize },
+    TopK { ids: Vec<u32>, scores: Vec<f32> },
+    LogPartition { log_z: f64, k: usize, l: usize },
+    Features { mean: Vec<f32>, log_z: f64 },
+    Tv { bound: f64 },
+    Stats { text: String },
+    Error { message: String },
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Samples { ids, scanned, tail_m } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("ids", Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
+                ("scanned", Json::num(*scanned as f64)),
+                ("tail_m", Json::num(*tail_m as f64)),
+            ]),
+            Response::TopK { ids, scores } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("ids", Json::Arr(ids.iter().map(|&i| Json::num(i as f64)).collect())),
+                ("scores", Json::arr_f32(scores)),
+            ]),
+            Response::LogPartition { log_z, k, l } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("log_z", Json::num(*log_z)),
+                ("k", Json::num(*k as f64)),
+                ("l", Json::num(*l as f64)),
+            ]),
+            Response::Features { mean, log_z } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("mean", Json::arr_f32(mean)),
+                ("log_z", Json::num(*log_z)),
+            ]),
+            Response::Tv { bound } => {
+                Json::obj(vec![("ok", Json::Bool(true)), ("tv_bound", Json::num(*bound))])
+            }
+            Response::Stats { text } => {
+                Json::obj(vec![("ok", Json::Bool(true)), ("stats", Json::str(text.clone()))])
+            }
+            Response::Error { message } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(message.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response> {
+        let ok = j.req("ok")?.as_bool()?;
+        if !ok {
+            return Ok(Response::Error {
+                message: j.get("error").and_then(|e| e.as_str().ok()).unwrap_or("?").to_string(),
+            });
+        }
+        if let Some(b) = j.get("tv_bound") {
+            return Ok(Response::Tv { bound: b.as_f64()? });
+        }
+        if let Some(s) = j.get("stats") {
+            return Ok(Response::Stats { text: s.as_str()?.to_string() });
+        }
+        if let Some(m) = j.get("mean") {
+            return Ok(Response::Features {
+                mean: m.as_f32_vec()?,
+                log_z: j.req("log_z")?.as_f64()?,
+            });
+        }
+        if let Some(lz) = j.get("log_z") {
+            return Ok(Response::LogPartition {
+                log_z: lz.as_f64()?,
+                k: j.get("k").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+                l: j.get("l").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+            });
+        }
+        if let Some(s) = j.get("scores") {
+            return Ok(Response::TopK {
+                ids: j.req("ids")?.as_usize_vec()?.into_iter().map(|x| x as u32).collect(),
+                scores: s.as_f32_vec()?,
+            });
+        }
+        if let Some(ids) = j.get("ids") {
+            return Ok(Response::Samples {
+                ids: ids.as_usize_vec()?.into_iter().map(|x| x as u32).collect(),
+                scanned: j.get("scanned").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+                tail_m: j.get("tail_m").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+            });
+        }
+        Err(Error::serve("unrecognized response shape"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        let j = r.to_json();
+        let back = Request::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    fn roundtrip_resp(r: Response) {
+        let j = r.to_json();
+        let back = Response::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(Request::Sample { theta: vec![0.5, -1.0], count: 3 });
+        roundtrip_req(Request::TopK { theta: vec![1.0], k: 7 });
+        roundtrip_req(Request::LogPartition { theta: vec![2.0] });
+        roundtrip_req(Request::ExpectFeatures { theta: vec![0.0, 0.25] });
+        roundtrip_req(Request::TvCertify { theta: vec![1.5] });
+        roundtrip_req(Request::Stats);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(Response::Samples { ids: vec![1, 2, 3], scanned: 100, tail_m: 5 });
+        roundtrip_resp(Response::TopK { ids: vec![9, 4], scores: vec![0.5, 0.25] });
+        roundtrip_resp(Response::LogPartition { log_z: 12.5, k: 10, l: 20 });
+        roundtrip_resp(Response::Features { mean: vec![0.5], log_z: 1.0 });
+        roundtrip_resp(Response::Tv { bound: 1e-4 });
+        roundtrip_resp(Response::Stats { text: "ok".into() });
+        roundtrip_resp(Response::Error { message: "boom".into() });
+    }
+
+    #[test]
+    fn sample_count_defaults_to_one() {
+        let j = Json::parse(r#"{"op":"sample","theta":[1,2]}"#).unwrap();
+        match Request::from_json(&j).unwrap() {
+            Request::Sample { count, .. } => assert_eq!(count, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let j = Json::parse(r#"{"op":"nope"}"#).unwrap();
+        assert!(Request::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! The inference engine: one preprocessed database + MIPS index +
+//! samplers/estimators, answering [`Request`]s.
+//!
+//! This is the single-threaded core; [`super::Coordinator`] wraps it in a
+//! worker pool with per-worker RNG streams.
+
+use super::api::{Request, Response};
+use crate::config::Config;
+use crate::data::{self, Dataset};
+use crate::error::Result;
+use crate::estimator::expectation::ExpectationEstimator;
+use crate::estimator::partition::PartitionEstimator;
+use crate::mips::{self, brute::BruteForce, MipsIndex};
+use crate::sampler::lazy_gumbel::LazyGumbelSampler;
+use crate::sampler::tv_bound;
+use crate::sampler::Sampler;
+use crate::scorer::{NativeScorer, ScoreBackend};
+use crate::util::rng::Pcg64;
+use crate::util::timing::{LatencyHistogram, Stopwatch};
+use std::sync::Arc;
+
+/// Per-operation service metrics.
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub sample: LatencyHistogram,
+    pub topk: LatencyHistogram,
+    pub partition: LatencyHistogram,
+    pub expect: LatencyHistogram,
+    pub tv: LatencyHistogram,
+}
+
+impl EngineMetrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "sample: {}\ntopk: {}\nlog_partition: {}\nexpect_features: {}\ntv_certify: {}",
+            self.sample.summary(),
+            self.topk.summary(),
+            self.partition.summary(),
+            self.expect.summary(),
+            self.tv.summary()
+        )
+    }
+}
+
+/// Inference engine over a fixed database.
+pub struct Engine {
+    pub ds: Arc<Dataset>,
+    pub index: Arc<dyn MipsIndex>,
+    pub backend: Arc<dyn ScoreBackend>,
+    pub sampler: LazyGumbelSampler,
+    pub partition: PartitionEstimator,
+    pub expectation: ExpectationEstimator,
+    pub metrics: EngineMetrics,
+    pub config: Config,
+}
+
+impl Engine {
+    /// Build everything from config: generate/load data, build the index,
+    /// wire the samplers/estimators with `k = k_mult·√n` etc.
+    ///
+    /// `backend` lets the caller inject a PJRT scorer; `None` = native.
+    pub fn from_config(cfg: &Config, backend: Option<Arc<dyn ScoreBackend>>) -> Result<Engine> {
+        let backend = backend.unwrap_or_else(|| Arc::new(NativeScorer));
+        let ds = Arc::new(data::load_or_generate(&cfg.data));
+        let index = mips::build_index(&ds, &cfg.index, backend.clone())?;
+        Ok(Self::from_parts(cfg.clone(), ds, index, backend))
+    }
+
+    /// Assemble from prebuilt parts (tests, benches, examples).
+    pub fn from_parts(
+        config: Config,
+        ds: Arc<Dataset>,
+        index: Arc<dyn MipsIndex>,
+        backend: Arc<dyn ScoreBackend>,
+    ) -> Engine {
+        // honour the index's measured gap if larger than the configured one
+        let gap_c = config
+            .sampler
+            .gap_c
+            .max(index.gap_bound().unwrap_or(0.0));
+        let sampler = LazyGumbelSampler::new(
+            ds.clone(),
+            index.clone(),
+            backend.clone(),
+            config.sampler_k(),
+            gap_c,
+        );
+        let partition = PartitionEstimator::new(
+            ds.clone(),
+            index.clone(),
+            backend.clone(),
+            config.estimator_k(),
+            config.estimator_l(),
+        );
+        let expectation = ExpectationEstimator::new(
+            ds.clone(),
+            index.clone(),
+            backend.clone(),
+            config.estimator_k(),
+            config.estimator_l(),
+        );
+        Engine {
+            ds,
+            index,
+            backend,
+            sampler,
+            partition,
+            expectation,
+            metrics: EngineMetrics::default(),
+            config,
+        }
+    }
+
+    /// Handle one request (synchronously, on the caller's thread).
+    pub fn handle(&self, req: &Request, rng: &mut Pcg64) -> Response {
+        let sw = Stopwatch::start();
+        let resp = match req {
+            Request::Sample { theta, count } => {
+                if theta.len() != self.ds.d {
+                    return Self::dim_error(theta.len(), self.ds.d);
+                }
+                let outs = self.sampler.sample_many(theta, (*count).max(1), rng);
+                let r = Response::Samples {
+                    ids: outs.iter().map(|o| o.id).collect(),
+                    scanned: outs.first().map(|o| o.work.scanned).unwrap_or(0),
+                    tail_m: outs.iter().map(|o| o.work.m).sum(),
+                };
+                self.metrics.sample.record(sw.micros());
+                r
+            }
+            Request::TopK { theta, k } => {
+                if theta.len() != self.ds.d {
+                    return Self::dim_error(theta.len(), self.ds.d);
+                }
+                let top = self.index.top_k(theta, (*k).max(1));
+                let r = Response::TopK {
+                    ids: top.items.iter().map(|s| s.id).collect(),
+                    scores: top.items.iter().map(|s| s.score).collect(),
+                };
+                self.metrics.topk.record(sw.micros());
+                r
+            }
+            Request::LogPartition { theta } => {
+                if theta.len() != self.ds.d {
+                    return Self::dim_error(theta.len(), self.ds.d);
+                }
+                let est = self.partition.estimate(theta, rng);
+                let r = Response::LogPartition {
+                    log_z: est.log_z,
+                    k: est.work.k,
+                    l: est.work.l,
+                };
+                self.metrics.partition.record(sw.micros());
+                r
+            }
+            Request::ExpectFeatures { theta } => {
+                if theta.len() != self.ds.d {
+                    return Self::dim_error(theta.len(), self.ds.d);
+                }
+                let est = self.expectation.expect_features(theta, rng);
+                let r = Response::Features { mean: est.mean, log_z: est.log_z };
+                self.metrics.expect.record(sw.micros());
+                r
+            }
+            Request::TvCertify { theta } => {
+                if theta.len() != self.ds.d {
+                    return Self::dim_error(theta.len(), self.ds.d);
+                }
+                let top = self.index.top_k(theta, self.sampler.k);
+                let brute = BruteForce::new(self.ds.clone(), self.backend.clone());
+                let mut all = vec![0f32; self.ds.n];
+                brute.all_scores(theta, &mut all);
+                let bound = tv_bound::tv_bound(&all, &top);
+                self.metrics.tv.record(sw.micros());
+                Response::Tv { bound }
+            }
+            Request::Stats => Response::Stats {
+                text: format!(
+                    "{}\nbackend={} k={} \n{}",
+                    self.index.describe(),
+                    self.backend.name(),
+                    self.sampler.k,
+                    self.metrics.summary()
+                ),
+            },
+        };
+        resp
+    }
+
+    fn dim_error(got: usize, want: usize) -> Response {
+        Response::Error { message: format!("theta has dim {got}, database has dim {want}") }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndexKind;
+
+    fn tiny_engine() -> Engine {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.data.n = 3000;
+        cfg.data.d = 16;
+        cfg.index.kind = IndexKind::Ivf;
+        cfg.index.n_clusters = 40;
+        cfg.index.n_probe = 10;
+        cfg.index.kmeans_iters = 4;
+        cfg.index.train_sample = 1500;
+        Engine::from_config(&cfg, None).unwrap()
+    }
+
+    #[test]
+    fn engine_serves_all_ops() {
+        let e = tiny_engine();
+        let mut rng = Pcg64::new(1);
+        let theta = data::random_theta(&e.ds, e.config.data.temperature, &mut rng);
+
+        match e.handle(&Request::Sample { theta: theta.clone(), count: 5 }, &mut rng) {
+            Response::Samples { ids, scanned, .. } => {
+                assert_eq!(ids.len(), 5);
+                assert!(scanned > 0 && scanned < e.ds.n);
+            }
+            other => panic!("{other:?}"),
+        }
+        match e.handle(&Request::TopK { theta: theta.clone(), k: 7 }, &mut rng) {
+            Response::TopK { ids, scores } => {
+                assert_eq!(ids.len(), 7);
+                assert_eq!(scores.len(), 7);
+                assert!(scores.windows(2).all(|w| w[0] >= w[1]));
+            }
+            other => panic!("{other:?}"),
+        }
+        match e.handle(&Request::LogPartition { theta: theta.clone() }, &mut rng) {
+            Response::LogPartition { log_z, k, l } => {
+                assert!(log_z.is_finite());
+                assert!(k > 0 && l > 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        match e.handle(&Request::ExpectFeatures { theta: theta.clone() }, &mut rng) {
+            Response::Features { mean, log_z } => {
+                assert_eq!(mean.len(), e.ds.d);
+                assert!(log_z.is_finite());
+            }
+            other => panic!("{other:?}"),
+        }
+        match e.handle(&Request::TvCertify { theta }, &mut rng) {
+            Response::Tv { bound } => assert!((0.0..=1.0).contains(&bound)),
+            other => panic!("{other:?}"),
+        }
+        match e.handle(&Request::Stats, &mut rng) {
+            Response::Stats { text } => {
+                assert!(text.contains("ivf"));
+                assert!(text.contains("sample:"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_graceful() {
+        let e = tiny_engine();
+        let mut rng = Pcg64::new(2);
+        match e.handle(&Request::Sample { theta: vec![1.0; 3], count: 1 }, &mut rng) {
+            Response::Error { message } => assert!(message.contains("dim")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let e = tiny_engine();
+        let mut rng = Pcg64::new(3);
+        let theta = data::random_theta(&e.ds, 0.05, &mut rng);
+        for _ in 0..3 {
+            e.handle(&Request::Sample { theta: theta.clone(), count: 1 }, &mut rng);
+        }
+        assert_eq!(e.metrics.sample.count(), 3);
+    }
+}

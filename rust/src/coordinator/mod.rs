@@ -1,0 +1,180 @@
+//! The L3 serving layer: a worker-pool coordinator around the inference
+//! [`Engine`], with bounded-queue backpressure and per-worker RNG streams.
+//!
+//! The amortization story of the paper is a *service* story: preprocessing
+//! (dataset + MIPS index + AOT artifacts) happens once; then a stream of
+//! queries with different θ — sampling, partition estimates, gradient
+//! expectations — is answered in sublinear time each. The coordinator
+//! makes that concrete: [`Coordinator::submit`] enqueues a request and
+//! returns a handle; worker threads drain the queue against a shared
+//! [`Engine`].
+
+pub mod api;
+pub mod engine;
+
+pub use api::{Request, Response};
+pub use engine::{Engine, EngineMetrics};
+
+use crate::error::{Error, Result};
+use crate::util::pool::WorkQueue;
+use crate::util::rng::Pcg64;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A pending response.
+pub struct Ticket {
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::serve("coordinator dropped the request (shutting down?)"))
+    }
+}
+
+struct Job {
+    req: Request,
+    tx: mpsc::Sender<Response>,
+}
+
+/// Multi-threaded request coordinator.
+pub struct Coordinator {
+    engine: Arc<Engine>,
+    queue: Arc<WorkQueue<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn `workers` threads (0 = all cores) over a queue of depth
+    /// `queue_depth` (backpressure: `submit` blocks when full).
+    pub fn start(engine: Arc<Engine>, workers: usize, queue_depth: usize, seed: u64) -> Coordinator {
+        let workers = if workers == 0 { crate::util::pool::default_threads() } else { workers };
+        let queue = Arc::new(WorkQueue::<Job>::new(queue_depth.max(1)));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let queue = queue.clone();
+            let engine = engine.clone();
+            let mut rng = Pcg64::new_stream(seed, w as u64 + 1);
+            handles.push(std::thread::spawn(move || {
+                while let Some(job) = queue.pop() {
+                    let resp = engine.handle(&job.req, &mut rng);
+                    // receiver may have given up; that's fine
+                    let _ = job.tx.send(resp);
+                }
+            }));
+        }
+        Coordinator { engine, queue, workers: handles }
+    }
+
+    /// Enqueue a request (blocks when the queue is full — backpressure).
+    pub fn submit(&self, req: Request) -> Result<Ticket> {
+        let (tx, rx) = mpsc::channel();
+        if !self.queue.push(Job { req, tx }) {
+            return Err(Error::serve("coordinator is shut down"));
+        }
+        Ok(Ticket { rx })
+    }
+
+    /// Try to enqueue without blocking; `Err` when saturated.
+    pub fn try_submit(&self, req: Request) -> Result<Ticket> {
+        let (tx, rx) = mpsc::channel();
+        self.queue
+            .try_push(Job { req, tx })
+            .map_err(|_| Error::serve("queue full"))?;
+        Ok(Ticket { rx })
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, req: Request) -> Result<Response> {
+        self.submit(req)?.wait()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, IndexKind};
+    use crate::data;
+
+    fn tiny_engine() -> Arc<Engine> {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.data.n = 2000;
+        cfg.data.d = 8;
+        cfg.index.kind = IndexKind::Ivf;
+        cfg.index.n_clusters = 30;
+        cfg.index.n_probe = 8;
+        cfg.index.kmeans_iters = 3;
+        cfg.index.train_sample = 1000;
+        Arc::new(Engine::from_config(&cfg, None).unwrap())
+    }
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let engine = tiny_engine();
+        let coord = Coordinator::start(engine.clone(), 3, 16, 42);
+        let mut rng = Pcg64::new(1);
+        let mut tickets = Vec::new();
+        for _ in 0..20 {
+            let theta = data::random_theta(&engine.ds, 0.05, &mut rng);
+            tickets.push(coord.submit(Request::Sample { theta, count: 2 }).unwrap());
+        }
+        for t in tickets {
+            match t.wait().unwrap() {
+                Response::Samples { ids, .. } => assert_eq!(ids.len(), 2),
+                other => panic!("{other:?}"),
+            }
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mixed_workload_and_stats() {
+        let engine = tiny_engine();
+        let coord = Coordinator::start(engine.clone(), 2, 8, 7);
+        let mut rng = Pcg64::new(2);
+        let theta = data::random_theta(&engine.ds, 0.05, &mut rng);
+        coord.call(Request::Sample { theta: theta.clone(), count: 1 }).unwrap();
+        coord.call(Request::LogPartition { theta: theta.clone() }).unwrap();
+        coord.call(Request::ExpectFeatures { theta }).unwrap();
+        match coord.call(Request::Stats).unwrap() {
+            Response::Stats { text } => assert!(text.contains("n=2000")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let engine = tiny_engine();
+        let coord = Coordinator::start(engine, 1, 4, 3);
+        let q = coord.queue.clone();
+        q.close();
+        assert!(coord.submit(Request::Stats).is_err());
+    }
+
+    use crate::util::rng::Pcg64;
+}

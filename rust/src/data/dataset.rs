@@ -1,0 +1,237 @@
+//! Dataset container and on-disk binary format.
+//!
+//! A [`Dataset`] is a dense row-major `[n × d]` f32 matrix of feature
+//! vectors `φ(x)` (the paper's fixed sufficient statistics), plus optional
+//! per-row latent cluster labels from the synthetic generators (used by
+//! evaluation: e.g. cluster purity of the learned model's top samples).
+//!
+//! Binary format ("GMD1"): little-endian header
+//! `magic[4] | n:u64 | d:u32 | has_labels:u32`, then `n*d` f32 rows, then
+//! (optionally) `n` u32 labels. Written/read with buffered IO; a 2M×300
+//! dataset round-trips in a few seconds.
+
+use crate::error::{Error, Result};
+use crate::linalg;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"GMD1";
+
+/// Dense feature database.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// row-major `[n × d]`
+    pub data: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+    /// latent generator cluster per row (empty if unknown)
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    /// Build from a raw matrix.
+    pub fn new(data: Vec<f32>, n: usize, d: usize) -> Result<Self> {
+        if data.len() != n * d {
+            return Err(Error::data(format!(
+                "matrix size {} != n*d = {}*{}",
+                data.len(),
+                n,
+                d
+            )));
+        }
+        Ok(Dataset { data, n, d, labels: Vec::new() })
+    }
+
+    /// Row accessor.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Normalize every row to unit L2 norm (paper §4.1.2 scales both
+    /// datasets to unit norm).
+    pub fn normalize_rows(&mut self) {
+        let d = self.d;
+        for r in 0..self.n {
+            linalg::normalize(&mut self.data[r * d..(r + 1) * d]);
+        }
+    }
+
+    /// Take the first `m` rows (the paper's Figure 2 subsets datasets by
+    /// size; generator rows are in random order so prefixes are uniform
+    /// subsamples).
+    pub fn prefix(&self, m: usize) -> Dataset {
+        let m = m.min(self.n);
+        Dataset {
+            data: self.data[..m * self.d].to_vec(),
+            n: m,
+            d: self.d,
+            labels: if self.labels.is_empty() { vec![] } else { self.labels[..m].to_vec() },
+        }
+    }
+
+    /// Gather rows by id into a caller buffer (`out.len() == ids.len()*d`).
+    /// Used to stage scattered S/T rows into contiguous blocks for the
+    /// PJRT executables.
+    pub fn gather(&self, ids: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len() * self.d);
+        let d = self.d;
+        for (j, &id) in ids.iter().enumerate() {
+            out[j * d..(j + 1) * d].copy_from_slice(self.row(id as usize));
+        }
+    }
+
+    /// Write to the GMD1 binary format.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.n as u64).to_le_bytes())?;
+        w.write_all(&(self.d as u32).to_le_bytes())?;
+        w.write_all(&(u32::from(!self.labels.is_empty())).to_le_bytes())?;
+        // bulk-write the matrix as bytes
+        let bytes = bytemuck_cast_f32(&self.data);
+        w.write_all(bytes)?;
+        if !self.labels.is_empty() {
+            let lbytes = bytemuck_cast_u32(&self.labels);
+            w.write_all(lbytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read from the GMD1 binary format.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Dataset> {
+        let f = std::fs::File::open(&path)?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::data(format!(
+                "bad magic in {:?}: {:?}",
+                path.as_ref(),
+                magic
+            )));
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let d = u32::from_le_bytes(b4) as usize;
+        r.read_exact(&mut b4)?;
+        let has_labels = u32::from_le_bytes(b4) != 0;
+        if n.checked_mul(d).is_none() || n * d > (1 << 33) {
+            return Err(Error::data(format!("implausible dims n={n} d={d}")));
+        }
+        let mut data = vec![0f32; n * d];
+        r.read_exact(bytemuck_cast_f32_mut(&mut data))?;
+        let labels = if has_labels {
+            let mut l = vec![0u32; n];
+            r.read_exact(bytemuck_cast_u32_mut(&mut l))?;
+            l
+        } else {
+            Vec::new()
+        };
+        Ok(Dataset { data, n, d, labels })
+    }
+}
+
+// ---- byte casts (little-endian hosts; asserted) ---------------------------
+
+fn bytemuck_cast_f32(x: &[f32]) -> &[u8] {
+    assert!(cfg!(target_endian = "little"), "GMD1 format requires little-endian");
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+fn bytemuck_cast_f32_mut(x: &mut [f32]) -> &mut [u8] {
+    assert!(cfg!(target_endian = "little"));
+    unsafe { std::slice::from_raw_parts_mut(x.as_mut_ptr() as *mut u8, x.len() * 4) }
+}
+fn bytemuck_cast_u32(x: &[u32]) -> &[u8] {
+    assert!(cfg!(target_endian = "little"));
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+}
+fn bytemuck_cast_u32_mut(x: &mut [u32]) -> &mut [u8] {
+    assert!(cfg!(target_endian = "little"));
+    unsafe { std::slice::from_raw_parts_mut(x.as_mut_ptr() as *mut u8, x.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gmips_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip_with_labels() {
+        let mut rng = Pcg64::new(1);
+        let (n, d) = (123, 7);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let mut ds = Dataset::new(data, n, d).unwrap();
+        ds.labels = (0..n as u32).map(|i| i % 5).collect();
+        let path = tmpfile("roundtrip.bin");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.n, n);
+        assert_eq!(back.d, d);
+        assert_eq!(back.data, ds.data);
+        assert_eq!(back.labels, ds.labels);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_without_labels() {
+        let ds = Dataset::new(vec![1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        let path = tmpfile("nolabels.bin");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert!(back.labels.is_empty());
+        assert_eq!(back.data, ds.data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmpfile("badmagic.bin");
+        std::fs::write(&path, b"XXXXjunkjunkjunk").unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Dataset::new(vec![0.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn normalize_and_prefix() {
+        let mut ds = Dataset::new(vec![3.0, 4.0, 0.0, 5.0, 6.0, 8.0], 3, 2).unwrap();
+        ds.labels = vec![0, 1, 2];
+        ds.normalize_rows();
+        for r in 0..3 {
+            assert!((linalg::norm(ds.row(r)) - 1.0).abs() < 1e-6);
+        }
+        let p = ds.prefix(2);
+        assert_eq!(p.n, 2);
+        assert_eq!(p.labels, vec![0, 1]);
+        assert_eq!(p.row(1), ds.row(1));
+    }
+
+    #[test]
+    fn gather_stages_rows() {
+        let ds = Dataset::new((0..12).map(|x| x as f32).collect(), 4, 3).unwrap();
+        let mut out = vec![0f32; 6];
+        ds.gather(&[3, 1], &mut out);
+        assert_eq!(out, vec![9.0, 10.0, 11.0, 3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Feature databases: container + binary IO ([`dataset`]), synthetic
+//! generators standing in for ImageNet/fastText ([`synth`]), and the PCA
+//! preprocessing stage ([`pca`]).
+
+pub mod dataset;
+pub mod pca;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use synth::{generate, load_or_generate, random_theta};

@@ -1,0 +1,211 @@
+//! PCA by power iteration with deflation.
+//!
+//! The paper's ImageNet pipeline (§4.1.2) extracts 2048-d ResNet features,
+//! averages over the spatial map, **reduces dimensionality with a PCA**,
+//! and unit-normalizes. We reproduce that preprocessing stage so the
+//! end-to-end data pipeline matches the paper's: high-d raw features →
+//! PCA → d-dim → unit-norm.
+//!
+//! Power iteration on the covariance is exact enough for the leading
+//! components of well-separated spectra and needs only matvec passes —
+//! no eigendecomposition dependency.
+
+use crate::linalg;
+use crate::util::rng::Pcg64;
+
+/// PCA model: mean + principal axes (row-major `[k × d]`).
+#[derive(Clone, Debug)]
+pub struct Pca {
+    pub mean: Vec<f32>,
+    /// orthonormal components, row-major `[k × d_in]`
+    pub components: Vec<f32>,
+    pub d_in: usize,
+    pub k: usize,
+    /// eigenvalue estimates (variance captured per component)
+    pub eigenvalues: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit `k` components on row-major `data [n × d]`.
+    ///
+    /// `iters` power iterations per component (20 is plenty for separated
+    /// spectra); deterministic given `seed`.
+    pub fn fit(data: &[f32], n: usize, d: usize, k: usize, iters: usize, seed: u64) -> Pca {
+        assert!(k <= d, "cannot extract more components than dims");
+        assert_eq!(data.len(), n * d);
+        let mut rng = Pcg64::new(seed);
+        // mean
+        let mut mean = vec![0f32; d];
+        for r in 0..n {
+            linalg::axpy(1.0, &data[r * d..(r + 1) * d], &mut mean);
+        }
+        linalg::scale(&mut mean, 1.0 / n as f32);
+
+        let mut components = Vec::with_capacity(k * d);
+        let mut eigenvalues = Vec::with_capacity(k);
+        let mut v: Vec<f32> = vec![0.0; d];
+        let mut av: Vec<f32> = vec![0.0; d];
+        for _comp in 0..k {
+            // random start, orthogonal to found components
+            for x in v.iter_mut() {
+                *x = rng.gaussian() as f32;
+            }
+            orthogonalize(&mut v, &components, d);
+            linalg::normalize(&mut v);
+            let mut lambda = 0.0f64;
+            for _ in 0..iters {
+                // av = Cov · v computed as (1/n) Σ (x-μ) ((x-μ)·v)
+                av.iter_mut().for_each(|x| *x = 0.0);
+                for r in 0..n {
+                    let row = &data[r * d..(r + 1) * d];
+                    // centered dot: (x-μ)·v = x·v − μ·v
+                    let c = linalg::dot(row, &v) - linalg::dot(&mean, &v);
+                    // av += c * (x - μ)
+                    for j in 0..d {
+                        av[j] += c * (row[j] - mean[j]);
+                    }
+                }
+                linalg::scale(&mut av, 1.0 / n as f32);
+                orthogonalize(&mut av, &components, d);
+                lambda = linalg::norm(&av) as f64;
+                if lambda < 1e-12 {
+                    break;
+                }
+                v.copy_from_slice(&av);
+                linalg::scale(&mut v, (1.0 / lambda) as f32);
+            }
+            components.extend_from_slice(&v);
+            eigenvalues.push(lambda);
+        }
+        Pca { mean, components, d_in: d, k, eigenvalues }
+    }
+
+    /// Project one row into the component space.
+    pub fn transform_row(&self, row: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(row.len(), self.d_in);
+        debug_assert_eq!(out.len(), self.k);
+        for c in 0..self.k {
+            let comp = &self.components[c * self.d_in..(c + 1) * self.d_in];
+            out[c] = linalg::dot(row, comp) - linalg::dot(&self.mean, comp);
+        }
+    }
+
+    /// Project a whole matrix `[n × d_in] → [n × k]`.
+    pub fn transform(&self, data: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n * self.k];
+        for r in 0..n {
+            let (i, o) = (r * self.d_in, r * self.k);
+            let row = &data[i..i + self.d_in];
+            // split borrow
+            let out_row = &mut out[o..o + self.k];
+            self.transform_row(row, out_row);
+        }
+        out
+    }
+}
+
+/// Gram-Schmidt `v ⟂ components`.
+fn orthogonalize(v: &mut [f32], components: &[f32], d: usize) {
+    let k = components.len() / d.max(1);
+    for c in 0..k {
+        let comp = &components[c * d..(c + 1) * d];
+        let proj = linalg::dot(v, comp);
+        for j in 0..d {
+            v[j] -= proj * comp[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Build data with a known low-rank structure plus noise.
+    fn planted(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        let axis1: Vec<f32> = {
+            let mut a = vec![0f32; d];
+            a[0] = 1.0;
+            a
+        };
+        let axis2: Vec<f32> = {
+            let mut a = vec![0f32; d];
+            a[1] = 1.0;
+            a
+        };
+        let mut data = vec![0f32; n * d];
+        for r in 0..n {
+            let c1 = 5.0 * rng.gaussian() as f32;
+            let c2 = 2.0 * rng.gaussian() as f32;
+            for j in 0..d {
+                data[r * d + j] =
+                    c1 * axis1[j] + c2 * axis2[j] + 0.05 * rng.gaussian() as f32 + 3.0;
+                // +3.0 offset: PCA must remove the mean
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn recovers_planted_axes() {
+        let (n, d) = (2000, 10);
+        let data = planted(n, d, 1);
+        let pca = Pca::fit(&data, n, d, 2, 30, 2);
+        // first component should align with e0 (variance 25), second with e1 (4)
+        let c0 = &pca.components[0..d];
+        let c1 = &pca.components[d..2 * d];
+        assert!(c0[0].abs() > 0.95, "c0 = {c0:?}");
+        assert!(c1[1].abs() > 0.9, "c1 = {c1:?}");
+        assert!(pca.eigenvalues[0] > pca.eigenvalues[1]);
+        assert!((pca.eigenvalues[0] - 25.0).abs() < 4.0, "λ0={}", pca.eigenvalues[0]);
+    }
+
+    #[test]
+    fn components_orthonormal() {
+        let (n, d) = (500, 12);
+        let data = planted(n, d, 3);
+        let pca = Pca::fit(&data, n, d, 4, 25, 4);
+        for a in 0..4 {
+            for b in 0..4 {
+                let ca = &pca.components[a * d..(a + 1) * d];
+                let cb = &pca.components[b * d..(b + 1) * d];
+                let dot = linalg::dot(ca, cb);
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-3, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn transform_centers_data() {
+        let (n, d) = (400, 8);
+        let data = planted(n, d, 5);
+        let pca = Pca::fit(&data, n, d, 3, 25, 6);
+        let proj = pca.transform(&data, n);
+        // projected data should have ~zero mean per component
+        for c in 0..3 {
+            let mean: f64 = (0..n).map(|r| proj[r * 3 + c] as f64).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 0.2, "component {c} mean={mean}");
+        }
+        // variance along component 0 should be the largest
+        let var = |c: usize| -> f64 {
+            (0..n).map(|r| (proj[r * 3 + c] as f64).powi(2)).sum::<f64>() / n as f64
+        };
+        assert!(var(0) > var(1) && var(1) > var(2) - 0.05);
+    }
+
+    #[test]
+    fn pipeline_high_d_to_low_d() {
+        // mimic the paper: raw 64-d features → PCA to 8 → unit norm
+        let (n, d_raw, d) = (300, 64, 8);
+        let data = planted(n, d_raw, 7);
+        let pca = Pca::fit(&data, n, d_raw, d, 20, 8);
+        let mut proj = pca.transform(&data, n);
+        for r in 0..n {
+            linalg::normalize(&mut proj[r * d..(r + 1) * d]);
+        }
+        let ds = crate::data::dataset::Dataset::new(proj, n, d).unwrap();
+        assert!((linalg::norm(ds.row(0)) - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,252 @@
+//! Synthetic dataset generators standing in for the paper's two feature
+//! databases (see DESIGN.md §Substitutions).
+//!
+//! * [`imagenet_like`] — ResNet-152 features after depth-average + PCA +
+//!   unit-norm (§4.1.2) form ~1000 class-shaped clusters on the sphere.
+//!   We generate `clusters` centers uniform on S^{d-1} and perturb with
+//!   isotropic Gaussian noise before re-normalizing (a von-Mises-Fisher
+//!   like concentration).
+//! * [`wordemb_like`] — fastText embeddings have heavy-tailed cluster
+//!   structure; we draw cluster sizes from a Zipf law and use anisotropic
+//!   within-cluster noise (random per-cluster scale).
+//! * [`uniform_sphere`] — no structure at all; the adversarial case where
+//!   clustering-based MIPS degrades (used in ablations).
+//!
+//! Rows are emitted in globally shuffled order so dataset *prefixes* are
+//! uniform subsamples (Figure 2 sweeps subset sizes).
+
+use super::dataset::Dataset;
+use crate::config::{DataConfig, DataKind};
+use crate::linalg;
+use crate::util::rng::Pcg64;
+
+/// Generate a dataset according to config.
+pub fn generate(cfg: &DataConfig) -> Dataset {
+    match cfg.kind {
+        DataKind::ImagenetLike => imagenet_like(cfg.n, cfg.d, cfg.clusters, cfg.noise, cfg.seed),
+        DataKind::WordembLike => {
+            wordemb_like(cfg.n, cfg.d, cfg.clusters, cfg.noise, cfg.zipf_s, cfg.seed)
+        }
+        DataKind::UniformSphere => uniform_sphere(cfg.n, cfg.d, cfg.seed),
+    }
+}
+
+/// Load from `cfg.path` if set and present, else generate (and cache when a
+/// path is configured).
+pub fn load_or_generate(cfg: &DataConfig) -> Dataset {
+    if !cfg.path.is_empty() {
+        if let Ok(ds) = Dataset::load(&cfg.path) {
+            if ds.n == cfg.n && ds.d == cfg.d {
+                return ds;
+            }
+            log::warn!("cached dataset at {} has wrong shape; regenerating", cfg.path);
+        }
+        let ds = generate(cfg);
+        if let Err(e) = ds.save(&cfg.path) {
+            log::warn!("failed to cache dataset at {}: {e}", cfg.path);
+        }
+        return ds;
+    }
+    generate(cfg)
+}
+
+fn unit_gaussian_vec(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    linalg::normalize(&mut v);
+    v
+}
+
+/// Balanced spherical clusters (ImageNet-feature stand-in).
+///
+/// `noise` is the *total* perturbation norm relative to the unit-norm
+/// center (per-coordinate σ = noise/√d), so cluster tightness is
+/// dimension-independent: expected within-cluster cosine ≈
+/// `1/√(1+noise²)` — e.g. noise 0.35 → ~0.94, noise 1.0 → ~0.71, the
+/// range real ResNet features exhibit within a class.
+pub fn imagenet_like(n: usize, d: usize, clusters: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let clusters = clusters.clamp(1, n.max(1));
+    let centers: Vec<Vec<f32>> = (0..clusters).map(|_| unit_gaussian_vec(&mut rng, d)).collect();
+    let sigma = noise / (d as f64).sqrt();
+    let mut data = vec![0f32; n * d];
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let c = (i % clusters) as u32; // balanced assignment
+        labels[i] = c;
+        let row = &mut data[i * d..(i + 1) * d];
+        for (j, x) in row.iter_mut().enumerate() {
+            *x = centers[c as usize][j] + (sigma * rng.gaussian()) as f32;
+        }
+        linalg::normalize(row);
+    }
+    shuffle_rows(&mut data, &mut labels, d, &mut rng);
+    let mut ds = Dataset::new(data, n, d).unwrap();
+    ds.labels = labels;
+    ds
+}
+
+/// Zipf-sized anisotropic clusters (word-embedding stand-in).
+pub fn wordemb_like(n: usize, d: usize, clusters: usize, noise: f64, zipf_s: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed ^ 0x5EED_0002);
+    let clusters = clusters.clamp(1, n.max(1));
+    let centers: Vec<Vec<f32>> = (0..clusters).map(|_| unit_gaussian_vec(&mut rng, d)).collect();
+    // per-cluster anisotropy: noise scale multiplier in [0.4, 1.8]
+    let aniso: Vec<f64> = (0..clusters).map(|_| 0.4 + 1.4 * rng.next_f64()).collect();
+    // Zipf cluster weights w_c ∝ 1/(c+1)^s
+    let weights: Vec<f64> = (0..clusters).map(|c| 1.0 / ((c + 1) as f64).powf(zipf_s)).collect();
+    let total: f64 = weights.iter().sum();
+    // build a cumulative table once, then draw labels by inverse CDF
+    let mut cum = Vec::with_capacity(clusters);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cum.push(acc);
+    }
+    let mut data = vec![0f32; n * d];
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let u = rng.next_f64();
+        let c = cum.partition_point(|&x| x < u).min(clusters - 1);
+        labels[i] = c as u32;
+        let s = noise * aniso[c] / (d as f64).sqrt();
+        let row = &mut data[i * d..(i + 1) * d];
+        for (j, x) in row.iter_mut().enumerate() {
+            *x = centers[c][j] + (s * rng.gaussian()) as f32;
+        }
+        linalg::normalize(row);
+    }
+    shuffle_rows(&mut data, &mut labels, d, &mut rng);
+    let mut ds = Dataset::new(data, n, d).unwrap();
+    ds.labels = labels;
+    ds
+}
+
+/// Unstructured: uniform on the sphere.
+pub fn uniform_sphere(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed ^ 0x5EED_0003);
+    let mut data = vec![0f32; n * d];
+    for i in 0..n {
+        let row = &mut data[i * d..(i + 1) * d];
+        for x in row.iter_mut() {
+            *x = rng.gaussian() as f32;
+        }
+        linalg::normalize(row);
+    }
+    Dataset::new(data, n, d).unwrap()
+}
+
+/// Draw a query parameter vector θ the way the paper does for evaluation:
+/// "θ drawn uniformly from the dataset" scaled by 1/τ (the temperature is
+/// folded into the query so scoring stays a plain inner product).
+pub fn random_theta(ds: &Dataset, temperature: f64, rng: &mut Pcg64) -> Vec<f32> {
+    let i = rng.next_below(ds.n as u64) as usize;
+    let mut q = ds.row(i).to_vec();
+    let inv_t = (1.0 / temperature) as f32;
+    linalg::scale(&mut q, inv_t);
+    q
+}
+
+/// Fisher–Yates over rows of a row-major matrix (+ parallel label array).
+fn shuffle_rows(data: &mut [f32], labels: &mut [u32], d: usize, rng: &mut Pcg64) {
+    let n = labels.len();
+    let mut swap_buf = vec![0f32; d];
+    for i in (1..n).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        if i != j {
+            labels.swap(i, j);
+            // swap rows i and j
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            let (a, b) = data.split_at_mut(hi * d);
+            swap_buf.copy_from_slice(&a[lo * d..(lo + 1) * d]);
+            a[lo * d..(lo + 1) * d].copy_from_slice(&b[..d]);
+            b[..d].copy_from_slice(&swap_buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imagenet_like_unit_norm_and_clustered() {
+        let ds = imagenet_like(2000, 16, 20, 0.3, 1);
+        assert_eq!(ds.n, 2000);
+        for r in (0..ds.n).step_by(97) {
+            assert!((linalg::norm(ds.row(r)) - 1.0).abs() < 1e-5);
+        }
+        // same-cluster pairs should be much closer than random pairs
+        let mut same = 0.0;
+        let mut diff = 0.0;
+        let mut ns = 0;
+        let mut nd = 0;
+        for i in 0..200 {
+            for j in (i + 1)..200 {
+                let dot = linalg::dot(ds.row(i), ds.row(j));
+                if ds.labels[i] == ds.labels[j] {
+                    same += dot as f64;
+                    ns += 1;
+                } else {
+                    diff += dot as f64;
+                    nd += 1;
+                }
+            }
+        }
+        assert!(ns > 0 && nd > 0);
+        assert!(same / ns as f64 > diff / nd as f64 + 0.3, "clusters not separated");
+    }
+
+    #[test]
+    fn wordemb_like_zipf_sizes() {
+        let ds = wordemb_like(30_000, 16, 50, 0.3, 1.2, 2);
+        let mut counts = vec![0usize; 50];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        // the largest cluster should dominate the smallest by a wide margin
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max > 8 * (min + 1), "zipf skew missing: max={max} min={min}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = imagenet_like(500, 8, 10, 0.3, 7);
+        let b = imagenet_like(500, 8, 10, 0.3, 7);
+        let c = imagenet_like(500, 8, 10, 0.3, 8);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn prefixes_mix_clusters() {
+        // after shuffling, a prefix must contain many distinct clusters
+        let ds = imagenet_like(5000, 8, 50, 0.3, 3);
+        let prefix = ds.prefix(500);
+        let distinct: std::collections::HashSet<u32> = prefix.labels.iter().copied().collect();
+        assert!(distinct.len() > 35, "prefix saw {} clusters", distinct.len());
+    }
+
+    #[test]
+    fn random_theta_scaled_by_temperature() {
+        let ds = uniform_sphere(100, 8, 4);
+        let mut rng = Pcg64::new(9);
+        let q = random_theta(&ds, 0.05, &mut rng);
+        let norm = linalg::norm(&q);
+        assert!((norm - 20.0).abs() < 1e-3, "1/τ scaling, got {norm}");
+    }
+
+    #[test]
+    fn generate_dispatches() {
+        let mut cfg = crate::config::Config::default().data;
+        cfg.n = 300;
+        cfg.d = 8;
+        cfg.clusters = 5;
+        for kind in [DataKind::ImagenetLike, DataKind::WordembLike, DataKind::UniformSphere] {
+            cfg.kind = kind;
+            let ds = generate(&cfg);
+            assert_eq!(ds.n, 300);
+            assert_eq!(ds.d, 8);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in `gmips` returns [`Result<T>`](Result) with
+//! this [`Error`] enum. Variants are grouped by subsystem so callers can
+//! match on the failure domain (config vs. data vs. runtime vs. protocol).
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors produced by the gmips library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// I/O failure (dataset files, artifact files, sockets).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed configuration (TOML parse error, bad value, missing key).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed or inconsistent dataset (bad magic, shape mismatch).
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// JSON parse/serialize failure (manifest, wire protocol).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// CLI argument error.
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    /// MIPS index construction/query failure.
+    #[error("index error: {0}")]
+    Index(String),
+
+    /// XLA/PJRT runtime failure (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Sampler/estimator precondition violation (e.g. k >= n).
+    #[error("inference error: {0}")]
+    Inference(String),
+
+    /// Learner failure (divergence, bad hyperparameters).
+    #[error("learn error: {0}")]
+    Learn(String),
+
+    /// Coordinator/server failure (queue closed, protocol violation).
+    #[error("serve error: {0}")]
+    Serve(String),
+}
+
+impl Error {
+    /// Shorthand constructor used throughout the crate.
+    pub fn config<S: Into<String>>(s: S) -> Self {
+        Error::Config(s.into())
+    }
+    /// Shorthand constructor.
+    pub fn data<S: Into<String>>(s: S) -> Self {
+        Error::Data(s.into())
+    }
+    /// Shorthand constructor.
+    pub fn json<S: Into<String>>(s: S) -> Self {
+        Error::Json(s.into())
+    }
+    /// Shorthand constructor.
+    pub fn index<S: Into<String>>(s: S) -> Self {
+        Error::Index(s.into())
+    }
+    /// Shorthand constructor.
+    pub fn runtime<S: Into<String>>(s: S) -> Self {
+        Error::Runtime(s.into())
+    }
+    /// Shorthand constructor.
+    pub fn inference<S: Into<String>>(s: S) -> Self {
+        Error::Inference(s.into())
+    }
+    /// Shorthand constructor.
+    pub fn serve<S: Into<String>>(s: S) -> Self {
+        Error::Serve(s.into())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_domain() {
+        let e = Error::config("missing [data] section");
+        assert!(e.to_string().contains("config error"));
+        let e = Error::runtime("no artifacts");
+        assert!(e.to_string().contains("runtime error"));
+    }
+
+    #[test]
+    fn io_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,335 @@
+//! **Algorithm 4 — Expectation Estimation.**
+//!
+//! For bounded `|f_i| ≤ C`, estimate `F = Σ_i (e^{y_i}/Z)·f_i` by
+//! combining the top-k head with an upweighted uniform tail sample:
+//!
+//! `Ĵ = Σ_S e^{y} f + (n−k)/l · Σ_T e^{y} f`, `F̂ = Ĵ / Ẑ`.
+//!
+//! Theorem 3.5 gives `|F̂ − F| ≤ εC` w.p. 1−δ when
+//! `k²l ≥ 8n²ε⁻²·ln(4/δ)` and `kl ≥ (8/3)ε⁻²·n·ln(2/δ)`.
+//!
+//! The vector-valued form ([`ExpectationEstimator::expect_features`])
+//! computes `E_θ[φ(x)]` — the model term of the MLE gradient (§4.4) —
+//! sharing one `(S, T)` draw across all d coordinates.
+
+use super::EstimateWork;
+use crate::data::Dataset;
+use crate::linalg::{self, MaxSumExp};
+use crate::mips::{MipsIndex, TopKResult};
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+
+/// Vector expectation estimate (`E_θ[φ]` and the matching `log Ẑ`).
+#[derive(Clone, Debug)]
+pub struct FeatureExpectation {
+    /// Ê[φ] ∈ R^d
+    pub mean: Vec<f32>,
+    /// log Ẑ from the same (S,T) draw — reused for likelihood tracking
+    pub log_z: f64,
+    pub work: EstimateWork,
+}
+
+/// Algorithm 4 estimator bound to a database + index.
+pub struct ExpectationEstimator {
+    ds: Arc<Dataset>,
+    index: Arc<dyn MipsIndex>,
+    backend: Arc<dyn ScoreBackend>,
+    pub k: usize,
+    pub l: usize,
+}
+
+impl ExpectationEstimator {
+    pub fn new(
+        ds: Arc<Dataset>,
+        index: Arc<dyn MipsIndex>,
+        backend: Arc<dyn ScoreBackend>,
+        k: usize,
+        l: usize,
+    ) -> Self {
+        let k = k.clamp(1, ds.n);
+        let l = l.max(1);
+        ExpectationEstimator { ds, index, backend, k, l }
+    }
+
+    fn draw_tail(&self, exclude: &FxHashSet<u32>, rng: &mut Pcg64) -> Vec<u32> {
+        let n = self.ds.n;
+        let k = exclude.len();
+        if k >= n {
+            return Vec::new();
+        }
+        let l = self.l.min(8 * (n - k)).max(1);
+        rng.with_replacement_excluding(n as u64, l, exclude)
+    }
+
+    /// Scalar Algorithm 4 for an arbitrary bounded function `f(id)`.
+    pub fn expect_scalar(
+        &self,
+        q: &[f32],
+        f: &dyn Fn(u32) -> f64,
+        rng: &mut Pcg64,
+    ) -> (f64, EstimateWork) {
+        let top = self.index.top_k(q, self.k);
+        let exclude: FxHashSet<u32> = top.items.iter().map(|s| s.id).collect();
+        let t_ids = self.draw_tail(&exclude, rng);
+        let t_scores = self.score_ids(&t_ids, q);
+
+        let n = self.ds.n;
+        let k = top.items.len();
+        let weight = if t_ids.is_empty() { 0.0 } else { (n - k) as f64 / t_ids.len() as f64 };
+        // stable reference: head max dominates w.h.p.
+        let m = top.s_max().max(t_scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64);
+        let mut z_hat = 0f64;
+        let mut j_hat = 0f64;
+        for it in &top.items {
+            let w = ((it.score as f64) - m).exp();
+            z_hat += w;
+            j_hat += w * f(it.id);
+        }
+        for (&id, &y) in t_ids.iter().zip(&t_scores) {
+            let w = ((y as f64) - m).exp() * weight;
+            z_hat += w;
+            j_hat += w * f(id);
+        }
+        (
+            j_hat / z_hat,
+            EstimateWork { scanned: top.scanned, k, l: t_ids.len() },
+        )
+    }
+
+    /// Vector Algorithm 4 over `f = φ`: the MLE gradient's model term.
+    pub fn expect_features(&self, q: &[f32], rng: &mut Pcg64) -> FeatureExpectation {
+        let top = self.index.top_k(q, self.k);
+        self.expect_features_given_top(&top, q, rng)
+    }
+
+    /// Same, reusing an already retrieved top set.
+    pub fn expect_features_given_top(
+        &self,
+        top: &TopKResult,
+        q: &[f32],
+        rng: &mut Pcg64,
+    ) -> FeatureExpectation {
+        let d = self.ds.d;
+        let n = self.ds.n;
+        let k = top.items.len();
+        let exclude: FxHashSet<u32> = top.items.iter().map(|s| s.id).collect();
+        let t_ids = self.draw_tail(&exclude, rng);
+        let t_scores = self.score_ids(&t_ids, q);
+        let weight = if t_ids.is_empty() { 0.0 } else { (n - k) as f64 / t_ids.len() as f64 };
+
+        let m = top.s_max().max(t_scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64);
+        let mut z_hat = 0f64;
+        let mut wsum = vec![0f32; d];
+        for it in &top.items {
+            let w = ((it.score as f64) - m).exp();
+            z_hat += w;
+            linalg::axpy(w as f32, self.ds.row(it.id as usize), &mut wsum);
+        }
+        for (&id, &y) in t_ids.iter().zip(&t_scores) {
+            let w = ((y as f64) - m).exp() * weight;
+            z_hat += w;
+            linalg::axpy(w as f32, self.ds.row(id as usize), &mut wsum);
+        }
+        let mut mean = wsum;
+        linalg::scale(&mut mean, (1.0 / z_hat) as f32);
+        FeatureExpectation {
+            mean,
+            log_z: m + z_hat.ln(),
+            work: EstimateWork { scanned: top.scanned, k, l: t_ids.len() },
+        }
+    }
+
+    /// Head-only baseline: softmax expectation truncated to S (the
+    /// "top-k gradient" of Table 2; biased).
+    pub fn expect_features_topk_only(&self, q: &[f32]) -> FeatureExpectation {
+        let top = self.index.top_k(q, self.k);
+        let d = self.ds.d;
+        let m = top.s_max();
+        let mut z = 0f64;
+        let mut wsum = vec![0f32; d];
+        for it in &top.items {
+            let w = ((it.score as f64) - m).exp();
+            z += w;
+            linalg::axpy(w as f32, self.ds.row(it.id as usize), &mut wsum);
+        }
+        let mut mean = wsum;
+        linalg::scale(&mut mean, (1.0 / z) as f32);
+        FeatureExpectation {
+            mean,
+            log_z: m + z.ln(),
+            work: EstimateWork { scanned: top.scanned, k: top.items.len(), l: 0 },
+        }
+    }
+
+    fn score_ids(&self, ids: &[u32], q: &[f32]) -> Vec<f32> {
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        let d = self.ds.d;
+        if self.backend.prefers_gather() {
+            let mut rows = vec![0f32; ids.len() * d];
+            self.ds.gather(ids, &mut rows);
+            let mut out = vec![0f32; ids.len()];
+            self.backend.scores(&rows, d, q, &mut out);
+            out
+        } else {
+            ids.iter()
+                .map(|&id| crate::linalg::dot(self.ds.row(id as usize), q))
+                .collect()
+        }
+    }
+}
+
+/// Exact `E_θ[φ]` and log Z by full scan (baseline / evaluation).
+pub fn exact_feature_expectation(
+    ds: &Dataset,
+    backend: &dyn ScoreBackend,
+    q: &[f32],
+) -> (Vec<f32>, f64) {
+    let d = ds.d;
+    const BLOCK: usize = 8192;
+    let mut acc = MaxSumExp::default();
+    let mut out = vec![0f32; BLOCK];
+    // pass 1: max + sumexp
+    let mut start = 0;
+    while start < ds.n {
+        let end = (start + BLOCK).min(ds.n);
+        let buf = &mut out[..end - start];
+        backend.scores(&ds.data[start * d..end * d], d, q, buf);
+        acc.push_all(buf);
+        start = end;
+    }
+    let m = acc.max;
+    // pass 2: weighted feature sum
+    let mut wsum = vec![0f64; d];
+    let mut start = 0;
+    while start < ds.n {
+        let end = (start + BLOCK).min(ds.n);
+        let buf = &mut out[..end - start];
+        backend.scores(&ds.data[start * d..end * d], d, q, buf);
+        for (r, &y) in buf.iter().enumerate() {
+            let w = ((y as f64) - m).exp();
+            let row = &ds.data[(start + r) * d..(start + r + 1) * d];
+            for j in 0..d {
+                wsum[j] += w * row[j] as f64;
+            }
+        }
+        start = end;
+    }
+    let mean: Vec<f32> = wsum.iter().map(|&x| (x / acc.sumexp) as f32).collect();
+    (mean, acc.logsumexp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::mips::brute::BruteForce;
+    use crate::scorer::NativeScorer;
+
+    fn setup(n: usize, seed: u64) -> (Arc<Dataset>, Arc<dyn MipsIndex>, Arc<dyn ScoreBackend>) {
+        let ds = Arc::new(synth::imagenet_like(n, 8, 10, 0.3, seed));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let index: Arc<dyn MipsIndex> = Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+        (ds, index, backend)
+    }
+
+    #[test]
+    fn theorem_3_5_scalar_additive_error() {
+        let (ds, index, backend) = setup(1_000, 1);
+        let est = ExpectationEstimator::new(ds.clone(), index, backend.clone(), 120, 150);
+        let mut rng = Pcg64::new(2);
+        // bounded f with C = 1
+        let f = |id: u32| ((id as f64 * 0.37).sin());
+        let mut worst = 0f64;
+        for _ in 0..15 {
+            let q = synth::random_theta(&ds, 0.2, &mut rng);
+            // exact F
+            let (_, _log_z) = exact_feature_expectation(&ds, backend.as_ref(), &q);
+            let mut all = vec![0f32; ds.n];
+            let brute = BruteForce::new(ds.clone(), backend.clone());
+            brute.all_scores(&q, &mut all);
+            let m = all.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+            let z: f64 = all.iter().map(|&y| ((y as f64) - m).exp()).sum();
+            let f_true: f64 = all
+                .iter()
+                .enumerate()
+                .map(|(i, &y)| ((y as f64) - m).exp() * f(i as u32))
+                .sum::<f64>()
+                / z;
+            let (f_hat, work) = est.expect_scalar(&q, &f, &mut rng);
+            assert_eq!(work.k, 120);
+            worst = worst.max((f_hat - f_true).abs());
+        }
+        // C = 1; with k=120,l=150 on n=1000 the additive error should be
+        // comfortably below 0.15
+        assert!(worst < 0.15, "worst additive error {worst}");
+    }
+
+    #[test]
+    fn feature_expectation_matches_exact() {
+        let (ds, index, backend) = setup(1_500, 3);
+        let est = ExpectationEstimator::new(ds.clone(), index, backend.clone(), 150, 300);
+        let mut rng = Pcg64::new(4);
+        let q = synth::random_theta(&ds, 0.1, &mut rng);
+        let (want, want_log_z) = exact_feature_expectation(&ds, backend.as_ref(), &q);
+        // average a few estimates to suppress sampling noise
+        let reps = 10;
+        let mut mean = vec![0f64; ds.d];
+        let mut lz = 0f64;
+        for _ in 0..reps {
+            let e = est.expect_features(&q, &mut rng);
+            for j in 0..ds.d {
+                mean[j] += e.mean[j] as f64 / reps as f64;
+            }
+            lz += e.log_z / reps as f64;
+        }
+        let err: f64 = mean
+            .iter()
+            .zip(&want)
+            .map(|(a, &b)| (a - b as f64).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 0.05, "max coord error {err}");
+        assert!((lz - want_log_z).abs() < 0.2, "logZ {lz} vs {want_log_z}");
+    }
+
+    #[test]
+    fn topk_only_biased_toward_head() {
+        // on a spread-out distribution the truncated expectation must
+        // deviate from the exact one more than Alg 4 does
+        let (ds, index, backend) = setup(2_000, 5);
+        let est = ExpectationEstimator::new(ds.clone(), index, backend.clone(), 40, 80);
+        let mut rng = Pcg64::new(6);
+        let q = synth::random_theta(&ds, 1.0, &mut rng); // high τ ⇒ flat
+        let (want, _) = exact_feature_expectation(&ds, backend.as_ref(), &q);
+        let head = est.expect_features_topk_only(&q);
+        let ours = est.expect_features(&q, &mut rng);
+        let err = |m: &[f32]| -> f64 {
+            m.iter().zip(&want).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt()
+        };
+        assert!(
+            err(&ours.mean) < err(&head.mean),
+            "ours {} vs head {}",
+            err(&ours.mean),
+            err(&head.mean)
+        );
+    }
+
+    #[test]
+    fn shared_st_draw_is_consistent() {
+        // log_z from expect_features should be a valid Alg-3 style
+        // estimate of the same partition function
+        let (ds, index, backend) = setup(800, 7);
+        let est = ExpectationEstimator::new(ds.clone(), index, backend.clone(), 100, 150);
+        let mut rng = Pcg64::new(8);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let e = est.expect_features(&q, &mut rng);
+        let want = crate::estimator::partition::exact_log_partition(&ds, backend.as_ref(), &q);
+        assert!((e.log_z - want).abs() < 0.3, "{} vs {}", e.log_z, want);
+        assert!(e.work.l > 0);
+    }
+
+    use crate::util::rng::Pcg64;
+}

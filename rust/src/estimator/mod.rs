@@ -1,0 +1,22 @@
+//! Partition-function and expectation estimation (paper §3.2–§3.3).
+//!
+//! Both estimators combine the exactly-summed **top-k head** `S` with an
+//! upweighted **uniform tail sample** `T` (with replacement):
+//!
+//! * [`partition::PartitionEstimator`] — **Algorithm 3**, unbiased, with
+//!   `(ε, δ)` guarantee for `kl ≥ (2/3)(1/ε²)·n·ln(1/δ)` (Theorem 3.4),
+//! * [`expectation::ExpectationEstimator`] — **Algorithm 4**, additive
+//!   `εC` error for bounded `|f| ≤ C` (Theorem 3.5); the vector-valued
+//!   form over `f = φ` is the gradient engine for learning (§4.4).
+
+pub mod expectation;
+pub mod partition;
+
+/// Work accounting for one estimation query.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EstimateWork {
+    /// rows scored during MIPS retrieval
+    pub scanned: usize,
+    pub k: usize,
+    pub l: usize,
+}

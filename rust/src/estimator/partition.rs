@@ -1,0 +1,266 @@
+//! **Algorithm 3 — Partition Function Estimation.**
+//!
+//! `Ẑ = Σ_{i∈S} e^{y_i} + (n−k)/l · Σ_{i∈T} e^{y_i}` with `S` the top-k
+//! set and `T` a uniform with-replacement sample of the tail. Unbiased
+//! (Theorem 3.4); relative error ≤ ε with probability 1−δ when
+//! `kl ≥ (2/3)(1/ε²)·n·e^c·ln(1/δ)`.
+//!
+//! All arithmetic is carried in log space relative to the top score, so
+//! τ = 0.05 score ranges (±20) cannot overflow.
+
+use super::EstimateWork;
+use crate::data::Dataset;
+use crate::linalg::MaxSumExp;
+use crate::mips::{MipsIndex, TopKResult};
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+
+/// Result of a partition estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionEstimate {
+    /// log Ẑ
+    pub log_z: f64,
+    pub work: EstimateWork,
+}
+
+/// Algorithm 3 estimator bound to a database + index.
+pub struct PartitionEstimator {
+    ds: Arc<Dataset>,
+    index: Arc<dyn MipsIndex>,
+    backend: Arc<dyn ScoreBackend>,
+    pub k: usize,
+    pub l: usize,
+}
+
+impl PartitionEstimator {
+    pub fn new(
+        ds: Arc<Dataset>,
+        index: Arc<dyn MipsIndex>,
+        backend: Arc<dyn ScoreBackend>,
+        k: usize,
+        l: usize,
+    ) -> Self {
+        let k = k.clamp(1, ds.n);
+        let l = l.max(1);
+        PartitionEstimator { ds, index, backend, k, l }
+    }
+
+    /// Minimum `kl` product for an `(ε, δ)` guarantee (Theorem 3.4, c=0).
+    pub fn required_kl(n: usize, eps: f64, delta: f64) -> f64 {
+        (2.0 / 3.0) * (1.0 / (eps * eps)) * n as f64 * (1.0 / delta).ln()
+    }
+
+    /// Estimate given an already-retrieved top set (amortized setting).
+    pub fn estimate_given_top(
+        &self,
+        top: &TopKResult,
+        q: &[f32],
+        rng: &mut Pcg64,
+    ) -> PartitionEstimate {
+        let n = self.ds.n;
+        let k = top.items.len();
+        debug_assert!(k > 0);
+
+        // tail sample T (uniform, with replacement, excluding S)
+        let exclude: FxHashSet<u32> = top.items.iter().map(|s| s.id).collect();
+        let l = self.l.min(n.saturating_sub(k)).max(1);
+        let t_ids = if k < n {
+            rng.with_replacement_excluding(n as u64, l, &exclude)
+        } else {
+            Vec::new()
+        };
+
+        // score T (gather-free on backends that score rows in place)
+        let d = self.ds.d;
+        let mut t_scores = vec![0f32; t_ids.len()];
+        if !t_ids.is_empty() {
+            if self.backend.prefers_gather() {
+                let mut rows = vec![0f32; t_ids.len() * d];
+                self.ds.gather(&t_ids, &mut rows);
+                self.backend.scores(&rows, d, q, &mut t_scores);
+            } else {
+                for (o, &id) in t_scores.iter_mut().zip(&t_ids) {
+                    *o = crate::linalg::dot(self.ds.row(id as usize), q);
+                }
+            }
+        }
+
+        // log-space combination relative to the global head max
+        let mut head = MaxSumExp::default();
+        for it in &top.items {
+            head.push(it.score as f64);
+        }
+        let mut tail = MaxSumExp::default();
+        tail.push_all(&t_scores);
+
+        let log_z = combine_head_tail(&head, &tail, n, k, t_ids.len());
+        PartitionEstimate {
+            log_z,
+            work: EstimateWork { scanned: top.scanned, k, l: t_ids.len() },
+        }
+    }
+
+    /// Full Algorithm 3: retrieve S, sample T, combine.
+    pub fn estimate(&self, q: &[f32], rng: &mut Pcg64) -> PartitionEstimate {
+        let top = self.index.top_k(q, self.k);
+        self.estimate_given_top(&top, q, rng)
+    }
+
+    /// Head-only baseline (`Ẑ = Σ_S e^{y}` — what Vijayanarasimhan et al.
+    /// 2014 style truncation gives; biased low).
+    pub fn estimate_topk_only(&self, q: &[f32]) -> PartitionEstimate {
+        let top = self.index.top_k(q, self.k);
+        let mut head = MaxSumExp::default();
+        for it in &top.items {
+            head.push(it.score as f64);
+        }
+        PartitionEstimate {
+            log_z: head.logsumexp(),
+            work: EstimateWork { scanned: top.scanned, k: top.items.len(), l: 0 },
+        }
+    }
+}
+
+/// `log( Σ_head e^y + (n−k)/l · Σ_tail e^y )` from streaming fragments.
+pub fn combine_head_tail(
+    head: &MaxSumExp,
+    tail: &MaxSumExp,
+    n: usize,
+    k: usize,
+    l: usize,
+) -> f64 {
+    if tail.count == 0 || l == 0 || n == k {
+        return head.logsumexp();
+    }
+    let weight = (n - k) as f64 / l as f64;
+    // reference point: max of both fragment maxima
+    let m = head.max.max(tail.max);
+    let head_mass = if head.count > 0 { head.sumexp * (head.max - m).exp() } else { 0.0 };
+    let tail_mass = tail.sumexp * (tail.max - m).exp() * weight;
+    m + (head_mass + tail_mass).ln()
+}
+
+/// Exact log partition via a full scan (baseline / evaluation).
+pub fn exact_log_partition(ds: &Dataset, backend: &dyn ScoreBackend, q: &[f32]) -> f64 {
+    let mut acc = MaxSumExp::default();
+    const BLOCK: usize = 8192;
+    let mut out = vec![0f32; BLOCK];
+    let d = ds.d;
+    let mut start = 0;
+    while start < ds.n {
+        let end = (start + BLOCK).min(ds.n);
+        let buf = &mut out[..end - start];
+        backend.scores(&ds.data[start * d..end * d], d, q, buf);
+        acc.push_all(buf);
+        start = end;
+    }
+    acc.logsumexp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::mips::brute::BruteForce;
+    use crate::scorer::NativeScorer;
+    use crate::util::stats;
+
+    fn setup(n: usize, seed: u64) -> (Arc<Dataset>, Arc<dyn MipsIndex>, Arc<dyn ScoreBackend>) {
+        let ds = Arc::new(synth::imagenet_like(n, 8, 10, 0.3, seed));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let index: Arc<dyn MipsIndex> = Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+        (ds, index, backend)
+    }
+
+    #[test]
+    fn theorem_3_4_unbiased() {
+        // E[Ẑ] = Z: average many estimates in the *linear* domain.
+        let (ds, index, backend) = setup(800, 1);
+        let est = PartitionEstimator::new(ds.clone(), index, backend.clone(), 40, 40);
+        let mut rng = Pcg64::new(2);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let true_log_z = exact_log_partition(&ds, backend.as_ref(), &q);
+        let top = est.index.top_k(&q, est.k);
+        let reps = 600;
+        // average Ẑ/Z to avoid overflow
+        let mean_ratio: f64 = (0..reps)
+            .map(|_| (est.estimate_given_top(&top, &q, &mut rng).log_z - true_log_z).exp())
+            .sum::<f64>()
+            / reps as f64;
+        assert!((mean_ratio - 1.0).abs() < 0.05, "E[Ẑ]/Z = {mean_ratio}");
+    }
+
+    #[test]
+    fn theorem_3_4_epsilon_delta_coverage() {
+        // with kl ≥ (2/3)(1/ε²) n ln(1/δ), |Ẑ−Z|/Z ≤ ε w.p. 1−δ
+        let (ds, index, backend) = setup(1_000, 3);
+        let (eps, delta) = (0.35, 0.1);
+        let need = PartitionEstimator::required_kl(ds.n, eps, delta);
+        let k = (need.sqrt().ceil() as usize).min(ds.n / 2);
+        let l = (need / k as f64).ceil() as usize;
+        assert!((k * l) as f64 >= need);
+        let est = PartitionEstimator::new(ds.clone(), index, backend.clone(), k, l);
+        let mut rng = Pcg64::new(4);
+        let mut violations = 0;
+        let trials = 60;
+        for _ in 0..trials {
+            let q = synth::random_theta(&ds, 0.2, &mut rng);
+            let true_log_z = exact_log_partition(&ds, backend.as_ref(), &q);
+            let got = est.estimate(&q, &mut rng).log_z;
+            let rel = ((got - true_log_z).exp() - 1.0).abs();
+            if rel > eps {
+                violations += 1;
+            }
+        }
+        // δ = 0.1 → expect ≤ ~6 violations of 60; allow 4σ slack
+        assert!(violations <= 16, "{violations}/{trials} exceeded ε");
+    }
+
+    #[test]
+    fn topk_only_is_biased_low() {
+        let (ds, index, backend) = setup(2_000, 5);
+        let est = PartitionEstimator::new(ds.clone(), index, backend.clone(), 50, 50);
+        let mut rng = Pcg64::new(6);
+        let q = synth::random_theta(&ds, 0.3, &mut rng);
+        let true_log_z = exact_log_partition(&ds, backend.as_ref(), &q);
+        let head_only = est.estimate_topk_only(&q).log_z;
+        assert!(head_only < true_log_z, "head-only must underestimate");
+        // while Alg 3 is accurate
+        let full = est.estimate(&q, &mut rng).log_z;
+        assert!(
+            stats::rel_err(full.exp(), true_log_z.exp()) < stats::rel_err(head_only.exp(), true_log_z.exp()),
+            "Alg 3 must beat head-only"
+        );
+    }
+
+    #[test]
+    fn numerically_stable_at_low_temperature() {
+        // τ = 0.01 ⇒ scores up to 100: naive Σe^y overflows f64? (e^100 ≈
+        // 2.7e43 fine, but e^800 would not be) — use extreme θ norm to
+        // force the log-space path
+        let (ds, index, backend) = setup(500, 7);
+        let est = PartitionEstimator::new(ds.clone(), index, backend.clone(), 30, 30);
+        let mut rng = Pcg64::new(8);
+        let mut q = synth::random_theta(&ds, 0.05, &mut rng);
+        crate::linalg::scale(&mut q, 50.0); // scores ~ ±1000
+        let got = est.estimate(&q, &mut rng).log_z;
+        assert!(got.is_finite());
+        let want = exact_log_partition(&ds, backend.as_ref(), &q);
+        assert!((got - want).abs() < 1.0, "got {got} want {want}");
+    }
+
+    #[test]
+    fn k_equals_n_degenerates_to_exact() {
+        let (ds, index, backend) = setup(200, 9);
+        let est = PartitionEstimator::new(ds.clone(), index, backend.clone(), 200, 10);
+        let mut rng = Pcg64::new(10);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let got = est.estimate(&q, &mut rng).log_z;
+        let want = exact_log_partition(&ds, backend.as_ref(), &q);
+        assert!((got - want).abs() < 1e-6);
+    }
+
+    use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,253 @@
+//! Ablations beyond the paper's figures — the design-choice studies
+//! DESIGN.md calls out:
+//!
+//! * **index families** (brute / IVF / SRP-LSH / tiered-LSH): recall@k,
+//!   scan fraction, query latency, build time — on both dataset
+//!   geometries (clustered vs Zipf) and the adversarial uniform sphere;
+//! * **sampler variants** (Algorithm 1 vs Algorithm 2 vs frozen-Gumbel):
+//!   per-query work (tail m), sample diversity, distribution error.
+
+use super::EvalOpts;
+use crate::config::{Config, IndexKind};
+use crate::data::{self, Dataset};
+use crate::mips::{self, brute::BruteForce, recall_at_k, MipsIndex};
+use crate::sampler::{
+    exact::ExactSampler, fixed_b::FixedBSampler, frozen::FrozenGumbel,
+    lazy_gumbel::LazyGumbelSampler, Sampler,
+};
+use crate::scorer::{NativeScorer, ScoreBackend};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::util::timing::{ascii_table, write_csv, Stopwatch};
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct IndexAblationRow {
+    pub dataset: String,
+    pub index: String,
+    pub build_s: f64,
+    pub recall_at_k: f64,
+    pub scan_frac: f64,
+    pub query_us: f64,
+}
+
+/// Index-family ablation over three data geometries.
+pub fn run_index(opts: &EvalOpts) -> Vec<IndexAblationRow> {
+    let mut rows = Vec::new();
+    for kind_name in ["imagenet", "wordemb", "uniform"] {
+        let mut cfg = Config::default();
+        cfg.data.kind = crate::config::DataKind::parse(match kind_name {
+            "uniform" => "uniform-sphere",
+            other => other,
+        })
+        .unwrap();
+        cfg.data.n = opts.n.min(30_000);
+        cfg.data.d = 64;
+        cfg.data.seed = opts.seed;
+        let ds = Arc::new(data::generate(&cfg.data));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let k = cfg.sampler_k();
+        let brute = BruteForce::new(ds.clone(), backend.clone());
+        let mut rng = Pcg64::new(opts.seed ^ 0xAB1A);
+        let thetas: Vec<Vec<f32>> = (0..opts.queries.clamp(3, 10))
+            .map(|_| data::random_theta(&ds, cfg.data.temperature, &mut rng))
+            .collect();
+        let truths: Vec<_> = thetas.iter().map(|q| brute.top_k(q, k)).collect();
+
+        for ik in [IndexKind::Brute, IndexKind::Ivf, IndexKind::Lsh, IndexKind::Tiered] {
+            let mut icfg = cfg.index.clone();
+            icfg.kind = ik;
+            icfg.n_clusters = 0;
+            icfg.n_probe = 0;
+            icfg.kmeans_iters = 6;
+            icfg.train_sample = 15_000.min(ds.n);
+            icfg.tables = 12;
+            icfg.bits = 8;
+            icfg.rungs = 8;
+            let sw = Stopwatch::start();
+            let index = mips::build_index(&ds, &icfg, backend.clone()).unwrap();
+            let build_s = sw.elapsed().as_secs_f64();
+            let sw = Stopwatch::start();
+            let mut recall = 0.0;
+            let mut scanned = 0usize;
+            for (q, truth) in thetas.iter().zip(&truths) {
+                let got = index.top_k(q, k);
+                recall += recall_at_k(&got, truth);
+                scanned += got.scanned;
+            }
+            rows.push(IndexAblationRow {
+                dataset: kind_name.to_string(),
+                index: ik.name().to_string(),
+                build_s,
+                recall_at_k: recall / thetas.len() as f64,
+                scan_frac: scanned as f64 / (thetas.len() * ds.n) as f64,
+                query_us: sw.micros() / thetas.len() as f64,
+            });
+        }
+    }
+    report_index(&rows, opts);
+    rows
+}
+
+fn report_index(rows: &[IndexAblationRow], opts: &EvalOpts) {
+    let headers = ["dataset", "index", "build_s", "recall@k", "scan_frac", "query_us"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                r.index.clone(),
+                format!("{:.2}", r.build_s),
+                format!("{:.3}", r.recall_at_k),
+                format!("{:.3}", r.scan_frac),
+                format!("{:.1}", r.query_us),
+            ]
+        })
+        .collect();
+    println!("\n=== Ablation: MIPS index families × data geometry ===");
+    println!("{}", ascii_table(&headers, &table));
+    if opts.write_csv {
+        if let Ok(p) = write_csv("ablation_index", &headers, &table) {
+            println!("wrote {p}");
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SamplerAblationRow {
+    pub sampler: String,
+    pub query_us: f64,
+    pub mean_tail_m: f64,
+    pub distinct_frac: f64,
+    pub tv_to_exact: f64,
+}
+
+/// Sampler-variant ablation: Alg 1 vs Alg 2 vs frozen-Gumbel vs exact.
+pub fn run_sampler(opts: &EvalOpts) -> Vec<SamplerAblationRow> {
+    let mut cfg = Config::default();
+    cfg.data.n = opts.n.min(15_000);
+    cfg.data.d = 64;
+    cfg.data.seed = opts.seed;
+    // moderate temperature so the distribution has real spread (makes
+    // correlation/diversity differences visible)
+    cfg.data.temperature = 0.3;
+    let ds = Arc::new(data::generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let index = super::fig2::build_ivf(&cfg, &ds, backend.clone());
+    let k = cfg.sampler_k();
+    let exact = ExactSampler::new(ds.clone(), backend.clone());
+    let alg1 = LazyGumbelSampler::new(ds.clone(), index.clone(), backend.clone(), k, 0.0);
+    let alg2 = FixedBSampler::new(ds.clone(), index.clone(), backend.clone(), k, k);
+    let mut icfg = cfg.index.clone();
+    icfg.n_clusters = 0;
+    icfg.n_probe = 0;
+    icfg.kmeans_iters = 4;
+    icfg.train_sample = 8_000.min(ds.n);
+    let frozen = FrozenGumbel::build(&ds, 16, &icfg, backend.clone(), opts.seed ^ 0xF0).unwrap();
+
+    let mut rng = Pcg64::new(opts.seed ^ 0xAB5A);
+    let q = data::random_theta(&ds, cfg.data.temperature, &mut rng);
+    let true_probs = exact.probabilities(&q);
+    let draws = 4_000usize;
+
+    let mut rows = Vec::new();
+    let samplers: Vec<(&str, &dyn Sampler)> =
+        vec![("exact", &exact), ("alg1-lazy", &alg1), ("alg2-fixedB", &alg2), ("frozen", &frozen)];
+    for (name, s) in samplers {
+        let sw = Stopwatch::start();
+        let outs = s.sample_many(&q, draws, &mut rng);
+        let query_us = sw.micros() / draws as f64;
+        let mean_m = outs.iter().map(|o| o.work.m as f64).sum::<f64>() / draws as f64;
+        let mut counts = vec![0u64; ds.n];
+        let mut distinct = rustc_hash::FxHashSet::default();
+        for o in &outs {
+            counts[o.id as usize] += 1;
+            distinct.insert(o.id);
+        }
+        // empirical TV to the true distribution (includes finite-sample
+        // noise; compare against the 'exact' row's own value)
+        let emp: Vec<f64> = counts.iter().map(|&c| c as f64 / draws as f64).collect();
+        let tv: f64 =
+            0.5 * emp.iter().zip(&true_probs).map(|(a, b)| (a - b).abs()).sum::<f64>();
+        rows.push(SamplerAblationRow {
+            sampler: name.to_string(),
+            query_us,
+            mean_tail_m: mean_m,
+            distinct_frac: distinct.len() as f64 / draws as f64,
+            tv_to_exact: tv,
+        });
+    }
+    report_sampler(&rows, opts);
+    rows
+}
+
+fn report_sampler(rows: &[SamplerAblationRow], opts: &EvalOpts) {
+    let headers = ["sampler", "per_draw_us", "mean_tail_m", "distinct_frac", "emp_TV"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.sampler.clone(),
+                format!("{:.1}", r.query_us),
+                format!("{:.1}", r.mean_tail_m),
+                format!("{:.3}", r.distinct_frac),
+                format!("{:.4}", r.tv_to_exact),
+            ]
+        })
+        .collect();
+    println!("\n=== Ablation: sampler variants (4k draws, one θ, τ=0.3) ===");
+    println!("{}", ascii_table(&headers, &table));
+    if opts.write_csv {
+        if let Ok(p) = write_csv("ablation_sampler", &headers, &table) {
+            println!("wrote {p}");
+        }
+    }
+}
+
+/// Helper shared with tests.
+pub fn tv_of(rows: &[SamplerAblationRow], name: &str) -> f64 {
+    rows.iter().find(|r| r.sampler == name).map(|r| r.tv_to_exact).unwrap_or(f64::NAN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_ablation_orders_correctly() {
+        let opts = EvalOpts { n: 3_000, queries: 2, seed: 9, write_csv: false };
+        let rows = run_sampler(&opts);
+        // Alg 1/2 empirical TV ≈ exact sampling's own finite-sample TV;
+        // frozen is far off (correlated samples)
+        let exact_tv = tv_of(&rows, "exact");
+        assert!(tv_of(&rows, "alg1-lazy") < exact_tv * 1.5 + 0.02);
+        assert!(tv_of(&rows, "alg2-fixedB") < exact_tv * 1.5 + 0.02);
+        assert!(tv_of(&rows, "frozen") > tv_of(&rows, "alg1-lazy") * 2.0);
+        // frozen produces few distinct samples
+        let frozen_distinct =
+            rows.iter().find(|r| r.sampler == "frozen").unwrap().distinct_frac;
+        let ours_distinct =
+            rows.iter().find(|r| r.sampler == "alg1-lazy").unwrap().distinct_frac;
+        assert!(frozen_distinct < ours_distinct / 2.0);
+    }
+
+    #[test]
+    fn index_ablation_covers_grid() {
+        let opts = EvalOpts { n: 4_000, queries: 3, seed: 10, write_csv: false };
+        let rows = run_index(&opts);
+        assert_eq!(rows.len(), 12); // 3 datasets × 4 indexes
+        // brute is always recall 1.0 at full scan
+        for r in rows.iter().filter(|r| r.index == "brute") {
+            assert!((r.recall_at_k - 1.0).abs() < 1e-9);
+            assert!((r.scan_frac - 1.0).abs() < 1e-9);
+        }
+        // on clustered data, IVF must beat uniform-data IVF recall
+        let ivf = |ds: &str| {
+            rows.iter()
+                .find(|r| r.index == "ivf" && r.dataset == ds)
+                .unwrap()
+                .recall_at_k
+        };
+        assert!(ivf("imagenet") >= ivf("uniform") - 0.05);
+    }
+}

@@ -1,0 +1,165 @@
+//! **Figure 2** — per-query sampling runtime vs dataset size, ours
+//! (Algorithm 1 over IVF) vs brute-force enumeration.
+//!
+//! The paper sweeps ImageNet subsets from 10k to 1.28M rows and reports
+//! per-query time (excluding preprocessing), finding speedup growing
+//! roughly linearly in log n, reaching ~5× at full scale.
+
+use super::EvalOpts;
+use crate::config::Config;
+use crate::data::{self, Dataset};
+use crate::mips::{self, MipsIndex};
+use crate::sampler::{exact::ExactSampler, lazy_gumbel::LazyGumbelSampler, Sampler};
+use crate::scorer::{NativeScorer, ScoreBackend};
+use crate::util::rng::Pcg64;
+use crate::util::timing::{ascii_table, write_csv, Stopwatch};
+use std::sync::Arc;
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    pub n: usize,
+    pub brute_us: f64,
+    pub ours_us: f64,
+    pub speedup: f64,
+    pub mean_tail_m: f64,
+    pub index_build_s: f64,
+}
+
+/// Dataset-size ladder: 10k ×2 … capped at `max_n`.
+pub fn size_ladder(max_n: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut s = 10_000usize.min(max_n);
+    while s < max_n {
+        sizes.push(s);
+        s *= 2;
+    }
+    sizes.push(max_n);
+    sizes.dedup();
+    sizes
+}
+
+pub fn run(opts: &EvalOpts) -> Vec<Fig2Row> {
+    let mut cfg = Config::preset("imagenet").unwrap();
+    cfg.data.n = opts.n;
+    cfg.data.d = 64; // scaled-down default (paper: 256); see DESIGN.md
+    cfg.data.seed = opts.seed;
+    let full = Arc::new(data::generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut rows = Vec::new();
+    for n in size_ladder(opts.n) {
+        let ds = Arc::new(full.prefix(n));
+        rows.push(measure_one(&cfg, ds, backend.clone(), opts));
+    }
+    report(&rows, opts);
+    rows
+}
+
+/// Build the Figure-2-style IVF index for a given subset size.
+pub fn build_ivf(
+    cfg: &Config,
+    ds: &Arc<Dataset>,
+    backend: Arc<dyn ScoreBackend>,
+) -> Arc<dyn MipsIndex> {
+    let n = ds.n;
+    let mut icfg = cfg.index.clone();
+    icfg.n_clusters = 0; // auto 4√n
+    icfg.n_probe = 0;
+    icfg.kmeans_iters = 6;
+    icfg.train_sample = (25 * (4.0 * (n as f64).sqrt()) as usize).min(n).min(30_000);
+    mips::build_index(ds, &icfg, backend).unwrap()
+}
+
+fn measure_one(
+    cfg: &Config,
+    ds: Arc<Dataset>,
+    backend: Arc<dyn ScoreBackend>,
+    opts: &EvalOpts,
+) -> Fig2Row {
+    let n = ds.n;
+    let sw = Stopwatch::start();
+    let index = build_ivf(cfg, &ds, backend.clone());
+    let index_build_s = sw.elapsed().as_secs_f64();
+
+    let k = ((cfg.sampler.k_mult) * (n as f64).sqrt()) as usize;
+    let ours = LazyGumbelSampler::new(ds.clone(), index, backend.clone(), k.max(1), 0.0);
+    let brute = ExactSampler::new(ds.clone(), backend);
+
+    let mut rng = Pcg64::new(opts.seed ^ n as u64);
+    let thetas: Vec<Vec<f32>> = (0..opts.queries.max(2))
+        .map(|_| data::random_theta(&ds, cfg.data.temperature, &mut rng))
+        .collect();
+
+    // per-query time = fresh θ each query (the paper's setting: a
+    // sequence of queries with different parameters)
+    let sw = Stopwatch::start();
+    let mut tail_m = 0usize;
+    for q in &thetas {
+        tail_m += ours.sample(q, &mut rng).work.m;
+    }
+    let ours_us = sw.micros() / thetas.len() as f64;
+
+    let sw = Stopwatch::start();
+    for q in &thetas {
+        brute.sample(q, &mut rng);
+    }
+    let brute_us = sw.micros() / thetas.len() as f64;
+
+    Fig2Row {
+        n,
+        brute_us,
+        ours_us,
+        speedup: brute_us / ours_us,
+        mean_tail_m: tail_m as f64 / thetas.len() as f64,
+        index_build_s,
+    }
+}
+
+fn report(rows: &[Fig2Row], opts: &EvalOpts) {
+    let headers = ["n", "brute_us", "ours_us", "speedup", "mean_m", "build_s"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                format!("{:.1}", r.brute_us),
+                format!("{:.1}", r.ours_us),
+                format!("{:.2}", r.speedup),
+                format!("{:.1}", r.mean_tail_m),
+                format!("{:.2}", r.index_build_s),
+            ]
+        })
+        .collect();
+    println!("\n=== Figure 2: per-query sampling time vs dataset size ===");
+    println!("{}", ascii_table(&headers, &table));
+    if opts.write_csv {
+        if let Ok(p) = write_csv("fig2_sampling", &headers, &table) {
+            println!("wrote {p}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_shape() {
+        assert_eq!(size_ladder(50_000), vec![10_000, 20_000, 40_000, 50_000]);
+        assert_eq!(size_ladder(10_000), vec![10_000]);
+        assert_eq!(size_ladder(5_000), vec![5_000]);
+    }
+
+    #[test]
+    fn tiny_sweep_runs_and_speedup_positive() {
+        let opts = EvalOpts { n: 12_000, queries: 4, seed: 1, write_csv: false };
+        let rows = run(&opts);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.brute_us > 0.0 && r.ours_us > 0.0);
+            assert!(r.mean_tail_m >= 0.0);
+        }
+        // at the largest size ours should beat brute force
+        assert!(rows.last().unwrap().speedup > 1.0, "{:?}", rows.last().unwrap());
+    }
+}

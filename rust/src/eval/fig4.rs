@@ -1,0 +1,176 @@
+//! **Figure 4** — partition-function estimation: runtime vs relative
+//! error frontier.
+//!
+//! Three families, as in the paper:
+//! * **ours** (Algorithm 3) sweeping (k, l),
+//! * **top-k only** (truncated mass; error floors at the tail mass),
+//! * **frozen Gumbel** (Mussmann & Ermon 2016) sweeping noise length t —
+//!   cannot get below ~15% error even at t = 64, and slows as t grows.
+//! Plus the exact full-scan time as the reference line.
+
+use super::EvalOpts;
+use crate::config::Config;
+use crate::data;
+use crate::estimator::partition::{exact_log_partition, PartitionEstimator};
+use crate::sampler::frozen::FrozenGumbel;
+use crate::scorer::{NativeScorer, ScoreBackend};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::util::timing::{ascii_table, write_csv, Stopwatch};
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub method: String,
+    pub param: String,
+    pub runtime_us: f64,
+    pub rel_err: f64,
+}
+
+pub fn run(opts: &EvalOpts) -> Vec<Fig4Row> {
+    let mut cfg = Config::preset("imagenet").unwrap();
+    // frozen-Gumbel baselines rebuild augmented indexes; keep n moderate
+    cfg.data.n = opts.n.min(60_000);
+    cfg.data.d = 64;
+    cfg.data.seed = opts.seed;
+    let ds = Arc::new(data::generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let index = super::fig2::build_ivf(&cfg, &ds, backend.clone());
+
+    let mut rng = Pcg64::new(opts.seed ^ 0xF164);
+    let thetas: Vec<Vec<f32>> = (0..opts.queries.clamp(3, 12))
+        .map(|_| data::random_theta(&ds, cfg.data.temperature, &mut rng))
+        .collect();
+    let exact_lz: Vec<f64> = thetas
+        .iter()
+        .map(|q| exact_log_partition(&ds, backend.as_ref(), q))
+        .collect();
+    // exact runtime reference
+    let sw = Stopwatch::start();
+    for q in &thetas {
+        std::hint::black_box(exact_log_partition(&ds, backend.as_ref(), q));
+    }
+    let exact_us = sw.micros() / thetas.len() as f64;
+
+    let mut rows = vec![Fig4Row {
+        method: "exact".into(),
+        param: "-".into(),
+        runtime_us: exact_us,
+        rel_err: 0.0,
+    }];
+
+    // ---- ours: (k,l) sweep ------------------------------------------------
+    for mult in [1.0, 2.0, 5.0, 10.0, 20.0] {
+        let k = crate::config::eff(mult, ds.n);
+        let est = PartitionEstimator::new(ds.clone(), index.clone(), backend.clone(), k, k);
+        let sw = Stopwatch::start();
+        let mut errs = Vec::new();
+        for (q, &lz) in thetas.iter().zip(&exact_lz) {
+            let got = est.estimate(q, &mut rng).log_z;
+            errs.push(((got - lz).exp() - 1.0).abs());
+        }
+        rows.push(Fig4Row {
+            method: "ours".into(),
+            param: format!("k=l={mult}√n"),
+            runtime_us: sw.micros() / thetas.len() as f64,
+            rel_err: stats::mean_std(&errs).0,
+        });
+    }
+
+    // ---- top-k only ---------------------------------------------------------
+    for mult in [1.0, 5.0, 20.0, 50.0] {
+        let k = crate::config::eff(mult, ds.n);
+        let est = PartitionEstimator::new(ds.clone(), index.clone(), backend.clone(), k, 1);
+        let sw = Stopwatch::start();
+        let mut errs = Vec::new();
+        for (q, &lz) in thetas.iter().zip(&exact_lz) {
+            let got = est.estimate_topk_only(q).log_z;
+            errs.push(((got - lz).exp() - 1.0).abs());
+        }
+        rows.push(Fig4Row {
+            method: "top-k".into(),
+            param: format!("k={mult}√n"),
+            runtime_us: sw.micros() / thetas.len() as f64,
+            rel_err: stats::mean_std(&errs).0,
+        });
+    }
+
+    // ---- frozen Gumbel (M&E 2016) -------------------------------------------
+    let mut icfg = cfg.index.clone();
+    icfg.n_clusters = 0;
+    icfg.n_probe = 0;
+    icfg.kmeans_iters = 4;
+    icfg.train_sample = 10_000.min(ds.n);
+    for t in [4usize, 16, 64] {
+        let fg = FrozenGumbel::build(&ds, t, &icfg, backend.clone(), opts.seed ^ t as u64)
+            .expect("frozen build");
+        let sw = Stopwatch::start();
+        let mut errs = Vec::new();
+        for (q, &lz) in thetas.iter().zip(&exact_lz) {
+            let (got, _) = fg.log_partition_estimate(q);
+            errs.push(((got - lz).exp() - 1.0).abs());
+        }
+        rows.push(Fig4Row {
+            method: "frozen".into(),
+            param: format!("t={t}"),
+            runtime_us: sw.micros() / thetas.len() as f64,
+            rel_err: stats::mean_std(&errs).0,
+        });
+    }
+
+    report(&rows, opts);
+    rows
+}
+
+fn report(rows: &[Fig4Row], opts: &EvalOpts) {
+    let headers = ["method", "param", "runtime_us", "rel_err"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.method.clone(),
+                r.param.clone(),
+                format!("{:.1}", r.runtime_us),
+                format!("{:.4}", r.rel_err),
+            ]
+        })
+        .collect();
+    println!("\n=== Figure 4: partition estimate — runtime vs relative error ===");
+    println!("{}", ascii_table(&headers, &table));
+    if opts.write_csv {
+        if let Ok(p) = write_csv("fig4_partition", &headers, &table) {
+            println!("wrote {p}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_shape_holds() {
+        let opts = EvalOpts { n: 6_000, queries: 4, seed: 3, write_csv: false };
+        let rows = run(&opts);
+        // ours at k=l=20√n must be much more accurate than top-k at 20√n
+        let ours_best = rows
+            .iter()
+            .filter(|r| r.method == "ours")
+            .map(|r| r.rel_err)
+            .fold(f64::INFINITY, f64::min);
+        let topk_best = rows
+            .iter()
+            .filter(|r| r.method == "top-k")
+            .map(|r| r.rel_err)
+            .fold(f64::INFINITY, f64::min);
+        let frozen_best = rows
+            .iter()
+            .filter(|r| r.method == "frozen")
+            .map(|r| r.rel_err)
+            .fold(f64::INFINITY, f64::min);
+        assert!(ours_best < 0.1, "ours best err {ours_best}");
+        assert!(frozen_best > ours_best, "frozen must not beat ours");
+        // top-k only floors at tail mass
+        assert!(topk_best > ours_best);
+    }
+}

@@ -1,0 +1,107 @@
+//! **Figure 7 (appendix)** — *amortized* sampling cost including
+//! preprocessing, and the break-even sample count.
+//!
+//! The paper defines amortized cost as index-build time plus the runtime
+//! of 10,000 samples, and reports that the method starts paying off after
+//! ≈ 8,600 samples on full ImageNet.
+
+use super::EvalOpts;
+use crate::config::Config;
+use crate::data;
+use crate::sampler::{exact::ExactSampler, lazy_gumbel::LazyGumbelSampler, Sampler};
+use crate::scorer::{NativeScorer, ScoreBackend};
+use crate::util::rng::Pcg64;
+use crate::util::timing::{ascii_table, write_csv, Stopwatch};
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub n: usize,
+    pub build_s: f64,
+    pub ours_us: f64,
+    pub brute_us: f64,
+    /// samples needed before preprocessing pays for itself
+    pub breakeven: f64,
+    /// amortized per-sample cost at 10k samples (µs)
+    pub amortized_10k_us: f64,
+}
+
+pub fn run(opts: &EvalOpts) -> Vec<Fig7Row> {
+    let mut cfg = Config::preset("imagenet").unwrap();
+    cfg.data.n = opts.n;
+    cfg.data.d = 64;
+    cfg.data.seed = opts.seed;
+    let full = Arc::new(data::generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+
+    let mut rows = Vec::new();
+    for n in super::fig2::size_ladder(opts.n) {
+        let ds = Arc::new(full.prefix(n));
+        let sw = Stopwatch::start();
+        let index = super::fig2::build_ivf(&cfg, &ds, backend.clone());
+        let build_s = sw.elapsed().as_secs_f64();
+        let k = crate::config::eff(cfg.sampler.k_mult, n);
+        let ours = LazyGumbelSampler::new(ds.clone(), index, backend.clone(), k, 0.0);
+        let brute = ExactSampler::new(ds.clone(), backend.clone());
+        let mut rng = Pcg64::new(opts.seed ^ n as u64 ^ 0xF167);
+        let reps = opts.queries.max(3);
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            let q = data::random_theta(&ds, cfg.data.temperature, &mut rng);
+            ours.sample(&q, &mut rng);
+        }
+        let ours_us = sw.micros() / reps as f64;
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            let q = data::random_theta(&ds, cfg.data.temperature, &mut rng);
+            brute.sample(&q, &mut rng);
+        }
+        let brute_us = sw.micros() / reps as f64;
+        let gain = (brute_us - ours_us).max(1e-9);
+        let breakeven = build_s * 1e6 / gain;
+        let amortized_10k_us = (build_s * 1e6 + 10_000.0 * ours_us) / 10_000.0;
+        rows.push(Fig7Row { n, build_s, ours_us, brute_us, breakeven, amortized_10k_us });
+    }
+    report(&rows, opts);
+    rows
+}
+
+fn report(rows: &[Fig7Row], opts: &EvalOpts) {
+    let headers = ["n", "build_s", "ours_us", "brute_us", "breakeven_samples", "amortized@10k_us"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                format!("{:.2}", r.build_s),
+                format!("{:.1}", r.ours_us),
+                format!("{:.1}", r.brute_us),
+                format!("{:.0}", r.breakeven),
+                format!("{:.1}", r.amortized_10k_us),
+            ]
+        })
+        .collect();
+    println!("\n=== Figure 7: amortized cost incl. preprocessing ===");
+    println!("{}", ascii_table(&headers, &table));
+    if opts.write_csv {
+        if let Ok(p) = write_csv("fig7_amortized", &headers, &table) {
+            println!("wrote {p}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakeven_finite_and_positive() {
+        let opts = EvalOpts { n: 10_000, queries: 3, seed: 6, write_csv: false };
+        let rows = run(&opts);
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.build_s > 0.0);
+            assert!(r.breakeven.is_finite() && r.breakeven > 0.0);
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md's
+//! experiment index). Each driver returns structured rows, prints an
+//! ASCII table, and writes a CSV under `results/`.
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig4;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table2;
+pub mod walk_exp;
+
+/// Common options for all drivers (scaled-down defaults; `--paper-scale`
+/// from the CLI bumps them to the paper's sizes).
+#[derive(Clone, Debug)]
+pub struct EvalOpts {
+    /// maximum dataset size for sweeps / the dataset size for fixed runs
+    pub n: usize,
+    /// queries (θ draws) per configuration
+    pub queries: usize,
+    /// random seed
+    pub seed: u64,
+    /// write CSVs under results/
+    pub write_csv: bool,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts { n: 200_000, queries: 20, seed: 42, write_csv: true }
+    }
+}

@@ -1,0 +1,113 @@
+//! **Table 1** — sampling speedup and total-variation bound per dataset.
+//!
+//! Paper: ImageNet 4.65× speedup, TV ≤ (2.5±1.4)e−4; Word Embeddings
+//! 4.17×, TV ≤ (4.8±2.2)e−4 — averaged over 100 θ drawn from the dataset.
+
+use super::EvalOpts;
+use crate::config::Config;
+use crate::data;
+use crate::mips::brute::BruteForce;
+use crate::sampler::{exact::ExactSampler, lazy_gumbel::LazyGumbelSampler, tv_bound, Sampler};
+use crate::scorer::{NativeScorer, ScoreBackend};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::util::timing::{ascii_table, write_csv, Stopwatch};
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub dataset: String,
+    pub speedup: f64,
+    pub tv_mean: f64,
+    pub tv_std: f64,
+}
+
+pub fn run(opts: &EvalOpts) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for preset in ["imagenet", "wordemb"] {
+        let mut cfg = Config::preset(preset).unwrap();
+        cfg.data.n = opts.n;
+        cfg.data.d = 64; // scaled (paper: 256/300)
+        cfg.data.seed = opts.seed;
+        rows.push(measure(preset, &cfg, opts));
+    }
+    report(&rows, opts);
+    rows
+}
+
+fn measure(name: &str, cfg: &Config, opts: &EvalOpts) -> Table1Row {
+    let ds = Arc::new(data::generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let index = super::fig2::build_ivf(cfg, &ds, backend.clone());
+    let k = cfg.sampler_k();
+    let ours = LazyGumbelSampler::new(ds.clone(), index.clone(), backend.clone(), k, 0.0);
+    let brute_sampler = ExactSampler::new(ds.clone(), backend.clone());
+    let brute = BruteForce::new(ds.clone(), backend.clone());
+
+    let mut rng = Pcg64::new(opts.seed ^ 0x7AB1);
+    let thetas: Vec<Vec<f32>> = (0..opts.queries.max(3))
+        .map(|_| data::random_theta(&ds, cfg.data.temperature, &mut rng))
+        .collect();
+
+    // speedup (per-query, like Fig 2)
+    let sw = Stopwatch::start();
+    for q in &thetas {
+        ours.sample(q, &mut rng);
+    }
+    let ours_us = sw.micros() / thetas.len() as f64;
+    let sw = Stopwatch::start();
+    for q in &thetas {
+        brute_sampler.sample(q, &mut rng);
+    }
+    let brute_us = sw.micros() / thetas.len() as f64;
+
+    // TV-bound certificate per θ (§4.2.1): exact scan + closed form
+    let mut bounds = Vec::new();
+    let mut all = vec![0f32; ds.n];
+    for q in &thetas {
+        let top = index.top_k(q, k);
+        brute.all_scores(q, &mut all);
+        bounds.push(tv_bound::tv_bound(&all, &top));
+    }
+    let (tv_mean, tv_std) = stats::mean_std(&bounds);
+
+    Table1Row { dataset: name.to_string(), speedup: brute_us / ours_us, tv_mean, tv_std }
+}
+
+fn report(rows: &[Table1Row], opts: &EvalOpts) {
+    let headers = ["dataset", "speedup", "tv_bound_mean", "tv_bound_std"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                format!("{:.2}x", r.speedup),
+                format!("{:.2e}", r.tv_mean),
+                format!("{:.2e}", r.tv_std),
+            ]
+        })
+        .collect();
+    println!("\n=== Table 1: sampling speedup + TV bound ===");
+    println!("{}", ascii_table(&headers, &table));
+    if opts.write_csv {
+        if let Ok(p) = write_csv("table1_accuracy", &headers, &table) {
+            println!("wrote {p}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_datasets_measured() {
+        let opts = EvalOpts { n: 8_000, queries: 4, seed: 2, write_csv: false };
+        let rows = run(&opts);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.speedup > 0.0);
+            assert!((0.0..=1.0).contains(&r.tv_mean), "{r:?}");
+        }
+    }
+}

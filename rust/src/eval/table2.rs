@@ -1,0 +1,156 @@
+//! **Table 2 + Figures 5/6** — learning a log-linear model by MLE.
+//!
+//! Paper (5000 iterations, α=10 halved per 1000, D = 16 water images):
+//!
+//! | method         | LL     | speedup |
+//! |----------------|--------|---------|
+//! | exact gradient | −3.170 | 1×      |
+//! | top-k only     | −4.062 | 22.7×   |
+//! | ours           | −3.175 | 9.6×    |
+//!
+//! Figure 5 = the learning curves (ours overlaps exact; top-k plateaus);
+//! Figure 6 = the top-10 most probable held-out states are semantically
+//! coherent — quantified here as latent-cluster purity.
+
+use super::EvalOpts;
+use crate::config::Config;
+use crate::data;
+use crate::learner::{GradMethod, Learner};
+use crate::scorer::{NativeScorer, ScoreBackend};
+use crate::util::rng::Pcg64;
+use crate::util::timing::{ascii_table, write_csv};
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub method: String,
+    pub final_ll: f64,
+    pub speedup: f64,
+    pub grad_seconds: f64,
+    /// Figure 6 proxy: cluster purity of the top-10 held-out states
+    pub top10_purity: f64,
+}
+
+pub fn run(opts: &EvalOpts) -> Vec<Table2Row> {
+    let mut cfg = Config::preset("imagenet").unwrap();
+    // exact gradients are O(n·d·iters): keep the driver tractable on one
+    // core while preserving the paper's regime ratios (k = 10√n ≈ 2.2% of
+    // n, top-k = 100√n would cover everything at this n, so scale it too)
+    cfg.data.n = opts.n.min(50_000);
+    cfg.data.d = 64;
+    cfg.data.seed = opts.seed;
+    // broad latent classes so the learned distribution's support (D's
+    // cluster, n/clusters ≈ 600 states) exceeds the top-k budget — the
+    // regime where the paper's top-k gradient fails (its ImageNet "water"
+    // concept spans far more images than 100√n covers)
+    cfg.data.clusters = 50;
+    cfg.learn.iters = 600;
+    cfg.learn.eval_every = 25;
+    cfg.learn.lr = 10.0;
+    cfg.learn.lr_halve_every = 120;
+    cfg.learn.train_size = 16;
+    cfg.learn.k_mult = 10.0;
+    cfg.learn.l_ratio = 10.0;
+    // paper: top-k uses 100√n = 8.8% of n=1.28M. At bench scale the same
+    // multiplier would cover most of the distribution's mass, hiding the
+    // truncation bias; 2√n (≈1.3% of n) matches the paper's
+    // fraction-of-mass regime instead.
+    cfg.learn.topk_mult = 2.0;
+    run_with_config(&cfg, opts)
+}
+
+pub fn run_with_config(cfg: &Config, opts: &EvalOpts) -> Vec<Table2Row> {
+    let ds = Arc::new(data::generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let index = super::fig2::build_ivf(cfg, &ds, backend.clone());
+    let learner = Learner::new(ds, index, backend, cfg.learn.clone()).unwrap();
+
+    let mut rows = Vec::new();
+    let mut curves: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+    let mut exact_time = 0f64;
+    for method in [GradMethod::Exact, GradMethod::TopK, GradMethod::Amortized] {
+        let mut rng = Pcg64::new(cfg.learn.seed ^ 0x7AB2);
+        let res = learner.train(method, &mut rng);
+        if method == GradMethod::Exact {
+            exact_time = res.grad_seconds;
+        }
+        let tops = learner.top_samples(&res.theta, 10);
+        rows.push(Table2Row {
+            method: method.name().to_string(),
+            final_ll: res.final_ll,
+            speedup: exact_time / res.grad_seconds,
+            grad_seconds: res.grad_seconds,
+            top10_purity: learner.cluster_purity(&tops),
+        });
+        curves.push((
+            method.name().to_string(),
+            res.curve.iter().map(|p| (p.iter, p.log_likelihood)).collect(),
+        ));
+    }
+    report(&rows, &curves, opts);
+    rows
+}
+
+fn report(rows: &[Table2Row], curves: &[(String, Vec<(usize, f64)>)], opts: &EvalOpts) {
+    let headers = ["method", "log_likelihood", "speedup", "grad_s", "top10_purity"];
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.method.clone(),
+                format!("{:.3}", r.final_ll),
+                format!("{:.1}x", r.speedup),
+                format!("{:.2}", r.grad_seconds),
+                format!("{:.0}%", r.top10_purity * 100.0),
+            ]
+        })
+        .collect();
+    println!("\n=== Table 2: learning (MLE) — log-likelihood and speedup ===");
+    println!("{}", ascii_table(&headers, &table));
+    if opts.write_csv {
+        if let Ok(p) = write_csv("table2_learning", &headers, &table) {
+            println!("wrote {p}");
+        }
+        // Figure 5: learning curves
+        let mut rows5 = Vec::new();
+        for (name, pts) in curves {
+            for (it, ll) in pts {
+                rows5.push(vec![name.clone(), it.to_string(), format!("{ll:.5}")]);
+            }
+        }
+        if let Ok(p) = write_csv("fig5_curves", &["method", "iter", "log_likelihood"], &rows5) {
+            println!("wrote {p}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ordering_reproduced() {
+        let mut cfg = Config::preset("imagenet").unwrap();
+        cfg.data.n = 4_000;
+        cfg.data.d = 32;
+        cfg.data.seed = 5;
+        cfg.learn.iters = 150;
+        cfg.learn.eval_every = 50;
+        cfg.learn.lr = 6.0;
+        cfg.learn.lr_halve_every = 60;
+        cfg.learn.train_size = 12;
+        cfg.learn.k_mult = 5.0;
+        cfg.learn.l_ratio = 5.0;
+        cfg.learn.topk_mult = 1.0;
+        let opts = EvalOpts { n: 4_000, queries: 1, seed: 5, write_csv: false };
+        let rows = run_with_config(&cfg, &opts);
+        let get = |m: &str| rows.iter().find(|r| r.method == m).unwrap().clone();
+        let (exact, topk, ours) = (get("exact"), get("top-k"), get("ours"));
+        // Table 2 orderings: ours ≈ exact in LL, top-k worse; both faster
+        // than exact, with top-k fastest
+        assert!((ours.final_ll - exact.final_ll).abs() < 0.3, "{rows:?}");
+        assert!(topk.final_ll < exact.final_ll, "{rows:?}");
+        assert!(ours.speedup > 1.0, "{rows:?}");
+        assert!(topk.speedup > ours.speedup, "{rows:?}");
+    }
+}

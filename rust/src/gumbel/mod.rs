@@ -1,0 +1,213 @@
+//! Gumbel perturbation machinery — the paper's §2.2 and the lazy-tail
+//! construction inside Algorithms 1 and 2.
+//!
+//! The Gumbel-max trick (Proposition 2.1): for i.i.d. standard Gumbels
+//! `G_i`, `argmax_i (y_i + G_i)` is a categorical sample with
+//! `Pr(i) ∝ exp(y_i)`. The paper's contribution is to instantiate only the
+//! Gumbels that can matter: fresh Gumbels for the top-k set `S`, plus the
+//! *lazily sampled* tail Gumbels exceeding a cutoff `B`.
+//!
+//! [`sample_tail`] implements the lazy tail: the number of tail Gumbels
+//! above `B` is `m ~ Binomial(n_tail, 1 − F(B))` (exact, geometric-skip
+//! sampler), their positions are a uniform draw from the tail, and their
+//! values are i.i.d. truncated Gumbels `G | G > B` — together distributed
+//! identically to "sample all `n_tail` Gumbels, keep those above `B`".
+
+use crate::util::rng::Pcg64;
+#[cfg(test)]
+use crate::util::rng::gumbel_cdf;
+use rustc_hash::FxHashSet;
+
+/// Lazily-materialized tail Gumbels above a cutoff.
+#[derive(Clone, Debug, Default)]
+pub struct TailDraw {
+    /// dataset ids of the tail points that received a large Gumbel
+    pub ids: Vec<u32>,
+    /// their Gumbel values (all `> b`)
+    pub gumbels: Vec<f64>,
+}
+
+impl TailDraw {
+    pub fn m(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+/// Probability that a standard Gumbel exceeds `b`, computed stably:
+/// `1 − exp(−exp(−b)) = −expm1(−exp(−b))`.
+#[inline]
+pub fn tail_prob(b: f64) -> f64 {
+    -(-(-b).exp()).exp_m1()
+}
+
+/// The fixed cutoff of Algorithm 2: `B = −ln(−ln(1 − l/n))`, chosen so the
+/// expected number of tail Gumbels above `B` is `l`.
+#[inline]
+pub fn fixed_cutoff(n: usize, l: usize) -> f64 {
+    let frac = (l as f64 / n as f64).min(1.0 - 1e-12);
+    // 1 - F(B) = frac  =>  B = -ln(-ln(1-frac))
+    -(-(1.0 - frac).ln()).ln()
+}
+
+/// Sample the lazy tail for cutoff `b`: which of the `n − |exclude|`
+/// non-top points receive a Gumbel above `b`, and those Gumbel values.
+///
+/// `n` is the total state count; `exclude` is the top set `S` (tail =
+/// `[0,n) \ exclude`). Expected cost `O(E[m])`; Theorem 3.2 bounds
+/// `E[m] ≤ n·e^c / k` for Algorithm 1's data-dependent cutoff.
+pub fn sample_tail(n: usize, exclude: &FxHashSet<u32>, b: f64, rng: &mut Pcg64) -> TailDraw {
+    let n_tail = n - exclude.len();
+    let p = tail_prob(b);
+    let m = rng.binomial(n_tail as u64, p) as usize;
+    let m = m.min(n_tail);
+    let ids = rng.distinct_excluding(n as u64, m, exclude);
+    let gumbels = (0..m).map(|_| rng.gumbel_above(b)).collect();
+    TailDraw { ids, gumbels }
+}
+
+/// Perturb the top set: `argmax_{i∈S} (y_i + G_i)` with fresh Gumbels,
+/// returning `(argmax id, max value, per-element Gumbels)` — callers also
+/// need `M = max` to form the cutoff `B = M − S_min` (Algorithm 1).
+pub fn perturb_top(ids: &[u32], scores: &[f64], rng: &mut Pcg64) -> (u32, f64) {
+    debug_assert_eq!(ids.len(), scores.len());
+    debug_assert!(!ids.is_empty());
+    let mut best_id = ids[0];
+    let mut best = f64::NEG_INFINITY;
+    for (&id, &y) in ids.iter().zip(scores) {
+        let v = y + rng.gumbel();
+        if v > best {
+            best = v;
+            best_id = id;
+        }
+    }
+    (best_id, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_prob_matches_cdf() {
+        for &b in &[-2.0, 0.0, 1.0, 5.0, 20.0] {
+            let direct = 1.0 - gumbel_cdf(b);
+            let stable = tail_prob(b);
+            assert!(
+                (direct - stable).abs() <= 1e-12 + 1e-9 * direct,
+                "b={b}: {direct} vs {stable}"
+            );
+        }
+        // deep tail where the naive form underflows to 0
+        let p = tail_prob(40.0);
+        assert!(p > 0.0 && p < 1e-15);
+    }
+
+    #[test]
+    fn fixed_cutoff_inverts_tail_prob() {
+        let (n, l) = (100_000usize, 300usize);
+        let b = fixed_cutoff(n, l);
+        let p = tail_prob(b);
+        assert!((p - l as f64 / n as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_tail_count_distribution() {
+        // E[m] = n_tail · p; check the empirical mean over repetitions
+        let mut rng = Pcg64::new(1);
+        let n = 50_000usize;
+        let exclude: FxHashSet<u32> = (0..500u32).collect();
+        let l = 200usize;
+        let b = fixed_cutoff(n, l);
+        let p = tail_prob(b);
+        let want = (n - 500) as f64 * p;
+        let reps = 300;
+        let mut total = 0usize;
+        for _ in 0..reps {
+            let t = sample_tail(n, &exclude, b, &mut rng);
+            assert_eq!(t.ids.len(), t.gumbels.len());
+            assert!(t.gumbels.iter().all(|&g| g > b));
+            assert!(t.ids.iter().all(|id| !exclude.contains(id)));
+            // distinct ids
+            let uniq: FxHashSet<u32> = t.ids.iter().copied().collect();
+            assert_eq!(uniq.len(), t.ids.len());
+            total += t.m();
+        }
+        let mean = total as f64 / reps as f64;
+        let sd = (want / reps as f64).sqrt() * 4.0 + 1.0;
+        assert!((mean - want).abs() < sd.max(want * 0.15), "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn lazy_tail_equals_dense_tail_in_distribution() {
+        // The lazy construction must match "draw all tail Gumbels, keep
+        // those > B" — compare the distribution of the *tail maximum*.
+        let mut rng = Pcg64::new(2);
+        let n = 2_000usize;
+        let exclude: FxHashSet<u32> = FxHashSet::default();
+        let b = fixed_cutoff(n, 50);
+        let reps = 4_000;
+        let mut lazy_max = Vec::with_capacity(reps);
+        let mut dense_max = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t = sample_tail(n, &exclude, b, &mut rng);
+            lazy_max.push(
+                t.gumbels.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            );
+            let dm = (0..n)
+                .map(|_| rng.gumbel())
+                .filter(|&g| g > b)
+                .fold(f64::NEG_INFINITY, f64::max);
+            dense_max.push(dm);
+        }
+        // Both sequences should have the same distribution: compare means
+        // over the finite (non-empty) draws and the empty-draw frequency.
+        let finite = |xs: &[f64]| {
+            let f: Vec<f64> = xs.iter().cloned().filter(|x| x.is_finite()).collect();
+            (f.iter().sum::<f64>() / f.len() as f64, f.len())
+        };
+        let (ml, nl) = finite(&lazy_max);
+        let (md, nd) = finite(&dense_max);
+        assert!((ml - md).abs() < 0.05, "lazy mean {ml} dense mean {md}");
+        let (el, ed) = (reps - nl, reps - nd);
+        assert!(
+            ((el as f64) - (ed as f64)).abs() < 4.0 * (el.max(ed).max(1) as f64).sqrt(),
+            "empty-draw counts {el} vs {ed}"
+        );
+    }
+
+    #[test]
+    fn perturb_top_prefers_high_scores() {
+        let mut rng = Pcg64::new(3);
+        let ids = vec![10u32, 20, 30];
+        let scores = vec![0.0, 10.0, 0.0]; // middle dominates
+        let mut wins = 0;
+        for _ in 0..1000 {
+            let (id, m) = perturb_top(&ids, &scores, &mut rng);
+            assert!(m.is_finite());
+            if id == 20 {
+                wins += 1;
+            }
+        }
+        assert!(wins > 990, "wins={wins}");
+    }
+
+    #[test]
+    fn gumbel_max_trick_samples_softmax() {
+        // Proposition 2.1 smoke test on a 4-element distribution.
+        let mut rng = Pcg64::new(4);
+        let ids = vec![0u32, 1, 2, 3];
+        let y = [1.0f64, 0.0, 2.0, -1.0];
+        let z: f64 = y.iter().map(|v| v.exp()).sum();
+        let want: Vec<f64> = y.iter().map(|v| v.exp() / z).collect();
+        let mut counts = [0f64; 4];
+        let reps = 200_000;
+        for _ in 0..reps {
+            let (id, _) = perturb_top(&ids, &y, &mut rng);
+            counts[id as usize] += 1.0;
+        }
+        for i in 0..4 {
+            let got = counts[i] / reps as f64;
+            assert!((got - want[i]).abs() < 0.005, "i={i} got={got} want={}", want[i]);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! # gmips — fast amortized inference and learning in log-linear models
+//!
+//! A production-grade reproduction of *"Fast Amortized Inference and
+//! Learning in Log-linear Models with Randomly Perturbed Nearest Neighbor
+//! Search"* (Mussmann*, Levy*, Ermon — UAI 2017).
+//!
+//! Given a large-but-enumerable state space with fixed features `φ(x)` and
+//! a stream of queries with changing parameters `θ`, gmips answers
+//! sampling / partition-function / expectation / gradient queries against
+//! `Pr(x; θ) ∝ exp(θ·φ(x))` in **sublinear amortized time**, by combining
+//!
+//! * a preprocessed **MIPS index** ([`mips`]) for the top-`O(√n)` scores,
+//! * **lazily instantiated Gumbel perturbations** ([`gumbel`],
+//!   [`sampler`]) for exact sampling (Algorithms 1–2),
+//! * **top-k + uniform-tail estimators** ([`estimator`]) for the
+//!   partition function and bounded expectations (Algorithms 3–4), and
+//! * a gradient-ascent **learner** ([`learner`]) driven by Algorithm 4.
+//!
+//! ## Architecture
+//!
+//! Three layers; Python never runs on the request path:
+//!
+//! 1. **L1 (Pallas)** and **L2 (JAX)** live in `python/compile/` and are
+//!    AOT-lowered once (`make artifacts`) to HLO text.
+//! 2. **L3 (this crate)** loads those artifacts through the PJRT C API
+//!    ([`runtime`]) and serves queries from a worker-pool
+//!    [`coordinator`], optionally over TCP ([`server`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gmips::prelude::*;
+//! use std::sync::Arc;
+//!
+//! let cfg = Config::preset("tiny").unwrap();
+//! let ds = Arc::new(gmips::data::generate(&cfg.data));
+//! let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+//! let index = gmips::mips::build_index(&ds, &cfg.index, backend.clone()).unwrap();
+//! let sampler = LazyGumbelSampler::new(ds.clone(), index, backend, cfg.sampler_k(), 0.0);
+//! let mut rng = Pcg64::new(0);
+//! let theta = gmips::data::random_theta(&ds, cfg.data.temperature, &mut rng);
+//! let sample = sampler.sample(&theta, &mut rng);
+//! println!("sampled state {}", sample.id);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod estimator;
+pub mod eval;
+pub mod gumbel;
+pub mod learner;
+pub mod linalg;
+pub mod mips;
+pub mod runtime;
+pub mod sampler;
+pub mod scorer;
+pub mod server;
+pub mod util;
+pub mod walk;
+
+/// Convenient re-exports for downstream users and examples.
+pub mod prelude {
+    pub use crate::config::{Backend, Config, DataKind, IndexKind};
+    pub use crate::data::Dataset;
+    pub use crate::error::{Error, Result};
+    pub use crate::estimator::expectation::ExpectationEstimator;
+    pub use crate::estimator::partition::PartitionEstimator;
+    pub use crate::learner::{GradMethod, Learner};
+    pub use crate::mips::{build_index, MipsIndex};
+    pub use crate::sampler::exact::ExactSampler;
+    pub use crate::sampler::fixed_b::FixedBSampler;
+    pub use crate::sampler::lazy_gumbel::LazyGumbelSampler;
+    pub use crate::sampler::Sampler;
+    pub use crate::scorer::{NativeScorer, ScoreBackend};
+    pub use crate::util::rng::Pcg64;
+    pub use crate::walk::RandomWalk;
+}

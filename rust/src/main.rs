@@ -1,0 +1,307 @@
+//! gmips CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   gen-data     generate a synthetic dataset and write it to disk
+//!   sample       draw samples for random θ and print them
+//!   partition    estimate log Z for random θ (Algorithm 3) vs exact
+//!   learn        run the §4.4 MLE experiment (exact / top-k / ours)
+//!   walk         run the §4.2.2 random-walk comparison
+//!   serve        start the TCP inference server
+//!   eval <exp>   regenerate a paper table/figure
+//!                (fig2|table1|fig4|table2|fig7|fig8|walk|all)
+//!   selfcheck    load artifacts, compare PJRT vs native numerics
+//!
+//! Common options: --preset NAME --config FILE --set k=v,... --n N --d D
+//! --seed S --backend native|pjrt --index ivf|lsh|tiered|brute
+
+use gmips::config::{Backend, Config};
+use gmips::coordinator::{Coordinator, Engine};
+use gmips::data;
+use gmips::error::{Error, Result};
+use gmips::eval::{self, EvalOpts};
+use gmips::learner::{GradMethod, Learner};
+use gmips::runtime::PjrtScorer;
+use gmips::sampler::Sampler;
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::server::Server;
+use gmips::util::cli::{Args, Spec};
+use gmips::util::rng::Pcg64;
+use std::sync::Arc;
+
+const VALUE_KEYS: &[&str] = &[
+    "preset", "config", "set", "n", "d", "seed", "backend", "index", "out", "count", "k", "l",
+    "queries", "steps", "addr", "workers", "iters", "artifacts",
+];
+
+fn main() {
+    let args = match Spec::new(VALUE_KEYS).parse(std::env::args()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") || args.subcommand().is_none() {
+        print_help();
+        return;
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "gmips — fast amortized inference in log-linear models (UAI 2017 reproduction)\n\n\
+         usage: gmips <subcommand> [options]\n\n\
+         subcommands:\n\
+         \u{20}  gen-data --out data.bin [--preset imagenet|wordemb] [--n N] [--d D]\n\
+         \u{20}  sample [--count C] [--queries Q] [--backend native|pjrt]\n\
+         \u{20}  partition [--queries Q]\n\
+         \u{20}  learn [--iters I]\n\
+         \u{20}  walk [--n N] [--queries Q]\n\
+         \u{20}  serve [--addr HOST:PORT] [--workers W]\n\
+         \u{20}  eval fig2|table1|fig4|table2|fig7|fig8|walk|all [--n N] [--queries Q]\n\
+         \u{20}  selfcheck [--artifacts DIR]\n\n\
+         common options: --preset P --config FILE --set sec.key=v,... --n N --d D --seed S\n\
+         \u{20}                --index ivf|lsh|tiered|brute --backend native|pjrt"
+    );
+}
+
+fn make_backend(cfg: &Config) -> Result<Arc<dyn ScoreBackend>> {
+    Ok(match cfg.runtime.backend {
+        Backend::Native => Arc::new(NativeScorer),
+        Backend::Pjrt => {
+            let scorer = PjrtScorer::load(&cfg.runtime.artifacts_dir)?;
+            if scorer.d() != cfg.data.d {
+                return Err(Error::runtime(format!(
+                    "artifacts compiled for d={}, config wants d={} — re-run `make artifacts DIM={}`",
+                    scorer.d(),
+                    cfg.data.d,
+                    cfg.data.d
+                )));
+            }
+            Arc::new(scorer)
+        }
+    })
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand().unwrap() {
+        "gen-data" => cmd_gen_data(args),
+        "sample" => cmd_sample(args),
+        "partition" => cmd_partition(args),
+        "learn" => cmd_learn(args),
+        "walk" => cmd_walk(args),
+        "serve" => cmd_serve(args),
+        "eval" => cmd_eval(args),
+        "selfcheck" => cmd_selfcheck(args),
+        other => Err(Error::Cli(format!("unknown subcommand '{other}' (try --help)"))),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let out = args.require("out")?;
+    let ds = data::generate(&cfg.data);
+    ds.save(out)?;
+    println!(
+        "wrote {} ({} rows × {} dims, kind={})",
+        out,
+        ds.n,
+        ds.d,
+        cfg.data.kind.name()
+    );
+    Ok(())
+}
+
+fn build_engine(args: &Args) -> Result<Arc<Engine>> {
+    let cfg = Config::from_args(args)?;
+    let backend = make_backend(&cfg)?;
+    eprintln!(
+        "building engine: n={} d={} index={} backend={} ...",
+        cfg.data.n,
+        cfg.data.d,
+        cfg.index.kind.name(),
+        backend.name()
+    );
+    let engine = Engine::from_config(&cfg, Some(backend))?;
+    eprintln!("{}", engine.index.describe());
+    Ok(Arc::new(engine))
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let count = args.get_usize("count", 5)?;
+    let queries = args.get_usize("queries", 3)?;
+    let mut rng = Pcg64::new(engine.config.data.seed ^ 0x5A);
+    for qi in 0..queries {
+        let theta = data::random_theta(&engine.ds, engine.config.data.temperature, &mut rng);
+        let outs = engine.sampler.sample_many(&theta, count, &mut rng);
+        let ids: Vec<u32> = outs.iter().map(|o| o.id).collect();
+        let m: usize = outs.iter().map(|o| o.work.m).sum();
+        println!(
+            "θ[{qi}] → samples {ids:?} (scanned {} rows, {m} lazy tail Gumbels)",
+            outs[0].work.scanned
+        );
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let engine = build_engine(args)?;
+    let queries = args.get_usize("queries", 5)?;
+    let mut rng = Pcg64::new(engine.config.data.seed ^ 0x9B);
+    for qi in 0..queries {
+        let theta = data::random_theta(&engine.ds, engine.config.data.temperature, &mut rng);
+        let est = engine.partition.estimate(&theta, &mut rng);
+        let exact = gmips::estimator::partition::exact_log_partition(
+            &engine.ds,
+            engine.backend.as_ref(),
+            &theta,
+        );
+        println!(
+            "θ[{qi}] log Ẑ = {:.4} (exact {:.4}, rel err {:.4}, k={} l={})",
+            est.log_z,
+            exact,
+            ((est.log_z - exact).exp() - 1.0).abs(),
+            est.work.k,
+            est.work.l
+        );
+    }
+    Ok(())
+}
+
+fn cmd_learn(args: &Args) -> Result<()> {
+    let mut cfg = Config::from_args(args)?;
+    cfg.learn.iters = args.get_usize("iters", cfg.learn.iters)?;
+    let backend = make_backend(&cfg)?;
+    let ds = Arc::new(data::load_or_generate(&cfg.data));
+    let index = gmips::mips::build_index(&ds, &cfg.index, backend.clone())?;
+    let learner = Learner::new(ds, index, backend, cfg.learn.clone())?;
+    let mut rng = Pcg64::new(cfg.learn.seed);
+    for method in [GradMethod::Exact, GradMethod::TopK, GradMethod::Amortized] {
+        let res = learner.train(method, &mut rng);
+        println!(
+            "{:<8} final LL {:.4}  grad time {:.2}s  ({} iters)",
+            method.name(),
+            res.final_ll,
+            res.grad_seconds,
+            res.iters
+        );
+    }
+    Ok(())
+}
+
+fn cmd_walk(args: &Args) -> Result<()> {
+    let opts = eval_opts(args)?;
+    eval::walk_exp::run(&opts);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let addr = args.get_str("addr", &cfg.serve.addr);
+    let workers = args.get_usize("workers", cfg.serve.workers)?;
+    let engine = build_engine(args)?;
+    let coord = Arc::new(Coordinator::start(
+        engine,
+        workers,
+        cfg.serve.queue_depth,
+        cfg.data.seed,
+    ));
+    let server = Server::bind(coord, &addr)?;
+    println!("gmips serving on {}", server.local_addr()?);
+    server.serve()
+}
+
+fn eval_opts(args: &Args) -> Result<EvalOpts> {
+    let mut opts = EvalOpts::default();
+    if args.has_flag("paper-scale") {
+        opts.n = 1_281_167;
+        opts.queries = 100;
+    }
+    opts.n = args.get_usize("n", opts.n)?;
+    opts.queries = args.get_usize("queries", opts.queries)?;
+    opts.seed = args.get_u64("seed", opts.seed)?;
+    Ok(opts)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| Error::Cli("eval expects an experiment name (or 'all')".into()))?;
+    let opts = eval_opts(args)?;
+    let run_one = |name: &str, opts: &EvalOpts| -> Result<()> {
+        match name {
+            "fig2" => {
+                eval::fig2::run(opts);
+            }
+            "table1" => {
+                eval::table1::run(opts);
+            }
+            "fig4" => {
+                eval::fig4::run(opts);
+            }
+            "table2" | "fig5" | "fig6" => {
+                eval::table2::run(opts);
+            }
+            "fig7" => {
+                eval::fig7::run(opts);
+            }
+            "fig8" => {
+                eval::fig8::run(opts);
+            }
+            "walk" => {
+                eval::walk_exp::run(opts);
+            }
+            "ablation" => {
+                eval::ablation::run_index(opts);
+                eval::ablation::run_sampler(opts);
+            }
+            other => return Err(Error::Cli(format!("unknown experiment '{other}'"))),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["fig2", "table1", "fig4", "table2", "fig7", "fig8", "walk", "ablation"] {
+            run_one(name, &opts)?;
+        }
+        Ok(())
+    } else {
+        run_one(which, &opts)
+    }
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let scorer = PjrtScorer::load(&dir)?;
+    println!("loaded artifacts from {dir}: block={} d={}", scorer.block(), scorer.d());
+    let d = scorer.d();
+    let n = 3_000;
+    let ds = gmips::data::synth::imagenet_like(n, d, 16, 0.3, 1);
+    let mut rng = Pcg64::new(2);
+    let q = data::random_theta(&ds, 0.05, &mut rng);
+    let mut pjrt_scores = vec![0f32; n];
+    scorer.scores(&ds.data, d, &q, &mut pjrt_scores);
+    let mut native_scores = vec![0f32; n];
+    NativeScorer.scores(&ds.data, d, &q, &mut native_scores);
+    let max_diff = pjrt_scores
+        .iter()
+        .zip(&native_scores)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    let p = scorer.max_sumexp(&ds.data, d, &q).logsumexp();
+    let nl = NativeScorer.max_sumexp(&ds.data, d, &q).logsumexp();
+    println!("scores   max |pjrt − native| = {max_diff:.2e}");
+    println!("logZ     pjrt {p:.6} vs native {nl:.6} (Δ {:.2e})", (p - nl).abs());
+    if max_diff < 1e-2 && (p - nl).abs() < 1e-3 {
+        println!("selfcheck OK — all three layers agree");
+        Ok(())
+    } else {
+        Err(Error::runtime("selfcheck numerical mismatch"))
+    }
+}

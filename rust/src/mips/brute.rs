@@ -1,0 +1,129 @@
+//! Exact brute-force MIPS — the `O(n·d)` baseline every experiment
+//! compares against, and the correctness oracle for the approximate
+//! indexes.
+
+use super::{MipsIndex, TopKResult};
+use crate::data::Dataset;
+use crate::scorer::ScoreBackend;
+use crate::util::topk::TopK;
+use std::sync::Arc;
+
+/// Exact scan over the whole database in scorer-sized blocks.
+pub struct BruteForce {
+    ds: Arc<Dataset>,
+    backend: Arc<dyn ScoreBackend>,
+    /// rows per scoring call (PJRT backends want their AOT block size)
+    pub block: usize,
+}
+
+impl BruteForce {
+    pub fn new(ds: Arc<Dataset>, backend: Arc<dyn ScoreBackend>) -> Self {
+        BruteForce { ds, backend, block: 4096 }
+    }
+
+    pub fn with_block(mut self, block: usize) -> Self {
+        self.block = block.max(1);
+        self
+    }
+
+    /// Exact scores for ALL rows (used by evaluation: exact partition,
+    /// TV-bound certificates). `out.len() == n`.
+    pub fn all_scores(&self, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.ds.n);
+        let d = self.ds.d;
+        let mut start = 0;
+        while start < self.ds.n {
+            let end = (start + self.block).min(self.ds.n);
+            self.backend.scores(
+                &self.ds.data[start * d..end * d],
+                d,
+                q,
+                &mut out[start..end],
+            );
+            start = end;
+        }
+    }
+}
+
+impl MipsIndex for BruteForce {
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+        let d = self.ds.d;
+        let n = self.ds.n;
+        let mut tk = TopK::new(k.min(n).max(1));
+        let mut buf = vec![0f32; self.block];
+        let mut start = 0;
+        while start < n {
+            let end = (start + self.block).min(n);
+            let out = &mut buf[..end - start];
+            self.backend.scores(&self.ds.data[start * d..end * d], d, q, out);
+            tk.push_block(start as u32, out);
+            start = end;
+        }
+        TopKResult { items: tk.into_sorted(), scanned: n }
+    }
+
+    fn n(&self) -> usize {
+        self.ds.n
+    }
+    fn d(&self) -> usize {
+        self.ds.d
+    }
+    fn gap_bound(&self) -> Option<f64> {
+        Some(0.0) // exact
+    }
+    fn name(&self) -> &'static str {
+        "brute"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::scorer::NativeScorer;
+    use crate::util::rng::Pcg64;
+    use crate::util::topk::topk_reference;
+
+    #[test]
+    fn matches_reference_topk() {
+        let ds = Arc::new(synth::imagenet_like(1500, 12, 15, 0.3, 1));
+        let idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer)).with_block(100);
+        let mut rng = Pcg64::new(2);
+        let q = synth::random_theta(&ds, 0.05, &mut rng);
+        let got = idx.top_k(&q, 25);
+        assert_eq!(got.scanned, 1500);
+        let mut all = vec![0f32; ds.n];
+        idx.all_scores(&q, &mut all);
+        let want = topk_reference(&all, 25);
+        assert_eq!(got.items.len(), 25);
+        for (g, w) in got.items.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.score, w.score);
+        }
+        // sorted descending
+        for w in got.items.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let ds = Arc::new(synth::uniform_sphere(10, 4, 3));
+        let idx = BruteForce::new(ds, Arc::new(NativeScorer));
+        let got = idx.top_k(&[1.0, 0.0, 0.0, 0.0], 100);
+        assert_eq!(got.items.len(), 10);
+    }
+
+    #[test]
+    fn block_boundary_cases() {
+        let ds = Arc::new(synth::uniform_sphere(257, 4, 4));
+        for block in [1, 7, 256, 257, 1000] {
+            let idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer)).with_block(block);
+            let got = idx.top_k(&[1.0, 0.0, 0.0, 0.0], 5);
+            assert_eq!(got.items.len(), 5, "block={block}");
+            let idx_ref = BruteForce::new(ds.clone(), Arc::new(NativeScorer));
+            let want = idx_ref.top_k(&[1.0, 0.0, 0.0, 0.0], 5);
+            assert_eq!(got.ids(), want.ids(), "block={block}");
+        }
+    }
+}

@@ -1,0 +1,416 @@
+//! IVF (inverted-file) clustering MIPS index — the method the paper's
+//! experiments use (§4.1.1, after Douze et al. 2016, minus the compression
+//! codes which the paper also disables).
+//!
+//! Build: k-means on a training subsample → assign every row to its
+//! nearest centroid → store rows *contiguously per cluster* (cache- and
+//! PJRT-block-friendly). Query: score all centroids against θ, visit the
+//! `n_probe` best clusters, exact-score their member rows, keep the top-k.
+//!
+//! No theoretical guarantee (the paper notes this too) — accuracy is
+//! certified downstream by the TV-bound certificate (§4.2.1).
+
+use super::kmeans::{self, Kmeans};
+use super::{MipsIndex, TopKResult};
+use crate::config::IndexConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use crate::util::topk::TopK;
+use std::sync::Arc;
+
+/// Clustering-based MIPS index with contiguous per-cluster storage.
+pub struct IvfIndex {
+    /// rows regrouped cluster-contiguously, row-major `[n × d]`
+    grouped: Vec<f32>,
+    /// original dataset id of each grouped row
+    ids: Vec<u32>,
+    /// cluster boundaries into `grouped`/`ids`: cluster c occupies
+    /// `offsets[c]..offsets[c+1]`
+    offsets: Vec<usize>,
+    km: Kmeans,
+    backend: Arc<dyn ScoreBackend>,
+    pub n_probe: usize,
+    n: usize,
+    d: usize,
+    /// ids whose grouped copy is outdated (live version in pending)
+    stale: rustc_hash::FxHashSet<u32>,
+    /// LSM-style pending segment: updated rows awaiting compaction
+    pending_ids: Vec<u32>,
+    pending_rows: Vec<f32>,
+}
+
+impl IvfIndex {
+    /// Build from config: `n_clusters = 0` → `4√n`, `n_probe = 0` →
+    /// `max(8, n_clusters/16)`, `train_sample = 0` → all rows.
+    pub fn build(ds: Arc<Dataset>, cfg: &IndexConfig, backend: Arc<dyn ScoreBackend>) -> Result<Self> {
+        let n = ds.n;
+        let d = ds.d;
+        let n_clusters = if cfg.n_clusters == 0 {
+            ((4.0 * (n as f64).sqrt()).round() as usize).clamp(1, n)
+        } else {
+            cfg.n_clusters.clamp(1, n)
+        };
+        let n_probe = if cfg.n_probe == 0 {
+            (n_clusters / 16).max(8).min(n_clusters)
+        } else {
+            cfg.n_probe.min(n_clusters)
+        };
+
+        // ---- train on a subsample ------------------------------------------
+        let train_n = if cfg.train_sample == 0 { n } else { cfg.train_sample.min(n) };
+        let km = if train_n == n {
+            kmeans::train(&ds.data, n, d, n_clusters, cfg.kmeans_iters, cfg.seed)
+        } else {
+            let mut rng = Pcg64::new(cfg.seed ^ 0x7A17);
+            let mut sample = vec![0f32; train_n * d];
+            let excl = rustc_hash::FxHashSet::default();
+            let picks = rng.distinct_excluding(n as u64, train_n, &excl);
+            for (j, &p) in picks.iter().enumerate() {
+                sample[j * d..(j + 1) * d].copy_from_slice(ds.row(p as usize));
+            }
+            kmeans::train(&sample, train_n, d, n_clusters, cfg.kmeans_iters, cfg.seed)
+        };
+
+        // ---- assign all rows, group contiguously ----------------------------
+        let mut assign = vec![0u32; n];
+        let mut counts = vec![0usize; km.c];
+        for i in 0..n {
+            let (a, _) = km.assign(ds.row(i));
+            assign[i] = a as u32;
+            counts[a] += 1;
+        }
+        let mut offsets = vec![0usize; km.c + 1];
+        for c in 0..km.c {
+            offsets[c + 1] = offsets[c] + counts[c];
+        }
+        let mut cursor = offsets.clone();
+        let mut grouped = vec![0f32; n * d];
+        let mut ids = vec![0u32; n];
+        for i in 0..n {
+            let a = assign[i] as usize;
+            let pos = cursor[a];
+            cursor[a] += 1;
+            grouped[pos * d..(pos + 1) * d].copy_from_slice(ds.row(i));
+            ids[pos] = i as u32;
+        }
+
+        Ok(IvfIndex {
+            grouped,
+            ids,
+            offsets,
+            km,
+            backend,
+            n_probe,
+            n,
+            d,
+            stale: rustc_hash::FxHashSet::default(),
+            pending_ids: Vec::new(),
+            pending_rows: Vec::new(),
+        })
+    }
+
+    /// Number of clusters.
+    pub fn n_clusters(&self) -> usize {
+        self.km.c
+    }
+
+    /// Query with an explicit probe count (ablations sweep this).
+    pub fn top_k_probes(&self, q: &[f32], k: usize, n_probe: usize) -> TopKResult {
+        let n_probe = n_probe.clamp(1, self.km.c);
+        // rank clusters by centroid score — partial selection of the
+        // n_probe best (§Perf iteration 3: a full sort of all clusters
+        // cost ~C·log C per query; select_nth is O(C) and we only order
+        // the probed prefix)
+        let mut cscores = vec![0f32; self.km.c];
+        self.km.centroid_scores(q, &mut cscores);
+        let mut order: Vec<u32> = (0..self.km.c as u32).collect();
+        let cmp = |a: &u32, b: &u32| {
+            cscores[*b as usize]
+                .partial_cmp(&cscores[*a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        };
+        if n_probe < self.km.c {
+            order.select_nth_unstable_by(n_probe - 1, cmp);
+            order.truncate(n_probe);
+        }
+        order.sort_unstable_by(cmp);
+
+        let mut tk = TopK::new(k.min(self.n).max(1));
+        let mut buf: Vec<f32> = Vec::new();
+        let mut scanned = self.km.c; // centroid scoring work
+        for &c in order.iter().take(n_probe) {
+            let (s, e) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
+            if s == e {
+                continue;
+            }
+            let rows = &self.grouped[s * self.d..e * self.d];
+            buf.resize(e - s, 0.0);
+            self.backend.scores(rows, self.d, q, &mut buf);
+            if self.stale.is_empty() {
+                tk.push_ids(&self.ids[s..e], &buf);
+            } else {
+                for (j, &id) in self.ids[s..e].iter().enumerate() {
+                    if !self.stale.contains(&id) {
+                        tk.push(id, buf[j]);
+                    }
+                }
+            }
+            scanned += e - s;
+        }
+        // pending segment (sparse updates, §6): always scanned exactly
+        if !self.pending_ids.is_empty() {
+            buf.resize(self.pending_ids.len(), 0.0);
+            self.backend.scores(&self.pending_rows, self.d, q, &mut buf);
+            tk.push_ids(&self.pending_ids, &buf);
+            scanned += self.pending_ids.len();
+        }
+        TopKResult { items: tk.into_sorted(), scanned }
+    }
+
+    /// Fraction of the database scanned per query at the configured probe
+    /// count (expected; exact value depends on cluster fill).
+    pub fn expected_scan_fraction(&self) -> f64 {
+        self.n_probe as f64 / self.km.c as f64
+    }
+
+    // ---- sparse updates (§6: "if a MIPS system allows for sparse
+    // updates, our method will also allow for sparse updates") ----------
+    //
+    // LSM-style: an updated row is tombstoned in the grouped storage and
+    // appended to a small pending segment that every query scans exactly;
+    // `compact()` folds pending rows back into cluster-contiguous storage.
+    // Callers updating a *shared* index need external synchronization and
+    // must keep the Dataset row in sync (tail scoring reads the Dataset).
+
+    /// Replace row `id`'s vector. O(d) plus an O(pending) scan per query
+    /// until the next [`compact`](Self::compact).
+    pub fn update_row(&mut self, id: u32, new_vec: &[f32]) {
+        debug_assert_eq!(new_vec.len(), self.d);
+        self.stale.insert(id);
+        // drop any older pending version of the same id
+        if let Some(pos) = self.pending_ids.iter().position(|&p| p == id) {
+            self.pending_ids.swap_remove(pos);
+            let last = self.pending_rows.len() - self.d;
+            // swap_remove the row block
+            let (dst, src) = (pos * self.d, last);
+            if dst != src {
+                let (a, b) = self.pending_rows.split_at_mut(src);
+                a[dst..dst + self.d].copy_from_slice(&b[..self.d]);
+            }
+            self.pending_rows.truncate(last);
+        }
+        self.pending_ids.push(id);
+        self.pending_rows.extend_from_slice(new_vec);
+    }
+
+    /// Number of rows awaiting compaction.
+    pub fn pending_len(&self) -> usize {
+        self.pending_ids.len()
+    }
+
+    /// Fold pending updates back into cluster-contiguous storage
+    /// (reassigning each updated row to its nearest centroid).
+    pub fn compact(&mut self) {
+        if self.pending_ids.is_empty() {
+            return;
+        }
+        let d = self.d;
+        // rebuild per-cluster buckets from live grouped rows + pending
+        let mut buckets: Vec<Vec<(u32, Vec<f32>)>> = vec![Vec::new(); self.km.c];
+        for c in 0..self.km.c {
+            for pos in self.offsets[c]..self.offsets[c + 1] {
+                let id = self.ids[pos];
+                if !self.stale.contains(&id) {
+                    buckets[c].push((id, self.grouped[pos * d..(pos + 1) * d].to_vec()));
+                }
+            }
+        }
+        for (i, &id) in self.pending_ids.iter().enumerate() {
+            let row = self.pending_rows[i * d..(i + 1) * d].to_vec();
+            let (c, _) = self.km.assign(&row);
+            buckets[c].push((id, row));
+        }
+        let mut offsets = vec![0usize; self.km.c + 1];
+        let mut grouped = Vec::with_capacity(self.n * d);
+        let mut ids = Vec::with_capacity(self.n);
+        for (c, bucket) in buckets.into_iter().enumerate() {
+            for (id, row) in bucket {
+                ids.push(id);
+                grouped.extend_from_slice(&row);
+            }
+            offsets[c + 1] = ids.len();
+        }
+        self.grouped = grouped;
+        self.ids = ids;
+        self.offsets = offsets;
+        self.pending_ids.clear();
+        self.pending_rows.clear();
+        self.stale.clear();
+    }
+}
+
+impl MipsIndex for IvfIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+        self.top_k_probes(q, k, self.n_probe)
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn name(&self) -> &'static str {
+        "ivf"
+    }
+    fn describe(&self) -> String {
+        format!(
+            "ivf over n={} d={}: {} clusters, {} probes (~{:.1}% scan)",
+            self.n,
+            self.d,
+            self.km.c,
+            self.n_probe,
+            100.0 * self.expected_scan_fraction()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::data::synth;
+    use crate::mips::{brute::BruteForce, recall_at_k};
+    use crate::scorer::NativeScorer;
+
+    fn test_cfg() -> IndexConfig {
+        let mut cfg = Config::default().index;
+        cfg.n_clusters = 40;
+        cfg.n_probe = 8;
+        cfg.kmeans_iters = 6;
+        cfg.train_sample = 2000;
+        cfg
+    }
+
+    #[test]
+    fn high_recall_on_clustered_data() {
+        let ds = Arc::new(synth::imagenet_like(5000, 16, 40, 0.25, 1));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let idx = IvfIndex::build(ds.clone(), &test_cfg(), backend.clone()).unwrap();
+        let brute = BruteForce::new(ds.clone(), backend);
+        let mut rng = Pcg64::new(2);
+        let mut recalls = 0.0;
+        let trials = 20;
+        for _ in 0..trials {
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            let got = idx.top_k(&q, 50);
+            let want = brute.top_k(&q, 50);
+            recalls += recall_at_k(&got, &want);
+            assert!(got.scanned < ds.n, "IVF must scan a subset");
+        }
+        let mean_recall = recalls / trials as f64;
+        assert!(mean_recall > 0.85, "recall@50 = {mean_recall}");
+    }
+
+    #[test]
+    fn grouped_storage_covers_everything() {
+        let ds = Arc::new(synth::imagenet_like(1000, 8, 10, 0.3, 3));
+        let idx = IvfIndex::build(ds, &test_cfg(), Arc::new(NativeScorer)).unwrap();
+        // every id appears exactly once
+        let mut seen = vec![false; idx.n()];
+        for &id in &idx.ids {
+            assert!(!seen[id as usize], "duplicate id {id}");
+            seen[id as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(*idx.offsets.last().unwrap(), idx.n());
+    }
+
+    #[test]
+    fn more_probes_more_recall() {
+        let ds = Arc::new(synth::imagenet_like(4000, 16, 40, 0.3, 4));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let idx = IvfIndex::build(ds.clone(), &test_cfg(), backend.clone()).unwrap();
+        let brute = BruteForce::new(ds.clone(), backend);
+        let mut rng = Pcg64::new(5);
+        let mut r_few = 0.0;
+        let mut r_many = 0.0;
+        for _ in 0..10 {
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            let want = brute.top_k(&q, 40);
+            r_few += recall_at_k(&idx.top_k_probes(&q, 40, 2), &want);
+            r_many += recall_at_k(&idx.top_k_probes(&q, 40, 40), &want);
+        }
+        assert!(r_many >= r_few, "recall must not decrease with probes");
+        assert!((r_many / 10.0) > 0.99, "all-probe recall = {}", r_many / 10.0);
+    }
+
+    #[test]
+    fn auto_sizing() {
+        let ds = Arc::new(synth::imagenet_like(2500, 8, 20, 0.3, 6));
+        let mut cfg = test_cfg();
+        cfg.n_clusters = 0;
+        cfg.n_probe = 0;
+        let idx = IvfIndex::build(ds, &cfg, Arc::new(NativeScorer)).unwrap();
+        assert_eq!(idx.n_clusters(), 200); // 4·√2500
+        assert_eq!(idx.n_probe, 12); // 200/16 = 12 (≥ 8)
+        assert!(idx.describe().contains("clusters"));
+    }
+
+    #[test]
+    fn sparse_updates_visible_immediately_and_after_compact() {
+        let ds = Arc::new(synth::imagenet_like(2000, 8, 10, 0.3, 9));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut idx = IvfIndex::build(ds.clone(), &test_cfg(), backend).unwrap();
+        // craft a query and force one row to be its perfect match
+        let q: Vec<f32> = {
+            let mut v = ds.row(0).to_vec();
+            crate::linalg::normalize(&mut v);
+            v
+        };
+        let target = 1234u32;
+        let boosted: Vec<f32> = q.iter().map(|x| x * 2.0).collect(); // score 2.0 ≫ any unit dot
+        idx.update_row(target, &boosted);
+        assert_eq!(idx.pending_len(), 1);
+        // visible pre-compaction
+        let got = idx.top_k(&q, 5);
+        assert_eq!(got.items[0].id, target);
+        assert!((got.items[0].score - 2.0).abs() < 1e-5);
+        // update the same row again: old pending version replaced
+        let boosted3: Vec<f32> = q.iter().map(|x| x * 3.0).collect();
+        idx.update_row(target, &boosted3);
+        assert_eq!(idx.pending_len(), 1);
+        // compact and re-query: still the top hit, now from grouped storage
+        idx.compact();
+        assert_eq!(idx.pending_len(), 0);
+        let got = idx.top_k(&q, 5);
+        assert_eq!(got.items[0].id, target);
+        assert!((got.items[0].score - 3.0).abs() < 1e-5);
+        // no duplicate of target anywhere
+        let dup = got.items.iter().filter(|s| s.id == target).count();
+        assert_eq!(dup, 1);
+    }
+
+    #[test]
+    fn compact_preserves_coverage() {
+        let ds = Arc::new(synth::imagenet_like(1000, 8, 10, 0.3, 11));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut idx = IvfIndex::build(ds.clone(), &test_cfg(), backend).unwrap();
+        for id in [5u32, 99, 500] {
+            let v = ds.row(id as usize).to_vec();
+            idx.update_row(id, &v); // identity update
+        }
+        idx.compact();
+        let mut seen = vec![false; idx.n()];
+        for &id in &idx.ids {
+            assert!(!seen[id as usize], "duplicate id {id}");
+            seen[id as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "compact must preserve all ids");
+        assert_eq!(*idx.offsets.last().unwrap(), idx.n());
+    }
+
+    use crate::util::rng::Pcg64;
+}

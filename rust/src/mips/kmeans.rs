@@ -1,0 +1,223 @@
+//! k-means clustering (k-means++ seeding + Lloyd iterations) — the
+//! training stage of the IVF index, mirroring the clustering MIPS method
+//! of Douze et al. (2016) / Auvolat et al. (2015) the paper uses.
+//!
+//! Trains on a subsample (FAISS-style) to keep index build time sublinear
+//! in practice; assignment of the full database happens in the IVF build.
+
+use crate::linalg;
+use crate::util::rng::Pcg64;
+
+/// Trained centroids, row-major `[c × d]`.
+#[derive(Clone, Debug)]
+pub struct Kmeans {
+    pub centroids: Vec<f32>,
+    pub c: usize,
+    pub d: usize,
+    /// mean squared distance at the last Lloyd iteration (convergence
+    /// diagnostics)
+    pub inertia: f64,
+}
+
+impl Kmeans {
+    /// Assign one vector to its nearest centroid (L2 == max dot for
+    /// unit-norm data, but we use true L2 so non-normalized data also
+    /// clusters correctly). Returns (cluster, squared distance).
+    pub fn assign(&self, v: &[f32]) -> (usize, f64) {
+        let mut best = 0usize;
+        let mut best_d2 = f64::INFINITY;
+        for c in 0..self.c {
+            let cent = &self.centroids[c * self.d..(c + 1) * self.d];
+            let d2 = sq_dist(v, cent);
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = c;
+            }
+        }
+        (best, best_d2)
+    }
+
+    /// Scores of a query against every centroid (inner products), for IVF
+    /// probe ordering.
+    pub fn centroid_scores(&self, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.c);
+        linalg::matvec_block(&self.centroids, self.d, q, out);
+    }
+}
+
+#[inline]
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    // ||a-b||² = ||a||² + ||b||² − 2a·b ; direct loop is fine here (train
+    // path only)
+    let mut s = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        let diff = (x - y) as f64;
+        s += diff * diff;
+    }
+    s
+}
+
+/// Train k-means with k-means++ seeding and `iters` Lloyd steps on
+/// row-major `data [n × d]`.
+pub fn train(data: &[f32], n: usize, d: usize, c: usize, iters: usize, seed: u64) -> Kmeans {
+    assert!(c >= 1 && n >= 1);
+    let c = c.min(n);
+    let mut rng = Pcg64::new(seed);
+
+    // ---- k-means++ seeding -------------------------------------------------
+    let mut centroids = vec![0f32; c * d];
+    let first = rng.next_below(n as u64) as usize;
+    centroids[..d].copy_from_slice(&data[first * d..(first + 1) * d]);
+    // squared distance to nearest chosen centroid
+    let mut d2 = vec![0f64; n];
+    for i in 0..n {
+        d2[i] = sq_dist(&data[i * d..(i + 1) * d], &centroids[..d]);
+    }
+    for j in 1..c {
+        // sample proportional to d2 (k-means++)
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.next_below(n as u64) as usize
+        } else {
+            let mut u = rng.next_f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        let (dst, src) = (j * d, next * d);
+        centroids.copy_within_wrapping(src, dst, d, data);
+        // update d2
+        for i in 0..n {
+            let nd = sq_dist(&data[i * d..(i + 1) * d], &centroids[dst..dst + d]);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+
+    // ---- Lloyd iterations ---------------------------------------------------
+    let mut assign = vec![0u32; n];
+    let mut inertia = f64::INFINITY;
+    let km_view = |cent: &Vec<f32>| Kmeans { centroids: cent.clone(), c, d, inertia: 0.0 };
+    for _it in 0..iters {
+        // assignment step
+        let km = km_view(&centroids);
+        let mut total = 0f64;
+        for i in 0..n {
+            let (a, dist) = km.assign(&data[i * d..(i + 1) * d]);
+            assign[i] = a as u32;
+            total += dist;
+        }
+        inertia = total / n as f64;
+        // update step
+        let mut counts = vec![0u64; c];
+        let mut sums = vec![0f64; c * d];
+        for i in 0..n {
+            let a = assign[i] as usize;
+            counts[a] += 1;
+            let row = &data[i * d..(i + 1) * d];
+            for j in 0..d {
+                sums[a * d + j] += row[j] as f64;
+            }
+        }
+        for a in 0..c {
+            if counts[a] == 0 {
+                // re-seed empty cluster at a random point (standard fix)
+                let p = rng.next_below(n as u64) as usize;
+                centroids[a * d..(a + 1) * d].copy_from_slice(&data[p * d..(p + 1) * d]);
+            } else {
+                for j in 0..d {
+                    centroids[a * d + j] = (sums[a * d + j] / counts[a] as f64) as f32;
+                }
+            }
+        }
+    }
+    Kmeans { centroids, c, d, inertia }
+}
+
+/// Helper: copy a row from `data` into `self[dst..dst+d]` (split-borrow
+/// safe).
+trait CopyRow {
+    fn copy_within_wrapping(&mut self, src: usize, dst: usize, d: usize, data: &[f32]);
+}
+impl CopyRow for Vec<f32> {
+    fn copy_within_wrapping(&mut self, src: usize, dst: usize, d: usize, data: &[f32]) {
+        self[dst..dst + d].copy_from_slice(&data[src..src + d]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn recovers_separated_clusters() {
+        // 4 well-separated clusters in 2D
+        let mut data = Vec::new();
+        let centers = [(10.0, 0.0), (-10.0, 0.0), (0.0, 10.0), (0.0, -10.0)];
+        let mut rng = Pcg64::new(1);
+        for i in 0..400 {
+            let (cx, cy) = centers[i % 4];
+            data.push(cx + rng.gaussian() as f32 * 0.2);
+            data.push(cy + rng.gaussian() as f32 * 0.2);
+        }
+        let km = train(&data, 400, 2, 4, 10, 2);
+        // every centroid should be within 1.0 of a true center
+        for c in 0..4 {
+            let cent = &km.centroids[c * 2..c * 2 + 2];
+            let ok = centers
+                .iter()
+                .any(|&(x, y)| ((cent[0] - x).powi(2) + (cent[1] - y).powi(2)) < 1.0);
+            assert!(ok, "centroid {c} = {cent:?}");
+        }
+        assert!(km.inertia < 0.2, "inertia={}", km.inertia);
+    }
+
+    #[test]
+    fn assign_returns_nearest() {
+        let km = Kmeans { centroids: vec![0.0, 0.0, 10.0, 10.0], c: 2, d: 2, inertia: 0.0 };
+        assert_eq!(km.assign(&[1.0, 1.0]).0, 0);
+        assert_eq!(km.assign(&[9.0, 9.0]).0, 1);
+    }
+
+    #[test]
+    fn centroid_scores_are_dots() {
+        let km = Kmeans { centroids: vec![1.0, 0.0, 0.0, 2.0], c: 2, d: 2, inertia: 0.0 };
+        let mut out = vec![0f32; 2];
+        km.centroid_scores(&[3.0, 4.0], &mut out);
+        assert_eq!(out, vec![3.0, 8.0]);
+    }
+
+    #[test]
+    fn handles_c_greater_than_distinct_points() {
+        let data = vec![1.0f32, 1.0, 1.0, 1.0, 1.0, 1.0]; // 3 identical 2-d points
+        let km = train(&data, 3, 2, 5, 3, 3);
+        assert_eq!(km.c, 3, "c is clamped to n");
+    }
+
+    #[test]
+    fn clusters_spherical_data_reasonably() {
+        let ds = synth::imagenet_like(3000, 16, 30, 0.25, 5);
+        let km = train(&ds.data, ds.n, ds.d, 30, 8, 6);
+        // inertia should be far below 2.0 (the expected sq-dist of random
+        // unit vectors to an uninformative centroid)
+        assert!(km.inertia < 0.7, "inertia={}", km.inertia);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = synth::imagenet_like(500, 8, 10, 0.3, 7);
+        let a = train(&ds.data, ds.n, ds.d, 10, 5, 9);
+        let b = train(&ds.data, ds.n, ds.d, 10, 5, 9);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    use crate::util::rng::Pcg64;
+}

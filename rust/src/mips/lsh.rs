@@ -1,0 +1,288 @@
+//! Signed-random-projection LSH for MIPS (paper §2.3).
+//!
+//! Charikar (2002) SRP hashing solves *cosine* similarity search; the
+//! Neyshabur–Srebro (2014) reduction turns MIPS into cosine search by
+//! augmenting every database vector with one extra coordinate
+//! `sqrt(M² − ‖v‖²)` (M = max norm) so all database vectors share norm M,
+//! while queries get a 0 in that coordinate: then
+//! `cos(q', v') ∝ q·v` and SRP applies.
+//!
+//! Structure: `tables` independent hash tables, each hashing to `bits`
+//! signed projections → a bucket id. Queries gather the union of their
+//! buckets across tables (plus optional 1-bit multiprobe to boost recall),
+//! exact-score the candidates, and keep the top-k.
+
+use super::{MipsIndex, TopKResult};
+use crate::config::IndexConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::linalg;
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use crate::util::topk::TopK;
+use std::sync::Arc;
+
+/// One SRP hash table.
+struct Table {
+    /// projection matrix, row-major `[bits × d_aug]`
+    planes: Vec<f32>,
+    /// bucket → member ids (CSR layout: `bucket_off[b]..bucket_off[b+1]`
+    /// into `members`)
+    bucket_off: Vec<u32>,
+    members: Vec<u32>,
+}
+
+/// Multi-table SRP-LSH index with MIPS→cosine augmentation.
+pub struct SrpLsh {
+    ds: Arc<Dataset>,
+    backend: Arc<dyn ScoreBackend>,
+    tables: Vec<Table>,
+    bits: usize,
+    /// augmented dimension = d + 1
+    d_aug: usize,
+    /// per-row augmentation coordinate `sqrt(M² − ‖v‖²)`
+    aug: Vec<f32>,
+    /// whether to probe all 1-bit-flip neighbors of the query bucket
+    pub multiprobe: bool,
+}
+
+impl SrpLsh {
+    pub fn build(ds: Arc<Dataset>, cfg: &IndexConfig, backend: Arc<dyn ScoreBackend>) -> Result<Self> {
+        let n = ds.n;
+        let d = ds.d;
+        let bits = cfg.bits.clamp(1, 24);
+        let ntables = cfg.tables.max(1);
+        let d_aug = d + 1;
+        let mut rng = Pcg64::new(cfg.seed ^ 0x15B4);
+
+        // ---- Neyshabur–Srebro augmentation ---------------------------------
+        let mut max_norm2 = 0f64;
+        for i in 0..n {
+            let r = ds.row(i);
+            max_norm2 = max_norm2.max(linalg::dot(r, r) as f64);
+        }
+        let aug: Vec<f32> = (0..n)
+            .map(|i| {
+                let r = ds.row(i);
+                ((max_norm2 - linalg::dot(r, r) as f64).max(0.0)).sqrt() as f32
+            })
+            .collect();
+
+        // ---- build tables ----------------------------------------------------
+        let nbuckets = 1usize << bits;
+        let mut tables = Vec::with_capacity(ntables);
+        for _t in 0..ntables {
+            let planes: Vec<f32> =
+                (0..bits * d_aug).map(|_| rng.gaussian() as f32).collect();
+            // hash every row
+            let mut codes = vec![0u32; n];
+            for i in 0..n {
+                codes[i] = hash_row(&planes, bits, d_aug, ds.row(i), aug[i]);
+            }
+            // CSR buckets
+            let mut counts = vec![0u32; nbuckets + 1];
+            for &c in &codes {
+                counts[c as usize + 1] += 1;
+            }
+            for b in 0..nbuckets {
+                counts[b + 1] += counts[b];
+            }
+            let bucket_off = counts.clone();
+            let mut cursor = counts;
+            let mut members = vec![0u32; n];
+            for (i, &c) in codes.iter().enumerate() {
+                members[cursor[c as usize] as usize] = i as u32;
+                cursor[c as usize] += 1;
+            }
+            tables.push(Table { planes, bucket_off, members });
+        }
+
+        Ok(SrpLsh { ds, backend, tables, bits, d_aug, aug, multiprobe: true })
+    }
+
+    /// Collect candidate ids for a query (deduplicated via a stamp array).
+    fn candidates(&self, q: &[f32]) -> Vec<u32> {
+        let mut seen = vec![false; self.ds.n];
+        let mut cands = Vec::new();
+        for t in &self.tables {
+            let code = hash_row(&t.planes, self.bits, self.d_aug, q, 0.0);
+            let mut visit = |c: u32| {
+                let (s, e) = (t.bucket_off[c as usize], t.bucket_off[c as usize + 1]);
+                for &id in &t.members[s as usize..e as usize] {
+                    if !seen[id as usize] {
+                        seen[id as usize] = true;
+                        cands.push(id);
+                    }
+                }
+            };
+            visit(code);
+            if self.multiprobe {
+                for b in 0..self.bits {
+                    visit(code ^ (1u32 << b));
+                }
+            }
+        }
+        cands
+    }
+}
+
+/// SRP hash of an (augmented) vector: bit b = sign(planes_b · [v; aug]).
+fn hash_row(planes: &[f32], bits: usize, d_aug: usize, v: &[f32], aug: f32) -> u32 {
+    let d = d_aug - 1;
+    let mut code = 0u32;
+    for b in 0..bits {
+        let p = &planes[b * d_aug..(b + 1) * d_aug];
+        let s = linalg::dot(&p[..d], v) + p[d] * aug;
+        if s >= 0.0 {
+            code |= 1 << b;
+        }
+    }
+    code
+}
+
+impl MipsIndex for SrpLsh {
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+        let cands = self.candidates(q);
+        let d = self.ds.d;
+        let mut tk = TopK::new(k.min(self.ds.n).max(1));
+        // gather candidate rows into blocks and score
+        const BLOCK: usize = 1024;
+        let mut rows = vec![0f32; BLOCK * d];
+        let mut out = vec![0f32; BLOCK];
+        let mut start = 0;
+        while start < cands.len() {
+            let end = (start + BLOCK).min(cands.len());
+            let ids = &cands[start..end];
+            let rows_buf = &mut rows[..(end - start) * d];
+            self.ds.gather(ids, rows_buf);
+            let out_buf = &mut out[..end - start];
+            self.backend.scores(rows_buf, d, q, out_buf);
+            tk.push_ids(ids, out_buf);
+            start = end;
+        }
+        TopKResult { items: tk.into_sorted(), scanned: cands.len() }
+    }
+
+    fn n(&self) -> usize {
+        self.ds.n
+    }
+    fn d(&self) -> usize {
+        self.ds.d
+    }
+    fn name(&self) -> &'static str {
+        "lsh"
+    }
+    fn describe(&self) -> String {
+        format!(
+            "srp-lsh over n={} d={}: {} tables × {} bits, multiprobe={}",
+            self.ds.n,
+            self.ds.d,
+            self.tables.len(),
+            self.bits,
+            self.multiprobe
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::data::synth;
+    use crate::mips::{brute::BruteForce, recall_at_k};
+    use crate::scorer::NativeScorer;
+
+    fn cfg(bits: usize, tables: usize) -> IndexConfig {
+        let mut c = Config::default().index;
+        c.bits = bits;
+        c.tables = tables;
+        c
+    }
+
+    #[test]
+    fn srp_collision_probability_monotone_in_angle() {
+        // SRP theory: Pr[h(x)=h(y)] = 1 − angle/π per bit.
+        let mut rng = Pcg64::new(1);
+        let d_aug = 9;
+        let trials = 3000;
+        let mut close_coll = 0;
+        let mut far_coll = 0;
+        for _ in 0..trials {
+            let planes: Vec<f32> = (0..d_aug).map(|_| rng.gaussian() as f32).collect();
+            let mut a = vec![0f32; 8];
+            for x in a.iter_mut() {
+                *x = rng.gaussian() as f32;
+            }
+            // close: small perturbation; far: independent
+            let mut b_close = a.clone();
+            for x in b_close.iter_mut() {
+                *x += 0.1 * rng.gaussian() as f32;
+            }
+            let b_far: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+            let h = |v: &[f32]| hash_row(&planes, 1, d_aug, v, 0.0);
+            if h(&a) == h(&b_close) {
+                close_coll += 1;
+            }
+            if h(&a) == h(&b_far) {
+                far_coll += 1;
+            }
+        }
+        assert!(
+            close_coll > far_coll + trials / 10,
+            "close={close_coll} far={far_coll}"
+        );
+    }
+
+    #[test]
+    fn decent_recall_on_clustered_data() {
+        let ds = Arc::new(synth::imagenet_like(4000, 16, 40, 0.25, 2));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let idx = SrpLsh::build(ds.clone(), &cfg(7, 12), backend.clone()).unwrap();
+        let brute = BruteForce::new(ds.clone(), backend);
+        let mut rng = Pcg64::new(3);
+        let mut recall = 0.0;
+        let mut scan_frac = 0.0;
+        let trials = 15;
+        for _ in 0..trials {
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            let got = idx.top_k(&q, 20);
+            let want = brute.top_k(&q, 20);
+            recall += recall_at_k(&got, &want);
+            scan_frac += got.scanned as f64 / ds.n as f64;
+        }
+        recall /= trials as f64;
+        scan_frac /= trials as f64;
+        assert!(recall > 0.6, "recall@20 = {recall}");
+        assert!(scan_frac < 0.9, "must prune something, scanned {scan_frac}");
+    }
+
+    #[test]
+    fn augmentation_norms_equalized() {
+        let ds = Arc::new(synth::wordemb_like(500, 8, 10, 0.4, 1.1, 4));
+        let idx = SrpLsh::build(ds.clone(), &cfg(6, 4), Arc::new(NativeScorer)).unwrap();
+        // augmented norms ‖[v; aug]‖ should all equal max norm
+        let mut norms: Vec<f64> = (0..ds.n)
+            .map(|i| {
+                let r = ds.row(i);
+                (linalg::dot(r, r) as f64 + (idx.aug[i] as f64).powi(2)).sqrt()
+            })
+            .collect();
+        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((norms[0] - norms[norms.len() - 1]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn multiprobe_increases_candidates() {
+        let ds = Arc::new(synth::imagenet_like(2000, 8, 20, 0.3, 5));
+        let mut idx = SrpLsh::build(ds.clone(), &cfg(8, 4), Arc::new(NativeScorer)).unwrap();
+        let mut rng = Pcg64::new(6);
+        let q = synth::random_theta(&ds, 0.05, &mut rng);
+        idx.multiprobe = false;
+        let without = idx.top_k(&q, 10).scanned;
+        idx.multiprobe = true;
+        let with = idx.top_k(&q, 10).scanned;
+        assert!(with >= without);
+    }
+
+    use crate::util::rng::Pcg64;
+}

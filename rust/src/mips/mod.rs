@@ -1,0 +1,176 @@
+//! Maximum Inner Product Search (paper §2.3, §3.4).
+//!
+//! The amortization engine: preprocess the fixed feature database once,
+//! then answer `top_k(θ)` queries in sublinear time. Implementations:
+//!
+//! * [`brute::BruteForce`] — exact `O(n·d)` scan (the paper's baseline and
+//!   the correctness oracle),
+//! * [`ivf::IvfIndex`] — k-means clustering index with `n_probe` probing
+//!   (Douze et al. 2016; what the paper's experiments use),
+//! * [`lsh::SrpLsh`] — signed-random-projection LSH (Charikar 2002) with
+//!   the Neyshabur–Srebro MIPS→cosine reduction,
+//! * [`tiered::TieredLsh`] — the ladder of LSH instances of Theorem 3.6
+//!   returning *approximate top-k* sets with a bounded gap `c`
+//!   (Definition 3.1).
+
+pub mod brute;
+pub mod ivf;
+pub mod kmeans;
+pub mod lsh;
+pub mod tiered;
+
+use crate::config::{IndexConfig, IndexKind};
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::scorer::ScoreBackend;
+use crate::util::topk::Scored;
+use std::sync::Arc;
+
+/// Result of a top-k query.
+#[derive(Clone, Debug, Default)]
+pub struct TopKResult {
+    /// retained elements, sorted by descending score
+    pub items: Vec<Scored>,
+    /// database rows actually scored (work metric; brute force = n)
+    pub scanned: usize,
+}
+
+impl TopKResult {
+    /// `min_{i∈S} y_i` — the cutoff anchor of Algorithm 1.
+    pub fn s_min(&self) -> f64 {
+        self.items.last().map(|s| s.score as f64).unwrap_or(f64::NEG_INFINITY)
+    }
+    /// `max_{i∈S} y_i`.
+    pub fn s_max(&self) -> f64 {
+        self.items.first().map(|s| s.score as f64).unwrap_or(f64::NEG_INFINITY)
+    }
+    pub fn ids(&self) -> Vec<u32> {
+        self.items.iter().map(|s| s.id).collect()
+    }
+}
+
+/// A preprocessed MIPS data structure over a fixed database.
+pub trait MipsIndex: Send + Sync {
+    /// Approximate (or exact) top-k by inner product with `q`.
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult;
+
+    /// Database size.
+    fn n(&self) -> usize;
+    /// Feature dimension.
+    fn d(&self) -> usize;
+
+    /// Approximation gap bound `c` (Definition 3.1) if this index provides
+    /// one; `None` for heuristic indexes (IVF) and `Some(0)` for exact.
+    fn gap_bound(&self) -> Option<f64> {
+        None
+    }
+
+    /// Index family name for metrics/logs.
+    fn name(&self) -> &'static str;
+
+    /// One-line build/config summary.
+    fn describe(&self) -> String {
+        format!("{} over n={} d={}", self.name(), self.n(), self.d())
+    }
+}
+
+/// Build the configured index over a dataset.
+pub fn build_index(
+    ds: &Arc<Dataset>,
+    cfg: &IndexConfig,
+    backend: Arc<dyn ScoreBackend>,
+) -> Result<Arc<dyn MipsIndex>> {
+    Ok(match cfg.kind {
+        IndexKind::Brute => Arc::new(brute::BruteForce::new(ds.clone(), backend)),
+        IndexKind::Ivf => Arc::new(ivf::IvfIndex::build(ds.clone(), cfg, backend)?),
+        IndexKind::Lsh => Arc::new(lsh::SrpLsh::build(ds.clone(), cfg, backend)?),
+        IndexKind::Tiered => Arc::new(tiered::TieredLsh::build(ds.clone(), cfg, backend)?),
+    })
+}
+
+/// Recall@k of `got` against the exact top-k `want` (id overlap / k) —
+/// the standard index-quality metric used in tests and ablations.
+pub fn recall_at_k(got: &TopKResult, want: &TopKResult) -> f64 {
+    if want.items.is_empty() {
+        return 1.0;
+    }
+    let want_ids: rustc_hash::FxHashSet<u32> = want.items.iter().map(|s| s.id).collect();
+    let hit = got.items.iter().filter(|s| want_ids.contains(&s.id)).count();
+    hit as f64 / want.items.len() as f64
+}
+
+/// Empirical gap of an approximate top-k set (Definition 3.1):
+/// `max_{i∉S} y_i − min_{i∈S} y_i`, computed with an exact scan.
+/// Negative values mean the set is exactly correct.
+pub fn empirical_gap(
+    ds: &Dataset,
+    backend: &dyn ScoreBackend,
+    q: &[f32],
+    got: &TopKResult,
+) -> f64 {
+    let ids: rustc_hash::FxHashSet<u32> = got.items.iter().map(|s| s.id).collect();
+    let mut out = vec![0f32; ds.n];
+    backend.scores(&ds.data, ds.d, q, &mut out);
+    let max_outside = out
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !ids.contains(&(*i as u32)))
+        .map(|(_, &s)| s as f64)
+        .fold(f64::NEG_INFINITY, f64::max);
+    max_outside - got.s_min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::data::synth;
+    use crate::scorer::NativeScorer;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn build_index_dispatches_all_kinds() {
+        let ds = Arc::new(synth::imagenet_like(2000, 16, 20, 0.3, 1));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut cfg = Config::default().index;
+        cfg.train_sample = 1000;
+        cfg.n_clusters = 32;
+        cfg.tables = 8;
+        cfg.bits = 6;
+        cfg.rungs = 4;
+        for kind in [IndexKind::Brute, IndexKind::Ivf, IndexKind::Lsh, IndexKind::Tiered] {
+            cfg.kind = kind;
+            let idx = build_index(&ds, &cfg, backend.clone()).unwrap();
+            assert_eq!(idx.n(), 2000);
+            assert_eq!(idx.d(), 16);
+            assert_eq!(idx.name(), kind.name());
+            assert!(!idx.describe().is_empty());
+        }
+    }
+
+    #[test]
+    fn recall_and_gap_against_self_are_perfect() {
+        let ds = Arc::new(synth::imagenet_like(1000, 8, 10, 0.3, 2));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let idx = brute::BruteForce::new(ds.clone(), backend.clone());
+        let mut rng = Pcg64::new(3);
+        let q = synth::random_theta(&ds, 0.05, &mut rng);
+        let got = idx.top_k(&q, 20);
+        assert_eq!(recall_at_k(&got, &got), 1.0);
+        let gap = empirical_gap(&ds, backend.as_ref(), &q, &got);
+        assert!(gap <= 0.0, "exact top-k must have non-positive gap, got {gap}");
+    }
+
+    #[test]
+    fn topk_result_accessors() {
+        let r = TopKResult {
+            items: vec![Scored { id: 4, score: 2.0 }, Scored { id: 9, score: 1.0 }],
+            scanned: 10,
+        };
+        assert_eq!(r.s_max(), 2.0);
+        assert_eq!(r.s_min(), 1.0);
+        assert_eq!(r.ids(), vec![4, 9]);
+        let empty = TopKResult::default();
+        assert_eq!(empty.s_min(), f64::NEG_INFINITY);
+    }
+}

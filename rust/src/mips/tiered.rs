@@ -1,0 +1,311 @@
+//! Tiered LSH — the construction behind Theorem 3.6 / Definition 3.1.
+//!
+//! The paper builds a *ladder* of LSH instances tuned to similarity
+//! thresholds spaced `c/2` apart; at query time it walks the ladder from
+//! the most selective instance down, gathering candidates until `k` are
+//! found. The returned set is an **approximate top-k with gap `c`**:
+//! `max_{i∉S} y_i − min_{i∈S} y_i < c` with high probability.
+//!
+//! With SRP hashes, selectivity is tuned by the number of bits: a rung
+//! with `b` bits collides with probability `(1 − angle/π)^b`, so higher
+//! rungs only retain near-duplicates of the query direction. We build
+//! `rungs` instances with decreasing bit counts and walk them top-down.
+//!
+//! Because SRP rungs are probabilistic rather than threshold-sharp, the
+//! implementation *measures* its gap at build time on held-out probe
+//! queries (exact scan) and reports that as `gap_bound` — an honest,
+//! data-dependent `c` that the samplers then feed into the
+//! `B ← B − c` adjustment (§3.4).
+
+use super::{MipsIndex, TopKResult};
+use crate::config::IndexConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::linalg;
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use crate::util::topk::TopK;
+use std::sync::Arc;
+
+struct Rung {
+    bits: usize,
+    /// row-major `[bits × d]` projection planes
+    planes: Vec<f32>,
+    /// CSR buckets
+    bucket_off: Vec<u32>,
+    members: Vec<u32>,
+}
+
+/// Ladder of LSH instances (most selective first).
+pub struct TieredLsh {
+    ds: Arc<Dataset>,
+    backend: Arc<dyn ScoreBackend>,
+    rungs: Vec<Rung>,
+    /// measured approximate-top-k gap (Definition 3.1), in *score units of
+    /// a unit-norm query*; scale by ‖θ‖ for a given query
+    gap_per_unit_query: f64,
+}
+
+impl TieredLsh {
+    pub fn build(ds: Arc<Dataset>, cfg: &IndexConfig, backend: Arc<dyn ScoreBackend>) -> Result<Self> {
+        let n = ds.n;
+        let d = ds.d;
+        let n_rungs = cfg.rungs.clamp(2, 24);
+        // bit counts from fine to coarse, e.g. 16,14,12,…
+        let max_bits = cfg.bits.clamp(4, 20).max(n_rungs + 3);
+        let mut rng = Pcg64::new(cfg.seed ^ 0x71E7);
+        let mut rungs = Vec::with_capacity(n_rungs);
+        for r in 0..n_rungs {
+            let bits = (max_bits - r).max(3);
+            let planes: Vec<f32> = (0..bits * d).map(|_| rng.gaussian() as f32).collect();
+            let nbuckets = 1usize << bits;
+            let mut codes = vec![0u32; n];
+            for i in 0..n {
+                codes[i] = srp_hash(&planes, bits, ds.row(i));
+            }
+            let mut counts = vec![0u32; nbuckets + 1];
+            for &c in &codes {
+                counts[c as usize + 1] += 1;
+            }
+            for b in 0..nbuckets {
+                counts[b + 1] += counts[b];
+            }
+            let bucket_off = counts.clone();
+            let mut cursor = counts;
+            let mut members = vec![0u32; n];
+            for (i, &c) in codes.iter().enumerate() {
+                members[cursor[c as usize] as usize] = i as u32;
+                cursor[c as usize] += 1;
+            }
+            rungs.push(Rung { bits, planes, bucket_off, members });
+        }
+
+        let mut idx = TieredLsh { ds, backend, rungs, gap_per_unit_query: 0.0 };
+        idx.gap_per_unit_query = idx.measure_gap(8, cfg.seed ^ 0xC0FF);
+        Ok(idx)
+    }
+
+    /// Measure the empirical Definition-3.1 gap on `probes` random
+    /// database-drawn queries with an exact scan; returns the max observed
+    /// gap per unit query norm (≥ 0).
+    fn measure_gap(&self, probes: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::new(seed);
+        let k = (self.ds.n as f64).sqrt().round() as usize;
+        let k = k.clamp(1, self.ds.n);
+        let mut all = vec![0f32; self.ds.n];
+        let mut worst = 0f64;
+        for _ in 0..probes {
+            let q = self.ds.row(rng.next_below(self.ds.n as u64) as usize).to_vec();
+            let got = self.top_k(&q, k);
+            self.backend.scores(&self.ds.data, self.ds.d, &q, &mut all);
+            let ids: rustc_hash::FxHashSet<u32> = got.items.iter().map(|s| s.id).collect();
+            let max_out = all
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !ids.contains(&(*i as u32)))
+                .map(|(_, &s)| s as f64)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let qn = linalg::norm(&q) as f64;
+            if qn > 0.0 {
+                worst = worst.max((max_out - got.s_min()) / qn);
+            }
+        }
+        worst.max(0.0)
+    }
+
+    /// The measured per-unit-norm gap (scale by ‖θ‖ to get score-space c).
+    pub fn gap_per_unit_query(&self) -> f64 {
+        self.gap_per_unit_query
+    }
+}
+
+fn srp_hash(planes: &[f32], bits: usize, v: &[f32]) -> u32 {
+    let d = v.len();
+    let mut code = 0u32;
+    for b in 0..bits {
+        if linalg::dot(&planes[b * d..(b + 1) * d], v) >= 0.0 {
+            code |= 1 << b;
+        }
+    }
+    code
+}
+
+impl MipsIndex for TieredLsh {
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+        let k = k.min(self.ds.n).max(1);
+        let d = self.ds.d;
+        let mut seen = vec![false; self.ds.n];
+        let mut cands: Vec<u32> = Vec::with_capacity(2 * k);
+        // walk the ladder fine → coarse until we have k candidates
+        for rung in &self.rungs {
+            let code = srp_hash(&rung.planes, rung.bits, q);
+            // probe the query bucket and its 1-bit neighbors (sharper
+            // rungs otherwise miss borderline points)
+            let mut visit = |c: u32| {
+                let (s, e) = (rung.bucket_off[c as usize], rung.bucket_off[c as usize + 1]);
+                for &id in &rung.members[s as usize..e as usize] {
+                    if !seen[id as usize] {
+                        seen[id as usize] = true;
+                        cands.push(id);
+                    }
+                }
+            };
+            visit(code);
+            for b in 0..rung.bits {
+                visit(code ^ (1u32 << b));
+            }
+            if cands.len() >= k {
+                break;
+            }
+        }
+        // fallback: ladder exhausted without k candidates → top up with a
+        // sequential fill so |S| = k always holds (Definition 3.1 needs a
+        // fixed-size set)
+        if cands.len() < k {
+            for id in 0..self.ds.n as u32 {
+                if !seen[id as usize] {
+                    seen[id as usize] = true;
+                    cands.push(id);
+                    if cands.len() >= k {
+                        break;
+                    }
+                }
+            }
+        }
+        // exact-score candidates
+        let mut tk = TopK::new(k);
+        const BLOCK: usize = 1024;
+        let mut rows = vec![0f32; BLOCK * d];
+        let mut out = vec![0f32; BLOCK];
+        let mut start = 0;
+        while start < cands.len() {
+            let end = (start + BLOCK).min(cands.len());
+            let ids = &cands[start..end];
+            let rows_buf = &mut rows[..(end - start) * d];
+            self.ds.gather(ids, rows_buf);
+            let out_buf = &mut out[..end - start];
+            self.backend.scores(rows_buf, d, q, out_buf);
+            tk.push_ids(ids, out_buf);
+            start = end;
+        }
+        TopKResult { items: tk.into_sorted(), scanned: cands.len() }
+    }
+
+    fn n(&self) -> usize {
+        self.ds.n
+    }
+    fn d(&self) -> usize {
+        self.ds.d
+    }
+    fn gap_bound(&self) -> Option<f64> {
+        Some(self.gap_per_unit_query)
+    }
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+    fn describe(&self) -> String {
+        format!(
+            "tiered-lsh over n={} d={}: {} rungs (bits {}..{}), measured gap/unit-q = {:.4}",
+            self.ds.n,
+            self.ds.d,
+            self.rungs.len(),
+            self.rungs.first().map(|r| r.bits).unwrap_or(0),
+            self.rungs.last().map(|r| r.bits).unwrap_or(0),
+            self.gap_per_unit_query
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::data::synth;
+    use crate::mips::{brute::BruteForce, empirical_gap, recall_at_k};
+    use crate::scorer::NativeScorer;
+    use crate::util::rng::Pcg64;
+
+    fn cfg() -> IndexConfig {
+        let mut c = Config::default().index;
+        c.rungs = 8;
+        c.bits = 14;
+        c
+    }
+
+    #[test]
+    fn always_returns_k_elements() {
+        let ds = Arc::new(synth::imagenet_like(3000, 16, 30, 0.3, 1));
+        let idx = TieredLsh::build(ds.clone(), &cfg(), Arc::new(NativeScorer)).unwrap();
+        let mut rng = Pcg64::new(2);
+        for _ in 0..5 {
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            for k in [1, 10, 55, 200] {
+                let got = idx.top_k(&q, k);
+                assert_eq!(got.items.len(), k, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn gap_definition_holds_with_measured_c() {
+        // Definition 3.1: max_{i∉S} y_i − min_{i∈S} y_i < c.
+        let ds = Arc::new(synth::imagenet_like(3000, 16, 30, 0.25, 3));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let idx = TieredLsh::build(ds.clone(), &cfg(), backend.clone()).unwrap();
+        let c_unit = idx.gap_bound().unwrap();
+        let mut rng = Pcg64::new(4);
+        let k = (ds.n as f64).sqrt() as usize;
+        let mut violations = 0;
+        let trials = 12;
+        for _ in 0..trials {
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            let got = idx.top_k(&q, k);
+            let gap = empirical_gap(&ds, backend.as_ref(), &q, &got);
+            let c = c_unit * linalg::norm(&q) as f64;
+            // allow slack: measured c came from different probes
+            if gap > c * 1.5 + 1e-9 {
+                violations += 1;
+            }
+        }
+        assert!(violations <= trials / 4, "{violations}/{trials} gap violations");
+    }
+
+    #[test]
+    fn better_recall_than_random_subset() {
+        let ds = Arc::new(synth::imagenet_like(3000, 16, 30, 0.3, 5));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let idx = TieredLsh::build(ds.clone(), &cfg(), backend.clone()).unwrap();
+        let brute = BruteForce::new(ds.clone(), backend);
+        let mut rng = Pcg64::new(6);
+        let mut recall = 0.0;
+        let trials = 10;
+        for _ in 0..trials {
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            let got = idx.top_k(&q, 30);
+            let want = brute.top_k(&q, 30);
+            recall += recall_at_k(&got, &want);
+        }
+        recall /= trials as f64;
+        // tiered LSH is the *theoretically certified* index, not the
+        // fastest/most accurate — a random 30-of-3000 subset would score
+        // ≈ 0.01, so anything ≫ that shows the ladder concentrates on
+        // high-score states (the gap certificate is tested separately)
+        assert!(recall > 0.12, "recall = {recall}");
+    }
+
+    #[test]
+    fn ladder_walks_fine_to_coarse() {
+        let ds = Arc::new(synth::imagenet_like(1500, 8, 15, 0.3, 7));
+        let idx = TieredLsh::build(ds.clone(), &cfg(), Arc::new(NativeScorer)).unwrap();
+        // rung bit counts strictly decrease (until the floor)
+        for w in idx.rungs.windows(2) {
+            assert!(w[0].bits >= w[1].bits);
+        }
+        // small k should scan fewer candidates than large k on average
+        let mut rng = Pcg64::new(8);
+        let q = synth::random_theta(&ds, 0.05, &mut rng);
+        let small = idx.top_k(&q, 5).scanned;
+        let large = idx.top_k(&q, 500).scanned;
+        assert!(large >= small);
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT artifact runtime — the bridge from AOT-compiled JAX/Pallas compute
+//! to the Rust hot path.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which lowers the L2 JAX
+//! model (calling the L1 Pallas kernels) to **HLO text** files plus a
+//! `manifest.json` describing every entry point's shapes. This module
+//! loads the manifest, compiles each HLO module once on the PJRT CPU
+//! client (`xla` crate ↔ xla_extension 0.5.1), and exposes typed
+//! executable wrappers.
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids which this XLA build rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT entry point as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// input shapes (row-major dims)
+    pub inputs: Vec<Vec<usize>>,
+    /// output shapes
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub block: usize,
+    pub d: usize,
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let block = j.req("block")?.as_usize()?;
+        let d = j.req("d")?.as_usize()?;
+        let mut entries = Vec::new();
+        for e in j.req("entries")?.as_arr()? {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                e.req(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_usize_vec())
+                    .collect()
+            };
+            entries.push(ArtifactEntry {
+                name: e.req("name")?.as_str()?.to_string(),
+                file: e.req("file")?.as_str()?.to_string(),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            });
+        }
+        let m = ArtifactManifest { block, d, entries, dir };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.block == 0 || self.d == 0 {
+            return Err(Error::runtime("manifest block/d must be positive"));
+        }
+        for e in &self.entries {
+            if !self.dir.join(&e.file).exists() {
+                return Err(Error::runtime(format!(
+                    "manifest references missing artifact file {}",
+                    e.file
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// A compiled PJRT executable with its manifest entry.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs, returning the flattened tuple outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT CPU client owning compiled executables for every artifact entry.
+pub struct Runtime {
+    pub manifest: ArtifactManifest,
+    executables: HashMap<String, Executable>,
+    pub platform: String,
+}
+
+impl Runtime {
+    /// Load all artifacts from a directory and compile them.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let platform = client.platform_name();
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(entry.name.clone(), Executable { entry: entry.clone(), exe });
+            log::info!("compiled artifact '{}' from {}", entry.name, entry.file);
+        }
+        Ok(Runtime { manifest, executables, platform })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&Executable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| Error::runtime(format!("no artifact entry named '{name}'")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Build an `f32` literal of the given dims from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    if expected as usize != data.len() {
+        return Err(Error::runtime(format!(
+            "literal shape {dims:?} incompatible with {} elements",
+            data.len()
+        )));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar i32 literal (block-mask `count` inputs).
+pub fn literal_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("gmips_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("scores.hlo.txt"), "HloModule m").unwrap();
+        write_manifest(
+            &dir,
+            r#"{"block":128,"d":16,"entries":[
+                {"name":"scores","file":"scores.hlo.txt",
+                 "inputs":[[128,16],[16]],"outputs":[[128]]}]}"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.block, 128);
+        assert_eq!(m.d, 16);
+        let e = m.entry("scores").unwrap();
+        assert_eq!(e.inputs[0], vec![128, 16]);
+        assert!(m.entry("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("gmips_art2_{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{"block":128,"d":16,"entries":[
+                {"name":"x","file":"missing.hlo.txt","inputs":[],"outputs":[]}]}"#,
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_absent_gives_helpful_error() {
+        let err = ArtifactManifest::load("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn literal_shape_check() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+}

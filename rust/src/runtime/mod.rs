@@ -1,0 +1,10 @@
+//! PJRT runtime: load the AOT artifacts emitted by `python/compile/aot.py`
+//! (HLO text + manifest), compile them once, and expose a
+//! [`ScoreBackend`](crate::scorer::ScoreBackend) that runs the paper's
+//! score/partition/expectation compute inside XLA.
+
+pub mod client;
+pub mod pjrt_scorer;
+
+pub use client::{ArtifactManifest, Runtime};
+pub use pjrt_scorer::PjrtScorer;

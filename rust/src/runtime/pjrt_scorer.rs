@@ -1,0 +1,214 @@
+//! [`PjrtScorer`] — a [`ScoreBackend`] whose compute runs inside the
+//! AOT-compiled XLA executables (L2 JAX model + L1 Pallas kernels).
+//!
+//! Fixed-shape discipline: every executable was lowered for `[B, d]`
+//! blocks. Calls with fewer than `B` rows are zero-padded and masked via
+//! the `count` input (fused kernels) or sliced on the host (`scores`).
+//! Larger inputs are chunked. One compiled executable per entry point,
+//! reused for the life of the process — no per-call compilation anywhere.
+//!
+//! ## Thread safety
+//!
+//! The `xla` crate's PJRT wrappers hold `Rc` internals and raw pointers,
+//! so they are neither `Send` nor `Sync`. We serialize **all** access
+//! (execution, literal construction tied to the client, and eventual
+//! drop) behind one `Mutex`, never hand out references to the inner
+//! state, and only then assert `Send + Sync`. The PJRT CPU client itself
+//! is thread-compatible under external synchronization. Workers that
+//! need parallel XLA compute should each own their own `PjrtScorer`
+//! (each gets its own PJRT client).
+
+use super::client::{literal_f32, literal_i32, Runtime};
+use crate::error::Result;
+use crate::linalg::MaxSumExp;
+use crate::scorer::ScoreBackend;
+use std::sync::Mutex;
+
+struct Inner {
+    rt: Runtime,
+    /// staging buffer for padded blocks
+    stage: Vec<f32>,
+}
+
+/// PJRT-backed scorer. All XLA access is serialized internally.
+pub struct PjrtScorer {
+    inner: Mutex<Inner>,
+    block: usize,
+    d: usize,
+}
+
+// Safety: see module docs — every touch of the non-Send internals happens
+// under `self.inner`'s mutex, including Drop (the scorer is dropped on
+// whichever thread holds the last Arc, with no concurrent access by
+// construction).
+unsafe impl Send for PjrtScorer {}
+unsafe impl Sync for PjrtScorer {}
+
+impl PjrtScorer {
+    /// Wrap a loaded runtime. Fails fast if the required entries are
+    /// missing.
+    pub fn new(rt: Runtime) -> Result<Self> {
+        for name in ["scores", "partition", "expect"] {
+            rt.executable(name)?;
+        }
+        let block = rt.manifest.block;
+        let d = rt.manifest.d;
+        Ok(PjrtScorer {
+            inner: Mutex::new(Inner { rt, stage: vec![0f32; block * d] }),
+            block,
+            d,
+        })
+    }
+
+    /// Load artifacts from a directory and wrap them.
+    pub fn load(dir: &str) -> Result<Self> {
+        Self::new(Runtime::load(dir)?)
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    fn with_inner<T>(&self, f: impl FnOnce(&mut Inner) -> Result<T>) -> Result<T> {
+        let mut g = self.inner.lock().unwrap();
+        f(&mut g)
+    }
+}
+
+impl Inner {
+    fn pad_literal(&mut self, rows: &[f32], block: usize, d: usize) -> Result<xla::Literal> {
+        if rows.len() == block * d {
+            literal_f32(rows, &[block as i64, d as i64])
+        } else {
+            self.stage[..rows.len()].copy_from_slice(rows);
+            self.stage[rows.len()..].fill(0.0);
+            literal_f32(&self.stage, &[block as i64, d as i64])
+        }
+    }
+
+    fn scores_block(
+        &mut self,
+        rows: &[f32],
+        q: &[f32],
+        out: &mut [f32],
+        block: usize,
+        d: usize,
+    ) -> Result<()> {
+        let n = out.len();
+        let vlit = self.pad_literal(rows, block, d)?;
+        let qlit = literal_f32(q, &[d as i64])?;
+        let exe = self.rt.executable("scores")?;
+        let outs = exe.run(&[vlit, qlit])?;
+        let full: Vec<f32> = outs[0].to_vec::<f32>()?;
+        out.copy_from_slice(&full[..n]);
+        Ok(())
+    }
+
+    fn partition_block(
+        &mut self,
+        rows: &[f32],
+        q: &[f32],
+        count: usize,
+        block: usize,
+        d: usize,
+    ) -> Result<MaxSumExp> {
+        let vlit = self.pad_literal(rows, block, d)?;
+        let qlit = literal_f32(q, &[d as i64])?;
+        let exe = self.rt.executable("partition")?;
+        let outs = exe.run(&[vlit, qlit, literal_i32(count as i32)])?;
+        let max = outs[0].to_vec::<f32>()?[0] as f64;
+        let sumexp = outs[1].to_vec::<f32>()?[0] as f64;
+        Ok(MaxSumExp { max, sumexp, count: count as u64 })
+    }
+
+    fn expect_block(
+        &mut self,
+        rows: &[f32],
+        q: &[f32],
+        count: usize,
+        block: usize,
+        d: usize,
+    ) -> Result<(MaxSumExp, Vec<f32>)> {
+        let vlit = self.pad_literal(rows, block, d)?;
+        let qlit = literal_f32(q, &[d as i64])?;
+        let exe = self.rt.executable("expect")?;
+        let outs = exe.run(&[vlit, qlit, literal_i32(count as i32)])?;
+        let max = outs[0].to_vec::<f32>()?[0] as f64;
+        let sumexp = outs[1].to_vec::<f32>()?[0] as f64;
+        let wsum = outs[2].to_vec::<f32>()?;
+        Ok((MaxSumExp { max, sumexp, count: count as u64 }, wsum))
+    }
+}
+
+impl ScoreBackend for PjrtScorer {
+    fn scores(&self, rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        assert_eq!(d, self.d, "PjrtScorer compiled for d={}, got {d}", self.d);
+        let n = out.len();
+        let block = self.block;
+        self.with_inner(|inner| {
+            let mut start = 0;
+            while start < n {
+                let end = (start + block).min(n);
+                inner.scores_block(&rows[start * d..end * d], q, &mut out[start..end], block, d)?;
+                start = end;
+            }
+            Ok(())
+        })
+        .expect("PJRT scores execution failed");
+    }
+
+    fn max_sumexp(&self, rows: &[f32], d: usize, q: &[f32]) -> MaxSumExp {
+        assert_eq!(d, self.d);
+        let n = rows.len() / d;
+        let block = self.block;
+        self.with_inner(|inner| {
+            let mut acc = MaxSumExp::default();
+            let mut start = 0;
+            while start < n {
+                let end = (start + block).min(n);
+                let frag =
+                    inner.partition_block(&rows[start * d..end * d], q, end - start, block, d)?;
+                acc.merge(&frag);
+                start = end;
+            }
+            Ok(acc)
+        })
+        .expect("PJRT partition execution failed")
+    }
+
+    fn expect_fragment(&self, rows: &[f32], d: usize, q: &[f32]) -> (MaxSumExp, Vec<f32>) {
+        assert_eq!(d, self.d);
+        let n = rows.len() / d;
+        let block = self.block;
+        let frags = self
+            .with_inner(|inner| {
+                let mut frags = Vec::new();
+                let mut start = 0;
+                while start < n {
+                    let end = (start + block).min(n);
+                    frags.push(inner.expect_block(
+                        &rows[start * d..end * d],
+                        q,
+                        end - start,
+                        block,
+                        d,
+                    )?);
+                    start = end;
+                }
+                Ok(frags)
+            })
+            .expect("PJRT expect execution failed");
+        crate::scorer::merge_expect_fragments(&frags, d)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// Integration tests against real artifacts live in rust/tests/ — they
+// require `make artifacts` to have produced artifacts/ first.

@@ -1,0 +1,120 @@
+//! Naive exact sampler — the paper's brute-force baseline: score every
+//! state, perturb every state with a fresh Gumbel, take the argmax.
+//! `O(n·d)` scoring + `O(n)` Gumbels per sample.
+
+use super::{SampleOutcome, SampleWork, Sampler};
+use crate::data::Dataset;
+use crate::mips::brute::BruteForce;
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Brute-force Gumbel-max sampler (Proposition 2.1 applied literally).
+pub struct ExactSampler {
+    scan: BruteForce,
+    n: usize,
+}
+
+impl ExactSampler {
+    pub fn new(ds: Arc<Dataset>, backend: Arc<dyn ScoreBackend>) -> Self {
+        let n = ds.n;
+        ExactSampler { scan: BruteForce::new(ds, backend), n }
+    }
+
+    /// Exact scores for all states (shared with evaluation code).
+    pub fn all_scores(&self, q: &[f32], out: &mut [f32]) {
+        self.scan.all_scores(q, out);
+    }
+
+    /// Exact softmax probabilities (evaluation only; `O(n)` + exp).
+    pub fn probabilities(&self, q: &[f32]) -> Vec<f64> {
+        let mut scores = vec![0f32; self.n];
+        self.scan.all_scores(q, &mut scores);
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut probs: Vec<f64> = scores.iter().map(|&s| ((s as f64) - m).exp()).collect();
+        let z: f64 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= z;
+        }
+        probs
+    }
+}
+
+impl Sampler for ExactSampler {
+    fn sample(&self, q: &[f32], rng: &mut Pcg64) -> SampleOutcome {
+        let mut scores = vec![0f32; self.n];
+        self.scan.all_scores(q, &mut scores);
+        let mut best = f64::NEG_INFINITY;
+        let mut best_id = 0u32;
+        for (i, &s) in scores.iter().enumerate() {
+            let v = s as f64 + rng.gumbel();
+            if v > best {
+                best = v;
+                best_id = i as u32;
+            }
+        }
+        SampleOutcome { id: best_id, work: SampleWork { scanned: self.n, k: 0, m: 0 } }
+    }
+
+    fn sample_many(&self, q: &[f32], count: usize, rng: &mut Pcg64) -> Vec<SampleOutcome> {
+        // amortize the scoring pass across draws for the same θ (the
+        // Gumbel perturbations stay fresh per draw, so samples remain
+        // i.i.d.) — this is the strongest version of the baseline.
+        let mut scores = vec![0f32; self.n];
+        self.scan.all_scores(q, &mut scores);
+        (0..count)
+            .map(|_| {
+                let mut best = f64::NEG_INFINITY;
+                let mut best_id = 0u32;
+                for (i, &s) in scores.iter().enumerate() {
+                    let v = s as f64 + rng.gumbel();
+                    if v > best {
+                        best = v;
+                        best_id = i as u32;
+                    }
+                }
+                SampleOutcome { id: best_id, work: SampleWork { scanned: self.n, k: 0, m: 0 } }
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::scorer::NativeScorer;
+
+    use crate::util::stats::gof_ok;
+
+    #[test]
+    fn samples_follow_softmax() {
+        let ds = Arc::new(synth::imagenet_like(200, 8, 5, 0.3, 1));
+        let s = ExactSampler::new(ds.clone(), Arc::new(NativeScorer));
+        let mut rng = Pcg64::new(2);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let probs = s.probabilities(&q);
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let total = 40_000u64;
+        let mut counts = vec![0u64; 200];
+        for o in s.sample_many(&q, total as usize, &mut rng) {
+            counts[o.id as usize] += 1;
+        }
+        assert!(gof_ok(&counts, &probs, total, 5.0), "GOF failed");
+    }
+
+    #[test]
+    fn sample_work_reports_full_scan() {
+        let ds = Arc::new(synth::uniform_sphere(100, 4, 3));
+        let s = ExactSampler::new(ds, Arc::new(NativeScorer));
+        let mut rng = Pcg64::new(4);
+        let o = s.sample(&[1.0, 0.0, 0.0, 0.0], &mut rng);
+        assert_eq!(o.work.scanned, 100);
+    }
+
+    use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,158 @@
+//! **Algorithm 2 — Fast Sampling with Fixed B** (paper §3.1.2).
+//!
+//! Instead of the data-dependent cutoff of Algorithm 1, fix
+//! `B = −ln(−ln(1 − l/n))` so that the expected number of tail Gumbels
+//! above `B` is exactly `l`. This concentrates the per-query work
+//! (`m ~ Binomial(n−k, l/n)`, so `m < 2l` w.h.p.) and tolerates MIPS
+//! errors gracefully: the sample is exact with probability
+//! `1 − exp(−(kl/n)·e^{−c})` (Theorem 3.3), failing only when the top
+//! set's perturbed max happens to be small.
+
+use super::{SampleOutcome, SampleWork, Sampler};
+use crate::data::Dataset;
+use crate::gumbel;
+use crate::mips::{MipsIndex, TopKResult};
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+
+/// Algorithm 2 sampler.
+pub struct FixedBSampler {
+    ds: Arc<Dataset>,
+    index: Arc<dyn MipsIndex>,
+    backend: Arc<dyn ScoreBackend>,
+    pub k: usize,
+    /// expected tail count l (paper: O(√n); Theorem 3.3 wants kl ≥ n·ln(1/δ))
+    pub l: usize,
+}
+
+impl FixedBSampler {
+    pub fn new(
+        ds: Arc<Dataset>,
+        index: Arc<dyn MipsIndex>,
+        backend: Arc<dyn ScoreBackend>,
+        k: usize,
+        l: usize,
+    ) -> Self {
+        let k = k.clamp(1, ds.n);
+        let l = l.clamp(1, ds.n);
+        FixedBSampler { ds, index, backend, k, l }
+    }
+
+    /// Failure probability bound of Theorem 3.3 (c = 0):
+    /// `δ = exp(−kl/n)`.
+    pub fn failure_bound(&self) -> f64 {
+        (-(self.k as f64) * (self.l as f64) / (self.ds.n as f64)).exp()
+    }
+
+    /// Steps after top-k retrieval (reusable across draws per θ).
+    pub fn sample_given_top(&self, top: &TopKResult, q: &[f32], rng: &mut Pcg64) -> SampleOutcome {
+        let n = self.ds.n;
+        let b = gumbel::fixed_cutoff(n, self.l);
+
+        let mut best_id = top.items[0].id;
+        let mut best = f64::NEG_INFINITY;
+        for it in &top.items {
+            let v = it.score as f64 + rng.gumbel();
+            if v > best {
+                best = v;
+                best_id = it.id;
+            }
+        }
+
+        let exclude: FxHashSet<u32> = top.items.iter().map(|s| s.id).collect();
+        let tail = gumbel::sample_tail(n, &exclude, b, rng);
+        let m = tail.m();
+        if m > 0 {
+            let d = self.ds.d;
+            let mut rows = vec![0f32; m * d];
+            self.ds.gather(&tail.ids, &mut rows);
+            let mut scores = vec![0f32; m];
+            self.backend.scores(&rows, d, q, &mut scores);
+            for ((&id, &g), &y) in tail.ids.iter().zip(&tail.gumbels).zip(&scores) {
+                let v = y as f64 + g;
+                if v > best {
+                    best = v;
+                    best_id = id;
+                }
+            }
+        }
+        SampleOutcome { id: best_id, work: SampleWork { scanned: top.scanned, k: top.items.len(), m } }
+    }
+}
+
+impl Sampler for FixedBSampler {
+    fn sample(&self, q: &[f32], rng: &mut Pcg64) -> SampleOutcome {
+        let top = self.index.top_k(q, self.k);
+        self.sample_given_top(&top, q, rng)
+    }
+
+    fn sample_many(&self, q: &[f32], count: usize, rng: &mut Pcg64) -> Vec<SampleOutcome> {
+        let top = self.index.top_k(q, self.k);
+        (0..count).map(|_| self.sample_given_top(&top, q, rng)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed-b"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::mips::brute::BruteForce;
+    use crate::sampler::exact::ExactSampler;
+    use crate::util::stats::gof_ok;
+
+    fn setup(n: usize, seed: u64) -> (Arc<Dataset>, Arc<dyn MipsIndex>, Arc<dyn ScoreBackend>) {
+        let ds = Arc::new(synth::imagenet_like(n, 8, 10, 0.3, seed));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(crate::scorer::NativeScorer);
+        let index: Arc<dyn MipsIndex> = Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+        (ds, index, backend)
+    }
+
+    #[test]
+    fn samples_follow_softmax_when_kl_large() {
+        let (ds, index, backend) = setup(300, 1);
+        // kl/n = 40·60/300 = 8 → δ ≈ 3e-4: effectively exact
+        let sampler = FixedBSampler::new(ds.clone(), index, backend.clone(), 40, 60);
+        assert!(sampler.failure_bound() < 1e-3);
+        let exact = ExactSampler::new(ds.clone(), backend);
+        let mut rng = Pcg64::new(2);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let probs = exact.probabilities(&q);
+        let total = 30_000u64;
+        let mut counts = vec![0u64; ds.n];
+        for o in sampler.sample_many(&q, total as usize, &mut rng) {
+            counts[o.id as usize] += 1;
+        }
+        assert!(gof_ok(&counts, &probs, total, 5.0), "Alg 2 GOF failed");
+    }
+
+    #[test]
+    fn theorem_3_3_work_concentrated_around_l() {
+        let (ds, index, backend) = setup(5_000, 3);
+        let l = 80;
+        let sampler = FixedBSampler::new(ds.clone(), index, backend, 70, l);
+        let mut rng = Pcg64::new(4);
+        let q = synth::random_theta(&ds, 0.05, &mut rng);
+        let outs = sampler.sample_many(&q, 300, &mut rng);
+        let ms: Vec<f64> = outs.iter().map(|o| o.work.m as f64).collect();
+        let mean = ms.iter().sum::<f64>() / ms.len() as f64;
+        assert!((mean - l as f64).abs() < 0.25 * l as f64, "mean m={mean} want ≈{l}");
+        // "with very high probability, m < 2l"
+        let violations = ms.iter().filter(|&&m| m >= 2.0 * l as f64).count();
+        assert!(violations <= 1, "{violations} draws with m ≥ 2l");
+    }
+
+    #[test]
+    fn failure_bound_formula() {
+        let (ds, index, backend) = setup(1_000, 5);
+        let s = FixedBSampler::new(ds, index, backend, 50, 40);
+        assert!((s.failure_bound() - (-2.0f64).exp()).abs() < 1e-12);
+    }
+
+    use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,250 @@
+//! **Algorithm 1 — Fast Sampling with Lazy Gumbels** (paper §3.1).
+//!
+//! 1. retrieve the (approximate) top-k set `S` via MIPS,
+//! 2. perturb `S` with fresh Gumbels → `M = max_{i∈S} y_i + G_i`,
+//! 3. cutoff `B = M − S_min − c` (`S_min = min_{i∈S} y_i`; `c` absorbs
+//!    the approximate-MIPS gap, §3.4),
+//! 4. lazily materialize the tail Gumbels above `B`
+//!    (`m ~ Binomial(n−k, 1−F(B))`, positions uniform, values truncated
+//!    Gumbel — [`crate::gumbel::sample_tail`]),
+//! 5. return `argmax_{i∈S∪T} y_i + G_i`.
+//!
+//! Theorem 3.1: the result is an exact softmax sample (when `S_min + c`
+//! truly bounds tail scores). Theorem 3.2: `E[m] ≤ n·e^c/k`.
+
+use super::{SampleOutcome, SampleWork, Sampler};
+use crate::data::Dataset;
+use crate::gumbel;
+use crate::mips::{MipsIndex, TopKResult};
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use rustc_hash::FxHashSet;
+use std::sync::Arc;
+
+/// Algorithm 1 sampler.
+pub struct LazyGumbelSampler {
+    ds: Arc<Dataset>,
+    index: Arc<dyn MipsIndex>,
+    backend: Arc<dyn ScoreBackend>,
+    /// top-set size k (paper: O(√n))
+    pub k: usize,
+    /// approximate-MIPS gap allowance c ≥ 0
+    pub gap_c: f64,
+}
+
+impl LazyGumbelSampler {
+    pub fn new(
+        ds: Arc<Dataset>,
+        index: Arc<dyn MipsIndex>,
+        backend: Arc<dyn ScoreBackend>,
+        k: usize,
+        gap_c: f64,
+    ) -> Self {
+        let k = k.clamp(1, ds.n);
+        LazyGumbelSampler { ds, index, backend, k, gap_c }
+    }
+
+    /// Score a set of rows by id — gather-free fast path for the native
+    /// backend (§Perf iteration 1: the gather+block-score path copied
+    /// `m·d` floats per draw; per-row dots read the dataset in place).
+    fn score_ids(&self, ids: &[u32], q: &[f32]) -> Vec<f32> {
+        let d = self.ds.d;
+        if self.backend.prefers_gather() {
+            let mut rows = vec![0f32; ids.len() * d];
+            self.ds.gather(ids, &mut rows);
+            let mut out = vec![0f32; ids.len()];
+            self.backend.scores(&rows, d, q, &mut out);
+            out
+        } else {
+            ids.iter()
+                .map(|&id| crate::linalg::dot(self.ds.row(id as usize), q))
+                .collect()
+        }
+    }
+
+    /// Open a per-θ sampling session: one MIPS retrieval + one exclusion
+    /// set, reused across every draw for this θ (§Perf iteration 2 — the
+    /// exclusion set was previously rebuilt per draw).
+    pub fn session(&self, q: &[f32]) -> SampleSession {
+        let top = self.index.top_k(q, self.k);
+        SampleSession::new(top)
+    }
+
+    /// Run steps 2–5 of Algorithm 1 within a session.
+    pub fn sample_in_session(
+        &self,
+        session: &SampleSession,
+        q: &[f32],
+        rng: &mut Pcg64,
+    ) -> SampleOutcome {
+        let top = &session.top;
+        let n = self.ds.n;
+        debug_assert!(!top.items.is_empty());
+
+        // fresh Gumbels on S, tracking the perturbed max
+        let mut best_id = top.items[0].id;
+        let mut best = f64::NEG_INFINITY;
+        for it in &top.items {
+            let v = it.score as f64 + rng.gumbel();
+            if v > best {
+                best = v;
+                best_id = it.id;
+            }
+        }
+        let s_min = top.s_min();
+        let b = best - s_min - self.gap_c;
+
+        // lazy tail
+        let tail = gumbel::sample_tail(n, &session.exclude, b, rng);
+        let m = tail.m();
+        if m > 0 {
+            let tail_scores = self.score_ids(&tail.ids, q);
+            for ((&id, &g), &y) in tail.ids.iter().zip(&tail.gumbels).zip(&tail_scores) {
+                let v = y as f64 + g;
+                if v > best {
+                    best = v;
+                    best_id = id;
+                }
+            }
+        }
+        SampleOutcome {
+            id: best_id,
+            work: SampleWork { scanned: top.scanned, k: top.items.len(), m },
+        }
+    }
+
+    /// Back-compat single-shot form: builds a throwaway session.
+    pub fn sample_given_top(
+        &self,
+        top: &TopKResult,
+        q: &[f32],
+        rng: &mut Pcg64,
+    ) -> SampleOutcome {
+        let session = SampleSession::new(top.clone());
+        self.sample_in_session(&session, q, rng)
+    }
+}
+
+/// Reusable per-θ state for Algorithm 1 (top set + exclusion set).
+pub struct SampleSession {
+    pub top: TopKResult,
+    exclude: FxHashSet<u32>,
+}
+
+impl SampleSession {
+    pub fn new(top: TopKResult) -> Self {
+        let exclude: FxHashSet<u32> = top.items.iter().map(|s| s.id).collect();
+        SampleSession { top, exclude }
+    }
+}
+
+impl Sampler for LazyGumbelSampler {
+    fn sample(&self, q: &[f32], rng: &mut Pcg64) -> SampleOutcome {
+        let top = self.index.top_k(q, self.k);
+        self.sample_given_top(&top, q, rng)
+    }
+
+    fn sample_many(&self, q: &[f32], count: usize, rng: &mut Pcg64) -> Vec<SampleOutcome> {
+        // ONE MIPS retrieval per θ, fresh Gumbels per draw — the paper's
+        // "only require accessing the MIPS data structure once per
+        // parameter value" (§5).
+        let session = self.session(q);
+        (0..count).map(|_| self.sample_in_session(&session, q, rng)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "lazy-gumbel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::mips::brute::BruteForce;
+    use crate::sampler::exact::ExactSampler;
+    use crate::util::stats::gof_ok;
+    use crate::scorer::NativeScorer;
+
+    fn setup(n: usize, seed: u64) -> (Arc<Dataset>, Arc<dyn MipsIndex>, Arc<dyn ScoreBackend>) {
+        let ds = Arc::new(synth::imagenet_like(n, 8, 10, 0.3, seed));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let index: Arc<dyn MipsIndex> =
+            Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+        (ds, index, backend)
+    }
+
+    #[test]
+    fn theorem_3_1_exact_sampling_with_exact_mips() {
+        // With an exact top-k, Algorithm 1 must produce exact softmax
+        // samples: chi-square GOF against the true distribution.
+        let (ds, index, backend) = setup(300, 1);
+        let k = 30; // ~√n·1.7
+        let sampler = LazyGumbelSampler::new(ds.clone(), index, backend.clone(), k, 0.0);
+        let exact = ExactSampler::new(ds.clone(), backend);
+        let mut rng = Pcg64::new(2);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let probs = exact.probabilities(&q);
+        let total = 40_000u64;
+        let mut counts = vec![0u64; ds.n];
+        for o in sampler.sample_many(&q, total as usize, &mut rng) {
+            counts[o.id as usize] += 1;
+        }
+        assert!(gof_ok(&counts, &probs, total, 5.0), "Alg 1 GOF failed");
+    }
+
+    #[test]
+    fn theorem_3_2_expected_tail_count() {
+        // E[m] ≤ n/k (c = 0). Average m over many draws.
+        let (ds, index, backend) = setup(2_000, 3);
+        for k in [20, 45, 90] {
+            let sampler = LazyGumbelSampler::new(ds.clone(), index.clone(), backend.clone(), k, 0.0);
+            let mut rng = Pcg64::new(4);
+            let q = synth::random_theta(&ds, 0.1, &mut rng);
+            let reps = 400;
+            let mean_m: f64 = sampler
+                .sample_many(&q, reps, &mut rng)
+                .iter()
+                .map(|o| o.work.m as f64)
+                .sum::<f64>()
+                / reps as f64;
+            let bound = ds.n as f64 / k as f64;
+            // 4σ-ish slack: m is exponential-tailed with mean ≤ bound
+            assert!(
+                mean_m <= bound * 1.5 + 4.0 * (bound / reps as f64).sqrt() + 1.0,
+                "k={k}: E[m]={mean_m} bound={bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn gap_c_increases_tail_work() {
+        let (ds, index, backend) = setup(2_000, 5);
+        let mut rng = Pcg64::new(6);
+        let q = synth::random_theta(&ds, 0.1, &mut rng);
+        let m_of = |c: f64, rng: &mut Pcg64| -> f64 {
+            let s = LazyGumbelSampler::new(ds.clone(), index.clone(), backend.clone(), 40, c);
+            s.sample_many(&q, 200, rng).iter().map(|o| o.work.m as f64).sum::<f64>() / 200.0
+        };
+        let m0 = m_of(0.0, &mut rng);
+        let m1 = m_of(1.0, &mut rng);
+        // Theorem 3.2 with c: E[m] ≤ n·e^c/k — expect roughly e× more work
+        assert!(m1 > m0 * 1.5, "m0={m0} m1={m1}");
+    }
+
+    #[test]
+    fn work_is_sublinear() {
+        let (ds, index, backend) = setup(5_000, 7);
+        let k = (ds.n as f64).sqrt() as usize;
+        let sampler = LazyGumbelSampler::new(ds.clone(), index, backend, k, 0.0);
+        let mut rng = Pcg64::new(8);
+        let q = synth::random_theta(&ds, 0.05, &mut rng);
+        let outs = sampler.sample_many(&q, 100, &mut rng);
+        let mean_m: f64 = outs.iter().map(|o| o.work.m as f64).sum::<f64>() / 100.0;
+        // with k = √n, E[m] ≤ √n
+        assert!(mean_m <= 2.5 * (ds.n as f64).sqrt(), "mean_m={mean_m}");
+        assert!(outs.iter().all(|o| o.work.k == k));
+    }
+
+    use crate::util::rng::Pcg64;
+}

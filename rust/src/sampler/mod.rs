@@ -1,0 +1,55 @@
+//! Sampling from `Pr(i) ∝ exp(y_i)` (paper §3.1).
+//!
+//! * [`exact::ExactSampler`] — the naive `O(n)` Gumbel-max baseline,
+//! * [`lazy_gumbel::LazyGumbelSampler`] — **Algorithm 1** (data-dependent
+//!   cutoff `B = M − S_min − c`, exact sample, `E[m] ≤ n·e^c/k`),
+//! * [`fixed_b::FixedBSampler`] — **Algorithm 2** (constant cutoff,
+//!   exact with probability `1 − exp(−kl/n·e^{−c})`, concentrated work),
+//! * [`frozen::FrozenGumbel`] — the Mussmann & Ermon (2016) baseline with
+//!   frozen Gumbel noise appended to the database (correlated samples;
+//!   §5 discusses why it fails),
+//! * [`tv_bound`] — the closed-form total-variation certificate of
+//!   §4.2.1 (Table 1's accuracy column).
+
+pub mod exact;
+pub mod fixed_b;
+pub mod frozen;
+pub mod lazy_gumbel;
+pub mod tv_bound;
+
+use crate::util::rng::Pcg64;
+
+/// Work accounting for one sampling query.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SampleWork {
+    /// rows scored by the MIPS retrieval (index scan)
+    pub scanned: usize,
+    /// top-set size k
+    pub k: usize,
+    /// lazily materialized tail Gumbels m
+    pub m: usize,
+}
+
+/// One sampling query's result.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleOutcome {
+    /// the sampled state id
+    pub id: u32,
+    pub work: SampleWork,
+}
+
+/// A sampler over a fixed database answering queries with changing θ.
+pub trait Sampler: Send + Sync {
+    /// Draw one sample for parameter vector `q` (temperature already
+    /// folded in).
+    fn sample(&self, q: &[f32], rng: &mut Pcg64) -> SampleOutcome;
+
+    /// Draw many samples (default: loop; implementations may amortize the
+    /// top-k retrieval across draws for the same θ, which is the paper's
+    /// "sequence of queries" setting).
+    fn sample_many(&self, q: &[f32], count: usize, rng: &mut Pcg64) -> Vec<SampleOutcome> {
+        (0..count).map(|_| self.sample(q, rng)).collect()
+    }
+
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,182 @@
+//! Score computation backends.
+//!
+//! Everything the paper does reduces to *scoring*: inner products
+//! `y_i = θ·φ(x_i)` over blocks of database rows. [`ScoreBackend`]
+//! abstracts where that compute runs:
+//!
+//! * [`NativeScorer`] — pure-Rust blocked matvec (this module),
+//! * `PjrtScorer` (in [`crate::runtime`]) — the AOT-compiled XLA
+//!   executables produced by the JAX/Pallas layer, run via PJRT.
+//!
+//! Besides raw scores, backends expose the two *fused* reductions the
+//! estimator path needs, so the PJRT backend can run them as single
+//! executables without materializing scores in host memory:
+//!
+//! * [`ScoreBackend::max_sumexp`] → streaming `(max, Σ exp(s − max))`
+//!   partition fragments (Algorithm 3),
+//! * [`ScoreBackend::expect_fragment`] → additionally `Σ exp(s − max)·φ`
+//!   (the unnormalized feature expectation, Algorithm 4 / learning).
+
+use crate::linalg::{self, MaxSumExp};
+
+/// A backend that can score row blocks against a query.
+pub trait ScoreBackend: Send + Sync {
+    /// `out[r] = rows[r·d .. (r+1)·d] · q`.
+    fn scores(&self, rows: &[f32], d: usize, q: &[f32], out: &mut [f32]);
+
+    /// Streaming partition fragment over a row block.
+    fn max_sumexp(&self, rows: &[f32], d: usize, q: &[f32]) -> MaxSumExp {
+        let n = rows.len() / d;
+        let mut out = vec![0f32; n];
+        self.scores(rows, d, q, &mut out);
+        let mut acc = MaxSumExp::default();
+        acc.push_all(&out);
+        acc
+    }
+
+    /// Expectation fragment over a row block: partition fragment plus the
+    /// weighted feature sum `wsum = Σ_r exp(s_r − max)·rows[r]`.
+    fn expect_fragment(&self, rows: &[f32], d: usize, q: &[f32]) -> (MaxSumExp, Vec<f32>) {
+        let n = rows.len() / d;
+        let mut out = vec![0f32; n];
+        self.scores(rows, d, q, &mut out);
+        let mut acc = MaxSumExp::default();
+        acc.push_all(&out);
+        let mut wsum = vec![0f32; d];
+        for r in 0..n {
+            let w = ((out[r] as f64) - acc.max).exp() as f32;
+            linalg::axpy(w, &rows[r * d..(r + 1) * d], &mut wsum);
+        }
+        (acc, wsum)
+    }
+
+    /// Human-readable backend name (metrics / logs).
+    fn name(&self) -> &'static str;
+
+    /// Whether callers should stage scattered rows into a contiguous
+    /// buffer before calling [`scores`](Self::scores). Block-shaped
+    /// backends (PJRT) need it; the native backend scores rows in place,
+    /// skipping the copy (§Perf iteration 1).
+    fn prefers_gather(&self) -> bool {
+        true
+    }
+}
+
+/// Pure-Rust scoring backend.
+#[derive(Default, Clone, Debug)]
+pub struct NativeScorer;
+
+impl ScoreBackend for NativeScorer {
+    fn scores(&self, rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        linalg::matvec_block(rows, d, q, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prefers_gather(&self) -> bool {
+        false // scores rows wherever they are; no staging copy needed
+    }
+}
+
+/// Merge expectation fragments `(acc_f, wsum_f)` into a global
+/// `(MaxSumExp, wsum)` pair, rescaling each fragment's weighted sum by
+/// `exp(max_f − max_global)`.
+pub fn merge_expect_fragments(fragments: &[(MaxSumExp, Vec<f32>)], d: usize) -> (MaxSumExp, Vec<f32>) {
+    let mut global = MaxSumExp::default();
+    for (acc, _) in fragments {
+        global.merge(acc);
+    }
+    let mut wsum = vec![0f32; d];
+    for (acc, ws) in fragments {
+        if acc.count == 0 {
+            continue;
+        }
+        let scale = (acc.max - global.max).exp() as f32;
+        linalg::axpy(scale, ws, &mut wsum);
+    }
+    (global, wsum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randmat(rng: &mut Pcg64, n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        (rows, q)
+    }
+
+    #[test]
+    fn native_scores_match_dot() {
+        let mut rng = Pcg64::new(1);
+        let (rows, q) = randmat(&mut rng, 50, 17);
+        let mut out = vec![0f32; 50];
+        NativeScorer.scores(&rows, 17, &q, &mut out);
+        for r in 0..50 {
+            assert_eq!(out[r], linalg::dot(&rows[r * 17..(r + 1) * 17], &q));
+        }
+    }
+
+    #[test]
+    fn max_sumexp_equals_logsumexp_of_scores() {
+        let mut rng = Pcg64::new(2);
+        let (rows, q) = randmat(&mut rng, 64, 9);
+        let mut out = vec![0f32; 64];
+        NativeScorer.scores(&rows, 9, &q, &mut out);
+        let direct: Vec<f64> = out.iter().map(|&x| x as f64).collect();
+        let frag = NativeScorer.max_sumexp(&rows, 9, &q);
+        assert!((frag.logsumexp() - linalg::logsumexp(&direct)).abs() < 1e-9);
+        assert_eq!(frag.count, 64);
+    }
+
+    #[test]
+    fn expect_fragment_matches_direct_softmax_mean() {
+        let mut rng = Pcg64::new(3);
+        let (n, d) = (40, 6);
+        let (rows, q) = randmat(&mut rng, n, d);
+        let (acc, wsum) = NativeScorer.expect_fragment(&rows, d, &q);
+        // direct: E[φ] = Σ softmax(s)_r · rows_r ; our fragment encodes
+        // wsum = Σ exp(s - max) rows, so E[φ] = wsum / sumexp
+        let mut out = vec![0f32; n];
+        NativeScorer.scores(&rows, d, &q, &mut out);
+        let m = out.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let z: f64 = out.iter().map(|&s| ((s as f64) - m).exp()).sum();
+        for j in 0..d {
+            let direct: f64 = (0..n)
+                .map(|r| ((out[r] as f64) - m).exp() * rows[r * d + j] as f64)
+                .sum::<f64>()
+                / z;
+            let got = wsum[j] as f64 / acc.sumexp;
+            assert!((got - direct).abs() < 1e-4, "j={j}: {got} vs {direct}");
+        }
+    }
+
+    #[test]
+    fn merge_expect_fragments_equals_whole() {
+        let mut rng = Pcg64::new(4);
+        let (n, d) = (90, 5);
+        let (rows, q) = randmat(&mut rng, n, d);
+        let whole = NativeScorer.expect_fragment(&rows, d, &q);
+        let f1 = NativeScorer.expect_fragment(&rows[..30 * d], d, &q);
+        let f2 = NativeScorer.expect_fragment(&rows[30 * d..70 * d], d, &q);
+        let f3 = NativeScorer.expect_fragment(&rows[70 * d..], d, &q);
+        let (acc, wsum) = merge_expect_fragments(&[f1, f2, f3], d);
+        assert!((acc.logsumexp() - whole.0.logsumexp()).abs() < 1e-9);
+        for j in 0..d {
+            let a = wsum[j] as f64 / acc.sumexp;
+            let b = whole.1[j] as f64 / whole.0.sumexp;
+            assert!((a - b).abs() < 1e-4, "j={j}");
+        }
+    }
+
+    #[test]
+    fn empty_fragment_merge() {
+        let (acc, wsum) = merge_expect_fragments(&[], 3);
+        assert_eq!(acc.count, 0);
+        assert_eq!(wsum, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,210 @@
+//! TCP front-end: JSON-lines protocol over `std::net` (the offline
+//! registry has no tokio; a thread-per-connection accept loop feeding the
+//! coordinator's bounded queue gives the same backpressure semantics).
+//!
+//! Wire format: one JSON object per line, request → response
+//! (see [`crate::coordinator::api`]). `{"op":"shutdown"}` stops the
+//! server (used by tests and the CLI's `--oneshot` mode).
+
+use crate::coordinator::{api::Request, Coordinator, Response};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Blocking JSON-lines server.
+pub struct Server {
+    coordinator: Arc<Coordinator>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `127.0.0.1:7431`; port 0 picks a free port).
+    pub fn bind(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::serve(format!("cannot bind {addr}: {e}")))?;
+        Ok(Server { coordinator, listener, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The actually-bound address.
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(self.listener.local_addr().map_err(Error::Io)?.to_string())
+    }
+
+    /// Serve until a `shutdown` op arrives. Each connection gets its own
+    /// thread; requests within a connection are processed in order.
+    pub fn serve(&self) -> Result<()> {
+        // polling accept so the stop flag is honoured promptly
+        self.listener.set_nonblocking(true).map_err(Error::Io)?;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let coord = self.coordinator.clone();
+                    let stop = self.stop.clone();
+                    conns.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, &coord, &stop);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        Ok(())
+    }
+
+    /// Handle for stopping from another thread.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line.map_err(Error::Io)?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Err(e) => Response::Error { message: format!("bad json: {e}") },
+            Ok(j) => {
+                if j.get("op").and_then(|o| o.as_str().ok()) == Some("shutdown") {
+                    stop.store(true, Ordering::SeqCst);
+                    let msg = Response::Stats { text: "shutting down".into() };
+                    writeln!(writer, "{}", msg.to_json().to_string()).map_err(Error::Io)?;
+                    writer.flush().map_err(Error::Io)?;
+                    return Ok(());
+                }
+                match Request::from_json(&j) {
+                    Err(e) => Response::Error { message: e.to_string() },
+                    Ok(req) => match coord.call(req) {
+                        Ok(resp) => resp,
+                        Err(e) => Response::Error { message: e.to_string() },
+                    },
+                }
+            }
+        };
+        writeln!(writer, "{}", reply.to_json().to_string()).map_err(Error::Io)?;
+        writer.flush().map_err(Error::Io)?;
+    }
+    Ok(())
+}
+
+/// Blocking JSON-lines client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::serve(format!("cannot connect to {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
+        Ok(Client { reader, writer: BufWriter::new(stream) })
+    }
+
+    /// Send one request and wait for the response.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", req.to_json().to_string()).map_err(Error::Io)?;
+        self.writer.flush().map_err(Error::Io)?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).map_err(Error::Io)?;
+        Response::from_json(&Json::parse(&line)?)
+    }
+
+    /// Ask the server to shut down.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        writeln!(self.writer, "{}", r#"{"op":"shutdown"}"#).map_err(Error::Io)?;
+        self.writer.flush().map_err(Error::Io)?;
+        let mut line = String::new();
+        let _ = self.reader.read_line(&mut line);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, IndexKind};
+    use crate::coordinator::Engine;
+    use crate::data;
+    use crate::util::rng::Pcg64;
+
+    fn spawn_server() -> (String, std::thread::JoinHandle<()>, Arc<Engine>) {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.data.n = 1500;
+        cfg.data.d = 8;
+        cfg.index.kind = IndexKind::Ivf;
+        cfg.index.n_clusters = 20;
+        cfg.index.n_probe = 6;
+        cfg.index.kmeans_iters = 3;
+        cfg.index.train_sample = 800;
+        let engine = Arc::new(Engine::from_config(&cfg, None).unwrap());
+        let coord = Arc::new(Coordinator::start(engine.clone(), 2, 16, 9));
+        let server = Server::bind(coord, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            server.serve().unwrap();
+        });
+        (addr, h, engine)
+    }
+
+    #[test]
+    fn client_server_roundtrip() {
+        let (addr, handle, engine) = spawn_server();
+        let mut client = Client::connect(&addr).unwrap();
+        let mut rng = Pcg64::new(1);
+        let theta = data::random_theta(&engine.ds, 0.05, &mut rng);
+
+        match client.call(&Request::Sample { theta: theta.clone(), count: 3 }).unwrap() {
+            Response::Samples { ids, .. } => assert_eq!(ids.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        match client.call(&Request::LogPartition { theta }).unwrap() {
+            Response::LogPartition { log_z, .. } => assert!(log_z.is_finite()),
+            other => panic!("{other:?}"),
+        }
+        // malformed line → error response, connection stays usable
+        match client.call(&Request::Stats).unwrap() {
+            Response::Stats { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        client.shutdown_server().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn bad_json_reported_not_fatal() {
+        let (addr, handle, _engine) = spawn_server();
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writeln!(writer, "this is not json").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"));
+        // still alive:
+        writeln!(writer, "{}", r#"{"op":"stats"}"#).unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"));
+        writeln!(writer, "{}", r#"{"op":"shutdown"}"#).unwrap();
+        writer.flush().unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,197 @@
+//! Mini property-based testing harness (the offline registry has no
+//! proptest/quickcheck).
+//!
+//! [`Checker`] runs a property over many randomized cases and, on failure,
+//! performs *shrinking* for the built-in generator types, reporting the
+//! smallest failing case it can find. It is intentionally small: seeded,
+//! deterministic, and sufficient for the invariant tests this crate needs
+//! (routing/batching/state invariants, estimator bounds, index recall).
+//!
+//! ```no_run
+//! use gmips::util::check::Checker;
+//! Checker::new(123).cases(200).check_vec_f32(64, |xs| {
+//!     let s: f32 = xs.iter().sum();
+//!     // property: sum of absolute values bounds the absolute sum
+//!     s.abs() <= xs.iter().map(|x| x.abs()).sum::<f32>() + 1e-4
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Property-check driver.
+pub struct Checker {
+    seed: u64,
+    cases: usize,
+    max_shrink: usize,
+}
+
+impl Checker {
+    /// New checker with a fixed seed (deterministic).
+    pub fn new(seed: u64) -> Self {
+        Checker { seed, cases: 100, max_shrink: 500 }
+    }
+
+    /// Number of random cases to run.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Check a property over random `Vec<f32>` (standard normal entries,
+    /// random length in `[1, max_len]`). Panics with the shrunk
+    /// counterexample on failure.
+    pub fn check_vec_f32<F>(&self, max_len: usize, prop: F)
+    where
+        F: Fn(&[f32]) -> bool,
+    {
+        let mut rng = Pcg64::new(self.seed);
+        for case in 0..self.cases {
+            let len = 1 + rng.next_below(max_len as u64) as usize;
+            let xs: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            if !prop(&xs) {
+                let shrunk = self.shrink_vec(xs, &prop);
+                panic!(
+                    "property failed (case {case}, seed {}): shrunk counterexample ({} elems): {:?}",
+                    self.seed,
+                    shrunk.len(),
+                    &shrunk[..shrunk.len().min(16)]
+                );
+            }
+        }
+    }
+
+    /// Check a property over `(Vec<f32>, usize)` pairs — vectors plus a
+    /// parameter in `[1, max_param]` (e.g. scores + k).
+    pub fn check_vec_with_param<F>(&self, max_len: usize, max_param: usize, prop: F)
+    where
+        F: Fn(&[f32], usize) -> bool,
+    {
+        let mut rng = Pcg64::new(self.seed);
+        for case in 0..self.cases {
+            let len = 1 + rng.next_below(max_len as u64) as usize;
+            let p = 1 + rng.next_below(max_param as u64) as usize;
+            let xs: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            if !prop(&xs, p) {
+                // shrink vector with fixed param, then shrink param
+                let shrunk = self.shrink_vec(xs, &|v: &[f32]| prop(v, p));
+                let mut sp = p;
+                while sp > 1 && !prop(&shrunk, sp - 1) {
+                    sp -= 1;
+                }
+                panic!(
+                    "property failed (case {case}, seed {}): vec ({} elems) {:?} param {}",
+                    self.seed,
+                    shrunk.len(),
+                    &shrunk[..shrunk.len().min(16)],
+                    sp
+                );
+            }
+        }
+    }
+
+    /// Check a property over random u64s drawn below `bound`.
+    pub fn check_u64<F>(&self, bound: u64, prop: F)
+    where
+        F: Fn(u64) -> bool,
+    {
+        let mut rng = Pcg64::new(self.seed);
+        for case in 0..self.cases {
+            let x = rng.next_below(bound);
+            if !prop(x) {
+                // shrink toward zero by halving
+                let mut cur = x;
+                for _ in 0..self.max_shrink {
+                    let smaller = cur / 2;
+                    if smaller != cur && !prop(smaller) {
+                        cur = smaller;
+                    } else {
+                        break;
+                    }
+                }
+                panic!("property failed (case {case}, seed {}): shrunk x = {cur}", self.seed);
+            }
+        }
+    }
+
+    /// Greedy shrink: try removing halves, then chunks, then zeroing
+    /// elements, keeping any variant that still fails.
+    fn shrink_vec<F>(&self, mut xs: Vec<f32>, prop: &F) -> Vec<f32>
+    where
+        F: Fn(&[f32]) -> bool,
+    {
+        let mut budget = self.max_shrink;
+        // phase 1: structural shrink (drop chunks)
+        let mut chunk = xs.len() / 2;
+        while chunk > 0 && budget > 0 {
+            let mut i = 0;
+            while i + chunk <= xs.len() && budget > 0 {
+                let mut candidate = xs.clone();
+                candidate.drain(i..i + chunk);
+                budget -= 1;
+                if !candidate.is_empty() && !prop(&candidate) {
+                    xs = candidate; // keep failing smaller case
+                } else {
+                    i += chunk;
+                }
+            }
+            chunk /= 2;
+        }
+        // phase 2: value shrink (move entries toward 0)
+        for i in 0..xs.len() {
+            if budget == 0 {
+                break;
+            }
+            for _ in 0..8 {
+                if xs[i] == 0.0 {
+                    break;
+                }
+                let old = xs[i];
+                xs[i] = if old.abs() < 1e-3 { 0.0 } else { old / 2.0 };
+                budget -= 1;
+                if prop(&xs) {
+                    xs[i] = old; // revert: must keep failing
+                    break;
+                }
+            }
+        }
+        xs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_clean() {
+        Checker::new(1).cases(50).check_vec_f32(32, |xs| !xs.is_empty());
+        Checker::new(2).cases(50).check_u64(1000, |x| x < 1000);
+        Checker::new(3).cases(20).check_vec_with_param(16, 8, |xs, p| p >= 1 && !xs.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        Checker::new(4).cases(200).check_vec_f32(64, |xs| xs.len() < 10);
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // capture the panic message and verify the shrunk length is minimal
+        let result = std::panic::catch_unwind(|| {
+            Checker::new(5).cases(100).check_vec_f32(64, |xs| xs.len() < 7);
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("should have failed"),
+        };
+        // the minimal failing case has exactly 7 elements
+        assert!(msg.contains("(7 elems)"), "msg: {msg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn u64_shrinks() {
+        Checker::new(6).cases(100).check_u64(1 << 40, |x| x < 1000);
+    }
+}

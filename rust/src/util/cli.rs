@@ -1,0 +1,170 @@
+//! Tiny CLI argument parser (clap is not in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands (the first positional). Typed accessors with defaults
+//! keep call sites short.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// program name (argv[0])
+    pub program: String,
+    /// `--key value` / `--key=value` options
+    pub options: BTreeMap<String, String>,
+    /// bare `--flag`s
+    pub flags: Vec<String>,
+    /// positionals in order (subcommand is `positional[0]` by convention)
+    pub positional: Vec<String>,
+}
+
+/// Option keys that take a value; everything else starting `--` is a flag.
+/// Parsers need this to disambiguate `--flag positional` from
+/// `--key value`.
+pub struct Spec {
+    value_keys: Vec<&'static str>,
+}
+
+impl Spec {
+    pub fn new(value_keys: &[&'static str]) -> Self {
+        Spec { value_keys: value_keys.to_vec() }
+    }
+
+    /// Parse from an iterator of arguments (excluding argv[0] handling —
+    /// pass the full argv).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
+        let mut it = argv.into_iter();
+        let program = it.next().unwrap_or_default();
+        let mut args = Args { program, ..Default::default() };
+        let mut rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = std::mem::take(&mut rest[i]);
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if self.value_keys.contains(&body) {
+                    i += 1;
+                    let v = rest.get_mut(i).map(std::mem::take).ok_or_else(|| {
+                        Error::Cli(format!("option --{body} expects a value"))
+                    })?;
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    /// Subcommand = first positional.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse::<usize>()
+                .map_err(|_| Error::Cli(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| Error::Cli(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.get_usize(key, default as usize)? as u64)
+    }
+
+    /// Required option.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| Error::Cli(format!("missing required option --{key}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let spec = Spec::new(&["n", "config", "out"]);
+        let a = spec
+            .parse(argv("gmips sample --n 100 --config=conf.toml --verbose extra"))
+            .unwrap();
+        assert_eq!(a.subcommand(), Some("sample"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert_eq!(a.get("config"), Some("conf.toml"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["sample", "extra"]);
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let spec = Spec::new(&["k"]);
+        let a = spec.parse(argv("prog run --k=5")).unwrap();
+        assert_eq!(a.get_usize("k", 1).unwrap(), 5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("alpha", 2.5).unwrap(), 2.5);
+        assert_eq!(a.get_str("name", "x"), "x");
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let spec = Spec::new(&["n"]);
+        assert!(spec.parse(argv("prog cmd --n")).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let spec = Spec::new(&["n"]);
+        let a = spec.parse(argv("prog cmd --n abc")).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn underscore_separators_in_ints() {
+        let spec = Spec::new(&["n"]);
+        let a = spec.parse(argv("prog cmd --n 1_280_000")).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 1_280_000);
+    }
+
+    #[test]
+    fn require_errors() {
+        let spec = Spec::new(&["x"]);
+        let a = spec.parse(argv("prog cmd")).unwrap();
+        assert!(a.require("x").is_err());
+    }
+}

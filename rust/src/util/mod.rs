@@ -1,0 +1,12 @@
+//! Infrastructure substrates built from scratch for the offline
+//! environment: RNG + exact samplers, JSON, CLI parsing, thread pools,
+//! timing/metrics, bounded top-k, and a mini property-testing harness.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timing;
+pub mod topk;

@@ -1,0 +1,250 @@
+//! Data-parallel helpers built on `crossbeam_utils::thread::scope` (the
+//! offline registry ships neither rayon nor tokio).
+//!
+//! [`parallel_chunks`] splits an index range into contiguous chunks, one per
+//! worker, and runs a closure per chunk on scoped threads; results are
+//! returned in chunk order so deterministic reductions are possible.
+//! [`WorkQueue`] is a tiny MPMC work-stealing-free queue used by the
+//! coordinator's worker pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Number of worker threads to use by default: respects
+/// `GMIPS_THREADS` env var, else `available_parallelism`.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("GMIPS_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, start, end)` over `nthreads` contiguous chunks of
+/// `[0, n)` on scoped threads, returning per-chunk results in order.
+///
+/// If `nthreads <= 1` or the range is small, runs inline (no threads).
+pub fn parallel_chunks<T, F>(n: usize, nthreads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+{
+    let nthreads = nthreads.max(1).min(n.max(1));
+    if nthreads == 1 {
+        return vec![f(0, 0, n)];
+    }
+    let chunk = n.div_ceil(nthreads);
+    crossbeam_utils::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(nthreads);
+        for t in 0..nthreads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            let f = &f;
+            handles.push(s.spawn(move |_| f(t, start, end)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+    .unwrap()
+}
+
+/// Atomically-indexed dynamic scheduler: workers repeatedly claim the next
+/// block of `block` indices until `n` is exhausted. Better load balance
+/// than static chunks when per-item cost varies (e.g. IVF probes).
+pub fn parallel_blocks<F>(n: usize, block: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nthreads = nthreads.max(1);
+    if nthreads == 1 || n <= block {
+        let mut s = 0;
+        while s < n {
+            f(s, (s + block).min(n));
+            s += block;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..nthreads {
+            let cursor = &cursor;
+            let f = &f;
+            s.spawn(move |_| loop {
+                let start = cursor.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    return;
+                }
+                f(start, (start + block).min(n));
+            });
+        }
+    })
+    .unwrap();
+}
+
+/// A bounded blocking FIFO queue (MPMC) — the coordinator's submission
+/// queue. `push` blocks when full (backpressure); `pop` blocks when empty;
+/// `close` wakes all waiters and makes subsequent `pop` return `None` once
+/// drained.
+pub struct WorkQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct QueueInner<T> {
+    items: std::collections::VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        WorkQueue {
+            inner: Mutex::new(QueueInner { items: std::collections::VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Blocking push. Returns `false` if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.items.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Non-blocking push. `Err(item)` when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop. `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue; wakes all blocked producers/consumers.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn parallel_chunks_covers_range() {
+        let parts = parallel_chunks(1003, 4, |_, s, e| (s, e));
+        assert_eq!(parts.first().unwrap().0, 0);
+        assert_eq!(parts.last().unwrap().1, 1003);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "chunks must be contiguous");
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_single_thread_inline() {
+        let parts = parallel_chunks(10, 1, |t, s, e| (t, s, e));
+        assert_eq!(parts, vec![(0, 0, 10)]);
+    }
+
+    #[test]
+    fn parallel_chunks_sums_correctly() {
+        let parts = parallel_chunks(10_000, 4, |_, s, e| (s..e).map(|i| i as u64).sum::<u64>());
+        let total: u64 = parts.iter().sum();
+        assert_eq!(total, 9999u64 * 10_000 / 2);
+    }
+
+    #[test]
+    fn parallel_blocks_visits_everything_once() {
+        let n = 5000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_blocks(n, 128, 4, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn queue_fifo_and_close() {
+        let q = WorkQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert!(!q.push(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_backpressure_and_threads() {
+        let q = Arc::new(WorkQueue::new(2));
+        let qc = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                assert!(qc.push(i));
+            }
+            qc.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = q.pop() {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = WorkQueue::new(1);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_err());
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+    }
+}

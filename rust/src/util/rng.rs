@@ -1,0 +1,511 @@
+//! Deterministic pseudo-random number generation and exact samplers.
+//!
+//! The offline crate registry ships no `rand` crate, so gmips carries its
+//! own generator: **PCG64 (XSL-RR 128/64)**, seeded through SplitMix64.
+//! On top of the raw generator we implement every distribution the paper's
+//! algorithms need, all *exact* (no approximate samplers on the hot path):
+//!
+//! * `Uniform(0,1)` with 53-bit mantissas,
+//! * `Gumbel(0,1)` via inverse CDF `G = -ln(-ln U)` (paper Eq. 4–5),
+//! * **truncated Gumbel** `G | G > B` via inverse CDF on the conditioned
+//!   uniform (`U ~ Uniform(exp(-exp(-B)), 1)`), the core of the paper's
+//!   lazy-instantiation trick (Algorithm 1, step 7),
+//! * `Binomial(n, p)` via exact **geometric-skip** counting, `O(np)`
+//!   expected time — ideal here because Algorithm 1/2 always draw
+//!   `m ~ Binomial(n - k, p)` with `np ≈ l = O(√n)`,
+//! * Gaussian via Marsaglia polar (data generators),
+//! * distinct uniform subsets (tail sample `T ⊂ X \ S`).
+
+use rustc_hash::FxHashSet;
+
+/// SplitMix64 — used only to expand user seeds into PCG state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG64 XSL-RR 128/64 generator.
+///
+/// 128-bit LCG state, 64-bit output via xor-shift-low + random rotation.
+/// Passes PractRand/BigCrush per the PCG paper; cheap on 64-bit targets.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// cached second Gaussian from the polar method
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream 0).
+    pub fn new(seed: u64) -> Self {
+        Self::new_stream(seed, 0)
+    }
+
+    /// Create a generator with an explicit stream id. Distinct streams from
+    /// the same seed are independent — used to give each coordinator worker
+    /// its own stream.
+    pub fn new_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm);
+        let s1 = splitmix64(&mut sm);
+        let mut sm2 = stream ^ 0xDEAD_BEEF_CAFE_F00D;
+        let i0 = splitmix64(&mut sm2);
+        let i1 = splitmix64(&mut sm2);
+        let mut rng = Pcg64 {
+            state: ((s0 as u128) << 64) | s1 as u128,
+            // increment must be odd
+            inc: (((i0 as u128) << 64) | i1 as u128) | 1,
+            gauss_spare: None,
+        };
+        // burn-in so low-entropy seeds decorrelate
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with full 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `(0, 1]` — safe as a log argument.
+    #[inline]
+    pub fn next_f64_open0(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= lo.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard Gumbel sample, `G = -ln(-ln U)` (paper Eq. 4–5).
+    #[inline]
+    pub fn gumbel(&mut self) -> f64 {
+        let u = self.next_f64_open0();
+        -(-u.ln()).ln()
+    }
+
+    /// Gumbel conditioned on `G > b`, by inverse CDF on the conditioned
+    /// uniform: `U ~ Uniform(F(b), 1)`, `G = F⁻¹(U)` with
+    /// `F(x) = exp(-exp(-x))` (paper Algorithm 1, lazy tail Gumbels).
+    ///
+    /// Numerically careful form: `-ln(E)` where
+    /// `E ~ Uniform(0, exp(-b))`-ish is handled in log-space so that very
+    /// large `b` (deep truncation) stays finite.
+    #[inline]
+    pub fn gumbel_above(&mut self, b: f64) -> f64 {
+        // F(b) = exp(-exp(-b)); want U in (F(b), 1), G = -ln(-ln U).
+        // Write -ln U = E with E ~ Uniform(0, exp(-b)) in distribution?
+        // Not exactly: if U ~ Unif(F(b),1) then -ln U is NOT uniform, so do
+        // the straightforward inverse transform but guard the endpoints.
+        let fb = (-(-b).exp()).exp(); // F(b) in [0,1)
+        if fb >= 1.0 {
+            // b so large that F(b) rounds to 1: fall back to the asymptotic
+            // exponential-tail representation: G ≈ b - ln(1 - V·...) ≈
+            // b + Exp(1)·e^{-?}. For F(b)→1, (G - b) | G > b converges to
+            // an exponential with rate e^{-b}·e^{...}; in the regime where
+            // f64 saturates (b ≳ 36), P(G>b) < 2e-16 and callers never
+            // take this branch with meaningful probability mass; return b
+            // plus a standard exponential scaled conservatively.
+            return b + self.exponential(1.0);
+        }
+        let u = self.uniform(fb, 1.0).max(fb + f64::EPSILON * fb.max(1e-300));
+        let neg_ln_u = -u.ln(); // in (0, exp(-b))
+        let neg_ln_u = neg_ln_u.max(f64::MIN_POSITIVE);
+        -neg_ln_u.ln()
+    }
+
+    /// Exponential with rate `lambda`.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.next_f64_open0().ln() / lambda
+    }
+
+    /// Standard Gaussian via Marsaglia's polar method (caches the spare).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        loop {
+            let x = 2.0 * self.next_f64() - 1.0;
+            let y = 2.0 * self.next_f64() - 1.0;
+            let s = x * x + y * y;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_spare = Some(y * f);
+                return x * f;
+            }
+        }
+    }
+
+    /// Exact `Binomial(n, p)` via geometric-skip counting.
+    ///
+    /// Expected time `O(np + 1)`: we jump between successes with geometric
+    /// gaps `g = floor(ln U / ln(1-p))`. Exact for all `p ∈ [0,1]`; for
+    /// `p > 1/2` we count failures instead (symmetry) so the bound becomes
+    /// `O(n·min(p,1-p) + 1)`.
+    ///
+    /// This is the sampler behind Algorithms 1 and 2, where
+    /// `m ~ Binomial(n - k, 1 - exp(-exp(-B)))` with success probability
+    /// `≈ l/n`, so expected cost `O(l) = O(√n)`.
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if n == 0 || p <= 0.0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if p > 0.5 {
+            return n - self.binomial(n, 1.0 - p);
+        }
+        let log_q = (1.0 - p).ln_1p_neg(); // ln(1-p), stable for small p
+        let mut count = 0u64;
+        let mut i: u64 = 0;
+        loop {
+            let u = self.next_f64_open0();
+            let skip = (u.ln() / log_q).floor();
+            // skip can exceed u64 range when p is astronomically small
+            if !skip.is_finite() || skip >= (n - i) as f64 {
+                return count;
+            }
+            i += skip as u64 + 1;
+            if i > n {
+                return count;
+            }
+            count += 1;
+            if i == n {
+                return count;
+            }
+        }
+    }
+
+    /// Sample `m` *distinct* indices uniformly from `[0, n)` excluding the
+    /// set `exclude`. Rejection sampling — cheap because in our use
+    /// `m + |exclude| << n` (both are `O(√n)`).
+    ///
+    /// Panics (debug) if `m > n - exclude.len()`.
+    pub fn distinct_excluding(
+        &mut self,
+        n: u64,
+        m: usize,
+        exclude: &FxHashSet<u32>,
+    ) -> Vec<u32> {
+        debug_assert!((m as u64) <= n - exclude.len() as u64);
+        let mut out = Vec::with_capacity(m);
+        let mut seen: FxHashSet<u32> = FxHashSet::default();
+        seen.reserve(m);
+        while out.len() < m {
+            let c = self.next_below(n) as u32;
+            if exclude.contains(&c) || !seen.insert(c) {
+                continue;
+            }
+            out.push(c);
+        }
+        out
+    }
+
+    /// Sample `m` indices uniformly *with replacement* from `[0, n)`
+    /// excluding `exclude` (Algorithm 3/4 sample the tail with
+    /// replacement).
+    pub fn with_replacement_excluding(
+        &mut self,
+        n: u64,
+        m: usize,
+        exclude: &FxHashSet<u32>,
+    ) -> Vec<u32> {
+        let mut out = Vec::with_capacity(m);
+        while out.len() < m {
+            let c = self.next_below(n) as u32;
+            if exclude.contains(&c) {
+                continue;
+            }
+            out.push(c);
+        }
+        out
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Draw an index from explicit (unnormalized, non-negative) weights.
+    /// Linear scan inverse-CDF — used only off the hot path (tests, data
+    /// generators).
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// `ln(1-p)` computed stably; tiny helper trait so the binomial code reads
+/// cleanly.
+trait Ln1pNeg {
+    fn ln_1p_neg(self) -> f64;
+}
+impl Ln1pNeg for f64 {
+    #[inline]
+    fn ln_1p_neg(self) -> f64 {
+        // self is (1 - p); compute ln(self) via ln_1p on (self - 1) = -p
+        (self - 1.0).ln_1p()
+    }
+}
+
+/// Standard Gumbel CDF `F(x) = exp(-exp(-x))`.
+#[inline]
+pub fn gumbel_cdf(x: f64) -> f64 {
+    (-(-x).exp()).exp()
+}
+
+/// Standard Gumbel quantile `F⁻¹(u) = -ln(-ln u)`.
+#[inline]
+pub fn gumbel_quantile(u: f64) -> f64 {
+    -(-u.ln()).ln()
+}
+
+/// Euler–Mascheroni constant (mean of the standard Gumbel).
+pub const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_var(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+        (m, v)
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new_stream(42, 1);
+        let same = (0..100).filter(|_| a.next_u64() == c.next_u64()).count();
+        assert!(same < 3, "streams should not collide");
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut r = Pcg64::new(7);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.next_f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let (m, v) = mean_var(&xs);
+        assert!((m - 0.5).abs() < 5e-3, "mean={m}");
+        assert!((v - 1.0 / 12.0).abs() < 5e-3, "var={v}");
+    }
+
+    #[test]
+    fn next_below_unbiased() {
+        let mut r = Pcg64::new(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gumbel_moments() {
+        // mean = γ ≈ 0.5772, var = π²/6 ≈ 1.6449
+        let mut r = Pcg64::new(11);
+        let xs: Vec<f64> = (0..400_000).map(|_| r.gumbel()).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - EULER_GAMMA).abs() < 1e-2, "mean={m}");
+        assert!((v - std::f64::consts::PI.powi(2) / 6.0).abs() < 3e-2, "var={v}");
+    }
+
+    #[test]
+    fn truncated_gumbel_matches_rejection() {
+        // Compare gumbel_above(b) against brute-force rejection sampling.
+        let mut r = Pcg64::new(13);
+        for &b in &[-1.0, 0.0, 1.5, 3.0] {
+            let fast: Vec<f64> = (0..60_000).map(|_| r.gumbel_above(b)).collect();
+            assert!(fast.iter().all(|&g| g > b), "b={b}");
+            let mut rej = Vec::with_capacity(60_000);
+            while rej.len() < 60_000 {
+                let g = r.gumbel();
+                if g > b {
+                    rej.push(g);
+                }
+            }
+            let (mf, vf) = mean_var(&fast);
+            let (mr, vr) = mean_var(&rej);
+            assert!((mf - mr).abs() < 0.03, "b={b} mf={mf} mr={mr}");
+            assert!((vf - vr).abs() < 0.08, "b={b} vf={vf} vr={vr}");
+        }
+    }
+
+    #[test]
+    fn gumbel_above_extreme_threshold_finite() {
+        let mut r = Pcg64::new(17);
+        for &b in &[20.0, 40.0, 100.0] {
+            let g = r.gumbel_above(b);
+            assert!(g.is_finite() && g > b);
+        }
+    }
+
+    #[test]
+    fn binomial_moments_small_p() {
+        let mut r = Pcg64::new(19);
+        let (n, p) = (1_000_000u64, 2e-4);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.binomial(n, p) as f64).collect();
+        let (m, v) = mean_var(&xs);
+        let (em, ev) = (n as f64 * p, n as f64 * p * (1.0 - p));
+        assert!((m - em).abs() < 0.35, "m={m} want {em}");
+        assert!((v - ev).abs() < ev * 0.06, "v={v} want {ev}");
+    }
+
+    #[test]
+    fn binomial_edge_cases() {
+        let mut r = Pcg64::new(23);
+        assert_eq!(r.binomial(0, 0.5), 0);
+        assert_eq!(r.binomial(10, 0.0), 0);
+        assert_eq!(r.binomial(10, 1.0), 10);
+        // p > 1/2 symmetry path
+        let xs: Vec<f64> = (0..30_000).map(|_| r.binomial(20, 0.9) as f64).collect();
+        let (m, _) = mean_var(&xs);
+        assert!((m - 18.0).abs() < 0.1, "m={m}");
+        // all results within range
+        for _ in 0..1000 {
+            let b = r.binomial(5, 0.3);
+            assert!(b <= 5);
+        }
+    }
+
+    #[test]
+    fn binomial_matches_bernoulli_reference() {
+        // chi-square-ish check against direct Bernoulli summation
+        let mut r = Pcg64::new(29);
+        let (n, p) = (50u64, 0.13);
+        let mut hist_fast = [0f64; 51];
+        let mut hist_ref = [0f64; 51];
+        for _ in 0..40_000 {
+            hist_fast[r.binomial(n, p) as usize] += 1.0;
+            let direct = (0..n).filter(|_| r.next_f64() < p).count();
+            hist_ref[direct] += 1.0;
+        }
+        for i in 0..20 {
+            let (a, b) = (hist_fast[i], hist_ref[i]);
+            if a + b > 200.0 {
+                assert!(
+                    (a - b).abs() / (a + b).sqrt() < 4.5,
+                    "bin {i}: fast={a} ref={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_excluding_properties() {
+        let mut r = Pcg64::new(31);
+        let exclude: FxHashSet<u32> = (0..50u32).collect();
+        let s = r.distinct_excluding(1000, 100, &exclude);
+        assert_eq!(s.len(), 100);
+        let uniq: FxHashSet<u32> = s.iter().copied().collect();
+        assert_eq!(uniq.len(), 100, "must be distinct");
+        assert!(s.iter().all(|&i| i >= 50 && i < 1000));
+    }
+
+    #[test]
+    fn with_replacement_excluding_properties() {
+        let mut r = Pcg64::new(37);
+        let exclude: FxHashSet<u32> = [3u32, 4, 5].into_iter().collect();
+        let s = r.with_replacement_excluding(10, 5000, &exclude);
+        assert_eq!(s.len(), 5000);
+        assert!(s.iter().all(|&i| i < 10 && !exclude.contains(&i)));
+        // all 7 allowed values should appear
+        let uniq: FxHashSet<u32> = s.iter().copied().collect();
+        assert_eq!(uniq.len(), 7);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(41);
+        let xs: Vec<f64> = (0..400_000).map(|_| r.gaussian()).collect();
+        let (m, v) = mean_var(&xs);
+        assert!(m.abs() < 8e-3, "m={m}");
+        assert!((v - 1.0).abs() < 1.5e-2, "v={v}");
+    }
+
+    #[test]
+    fn categorical_follows_weights() {
+        let mut r = Pcg64::new(43);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0f64; 3];
+        for _ in 0..100_000 {
+            counts[r.categorical(&w)] += 1.0;
+        }
+        assert!((counts[2] / 100_000.0 - 0.7).abs() < 0.01);
+        assert!((counts[1] / 100_000.0 - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(47);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn cdf_quantile_roundtrip() {
+        for &u in &[0.01, 0.3, 0.5, 0.9, 0.999] {
+            let x = gumbel_quantile(u);
+            assert!((gumbel_cdf(x) - u).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Small statistics helpers shared by tests and evaluation drivers:
+//! chi-square goodness-of-fit, empirical distribution comparisons, and
+//! summary moments.
+
+/// Chi-square statistic of observed counts vs expected probabilities,
+/// pooling bins with expected count < `min_expected`. Returns
+/// `(chi2, dof)`.
+pub fn chi_square(counts: &[u64], probs: &[f64], total: u64, min_expected: f64) -> (f64, f64) {
+    assert_eq!(counts.len(), probs.len());
+    let mut chi2 = 0f64;
+    let mut dof = 0f64;
+    let mut pool_obs = 0f64;
+    let mut pool_exp = 0f64;
+    for (c, p) in counts.iter().zip(probs) {
+        let e = p * total as f64;
+        if e >= min_expected {
+            chi2 += (*c as f64 - e).powi(2) / e;
+            dof += 1.0;
+        } else {
+            pool_obs += *c as f64;
+            pool_exp += e;
+        }
+    }
+    if pool_exp >= min_expected {
+        chi2 += (pool_obs - pool_exp).powi(2) / pool_exp;
+        dof += 1.0;
+    }
+    (chi2, (dof - 1.0).max(1.0))
+}
+
+/// Quick goodness-of-fit acceptance: chi2 within `sigmas` standard
+/// deviations of its mean under H0 (chi2 ≈ dof ± √(2·dof)).
+pub fn gof_ok(counts: &[u64], probs: &[f64], total: u64, sigmas: f64) -> bool {
+    let (chi2, dof) = chi_square(counts, probs, total, 5.0);
+    chi2 < dof + sigmas * (2.0 * dof).sqrt()
+}
+
+/// Empirical total variation distance between two count histograms.
+pub fn tv_distance(a: &[u64], b: &[u64]) -> f64 {
+    let sa: f64 = a.iter().map(|&x| x as f64).sum();
+    let sb: f64 = b.iter().map(|&x| x as f64).sum();
+    if sa == 0.0 || sb == 0.0 {
+        return 1.0;
+    }
+    0.5 * a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 / sa - y as f64 / sb).abs())
+        .sum::<f64>()
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let m = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (m, 0.0);
+    }
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1.0);
+    (m, v.sqrt())
+}
+
+/// Relative error `|got − want| / |want|`.
+pub fn rel_err(got: f64, want: f64) -> f64 {
+    if want == 0.0 {
+        return got.abs();
+    }
+    (got - want).abs() / want.abs()
+}
+
+/// Overlap fraction of the top-`k` ids of two count histograms — the
+/// paper's random-walk metric (§4.2.2: "share 73.6% of the top 1000
+/// elements").
+pub fn topk_overlap(a: &[u64], b: &[u64], k: usize) -> f64 {
+    let top_ids = |h: &[u64]| -> rustc_hash::FxHashSet<usize> {
+        let mut idx: Vec<usize> = (0..h.len()).collect();
+        idx.sort_unstable_by(|&x, &y| h[y].cmp(&h[x]).then(x.cmp(&y)));
+        idx.into_iter().take(k).collect()
+    };
+    let ta = top_ids(a);
+    let tb = top_ids(b);
+    if k == 0 {
+        return 1.0;
+    }
+    ta.intersection(&tb).count() as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn chi_square_accepts_true_distribution() {
+        let mut rng = Pcg64::new(1);
+        let probs = vec![0.5, 0.3, 0.15, 0.05];
+        let total = 10_000u64;
+        let mut counts = vec![0u64; 4];
+        for _ in 0..total {
+            counts[rng.categorical(&probs)] += 1;
+        }
+        assert!(gof_ok(&counts, &probs, total, 5.0));
+    }
+
+    #[test]
+    fn chi_square_rejects_wrong_distribution() {
+        let probs = vec![0.5, 0.3, 0.15, 0.05];
+        let counts = vec![2500u64, 2500, 2500, 2500];
+        assert!(!gof_ok(&counts, &probs, 10_000, 5.0));
+    }
+
+    #[test]
+    fn tv_identical_zero() {
+        let a = vec![10u64, 20, 30];
+        assert_eq!(tv_distance(&a, &a), 0.0);
+        let b = vec![60u64, 0, 0];
+        assert!(tv_distance(&a, &b) > 0.5);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn topk_overlap_bounds() {
+        let a = vec![5u64, 4, 3, 2, 1];
+        let b = vec![1u64, 2, 3, 4, 5];
+        assert_eq!(topk_overlap(&a, &a, 3), 1.0);
+        let o = topk_overlap(&a, &b, 2);
+        assert!(o < 0.6);
+    }
+
+    #[test]
+    fn rel_err_zero_want() {
+        assert_eq!(rel_err(0.5, 0.0), 0.5);
+        assert_eq!(rel_err(2.0, 4.0), 0.5);
+    }
+}

@@ -1,0 +1,341 @@
+//! Timers, latency histograms, and throughput counters for the coordinator
+//! metrics and the bench harness (the offline registry ships no criterion,
+//! so benches use [`Bench`] below).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn micros(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e6
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Log-bucketed latency histogram (thread-safe, lock-free record path).
+///
+/// Buckets are powers of √2 over microseconds, covering ~1µs … ~74s in 52
+/// buckets. Quantile queries are approximate to bucket resolution (≤ ~41%
+/// relative error worst case, far tighter in practice) — adequate for
+/// p50/p95/p99 service metrics.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+const NBUCKETS: usize = 52;
+
+fn bucket_of(micros: f64) -> usize {
+    if micros <= 1.0 {
+        return 0;
+    }
+    // log base sqrt(2)
+    let b = (micros.ln() / std::f64::consts::LN_2 * 2.0).floor() as isize;
+    (b.max(0) as usize).min(NBUCKETS - 1)
+}
+
+fn bucket_upper(i: usize) -> f64 {
+    // upper edge of bucket i in micros
+    (2.0f64).powf((i as f64 + 1.0) / 2.0)
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+            max_micros: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in microseconds.
+    pub fn record(&self, micros: f64) {
+        let b = bucket_of(micros);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros as u64, Ordering::Relaxed);
+        self.max_micros.fetch_max(micros as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_micros.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_micros.load(Ordering::Relaxed) as f64
+    }
+
+    /// Approximate quantile (`q` in [0,1]) in microseconds.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target.max(1) {
+                return bucket_upper(i);
+            }
+        }
+        self.max()
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+            self.count(),
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+/// Result of a benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    /// mean wall time per iteration, seconds
+    pub mean_s: f64,
+    /// sample standard deviation of per-batch means, seconds
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+    /// Pretty unit-scaled mean.
+    pub fn human(&self) -> String {
+        let s = self.mean_s;
+        if s < 1e-6 {
+            format!("{:.1} ns", s * 1e9)
+        } else if s < 1e-3 {
+            format!("{:.2} µs", s * 1e6)
+        } else if s < 1.0 {
+            format!("{:.3} ms", s * 1e3)
+        } else {
+            format!("{:.3} s", s)
+        }
+    }
+}
+
+/// Minimal benchmark harness (criterion stand-in).
+///
+/// Warms up, then runs timed batches until `budget` wall time or
+/// `max_batches` is reached; reports mean/std/min/max of per-iteration time.
+pub struct Bench {
+    /// total measurement budget
+    pub budget: Duration,
+    /// warmup time before measurement
+    pub warmup: Duration,
+    /// max measured batches
+    pub max_batches: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { budget: Duration::from_secs(2), warmup: Duration::from_millis(200), max_batches: 64 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { budget: Duration::from_millis(500), warmup: Duration::from_millis(50), max_batches: 16 }
+    }
+
+    /// Measure `f`, which performs ONE iteration of the workload per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        // warmup + calibrate batch size
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            cal_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / cal_iters.max(1) as f64;
+        // aim for ~batches of >= 10ms or 1 iter, whichever larger
+        let batch = ((0.01 / per_iter).ceil() as u64).max(1);
+
+        let mut means = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget && means.len() < self.max_batches {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            means.push(t.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+        }
+        let n = means.len() as f64;
+        let mean = means.iter().sum::<f64>() / n;
+        let var = means.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>() / n.max(2.0);
+        BenchStats {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: means.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: means.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+/// Render rows of `(label, cells...)` as an aligned ASCII table — the
+/// output format of every eval/bench driver.
+pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push('|');
+    for w in &widths {
+        out.push_str(&"-".repeat(w + 2));
+        out.push('|');
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write rows as CSV into `results/<name>.csv` (creating the directory).
+pub fn write_csv(name: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<String> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.csv");
+    let mut s = headers.join(",");
+    s.push('\n');
+    for r in rows {
+        s.push_str(&r.join(","));
+        s.push('\n');
+    }
+    std::fs::write(&path, s)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // within bucket resolution of true values
+        assert!(p50 > 250.0 && p50 < 1000.0, "p50={p50}");
+        assert!((h.mean() - 500.0).abs() < 5.0);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        let mut last = 0;
+        for &us in &[1.0, 2.0, 5.0, 10.0, 100.0, 1e4, 1e6] {
+            let b = bucket_of(us);
+            assert!(b >= last);
+            last = b;
+        }
+        assert!(bucket_of(1e12) < NBUCKETS);
+    }
+
+    #[test]
+    fn bench_measures_sleep() {
+        let b = Bench { budget: Duration::from_millis(200), warmup: Duration::from_millis(20), max_batches: 8 };
+        let stats = b.run("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(stats.mean_s > 0.0);
+        assert!(stats.iters > 0);
+        assert!(!stats.human().is_empty());
+    }
+
+    #[test]
+    fn ascii_table_alignment() {
+        let t = ascii_table(
+            &["name", "value"],
+            &[vec!["a".into(), "1".into()], vec!["long-name".into(), "2.5".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[2].starts_with("| a"));
+    }
+}

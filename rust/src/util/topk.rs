@@ -1,0 +1,244 @@
+//! Bounded top-k collection — the score-selection primitive behind every
+//! MIPS scan.
+//!
+//! [`TopK`] is a fixed-capacity min-heap over `(score, id)` pairs: pushing
+//! is `O(log k)` only when the candidate beats the current k-th best, and a
+//! cheap `O(1)` threshold rejection otherwise. On the brute/IVF scan hot
+//! path the overwhelming majority of candidates fail the threshold test, so
+//! amortized cost per candidate is a single compare.
+
+/// A scored element.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scored {
+    pub id: u32,
+    pub score: f32,
+}
+
+/// Fixed-capacity top-k collector (largest scores win).
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    /// min-heap on score: `heap[0]` is the *worst* retained element.
+    heap: Vec<Scored>,
+}
+
+impl TopK {
+    /// Create a collector retaining the `k` largest-scored elements.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        TopK { k, heap: Vec::with_capacity(k) }
+    }
+
+    /// Current admission threshold: a candidate must strictly beat this to
+    /// enter once the collector is full. `-inf` while not full.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::NEG_INFINITY
+        } else {
+            self.heap[0].score
+        }
+    }
+
+    /// Number of retained elements (`<= k`).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing has been pushed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer a candidate. Ties are broken toward smaller ids so the
+    /// retained set is deterministic regardless of push order.
+    #[inline]
+    pub fn push(&mut self, id: u32, score: f32) {
+        if self.heap.len() < self.k {
+            self.heap.push(Scored { id, score });
+            self.sift_up(self.heap.len() - 1);
+        } else {
+            let worst = self.heap[0];
+            if score > worst.score || (score == worst.score && id < worst.id) {
+                self.heap[0] = Scored { id, score };
+                self.sift_down(0);
+            }
+        }
+    }
+
+    /// Offer a whole block of contiguous ids `[base, base + scores.len())`.
+    /// This is the form the scorer backends produce.
+    pub fn push_block(&mut self, base: u32, scores: &[f32]) {
+        let mut thr = self.threshold();
+        for (j, &s) in scores.iter().enumerate() {
+            // >= so score ties are offered to push(), which tie-breaks by id
+            if s >= thr || self.heap.len() < self.k {
+                self.push(base + j as u32, s);
+                thr = self.threshold();
+            }
+        }
+    }
+
+    /// Offer a block of scores for explicit (gathered) ids.
+    pub fn push_ids(&mut self, ids: &[u32], scores: &[f32]) {
+        debug_assert_eq!(ids.len(), scores.len());
+        let mut thr = self.threshold();
+        for (&id, &s) in ids.iter().zip(scores) {
+            if s >= thr || self.heap.len() < self.k {
+                self.push(id, s);
+                thr = self.threshold();
+            }
+        }
+    }
+
+    /// Consume the collector, returning elements sorted by descending score
+    /// (ties broken by ascending id for determinism).
+    pub fn into_sorted(mut self) -> Vec<Scored> {
+        self.heap.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        self.heap
+    }
+
+    /// Clear retained elements, keeping capacity (scratch reuse).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    /// Heap order: `a` is worse than `b` if it has a lower score, or an
+    /// equal score with a larger id (so ties evict the largest id first).
+    #[inline]
+    fn worse(a: Scored, b: Scored) -> bool {
+        a.score < b.score || (a.score == b.score && a.id > b.id)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::worse(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && Self::worse(self.heap[l], self.heap[smallest]) {
+                smallest = l;
+            }
+            if r < n && Self::worse(self.heap[r], self.heap[smallest]) {
+                smallest = r;
+            }
+            if smallest == i {
+                return;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+}
+
+/// Exact top-k by full sort — the reference implementation used in tests
+/// and for small inputs.
+pub fn topk_reference(scores: &[f32], k: usize) -> Vec<Scored> {
+    let mut all: Vec<Scored> = scores
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| Scored { id: i as u32, score: s })
+        .collect();
+    all.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    all.truncate(k);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matches_reference_on_random_inputs() {
+        let mut rng = Pcg64::new(5);
+        for trial in 0..50 {
+            let n = 1 + (rng.next_below(2000) as usize);
+            let k = 1 + (rng.next_below(64) as usize);
+            let scores: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+            let mut tk = TopK::new(k);
+            tk.push_block(0, &scores);
+            let got = tk.into_sorted();
+            let want = topk_reference(&scores, k);
+            assert_eq!(got.len(), want.len(), "trial {trial}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.score, w.score, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_semantics() {
+        let mut tk = TopK::new(2);
+        assert_eq!(tk.threshold(), f32::NEG_INFINITY);
+        tk.push(0, 1.0);
+        tk.push(1, 3.0);
+        assert_eq!(tk.threshold(), 1.0);
+        tk.push(2, 2.0); // evicts 1.0
+        assert_eq!(tk.threshold(), 2.0);
+        tk.push(3, 0.5); // rejected
+        let out = tk.into_sorted();
+        assert_eq!(out[0].score, 3.0);
+        assert_eq!(out[1].score, 2.0);
+    }
+
+    #[test]
+    fn fewer_than_k_elements() {
+        let mut tk = TopK::new(10);
+        tk.push_block(100, &[1.0, 2.0]);
+        let out = tk.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].id, 101);
+    }
+
+    #[test]
+    fn push_ids_gathers() {
+        let mut tk = TopK::new(2);
+        tk.push_ids(&[7, 3, 9], &[0.5, 2.0, 1.0]);
+        let out = tk.into_sorted();
+        assert_eq!(out[0].id, 3);
+        assert_eq!(out[1].id, 9);
+    }
+
+    #[test]
+    fn deterministic_tiebreak() {
+        let mut tk = TopK::new(3);
+        tk.push_ids(&[5, 1, 9, 2], &[1.0, 1.0, 1.0, 1.0]);
+        let out = tk.into_sorted();
+        let ids: Vec<u32> = out.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn clear_reuses() {
+        let mut tk = TopK::new(4);
+        tk.push_block(0, &[1.0, 2.0, 3.0]);
+        tk.clear();
+        assert!(tk.is_empty());
+        tk.push_block(0, &[5.0]);
+        assert_eq!(tk.into_sorted()[0].score, 5.0);
+    }
+}

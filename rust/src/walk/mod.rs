@@ -1,0 +1,210 @@
+//! Random walk over the dataset (paper §4.2.2).
+//!
+//! Markov chain with transition
+//! `Pr(X_{t+1} = i | X_t = j) ∝ exp(τ⁻¹-scaled φ(x_i)·φ(x_j))` — a
+//! PageRank-flavored diffusion where each step is one log-linear sampling
+//! query whose parameter is the current state's feature vector. The MIPS
+//! structure is reused across all steps while the naive sampler gets no
+//! caching (storing all n×n transition rows would be terabytes — the
+//! paper's motivation for this experiment).
+//!
+//! Quality metric: overlap of the top-1000 most-visited states between
+//! chains (between-chain vs within-chain windows).
+
+use crate::data::Dataset;
+use crate::linalg;
+use crate::sampler::Sampler;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use std::sync::Arc;
+
+/// Result of one chain run.
+#[derive(Clone, Debug)]
+pub struct WalkResult {
+    /// visit counts per state
+    pub visits: Vec<u64>,
+    /// number of steps taken
+    pub steps: usize,
+    /// total rows scanned by the sampler (work metric)
+    pub scanned: u64,
+    /// lazily-sampled tail Gumbels (work metric; 0 for exact)
+    pub tail_m: u64,
+}
+
+impl WalkResult {
+    /// Visit counts of the first/second half windows — the paper's
+    /// within-chain stability measure.
+    pub fn half_windows(&self, trace: &[u32]) -> (Vec<u64>, Vec<u64>) {
+        let n = self.visits.len();
+        let mid = trace.len() / 2;
+        let mut a = vec![0u64; n];
+        let mut b = vec![0u64; n];
+        for &s in &trace[..mid] {
+            a[s as usize] += 1;
+        }
+        for &s in &trace[mid..] {
+            b[s as usize] += 1;
+        }
+        (a, b)
+    }
+}
+
+/// Random-walk driver over any [`Sampler`].
+pub struct RandomWalk {
+    ds: Arc<Dataset>,
+    /// inverse temperature folded into the per-step query: q = φ(x_t)/τ
+    pub inv_temperature: f32,
+}
+
+impl RandomWalk {
+    pub fn new(ds: Arc<Dataset>, temperature: f64) -> Self {
+        RandomWalk { ds, inv_temperature: (1.0 / temperature) as f32 }
+    }
+
+    /// Run `steps` transitions with the given sampler, returning visit
+    /// counts and the full trace.
+    pub fn run(
+        &self,
+        sampler: &dyn Sampler,
+        steps: usize,
+        rng: &mut Pcg64,
+    ) -> (WalkResult, Vec<u32>) {
+        let n = self.ds.n;
+        let mut visits = vec![0u64; n];
+        let mut trace = Vec::with_capacity(steps);
+        let mut state = rng.next_below(n as u64) as u32;
+        let mut scanned = 0u64;
+        let mut tail_m = 0u64;
+        let mut q = vec![0f32; self.ds.d];
+        for _ in 0..steps {
+            q.copy_from_slice(self.ds.row(state as usize));
+            linalg::scale(&mut q, self.inv_temperature);
+            let out = sampler.sample(&q, rng);
+            state = out.id;
+            visits[state as usize] += 1;
+            trace.push(state);
+            scanned += out.work.scanned as u64;
+            tail_m += out.work.m as u64;
+        }
+        (WalkResult { visits, steps, scanned, tail_m }, trace)
+    }
+
+    /// The paper's §4.2.2 comparison: run an exact chain and an
+    /// approximate chain, report (between-chain, within-exact,
+    /// within-approx) top-k overlaps.
+    pub fn compare(
+        &self,
+        exact: &dyn Sampler,
+        approx: &dyn Sampler,
+        steps: usize,
+        top: usize,
+        seed: u64,
+    ) -> WalkComparison {
+        let mut rng_a = Pcg64::new_stream(seed, 1);
+        let mut rng_b = Pcg64::new_stream(seed, 2);
+        let (res_exact, trace_e) = self.run(exact, steps, &mut rng_a);
+        let (res_approx, trace_a) = self.run(approx, steps, &mut rng_b);
+        let between = stats::topk_overlap(&res_exact.visits, &res_approx.visits, top);
+        let (e1, e2) = res_exact.half_windows(&trace_e);
+        let (a1, a2) = res_approx.half_windows(&trace_a);
+        WalkComparison {
+            between_chain: between,
+            within_exact: stats::topk_overlap(&e1, &e2, top),
+            within_approx: stats::topk_overlap(&a1, &a2, top),
+            exact_scanned: res_exact.scanned,
+            approx_scanned: res_approx.scanned,
+            steps,
+            top,
+        }
+    }
+}
+
+/// §4.2.2 summary numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct WalkComparison {
+    /// top-k overlap between the exact and approximate chains
+    /// (paper: 73.6%)
+    pub between_chain: f64,
+    /// top-k overlap between two windows of the exact chain (69.3%)
+    pub within_exact: f64,
+    /// …and of the approximate chain (72.9%)
+    pub within_approx: f64,
+    pub exact_scanned: u64,
+    pub approx_scanned: u64,
+    pub steps: usize,
+    pub top: usize,
+}
+
+impl WalkComparison {
+    /// The paper's acceptance criterion: between-chain differences are
+    /// comparable to within-chain differences (finite-sample noise), i.e.
+    /// the approximate chain has the same stationary behaviour.
+    pub fn chains_equivalent(&self, slack: f64) -> bool {
+        let within_floor = self.within_exact.min(self.within_approx);
+        self.between_chain >= within_floor - slack
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::mips::brute::BruteForce;
+    use crate::sampler::exact::ExactSampler;
+    use crate::sampler::lazy_gumbel::LazyGumbelSampler;
+    use crate::scorer::{NativeScorer, ScoreBackend};
+
+    fn setup(n: usize, seed: u64) -> (Arc<Dataset>, Arc<dyn ScoreBackend>) {
+        let ds = Arc::new(synth::imagenet_like(n, 8, 10, 0.3, seed));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        (ds, backend)
+    }
+
+    #[test]
+    fn chain_visits_count_correctly() {
+        let (ds, backend) = setup(400, 1);
+        let sampler = ExactSampler::new(ds.clone(), backend);
+        let walk = RandomWalk::new(ds, 0.2);
+        let mut rng = Pcg64::new(2);
+        let (res, trace) = walk.run(&sampler, 500, &mut rng);
+        assert_eq!(res.steps, 500);
+        assert_eq!(trace.len(), 500);
+        assert_eq!(res.visits.iter().sum::<u64>(), 500);
+        assert_eq!(res.scanned, 500 * 400);
+    }
+
+    #[test]
+    fn exact_vs_lazy_chains_equivalent() {
+        // the paper's §4.2.2 conclusion, at test scale
+        let (ds, backend) = setup(400, 3);
+        let index = Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+        let exact = ExactSampler::new(ds.clone(), backend.clone());
+        let lazy = LazyGumbelSampler::new(ds.clone(), index, backend.clone(), 60, 0.0);
+        let walk = RandomWalk::new(ds, 0.2);
+        let cmp = walk.compare(&exact, &lazy, 8_000, 40, 7);
+        // between-chain overlap is finite-sample noisy; the paper's
+        // criterion is *relative*: between ≈ within (chains_equivalent)
+        assert!(cmp.between_chain > 0.1, "between {}", cmp.between_chain);
+        assert!(
+            cmp.chains_equivalent(0.15),
+            "between {} within ({}, {})",
+            cmp.between_chain,
+            cmp.within_exact,
+            cmp.within_approx
+        );
+    }
+
+    #[test]
+    fn half_windows_partition_trace() {
+        let (ds, backend) = setup(100, 5);
+        let sampler = ExactSampler::new(ds.clone(), backend);
+        let walk = RandomWalk::new(ds, 0.3);
+        let mut rng = Pcg64::new(6);
+        let (res, trace) = walk.run(&sampler, 200, &mut rng);
+        let (a, b) = res.half_windows(&trace);
+        assert_eq!(a.iter().sum::<u64>(), 100);
+        assert_eq!(b.iter().sum::<u64>(), 100);
+    }
+
+    use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,126 @@
+//! End-to-end acceptance: the full service loop (config → data → index →
+//! coordinator → TCP server → client) under a mixed workload, plus the
+//! learning pipeline, at test scale.
+
+use gmips::config::{Config, IndexKind};
+use gmips::coordinator::{Coordinator, Engine, Request, Response};
+use gmips::data;
+use gmips::learner::{GradMethod, Learner};
+use gmips::server::{Client, Server};
+use gmips::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn tiny_cfg() -> Config {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.data.n = 4_000;
+    cfg.data.d = 16;
+    cfg.index.kind = IndexKind::Ivf;
+    cfg.index.n_clusters = 50;
+    cfg.index.n_probe = 12;
+    cfg.index.kmeans_iters = 4;
+    cfg.index.train_sample = 2_000;
+    cfg
+}
+
+#[test]
+fn full_service_loop_mixed_workload() {
+    let cfg = tiny_cfg();
+    let engine = Arc::new(Engine::from_config(&cfg, None).unwrap());
+    let ds = engine.ds.clone();
+    let coord = Arc::new(Coordinator::start(engine.clone(), 2, 32, 1));
+    let server = Server::bind(coord, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.serve().unwrap());
+
+    // two concurrent clients issuing interleaved ops
+    let mut handles = Vec::new();
+    for c in 0..2u64 {
+        let addr = addr.clone();
+        let ds = ds.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut rng = Pcg64::new_stream(7, c);
+            for _ in 0..10 {
+                let theta = data::random_theta(&ds, 0.05, &mut rng);
+                match client.call(&Request::Sample { theta: theta.clone(), count: 2 }).unwrap() {
+                    Response::Samples { ids, .. } => assert_eq!(ids.len(), 2),
+                    other => panic!("{other:?}"),
+                }
+                match client.call(&Request::TopK { theta: theta.clone(), k: 5 }).unwrap() {
+                    Response::TopK { ids, scores } => {
+                        assert_eq!(ids.len(), 5);
+                        assert!(scores.windows(2).all(|w| w[0] >= w[1]));
+                    }
+                    other => panic!("{other:?}"),
+                }
+                match client.call(&Request::ExpectFeatures { theta }).unwrap() {
+                    Response::Features { mean, log_z } => {
+                        assert_eq!(mean.len(), ds.d);
+                        assert!(log_z.is_finite());
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // engine metrics observed all that traffic
+    assert!(engine.metrics.sample.count() >= 20);
+    assert!(engine.metrics.topk.count() >= 20);
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.shutdown_server().unwrap();
+    handle.join().unwrap();
+}
+
+#[test]
+fn learning_pipeline_end_to_end() {
+    let mut cfg = tiny_cfg();
+    cfg.learn.iters = 120;
+    cfg.learn.eval_every = 40;
+    cfg.learn.lr = 6.0;
+    cfg.learn.lr_halve_every = 50;
+    cfg.learn.train_size = 10;
+    cfg.learn.k_mult = 5.0;
+    cfg.learn.l_ratio = 5.0;
+    let ds = Arc::new(data::generate(&cfg.data));
+    let backend: Arc<dyn gmips::scorer::ScoreBackend> = Arc::new(gmips::scorer::NativeScorer);
+    let index = gmips::mips::build_index(&ds, &cfg.index, backend.clone()).unwrap();
+    let learner = Learner::new(ds, index, backend, cfg.learn.clone()).unwrap();
+    let mut rng = Pcg64::new(2);
+    let res = learner.train(GradMethod::Amortized, &mut rng);
+    // learning must actually learn: the coherent subset becomes far more
+    // likely than uniform
+    let uniform_ll = -(cfg.data.n as f64).ln();
+    assert!(
+        res.final_ll > uniform_ll + 1.0,
+        "LL {} should beat uniform {}",
+        res.final_ll,
+        uniform_ll
+    );
+    // curve is monotone-ish: final >= first point
+    assert!(res.final_ll >= res.curve[0].log_likelihood);
+}
+
+#[test]
+fn config_roundtrip_through_files() {
+    // config file → engine → behaviour: k scales with k_mult
+    let dir = std::env::temp_dir().join(format!("gmips_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("test.toml");
+    std::fs::write(
+        &path,
+        "[data]\nn = 3000\nd = 8\n[sampler]\nk_mult = 2.0\n[index]\nkind = \"brute\"\n",
+    )
+    .unwrap();
+    let mut cfg = Config::default();
+    let doc = gmips::config::toml::TomlDoc::load(path.to_str().unwrap()).unwrap();
+    cfg.apply_toml(&doc).unwrap();
+    assert_eq!(cfg.data.n, 3000);
+    assert_eq!(cfg.sampler_k(), (2.0 * (3000f64).sqrt()).round() as usize);
+    let engine = Engine::from_config(&cfg, None).unwrap();
+    assert_eq!(engine.sampler.k, cfg.sampler_k());
+    std::fs::remove_dir_all(&dir).ok();
+}

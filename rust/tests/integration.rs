@@ -1,0 +1,202 @@
+//! Cross-layer integration: AOT artifacts (L1 Pallas + L2 JAX → HLO text)
+//! executed through the PJRT runtime must agree numerically with the
+//! native Rust backend, and compose correctly under the samplers,
+//! estimators, coordinator, and server.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+
+use gmips::config::{Config, IndexKind};
+use gmips::coordinator::{Coordinator, Engine, Request, Response};
+use gmips::data::{self, Dataset};
+use gmips::estimator::partition::{exact_log_partition, PartitionEstimator};
+use gmips::linalg;
+use gmips::mips::{self, brute::BruteForce, MipsIndex};
+use gmips::runtime::PjrtScorer;
+use gmips::sampler::lazy_gumbel::LazyGumbelSampler;
+use gmips::sampler::Sampler;
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::util::rng::Pcg64;
+use gmips::util::stats;
+use std::sync::Arc;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+}
+
+fn pjrt() -> Option<Arc<PjrtScorer>> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(PjrtScorer::load(ARTIFACTS).expect("artifact load failed")))
+}
+
+fn testset(n: usize, d: usize, seed: u64) -> Arc<Dataset> {
+    Arc::new(gmips::data::synth::imagenet_like(n, d, 32, 0.3, seed))
+}
+
+#[test]
+fn pjrt_scores_match_native() {
+    let Some(scorer) = pjrt() else { return };
+    let d = scorer.d();
+    let ds = testset(10_000, d, 1);
+    let mut rng = Pcg64::new(2);
+    let q = data::random_theta(&ds, 0.05, &mut rng);
+    // full block, ragged block, tiny block
+    for n in [scorer.block(), 1000, 3] {
+        let rows = &ds.data[..n * d];
+        let mut got = vec![0f32; n];
+        scorer.scores(rows, d, &q, &mut got);
+        let mut want = vec![0f32; n];
+        NativeScorer.scores(rows, d, &q, &mut want);
+        for i in 0..n {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-2 + 1e-4 * want[i].abs(),
+                "n={n} row {i}: pjrt {} native {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_partition_fragment_matches_native() {
+    let Some(scorer) = pjrt() else { return };
+    let d = scorer.d();
+    let ds = testset(9_000, d, 3);
+    let mut rng = Pcg64::new(4);
+    let q = data::random_theta(&ds, 0.05, &mut rng);
+    for n in [scorer.block(), 2500, 17] {
+        let rows = &ds.data[..n * d];
+        let got = scorer.max_sumexp(rows, d, &q);
+        let want = NativeScorer.max_sumexp(rows, d, &q);
+        assert!(
+            (got.logsumexp() - want.logsumexp()).abs() < 1e-3,
+            "n={n}: pjrt lse {} native {}",
+            got.logsumexp(),
+            want.logsumexp()
+        );
+        assert_eq!(got.count, want.count);
+    }
+}
+
+#[test]
+fn pjrt_expect_fragment_matches_native() {
+    let Some(scorer) = pjrt() else { return };
+    let d = scorer.d();
+    let ds = testset(8_000, d, 5);
+    let mut rng = Pcg64::new(6);
+    let q = data::random_theta(&ds, 0.05, &mut rng);
+    for n in [scorer.block(), 1200] {
+        let rows = &ds.data[..n * d];
+        let (got_acc, got_ws) = scorer.expect_fragment(rows, d, &q);
+        let (want_acc, want_ws) = NativeScorer.expect_fragment(rows, d, &q);
+        assert!((got_acc.logsumexp() - want_acc.logsumexp()).abs() < 1e-3);
+        for j in 0..d {
+            let g = got_ws[j] as f64 / got_acc.sumexp;
+            let w = want_ws[j] as f64 / want_acc.sumexp;
+            assert!((g - w).abs() < 1e-3, "n={n} coord {j}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn sampling_through_pjrt_is_exact() {
+    // end-to-end Alg 1 with the XLA scorer on the hot path: GOF against
+    // the exact softmax computed natively
+    let Some(scorer) = pjrt() else { return };
+    let backend: Arc<dyn ScoreBackend> = scorer;
+    let d = 64;
+    let ds = testset(400, d, 7);
+    let index: Arc<dyn MipsIndex> = Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+    let sampler = LazyGumbelSampler::new(ds.clone(), index, backend, 40, 0.0);
+    let mut rng = Pcg64::new(8);
+    let mut q = ds.row(5).to_vec();
+    linalg::scale(&mut q, 4.0); // moderately peaked
+    // exact probabilities via native backend
+    let exact = gmips::sampler::exact::ExactSampler::new(ds.clone(), Arc::new(NativeScorer));
+    let probs = exact.probabilities(&q);
+    let total = 6_000u64;
+    let mut counts = vec![0u64; ds.n];
+    for o in sampler.sample_many(&q, total as usize, &mut rng) {
+        counts[o.id as usize] += 1;
+    }
+    assert!(stats::gof_ok(&counts, &probs, total, 6.0), "PJRT-path GOF failed");
+}
+
+#[test]
+fn partition_estimate_through_pjrt() {
+    let Some(scorer) = pjrt() else { return };
+    let backend: Arc<dyn ScoreBackend> = scorer;
+    let ds = testset(12_000, 64, 9);
+    let index: Arc<dyn MipsIndex> = Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+    let est = PartitionEstimator::new(ds.clone(), index, backend.clone(), 400, 400);
+    let mut rng = Pcg64::new(10);
+    let q = data::random_theta(&ds, 0.05, &mut rng);
+    let got = est.estimate(&q, &mut rng).log_z;
+    let want = exact_log_partition(&ds, &NativeScorer, &q);
+    let rel = ((got - want).exp() - 1.0).abs();
+    assert!(rel < 0.2, "relative error {rel} (log {got} vs {want})");
+}
+
+#[test]
+fn engine_with_pjrt_backend_serves() {
+    let Some(scorer) = pjrt() else { return };
+    let backend: Arc<dyn ScoreBackend> = scorer;
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.data.n = 6_000;
+    cfg.data.d = 64;
+    cfg.index.kind = IndexKind::Ivf;
+    cfg.index.n_clusters = 64;
+    cfg.index.n_probe = 16;
+    cfg.index.kmeans_iters = 4;
+    cfg.index.train_sample = 3_000;
+    let ds = Arc::new(data::generate(&cfg.data));
+    let index = mips::build_index(&ds, &cfg.index, backend.clone()).unwrap();
+    let engine = Arc::new(Engine::from_parts(cfg, ds.clone(), index, backend));
+    // PJRT scorer serializes internally; 2 workers exercise contention
+    let coord = Coordinator::start(engine.clone(), 2, 8, 11);
+    let mut rng = Pcg64::new(12);
+    let theta = data::random_theta(&ds, 0.05, &mut rng);
+    match coord.call(Request::Sample { theta: theta.clone(), count: 4 }).unwrap() {
+        Response::Samples { ids, scanned, .. } => {
+            assert_eq!(ids.len(), 4);
+            assert!(scanned < ds.n);
+        }
+        other => panic!("{other:?}"),
+    }
+    match coord.call(Request::LogPartition { theta }).unwrap() {
+        Response::LogPartition { log_z, .. } => assert!(log_z.is_finite()),
+        other => panic!("{other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn index_families_consistent_on_same_data() {
+    // all index kinds must return plausibly-overlapping top sets
+    let ds = testset(4_000, 64, 13);
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut cfg = Config::default().index;
+    cfg.n_clusters = 64;
+    cfg.n_probe = 16;
+    cfg.kmeans_iters = 5;
+    cfg.train_sample = 2_000;
+    cfg.tables = 10;
+    cfg.bits = 7;
+    cfg.rungs = 8;
+    let brute = BruteForce::new(ds.clone(), backend.clone());
+    let mut rng = Pcg64::new(14);
+    let q = data::random_theta(&ds, 0.05, &mut rng);
+    let want = brute.top_k(&q, 50);
+    for kind in [IndexKind::Ivf, IndexKind::Lsh] {
+        cfg.kind = kind;
+        let idx = mips::build_index(&ds, &cfg, backend.clone()).unwrap();
+        let got = idx.top_k(&q, 50);
+        let recall = mips::recall_at_k(&got, &want);
+        assert!(recall > 0.5, "{:?} recall {recall}", kind);
+    }
+}
