@@ -2,9 +2,16 @@
 //! sampling/estimation query measured in isolation, so regressions are
 //! attributable. Not a paper figure — this is the optimization harness.
 //!
-//! Stages: native block scoring, PJRT block scoring (when artifacts
-//! exist), top-k collection, IVF probe, lazy tail draw, full Alg-1
-//! sample, Alg-3 estimate.
+//! Stages: native single/batched block scoring, fused vs two-pass
+//! `(max, Σexp)` reductions, fused expectation fragments, PJRT block
+//! scoring (when artifacts exist), top-k collection, IVF probe
+//! (single-query, 8 sequential queries, and one 8-query batch), lazy tail
+//! draw, full Alg-1 sample, Alg-3 estimate.
+//!
+//! Besides the banner table, results are written machine-readably to
+//! `BENCH_perf_hotpath.json` (stage name, mean seconds, iters, GFLOP/s
+//! where meaningful) so future PRs have a perf trajectory to regress
+//! against.
 
 mod common;
 
@@ -12,15 +19,29 @@ use gmips::config::Config;
 use gmips::data;
 use gmips::estimator::partition::PartitionEstimator;
 use gmips::gumbel;
+use gmips::linalg::{simd, MaxSumExp};
 use gmips::mips::{self, MipsIndex};
 use gmips::runtime::PjrtScorer;
 use gmips::sampler::{lazy_gumbel::LazyGumbelSampler, Sampler};
 use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::util::json::Json;
 use gmips::util::rng::Pcg64;
-use gmips::util::timing::Bench;
+use gmips::util::timing::{Bench, BenchStats};
 use gmips::util::topk::TopK;
 use rustc_hash::FxHashSet;
 use std::sync::Arc;
+
+struct Entry {
+    stats: BenchStats,
+    note: String,
+    gflops: Option<f64>,
+}
+
+fn record(results: &mut Vec<Entry>, stats: BenchStats, flops_per_iter: Option<f64>) {
+    let gflops = flops_per_iter.map(|f| f / stats.mean_s / 1e9);
+    let note = gflops.map(|g| format!("{g:.2} GFLOP/s")).unwrap_or_default();
+    results.push(Entry { stats, note, gflops });
+}
 
 fn main() {
     common::banner("bench_perf_hotpath", "§Perf: per-stage hot path microbenches");
@@ -33,19 +54,87 @@ fn main() {
     let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
     let mut rng = Pcg64::new(1);
     let q = data::random_theta(&ds, cfg.data.temperature, &mut rng);
+    println!("simd kernel: {}", simd::kernel().name());
 
     let bench = Bench::default();
-    let mut results = Vec::new();
+    let mut results: Vec<Entry> = Vec::new();
 
-    // ---- native block scoring ------------------------------------------------
+    // ---- native block scoring: single query, then 8-query batch ------------
     let block = 4096.min(ds.n);
     let rows = &ds.data[..block * d];
+    let block_flops = 2.0 * block as f64 * d as f64;
     let mut out = vec![0f32; block];
     let s = bench.run("native scores 4096x64", || {
         NativeScorer.scores(std::hint::black_box(rows), d, &q, &mut out);
     });
-    let gflops = (2.0 * block as f64 * d as f64) / s.mean_s / 1e9;
-    results.push((s.clone(), format!("{gflops:.2} GFLOP/s")));
+    record(&mut results, s, Some(block_flops));
+
+    const NQ: usize = 8;
+    let qs_owned: Vec<Vec<f32>> = (0..NQ)
+        .map(|_| data::random_theta(&ds, cfg.data.temperature, &mut rng))
+        .collect();
+    let mut qflat = vec![0f32; NQ * d];
+    for (j, qj) in qs_owned.iter().enumerate() {
+        qflat[j * d..(j + 1) * d].copy_from_slice(qj);
+    }
+    let mut out_multi = vec![0f32; NQ * block];
+    let s = bench.run("native scores 4096x64 x8q sequential", || {
+        for j in 0..NQ {
+            NativeScorer.scores(
+                std::hint::black_box(rows),
+                d,
+                &qflat[j * d..(j + 1) * d],
+                &mut out_multi[j * block..(j + 1) * block],
+            );
+        }
+    });
+    record(&mut results, s, Some(block_flops * NQ as f64));
+    let s = bench.run("native scores_batch 4096x64 x8q", || {
+        NativeScorer.scores_batch(std::hint::black_box(rows), d, &qflat, NQ, &mut out_multi);
+    });
+    record(&mut results, s, Some(block_flops * NQ as f64));
+
+    // ---- fused (max, Σexp) vs the seed two-pass shape ----------------------
+    let s = bench.run("max_sumexp two-pass (seed shape)", || {
+        // exactly the seed default: materialize scores, then scalar
+        // f64 push_all as a second pass
+        let n = rows.len() / d;
+        let mut buf = vec![0f32; n];
+        NativeScorer.scores(std::hint::black_box(rows), d, &q, &mut buf);
+        let mut acc = MaxSumExp::default();
+        acc.push_all(&buf);
+        std::hint::black_box(acc);
+    });
+    let twopass_mean = s.mean_s;
+    record(&mut results, s, Some(block_flops));
+    let s = bench.run("max_sumexp fused (simd)", || {
+        std::hint::black_box(NativeScorer.max_sumexp(std::hint::black_box(rows), d, &q));
+    });
+    let fused_mean = s.mean_s;
+    record(&mut results, s, Some(block_flops));
+    println!(
+        "fused max_sumexp speedup vs seed two-pass: {:.2}x",
+        twopass_mean / fused_mean
+    );
+
+    let s = bench.run("expect_fragment two-pass (seed shape)", || {
+        let n = rows.len() / d;
+        let mut buf = vec![0f32; n];
+        NativeScorer.scores(std::hint::black_box(rows), d, &q, &mut buf);
+        let mut acc = MaxSumExp::default();
+        acc.push_all(&buf);
+        let mut wsum = vec![0f32; d];
+        for r in 0..n {
+            let w = ((buf[r] as f64) - acc.max).exp() as f32;
+            gmips::linalg::axpy(w, &rows[r * d..(r + 1) * d], &mut wsum);
+        }
+        std::hint::black_box((acc, wsum));
+    });
+    record(&mut results, s, Some(2.0 * block_flops));
+    let s = bench.run("expect_fragment fused (simd)", || {
+        std::hint::black_box(NativeScorer.expect_fragment(std::hint::black_box(rows), d, &q));
+    });
+    record(&mut results, s, Some(2.0 * block_flops));
 
     // ---- PJRT block scoring (optional) ----------------------------------------
     if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -54,15 +143,14 @@ fn main() {
                 let s = bench.run("pjrt scores 4096x64", || {
                     scorer.scores(std::hint::black_box(rows), d, &q, &mut out);
                 });
-                let gflops = (2.0 * block as f64 * d as f64) / s.mean_s / 1e9;
-                results.push((s, format!("{gflops:.2} GFLOP/s")));
+                record(&mut results, s, Some(block_flops));
                 let sc = Arc::new(scorer);
                 let s = bench.run("pjrt fused partition 4096x64", || {
                     std::hint::black_box(sc.max_sumexp(rows, d, &q));
                 });
-                results.push((s, String::new()));
+                record(&mut results, s, None);
             }
-            _ => println!("(skipping pjrt benches: artifacts missing or wrong d)"),
+            _ => println!("(skipping pjrt benches: artifacts missing/unloadable or wrong d)"),
         }
     }
 
@@ -74,9 +162,9 @@ fn main() {
         tk.push_block(0, std::hint::black_box(&scores));
         std::hint::black_box(tk.into_sorted());
     });
-    results.push((s, String::new()));
+    record(&mut results, s, None);
 
-    // ---- IVF index probe --------------------------------------------------------
+    // ---- IVF index probe: single, 8 sequential, one 8-query batch --------------
     let index: Arc<dyn MipsIndex> = {
         let mut icfg = cfg.index.clone();
         icfg.n_clusters = 0;
@@ -88,7 +176,24 @@ fn main() {
     let s = bench.run("ivf top_k", || {
         std::hint::black_box(index.top_k(&q, k));
     });
-    results.push((s, String::new()));
+    record(&mut results, s, None);
+    let qs_refs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+    let s = bench.run("ivf top_k x8q sequential", || {
+        for qj in &qs_refs {
+            std::hint::black_box(index.top_k(qj, k));
+        }
+    });
+    let seq_mean = s.mean_s;
+    record(&mut results, s, None);
+    let s = bench.run("ivf top_k_batch 8q", || {
+        std::hint::black_box(index.top_k_batch(&qs_refs, k));
+    });
+    let batch_mean = s.mean_s;
+    record(&mut results, s, None);
+    println!(
+        "ivf 8-query batch speedup vs 8 sequential: {:.2}x",
+        seq_mean / batch_mean
+    );
 
     // ---- lazy tail draw ---------------------------------------------------------
     let exclude: FxHashSet<u32> = (0..k as u32).collect();
@@ -96,7 +201,7 @@ fn main() {
     let s = bench.run("lazy tail draw (m≈k)", || {
         std::hint::black_box(gumbel::sample_tail(ds.n, &exclude, b, &mut rng));
     });
-    results.push((s, String::new()));
+    record(&mut results, s, None);
 
     // ---- full Algorithm 1 sample --------------------------------------------------
     let sampler = LazyGumbelSampler::new(ds.clone(), index.clone(), backend.clone(), k, 0.0);
@@ -104,13 +209,18 @@ fn main() {
         let theta = data::random_theta(&ds, cfg.data.temperature, &mut rng);
         std::hint::black_box(sampler.sample(&theta, &mut rng));
     });
-    results.push((s, String::new()));
+    record(&mut results, s, None);
     // amortized: one MIPS call, many draws
     let top = index.top_k(&q, k);
     let s = bench.run("Alg1 draw (reused top-k)", || {
         std::hint::black_box(sampler.sample_given_top(&top, &q, &mut rng));
     });
-    results.push((s, String::new()));
+    record(&mut results, s, None);
+    // batched: 8 θs share one batched retrieval
+    let s = bench.run("Alg1 sample_batch 8q", || {
+        std::hint::black_box(sampler.sample_batch(&qs_refs, &[1; NQ], &mut rng));
+    });
+    record(&mut results, s, None);
 
     // ---- Algorithm 3 estimate ------------------------------------------------------
     let est = PartitionEstimator::new(ds.clone(), index, backend, k, k);
@@ -118,7 +228,11 @@ fn main() {
         let theta = data::random_theta(&ds, cfg.data.temperature, &mut rng);
         std::hint::black_box(est.estimate(&theta, &mut rng));
     });
-    results.push((s, String::new()));
+    record(&mut results, s, None);
+    let s = bench.run("Alg3 estimate_batch 8q", || {
+        std::hint::black_box(est.estimate_batch(&qs_refs, &mut rng));
+    });
+    record(&mut results, s, None);
 
     // ---- brute-force reference -------------------------------------------------------
     let exact = gmips::sampler::exact::ExactSampler::new(ds.clone(), Arc::new(NativeScorer));
@@ -126,10 +240,44 @@ fn main() {
         let theta = data::random_theta(&ds, cfg.data.temperature, &mut rng);
         std::hint::black_box(exact.sample(&theta, &mut rng));
     });
-    results.push((s, String::new()));
+    record(&mut results, s, None);
 
-    println!("\n{:<34} {:>12} {:>10}  note", "stage", "mean", "iters");
-    for (s, note) in &results {
-        println!("{:<34} {:>12} {:>10}  {note}", s.name, s.human(), s.iters);
+    println!("\n{:<38} {:>12} {:>10}  note", "stage", "mean", "iters");
+    for e in &results {
+        println!(
+            "{:<38} {:>12} {:>10}  {}",
+            e.stats.name,
+            e.stats.human(),
+            e.stats.iters,
+            e.note
+        );
+    }
+
+    // ---- machine-readable trajectory ------------------------------------------
+    let stages: Vec<Json> = results
+        .iter()
+        .map(|e| {
+            let mut kv = vec![
+                ("stage", Json::str(e.stats.name.clone())),
+                ("mean_s", Json::num(e.stats.mean_s)),
+                ("iters", Json::num(e.stats.iters as f64)),
+            ];
+            if let Some(g) = e.gflops {
+                kv.push(("gflops", Json::num(g)));
+            }
+            Json::obj(kv)
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("perf_hotpath")),
+        ("kernel", Json::str(simd::kernel().name())),
+        ("n", Json::num(ds.n as f64)),
+        ("d", Json::num(d as f64)),
+        ("batch_queries", Json::num(NQ as f64)),
+        ("stages", Json::Arr(stages)),
+    ]);
+    match std::fs::write("BENCH_perf_hotpath.json", doc.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_perf_hotpath.json"),
+        Err(e) => eprintln!("could not write BENCH_perf_hotpath.json: {e}"),
     }
 }

@@ -176,15 +176,128 @@ impl Engine {
             }
             Request::Stats => Response::Stats {
                 text: format!(
-                    "{}\nbackend={} k={} \n{}",
+                    "{}\nbackend={} simd={} k={} \n{}",
                     self.index.describe(),
                     self.backend.name(),
+                    crate::linalg::simd::kernel().name(),
                     self.sampler.k,
                     self.metrics.summary()
                 ),
             },
         };
         resp
+    }
+
+    /// Handle a drained batch of requests, grouping batchable operations
+    /// so index scans amortize across concurrent users: `sample`,
+    /// `log_partition` and `expect_features` requests share one
+    /// [`MipsIndex::top_k_batch`] retrieval per group, and `topk`
+    /// requests batch per distinct `k`. Everything else (TV audits,
+    /// stats, dimension errors) falls through to [`handle`](Self::handle).
+    /// Responses come back in request order.
+    pub fn handle_batch(&self, reqs: &[Request], rng: &mut Pcg64) -> Vec<Response> {
+        if reqs.len() == 1 {
+            return vec![self.handle(&reqs[0], rng)];
+        }
+        let d = self.ds.d;
+        let mut resps: Vec<Option<Response>> = vec![None; reqs.len()];
+        let mut samples: Vec<usize> = Vec::new();
+        let mut partitions: Vec<usize> = Vec::new();
+        let mut expects: Vec<usize> = Vec::new();
+        let mut topks: rustc_hash::FxHashMap<usize, Vec<usize>> = Default::default();
+        for (i, req) in reqs.iter().enumerate() {
+            match req {
+                Request::Sample { theta, .. } if theta.len() == d => samples.push(i),
+                Request::LogPartition { theta } if theta.len() == d => partitions.push(i),
+                Request::ExpectFeatures { theta } if theta.len() == d => expects.push(i),
+                Request::TopK { theta, k } if theta.len() == d => {
+                    topks.entry((*k).max(1)).or_default().push(i)
+                }
+                _ => resps[i] = Some(self.handle(req, rng)),
+            }
+        }
+
+        if !samples.is_empty() {
+            let sw = Stopwatch::start();
+            let mut qs: Vec<&[f32]> = Vec::with_capacity(samples.len());
+            let mut counts: Vec<usize> = Vec::with_capacity(samples.len());
+            for &i in &samples {
+                if let Request::Sample { theta, count } = &reqs[i] {
+                    qs.push(theta.as_slice());
+                    counts.push((*count).max(1));
+                }
+            }
+            let all = self.sampler.sample_batch(&qs, &counts, rng);
+            let micros = sw.micros() / samples.len() as f64;
+            for (&i, outs) in samples.iter().zip(all) {
+                resps[i] = Some(Response::Samples {
+                    ids: outs.iter().map(|o| o.id).collect(),
+                    scanned: outs.first().map(|o| o.work.scanned).unwrap_or(0),
+                    tail_m: outs.iter().map(|o| o.work.m).sum(),
+                });
+                self.metrics.sample.record(micros);
+            }
+        }
+
+        if !partitions.is_empty() {
+            let sw = Stopwatch::start();
+            let mut qs: Vec<&[f32]> = Vec::with_capacity(partitions.len());
+            for &i in &partitions {
+                if let Request::LogPartition { theta } = &reqs[i] {
+                    qs.push(theta.as_slice());
+                }
+            }
+            let ests = self.partition.estimate_batch(&qs, rng);
+            let micros = sw.micros() / partitions.len() as f64;
+            for (&i, est) in partitions.iter().zip(ests) {
+                resps[i] = Some(Response::LogPartition {
+                    log_z: est.log_z,
+                    k: est.work.k,
+                    l: est.work.l,
+                });
+                self.metrics.partition.record(micros);
+            }
+        }
+
+        if !expects.is_empty() {
+            let sw = Stopwatch::start();
+            let mut qs: Vec<&[f32]> = Vec::with_capacity(expects.len());
+            for &i in &expects {
+                if let Request::ExpectFeatures { theta } = &reqs[i] {
+                    qs.push(theta.as_slice());
+                }
+            }
+            let ests = self.expectation.expect_features_batch(&qs, rng);
+            let micros = sw.micros() / expects.len() as f64;
+            for (&i, est) in expects.iter().zip(ests) {
+                resps[i] = Some(Response::Features { mean: est.mean, log_z: est.log_z });
+                self.metrics.expect.record(micros);
+            }
+        }
+
+        for (k, idxs) in topks {
+            let sw = Stopwatch::start();
+            let mut qs: Vec<&[f32]> = Vec::with_capacity(idxs.len());
+            for &i in &idxs {
+                if let Request::TopK { theta, .. } = &reqs[i] {
+                    qs.push(theta.as_slice());
+                }
+            }
+            let tops = self.index.top_k_batch(&qs, k);
+            let micros = sw.micros() / idxs.len() as f64;
+            for (&i, top) in idxs.iter().zip(tops) {
+                resps[i] = Some(Response::TopK {
+                    ids: top.items.iter().map(|s| s.id).collect(),
+                    scores: top.items.iter().map(|s| s.score).collect(),
+                });
+                self.metrics.topk.record(micros);
+            }
+        }
+
+        resps
+            .into_iter()
+            .map(|r| r.expect("every batched request must be answered"))
+            .collect()
     }
 
     fn dim_error(got: usize, want: usize) -> Response {
@@ -263,6 +376,66 @@ mod tests {
         let mut rng = Pcg64::new(2);
         match e.handle(&Request::Sample { theta: vec![1.0; 3], count: 1 }, &mut rng) {
             Response::Error { message } => assert!(message.contains("dim")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn handle_batch_matches_single_shapes_and_orders() {
+        let e = tiny_engine();
+        let mut rng = Pcg64::new(4);
+        let theta = data::random_theta(&e.ds, 0.05, &mut rng);
+        let reqs = vec![
+            Request::Sample { theta: theta.clone(), count: 3 },
+            Request::TopK { theta: theta.clone(), k: 5 },
+            Request::LogPartition { theta: theta.clone() },
+            Request::Sample { theta: theta.clone(), count: 2 },
+            Request::ExpectFeatures { theta: theta.clone() },
+            Request::TopK { theta: theta.clone(), k: 5 },
+            Request::Sample { theta: vec![1.0; 3], count: 1 }, // dim error
+            Request::Stats,
+        ];
+        let resps = e.handle_batch(&reqs, &mut rng);
+        assert_eq!(resps.len(), reqs.len());
+        match &resps[0] {
+            Response::Samples { ids, .. } => assert_eq!(ids.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        match (&resps[1], &resps[5]) {
+            (Response::TopK { ids: a, scores: sa }, Response::TopK { ids: b, scores: sb }) => {
+                assert_eq!(a.len(), 5);
+                // identical θ, identical k → identical deterministic result
+                assert_eq!(a, b);
+                assert_eq!(sa, sb);
+                // and identical to the single-request path
+                match e.handle(&Request::TopK { theta: theta.clone(), k: 5 }, &mut rng) {
+                    Response::TopK { ids, scores } => {
+                        assert_eq!(&ids, a);
+                        assert_eq!(&scores, sa);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        match &resps[2] {
+            Response::LogPartition { log_z, .. } => assert!(log_z.is_finite()),
+            other => panic!("{other:?}"),
+        }
+        match &resps[3] {
+            Response::Samples { ids, .. } => assert_eq!(ids.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        match &resps[4] {
+            Response::Features { mean, .. } => assert_eq!(mean.len(), e.ds.d),
+            other => panic!("{other:?}"),
+        }
+        match &resps[6] {
+            Response::Error { message } => assert!(message.contains("dim")),
+            other => panic!("{other:?}"),
+        }
+        match &resps[7] {
+            Response::Stats { text } => assert!(text.contains("simd=")),
             other => panic!("{other:?}"),
         }
     }

@@ -39,11 +39,11 @@ pub fn load_or_generate(cfg: &DataConfig) -> Dataset {
             if ds.n == cfg.n && ds.d == cfg.d {
                 return ds;
             }
-            log::warn!("cached dataset at {} has wrong shape; regenerating", cfg.path);
+            eprintln!("warning: cached dataset at {} has wrong shape; regenerating", cfg.path);
         }
         let ds = generate(cfg);
         if let Err(e) = ds.save(&cfg.path) {
-            log::warn!("failed to cache dataset at {}: {e}", cfg.path);
+            eprintln!("warning: failed to cache dataset at {}: {e}", cfg.path);
         }
         return ds;
     }

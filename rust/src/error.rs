@@ -3,54 +3,70 @@
 //! Every fallible public API in `gmips` returns [`Result<T>`](Result) with
 //! this [`Error`] enum. Variants are grouped by subsystem so callers can
 //! match on the failure domain (config vs. data vs. runtime vs. protocol).
+//!
+//! `Display`/`Error` are hand-implemented: the offline registry the crate
+//! must build against carries no proc-macro crates (no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All errors produced by the gmips library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// I/O failure (dataset files, artifact files, sockets).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
+    Io(std::io::Error),
     /// Malformed configuration (TOML parse error, bad value, missing key).
-    #[error("config error: {0}")]
     Config(String),
-
     /// Malformed or inconsistent dataset (bad magic, shape mismatch).
-    #[error("data error: {0}")]
     Data(String),
-
     /// JSON parse/serialize failure (manifest, wire protocol).
-    #[error("json error: {0}")]
     Json(String),
-
     /// CLI argument error.
-    #[error("cli error: {0}")]
     Cli(String),
-
     /// MIPS index construction/query failure.
-    #[error("index error: {0}")]
     Index(String),
-
     /// XLA/PJRT runtime failure (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
-
     /// Sampler/estimator precondition violation (e.g. k >= n).
-    #[error("inference error: {0}")]
     Inference(String),
-
     /// Learner failure (divergence, bad hyperparameters).
-    #[error("learn error: {0}")]
     Learn(String),
-
     /// Coordinator/server failure (queue closed, protocol violation).
-    #[error("serve error: {0}")]
     Serve(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Data(s) => write!(f, "data error: {s}"),
+            Error::Json(s) => write!(f, "json error: {s}"),
+            Error::Cli(s) => write!(f, "cli error: {s}"),
+            Error::Index(s) => write!(f, "index error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Inference(s) => write!(f, "inference error: {s}"),
+            Error::Learn(s) => write!(f, "learn error: {s}"),
+            Error::Serve(s) => write!(f, "serve error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -84,6 +100,7 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))

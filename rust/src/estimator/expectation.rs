@@ -104,6 +104,17 @@ impl ExpectationEstimator {
         self.expect_features_given_top(&top, q, rng)
     }
 
+    /// Batched Algorithm 4: one [`MipsIndex::top_k_batch`] retrieval for
+    /// the whole batch of θs (index scans shared across users), then the
+    /// per-query tail draw and head+tail combine.
+    pub fn expect_features_batch(&self, qs: &[&[f32]], rng: &mut Pcg64) -> Vec<FeatureExpectation> {
+        let tops = self.index.top_k_batch(qs, self.k);
+        qs.iter()
+            .zip(&tops)
+            .map(|(q, top)| self.expect_features_given_top(top, q, rng))
+            .collect()
+    }
+
     /// Same, reusing an already retrieved top set.
     pub fn expect_features_given_top(
         &self,
@@ -192,13 +203,12 @@ pub fn exact_feature_expectation(
     const BLOCK: usize = 8192;
     let mut acc = MaxSumExp::default();
     let mut out = vec![0f32; BLOCK];
-    // pass 1: max + sumexp
+    // pass 1: max + sumexp via the backend's fused reduction
     let mut start = 0;
     while start < ds.n {
         let end = (start + BLOCK).min(ds.n);
-        let buf = &mut out[..end - start];
-        backend.scores(&ds.data[start * d..end * d], d, q, buf);
-        acc.push_all(buf);
+        let frag = backend.max_sumexp(&ds.data[start * d..end * d], d, q);
+        acc.merge(&frag);
         start = end;
     }
     let m = acc.max;

@@ -108,6 +108,18 @@ impl PartitionEstimator {
         self.estimate_given_top(&top, q, rng)
     }
 
+    /// Batched Algorithm 3: one [`MipsIndex::top_k_batch`] retrieval for
+    /// the whole batch of θs, then the per-query tail sample + log-space
+    /// combine. The coordinator drains concurrent `log_partition`
+    /// requests through this so index scans amortize across users.
+    pub fn estimate_batch(&self, qs: &[&[f32]], rng: &mut Pcg64) -> Vec<PartitionEstimate> {
+        let tops = self.index.top_k_batch(qs, self.k);
+        qs.iter()
+            .zip(&tops)
+            .map(|(q, top)| self.estimate_given_top(top, q, rng))
+            .collect()
+    }
+
     /// Head-only baseline (`Ẑ = Σ_S e^{y}` — what Vijayanarasimhan et al.
     /// 2014 style truncation gives; biased low).
     pub fn estimate_topk_only(&self, q: &[f32]) -> PartitionEstimate {
@@ -142,18 +154,18 @@ pub fn combine_head_tail(
     m + (head_mass + tail_mass).ln()
 }
 
-/// Exact log partition via a full scan (baseline / evaluation).
+/// Exact log partition via a full scan (baseline / evaluation). Runs on
+/// the backend's fused `(max, Σexp)` reduction block by block — no score
+/// buffer, single memory pass per block on the native backend.
 pub fn exact_log_partition(ds: &Dataset, backend: &dyn ScoreBackend, q: &[f32]) -> f64 {
     let mut acc = MaxSumExp::default();
     const BLOCK: usize = 8192;
-    let mut out = vec![0f32; BLOCK];
     let d = ds.d;
     let mut start = 0;
     while start < ds.n {
         let end = (start + BLOCK).min(ds.n);
-        let buf = &mut out[..end - start];
-        backend.scores(&ds.data[start * d..end * d], d, q, buf);
-        acc.push_all(buf);
+        let frag = backend.max_sumexp(&ds.data[start * d..end * d], d, q);
+        acc.merge(&frag);
         start = end;
     }
     acc.logsumexp()
@@ -259,7 +271,9 @@ mod tests {
         let q = synth::random_theta(&ds, 0.2, &mut rng);
         let got = est.estimate(&q, &mut rng).log_z;
         let want = exact_log_partition(&ds, backend.as_ref(), &q);
-        assert!((got - want).abs() < 1e-6);
+        // exact path uses the fused polynomial-expf reduction; the head
+        // path uses exact f64 exps — they agree to ≲1e-6, not exactly
+        assert!((got - want).abs() < 1e-5);
     }
 
     use crate::util::rng::Pcg64;

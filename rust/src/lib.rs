@@ -23,8 +23,18 @@
 //! 1. **L1 (Pallas)** and **L2 (JAX)** live in `python/compile/` and are
 //!    AOT-lowered once (`make artifacts`) to HLO text.
 //! 2. **L3 (this crate)** loads those artifacts through the PJRT C API
-//!    ([`runtime`]) and serves queries from a worker-pool
-//!    [`coordinator`], optionally over TCP ([`server`]).
+//!    ([`runtime`], behind the `pjrt` cargo feature) and serves queries
+//!    from a worker-pool [`coordinator`], optionally over TCP
+//!    ([`server`]).
+//!
+//! The native scoring floor is [`linalg::simd`]: runtime-dispatched
+//! explicit-SIMD kernels (AVX2+FMA / NEON / scalar, chosen once at
+//! startup) with single-pass fused `(max, Σexp, Σexp·φ)` reductions and
+//! register-blocked multi-query scoring. Batching threads all the way up
+//! the stack — [`mips::MipsIndex::top_k_batch`] merges probe scans so a
+//! query batch streams each row block once, the samplers/estimators
+//! expose `*_batch` entry points, and the [`coordinator`] drains its
+//! queue in batches so concurrent users share index scans.
 //!
 //! ## Quickstart
 //!

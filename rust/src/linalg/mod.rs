@@ -1,57 +1,32 @@
 //! Dense vector/matrix kernels for the native scoring backend and
 //! everything numerical off the PJRT path.
 //!
-//! The hot primitive is [`matvec_block`] — scores for a contiguous block of
-//! database rows against a query — written so LLVM autovectorizes it
-//! (unrolled 4-wide f32 accumulators). Everything here is allocation-free
-//! given caller-provided output buffers.
+//! The hot primitives — [`dot`], [`matvec_block`], [`axpy`] and the fused
+//! reductions — live in [`simd`], which dispatches once at startup to
+//! explicit `std::arch` kernels (AVX2+FMA on x86-64, NEON on aarch64) with
+//! a portable unrolled fallback. This module re-exposes the single-query
+//! entry points under their historical names and keeps the pure-f64
+//! streaming [`MaxSumExp`] algebra every fragment merge builds on.
+//! Everything here is allocation-free given caller-provided buffers.
 
-/// Dot product with 4 independent accumulators (breaks the dependency
-/// chain; autovectorizes to SIMD on x86-64 and aarch64).
+pub mod simd;
+
+/// Dot product (runtime-dispatched SIMD; see [`simd::dot`]).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for c in 0..chunks {
-        let i = c * 8;
-        // Safety: i+7 < chunks*8 <= n
-        unsafe {
-            s0 += a.get_unchecked(i) * b.get_unchecked(i)
-                + a.get_unchecked(i + 4) * b.get_unchecked(i + 4);
-            s1 += a.get_unchecked(i + 1) * b.get_unchecked(i + 1)
-                + a.get_unchecked(i + 5) * b.get_unchecked(i + 5);
-            s2 += a.get_unchecked(i + 2) * b.get_unchecked(i + 2)
-                + a.get_unchecked(i + 6) * b.get_unchecked(i + 6);
-            s3 += a.get_unchecked(i + 3) * b.get_unchecked(i + 3)
-                + a.get_unchecked(i + 7) * b.get_unchecked(i + 7);
-        }
-    }
-    let mut tail = 0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
-    }
-    s0 + s1 + s2 + s3 + tail
+    simd::dot(a, b)
 }
 
 /// Scores for a contiguous row block: `out[r] = rows[r] · q` where `rows`
-/// is row-major `[nrows × d]`.
+/// is row-major `[nrows × d]` (runtime-dispatched SIMD).
 pub fn matvec_block(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(q.len(), d);
-    debug_assert_eq!(rows.len(), out.len() * d);
-    for (r, o) in out.iter_mut().enumerate() {
-        *o = dot(&rows[r * d..(r + 1) * d], q);
-    }
+    simd::matvec_block(rows, d, q, out);
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` (runtime-dispatched SIMD).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    simd::axpy(alpha, x, y);
 }
 
 /// Euclidean norm.

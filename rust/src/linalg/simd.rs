@@ -1,0 +1,835 @@
+//! Explicit-SIMD scoring kernels with one-time runtime dispatch.
+//!
+//! Everything the paper computes reduces to inner products `θ·φ(x_i)` over
+//! row blocks plus streaming `(max, Σexp)` reductions, so this module is
+//! the floor the whole system's throughput stands on. Design:
+//!
+//! * **Dispatch once.** [`kernel`] probes the CPU a single time at first
+//!   use (`OnceLock`) and every entry point branches on the cached
+//!   [`Kernel`] — AVX2+FMA on x86-64 when detected, NEON on aarch64, and
+//!   a portable unrolled scalar fallback everywhere else. No per-call
+//!   feature probing, no trait objects on the innermost loops.
+//!
+//! * **One accumulation order.** Every kernel family accumulates each
+//!   query with a single vector accumulator (horizontal sum at the end,
+//!   scalar tail after), and the multi-query kernels run the *same*
+//!   per-query sequence of fused multiply-adds as the single-query ones.
+//!   Single-query and batched entry points therefore produce bit-identical
+//!   scores, which the batched MIPS paths rely on for id-level parity with
+//!   the per-query paths.
+//!
+//! * **Fused reductions.** [`block_max_sumexp`] and
+//!   [`block_expect_fragment`] evaluate scores in L1-resident chunks of
+//!   [`CHUNK`] rows and fold them straight into the running
+//!   `(max, Σexp(s−max))` (and `Σexp·φ`) state — no full score buffer is
+//!   ever materialized and no second pass over memory happens, unlike the
+//!   seed's score-then-`push_all` two-pass shape. The exponentials use a
+//!   vectorized Cephes-style polynomial `expf` (|rel err| ≲ 2e-7), well
+//!   inside the 1e-3 tolerance the estimator tests demand.
+//!
+//! * **Multi-query batching.** [`matvec_block_multi`] scores one row block
+//!   against `nq` queries at once, register-blocking queries in groups so
+//!   each database row is streamed from memory exactly once per batch —
+//!   the amortization the batched MIPS/estimator/coordinator layers
+//!   exploit under concurrent traffic.
+
+use crate::linalg::MaxSumExp;
+use std::sync::OnceLock;
+
+/// Rows per fused-reduction chunk: the chunk's scores fit comfortably in
+/// L1 while amortizing the running-max rescale across many rows.
+const CHUNK: usize = 128;
+
+/// Instruction set selected for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable unrolled scalar kernels (LLVM autovectorizes these).
+    Scalar,
+    /// AVX2 + FMA `std::arch` kernels (x86-64).
+    Avx2,
+    /// NEON `std::arch` kernels (aarch64).
+    Neon,
+}
+
+impl Kernel {
+    /// Short name for logs / bench output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2+fma",
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+static KERNEL: OnceLock<Kernel> = OnceLock::new();
+
+/// The kernel chosen for this process (detected on first call, cached).
+#[inline]
+pub fn kernel() -> Kernel {
+    *KERNEL.get_or_init(detect)
+}
+
+fn detect() -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Kernel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Kernel::Neon;
+        }
+    }
+    Kernel::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// public dispatching entry points
+// ---------------------------------------------------------------------------
+
+/// Dot product. Bit-identical to one query lane of [`matvec_block_multi`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Scores for a contiguous row block: `out[r] = rows[r·d..]·q`.
+pub fn matvec_block(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(rows.len(), out.len() * d);
+    if d == 0 {
+        out.iter_mut().for_each(|x| *x = 0.0);
+        return;
+    }
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::matvec(rows, d, q, out) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::matvec(rows, d, q, out) },
+        _ => matvec_scalar(rows, d, q, out),
+    }
+}
+
+/// Multi-query block scoring: `out[j·nrows + r] = rows[r·d..]·qs[j·d..]`
+/// (query-major output, `nrows = rows.len()/d`). Each row is read from
+/// memory once for the whole batch; per-query results are bit-identical
+/// to [`matvec_block`] on the same rows.
+pub fn matvec_block_multi(rows: &[f32], d: usize, qs: &[f32], nq: usize, out: &mut [f32]) {
+    if d == 0 || nq == 0 {
+        out.iter_mut().for_each(|x| *x = 0.0);
+        return;
+    }
+    let nrows = rows.len() / d;
+    debug_assert_eq!(rows.len(), nrows * d);
+    debug_assert_eq!(qs.len(), nq * d);
+    debug_assert_eq!(out.len(), nq * nrows);
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::matvec_multi(rows, d, qs, nq, out) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::matvec_multi(rows, d, qs, nq, out) },
+        _ => {
+            for j in 0..nq {
+                let q = &qs[j * d..(j + 1) * d];
+                matvec_scalar(rows, d, q, &mut out[j * nrows..(j + 1) * nrows]);
+            }
+        }
+    }
+}
+
+/// `y += alpha·x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
+        _ => {
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi += alpha * xi;
+            }
+        }
+    }
+}
+
+/// Fused single-pass partition fragment over a row block: scores are
+/// produced chunk-at-a-time and folded straight into the running
+/// `(max, Σexp(s − max))` state — the seed's two-pass
+/// score-buffer-then-`push_all` shape never touches memory twice here.
+pub fn block_max_sumexp(rows: &[f32], d: usize, q: &[f32]) -> MaxSumExp {
+    debug_assert_eq!(q.len(), d);
+    let n = if d == 0 { 0 } else { rows.len() / d };
+    debug_assert_eq!(rows.len(), n * d);
+    let mut acc = MaxSumExp::default();
+    let mut buf = [0f32; CHUNK];
+    let mut start = 0;
+    while start < n {
+        let end = (start + CHUNK).min(n);
+        let chunk = &mut buf[..end - start];
+        matvec_block(&rows[start * d..end * d], d, q, chunk);
+        let cmax = max_slice(chunk) as f64;
+        if cmax > acc.max {
+            // rescale the running sum to the new reference point; exp(-inf)
+            // = 0 makes the first chunk initialize cleanly
+            acc.sumexp *= (acc.max - cmax).exp();
+            acc.max = cmax;
+        }
+        acc.sumexp += sum_exp_sub(chunk, acc.max as f32) as f64;
+        acc.count += (end - start) as u64;
+        start = end;
+    }
+    acc
+}
+
+/// Fused single-pass expectation fragment: the partition fragment of
+/// [`block_max_sumexp`] plus the weighted feature sum
+/// `wsum = Σ_r exp(s_r − max)·rows[r]`, with the running `wsum` rescaled
+/// whenever a chunk raises the reference max.
+pub fn block_expect_fragment(rows: &[f32], d: usize, q: &[f32]) -> (MaxSumExp, Vec<f32>) {
+    debug_assert_eq!(q.len(), d);
+    let n = if d == 0 { 0 } else { rows.len() / d };
+    debug_assert_eq!(rows.len(), n * d);
+    let mut acc = MaxSumExp::default();
+    let mut wsum = vec![0f32; d];
+    let mut sbuf = [0f32; CHUNK];
+    let mut wbuf = [0f32; CHUNK];
+    let mut start = 0;
+    while start < n {
+        let end = (start + CHUNK).min(n);
+        let m = end - start;
+        let scores = &mut sbuf[..m];
+        matvec_block(&rows[start * d..end * d], d, q, scores);
+        let cmax = max_slice(scores) as f64;
+        if cmax > acc.max {
+            let rescale = (acc.max - cmax).exp();
+            acc.sumexp *= rescale;
+            let r32 = rescale as f32;
+            for w in wsum.iter_mut() {
+                *w *= r32;
+            }
+            acc.max = cmax;
+        }
+        let weights = &mut wbuf[..m];
+        exp_sub_into(scores, acc.max as f32, weights);
+        let mut csum = 0f64;
+        for (r, &w) in weights.iter().enumerate() {
+            csum += w as f64;
+            axpy(w, &rows[(start + r) * d..(start + r + 1) * d], &mut wsum);
+        }
+        acc.sumexp += csum;
+        acc.count += m as u64;
+        start = end;
+    }
+    (acc, wsum)
+}
+
+// ---------------------------------------------------------------------------
+// portable scalar kernels (also the reference implementations for tests)
+// ---------------------------------------------------------------------------
+
+/// Unrolled scalar dot with 4 independent accumulators (breaks the
+/// dependency chain; LLVM autovectorizes it). This is the seed kernel,
+/// kept as the dispatch fallback and the test/bench reference.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        // Safety: the largest index touched below is i + 7, and
+        // i + 7 <= (chunks - 1)·8 + 7 = chunks·8 − 1 < n, so all eight
+        // offsets i..=i+7 are in bounds for both slices (equal lengths
+        // asserted above).
+        unsafe {
+            s0 += a.get_unchecked(i) * b.get_unchecked(i)
+                + a.get_unchecked(i + 4) * b.get_unchecked(i + 4);
+            s1 += a.get_unchecked(i + 1) * b.get_unchecked(i + 1)
+                + a.get_unchecked(i + 5) * b.get_unchecked(i + 5);
+            s2 += a.get_unchecked(i + 2) * b.get_unchecked(i + 2)
+                + a.get_unchecked(i + 6) * b.get_unchecked(i + 6);
+            s3 += a.get_unchecked(i + 3) * b.get_unchecked(i + 3)
+                + a.get_unchecked(i + 7) * b.get_unchecked(i + 7);
+        }
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+fn matvec_scalar(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot_scalar(&rows[r * d..(r + 1) * d], q);
+    }
+}
+
+fn max_slice(xs: &[f32]) -> f32 {
+    debug_assert!(!xs.is_empty());
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::max_slice(xs) },
+        _ => xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+    }
+}
+
+fn sum_exp_sub(xs: &[f32], m: f32) -> f32 {
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::sum_exp_sub(xs, m) },
+        _ => xs.iter().map(|&x| exp_f32(x - m)).sum(),
+    }
+}
+
+fn exp_sub_into(xs: &[f32], m: f32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    match kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::exp_sub_into(xs, m, out) },
+        _ => {
+            for (o, &x) in out.iter_mut().zip(xs) {
+                *o = exp_f32(x - m);
+            }
+        }
+    }
+}
+
+/// Cephes-style polynomial `expf` (|rel err| ≲ 2e-7 over the clamped
+/// range). Shared by the scalar fused path and the SIMD tails so every
+/// lane has the same accuracy profile. Inputs here are always ≤ 0
+/// (scores minus a running max), so the upper clamp never binds.
+#[inline]
+pub(crate) fn exp_f32(x: f32) -> f32 {
+    const C1: f32 = 0.693_359_375; // ln 2, Cody–Waite high part
+    const C2: f32 = -2.121_944_4e-4; // ln 2, Cody–Waite low part
+    // upper clamp 87.0 keeps fx ≤ 126 so the exponent-bit scaling below
+    // can never overflow to Inf (exp(87) ≈ 6e37 < f32::MAX)
+    let x = x.clamp(-87.336_54, 87.0);
+    let fx = (x * std::f32::consts::LOG2_E + 0.5).floor();
+    let x = x - fx * C1 - fx * C2;
+    let z = x * x;
+    let mut y = 1.987_569_2e-4;
+    y = y * x + 1.398_199_9e-3;
+    y = y * x + 8.333_452e-3;
+    y = y * x + 4.166_579_6e-2;
+    y = y * x + 1.666_666_5e-1;
+    y = y * x + 5.000_000_3e-1;
+    y = y * z + x + 1.0;
+    // scale by 2^fx through the exponent bits (fx ∈ [-126, 126] after the
+    // clamp, so the biased exponent stays strictly inside the finite range)
+    let bits = (((fx as i32) + 127) << 23) as u32;
+    y * f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA kernels (x86-64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_movehdup_ps(s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hmax(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let m = _mm_max_ps(lo, hi);
+        let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+        let m = _mm_max_ss(m, _mm_movehdup_ps(m));
+        _mm_cvtss_f32(m)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_raw(a: *const f32, b: *const f32, n: usize) -> f32 {
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(i)), _mm256_loadu_ps(b.add(i)), acc);
+        }
+        let mut s = hsum(acc);
+        for i in chunks * 8..n {
+            s += *a.add(i) * *b.add(i);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        dot_raw(a.as_ptr(), b.as_ptr(), a.len())
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn matvec(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = dot_raw(rows.as_ptr().add(r * d), q.as_ptr(), d);
+        }
+    }
+
+    /// Query-blocked multi-query scoring: 4 query accumulators share each
+    /// row load, so a batch streams the row block from memory once. The
+    /// per-query FMA sequence matches `dot_raw` exactly (bit-identical
+    /// scores to the single-query path).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn matvec_multi(
+        rows: &[f32],
+        d: usize,
+        qs: &[f32],
+        nq: usize,
+        out: &mut [f32],
+    ) {
+        let nrows = rows.len() / d;
+        let chunks = d / 8;
+        let mut j = 0;
+        while j + 4 <= nq {
+            let q0 = qs.as_ptr().add(j * d);
+            let q1 = qs.as_ptr().add((j + 1) * d);
+            let q2 = qs.as_ptr().add((j + 2) * d);
+            let q3 = qs.as_ptr().add((j + 3) * d);
+            for r in 0..nrows {
+                let row = rows.as_ptr().add(r * d);
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                let mut a2 = _mm256_setzero_ps();
+                let mut a3 = _mm256_setzero_ps();
+                for c in 0..chunks {
+                    let i = c * 8;
+                    let rv = _mm256_loadu_ps(row.add(i));
+                    a0 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q0.add(i)), a0);
+                    a1 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q1.add(i)), a1);
+                    a2 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q2.add(i)), a2);
+                    a3 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q3.add(i)), a3);
+                }
+                let mut s0 = hsum(a0);
+                let mut s1 = hsum(a1);
+                let mut s2 = hsum(a2);
+                let mut s3 = hsum(a3);
+                for i in chunks * 8..d {
+                    let x = *row.add(i);
+                    s0 += x * *q0.add(i);
+                    s1 += x * *q1.add(i);
+                    s2 += x * *q2.add(i);
+                    s3 += x * *q3.add(i);
+                }
+                out[j * nrows + r] = s0;
+                out[(j + 1) * nrows + r] = s1;
+                out[(j + 2) * nrows + r] = s2;
+                out[(j + 3) * nrows + r] = s3;
+            }
+            j += 4;
+        }
+        while j < nq {
+            matvec(rows, d, &qs[j * d..(j + 1) * d], &mut out[j * nrows..(j + 1) * nrows]);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let chunks = n / 8;
+        let va = _mm256_set1_ps(alpha);
+        for c in 0..chunks {
+            let i = c * 8;
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            let r = _mm256_fmadd_ps(va, _mm256_loadu_ps(x.as_ptr().add(i)), yv);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+        }
+        for i in chunks * 8..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn max_slice(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let chunks = n / 8;
+        let mut s = f32::NEG_INFINITY;
+        if chunks > 0 {
+            let mut m = _mm256_loadu_ps(xs.as_ptr());
+            for c in 1..chunks {
+                m = _mm256_max_ps(m, _mm256_loadu_ps(xs.as_ptr().add(c * 8)));
+            }
+            s = hmax(m);
+        }
+        for i in chunks * 8..n {
+            s = s.max(xs[i]);
+        }
+        s
+    }
+
+    /// 8-lane Cephes-style expf (same coefficients as the portable
+    /// `exp_f32`, |rel err| ≲ 2e-7 on the clamped range).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp256(x: __m256) -> __m256 {
+        // upper clamp 87.0: keeps fx ≤ 126 so the exponent-bit scaling
+        // cannot overflow to Inf (see the scalar `exp_f32`)
+        let hi = _mm256_set1_ps(87.0);
+        let lo = _mm256_set1_ps(-87.336_54);
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+        let c1 = _mm256_set1_ps(0.693_359_375);
+        let c2 = _mm256_set1_ps(-2.121_944_4e-4);
+        let one = _mm256_set1_ps(1.0);
+        let half = _mm256_set1_ps(0.5);
+
+        let x = _mm256_min_ps(_mm256_max_ps(x, lo), hi);
+        let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, log2e, half));
+        let x = _mm256_fnmadd_ps(fx, c1, x);
+        let x = _mm256_fnmadd_ps(fx, c2, x);
+        let z = _mm256_mul_ps(x, x);
+        let mut y = _mm256_set1_ps(1.987_569_2e-4);
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.398_199_9e-3));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(8.333_452e-3));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(4.166_579_6e-2));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.666_666_5e-1));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(5.000_000_3e-1));
+        y = _mm256_fmadd_ps(y, z, x);
+        y = _mm256_add_ps(y, one);
+        let n = _mm256_cvtps_epi32(fx);
+        let n = _mm256_add_epi32(n, _mm256_set1_epi32(127));
+        let n = _mm256_slli_epi32::<23>(n);
+        _mm256_mul_ps(y, _mm256_castsi256_ps(n))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn sum_exp_sub(xs: &[f32], m: f32) -> f32 {
+        let n = xs.len();
+        let chunks = n / 8;
+        let vm = _mm256_set1_ps(m);
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(xs.as_ptr().add(c * 8));
+            acc = _mm256_add_ps(acc, exp256(_mm256_sub_ps(v, vm)));
+        }
+        let mut s = hsum(acc);
+        for i in chunks * 8..n {
+            s += super::exp_f32(xs[i] - m);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn exp_sub_into(xs: &[f32], m: f32, out: &mut [f32]) {
+        let n = xs.len();
+        let chunks = n / 8;
+        let vm = _mm256_set1_ps(m);
+        for c in 0..chunks {
+            let i = c * 8;
+            let v = exp256(_mm256_sub_ps(_mm256_loadu_ps(xs.as_ptr().add(i)), vm));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+        }
+        for i in chunks * 8..n {
+            out[i] = super::exp_f32(xs[i] - m);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON kernels (aarch64) — dot/matvec only; the fused reductions fall back
+// to the portable exp path (see the `_` dispatch arms above)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_raw(a: *const f32, b: *const f32, n: usize) -> f32 {
+        let chunks = n / 4;
+        let mut acc = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let i = c * 4;
+            acc = vfmaq_f32(acc, vld1q_f32(a.add(i)), vld1q_f32(b.add(i)));
+        }
+        let mut s = vaddvq_f32(acc);
+        for i in chunks * 4..n {
+            s += *a.add(i) * *b.add(i);
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        dot_raw(a.as_ptr(), b.as_ptr(), a.len())
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn matvec(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = dot_raw(rows.as_ptr().add(r * d), q.as_ptr(), d);
+        }
+    }
+
+    /// 2-query blocking: each row load feeds both query accumulators; the
+    /// per-query FMA sequence matches `dot_raw` (bit-identical scores).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn matvec_multi(
+        rows: &[f32],
+        d: usize,
+        qs: &[f32],
+        nq: usize,
+        out: &mut [f32],
+    ) {
+        let nrows = rows.len() / d;
+        let chunks = d / 4;
+        let mut j = 0;
+        while j + 2 <= nq {
+            let q0 = qs.as_ptr().add(j * d);
+            let q1 = qs.as_ptr().add((j + 1) * d);
+            for r in 0..nrows {
+                let row = rows.as_ptr().add(r * d);
+                let mut a0 = vdupq_n_f32(0.0);
+                let mut a1 = vdupq_n_f32(0.0);
+                for c in 0..chunks {
+                    let i = c * 4;
+                    let rv = vld1q_f32(row.add(i));
+                    a0 = vfmaq_f32(a0, rv, vld1q_f32(q0.add(i)));
+                    a1 = vfmaq_f32(a1, rv, vld1q_f32(q1.add(i)));
+                }
+                let mut s0 = vaddvq_f32(a0);
+                let mut s1 = vaddvq_f32(a1);
+                for i in chunks * 4..d {
+                    let x = *row.add(i);
+                    s0 += x * *q0.add(i);
+                    s1 += x * *q1.add(i);
+                }
+                out[j * nrows + r] = s0;
+                out[(j + 1) * nrows + r] = s1;
+            }
+            j += 2;
+        }
+        while j < nq {
+            matvec(rows, d, &qs[j * d..(j + 1) * d], &mut out[j * nrows..(j + 1) * nrows]);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Checker;
+    use crate::util::rng::Pcg64;
+
+    fn naive_dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    /// Scalar-reference fused reduction: score with `dot_scalar`, then the
+    /// exact-f64 `push_all` — the seed's two-pass semantics.
+    fn reference_max_sumexp(rows: &[f32], d: usize, q: &[f32]) -> MaxSumExp {
+        let n = rows.len() / d;
+        let mut acc = MaxSumExp::default();
+        for r in 0..n {
+            acc.push(dot_scalar(&rows[r * d..(r + 1) * d], q) as f64);
+        }
+        acc
+    }
+
+    #[test]
+    fn kernel_detected_once_and_named() {
+        let k = kernel();
+        assert_eq!(k, kernel(), "dispatch must be stable");
+        assert!(!k.name().is_empty());
+    }
+
+    #[test]
+    fn exp_f32_matches_libm() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..2000 {
+            let x = (rng.next_f64() * 100.0 - 95.0) as f32; // [-95, 5]
+            let got = exp_f32(x) as f64;
+            let want = (x as f64).exp();
+            assert!(
+                (got - want).abs() <= 1e-6 * want.max(1e-30),
+                "x={x}: {got} vs {want}"
+            );
+        }
+        assert_eq!(exp_f32(0.0), 1.0);
+        // the upper clamp must keep any positive input finite (the
+        // exponent-bit scaling would overflow past fx = 126)
+        assert!(exp_f32(86.9).is_finite());
+        assert!(exp_f32(1000.0).is_finite());
+    }
+
+    #[test]
+    fn ragged_lengths_match_scalar_reference() {
+        // the satellite checklist's ragged sweep: 0, 1, 7, 8, 9, 63, 64,
+        // 65, 300 for dot / matvec / fused reductions
+        let mut rng = Pcg64::new(2);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 300] {
+            let a: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let got = dot(&a, &b) as f64;
+            let want = naive_dot_f64(&a, &b);
+            assert!((got - want).abs() <= 1e-3 * (1.0 + want.abs()), "dot len={len}");
+
+            if len > 0 {
+                // matvec with d = len over a handful of rows
+                let nrows = 5;
+                let rows: Vec<f32> = (0..nrows * len).map(|_| rng.gaussian() as f32).collect();
+                let mut out = vec![0f32; nrows];
+                matvec_block(&rows, len, &a, &mut out);
+                for r in 0..nrows {
+                    let want = dot(&rows[r * len..(r + 1) * len], &a);
+                    assert_eq!(out[r], want, "matvec len={len} row={r}");
+                }
+            }
+
+            // fused reductions over `len` rows of a fixed small dim
+            let d = 17;
+            let rows: Vec<f32> = (0..len * d).map(|_| rng.gaussian() as f32).collect();
+            let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let got = block_max_sumexp(&rows, d, &q);
+            let want = reference_max_sumexp(&rows, d, &q);
+            assert_eq!(got.count, len as u64, "fused count len={len}");
+            if len == 0 {
+                assert_eq!(got.logsumexp(), f64::NEG_INFINITY);
+            } else {
+                let (g, w) = (got.logsumexp(), want.logsumexp());
+                assert!((g - w).abs() <= 1e-3 * (1.0 + w.abs()), "fused lse len={len}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_simd_dot_matches_scalar() {
+        Checker::new(21).cases(200).check_vec_f32(600, |xs| {
+            let half = xs.len() / 2;
+            let (a, b) = (&xs[..half], &xs[half..2 * half]);
+            let got = dot(a, b) as f64;
+            let want = dot_scalar(a, b) as f64;
+            (got - want).abs() <= 1e-3 * (1.0 + want.abs())
+        });
+    }
+
+    #[test]
+    fn property_matvec_matches_scalar() {
+        // vector = row block, param = feature dim
+        Checker::new(22).cases(120).check_vec_with_param(512, 48, |xs, d| {
+            let n = xs.len() / d;
+            if n == 0 {
+                return true;
+            }
+            let rows = &xs[..n * d];
+            let q: Vec<f32> = (0..d).map(|j| xs[j % xs.len()] * 0.5 + j as f32 * 1e-3).collect();
+            let mut got = vec![0f32; n];
+            matvec_block(rows, d, &q, &mut got);
+            let mut ok = true;
+            for r in 0..n {
+                let want = dot_scalar(&rows[r * d..(r + 1) * d], &q) as f64;
+                ok &= (got[r] as f64 - want).abs() <= 1e-3 * (1.0 + want.abs());
+            }
+            ok
+        });
+    }
+
+    #[test]
+    fn property_fused_reductions_match_reference() {
+        Checker::new(23).cases(80).check_vec_with_param(900, 24, |xs, d| {
+            let n = xs.len() / d;
+            if n == 0 {
+                return true;
+            }
+            let rows = &xs[..n * d];
+            let q: Vec<f32> = (0..d).map(|j| (j as f32 * 0.37).sin()).collect();
+            let got = block_max_sumexp(rows, d, &q);
+            let want = reference_max_sumexp(rows, d, &q);
+            let lse_ok = (got.logsumexp() - want.logsumexp()).abs()
+                <= 1e-3 * (1.0 + want.logsumexp().abs());
+
+            let (gacc, gws) = block_expect_fragment(rows, d, &q);
+            // reference expectation: exact-f64 weights at the final max
+            let mut wws = vec![0f64; d];
+            for r in 0..n {
+                let s = dot_scalar(&rows[r * d..(r + 1) * d], &q) as f64;
+                let w = (s - want.max).exp();
+                for j in 0..d {
+                    wws[j] += w * rows[r * d + j] as f64;
+                }
+            }
+            let mut exp_ok = (gacc.logsumexp() - want.logsumexp()).abs()
+                <= 1e-3 * (1.0 + want.logsumexp().abs());
+            for j in 0..d {
+                let g = gws[j] as f64 / gacc.sumexp;
+                let w = wws[j] / want.sumexp;
+                exp_ok &= (g - w).abs() <= 1e-3 * (1.0 + w.abs());
+            }
+            lse_ok && exp_ok && got.count == n as u64
+        });
+    }
+
+    #[test]
+    fn multi_query_bit_identical_to_single() {
+        let mut rng = Pcg64::new(3);
+        let (n, d) = (67, 29);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        for nq in [1usize, 2, 3, 4, 5, 7, 8] {
+            let qs: Vec<f32> = (0..nq * d).map(|_| rng.gaussian() as f32).collect();
+            let mut got = vec![0f32; nq * n];
+            matvec_block_multi(&rows, d, &qs, nq, &mut got);
+            for j in 0..nq {
+                let mut want = vec![0f32; n];
+                matvec_block(&rows, d, &qs[j * d..(j + 1) * d], &mut want);
+                assert_eq!(&got[j * n..(j + 1) * n], &want[..], "nq={nq} query {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar() {
+        let mut rng = Pcg64::new(4);
+        for len in [0usize, 1, 7, 8, 9, 65, 300] {
+            let x: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let y0: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let mut got = y0.clone();
+            axpy(0.75, &x, &mut got);
+            for i in 0..len {
+                let want = y0[i] + 0.75 * x[i];
+                assert!((got[i] - want).abs() <= 1e-5 * (1.0 + want.abs()), "len={len} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_running_max_rescale_is_correct() {
+        // force multiple chunk-max promotions: ascending scores across
+        // several CHUNK boundaries
+        let d = 1;
+        let n = 3 * CHUNK + 11;
+        let rows: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+        let q = vec![1.0f32];
+        let got = block_max_sumexp(&rows, d, &q);
+        let want = reference_max_sumexp(&rows, d, &q);
+        assert_eq!(got.count, n as u64);
+        assert!((got.logsumexp() - want.logsumexp()).abs() < 1e-4);
+        // and descending (max fixed after first chunk)
+        let rows: Vec<f32> = (0..n).map(|i| -(i as f32) * 0.01).collect();
+        let got = block_max_sumexp(&rows, d, &q);
+        let want = reference_max_sumexp(&rows, d, &q);
+        assert!((got.logsumexp() - want.logsumexp()).abs() < 1e-4);
+    }
+}

@@ -62,6 +62,40 @@ impl MipsIndex for BruteForce {
         TopKResult { items: tk.into_sorted(), scanned: n }
     }
 
+    /// Batched exact scan: every database block is read from memory once
+    /// for the whole query batch (multi-query scoring), instead of once
+    /// per query. Scores are bit-identical to per-query [`top_k`] calls.
+    ///
+    /// [`top_k`]: MipsIndex::top_k
+    fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
+        let nq = qs.len();
+        if nq <= 1 {
+            return qs.iter().map(|q| self.top_k(q, k)).collect();
+        }
+        let d = self.ds.d;
+        let n = self.ds.n;
+        let mut qflat = vec![0f32; nq * d];
+        for (j, q) in qs.iter().enumerate() {
+            qflat[j * d..(j + 1) * d].copy_from_slice(q);
+        }
+        let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(k.min(n).max(1))).collect();
+        let mut buf = vec![0f32; self.block * nq];
+        let mut start = 0;
+        while start < n {
+            let end = (start + self.block).min(n);
+            let bn = end - start;
+            let out = &mut buf[..bn * nq];
+            self.backend.scores_batch(&self.ds.data[start * d..end * d], d, &qflat, nq, out);
+            for (j, tk) in tks.iter_mut().enumerate() {
+                tk.push_block(start as u32, &out[j * bn..(j + 1) * bn]);
+            }
+            start = end;
+        }
+        tks.into_iter()
+            .map(|tk| TopKResult { items: tk.into_sorted(), scanned: n })
+            .collect()
+    }
+
     fn n(&self) -> usize {
         self.ds.n
     }
@@ -112,6 +146,32 @@ mod tests {
         let idx = BruteForce::new(ds, Arc::new(NativeScorer));
         let got = idx.top_k(&[1.0, 0.0, 0.0, 0.0], 100);
         assert_eq!(got.items.len(), 10);
+    }
+
+    #[test]
+    fn top_k_batch_identical_to_per_query() {
+        // the batch path must be bit-compatible with per-query scans:
+        // same ids AND same scores (acceptance criterion of the batched
+        // MIPS work; the SIMD kernels guarantee identical accumulation
+        // order for both paths)
+        let ds = Arc::new(synth::imagenet_like(2_000, 24, 16, 0.3, 8));
+        let idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer)).with_block(333);
+        let mut rng = Pcg64::new(9);
+        for nq in [1usize, 2, 5, 8] {
+            let qs_owned: Vec<Vec<f32>> =
+                (0..nq).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+            let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+            let batch = idx.top_k_batch(&qs, 31);
+            assert_eq!(batch.len(), nq);
+            for (j, got) in batch.iter().enumerate() {
+                let want = idx.top_k(qs[j], 31);
+                assert_eq!(got.ids(), want.ids(), "nq={nq} query {j}");
+                for (g, w) in got.items.iter().zip(&want.items) {
+                    assert_eq!(g.score, w.score, "nq={nq} query {j}");
+                }
+                assert_eq!(got.scanned, want.scanned);
+            }
+        }
     }
 
     #[test]

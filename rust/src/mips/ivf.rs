@@ -169,6 +169,141 @@ impl IvfIndex {
         TopKResult { items: tk.into_sorted(), scanned }
     }
 
+    /// Batched query with an explicit probe count: centroids are scored
+    /// against the *whole* batch in one multi-query pass, per-query probe
+    /// lists are merged so each probed cluster's rows stream from memory
+    /// exactly once per batch, and the cluster scans are parallelized
+    /// with [`parallel_chunks`](crate::util::pool::parallel_chunks) when
+    /// there is enough work to amortize the threads.
+    ///
+    /// Returns exactly what per-query [`top_k_probes`](Self::top_k_probes)
+    /// calls would: the native kernels make batched and single-query
+    /// scores bit-identical, and [`TopK`] retention is push-order
+    /// independent.
+    pub fn top_k_batch_probes(&self, qs: &[&[f32]], k: usize, n_probe: usize) -> Vec<TopKResult> {
+        let nq = qs.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        let d = self.d;
+        let c = self.km.c;
+        let n_probe = n_probe.clamp(1, c);
+        let kk = k.min(self.n).max(1);
+        let mut qflat = vec![0f32; nq * d];
+        for (j, q) in qs.iter().enumerate() {
+            debug_assert_eq!(q.len(), d);
+            qflat[j * d..(j + 1) * d].copy_from_slice(q);
+        }
+
+        // ---- centroid ranking, whole batch at once -------------------------
+        // NOTE: deliberately the native multi-query kernel, not
+        // `self.backend`: single-query probing ranks centroids with the
+        // native `km.centroid_scores` regardless of backend (the centroid
+        // block need not match a PJRT executable's compiled shape), and
+        // batch/single parity requires the same scores here. The native
+        // multi kernel is bit-identical to per-query `centroid_scores`.
+        let mut cscores = vec![0f32; nq * c];
+        crate::linalg::simd::matvec_block_multi(&self.km.centroids, d, &qflat, nq, &mut cscores);
+        // invert per-query probe sets into per-cluster query lists
+        let mut cluster_queries: Vec<Vec<u32>> = vec![Vec::new(); c];
+        for j in 0..nq {
+            let scores = &cscores[j * c..(j + 1) * c];
+            let cmp = |a: &u32, b: &u32| {
+                scores[*b as usize]
+                    .partial_cmp(&scores[*a as usize])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            };
+            let mut order: Vec<u32> = (0..c as u32).collect();
+            if n_probe < c {
+                order.select_nth_unstable_by(n_probe - 1, cmp);
+                order.truncate(n_probe);
+            }
+            for &cl in &order {
+                cluster_queries[cl as usize].push(j as u32);
+            }
+        }
+        let active: Vec<u32> = (0..c as u32)
+            .filter(|&cl| {
+                !cluster_queries[cl as usize].is_empty()
+                    && self.offsets[cl as usize] < self.offsets[cl as usize + 1]
+            })
+            .collect();
+
+        // ---- merged probe scan: each cluster streamed once per batch -------
+        let scan_rows: usize = active
+            .iter()
+            .map(|&cl| self.offsets[cl as usize + 1] - self.offsets[cl as usize])
+            .sum();
+        // threads only pay off once the batch scans enough floats
+        let nthreads = if scan_rows * d >= (1 << 18) {
+            crate::util::pool::default_threads().min(active.len().max(1))
+        } else {
+            1
+        };
+        let parts = crate::util::pool::parallel_chunks(active.len(), nthreads, |_, s, e| {
+            let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(kk)).collect();
+            let mut scanned = vec![0usize; nq];
+            let mut qsel: Vec<f32> = Vec::new();
+            let mut out: Vec<f32> = Vec::new();
+            for &cl in &active[s..e] {
+                let (cs, ce) = (self.offsets[cl as usize], self.offsets[cl as usize + 1]);
+                let rows = &self.grouped[cs * d..ce * d];
+                let ids = &self.ids[cs..ce];
+                let nr = ce - cs;
+                let qlist = &cluster_queries[cl as usize];
+                qsel.clear();
+                for &qj in qlist {
+                    qsel.extend_from_slice(&qflat[qj as usize * d..(qj as usize + 1) * d]);
+                }
+                out.resize(qlist.len() * nr, 0.0);
+                self.backend.scores_batch(rows, d, &qsel, qlist.len(), &mut out);
+                for (jj, &qj) in qlist.iter().enumerate() {
+                    let sc = &out[jj * nr..(jj + 1) * nr];
+                    let tk = &mut tks[qj as usize];
+                    if self.stale.is_empty() {
+                        tk.push_ids(ids, sc);
+                    } else {
+                        for (t, &id) in ids.iter().enumerate() {
+                            if !self.stale.contains(&id) {
+                                tk.push(id, sc[t]);
+                            }
+                        }
+                    }
+                    scanned[qj as usize] += nr;
+                }
+            }
+            (tks, scanned)
+        });
+        let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(kk)).collect();
+        let mut scanned = vec![c; nq]; // centroid scoring work, as in top_k_probes
+        for (part_tks, part_scanned) in parts {
+            for (j, tk) in part_tks.into_iter().enumerate() {
+                for s in tk.into_sorted() {
+                    tks[j].push(s.id, s.score);
+                }
+            }
+            for (j, sc) in part_scanned.into_iter().enumerate() {
+                scanned[j] += sc;
+            }
+        }
+
+        // ---- pending segment: every query scans it exactly -----------------
+        if !self.pending_ids.is_empty() {
+            let np = self.pending_ids.len();
+            let mut out = vec![0f32; np * nq];
+            self.backend.scores_batch(&self.pending_rows, d, &qflat, nq, &mut out);
+            for (j, tk) in tks.iter_mut().enumerate() {
+                tk.push_ids(&self.pending_ids, &out[j * np..(j + 1) * np]);
+                scanned[j] += np;
+            }
+        }
+
+        tks.into_iter()
+            .zip(scanned)
+            .map(|(tk, sc)| TopKResult { items: tk.into_sorted(), scanned: sc })
+            .collect()
+    }
+
     /// Fraction of the database scanned per query at the configured probe
     /// count (expected; exact value depends on cluster fill).
     pub fn expected_scan_fraction(&self) -> f64 {
@@ -254,6 +389,13 @@ impl IvfIndex {
 impl MipsIndex for IvfIndex {
     fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
         self.top_k_probes(q, k, self.n_probe)
+    }
+
+    fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
+        if qs.len() <= 1 {
+            return qs.iter().map(|q| self.top_k(q, k)).collect();
+        }
+        self.top_k_batch_probes(qs, k, self.n_probe)
     }
 
     fn n(&self) -> usize {
@@ -345,6 +487,48 @@ mod tests {
         }
         assert!(r_many >= r_few, "recall must not decrease with probes");
         assert!((r_many / 10.0) > 0.99, "all-probe recall = {}", r_many / 10.0);
+    }
+
+    #[test]
+    fn top_k_batch_matches_per_query() {
+        // merged probe scan + batched centroid ranking must return exactly
+        // the per-query results (ids, scores, and scanned-row accounting)
+        let ds = Arc::new(synth::imagenet_like(4_000, 16, 30, 0.25, 7));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut idx = IvfIndex::build(ds.clone(), &test_cfg(), backend).unwrap();
+        let mut rng = Pcg64::new(8);
+        for nq in [2usize, 3, 8] {
+            let qs_owned: Vec<Vec<f32>> =
+                (0..nq).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+            let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+            let batch = idx.top_k_batch(&qs, 40);
+            for (j, got) in batch.iter().enumerate() {
+                let want = idx.top_k(qs[j], 40);
+                assert_eq!(got.ids(), want.ids(), "nq={nq} query {j}");
+                for (g, w) in got.items.iter().zip(&want.items) {
+                    assert_eq!(g.score, w.score, "nq={nq} query {j}");
+                }
+                assert_eq!(got.scanned, want.scanned, "nq={nq} query {j}");
+            }
+        }
+        // with sparse updates in flight, the pending segment and stale
+        // tombstones must behave identically on both paths
+        let q = qs_for_update(&ds);
+        let boosted: Vec<f32> = q.iter().map(|x| x * 2.0).collect();
+        idx.update_row(77, &boosted);
+        let qs: Vec<&[f32]> = vec![q.as_slice(), q.as_slice()];
+        let batch = idx.top_k_batch(&qs, 5);
+        let want = idx.top_k(&q, 5);
+        for got in &batch {
+            assert_eq!(got.items[0].id, 77);
+            assert_eq!(got.ids(), want.ids());
+        }
+    }
+
+    fn qs_for_update(ds: &Dataset) -> Vec<f32> {
+        let mut v = ds.row(0).to_vec();
+        crate::linalg::normalize(&mut v);
+        v
     }
 
     #[test]

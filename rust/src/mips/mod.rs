@@ -54,6 +54,17 @@ pub trait MipsIndex: Send + Sync {
     /// Approximate (or exact) top-k by inner product with `q`.
     fn top_k(&self, q: &[f32], k: usize) -> TopKResult;
 
+    /// Batched top-k: one result per query, in order. Default: a
+    /// per-query [`top_k`](Self::top_k) loop (what the LSH families use);
+    /// batch-aware indexes (brute, IVF) override it to amortize the scan —
+    /// every visited row block is streamed from memory once for the whole
+    /// batch via [`ScoreBackend::scores_batch`]. Implementations must
+    /// return exactly what per-query calls would (the native kernels make
+    /// the two paths bit-identical).
+    fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
+        qs.iter().map(|q| self.top_k(q, k)).collect()
+    }
+
     /// Database size.
     fn n(&self) -> usize;
     /// Feature dimension.

@@ -131,7 +131,7 @@ impl Runtime {
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)?;
             executables.insert(entry.name.clone(), Executable { entry: entry.clone(), exe });
-            log::info!("compiled artifact '{}' from {}", entry.name, entry.file);
+            eprintln!("compiled artifact '{}' from {}", entry.name, entry.file);
         }
         Ok(Runtime { manifest, executables, platform })
     }

@@ -2,9 +2,34 @@
 //! (HLO text + manifest), compile them once, and expose a
 //! [`ScoreBackend`](crate::scorer::ScoreBackend) that runs the paper's
 //! score/partition/expectation compute inside XLA.
+//!
+//! ## Feature gating
+//!
+//! The real implementation needs the vendored `xla` crate, which the
+//! offline registry does not carry, so it sits behind the off-by-default
+//! `pjrt` cargo feature. Without the feature this module exports a
+//! [stub `PjrtScorer`](stub) with the same surface whose `load` fails
+//! gracefully at runtime — every artifact-dependent caller (CLI
+//! `selfcheck`, integration tests, benches) keeps compiling and degrades
+//! to "artifacts unavailable" behavior.
+//!
+//! Enabling the feature takes two steps, both deliberate: add the
+//! vendored crate under `[dependencies]` (`xla = { path = ... }` — it is
+//! not declared as an optional dependency because cargo resolves even
+//! unused optional deps, which would break the offline default build)
+//! and pass `--features pjrt`.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_scorer;
 
+#[cfg(feature = "pjrt")]
 pub use client::{ArtifactManifest, Runtime};
+#[cfg(feature = "pjrt")]
 pub use pjrt_scorer::PjrtScorer;
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtScorer;

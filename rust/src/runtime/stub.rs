@@ -1,0 +1,61 @@
+//! Stub [`PjrtScorer`] for builds without the `pjrt` cargo feature.
+//!
+//! The XLA/PJRT backend needs the vendored `xla` crate, which the offline
+//! registry does not provide. This stub keeps the public surface of the
+//! real scorer (`load`, `block`, `d`, the [`ScoreBackend`] impl) so every
+//! caller compiles unchanged, but `load` — the only constructor — always
+//! returns a runtime error. The type is therefore unconstructible in
+//! stub builds and the remaining methods are statically unreachable.
+
+use crate::error::{Error, Result};
+use crate::scorer::ScoreBackend;
+
+/// Placeholder for the PJRT-backed scorer. See the module docs: in
+/// builds without the `pjrt` feature this cannot be constructed.
+pub struct PjrtScorer {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl PjrtScorer {
+    /// Always fails: this build does not include the XLA/PJRT runtime.
+    pub fn load(_dir: &str) -> Result<Self> {
+        Err(Error::runtime(
+            "built without the `pjrt` cargo feature — rebuild with `--features pjrt` \
+             (requires the vendored `xla` crate) to load AOT artifacts",
+        ))
+    }
+
+    /// AOT block size (unreachable: the stub cannot be constructed).
+    pub fn block(&self) -> usize {
+        match self._unconstructible {}
+    }
+
+    /// Compiled feature dimension (unreachable: see [`block`](Self::block)).
+    pub fn d(&self) -> usize {
+        match self._unconstructible {}
+    }
+}
+
+impl ScoreBackend for PjrtScorer {
+    fn scores(&self, _rows: &[f32], _d: usize, _q: &[f32], _out: &mut [f32]) {
+        match self._unconstructible {}
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_gracefully() {
+        let err = match PjrtScorer::load("artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("stub must not load"),
+        };
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

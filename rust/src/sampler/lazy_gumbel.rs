@@ -123,6 +123,40 @@ impl LazyGumbelSampler {
         let session = SampleSession::new(top.clone());
         self.sample_in_session(&session, q, rng)
     }
+
+    /// Open sessions for a whole batch of θs with ONE batched MIPS
+    /// retrieval ([`MipsIndex::top_k_batch`]) — the multi-user analogue of
+    /// [`session`](Self::session): concurrent queries share every index
+    /// row-block scan instead of re-streaming the database per θ.
+    pub fn sessions_batch(&self, qs: &[&[f32]]) -> Vec<SampleSession> {
+        self.index
+            .top_k_batch(qs, self.k)
+            .into_iter()
+            .map(SampleSession::new)
+            .collect()
+    }
+
+    /// Batched Algorithm 1: draw `counts[i]` samples for `qs[i]`. One
+    /// batched top-k retrieval amortizes the scan across all queries;
+    /// draws then proceed per session exactly as in the single-θ path.
+    pub fn sample_batch(
+        &self,
+        qs: &[&[f32]],
+        counts: &[usize],
+        rng: &mut Pcg64,
+    ) -> Vec<Vec<SampleOutcome>> {
+        debug_assert_eq!(qs.len(), counts.len());
+        let sessions = self.sessions_batch(qs);
+        let mut all = Vec::with_capacity(qs.len());
+        for ((session, q), &count) in sessions.iter().zip(qs).zip(counts) {
+            let mut outs = Vec::with_capacity(count.max(1));
+            for _ in 0..count.max(1) {
+                outs.push(self.sample_in_session(session, q, rng));
+            }
+            all.push(outs);
+        }
+        all
+    }
 }
 
 /// Reusable per-θ state for Algorithm 1 (top set + exclusion set).

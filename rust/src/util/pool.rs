@@ -38,7 +38,11 @@ where
     crossbeam_utils::thread::scope(|s| {
         let mut handles = Vec::with_capacity(nthreads);
         for t in 0..nthreads {
-            let start = t * chunk;
+            // clamp BOTH ends: with chunk = ceil(n/nthreads), a late
+            // chunk's start can exceed n (e.g. n=5, nthreads=4 → t=3
+            // starts at 6), which must become an empty [n, n) range, not
+            // an inverted one
+            let start = (t * chunk).min(n);
             let end = ((t + 1) * chunk).min(n);
             let f = &f;
             handles.push(s.spawn(move |_| f(t, start, end)));
@@ -150,6 +154,30 @@ impl<T> WorkQueue<T> {
         }
     }
 
+    /// Blocking batch pop: waits for at least one item, then drains up to
+    /// `max` items that are already queued **without waiting for more**.
+    /// This is the coordinator's batching primitive — under load the
+    /// queue fills while workers are busy and whole batches come off at
+    /// once (amortized index scans); when idle it degrades to per-item
+    /// pops with no added latency. `None` once closed *and* drained.
+    pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let take = g.items.len().min(max);
+                let items: Vec<T> = g.items.drain(..take).collect();
+                drop(g);
+                self.not_full.notify_all();
+                return Some(items);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
     /// Close the queue; wakes all blocked producers/consumers.
     pub fn close(&self) {
         let mut g = self.inner.lock().unwrap();
@@ -188,6 +216,19 @@ mod tests {
     fn parallel_chunks_single_thread_inline() {
         let parts = parallel_chunks(10, 1, |t, s, e| (t, s, e));
         assert_eq!(parts, vec![(0, 0, 10)]);
+    }
+
+    #[test]
+    fn parallel_chunks_overshooting_chunks_are_empty_not_inverted() {
+        // n=5, 4 threads → chunk=2 → thread 3 would start at 6 > n; it
+        // must receive the empty range [5, 5), never an inverted slice
+        let parts = parallel_chunks(5, 4, |_, s, e| (s, e));
+        assert_eq!(parts.len(), 4);
+        for &(s, e) in &parts {
+            assert!(s <= e, "inverted range ({s}, {e})");
+        }
+        assert_eq!(parts.iter().map(|&(s, e)| e - s).sum::<usize>(), 5);
+        assert_eq!(parts.last().unwrap(), &(5, 5));
     }
 
     #[test]
@@ -237,6 +278,32 @@ mod tests {
         }
         producer.join().unwrap();
         assert_eq!(got, (0..100).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn pop_batch_drains_queued_items_without_waiting() {
+        let q = WorkQueue::new(16);
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.pop_batch(3), Some(vec![0, 1, 2]));
+        assert_eq!(q.pop_batch(8), Some(vec![3, 4]));
+        q.close();
+        assert_eq!(q.pop_batch(4), None);
+    }
+
+    #[test]
+    fn pop_batch_blocks_until_first_item() {
+        let q = Arc::new(WorkQueue::new(4));
+        let qc = q.clone();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert!(qc.push(7));
+            qc.close();
+        });
+        assert_eq!(q.pop_batch(4), Some(vec![7]));
+        assert_eq!(q.pop_batch(4), None);
+        producer.join().unwrap();
     }
 
     #[test]

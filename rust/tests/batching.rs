@@ -1,0 +1,163 @@
+//! Batched-vs-single parity for the multi-query MIPS / sampler /
+//! estimator / coordinator paths introduced with the SIMD scoring
+//! subsystem: batching is a pure amortization — it must never change
+//! *what* is computed, only how often the database is streamed.
+
+use gmips::config::{Config, IndexKind};
+use gmips::coordinator::{Coordinator, Engine, Request, Response};
+use gmips::data::{self, Dataset};
+use gmips::estimator::partition::{exact_log_partition, PartitionEstimator};
+use gmips::mips::{self, brute::BruteForce, MipsIndex};
+use gmips::sampler::lazy_gumbel::LazyGumbelSampler;
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::util::check::Checker;
+use gmips::util::rng::Pcg64;
+use gmips::util::stats::gof_ok;
+use std::sync::Arc;
+
+fn testset(n: usize, d: usize, seed: u64) -> Arc<Dataset> {
+    Arc::new(gmips::data::synth::imagenet_like(n, d, 20, 0.3, seed))
+}
+
+#[test]
+fn property_brute_batch_identical_across_random_batches() {
+    // satellite checklist: top_k_batch returns identical ids/scores to
+    // per-query top_k on the brute index — checked as a property over
+    // randomized batch compositions
+    let ds = testset(1_500, 16, 1);
+    let idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer));
+    Checker::new(31).cases(15).check_u64(1u64 << 32, |seed| {
+        let mut rng = Pcg64::new(seed ^ 0xBA7C4);
+        let nq = 1 + (rng.next_below(7) as usize);
+        let k = 1 + (rng.next_below(60) as usize);
+        let qs_owned: Vec<Vec<f32>> =
+            (0..nq).map(|_| data::random_theta(&ds, 0.05, &mut rng)).collect();
+        let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+        let batch = idx.top_k_batch(&qs, k);
+        batch.iter().enumerate().all(|(j, got)| {
+            let want = idx.top_k(qs[j], k);
+            got.ids() == want.ids()
+                && got
+                    .items
+                    .iter()
+                    .zip(&want.items)
+                    .all(|(g, w)| g.score == w.score)
+        })
+    });
+}
+
+#[test]
+fn default_batch_impl_matches_loop_for_lsh_families() {
+    // lsh/tiered use the trait's default per-query loop: sanity-check the
+    // default really is transparent
+    let ds = testset(2_000, 16, 2);
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut cfg = Config::default().index;
+    cfg.tables = 6;
+    cfg.bits = 7;
+    cfg.rungs = 6;
+    let mut rng = Pcg64::new(3);
+    let qs_owned: Vec<Vec<f32>> =
+        (0..4).map(|_| data::random_theta(&ds, 0.05, &mut rng)).collect();
+    let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+    for kind in [IndexKind::Lsh, IndexKind::Tiered] {
+        cfg.kind = kind;
+        let idx = mips::build_index(&ds, &cfg, backend.clone()).unwrap();
+        let batch = idx.top_k_batch(&qs, 20);
+        assert_eq!(batch.len(), qs.len());
+        for (j, got) in batch.iter().enumerate() {
+            let want = idx.top_k(qs[j], 20);
+            assert_eq!(got.ids(), want.ids(), "{kind:?} query {j}");
+        }
+    }
+}
+
+#[test]
+fn batched_sampling_is_still_exact() {
+    // Theorem 3.1 must survive the batched retrieval: GOF of batch-drawn
+    // samples against the exact softmax
+    let ds = testset(300, 8, 4);
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let index: Arc<dyn MipsIndex> = Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+    let sampler = LazyGumbelSampler::new(ds.clone(), index, backend.clone(), 30, 0.0);
+    let exact = gmips::sampler::exact::ExactSampler::new(ds.clone(), backend);
+    let mut rng = Pcg64::new(5);
+    let q = data::random_theta(&ds, 0.2, &mut rng);
+    let probs = exact.probabilities(&q);
+    // batch of 4 copies of the same θ, many draws each
+    let qs: Vec<&[f32]> = vec![q.as_slice(); 4];
+    let per_q = 8_000usize;
+    let mut counts = vec![0u64; ds.n];
+    let outs = sampler.sample_batch(&qs, &[per_q; 4], &mut rng);
+    assert_eq!(outs.len(), 4);
+    for per_theta in &outs {
+        assert_eq!(per_theta.len(), per_q);
+        for o in per_theta {
+            counts[o.id as usize] += 1;
+        }
+    }
+    let total = (4 * per_q) as u64;
+    assert!(gof_ok(&counts, &probs, total, 5.0), "batched Alg 1 GOF failed");
+}
+
+#[test]
+fn batched_partition_estimates_are_accurate() {
+    let ds = testset(2_000, 8, 6);
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let index: Arc<dyn MipsIndex> = Arc::new(BruteForce::new(ds.clone(), backend.clone()));
+    let est = PartitionEstimator::new(ds.clone(), index, backend.clone(), 150, 150);
+    let mut rng = Pcg64::new(7);
+    let qs_owned: Vec<Vec<f32>> =
+        (0..6).map(|_| data::random_theta(&ds, 0.1, &mut rng)).collect();
+    let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+    let ests = est.estimate_batch(&qs, &mut rng);
+    assert_eq!(ests.len(), qs.len());
+    for (j, e) in ests.iter().enumerate() {
+        let want = exact_log_partition(&ds, backend.as_ref(), qs[j]);
+        let rel = ((e.log_z - want).exp() - 1.0).abs();
+        assert!(rel < 0.25, "query {j}: rel err {rel} ({} vs {want})", e.log_z);
+        assert!(e.work.k > 0 && e.work.l > 0);
+    }
+}
+
+#[test]
+fn coordinator_drains_batches_under_load() {
+    // one worker + a deep queue: requests pile up while the worker is
+    // busy, so whole batches flow through Engine::handle_batch; every
+    // ticket must still get its own well-formed response
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.data.n = 3_000;
+    cfg.data.d = 16;
+    cfg.index.kind = IndexKind::Ivf;
+    cfg.index.n_clusters = 40;
+    cfg.index.n_probe = 10;
+    cfg.index.kmeans_iters = 3;
+    cfg.index.train_sample = 1_500;
+    let engine = Arc::new(Engine::from_config(&cfg, None).unwrap());
+    let coord = Coordinator::start(engine.clone(), 1, 64, 11);
+    let mut rng = Pcg64::new(12);
+    let mut tickets = Vec::new();
+    for i in 0..40 {
+        let theta = data::random_theta(&engine.ds, 0.05, &mut rng);
+        let req = match i % 4 {
+            0 => Request::Sample { theta, count: 2 },
+            1 => Request::TopK { theta, k: 7 },
+            2 => Request::LogPartition { theta },
+            _ => Request::ExpectFeatures { theta },
+        };
+        tickets.push((i, coord.submit(req).unwrap()));
+    }
+    for (i, t) in tickets {
+        match (i % 4, t.wait().unwrap()) {
+            (0, Response::Samples { ids, .. }) => assert_eq!(ids.len(), 2),
+            (1, Response::TopK { ids, scores }) => {
+                assert_eq!(ids.len(), 7);
+                assert!(scores.windows(2).all(|w| w[0] >= w[1]));
+            }
+            (2, Response::LogPartition { log_z, .. }) => assert!(log_z.is_finite()),
+            (3, Response::Features { mean, .. }) => assert_eq!(mean.len(), engine.ds.d),
+            (_, other) => panic!("request {i}: unexpected {other:?}"),
+        }
+    }
+    coord.shutdown();
+}
