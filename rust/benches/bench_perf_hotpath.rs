@@ -5,8 +5,10 @@
 //! Stages: native single/batched block scoring, fused vs two-pass
 //! `(max, Σexp)` reductions, fused expectation fragments, PJRT block
 //! scoring (when artifacts exist), top-k collection, IVF probe
-//! (single-query, 8 sequential queries, and one 8-query batch), lazy tail
-//! draw, full Alg-1 sample, Alg-3 estimate.
+//! (single-query, 8 sequential queries, and one 8-query batch), SQ8
+//! quantized scan vs f32 scan (plus the end-to-end two-stage brute
+//! top-k) on a ≥100k × 128 dataset, lazy tail draw, full Alg-1 sample,
+//! Alg-3 estimate.
 //!
 //! Besides the banner table, results are written machine-readably to
 //! `BENCH_perf_hotpath.json` (stage name, mean seconds, iters, GFLOP/s
@@ -195,6 +197,77 @@ fn main() {
         seq_mean / batch_mean
     );
 
+    // ---- SQ8 quantized scan vs f32 scan (≥100k × 128) --------------------------
+    // acceptance: ≥2× pass-1 scan throughput; the two-stage brute top_k
+    // below shows the end-to-end effect (screen + exact re-rank)
+    let quant_speedup;
+    {
+        use gmips::linalg::quant::{QuantQuery, QuantView};
+        use gmips::mips::brute::BruteForce;
+        let qn = opts.n.max(100_000);
+        let qd = 128usize;
+        let mut qdata = cfg.data.clone();
+        qdata.n = qn;
+        qdata.d = qd;
+        qdata.path = String::new();
+        let qds = Arc::new(data::generate(&qdata));
+        let qv = QuantView::encode(&qds.data, qd, 64);
+        let mut qrng = Pcg64::new(17);
+        let theta = data::random_theta(&qds, cfg.data.temperature, &mut qrng);
+        let qq = QuantQuery::encode(&theta);
+        let scan_flops = 2.0 * qn as f64 * qd as f64;
+        let kq = (qn as f64).sqrt().round() as usize;
+        let mut sbuf = vec![0f32; 4096];
+
+        let s = bench.run(&format!("f32 scan+topk {qn}x{qd}"), || {
+            let mut tk = TopK::new(kq);
+            let mut start = 0;
+            while start < qn {
+                let end = (start + 4096).min(qn);
+                let out = &mut sbuf[..end - start];
+                NativeScorer.scores(
+                    std::hint::black_box(&qds.data[start * qd..end * qd]),
+                    qd,
+                    &theta,
+                    out,
+                );
+                tk.push_block(start as u32, out);
+                start = end;
+            }
+            std::hint::black_box(tk.into_sorted());
+        });
+        let f32_mean = s.mean_s;
+        record(&mut results, s, Some(scan_flops));
+
+        let s = bench.run(&format!("sq8 quant scan+topk {qn}x{qd}"), || {
+            let mut tk = TopK::new(kq);
+            let mut start = 0;
+            while start < qn {
+                let end = (start + 4096).min(qn);
+                let out = &mut sbuf[..end - start];
+                qv.scores(start, end, std::hint::black_box(&qq), out);
+                tk.push_block(start as u32, out);
+                start = end;
+            }
+            std::hint::black_box(tk.into_sorted());
+        });
+        let quant_mean = s.mean_s;
+        record(&mut results, s, Some(scan_flops));
+        quant_speedup = f32_mean / quant_mean;
+        println!("sq8 quantized scan speedup vs f32: {quant_speedup:.2}x");
+
+        let bf = BruteForce::new(qds.clone(), Arc::new(NativeScorer));
+        let s = bench.run(&format!("brute top_k f32 {qn}x{qd}"), || {
+            std::hint::black_box(bf.top_k(&theta, kq));
+        });
+        record(&mut results, s, Some(scan_flops));
+        let bq = BruteForce::new(qds.clone(), Arc::new(NativeScorer)).with_quant(64, 4);
+        let s = bench.run(&format!("brute top_k sq8 two-stage {qn}x{qd}"), || {
+            std::hint::black_box(bq.top_k(&theta, kq));
+        });
+        record(&mut results, s, Some(scan_flops));
+    }
+
     // ---- lazy tail draw ---------------------------------------------------------
     let exclude: FxHashSet<u32> = (0..k as u32).collect();
     let b = gumbel::fixed_cutoff(ds.n, k);
@@ -274,6 +347,7 @@ fn main() {
         ("n", Json::num(ds.n as f64)),
         ("d", Json::num(d as f64)),
         ("batch_queries", Json::num(NQ as f64)),
+        ("quant_scan_speedup", Json::num(quant_speedup)),
         ("stages", Json::Arr(stages)),
     ]);
     match std::fs::write("BENCH_perf_hotpath.json", doc.to_string()) {

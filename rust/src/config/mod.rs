@@ -143,6 +143,15 @@ pub struct IndexConfig {
     pub bits: usize,
     /// Tiered LSH: number of ladder rungs
     pub rungs: usize,
+    /// SQ8 two-stage scan (brute + IVF): screen candidates on int8
+    /// quantized scores, then re-rank survivors with the exact f32
+    /// kernels. Results are bit-identical to the f32-only scan.
+    pub quant: bool,
+    /// quantized pass-1 retains `k·overscan` candidates before the exact
+    /// re-rank (larger = fewer exact-scan fallbacks, more pass-2 work)
+    pub overscan: usize,
+    /// rows per SQ8 `(scale, offset)` quantization block
+    pub quant_block: usize,
     pub seed: u64,
 }
 
@@ -200,6 +209,10 @@ pub struct ServeConfig {
     pub addr: String,
     pub workers: usize,
     pub queue_depth: usize,
+    /// bounded micro-wait (µs) a worker spends deepening a drained batch
+    /// before serving it — trades a little p50 latency for deeper batches
+    /// under moderate load. 0 (default) = serve whatever is queued.
+    pub micro_wait_us: u64,
 }
 
 /// Full system config.
@@ -239,6 +252,9 @@ impl Default for Config {
                 tables: 16,
                 bits: 14,
                 rungs: 12,
+                quant: false,
+                overscan: 4,
+                quant_block: 64,
                 seed: 7,
             },
             sampler: SamplerConfig { k_mult: 5.0, l_mult: 5.0, gap_c: 0.0 },
@@ -259,7 +275,12 @@ impl Default for Config {
                 artifacts_dir: "artifacts".to_string(),
                 block: 4096,
             },
-            serve: ServeConfig { addr: "127.0.0.1:7431".to_string(), workers: 0, queue_depth: 256 },
+            serve: ServeConfig {
+                addr: "127.0.0.1:7431".to_string(),
+                workers: 0,
+                queue_depth: 256,
+                micro_wait_us: 0,
+            },
         }
     }
 }
@@ -336,6 +357,9 @@ impl Config {
         c.index.tables = doc.get_usize("index.tables", c.index.tables)?;
         c.index.bits = doc.get_usize("index.bits", c.index.bits)?;
         c.index.rungs = doc.get_usize("index.rungs", c.index.rungs)?;
+        c.index.quant = doc.get_bool("index.quant", c.index.quant)?;
+        c.index.overscan = doc.get_usize("index.overscan", c.index.overscan)?;
+        c.index.quant_block = doc.get_usize("index.quant_block", c.index.quant_block)?;
         c.index.seed = doc.get_u64("index.seed", c.index.seed)?;
 
         c.sampler.k_mult = doc.get_f64("sampler.k_mult", c.sampler.k_mult)?;
@@ -364,6 +388,7 @@ impl Config {
         c.serve.addr = doc.get_str("serve.addr", &c.serve.addr)?;
         c.serve.workers = doc.get_usize("serve.workers", c.serve.workers)?;
         c.serve.queue_depth = doc.get_usize("serve.queue_depth", c.serve.queue_depth)?;
+        c.serve.micro_wait_us = doc.get_u64("serve.micro_wait_us", c.serve.micro_wait_us)?;
         Ok(())
     }
 
@@ -419,6 +444,9 @@ impl Config {
         }
         if self.runtime.block == 0 {
             return Err(Error::config("runtime.block must be positive"));
+        }
+        if self.index.overscan == 0 || self.index.quant_block == 0 {
+            return Err(Error::config("index.overscan and index.quant_block must be positive"));
         }
         if self.learn.train_size == 0 || self.learn.train_size > self.data.n {
             return Err(Error::config("learn.train_size must be in [1, n]"));
@@ -523,6 +551,29 @@ mod tests {
         let mut c = Config::default();
         c.learn.train_size = 0;
         assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.index.overscan = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.index.quant_block = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn quant_and_micro_wait_knobs_from_toml() {
+        let mut c = Config::default();
+        assert!(!c.index.quant);
+        assert_eq!(c.serve.micro_wait_us, 0);
+        let doc = TomlDoc::parse(
+            "[index]\nquant = true\noverscan = 8\nquant_block = 32\n[serve]\nmicro_wait_us = 150",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert!(c.index.quant);
+        assert_eq!(c.index.overscan, 8);
+        assert_eq!(c.index.quant_block, 32);
+        assert_eq!(c.serve.micro_wait_us, 150);
+        c.validate().unwrap();
     }
 
     #[test]

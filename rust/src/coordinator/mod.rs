@@ -65,15 +65,33 @@ impl Coordinator {
     /// Spawn `workers` threads (0 = all cores) over a queue of depth
     /// `queue_depth` (backpressure: `submit` blocks when full).
     pub fn start(engine: Arc<Engine>, workers: usize, queue_depth: usize, seed: u64) -> Coordinator {
+        Self::start_with_wait(engine, workers, queue_depth, seed, 0)
+    }
+
+    /// [`start`](Self::start) with a bounded batching micro-wait: each
+    /// worker lets a freshly drained batch deepen for up to
+    /// `micro_wait_us` microseconds (via
+    /// [`WorkQueue::pop_batch_wait`]) before serving it — deeper batches
+    /// under moderate load, traded against a bounded p50 latency cost.
+    /// `0` (the [`start`](Self::start) default and the
+    /// `serve.micro_wait_us` config default) serves whatever is queued.
+    pub fn start_with_wait(
+        engine: Arc<Engine>,
+        workers: usize,
+        queue_depth: usize,
+        seed: u64,
+        micro_wait_us: u64,
+    ) -> Coordinator {
         let workers = if workers == 0 { crate::util::pool::default_threads() } else { workers };
         let queue = Arc::new(WorkQueue::<Job>::new(queue_depth.max(1)));
+        let wait = std::time::Duration::from_micros(micro_wait_us);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let queue = queue.clone();
             let engine = engine.clone();
             let mut rng = Pcg64::new_stream(seed, w as u64 + 1);
             handles.push(std::thread::spawn(move || {
-                while let Some(jobs) = queue.pop_batch(MAX_BATCH) {
+                while let Some(jobs) = queue.pop_batch_wait(MAX_BATCH, wait) {
                     if jobs.len() == 1 {
                         let job = jobs.into_iter().next().unwrap();
                         let resp = engine.handle(&job.req, &mut rng);
@@ -192,6 +210,27 @@ mod tests {
             Response::Stats { text } => assert!(text.contains("n=2000")),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn micro_wait_still_serves_everything() {
+        // the batching micro-wait must be a pure latency/depth trade —
+        // every request still gets a well-formed response
+        let engine = tiny_engine();
+        let coord = Coordinator::start_with_wait(engine.clone(), 2, 32, 5, 200);
+        let mut rng = Pcg64::new(6);
+        let mut tickets = Vec::new();
+        for _ in 0..12 {
+            let theta = data::random_theta(&engine.ds, 0.05, &mut rng);
+            tickets.push(coord.submit(Request::Sample { theta, count: 1 }).unwrap());
+        }
+        for t in tickets {
+            match t.wait().unwrap() {
+                Response::Samples { ids, .. } => assert_eq!(ids.len(), 1),
+                other => panic!("{other:?}"),
+            }
+        }
+        coord.shutdown();
     }
 
     #[test]

@@ -72,12 +72,32 @@ impl Dataset {
 
     /// Gather rows by id into a caller buffer (`out.len() == ids.len()*d`).
     /// Used to stage scattered S/T rows into contiguous blocks for the
-    /// PJRT executables.
+    /// PJRT executables and for the LSH / quantized-survivor re-rank
+    /// paths, so the copy loop is hot: bounds are validated once up
+    /// front (O(ids) cheap passes) instead of per row inside the loop.
     pub fn gather(&self, ids: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), ids.len() * self.d);
         let d = self.d;
+        if ids.is_empty() || d == 0 {
+            return;
+        }
+        // one-time validation that makes the unchecked copies below sound
+        assert!(out.len() >= ids.len() * d, "gather: output buffer too small");
+        let max_id = ids.iter().copied().max().unwrap() as usize;
+        assert!(max_id < self.n, "gather: id {max_id} out of range (n={})", self.n);
         for (j, &id) in ids.iter().enumerate() {
-            out[j * d..(j + 1) * d].copy_from_slice(self.row(id as usize));
+            // Safety: id ≤ max_id < n so the source row [id·d, (id+1)·d)
+            // lies inside `data` (len n·d), and j < ids.len() so the
+            // destination [j·d, (j+1)·d) lies inside `out` (len ≥
+            // ids.len()·d, asserted above). Source and destination are
+            // distinct allocations, so the ranges cannot overlap.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    self.data.as_ptr().add(id as usize * d),
+                    out.as_mut_ptr().add(j * d),
+                    d,
+                );
+            }
         }
     }
 

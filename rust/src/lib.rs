@@ -30,11 +30,16 @@
 //! The native scoring floor is [`linalg::simd`]: runtime-dispatched
 //! explicit-SIMD kernels (AVX2+FMA / NEON / scalar, chosen once at
 //! startup) with single-pass fused `(max, Σexp, Σexp·φ)` reductions and
-//! register-blocked multi-query scoring. Batching threads all the way up
-//! the stack — [`mips::MipsIndex::top_k_batch`] merges probe scans so a
-//! query batch streams each row block once, the samplers/estimators
-//! expose `*_batch` entry points, and the [`coordinator`] drains its
-//! queue in batches so concurrent users share index scans.
+//! register-blocked multi-query scoring. On top of it sits the SQ8
+//! two-stage scan ([`linalg::quant`]): brute/IVF scans screen candidates
+//! on an int8 shadow copy (¼ of the memory traffic) and exact-re-rank
+//! the few survivors, bit-identical to the f32-only scan by an
+//! error-bound certificate. Batching threads all the way up the stack —
+//! [`mips::MipsIndex::top_k_batch`] merges probe scans so a query batch
+//! streams each row block once (brute, IVF, and the LSH families), the
+//! samplers/estimators expose `*_batch` entry points, and the
+//! [`coordinator`] drains its queue in batches (with an optional bounded
+//! micro-wait to deepen them) so concurrent users share index scans.
 //!
 //! ## Quickstart
 //!
@@ -52,6 +57,14 @@
 //! let sample = sampler.sample(&theta, &mut rng);
 //! println!("sampled state {}", sample.id);
 //! ```
+
+// Style lint tolerated crate-wide (deliberately broad): the blocked
+// numeric kernels and the row-major index arithmetic around them
+// (linalg, mips, data::pca/synth) use explicit index loops on purpose —
+// they mirror the unsafe SIMD variants they are the scalar reference
+// for, and iterator rewrites obscure the offset math. Revisit scoping
+// this down to the kernel modules once clippy runs regularly in CI.
+#![allow(clippy::needless_range_loop)]
 
 pub mod config;
 pub mod coordinator;

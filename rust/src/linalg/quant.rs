@@ -1,0 +1,645 @@
+//! SQ8 scalar-quantized scanning — the int8 screening pass of the
+//! two-stage MIPS scan.
+//!
+//! After the fused/batched f32 kernels (PR 1), the probe scan is pure
+//! memory bandwidth: every visited row streams `4·d` bytes. This module
+//! cuts that to `d` bytes by keeping a quantized shadow copy of the row
+//! storage and scoring it with integer SIMD kernels; the exact f32
+//! kernels then only touch the handful of rows that can still matter.
+//!
+//! ## Encoding
+//!
+//! Rows are encoded in **blocks** of [`QuantView::block`] consecutive
+//! rows. Each block stores an affine `(scale, offset)` pair and every
+//! value in the block becomes one u8 code:
+//!
+//! ```text
+//! x ≈ x̂ = scale · code + offset        code = round((x − offset)/scale)
+//! ```
+//!
+//! with `offset = min(block)` and `scale = (max − min)/255`, so the
+//! per-element reconstruction error is at most `scale/2` (constant
+//! blocks get `scale = 0` and reconstruct exactly). Queries are encoded
+//! symmetrically to **i16** (`q ≈ s_q · u`): a query is one `d`-vector
+//! per scan, so spending 2 bytes/element on it costs nothing in
+//! bandwidth while making the query-side quantization error negligible
+//! next to the row-side error — the quantized score is one widening
+//! integer dot per row:
+//!
+//! ```text
+//! Q = scale·s_q·(Σ_j code_j·u_j) + offset·(Σ_j q_j)
+//! ```
+//!
+//! The `Σ_j q_j` term uses the *exact* f32 query sum, so the offset part
+//! contributes no quantization error at all. The i16 range is capped so
+//! the integer dot can never overflow its i32 accumulator
+//! (`|Σ c_j·u_j| ≤ d·255·u_max < 2³¹`).
+//!
+//! ## The error-bound / overscan contract
+//!
+//! Writing `x_j = scale·c_j + offset + e_j` (`|e_j| ≤ scale/2`) and
+//! `q_j = s_q·u_j + f_j` (`|f_j| ≤ s_q/2`), the true score satisfies
+//!
+//! ```text
+//! |score − Q| ≤ scale·(s_q/2)·Σ_j c_j + (scale/2)·‖q‖₁ =: ε_block
+//! ```
+//!
+//! [`QuantView::error_bound`] returns `ε = max_blocks ε_block` plus a
+//! deterministic slack for the f32 kernel arithmetic itself (see its
+//! docs). A two-stage scan then works as follows: pass 1
+//! retains the `k·overscan` best *quantized* scores; pass 2 re-ranks all
+//! retained candidates with the exact f32 kernels; finally
+//! [`coverage_proved`] certifies the result. Let `q_floor` be the worst
+//! retained quantized score and `T` the exact k-th score among the
+//! re-ranked candidates. Every non-retained row has `Q ≤ q_floor` (top-k
+//! retention) and hence an exact score `≤ q_floor + ε`; if
+//! `q_floor + ε < T`, no non-retained row can reach the top-k, so the
+//! re-ranked result **is** the exact top-k — bit-identical to the
+//! f32-only scan, because pass 2 scores rows with the very same f32
+//! kernels and [`TopK`](crate::util::topk::TopK) retention is push-order
+//! independent. If the certificate fails (score ties, adversarially flat
+//! data, too-small overscan), the caller falls back to the plain f32
+//! scan — correctness never depends on the data being friendly.
+//!
+//! ## Kernels
+//!
+//! [`dot_u8i16`] dispatches on the same one-time CPU probe as
+//! [`crate::linalg::simd`]: AVX2 widens the u8 codes to i16 lanes and
+//! accumulates against the i16 query codes with `madd_epi16` (exact i32
+//! arithmetic — a `maddubs`-style u8×i8 kernel is deliberately avoided
+//! because `255·127·2` saturates its i16 lanes), NEON uses widening
+//! `vmlal_s16` chains, and the portable fallback is an unrolled scalar
+//! loop. All three produce the same exact integer, so quantized scores
+//! are identical across kernels.
+
+use crate::linalg::simd::{self, Kernel};
+
+/// Rows scored per inner chunk (keeps the i32 scratch on the stack).
+const QCHUNK: usize = 256;
+
+/// Default rows per `(scale, offset)` block.
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// Quantized (SQ8) shadow copy of a row-major `[n × d]` f32 matrix.
+#[derive(Clone, Debug)]
+pub struct QuantView {
+    /// u8 codes, row-major `[n × d]`
+    codes: Vec<u8>,
+    n: usize,
+    d: usize,
+    /// rows per (scale, offset) block
+    block: usize,
+    /// per-block affine parameters
+    scales: Vec<f32>,
+    offsets: Vec<f32>,
+    /// per-block `scale · max_row(Σ_j code_j)` (error-bound ingredient)
+    scaled_csums: Vec<f32>,
+    /// per-block `max |x|` (fp-slack ingredient of the error bound)
+    abs_maxes: Vec<f32>,
+    /// `max_b scales[b]` (cached; see [`Self::error_bound`])
+    max_scale: f32,
+    /// `max_b scaled_csums[b]`
+    max_scaled_csum: f32,
+    /// `max_b abs_maxes[b]`
+    max_abs: f32,
+}
+
+impl QuantView {
+    /// Encode a row-major `[n × d]` matrix with `block` rows per
+    /// `(scale, offset)` pair.
+    pub fn encode(rows: &[f32], d: usize, block: usize) -> QuantView {
+        let block = block.max(1);
+        let n = if d == 0 { 0 } else { rows.len() / d };
+        debug_assert_eq!(rows.len(), n * d);
+        let nblocks = n.div_ceil(block);
+        let mut qv = QuantView {
+            codes: vec![0u8; n * d],
+            n,
+            d,
+            block,
+            scales: vec![0f32; nblocks],
+            offsets: vec![0f32; nblocks],
+            scaled_csums: vec![0f32; nblocks],
+            abs_maxes: vec![0f32; nblocks],
+            max_scale: 0.0,
+            max_scaled_csum: 0.0,
+            max_abs: 0.0,
+        };
+        for b in 0..nblocks {
+            qv.encode_block(rows, b);
+        }
+        qv.refresh_maxes();
+        qv
+    }
+
+    /// Re-encode every block overlapping rows `[lo, hi)` against the
+    /// current contents of `rows` (the full matrix this view shadows).
+    /// This is the coherence hook for in-place row stores: after a write
+    /// to rows `lo..hi`, only the touched blocks are re-quantized.
+    pub fn refresh_rows(&mut self, rows: &[f32], lo: usize, hi: usize) {
+        debug_assert_eq!(rows.len(), self.n * self.d);
+        let hi = hi.min(self.n);
+        if lo >= hi {
+            return;
+        }
+        let b0 = lo / self.block;
+        let b1 = (hi - 1) / self.block;
+        for b in b0..=b1 {
+            self.encode_block(rows, b);
+        }
+        self.refresh_maxes();
+    }
+
+    fn encode_block(&mut self, rows: &[f32], b: usize) {
+        let d = self.d;
+        let lo = b * self.block;
+        let hi = ((b + 1) * self.block).min(self.n);
+        let vals = &rows[lo * d..hi * d];
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        let mut amax = 0f32;
+        for &x in vals {
+            mn = mn.min(x);
+            mx = mx.max(x);
+            amax = amax.max(x.abs());
+        }
+        // constant blocks (scale = 0): every code is 0 and the offset
+        // reconstructs the value exactly
+        let (scale, offset) = if mx > mn { ((mx - mn) / 255.0, mn) } else { (0.0, mn) };
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let mut csum_max = 0u32;
+        for r in lo..hi {
+            let mut csum = 0u32;
+            for j in 0..d {
+                let x = rows[r * d + j];
+                let c = if scale > 0.0 {
+                    ((x - offset) * inv).round().clamp(0.0, 255.0) as u8
+                } else {
+                    0u8
+                };
+                self.codes[r * d + j] = c;
+                csum += c as u32;
+            }
+            csum_max = csum_max.max(csum);
+        }
+        self.scales[b] = scale;
+        self.offsets[b] = offset;
+        self.scaled_csums[b] = scale * csum_max as f32;
+        self.abs_maxes[b] = amax;
+    }
+
+    fn refresh_maxes(&mut self) {
+        self.max_scale = self.scales.iter().cloned().fold(0.0, f32::max);
+        self.max_scaled_csum = self.scaled_csums.iter().cloned().fold(0.0, f32::max);
+        self.max_abs = self.abs_maxes.iter().cloned().fold(0.0, f32::max);
+    }
+
+    /// Number of encoded rows.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Feature dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rows per quantization block.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Uniform bound on `|exact score − quantized score|` valid for every
+    /// encoded row against `qq`, where "exact score" means the value the
+    /// **f32 kernels** compute (that is what the two-stage scan compares
+    /// against). Two parts: the quantization terms from the module-doc
+    /// derivation, plus a deterministic fp slack — the f32 dot
+    /// accumulates ~d rounding steps over terms bounded by
+    /// `max|x|·‖q‖₁·u` (`u = 2⁻²³`, generous for the FMA/multi-lane
+    /// kernels), and the quantized score suffers one final f64→f32
+    /// rounding of similar magnitude. Without the fp term the bound
+    /// would be unsound on near-constant data, where quantization error
+    /// underflows below fp noise. A 5% fudge absorbs the rounding of the
+    /// bound arithmetic itself.
+    pub fn error_bound(&self, qq: &QuantQuery) -> f32 {
+        let quant = self.max_scaled_csum as f64 * (qq.scale as f64) * 0.5
+            + self.max_scale as f64 * 0.5 * (qq.l1 as f64);
+        let fp = (self.d as f64 + 2.0) * 1.2e-7 * self.max_abs as f64 * qq.l1 as f64;
+        ((quant + fp) * 1.05 + 1e-12) as f32
+    }
+
+    /// Quantized approximate scores for rows `[row_start, row_end)`:
+    /// `out[i] = Q_{row_start + i}` (see module docs). `out.len()` must be
+    /// `row_end − row_start`.
+    pub fn scores(&self, row_start: usize, row_end: usize, qq: &QuantQuery, out: &mut [f32]) {
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        debug_assert_eq!(out.len(), row_end - row_start);
+        debug_assert_eq!(qq.codes.len(), self.d);
+        let d = self.d;
+        let sq = qq.scale as f64;
+        let sumq = qq.sumq as f64;
+        let mut ibuf = [0i32; QCHUNK];
+        let mut r = row_start;
+        while r < row_end {
+            let b = r / self.block;
+            let seg_end = row_end.min((b + 1) * self.block);
+            let sc = self.scales[b] as f64 * sq;
+            let off = self.offsets[b] as f64 * sumq;
+            let mut s = r;
+            while s < seg_end {
+                let e = seg_end.min(s + QCHUNK);
+                let m = e - s;
+                matvec_u8i16(&self.codes[s * d..e * d], d, &qq.codes, &mut ibuf[..m]);
+                for (i, &ip) in ibuf[..m].iter().enumerate() {
+                    out[s - row_start + i] = (sc * ip as f64 + off) as f32;
+                }
+                s = e;
+            }
+            r = seg_end;
+        }
+    }
+}
+
+/// A query encoded for the integer screening pass.
+#[derive(Clone, Debug)]
+pub struct QuantQuery {
+    /// i16 codes: `q_j ≈ scale · codes[j]`
+    pub codes: Vec<i16>,
+    /// symmetric quantization step `s_q = max|q| / u_max`
+    pub scale: f32,
+    /// exact `Σ_j q_j` (pairs with the block offsets, error-free)
+    pub sumq: f32,
+    /// exact `‖q‖₁` (error-bound ingredient)
+    pub l1: f32,
+}
+
+impl QuantQuery {
+    /// Encode a query with symmetric i16 quantization. The code range is
+    /// capped at `u_max = min(16383, (2³¹−1)/(255·d))` so the integer
+    /// dot `Σ c_j·u_j` (u8 codes × i16 codes over `d` elements) can
+    /// never overflow its i32 accumulator.
+    pub fn encode(q: &[f32]) -> QuantQuery {
+        let d = q.len().max(1);
+        let u_max = ((i32::MAX as u64) / (255 * d as u64)).clamp(1, 16383) as f32;
+        let amax = q.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = if amax > 0.0 { amax / u_max } else { 1.0 };
+        let inv = 1.0 / scale;
+        let mut sumq = 0f64;
+        let mut l1 = 0f64;
+        let codes: Vec<i16> = q
+            .iter()
+            .map(|&x| {
+                sumq += x as f64;
+                l1 += x.abs() as f64;
+                (x * inv).round().clamp(-u_max, u_max) as i16
+            })
+            .collect();
+        QuantQuery { codes, scale, sumq: sumq as f32, l1: l1 as f32 }
+    }
+}
+
+/// The pass-2 coverage certificate of the two-stage scan (module docs):
+/// `dropped` says pass 1 actually rejected or evicted pushed rows (when
+/// false the retained candidates are the whole scanned set and coverage
+/// is trivial), `q_floor` is the worst retained quantized score, `eps`
+/// the [`QuantView::error_bound`], and `kth_exact` the exact k-th score
+/// among the re-ranked candidates (a [`TopK`]'s
+/// [`threshold`](crate::util::topk::TopK::threshold)). Returns true iff
+/// every non-retained row provably scores strictly below the k-th exact
+/// score — i.e. the re-ranked result is certified to be the exact top-k.
+#[inline]
+pub fn coverage_proved(dropped: bool, q_floor: f32, eps: f32, kth_exact: f32) -> bool {
+    !dropped || q_floor + eps < kth_exact
+}
+
+// ---------------------------------------------------------------------------
+// integer dot kernels (u8 codes × i16 query codes → i32), dispatched on the
+// same one-time CPU probe as the f32 kernels
+// ---------------------------------------------------------------------------
+
+/// Exact integer dot `Σ_j codes[j]·u[j]` (u8 × i16 → i32; overflow-free
+/// by the [`QuantQuery::encode`] range cap). All kernel variants compute
+/// the identical integer.
+#[inline]
+pub fn dot_u8i16(codes: &[u8], u: &[i16]) -> i32 {
+    debug_assert_eq!(codes.len(), u.len());
+    match simd::kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dot(codes, u) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dot(codes, u) },
+        _ => dot_u8i16_scalar(codes, u),
+    }
+}
+
+/// Integer scores for a contiguous code block:
+/// `out[r] = Σ_j codes[r·d + j]·u[j]`.
+fn matvec_u8i16(codes: &[u8], d: usize, u: &[i16], out: &mut [i32]) {
+    debug_assert_eq!(u.len(), d);
+    debug_assert_eq!(codes.len(), out.len() * d);
+    if d == 0 {
+        out.iter_mut().for_each(|x| *x = 0);
+        return;
+    }
+    match simd::kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::matvec(codes, d, u, out) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::matvec(codes, d, u, out) },
+        _ => {
+            for (r, o) in out.iter_mut().enumerate() {
+                *o = dot_u8i16_scalar(&codes[r * d..(r + 1) * d], u);
+            }
+        }
+    }
+}
+
+/// Unrolled scalar u8×i16 dot — the dispatch fallback and the test
+/// reference (4 independent accumulators, like the f32 seed kernel).
+fn dot_u8i16_scalar(codes: &[u8], u: &[i16]) -> i32 {
+    let n = codes.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += codes[i] as i32 * u[i] as i32;
+        s1 += codes[i + 1] as i32 * u[i + 1] as i32;
+        s2 += codes[i + 2] as i32 * u[i + 2] as i32;
+        s3 += codes[i + 3] as i32 * u[i + 3] as i32;
+    }
+    let mut tail = 0i32;
+    for i in chunks * 4..n {
+        tail += codes[i] as i32 * u[i] as i32;
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_i32(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_srli_si128::<8>(s));
+        let s = _mm_add_epi32(s, _mm_srli_si128::<4>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// u8×i16 dot: widen 16 codes to i16 lanes, `madd_epi16` against the
+    /// query codes, accumulate the i32 pair-sums. Exact i32 arithmetic —
+    /// `madd` pair-sums stay ≤ 2·255·16383 and the total is bounded by
+    /// the `QuantQuery` range cap, so nothing can saturate or wrap.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_raw(c: *const u8, u: *const i16, n: usize) -> i32 {
+        let chunks = n / 16;
+        let mut acc = _mm256_setzero_si256();
+        for k in 0..chunks {
+            let i = k * 16;
+            let cv = _mm256_cvtepu8_epi16(_mm_loadu_si128(c.add(i) as *const __m128i));
+            let uv = _mm256_loadu_si256(u.add(i) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv, uv));
+        }
+        let mut s = hsum_i32(acc);
+        for i in chunks * 16..n {
+            s += *c.add(i) as i32 * *u.add(i) as i32;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(codes: &[u8], u: &[i16]) -> i32 {
+        dot_raw(codes.as_ptr(), u.as_ptr(), codes.len())
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matvec(codes: &[u8], d: usize, u: &[i16], out: &mut [i32]) {
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = dot_raw(codes.as_ptr().add(r * d), u.as_ptr(), d);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// u8×i16 dot via widening to i16 and `vmlal_s16` (u8 values fit
+    /// i16, so the widened multiply-accumulate is exact i32 arithmetic).
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_raw(c: *const u8, u: *const i16, n: usize) -> i32 {
+        let chunks = n / 8;
+        let mut acc = vdupq_n_s32(0);
+        for k in 0..chunks {
+            let i = k * 8;
+            let cv = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(c.add(i))));
+            let uv = vld1q_s16(u.add(i));
+            acc = vmlal_s16(acc, vget_low_s16(cv), vget_low_s16(uv));
+            acc = vmlal_s16(acc, vget_high_s16(cv), vget_high_s16(uv));
+        }
+        let mut s = vaddvq_s32(acc);
+        for i in chunks * 8..n {
+            s += *c.add(i) as i32 * *u.add(i) as i32;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot(codes: &[u8], u: &[i16]) -> i32 {
+        dot_raw(codes.as_ptr(), u.as_ptr(), codes.len())
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn matvec(codes: &[u8], d: usize, u: &[i16], out: &mut [i32]) {
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = dot_raw(codes.as_ptr().add(r * d), u.as_ptr(), d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+    use crate::util::check::Checker;
+    use crate::util::rng::Pcg64;
+    use crate::util::topk::{topk_reference, TopK};
+
+    #[test]
+    fn simd_dot_matches_scalar_on_ragged_lengths() {
+        let mut rng = Pcg64::new(1);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100, 300] {
+            let codes: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+            let u: Vec<i16> =
+                (0..len).map(|_| (rng.next_below(32767) as i32 - 16383) as i16).collect();
+            assert_eq!(dot_u8i16(&codes, &u), dot_u8i16_scalar(&codes, &u), "len={len}");
+        }
+    }
+
+    #[test]
+    fn simd_dot_extreme_values_are_exact() {
+        // the case that breaks a maddubs-based u8×i8 kernel (i16 lane
+        // saturation): all-255 codes against max-magnitude query codes
+        for &uval in &[16383i16, -16383] {
+            for len in [16usize, 32, 100, 512] {
+                let codes = vec![255u8; len];
+                let u = vec![uval; len];
+                let want = 255i32 * uval as i32 * len as i32;
+                assert_eq!(dot_u8i16(&codes, &u), want, "len={len} u={uval}");
+            }
+        }
+    }
+
+    #[test]
+    fn query_code_range_prevents_i32_overflow() {
+        // huge d: the range cap must shrink so Σ c·u fits i32
+        let d = 100_000;
+        let q = vec![1.0f32; d];
+        let qq = QuantQuery::encode(&q);
+        let umax = qq.codes.iter().map(|&u| (u as i32).abs()).max().unwrap();
+        assert!((255u64 * umax as u64 * d as u64) < i32::MAX as u64);
+        // and the codes still carry signal
+        assert!(umax > 0);
+    }
+
+    #[test]
+    fn property_error_bound_holds_per_row() {
+        // the contract everything rests on: |exact − Q| ≤ ε for EVERY row
+        Checker::new(41).cases(60).check_vec_with_param(600, 24, |xs, d| {
+            let n = xs.len() / d;
+            if n == 0 {
+                return true;
+            }
+            let rows = &xs[..n * d];
+            let q: Vec<f32> = (0..d).map(|j| (j as f32 * 0.7).sin() + xs[j % xs.len()]).collect();
+            for block in [1usize, 3, 64] {
+                let qv = QuantView::encode(rows, d, block);
+                let qq = QuantQuery::encode(&q);
+                let eps = qv.error_bound(&qq) as f64;
+                let mut out = vec![0f32; n];
+                qv.scores(0, n, &qq, &mut out);
+                for r in 0..n {
+                    let exact = linalg::dot(&rows[r * d..(r + 1) * d], &q) as f64;
+                    if (exact - out[r] as f64).abs() > eps {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn property_certified_pass_contains_exact_topk() {
+        // whenever the coverage certificate fires, the retained candidate
+        // set must contain the exact top-k
+        Checker::new(42).cases(40).check_vec_with_param(900, 16, |xs, d| {
+            let n = xs.len() / d;
+            if n == 0 {
+                return true;
+            }
+            let rows = &xs[..n * d];
+            let q: Vec<f32> = (0..d).map(|j| (j as f32 * 0.37).cos()).collect();
+            let qv = QuantView::encode(rows, d, 16);
+            let qq = QuantQuery::encode(&q);
+            let eps = qv.error_bound(&qq);
+            let mut quant = vec![0f32; n];
+            qv.scores(0, n, &qq, &mut quant);
+            let mut exact = vec![0f32; n];
+            linalg::matvec_block(rows, d, &q, &mut exact);
+            let k = (n / 4).max(1);
+            let cap = (k * 4).min(n);
+            let mut tk = TopK::new(cap);
+            tk.push_block(0, &quant);
+            let cands = tk.into_sorted();
+            let full = cands.len() == cap;
+            let q_floor = cands.last().map(|s| s.score).unwrap_or(f32::NEG_INFINITY);
+            // exact re-rank of the candidates
+            let mut tk2 = TopK::new(k);
+            for s in &cands {
+                tk2.push(s.id, exact[s.id as usize]);
+            }
+            if !coverage_proved(full, q_floor, eps, tk2.threshold()) {
+                return true; // honest refusal → caller rescans exactly
+            }
+            let cset: std::collections::HashSet<u32> = cands.iter().map(|s| s.id).collect();
+            topk_reference(&exact, k.min(n)).iter().all(|s| cset.contains(&s.id))
+        });
+    }
+
+    #[test]
+    fn constant_rows_encode_exactly() {
+        // scale = 0 blocks must reconstruct the constant exactly
+        let d = 5;
+        let rows: Vec<f32> = vec![0.75; 12 * d];
+        let qv = QuantView::encode(&rows, d, 4);
+        let q: Vec<f32> = vec![1.0, -2.0, 0.5, 0.0, 3.0];
+        let qq = QuantQuery::encode(&q);
+        let mut out = vec![0f32; 12];
+        qv.scores(0, 12, &qq, &mut out);
+        let want = 0.75 * q.iter().sum::<f32>();
+        for (r, &got) in out.iter().enumerate() {
+            assert!((got - want).abs() < 1e-5, "row {r}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn refresh_rows_tracks_in_place_updates() {
+        let mut rng = Pcg64::new(7);
+        let (n, d, block) = (50usize, 8usize, 16usize);
+        let mut rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let mut qv = QuantView::encode(&rows, d, block);
+        // rewrite rows 20..23 with much larger values, refresh only them
+        for x in rows[20 * d..23 * d].iter_mut() {
+            *x = 10.0 + rng.gaussian() as f32;
+        }
+        qv.refresh_rows(&rows, 20, 23);
+        let fresh = QuantView::encode(&rows, d, block);
+        assert_eq!(qv.codes, fresh.codes);
+        assert_eq!(qv.scales, fresh.scales);
+        assert_eq!(qv.offsets, fresh.offsets);
+        assert_eq!(qv.max_scale, fresh.max_scale);
+        assert_eq!(qv.max_scaled_csum, fresh.max_scaled_csum);
+        assert_eq!(qv.max_abs, fresh.max_abs);
+    }
+
+    #[test]
+    fn scores_respect_block_boundaries_and_ranges() {
+        // scoring a sub-range must equal the corresponding slice of a
+        // full-range scoring pass, across awkward block sizes
+        let mut rng = Pcg64::new(9);
+        let (n, d) = (67usize, 7usize);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let qq = QuantQuery::encode(&q);
+        for block in [1usize, 5, 64, 1000] {
+            let qv = QuantView::encode(&rows, d, block);
+            let mut full = vec![0f32; n];
+            qv.scores(0, n, &qq, &mut full);
+            for (s, e) in [(0usize, 0usize), (3, 29), (29, 67), (0, 67), (66, 67)] {
+                let mut part = vec![0f32; e - s];
+                qv.scores(s, e, &qq, &mut part);
+                assert_eq!(&part[..], &full[s..e], "block={block} range=({s},{e})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_query_edge_cases() {
+        let qv = QuantView::encode(&[], 4, 8);
+        assert_eq!(qv.n(), 0);
+        let qq = QuantQuery::encode(&[0.0; 4]);
+        let mut out = [0f32; 0];
+        qv.scores(0, 0, &qq, &mut out); // must not panic
+        assert!(qv.error_bound(&qq) >= 0.0);
+        // zero query scores everything to ~0 with a ~0 bound
+        let rows = vec![1.0f32; 8];
+        let qv = QuantView::encode(&rows, 4, 2);
+        let mut out = [0f32; 2];
+        qv.scores(0, 2, &qq, &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+}

@@ -205,11 +205,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", &cfg.serve.addr);
     let workers = args.get_usize("workers", cfg.serve.workers)?;
     let engine = build_engine(args)?;
-    let coord = Arc::new(Coordinator::start(
+    let coord = Arc::new(Coordinator::start_with_wait(
         engine,
         workers,
         cfg.serve.queue_depth,
         cfg.data.seed,
+        cfg.serve.micro_wait_us,
     ));
     let server = Server::bind(coord, &addr)?;
     println!("gmips serving on {}", server.local_addr()?);

@@ -1,12 +1,23 @@
 //! Exact brute-force MIPS — the `O(n·d)` baseline every experiment
 //! compares against, and the correctness oracle for the approximate
 //! indexes.
+//!
+//! With [`with_quant`](BruteForce::with_quant) the scan becomes
+//! two-stage: pass 1 screens every row on SQ8 quantized scores (¼ of the
+//! memory traffic), pass 2 re-ranks the few survivors with the exact f32
+//! kernels. The error-bound/overscan contract of
+//! [`crate::linalg::quant`] guarantees the returned ids *and* f32 scores
+//! are bit-identical to the f32-only scan.
 
 use super::{MipsIndex, TopKResult};
 use crate::data::Dataset;
+use crate::linalg::quant::{coverage_proved, QuantQuery, QuantView};
 use crate::scorer::ScoreBackend;
-use crate::util::topk::TopK;
+use crate::util::topk::{Scored, TopK};
 use std::sync::Arc;
+
+/// Rows per survivor gather/re-rank block (pass 2).
+const GATHER_BLOCK: usize = 1024;
 
 /// Exact scan over the whole database in scorer-sized blocks.
 pub struct BruteForce {
@@ -14,16 +25,34 @@ pub struct BruteForce {
     backend: Arc<dyn ScoreBackend>,
     /// rows per scoring call (PJRT backends want their AOT block size)
     pub block: usize,
+    /// SQ8 shadow copy for the two-stage scan (None = plain f32 scan)
+    quant: Option<QuantView>,
+    /// pass-1 retention factor (`k·overscan` candidates)
+    overscan: usize,
 }
 
 impl BruteForce {
     pub fn new(ds: Arc<Dataset>, backend: Arc<dyn ScoreBackend>) -> Self {
-        BruteForce { ds, backend, block: 4096 }
+        BruteForce { ds, backend, block: 4096, quant: None, overscan: 4 }
     }
 
     pub fn with_block(mut self, block: usize) -> Self {
         self.block = block.max(1);
         self
+    }
+
+    /// Enable the SQ8 two-stage scan (`qblock` rows per quantization
+    /// block, `k·overscan` pass-1 candidates). Results stay bit-identical
+    /// to the f32-only scan.
+    pub fn with_quant(mut self, qblock: usize, overscan: usize) -> Self {
+        self.quant = Some(QuantView::encode(&self.ds.data, self.ds.d, qblock.max(1)));
+        self.overscan = overscan.max(1);
+        self
+    }
+
+    /// Whether the quantized screening pass is enabled.
+    pub fn quant_enabled(&self) -> bool {
+        self.quant.is_some()
     }
 
     /// Exact scores for ALL rows (used by evaluation: exact partition,
@@ -43,10 +72,10 @@ impl BruteForce {
             start = end;
         }
     }
-}
 
-impl MipsIndex for BruteForce {
-    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+    /// Plain one-stage f32 scan (also the fallback when a quantized pass
+    /// cannot prove coverage).
+    fn top_k_f32(&self, q: &[f32], k: usize) -> TopKResult {
         let d = self.ds.d;
         let n = self.ds.n;
         let mut tk = TopK::new(k.min(n).max(1));
@@ -62,9 +91,97 @@ impl MipsIndex for BruteForce {
         TopKResult { items: tk.into_sorted(), scanned: n }
     }
 
+    /// Exact f32 re-rank of pass-1 candidates (gather + score into `tk`).
+    fn rerank_exact(&self, cands: &[u32], q: &[f32], tk: &mut TopK) {
+        let d = self.ds.d;
+        let mut rows = vec![0f32; GATHER_BLOCK.min(cands.len().max(1)) * d];
+        let mut out = vec![0f32; GATHER_BLOCK];
+        let mut start = 0;
+        while start < cands.len() {
+            let end = (start + GATHER_BLOCK).min(cands.len());
+            let ids = &cands[start..end];
+            let rows_buf = &mut rows[..(end - start) * d];
+            self.ds.gather(ids, rows_buf);
+            let out_buf = &mut out[..end - start];
+            self.backend.scores(rows_buf, d, q, out_buf);
+            tk.push_ids(ids, out_buf);
+            start = end;
+        }
+    }
+
+    /// Finish a quantized pass: exact re-rank of the retained candidates
+    /// plus the coverage certificate. `dropped` says pass 1 actually
+    /// rejected/evicted rows (more were pushed than its capacity held —
+    /// when false, the candidates are the whole scanned set and coverage
+    /// is trivially proved). `None` when the certificate fails (caller
+    /// falls back to the f32 scan).
+    fn finish_quant(
+        &self,
+        qv: &QuantView,
+        qq: &QuantQuery,
+        cands: Vec<Scored>,
+        q: &[f32],
+        kk: usize,
+        dropped: bool,
+    ) -> Option<TopKResult> {
+        let q_floor = cands.last().map(|s| s.score).unwrap_or(f32::NEG_INFINITY);
+        let ids: Vec<u32> = cands.iter().map(|s| s.id).collect();
+        let mut tk = TopK::new(kk);
+        self.rerank_exact(&ids, q, &mut tk);
+        if !coverage_proved(dropped, q_floor, qv.error_bound(qq), tk.threshold()) {
+            return None;
+        }
+        // pass 1 visited every row; account the scan like the f32 path
+        Some(TopKResult { items: tk.into_sorted(), scanned: self.ds.n })
+    }
+
+    /// Two-stage scan: SQ8 screening pass over all rows, exact re-rank of
+    /// the retained candidates, coverage certificate. `None` when the
+    /// certificate fails or the screen cannot prune anything
+    /// (`k·overscan ≥ n`) — the caller falls back to
+    /// [`top_k_f32`](Self::top_k_f32).
+    fn top_k_quant(&self, qv: &QuantView, q: &[f32], k: usize) -> Option<TopKResult> {
+        let n = self.ds.n;
+        let kk = k.min(n).max(1);
+        let cap = kk.saturating_mul(self.overscan).min(n).max(kk);
+        if cap >= n {
+            // pass 1 would retain everything: the one-stage scan is
+            // strictly cheaper than screen + gather-re-rank-all
+            return None;
+        }
+        let qq = QuantQuery::encode(q);
+        let mut tk = TopK::new(cap);
+        let mut buf = vec![0f32; self.block];
+        let mut start = 0;
+        while start < n {
+            let end = (start + self.block).min(n);
+            let out = &mut buf[..end - start];
+            qv.scores(start, end, &qq, out);
+            tk.push_block(start as u32, out);
+            start = end;
+        }
+        // cap < n, so a full collector really did drop rows
+        let cands = tk.into_sorted();
+        let dropped = cands.len() == cap;
+        self.finish_quant(qv, &qq, cands, q, kk, dropped)
+    }
+}
+
+impl MipsIndex for BruteForce {
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+        if let Some(qv) = &self.quant {
+            if let Some(r) = self.top_k_quant(qv, q, k) {
+                return r;
+            }
+        }
+        self.top_k_f32(q, k)
+    }
+
     /// Batched exact scan: every database block is read from memory once
     /// for the whole query batch (multi-query scoring), instead of once
-    /// per query. Scores are bit-identical to per-query [`top_k`] calls.
+    /// per query. With quantization enabled, the shared stream is the SQ8
+    /// code block and each query re-ranks its own survivors exactly.
+    /// Scores are bit-identical to per-query [`top_k`] calls either way.
     ///
     /// [`top_k`]: MipsIndex::top_k
     fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
@@ -74,6 +191,33 @@ impl MipsIndex for BruteForce {
         }
         let d = self.ds.d;
         let n = self.ds.n;
+        let kk = k.min(n).max(1);
+        let cap = kk.saturating_mul(self.overscan).min(n).max(kk);
+        if let (Some(qv), true) = (&self.quant, cap < n) {
+            let qqs: Vec<QuantQuery> = qs.iter().map(|q| QuantQuery::encode(q)).collect();
+            let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(cap)).collect();
+            let mut buf = vec![0f32; self.block];
+            let mut start = 0;
+            while start < n {
+                let end = (start + self.block).min(n);
+                for (j, qq) in qqs.iter().enumerate() {
+                    let out = &mut buf[..end - start];
+                    qv.scores(start, end, qq, out);
+                    tks[j].push_block(start as u32, out);
+                }
+                start = end;
+            }
+            return tks
+                .into_iter()
+                .enumerate()
+                .map(|(j, tk)| {
+                    let cands = tk.into_sorted();
+                    let dropped = cands.len() == cap; // cap < n ⇒ rows were dropped
+                    self.finish_quant(qv, &qqs[j], cands, qs[j], kk, dropped)
+                        .unwrap_or_else(|| self.top_k_f32(qs[j], k))
+                })
+                .collect();
+        }
         let mut qflat = vec![0f32; nq * d];
         for (j, q) in qs.iter().enumerate() {
             qflat[j * d..(j + 1) * d].copy_from_slice(q);
@@ -107,6 +251,19 @@ impl MipsIndex for BruteForce {
     }
     fn name(&self) -> &'static str {
         "brute"
+    }
+    fn describe(&self) -> String {
+        if let Some(qv) = &self.quant {
+            format!(
+                "brute over n={} d={} (sq8 two-stage, block={}, overscan={})",
+                self.ds.n,
+                self.ds.d,
+                qv.block(),
+                self.overscan
+            )
+        } else {
+            format!("brute over n={} d={}", self.ds.n, self.ds.d)
+        }
     }
 }
 
@@ -184,6 +341,48 @@ mod tests {
             let idx_ref = BruteForce::new(ds.clone(), Arc::new(NativeScorer));
             let want = idx_ref.top_k(&[1.0, 0.0, 0.0, 0.0], 5);
             assert_eq!(got.ids(), want.ids(), "block={block}");
+        }
+    }
+
+    #[test]
+    fn quant_two_stage_bit_identical_to_f32() {
+        let ds = Arc::new(synth::imagenet_like(3_000, 24, 20, 0.3, 5));
+        let f32_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer));
+        let mut rng = Pcg64::new(6);
+        for (qblock, overscan) in [(64usize, 4usize), (7, 2), (1000, 1)] {
+            let q_idx =
+                BruteForce::new(ds.clone(), Arc::new(NativeScorer)).with_quant(qblock, overscan);
+            assert!(q_idx.quant_enabled());
+            for k in [1usize, 10, 77] {
+                let q = synth::random_theta(&ds, 0.05, &mut rng);
+                let got = q_idx.top_k(&q, k);
+                let want = f32_idx.top_k(&q, k);
+                assert_eq!(got.ids(), want.ids(), "qblock={qblock} overscan={overscan} k={k}");
+                for (g, w) in got.items.iter().zip(&want.items) {
+                    assert_eq!(g.score, w.score, "qblock={qblock} k={k}");
+                }
+                assert_eq!(got.scanned, want.scanned);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_batch_identical_to_per_query() {
+        let ds = Arc::new(synth::imagenet_like(2_000, 16, 15, 0.3, 11));
+        let idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer)).with_quant(64, 3);
+        let mut rng = Pcg64::new(12);
+        for nq in [2usize, 5] {
+            let qs_owned: Vec<Vec<f32>> =
+                (0..nq).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+            let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+            let batch = idx.top_k_batch(&qs, 23);
+            for (j, got) in batch.iter().enumerate() {
+                let want = idx.top_k(qs[j], 23);
+                assert_eq!(got.ids(), want.ids(), "nq={nq} query {j}");
+                for (g, w) in got.items.iter().zip(&want.items) {
+                    assert_eq!(g.score, w.score, "nq={nq} query {j}");
+                }
+            }
         }
     }
 }

@@ -7,6 +7,12 @@
 //! PJRT-block-friendly). Query: score all centroids against θ, visit the
 //! `n_probe` best clusters, exact-score their member rows, keep the top-k.
 //!
+//! With `index.quant` the probe scan is two-stage: the probed clusters
+//! are screened on an SQ8 shadow copy of the grouped storage (¼ of the
+//! memory traffic), then only the surviving candidates are re-ranked
+//! with the exact f32 kernels — bit-identical results by the
+//! error-bound/overscan contract of [`crate::linalg::quant`].
+//!
 //! No theoretical guarantee (the paper notes this too) — accuracy is
 //! certified downstream by the TV-bound certificate (§4.2.1).
 
@@ -15,10 +21,14 @@ use super::{MipsIndex, TopKResult};
 use crate::config::IndexConfig;
 use crate::data::Dataset;
 use crate::error::Result;
+use crate::linalg::quant::{coverage_proved, QuantQuery, QuantView};
 use crate::scorer::ScoreBackend;
 use crate::util::rng::Pcg64;
-use crate::util::topk::TopK;
+use crate::util::topk::{Scored, TopK};
 use std::sync::Arc;
+
+/// Rows per survivor gather/re-rank block (quantized pass 2).
+const GATHER_BLOCK: usize = 1024;
 
 /// Clustering-based MIPS index with contiguous per-cluster storage.
 pub struct IvfIndex {
@@ -34,6 +44,12 @@ pub struct IvfIndex {
     pub n_probe: usize,
     n: usize,
     d: usize,
+    /// SQ8 shadow copy of `grouped` for the two-stage probe scan
+    quant: Option<QuantView>,
+    /// pass-1 retention factor (`k·overscan` candidates)
+    overscan: usize,
+    /// rows per SQ8 quantization block (kept for compaction re-encodes)
+    quant_block: usize,
     /// ids whose grouped copy is outdated (live version in pending)
     stale: rustc_hash::FxHashSet<u32>,
     /// LSM-style pending segment: updated rows awaiting compaction
@@ -96,6 +112,10 @@ impl IvfIndex {
             ids[pos] = i as u32;
         }
 
+        let quant_block = cfg.quant_block.max(1);
+        let quant =
+            if cfg.quant { Some(QuantView::encode(&grouped, d, quant_block)) } else { None };
+
         Ok(IvfIndex {
             grouped,
             ids,
@@ -105,6 +125,9 @@ impl IvfIndex {
             n_probe,
             n,
             d,
+            quant,
+            overscan: cfg.overscan.max(1),
+            quant_block,
             stale: rustc_hash::FxHashSet::default(),
             pending_ids: Vec::new(),
             pending_rows: Vec::new(),
@@ -116,13 +139,16 @@ impl IvfIndex {
         self.km.c
     }
 
-    /// Query with an explicit probe count (ablations sweep this).
-    pub fn top_k_probes(&self, q: &[f32], k: usize, n_probe: usize) -> TopKResult {
-        let n_probe = n_probe.clamp(1, self.km.c);
-        // rank clusters by centroid score — partial selection of the
-        // n_probe best (§Perf iteration 3: a full sort of all clusters
-        // cost ~C·log C per query; select_nth is O(C) and we only order
-        // the probed prefix)
+    /// Whether the quantized screening pass is enabled.
+    pub fn quant_enabled(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    /// The `n_probe` best clusters for `q`, by centroid score — partial
+    /// selection of the probed prefix (§Perf iteration 3: a full sort of
+    /// all clusters cost ~C·log C per query; select_nth is O(C) and we
+    /// only order the probed prefix).
+    fn probe_order(&self, q: &[f32], n_probe: usize) -> Vec<u32> {
         let mut cscores = vec![0f32; self.km.c];
         self.km.centroid_scores(q, &mut cscores);
         let mut order: Vec<u32> = (0..self.km.c as u32).collect();
@@ -136,7 +162,24 @@ impl IvfIndex {
             order.truncate(n_probe);
         }
         order.sort_unstable_by(cmp);
+        order
+    }
 
+    /// Query with an explicit probe count (ablations sweep this).
+    pub fn top_k_probes(&self, q: &[f32], k: usize, n_probe: usize) -> TopKResult {
+        if let Some(qv) = &self.quant {
+            if let Some(r) = self.top_k_probes_quant(qv, q, k, n_probe) {
+                return r;
+            }
+        }
+        self.top_k_probes_f32(q, k, n_probe)
+    }
+
+    /// Plain one-stage f32 probe scan (also the fallback when a quantized
+    /// pass cannot prove coverage).
+    fn top_k_probes_f32(&self, q: &[f32], k: usize, n_probe: usize) -> TopKResult {
+        let n_probe = n_probe.clamp(1, self.km.c);
+        let order = self.probe_order(q, n_probe);
         let mut tk = TopK::new(k.min(self.n).max(1));
         let mut buf: Vec<f32> = Vec::new();
         let mut scanned = self.km.c; // centroid scoring work
@@ -169,12 +212,126 @@ impl IvfIndex {
         TopKResult { items: tk.into_sorted(), scanned }
     }
 
+    /// Exact f32 re-rank of quantized-pass survivors (grouped-storage
+    /// positions): gather the rows, score with the same kernels the
+    /// one-stage scan uses, push under their dataset ids.
+    fn rerank_grouped(&self, positions: &[u32], q: &[f32], tk: &mut TopK) {
+        let d = self.d;
+        let mut rows = vec![0f32; GATHER_BLOCK.min(positions.len().max(1)) * d];
+        let mut out = vec![0f32; GATHER_BLOCK];
+        let mut s = 0;
+        while s < positions.len() {
+            let e = (s + GATHER_BLOCK).min(positions.len());
+            let m = e - s;
+            for (i, &pos) in positions[s..e].iter().enumerate() {
+                let p = pos as usize;
+                rows[i * d..(i + 1) * d].copy_from_slice(&self.grouped[p * d..(p + 1) * d]);
+            }
+            self.backend.scores(&rows[..m * d], d, q, &mut out[..m]);
+            for (i, &pos) in positions[s..e].iter().enumerate() {
+                tk.push(self.ids[pos as usize], out[i]);
+            }
+            s = e;
+        }
+    }
+
+    /// Finish a quantized probe pass: exact re-rank of the retained
+    /// grouped positions plus the coverage certificate (the pending
+    /// segment is the caller's, it is shared with the f32 path).
+    /// `dropped` says pass 1 actually rejected/evicted pushed rows (when
+    /// false, the candidates are the whole scanned set and coverage is
+    /// trivially proved). `None` when the certificate fails.
+    fn finish_quant_probes(
+        &self,
+        qv: &QuantView,
+        qq: &QuantQuery,
+        cands: Vec<Scored>,
+        q: &[f32],
+        kk: usize,
+        dropped: bool,
+    ) -> Option<TopK> {
+        let q_floor = cands.last().map(|s| s.score).unwrap_or(f32::NEG_INFINITY);
+        let positions: Vec<u32> = cands.iter().map(|s| s.id).collect();
+        let mut tk = TopK::new(kk);
+        self.rerank_grouped(&positions, q, &mut tk);
+        if !coverage_proved(dropped, q_floor, qv.error_bound(qq), tk.threshold()) {
+            return None;
+        }
+        Some(tk)
+    }
+
+    /// Two-stage probe scan: SQ8 screening over the probed clusters
+    /// (collecting grouped positions), exact re-rank of the retained
+    /// candidates + coverage certificate, then the pending segment
+    /// exactly. `None` when the certificate fails or the screen cannot
+    /// prune anything (`k·overscan` covers the probed rows) — the caller
+    /// falls back to the f32 scan.
+    fn top_k_probes_quant(
+        &self,
+        qv: &QuantView,
+        q: &[f32],
+        k: usize,
+        n_probe: usize,
+    ) -> Option<TopKResult> {
+        let n_probe = n_probe.clamp(1, self.km.c);
+        let order = self.probe_order(q, n_probe);
+        let kk = k.min(self.n).max(1);
+        let cap = kk.saturating_mul(self.overscan).min(self.n).max(kk);
+        let probed_rows: usize = order
+            .iter()
+            .take(n_probe)
+            .map(|&c| self.offsets[c as usize + 1] - self.offsets[c as usize])
+            .sum();
+        if cap >= probed_rows {
+            // pass 1 would retain everything: the one-stage scan is
+            // strictly cheaper than screen + gather-re-rank-all
+            return None;
+        }
+        let qq = QuantQuery::encode(q);
+        let mut tk = TopK::new(cap);
+        let mut buf: Vec<f32> = Vec::new();
+        let mut scanned = self.km.c;
+        let mut pushed = 0usize;
+        for &c in order.iter().take(n_probe) {
+            let (s, e) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
+            if s == e {
+                continue;
+            }
+            buf.resize(e - s, 0.0);
+            qv.scores(s, e, &qq, &mut buf);
+            if self.stale.is_empty() {
+                tk.push_block(s as u32, &buf);
+                pushed += e - s;
+            } else {
+                for (j, &id) in self.ids[s..e].iter().enumerate() {
+                    if !self.stale.contains(&id) {
+                        tk.push((s + j) as u32, buf[j]);
+                        pushed += 1;
+                    }
+                }
+            }
+            scanned += e - s;
+        }
+        let cands = tk.into_sorted();
+        let dropped = cands.len() == cap && pushed > cap;
+        let mut tk = self.finish_quant_probes(qv, &qq, cands, q, kk, dropped)?;
+        if !self.pending_ids.is_empty() {
+            buf.resize(self.pending_ids.len(), 0.0);
+            self.backend.scores(&self.pending_rows, self.d, q, &mut buf);
+            tk.push_ids(&self.pending_ids, &buf);
+            scanned += self.pending_ids.len();
+        }
+        Some(TopKResult { items: tk.into_sorted(), scanned })
+    }
+
     /// Batched query with an explicit probe count: centroids are scored
     /// against the *whole* batch in one multi-query pass, per-query probe
     /// lists are merged so each probed cluster's rows stream from memory
     /// exactly once per batch, and the cluster scans are parallelized
     /// with [`parallel_chunks`](crate::util::pool::parallel_chunks) when
-    /// there is enough work to amortize the threads.
+    /// there is enough work to amortize the threads. With quantization
+    /// enabled, the shared per-batch stream is the SQ8 code block and
+    /// each query exact-re-ranks its own survivors.
     ///
     /// Returns exactly what per-query [`top_k_probes`](Self::top_k_probes)
     /// calls would: the native kernels make batched and single-query
@@ -240,6 +397,85 @@ impl IvfIndex {
         } else {
             1
         };
+
+        let cap = kk.saturating_mul(self.overscan).min(self.n).max(kk);
+        if let (Some(qv), true) = (&self.quant, cap < self.n) {
+            let qqs: Vec<QuantQuery> = qs.iter().map(|q| QuantQuery::encode(q)).collect();
+            // pass 1 over SQ8 codes, collecting grouped positions
+            let parts = crate::util::pool::parallel_chunks(active.len(), nthreads, |_, s, e| {
+                let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(cap)).collect();
+                let mut scanned = vec![0usize; nq];
+                let mut pushed = vec![0usize; nq];
+                let mut out: Vec<f32> = Vec::new();
+                for &cl in &active[s..e] {
+                    let (cs, ce) = (self.offsets[cl as usize], self.offsets[cl as usize + 1]);
+                    let nr = ce - cs;
+                    let ids = &self.ids[cs..ce];
+                    out.resize(nr, 0.0);
+                    for &qj in &cluster_queries[cl as usize] {
+                        qv.scores(cs, ce, &qqs[qj as usize], &mut out);
+                        let tk = &mut tks[qj as usize];
+                        if self.stale.is_empty() {
+                            tk.push_block(cs as u32, &out);
+                            pushed[qj as usize] += nr;
+                        } else {
+                            for (t, &id) in ids.iter().enumerate() {
+                                if !self.stale.contains(&id) {
+                                    tk.push((cs + t) as u32, out[t]);
+                                    pushed[qj as usize] += 1;
+                                }
+                            }
+                        }
+                        scanned[qj as usize] += nr;
+                    }
+                }
+                (tks, scanned, pushed)
+            });
+            let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(cap)).collect();
+            let mut scanned = vec![c; nq];
+            let mut pushed = vec![0usize; nq];
+            for (part_tks, part_scanned, part_pushed) in parts {
+                for (j, tk) in part_tks.into_iter().enumerate() {
+                    for s in tk.into_sorted() {
+                        tks[j].push(s.id, s.score);
+                    }
+                }
+                for (j, sc) in part_scanned.into_iter().enumerate() {
+                    scanned[j] += sc;
+                }
+                for (j, p) in part_pushed.into_iter().enumerate() {
+                    pushed[j] += p;
+                }
+            }
+            // per-query finish: survivors → exact re-rank, pending exact
+            let np = self.pending_ids.len();
+            let mut pend = vec![0f32; np * nq];
+            if np > 0 {
+                self.backend.scores_batch(&self.pending_rows, d, &qflat, nq, &mut pend);
+            }
+            return tks
+                .into_iter()
+                .enumerate()
+                .map(|(j, tk)| {
+                    let cands = tk.into_sorted();
+                    let dropped = cands.len() == cap && pushed[j] > cap;
+                    match self.finish_quant_probes(qv, &qqs[j], cands, qs[j], kk, dropped) {
+                        // the f32 fallback returns the identical exact
+                        // result (and identical scan accounting)
+                        None => self.top_k_probes_f32(qs[j], k, n_probe),
+                        Some(mut tk2) => {
+                            let mut sc = scanned[j];
+                            if np > 0 {
+                                tk2.push_ids(&self.pending_ids, &pend[j * np..(j + 1) * np]);
+                                sc += np;
+                            }
+                            TopKResult { items: tk2.into_sorted(), scanned: sc }
+                        }
+                    }
+                })
+                .collect();
+        }
+
         let parts = crate::util::pool::parallel_chunks(active.len(), nthreads, |_, s, e| {
             let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(kk)).collect();
             let mut scanned = vec![0usize; nq];
@@ -316,8 +552,13 @@ impl IvfIndex {
     // LSM-style: an updated row is tombstoned in the grouped storage and
     // appended to a small pending segment that every query scans exactly;
     // `compact()` folds pending rows back into cluster-contiguous storage.
-    // Callers updating a *shared* index need external synchronization and
-    // must keep the Dataset row in sync (tail scoring reads the Dataset).
+    // The SQ8 shadow copy stays coherent for free between compactions:
+    // grouped rows are never rewritten in place (tombstoned copies are
+    // filtered out of the quantized pass by id), the pending segment is
+    // always scored exactly in f32, and `compact()` re-encodes the
+    // rebuilt storage. Callers updating a *shared* index need external
+    // synchronization and must keep the Dataset row in sync (tail
+    // scoring reads the Dataset).
 
     /// Replace row `id`'s vector. O(d) plus an O(pending) scan per query
     /// until the next [`compact`](Self::compact).
@@ -346,7 +587,8 @@ impl IvfIndex {
     }
 
     /// Fold pending updates back into cluster-contiguous storage
-    /// (reassigning each updated row to its nearest centroid).
+    /// (reassigning each updated row to its nearest centroid) and
+    /// re-encode the SQ8 shadow copy of the rebuilt storage.
     pub fn compact(&mut self) {
         if self.pending_ids.is_empty() {
             return;
@@ -383,6 +625,11 @@ impl IvfIndex {
         self.pending_ids.clear();
         self.pending_rows.clear();
         self.stale.clear();
+        // every block of the rebuilt storage is touched, so the coherence
+        // re-encode is a full pass
+        if self.quant.is_some() {
+            self.quant = Some(QuantView::encode(&self.grouped, d, self.quant_block));
+        }
     }
 }
 
@@ -409,12 +656,13 @@ impl MipsIndex for IvfIndex {
     }
     fn describe(&self) -> String {
         format!(
-            "ivf over n={} d={}: {} clusters, {} probes (~{:.1}% scan)",
+            "ivf over n={} d={}: {} clusters, {} probes (~{:.1}% scan){}",
             self.n,
             self.d,
             self.km.c,
             self.n_probe,
-            100.0 * self.expected_scan_fraction()
+            100.0 * self.expected_scan_fraction(),
+            if self.quant.is_some() { ", sq8 two-stage" } else { "" }
         )
     }
 }
@@ -594,6 +842,71 @@ mod tests {
         }
         assert!(seen.iter().all(|&s| s), "compact must preserve all ids");
         assert_eq!(*idx.offsets.last().unwrap(), idx.n());
+    }
+
+    #[test]
+    fn quant_probe_scan_bit_identical_to_f32() {
+        // same build (clusters, seed) with and without the SQ8 pass must
+        // return identical ids/scores/scan accounting — including through
+        // sparse updates and compaction
+        let ds = Arc::new(synth::imagenet_like(4_000, 16, 30, 0.25, 13));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut qcfg = test_cfg();
+        qcfg.quant = true;
+        qcfg.quant_block = 48;
+        qcfg.overscan = 4;
+        let mut qidx = IvfIndex::build(ds.clone(), &qcfg, backend.clone()).unwrap();
+        let mut fidx = IvfIndex::build(ds.clone(), &test_cfg(), backend).unwrap();
+        assert!(qidx.quant_enabled() && !fidx.quant_enabled());
+        let mut rng = Pcg64::new(14);
+        let check = |qidx: &IvfIndex, fidx: &IvfIndex, rng: &mut Pcg64, label: &str| {
+            for k in [1usize, 17, 60] {
+                let q = synth::random_theta(&ds, 0.05, rng);
+                let got = qidx.top_k(&q, k);
+                let want = fidx.top_k(&q, k);
+                assert_eq!(got.ids(), want.ids(), "{label} k={k}");
+                for (g, w) in got.items.iter().zip(&want.items) {
+                    assert_eq!(g.score, w.score, "{label} k={k}");
+                }
+                assert_eq!(got.scanned, want.scanned, "{label} k={k}");
+            }
+        };
+        check(&qidx, &fidx, &mut rng, "fresh");
+        // identical sparse updates on both indexes
+        let mut urng = Pcg64::new(15);
+        for id in [3u32, 777, 2500] {
+            let v: Vec<f32> = (0..ds.d).map(|_| urng.gaussian() as f32 * 0.2).collect();
+            qidx.update_row(id, &v);
+            fidx.update_row(id, &v);
+        }
+        check(&qidx, &fidx, &mut rng, "pending");
+        qidx.compact();
+        fidx.compact();
+        check(&qidx, &fidx, &mut rng, "compacted");
+    }
+
+    #[test]
+    fn quant_batch_matches_per_query() {
+        let ds = Arc::new(synth::imagenet_like(3_000, 16, 25, 0.25, 21));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut cfg = test_cfg();
+        cfg.quant = true;
+        let idx = IvfIndex::build(ds.clone(), &cfg, backend).unwrap();
+        let mut rng = Pcg64::new(22);
+        for nq in [2usize, 5] {
+            let qs_owned: Vec<Vec<f32>> =
+                (0..nq).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+            let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+            let batch = idx.top_k_batch(&qs, 30);
+            for (j, got) in batch.iter().enumerate() {
+                let want = idx.top_k(qs[j], 30);
+                assert_eq!(got.ids(), want.ids(), "nq={nq} query {j}");
+                for (g, w) in got.items.iter().zip(&want.items) {
+                    assert_eq!(g.score, w.score, "nq={nq} query {j}");
+                }
+                assert_eq!(got.scanned, want.scanned, "nq={nq} query {j}");
+            }
+        }
     }
 
     use crate::util::rng::Pcg64;

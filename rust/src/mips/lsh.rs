@@ -163,6 +163,19 @@ impl MipsIndex for SrpLsh {
         TopKResult { items: tk.into_sorted(), scanned: cands.len() }
     }
 
+    /// Batch-aware probing: per-query candidate sets are unioned and every
+    /// gathered row block is scored once for the whole batch
+    /// ([`ScoreBackend::scores_batch`]), with each row pushed only to the
+    /// queries whose buckets produced it — results and per-query `scanned`
+    /// counts are identical to per-query [`top_k`](MipsIndex::top_k) calls.
+    fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
+        if qs.len() <= 1 {
+            return qs.iter().map(|q| self.top_k(q, k)).collect();
+        }
+        let cand_sets: Vec<Vec<u32>> = qs.iter().map(|q| self.candidates(q)).collect();
+        super::batch_scan_candidates(&self.ds, self.backend.as_ref(), qs, k, &cand_sets)
+    }
+
     fn n(&self) -> usize {
         self.ds.n
     }
@@ -269,6 +282,30 @@ mod tests {
             .collect();
         norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert!((norms[0] - norms[norms.len() - 1]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn top_k_batch_matches_per_query() {
+        // the merged-candidate batch scan must return exactly the
+        // per-query results: ids, scores, and scanned accounting
+        let ds = Arc::new(synth::imagenet_like(2500, 12, 25, 0.3, 9));
+        let idx = SrpLsh::build(ds.clone(), &cfg(7, 8), Arc::new(NativeScorer)).unwrap();
+        let mut rng = Pcg64::new(10);
+        for nq in [2usize, 3, 7] {
+            let qs_owned: Vec<Vec<f32>> =
+                (0..nq).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+            let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+            let batch = idx.top_k_batch(&qs, 15);
+            assert_eq!(batch.len(), nq);
+            for (j, got) in batch.iter().enumerate() {
+                let want = idx.top_k(qs[j], 15);
+                assert_eq!(got.ids(), want.ids(), "nq={nq} query {j}");
+                for (g, w) in got.items.iter().zip(&want.items) {
+                    assert_eq!(g.score, w.score, "nq={nq} query {j}");
+                }
+                assert_eq!(got.scanned, want.scanned, "nq={nq} query {j}");
+            }
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::config::{IndexConfig, IndexKind};
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::scorer::ScoreBackend;
-use crate::util::topk::Scored;
+use crate::util::topk::{Scored, TopK};
 use std::sync::Arc;
 
 /// Result of a top-k query.
@@ -92,11 +92,90 @@ pub fn build_index(
     backend: Arc<dyn ScoreBackend>,
 ) -> Result<Arc<dyn MipsIndex>> {
     Ok(match cfg.kind {
-        IndexKind::Brute => Arc::new(brute::BruteForce::new(ds.clone(), backend)),
+        IndexKind::Brute => {
+            let mut idx = brute::BruteForce::new(ds.clone(), backend);
+            if cfg.quant {
+                idx = idx.with_quant(cfg.quant_block, cfg.overscan);
+            }
+            Arc::new(idx)
+        }
         IndexKind::Ivf => Arc::new(ivf::IvfIndex::build(ds.clone(), cfg, backend)?),
         IndexKind::Lsh => Arc::new(lsh::SrpLsh::build(ds.clone(), cfg, backend)?),
         IndexKind::Tiered => Arc::new(tiered::TieredLsh::build(ds.clone(), cfg, backend)?),
     })
+}
+
+/// Batch-scan per-query candidate sets (the LSH families' batching
+/// primitive): union each 64-query chunk's candidate ids, gather and
+/// score every union block **once** per chunk via
+/// [`ScoreBackend::scores_batch`], and push each scored row only to the
+/// queries whose candidate set contained it — so results (ids, scores,
+/// and per-query `scanned` counts) are exactly what per-query scans of
+/// `cand_sets[j]` would produce, while each gathered row block streams
+/// from memory once per chunk instead of once per query.
+pub(crate) fn batch_scan_candidates(
+    ds: &Dataset,
+    backend: &dyn ScoreBackend,
+    qs: &[&[f32]],
+    k: usize,
+    cand_sets: &[Vec<u32>],
+) -> Vec<TopKResult> {
+    debug_assert_eq!(qs.len(), cand_sets.len());
+    let d = ds.d;
+    let kk = k.min(ds.n).max(1);
+    let mut results = Vec::with_capacity(qs.len());
+    // per-id query-membership bitmask (one bit per query in the chunk)
+    let mut mask = vec![0u64; ds.n];
+    for (chunk_qs, chunk_cands) in qs.chunks(64).zip(cand_sets.chunks(64)) {
+        let nq = chunk_qs.len();
+        let mut union: Vec<u32> = Vec::new();
+        for (j, cands) in chunk_cands.iter().enumerate() {
+            let bit = 1u64 << j;
+            for &id in cands {
+                if mask[id as usize] == 0 {
+                    union.push(id);
+                }
+                mask[id as usize] |= bit;
+            }
+        }
+        let mut qflat = vec![0f32; nq * d];
+        for (j, q) in chunk_qs.iter().enumerate() {
+            debug_assert_eq!(q.len(), d);
+            qflat[j * d..(j + 1) * d].copy_from_slice(q);
+        }
+        let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(kk)).collect();
+        const BLOCK: usize = 1024;
+        let mut rows = vec![0f32; BLOCK.min(union.len().max(1)) * d];
+        let mut out = vec![0f32; BLOCK * nq];
+        let mut start = 0;
+        while start < union.len() {
+            let end = (start + BLOCK).min(union.len());
+            let ids = &union[start..end];
+            let bn = end - start;
+            let rows_buf = &mut rows[..bn * d];
+            ds.gather(ids, rows_buf);
+            let out_buf = &mut out[..bn * nq];
+            backend.scores_batch(rows_buf, d, &qflat, nq, out_buf);
+            for (j, tk) in tks.iter_mut().enumerate() {
+                let bit = 1u64 << j;
+                let sc = &out_buf[j * bn..(j + 1) * bn];
+                for (t, &id) in ids.iter().enumerate() {
+                    if mask[id as usize] & bit != 0 {
+                        tk.push(id, sc[t]);
+                    }
+                }
+            }
+            start = end;
+        }
+        // reset the mask for the next chunk (touched entries only)
+        for &id in &union {
+            mask[id as usize] = 0;
+        }
+        for (tk, cands) in tks.into_iter().zip(chunk_cands) {
+            results.push(TopKResult { items: tk.into_sorted(), scanned: cands.len() });
+        }
+    }
+    results
 }
 
 /// Recall@k of `got` against the exact top-k `want` (id overlap / k) —

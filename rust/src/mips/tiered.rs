@@ -117,26 +117,13 @@ impl TieredLsh {
     pub fn gap_per_unit_query(&self) -> f64 {
         self.gap_per_unit_query
     }
-}
 
-fn srp_hash(planes: &[f32], bits: usize, v: &[f32]) -> u32 {
-    let d = v.len();
-    let mut code = 0u32;
-    for b in 0..bits {
-        if linalg::dot(&planes[b * d..(b + 1) * d], v) >= 0.0 {
-            code |= 1 << b;
-        }
-    }
-    code
-}
-
-impl MipsIndex for TieredLsh {
-    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
-        let k = k.min(self.ds.n).max(1);
-        let d = self.ds.d;
+    /// Candidate ids for `q`: walk the ladder fine → coarse until `k`
+    /// candidates are gathered, topping up sequentially if the ladder is
+    /// exhausted (Definition 3.1 needs a fixed-size set).
+    fn candidates(&self, q: &[f32], k: usize) -> Vec<u32> {
         let mut seen = vec![false; self.ds.n];
         let mut cands: Vec<u32> = Vec::with_capacity(2 * k);
-        // walk the ladder fine → coarse until we have k candidates
         for rung in &self.rungs {
             let code = srp_hash(&rung.planes, rung.bits, q);
             // probe the query bucket and its 1-bit neighbors (sharper
@@ -159,8 +146,7 @@ impl MipsIndex for TieredLsh {
             }
         }
         // fallback: ladder exhausted without k candidates → top up with a
-        // sequential fill so |S| = k always holds (Definition 3.1 needs a
-        // fixed-size set)
+        // sequential fill so |S| = k always holds
         if cands.len() < k {
             for id in 0..self.ds.n as u32 {
                 if !seen[id as usize] {
@@ -172,6 +158,26 @@ impl MipsIndex for TieredLsh {
                 }
             }
         }
+        cands
+    }
+}
+
+fn srp_hash(planes: &[f32], bits: usize, v: &[f32]) -> u32 {
+    let d = v.len();
+    let mut code = 0u32;
+    for b in 0..bits {
+        if linalg::dot(&planes[b * d..(b + 1) * d], v) >= 0.0 {
+            code |= 1 << b;
+        }
+    }
+    code
+}
+
+impl MipsIndex for TieredLsh {
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+        let k = k.min(self.ds.n).max(1);
+        let d = self.ds.d;
+        let cands = self.candidates(q, k);
         // exact-score candidates
         let mut tk = TopK::new(k);
         const BLOCK: usize = 1024;
@@ -189,6 +195,20 @@ impl MipsIndex for TieredLsh {
             start = end;
         }
         TopKResult { items: tk.into_sorted(), scanned: cands.len() }
+    }
+
+    /// Batch-aware probing: each query's ladder walk produces its
+    /// candidate set exactly as [`top_k`](MipsIndex::top_k) would, then
+    /// the union is gathered and scored once per batch via
+    /// [`ScoreBackend::scores_batch`] — identical results, one stream of
+    /// the gathered rows instead of one per query.
+    fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
+        if qs.len() <= 1 {
+            return qs.iter().map(|q| self.top_k(q, k)).collect();
+        }
+        let kk = k.min(self.ds.n).max(1);
+        let cand_sets: Vec<Vec<u32>> = qs.iter().map(|q| self.candidates(q, kk)).collect();
+        super::batch_scan_candidates(&self.ds, self.backend.as_ref(), qs, kk, &cand_sets)
     }
 
     fn n(&self) -> usize {
@@ -291,6 +311,28 @@ mod tests {
         // ≈ 0.01, so anything ≫ that shows the ladder concentrates on
         // high-score states (the gap certificate is tested separately)
         assert!(recall > 0.12, "recall = {recall}");
+    }
+
+    #[test]
+    fn top_k_batch_matches_per_query() {
+        let ds = Arc::new(synth::imagenet_like(2500, 12, 25, 0.3, 11));
+        let idx = TieredLsh::build(ds.clone(), &cfg(), Arc::new(NativeScorer)).unwrap();
+        let mut rng = Pcg64::new(12);
+        for nq in [2usize, 5] {
+            let qs_owned: Vec<Vec<f32>> =
+                (0..nq).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+            let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+            let batch = idx.top_k_batch(&qs, 25);
+            assert_eq!(batch.len(), nq);
+            for (j, got) in batch.iter().enumerate() {
+                let want = idx.top_k(qs[j], 25);
+                assert_eq!(got.ids(), want.ids(), "nq={nq} query {j}");
+                for (g, w) in got.items.iter().zip(&want.items) {
+                    assert_eq!(g.score, w.score, "nq={nq} query {j}");
+                }
+                assert_eq!(got.scanned, want.scanned, "nq={nq} query {j}");
+            }
+        }
     }
 
     #[test]

@@ -178,6 +178,53 @@ impl<T> WorkQueue<T> {
         }
     }
 
+    /// [`pop_batch`](Self::pop_batch) with a bounded micro-wait: after
+    /// the first item arrives, keep waiting up to `wait` for the batch to
+    /// deepen toward `max` before serving it. Under moderate load this
+    /// trades a little p50 latency for markedly deeper batches (and thus
+    /// better scan amortization); `wait == 0` is exactly `pop_batch`.
+    /// `None` once closed *and* drained.
+    pub fn pop_batch_wait(&self, max: usize, wait: std::time::Duration) -> Option<Vec<T>> {
+        if wait.is_zero() {
+            return self.pop_batch(max);
+        }
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            // block until the first item (or close)
+            while g.items.is_empty() {
+                if g.closed {
+                    return None;
+                }
+                g = self.not_empty.wait(g).unwrap();
+            }
+            // micro-wait: deepen the batch until `max`, close, or the deadline
+            let deadline = std::time::Instant::now() + wait;
+            while g.items.len() < max && !g.closed {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+                g = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            let take = g.items.len().min(max);
+            if take == 0 {
+                // a concurrent consumer drained the queue during our
+                // micro-wait; go back to waiting for a first item so we
+                // uphold pop_batch's never-empty contract
+                continue;
+            }
+            let items: Vec<T> = g.items.drain(..take).collect();
+            drop(g);
+            self.not_full.notify_all();
+            return Some(items);
+        }
+    }
+
     /// Close the queue; wakes all blocked producers/consumers.
     pub fn close(&self) {
         let mut g = self.inner.lock().unwrap();
@@ -304,6 +351,51 @@ mod tests {
         assert_eq!(q.pop_batch(4), Some(vec![7]));
         assert_eq!(q.pop_batch(4), None);
         producer.join().unwrap();
+    }
+
+    #[test]
+    fn pop_batch_wait_deepens_the_batch() {
+        use std::time::Duration;
+        let q = Arc::new(WorkQueue::new(16));
+        let qc = q.clone();
+        let producer = std::thread::spawn(move || {
+            assert!(qc.push(1));
+            // second item lands well inside the consumer's micro-wait
+            std::thread::sleep(Duration::from_millis(30));
+            assert!(qc.push(2));
+            qc.close();
+        });
+        // generous wait so the test is robust on slow CI machines
+        let got = q.pop_batch_wait(8, Duration::from_secs(5));
+        assert_eq!(got, Some(vec![1, 2]));
+        assert_eq!(q.pop_batch_wait(8, Duration::from_secs(5)), None);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn pop_batch_wait_zero_is_pop_batch() {
+        use std::time::Duration;
+        let q = WorkQueue::new(8);
+        for i in 0..3 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.pop_batch_wait(2, Duration::ZERO), Some(vec![0, 1]));
+        assert_eq!(q.pop_batch_wait(8, Duration::ZERO), Some(vec![2]));
+        q.close();
+        assert_eq!(q.pop_batch_wait(8, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn pop_batch_wait_returns_at_max_without_waiting_out_the_clock() {
+        use std::time::{Duration, Instant};
+        let q = WorkQueue::new(16);
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        let t0 = Instant::now();
+        // max already queued → must return immediately despite a long wait
+        assert_eq!(q.pop_batch_wait(5, Duration::from_secs(30)), Some(vec![0, 1, 2, 3, 4]));
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 
     #[test]

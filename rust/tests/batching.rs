@@ -48,8 +48,9 @@ fn property_brute_batch_identical_across_random_batches() {
 
 #[test]
 fn default_batch_impl_matches_loop_for_lsh_families() {
-    // lsh/tiered use the trait's default per-query loop: sanity-check the
-    // default really is transparent
+    // lsh/tiered now batch via candidate-set union + one gathered
+    // scores_batch pass per 64-query chunk: the batch path must remain
+    // transparent (identical ids to per-query scans)
     let ds = testset(2_000, 16, 2);
     let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
     let mut cfg = Config::default().index;

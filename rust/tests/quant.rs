@@ -1,0 +1,210 @@
+//! SQ8 two-stage scan invariants (Checker-driven): the quantized
+//! screening pass is a pure bandwidth optimization — pass 1 must always
+//! retain the exact top-k (coverage), and the end-to-end `top_k` /
+//! `top_k_batch` results must be bit-identical to the f32-only scan on
+//! brute and IVF, including through sparse updates and compaction.
+
+use gmips::config::{Config, IndexConfig};
+use gmips::data::{self, synth};
+use gmips::linalg::{self, quant::*};
+use gmips::mips::brute::BruteForce;
+use gmips::mips::ivf::IvfIndex;
+use gmips::mips::{MipsIndex, TopKResult};
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::util::check::Checker;
+use gmips::util::rng::Pcg64;
+use gmips::util::topk::{topk_reference, TopK};
+use std::sync::Arc;
+
+/// Bit-level result parity: same ids AND same f32 score bits.
+fn assert_parity(got: &TopKResult, want: &TopKResult, label: &str) {
+    assert_eq!(got.ids(), want.ids(), "{label}: ids diverge");
+    for (g, w) in got.items.iter().zip(&want.items) {
+        assert_eq!(g.score.to_bits(), w.score.to_bits(), "{label}: scores diverge");
+    }
+    assert_eq!(got.scanned, want.scanned, "{label}: scanned accounting diverges");
+}
+
+#[test]
+fn property_exact_topk_always_inside_overscan_candidates() {
+    // the coverage contract: for random datasets/dims/blocks, whenever
+    // the coverage certificate fires, the exact top-k ids are a subset
+    // of the pass-1 overscan candidate set (otherwise the pass honestly
+    // reports failure and the caller rescans exactly)
+    Checker::new(51).cases(50).check_u64(1u64 << 32, |seed| {
+        let mut rng = Pcg64::new(seed ^ 0x5EED);
+        let n = 200 + rng.next_below(800) as usize;
+        let d = 1 + rng.next_below(48) as usize;
+        let block = 1 + rng.next_below(96) as usize;
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let qv = QuantView::encode(&rows, d, block);
+        let qq = QuantQuery::encode(&q);
+        let eps = qv.error_bound(&qq);
+        let mut quant = vec![0f32; n];
+        qv.scores(0, n, &qq, &mut quant);
+        let mut exact = vec![0f32; n];
+        linalg::matvec_block(&rows, d, &q, &mut exact);
+        let k = 1 + rng.next_below(32) as usize;
+        let overscan = 1 + rng.next_below(6) as usize;
+        let cap = (k * overscan).clamp(k, n);
+        let mut tk = TopK::new(cap);
+        tk.push_block(0, &quant);
+        let cands = tk.into_sorted();
+        let full = cands.len() == cap;
+        let q_floor = cands.last().map(|s| s.score).unwrap_or(f32::NEG_INFINITY);
+        let mut rerank = TopK::new(k.min(n));
+        for s in &cands {
+            rerank.push(s.id, exact[s.id as usize]);
+        }
+        if !coverage_proved(full, q_floor, eps, rerank.threshold()) {
+            return true; // honest refusal → caller rescans exactly
+        }
+        let cset: std::collections::HashSet<u32> = cands.iter().map(|s| s.id).collect();
+        topk_reference(&exact, k.min(n)).iter().all(|s| cset.contains(&s.id))
+    });
+}
+
+#[test]
+fn property_brute_quant_bit_parity() {
+    // end-to-end: two-stage brute == f32 brute, bit for bit, across
+    // random datasets, dims, quantization blocks, and overscans
+    Checker::new(52).cases(12).check_u64(1u64 << 32, |seed| {
+        let mut rng = Pcg64::new(seed ^ 0xB17);
+        let n = 800 + rng.next_below(1200) as usize;
+        let d = [4usize, 9, 16, 33][rng.next_below(4) as usize];
+        let ds = Arc::new(synth::imagenet_like(n, d, 12, 0.3, seed));
+        let qblock = 1 + rng.next_below(128) as usize;
+        let overscan = 1 + rng.next_below(5) as usize;
+        let f32_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer));
+        let q_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer))
+            .with_quant(qblock, overscan);
+        for _ in 0..3 {
+            let k = 1 + rng.next_below(80) as usize;
+            let q = data::random_theta(&ds, 0.05, &mut rng);
+            let got = q_idx.top_k(&q, k);
+            let want = f32_idx.top_k(&q, k);
+            if got.ids() != want.ids()
+                || got
+                    .items
+                    .iter()
+                    .zip(&want.items)
+                    .any(|(g, w)| g.score.to_bits() != w.score.to_bits())
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn brute_quant_batch_bit_parity() {
+    let ds = Arc::new(synth::imagenet_like(2_500, 24, 20, 0.3, 3));
+    let f32_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer));
+    let q_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer)).with_quant(64, 4);
+    let mut rng = Pcg64::new(4);
+    for nq in [2usize, 4, 7] {
+        let qs_owned: Vec<Vec<f32>> =
+            (0..nq).map(|_| data::random_theta(&ds, 0.05, &mut rng)).collect();
+        let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+        let got = q_idx.top_k_batch(&qs, 33);
+        let want = f32_idx.top_k_batch(&qs, 33);
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_parity(g, w, &format!("brute batch nq={nq} query {j}"));
+        }
+    }
+}
+
+fn ivf_cfg(quant: bool) -> IndexConfig {
+    let mut cfg = Config::default().index;
+    cfg.n_clusters = 35;
+    cfg.n_probe = 7;
+    cfg.kmeans_iters = 5;
+    cfg.train_sample = 1_500;
+    cfg.quant = quant;
+    cfg.quant_block = 48;
+    cfg.overscan = 4;
+    cfg
+}
+
+#[test]
+fn ivf_quant_bit_parity_through_updates_and_compaction() {
+    // same build seed → same clusters/grouped storage; the SQ8 pass must
+    // be invisible in the results across the whole update lifecycle
+    let ds = Arc::new(synth::imagenet_like(3_500, 16, 30, 0.25, 5));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut q_idx = IvfIndex::build(ds.clone(), &ivf_cfg(true), backend.clone()).unwrap();
+    let mut f_idx = IvfIndex::build(ds.clone(), &ivf_cfg(false), backend).unwrap();
+    let mut rng = Pcg64::new(6);
+    let phases: [(&str, bool, bool); 3] =
+        [("fresh", false, false), ("pending", true, false), ("compacted", false, true)];
+    let mut urng = Pcg64::new(7);
+    for (label, do_updates, do_compact) in phases {
+        if do_updates {
+            for id in [12u32, 901, 3_333] {
+                let v: Vec<f32> = (0..ds.d).map(|_| urng.gaussian() as f32 * 0.3).collect();
+                q_idx.update_row(id, &v);
+                f_idx.update_row(id, &v);
+            }
+        }
+        if do_compact {
+            q_idx.compact();
+            f_idx.compact();
+        }
+        for k in [1usize, 25, 90] {
+            let q = data::random_theta(&ds, 0.05, &mut rng);
+            assert_parity(&q_idx.top_k(&q, k), &f_idx.top_k(&q, k), &format!("{label} k={k}"));
+        }
+        // batch parity against BOTH the per-query quant path and the f32 batch
+        let qs_owned: Vec<Vec<f32>> =
+            (0..5).map(|_| data::random_theta(&ds, 0.05, &mut rng)).collect();
+        let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+        let got = q_idx.top_k_batch(&qs, 40);
+        let want = f_idx.top_k_batch(&qs, 40);
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_parity(g, w, &format!("{label} batch query {j}"));
+            assert_parity(g, &q_idx.top_k(qs[j], 40), &format!("{label} batch-vs-single {j}"));
+        }
+    }
+}
+
+#[test]
+fn adversarial_flat_data_stays_bit_exact() {
+    // (near-)identical rows collapse quantized scores into ties; the
+    // coverage certificate must either still hold or trigger the f32
+    // fallback — parity is required either way. Exactly-identical rows
+    // guarantee the fallback branch runs (q_floor == kth exact).
+    let mut rng = Pcg64::new(8);
+    let (n, d) = (600usize, 8usize);
+    let base: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    for jitter in [0.0f32, 1e-6] {
+        let data_flat: Vec<f32> = (0..n)
+            .flat_map(|_| {
+                base.iter().map(|&x| x + jitter * rng.gaussian() as f32).collect::<Vec<f32>>()
+            })
+            .collect();
+        let ds = Arc::new(gmips::data::Dataset::new(data_flat, n, d).unwrap());
+        let f32_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer));
+        let q_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer)).with_quant(32, 1);
+        for _ in 0..5 {
+            let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let got = q_idx.top_k(&q, 10);
+            let want = f32_idx.top_k(&q, 10);
+            assert_parity(&got, &want, &format!("flat-data jitter={jitter}"));
+        }
+    }
+}
+
+#[test]
+fn build_index_honours_quant_config() {
+    let ds = Arc::new(synth::imagenet_like(1_200, 8, 10, 0.3, 9));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut cfg = ivf_cfg(true);
+    cfg.kind = gmips::config::IndexKind::Brute;
+    let idx = gmips::mips::build_index(&ds, &cfg, backend.clone()).unwrap();
+    assert!(idx.describe().contains("sq8"), "{}", idx.describe());
+    cfg.kind = gmips::config::IndexKind::Ivf;
+    let idx = gmips::mips::build_index(&ds, &cfg, backend).unwrap();
+    assert!(idx.describe().contains("sq8"), "{}", idx.describe());
+}
