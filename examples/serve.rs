@@ -3,7 +3,13 @@
 //! inference as a service.
 //!
 //!     cargo run --release --example serve
+//!
+//! Config comes from `examples/serve.toml` when present (documenting the
+//! sharding / quantization / micro-batching knobs), layered over the
+//! `imagenet` preset; without the file the demo falls back to a sharded
+//! in-code default.
 
+use gmips::config::toml::TomlDoc;
 use gmips::config::Config;
 use gmips::coordinator::{Coordinator, Engine, Request, Response};
 use gmips::prelude::*;
@@ -14,11 +20,32 @@ fn main() -> Result<()> {
     let mut cfg = Config::preset("imagenet")?;
     cfg.data.n = 20_000;
     cfg.data.d = 64;
+    let toml_path = ["examples/serve.toml", "serve.toml"]
+        .into_iter()
+        .find(|p| std::path::Path::new(p).exists());
+    match toml_path {
+        Some(path) => {
+            println!("applying {path}");
+            cfg.apply_toml(&TomlDoc::load(path)?)?;
+        }
+        None => {
+            // no file: still demo the sharded fan-out
+            cfg.index.shards = 4;
+        }
+    }
+    cfg.validate()?;
 
-    println!("building engine (data + IVF index)…");
+    println!("building engine (data + index)…");
     let engine = Arc::new(Engine::from_config(&cfg, None)?);
+    println!("index: {}", engine.index.describe());
     let ds = engine.ds.clone();
-    let coord = Arc::new(Coordinator::start(engine, 0, cfg.serve.queue_depth, 99));
+    let coord = Arc::new(Coordinator::start_with_wait(
+        engine,
+        cfg.serve.workers,
+        cfg.serve.queue_depth,
+        99,
+        cfg.serve.micro_wait_us,
+    ));
     let server = Server::bind(coord, "127.0.0.1:0")?;
     let addr = server.local_addr()?;
     println!("server on {addr}");

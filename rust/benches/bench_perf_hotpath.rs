@@ -7,8 +7,9 @@
 //! scoring (when artifacts exist), top-k collection, IVF probe
 //! (single-query, 8 sequential queries, and one 8-query batch), SQ8
 //! quantized scan vs f32 scan (plus the end-to-end two-stage brute
-//! top-k) on a ≥100k × 128 dataset, lazy tail draw, full Alg-1 sample,
-//! Alg-3 estimate.
+//! top-k) on a ≥100k × 128 dataset, sharded fan-out scan at 1/4/8
+//! shards on the same dataset (`shard_scan_speedup`), lazy tail draw,
+//! full Alg-1 sample, Alg-3 estimate.
 //!
 //! Besides the banner table, results are written machine-readably to
 //! `BENCH_perf_hotpath.json` (stage name, mean seconds, iters, GFLOP/s
@@ -197,6 +198,18 @@ fn main() {
         seq_mean / batch_mean
     );
 
+    // ---- big-scan dataset shared by the SQ8 and sharding stages ----------------
+    let qn = opts.n.max(100_000);
+    let qd = 128usize;
+    let qds = {
+        let mut qdata = cfg.data.clone();
+        qdata.n = qn;
+        qdata.d = qd;
+        qdata.path = String::new();
+        Arc::new(data::generate(&qdata))
+    };
+    let scan_flops_big = 2.0 * qn as f64 * qd as f64;
+
     // ---- SQ8 quantized scan vs f32 scan (≥100k × 128) --------------------------
     // acceptance: ≥2× pass-1 scan throughput; the two-stage brute top_k
     // below shows the end-to-end effect (screen + exact re-rank)
@@ -204,18 +217,11 @@ fn main() {
     {
         use gmips::linalg::quant::{QuantQuery, QuantView};
         use gmips::mips::brute::BruteForce;
-        let qn = opts.n.max(100_000);
-        let qd = 128usize;
-        let mut qdata = cfg.data.clone();
-        qdata.n = qn;
-        qdata.d = qd;
-        qdata.path = String::new();
-        let qds = Arc::new(data::generate(&qdata));
         let qv = QuantView::encode(&qds.data, qd, 64);
         let mut qrng = Pcg64::new(17);
         let theta = data::random_theta(&qds, cfg.data.temperature, &mut qrng);
         let qq = QuantQuery::encode(&theta);
-        let scan_flops = 2.0 * qn as f64 * qd as f64;
+        let scan_flops = scan_flops_big;
         let kq = (qn as f64).sqrt().round() as usize;
         let mut sbuf = vec![0f32; 4096];
 
@@ -266,6 +272,47 @@ fn main() {
             std::hint::black_box(bq.top_k(&theta, kq));
         });
         record(&mut results, s, Some(scan_flops));
+    }
+
+    // ---- sharded fan-out scan: 1 vs 4 vs 8 shards (≥100k × 128) ----------------
+    // acceptance: the data-parallel fan-out must beat the monolithic scan
+    // wall-clock; the baseline is a TRUE monolithic BruteForce scan (a
+    // 1-shard ShardedIndex still pays fan-out/merge overhead, which the
+    // N=1 stage below exposes separately) and
+    // shard_scan_speedup = t(monolithic) / best t(4|8 shards)
+    let shard_scan_speedup;
+    {
+        use gmips::mips::brute::BruteForce;
+        use gmips::shard::ShardedIndex;
+        let kq = (qn as f64).sqrt().round() as usize;
+        let mut srng = Pcg64::new(23);
+        let theta = data::random_theta(&qds, cfg.data.temperature, &mut srng);
+        let mono = BruteForce::new(qds.clone(), backend.clone());
+        let s = bench.run(&format!("monolithic brute top_k {qn}x{qd}"), || {
+            std::hint::black_box(mono.top_k(&theta, kq));
+        });
+        let mono_mean = s.mean_s;
+        record(&mut results, s, Some(scan_flops_big));
+        let mut means = Vec::new();
+        for shards in [1usize, 4, 8] {
+            let mut icfg = cfg.index.clone();
+            icfg.kind = gmips::config::IndexKind::Brute;
+            icfg.shards = shards;
+            let idx = ShardedIndex::build(&qds, &icfg, backend.clone()).unwrap();
+            let s = bench.run(&format!("sharded brute top_k N={shards} {qn}x{qd}"), || {
+                std::hint::black_box(idx.top_k(&theta, kq));
+            });
+            means.push(s.mean_s);
+            record(&mut results, s, Some(scan_flops_big));
+        }
+        shard_scan_speedup = mono_mean / means[1].min(means[2]);
+        println!(
+            "sharded scan speedup vs monolithic: 1sh {:.2}x, 4sh {:.2}x, 8sh {:.2}x (recorded {:.2}x)",
+            mono_mean / means[0],
+            mono_mean / means[1],
+            mono_mean / means[2],
+            shard_scan_speedup
+        );
     }
 
     // ---- lazy tail draw ---------------------------------------------------------
@@ -348,6 +395,7 @@ fn main() {
         ("d", Json::num(d as f64)),
         ("batch_queries", Json::num(NQ as f64)),
         ("quant_scan_speedup", Json::num(quant_speedup)),
+        ("shard_scan_speedup", Json::num(shard_scan_speedup)),
         ("stages", Json::Arr(stages)),
     ]);
     match std::fs::write("BENCH_perf_hotpath.json", doc.to_string()) {

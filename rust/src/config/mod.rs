@@ -79,6 +79,33 @@ impl IndexKind {
     }
 }
 
+/// How a sharded index partitions database rows across sub-indexes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Row `i` lives on shard `i mod N` (interleaved; load-balances
+    /// clustered id ranges).
+    RoundRobin,
+    /// Balanced contiguous id ranges (`⌊s·n/N⌋ .. ⌊(s+1)·n/N⌋`; keeps
+    /// neighboring rows on one shard, cheap id arithmetic).
+    Contiguous,
+}
+
+impl ShardStrategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" | "rr" | "interleaved" => Ok(ShardStrategy::RoundRobin),
+            "contiguous" | "range" => Ok(ShardStrategy::Contiguous),
+            other => Err(Error::config(format!("unknown index.shard_strategy '{other}'"))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardStrategy::RoundRobin => "round-robin",
+            ShardStrategy::Contiguous => "contiguous",
+        }
+    }
+}
+
 /// Score computation backend for block scans.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -152,6 +179,16 @@ pub struct IndexConfig {
     pub overscan: usize,
     /// rows per SQ8 `(scale, offset)` quantization block
     pub quant_block: usize,
+    /// number of data-parallel sub-indexes (1 = monolithic). Each shard
+    /// holds a disjoint row partition behind its own index; queries fan
+    /// out and k-way-merge, bit-identical to the unsharded index on
+    /// brute/IVF/LSH (see `crate::shard`).
+    pub shards: usize,
+    /// how rows are partitioned across shards
+    pub shard_strategy: ShardStrategy,
+    /// fan shard scans out over `util::pool` threads (false = sequential
+    /// fan-out, useful for deterministic profiling)
+    pub shard_parallel: bool,
     pub seed: u64,
 }
 
@@ -255,6 +292,9 @@ impl Default for Config {
                 quant: false,
                 overscan: 4,
                 quant_block: 64,
+                shards: 1,
+                shard_strategy: ShardStrategy::RoundRobin,
+                shard_parallel: true,
                 seed: 7,
             },
             sampler: SamplerConfig { k_mult: 5.0, l_mult: 5.0, gap_c: 0.0 },
@@ -360,6 +400,11 @@ impl Config {
         c.index.quant = doc.get_bool("index.quant", c.index.quant)?;
         c.index.overscan = doc.get_usize("index.overscan", c.index.overscan)?;
         c.index.quant_block = doc.get_usize("index.quant_block", c.index.quant_block)?;
+        c.index.shards = doc.get_usize("index.shards", c.index.shards)?;
+        if let Some(v) = doc.get("index.shard_strategy") {
+            c.index.shard_strategy = ShardStrategy::parse(v.as_str()?)?;
+        }
+        c.index.shard_parallel = doc.get_bool("index.shard_parallel", c.index.shard_parallel)?;
         c.index.seed = doc.get_u64("index.seed", c.index.seed)?;
 
         c.sampler.k_mult = doc.get_f64("sampler.k_mult", c.sampler.k_mult)?;
@@ -447,6 +492,12 @@ impl Config {
         }
         if self.index.overscan == 0 || self.index.quant_block == 0 {
             return Err(Error::config("index.overscan and index.quant_block must be positive"));
+        }
+        if self.index.shards == 0 {
+            return Err(Error::config("index.shards must be ≥ 1 (1 = unsharded)"));
+        }
+        if self.index.shards > self.data.n {
+            return Err(Error::config("index.shards must not exceed data.n"));
         }
         if self.learn.train_size == 0 || self.learn.train_size > self.data.n {
             return Err(Error::config("learn.train_size must be in [1, n]"));
@@ -587,5 +638,31 @@ mod tests {
         for b in ["native", "pjrt"] {
             assert_eq!(Backend::parse(b).unwrap().name(), b);
         }
+        for s in ["round-robin", "contiguous"] {
+            assert_eq!(ShardStrategy::parse(s).unwrap().name(), s);
+        }
+        assert!(ShardStrategy::parse("hash").is_err());
+    }
+
+    #[test]
+    fn shard_knobs_from_toml_and_validation() {
+        let mut c = Config::default();
+        assert_eq!(c.index.shards, 1);
+        assert_eq!(c.index.shard_strategy, ShardStrategy::RoundRobin);
+        assert!(c.index.shard_parallel);
+        let doc = TomlDoc::parse(
+            "[index]\nshards = 8\nshard_strategy = \"contiguous\"\nshard_parallel = false",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.index.shards, 8);
+        assert_eq!(c.index.shard_strategy, ShardStrategy::Contiguous);
+        assert!(!c.index.shard_parallel);
+        c.validate().unwrap();
+        // shards = 0 and shards > n must both be rejected
+        c.index.shards = 0;
+        assert!(c.validate().is_err());
+        c.index.shards = c.data.n + 1;
+        assert!(c.validate().is_err());
     }
 }

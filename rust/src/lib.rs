@@ -40,6 +40,13 @@
 //! samplers/estimators expose `*_batch` entry points, and the
 //! [`coordinator`] drains its queue in batches (with an optional bounded
 //! micro-wait to deepen them) so concurrent users share index scans.
+//! Above the single index sits the [`shard`] layer (`index.shards > 1`):
+//! `N` sub-indexes over disjoint row partitions answer each query in a
+//! parallel fan-out and k-way merge — bit-identical to the monolithic
+//! index on brute/IVF/LSH (shared IVF coarse quantizer, shared LSH norm
+//! bound) — with sharded sampling (per-shard Gumbel maxima merged by
+//! argmax under id-keyed frozen streams) and sharded partition
+//! estimation (per-shard partials merged by log-sum-exp).
 //!
 //! ## Quickstart
 //!
@@ -80,6 +87,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod scorer;
 pub mod server;
+pub mod shard;
 pub mod util;
 pub mod walk;
 
@@ -97,6 +105,7 @@ pub mod prelude {
     pub use crate::sampler::lazy_gumbel::LazyGumbelSampler;
     pub use crate::sampler::Sampler;
     pub use crate::scorer::{NativeScorer, ScoreBackend};
+    pub use crate::shard::{ShardedGumbelSampler, ShardedIndex, ShardedPartitionEstimator};
     pub use crate::util::rng::Pcg64;
     pub use crate::walk::RandomWalk;
 }

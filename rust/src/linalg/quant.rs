@@ -228,6 +228,30 @@ impl QuantView {
         ((quant + fp) * 1.05 + 1e-12) as f32
     }
 
+    /// Quantized approximate scores for an explicit (gathered) id list:
+    /// `out[i] = Q_{ids[i]}`. This is the candidate-screening form the LSH
+    /// families use — their candidate sets are scattered, so rows are
+    /// scored one code row at a time through [`dot_u8i16`] with each
+    /// row's own block parameters. Per-score arithmetic mirrors
+    /// [`scores`](Self::scores) exactly (same f64 evaluation order), so a
+    /// scattered score equals the contiguous score of the same row.
+    pub fn scores_ids(&self, ids: &[u32], qq: &QuantQuery, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len());
+        debug_assert_eq!(qq.codes.len(), self.d);
+        let d = self.d;
+        let sq = qq.scale as f64;
+        let sumq = qq.sumq as f64;
+        for (o, &id) in out.iter_mut().zip(ids) {
+            let r = id as usize;
+            debug_assert!(r < self.n);
+            let b = r / self.block;
+            let sc = self.scales[b] as f64 * sq;
+            let off = self.offsets[b] as f64 * sumq;
+            let ip = dot_u8i16(&self.codes[r * d..(r + 1) * d], &qq.codes);
+            *o = (sc * ip as f64 + off) as f32;
+        }
+    }
+
     /// Quantized approximate scores for rows `[row_start, row_end)`:
     /// `out[i] = Q_{row_start + i}` (see module docs). `out.len()` must be
     /// `row_end − row_start`.
@@ -623,6 +647,30 @@ mod tests {
                 let mut part = vec![0f32; e - s];
                 qv.scores(s, e, &qq, &mut part);
                 assert_eq!(&part[..], &full[s..e], "block={block} range=({s},{e})");
+            }
+        }
+    }
+
+    #[test]
+    fn scores_ids_matches_contiguous_scores() {
+        // the scattered form must agree bit-for-bit with the contiguous
+        // kernel on the same rows, in any gather order
+        let mut rng = Pcg64::new(11);
+        let (n, d) = (90usize, 11usize);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let qq = QuantQuery::encode(&q);
+        for block in [1usize, 7, 64] {
+            let qv = QuantView::encode(&rows, d, block);
+            let mut full = vec![0f32; n];
+            qv.scores(0, n, &qq, &mut full);
+            let mut ids: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(40);
+            let mut out = vec![0f32; ids.len()];
+            qv.scores_ids(&ids, &qq, &mut out);
+            for (i, &id) in ids.iter().enumerate() {
+                assert_eq!(out[i], full[id as usize], "block={block} id={id}");
             }
         }
     }

@@ -30,6 +30,107 @@ use std::sync::Arc;
 /// Rows per survivor gather/re-rank block (quantized pass 2).
 const GATHER_BLOCK: usize = 1024;
 
+/// Resolve `(n_clusters, n_probe)` from config + database size:
+/// `n_clusters = 0` → `4√n`, `n_probe = 0` → `max(8, n_clusters/16)`.
+/// Standalone (not a method) so the shard layer can size from the
+/// *global* n and hand every shard the same resolved values — per-shard
+/// auto-sizing from shard-local n would break shard-count invariance.
+pub fn resolve_sizes(cfg: &IndexConfig, n: usize) -> (usize, usize) {
+    let n_clusters = if cfg.n_clusters == 0 {
+        ((4.0 * (n as f64).sqrt()).round() as usize).clamp(1, n)
+    } else {
+        cfg.n_clusters.clamp(1, n)
+    };
+    let n_probe = if cfg.n_probe == 0 {
+        (n_clusters / 16).max(8).min(n_clusters)
+    } else {
+        cfg.n_probe.min(n_clusters)
+    };
+    (n_clusters, n_probe)
+}
+
+/// Train the coarse quantizer (k-means on a subsample) for `ds` under
+/// `cfg`. Standalone so the shard layer can train **once on the global
+/// dataset** and share the centroids across every shard — the keystone of
+/// sharded-IVF bit-parity: identical centroids ⇒ identical probe
+/// rankings ⇒ the per-shard probed rows union to exactly the monolithic
+/// probed rows.
+pub fn train_coarse(ds: &Dataset, cfg: &IndexConfig, n_clusters: usize) -> Kmeans {
+    let n = ds.n;
+    let d = ds.d;
+    let train_n = if cfg.train_sample == 0 { n } else { cfg.train_sample.min(n) };
+    if train_n == n {
+        kmeans::train(&ds.data, n, d, n_clusters, cfg.kmeans_iters, cfg.seed)
+    } else {
+        let mut rng = Pcg64::new(cfg.seed ^ 0x7A17);
+        let mut sample = vec![0f32; train_n * d];
+        let excl = rustc_hash::FxHashSet::default();
+        let picks = rng.distinct_excluding(n as u64, train_n, &excl);
+        for (j, &p) in picks.iter().enumerate() {
+            sample[j * d..(j + 1) * d].copy_from_slice(ds.row(p as usize));
+        }
+        kmeans::train(&sample, train_n, d, n_clusters, cfg.kmeans_iters, cfg.seed)
+    }
+}
+
+/// The `n_probe` best clusters for `q`, by centroid score — partial
+/// selection of the probed prefix (§Perf iteration 3: a full sort of
+/// all clusters cost ~C·log C per query; select_nth is O(C) and we only
+/// order the probed prefix). Standalone so the shard layer can rank once
+/// per query and fan the same probe list out to every shard.
+pub(crate) fn rank_clusters(km: &Kmeans, q: &[f32], n_probe: usize) -> Vec<u32> {
+    let mut cscores = vec![0f32; km.c];
+    km.centroid_scores(q, &mut cscores);
+    let mut order = select_probes(&cscores, km.c, n_probe);
+    let cmp = |a: &u32, b: &u32| {
+        cscores[*b as usize]
+            .partial_cmp(&cscores[*a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    };
+    order.sort_unstable_by(cmp);
+    order
+}
+
+/// Batched probe ranking: centroids scored against the whole batch in one
+/// multi-query pass. Per-query probe *sets* are identical to
+/// [`rank_clusters`] (same scores — the native multi kernel is
+/// bit-identical to per-query `centroid_scores` — and the same
+/// `select_nth` partition), only unsorted: scan order does not affect
+/// retained results ([`TopK`] is push-order independent) or accounting.
+pub(crate) fn rank_clusters_batch(km: &Kmeans, qs: &[&[f32]], n_probe: usize) -> Vec<Vec<u32>> {
+    let nq = qs.len();
+    let d = km.d;
+    let c = km.c;
+    let mut qflat = vec![0f32; nq * d];
+    for (j, q) in qs.iter().enumerate() {
+        debug_assert_eq!(q.len(), d);
+        qflat[j * d..(j + 1) * d].copy_from_slice(q);
+    }
+    // NOTE: deliberately the native multi-query kernel, not a backend:
+    // single-query probing ranks centroids with the native
+    // `km.centroid_scores` regardless of backend (the centroid block need
+    // not match a PJRT executable's compiled shape), and batch/single
+    // parity requires the same scores here.
+    let mut cscores = vec![0f32; nq * c];
+    crate::linalg::simd::matvec_block_multi(&km.centroids, d, &qflat, nq, &mut cscores);
+    (0..nq).map(|j| select_probes(&cscores[j * c..(j + 1) * c], c, n_probe)).collect()
+}
+
+/// The (unsorted) `n_probe`-best cluster ids under `scores`.
+fn select_probes(scores: &[f32], c: usize, n_probe: usize) -> Vec<u32> {
+    let cmp = |a: &u32, b: &u32| {
+        scores[*b as usize]
+            .partial_cmp(&scores[*a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    };
+    let mut order: Vec<u32> = (0..c as u32).collect();
+    if n_probe < c {
+        order.select_nth_unstable_by(n_probe - 1, cmp);
+        order.truncate(n_probe);
+    }
+    order
+}
+
 /// Clustering-based MIPS index with contiguous per-cluster storage.
 pub struct IvfIndex {
     /// rows regrouped cluster-contiguously, row-major `[n × d]`
@@ -61,33 +162,25 @@ impl IvfIndex {
     /// Build from config: `n_clusters = 0` → `4√n`, `n_probe = 0` →
     /// `max(8, n_clusters/16)`, `train_sample = 0` → all rows.
     pub fn build(ds: Arc<Dataset>, cfg: &IndexConfig, backend: Arc<dyn ScoreBackend>) -> Result<Self> {
+        let (n_clusters, n_probe) = resolve_sizes(cfg, ds.n);
+        let km = train_coarse(&ds, cfg, n_clusters);
+        Ok(Self::build_with_kmeans(ds, cfg, backend, km, n_probe))
+    }
+
+    /// Assemble over an externally trained coarse quantizer. This is the
+    /// shard layer's construction path: the `Kmeans` (and resolved
+    /// `n_probe`) come from the global dataset, so every shard assigns
+    /// its rows to the *same* centroids and ranks probes identically.
+    pub fn build_with_kmeans(
+        ds: Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+        km: Kmeans,
+        n_probe: usize,
+    ) -> Self {
         let n = ds.n;
         let d = ds.d;
-        let n_clusters = if cfg.n_clusters == 0 {
-            ((4.0 * (n as f64).sqrt()).round() as usize).clamp(1, n)
-        } else {
-            cfg.n_clusters.clamp(1, n)
-        };
-        let n_probe = if cfg.n_probe == 0 {
-            (n_clusters / 16).max(8).min(n_clusters)
-        } else {
-            cfg.n_probe.min(n_clusters)
-        };
-
-        // ---- train on a subsample ------------------------------------------
-        let train_n = if cfg.train_sample == 0 { n } else { cfg.train_sample.min(n) };
-        let km = if train_n == n {
-            kmeans::train(&ds.data, n, d, n_clusters, cfg.kmeans_iters, cfg.seed)
-        } else {
-            let mut rng = Pcg64::new(cfg.seed ^ 0x7A17);
-            let mut sample = vec![0f32; train_n * d];
-            let excl = rustc_hash::FxHashSet::default();
-            let picks = rng.distinct_excluding(n as u64, train_n, &excl);
-            for (j, &p) in picks.iter().enumerate() {
-                sample[j * d..(j + 1) * d].copy_from_slice(ds.row(p as usize));
-            }
-            kmeans::train(&sample, train_n, d, n_clusters, cfg.kmeans_iters, cfg.seed)
-        };
+        let n_probe = n_probe.clamp(1, km.c);
 
         // ---- assign all rows, group contiguously ----------------------------
         let mut assign = vec![0u32; n];
@@ -116,7 +209,7 @@ impl IvfIndex {
         let quant =
             if cfg.quant { Some(QuantView::encode(&grouped, d, quant_block)) } else { None };
 
-        Ok(IvfIndex {
+        IvfIndex {
             grouped,
             ids,
             offsets,
@@ -131,7 +224,7 @@ impl IvfIndex {
             stale: rustc_hash::FxHashSet::default(),
             pending_ids: Vec::new(),
             pending_rows: Vec::new(),
-        })
+        }
     }
 
     /// Number of clusters.
@@ -144,46 +237,42 @@ impl IvfIndex {
         self.quant.is_some()
     }
 
-    /// The `n_probe` best clusters for `q`, by centroid score — partial
-    /// selection of the probed prefix (§Perf iteration 3: a full sort of
-    /// all clusters cost ~C·log C per query; select_nth is O(C) and we
-    /// only order the probed prefix).
-    fn probe_order(&self, q: &[f32], n_probe: usize) -> Vec<u32> {
-        let mut cscores = vec![0f32; self.km.c];
-        self.km.centroid_scores(q, &mut cscores);
-        let mut order: Vec<u32> = (0..self.km.c as u32).collect();
-        let cmp = |a: &u32, b: &u32| {
-            cscores[*b as usize]
-                .partial_cmp(&cscores[*a as usize])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        };
-        if n_probe < self.km.c {
-            order.select_nth_unstable_by(n_probe - 1, cmp);
-            order.truncate(n_probe);
-        }
-        order.sort_unstable_by(cmp);
-        order
+    /// The coarse quantizer (read-only; the shard layer ranks against it).
+    pub fn kmeans(&self) -> &Kmeans {
+        &self.km
     }
 
     /// Query with an explicit probe count (ablations sweep this).
     pub fn top_k_probes(&self, q: &[f32], k: usize, n_probe: usize) -> TopKResult {
+        let n_probe = n_probe.clamp(1, self.km.c);
+        let order = rank_clusters(&self.km, q, n_probe);
+        let mut r = self.top_k_clusters(q, k, &order);
+        r.scanned += self.km.c; // centroid ranking work
+        r
+    }
+
+    /// Top-k restricted to an explicitly given cluster list (plus the
+    /// pending segment, which every query scans exactly). `scanned`
+    /// counts **scored rows only** — the caller owns the centroid-ranking
+    /// accounting, which lets the shard layer rank once and fan the same
+    /// probe list out to every shard without multiply-counting the
+    /// centroid work.
+    pub fn top_k_clusters(&self, q: &[f32], k: usize, clusters: &[u32]) -> TopKResult {
         if let Some(qv) = &self.quant {
-            if let Some(r) = self.top_k_probes_quant(qv, q, k, n_probe) {
+            if let Some(r) = self.scan_clusters_quant(qv, q, k, clusters) {
                 return r;
             }
         }
-        self.top_k_probes_f32(q, k, n_probe)
+        self.scan_clusters_f32(q, k, clusters)
     }
 
-    /// Plain one-stage f32 probe scan (also the fallback when a quantized
-    /// pass cannot prove coverage).
-    fn top_k_probes_f32(&self, q: &[f32], k: usize, n_probe: usize) -> TopKResult {
-        let n_probe = n_probe.clamp(1, self.km.c);
-        let order = self.probe_order(q, n_probe);
+    /// Plain one-stage f32 scan of the given clusters (also the fallback
+    /// when a quantized pass cannot prove coverage).
+    fn scan_clusters_f32(&self, q: &[f32], k: usize, clusters: &[u32]) -> TopKResult {
         let mut tk = TopK::new(k.min(self.n).max(1));
         let mut buf: Vec<f32> = Vec::new();
-        let mut scanned = self.km.c; // centroid scoring work
-        for &c in order.iter().take(n_probe) {
+        let mut scanned = 0usize;
+        for &c in clusters {
             let (s, e) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
             if s == e {
                 continue;
@@ -260,26 +349,26 @@ impl IvfIndex {
         Some(tk)
     }
 
-    /// Two-stage probe scan: SQ8 screening over the probed clusters
-    /// (collecting grouped positions), exact re-rank of the retained
-    /// candidates + coverage certificate, then the pending segment
-    /// exactly. `None` when the certificate fails or the screen cannot
-    /// prune anything (`k·overscan` covers the probed rows) — the caller
-    /// falls back to the f32 scan.
-    fn top_k_probes_quant(
+    /// Two-stage scan of the given clusters: SQ8 screening (collecting
+    /// grouped positions), exact re-rank of the retained candidates +
+    /// coverage certificate, then the pending segment exactly. `scanned`
+    /// counts scored rows only, like [`scan_clusters_f32`]. `None` when
+    /// the certificate fails or the screen cannot prune anything
+    /// (`k·overscan` covers the probed rows) — the caller falls back to
+    /// the f32 scan.
+    ///
+    /// [`scan_clusters_f32`]: Self::scan_clusters_f32
+    fn scan_clusters_quant(
         &self,
         qv: &QuantView,
         q: &[f32],
         k: usize,
-        n_probe: usize,
+        clusters: &[u32],
     ) -> Option<TopKResult> {
-        let n_probe = n_probe.clamp(1, self.km.c);
-        let order = self.probe_order(q, n_probe);
         let kk = k.min(self.n).max(1);
         let cap = kk.saturating_mul(self.overscan).min(self.n).max(kk);
-        let probed_rows: usize = order
+        let probed_rows: usize = clusters
             .iter()
-            .take(n_probe)
             .map(|&c| self.offsets[c as usize + 1] - self.offsets[c as usize])
             .sum();
         if cap >= probed_rows {
@@ -290,9 +379,9 @@ impl IvfIndex {
         let qq = QuantQuery::encode(q);
         let mut tk = TopK::new(cap);
         let mut buf: Vec<f32> = Vec::new();
-        let mut scanned = self.km.c;
+        let mut scanned = 0usize;
         let mut pushed = 0usize;
-        for &c in order.iter().take(n_probe) {
+        for &c in clusters {
             let (s, e) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
             if s == e {
                 continue;
@@ -338,13 +427,38 @@ impl IvfIndex {
     /// scores bit-identical, and [`TopK`] retention is push-order
     /// independent.
     pub fn top_k_batch_probes(&self, qs: &[&[f32]], k: usize, n_probe: usize) -> Vec<TopKResult> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        let n_probe = n_probe.clamp(1, self.km.c);
+        let orders = rank_clusters_batch(&self.km, qs, n_probe);
+        let mut results = self.scan_clusters_batch(qs, k, &orders);
+        for r in &mut results {
+            r.scanned += self.km.c; // centroid ranking work, as in top_k_probes
+        }
+        results
+    }
+
+    /// Batched scan of per-query cluster lists (the workhorse behind
+    /// [`top_k_batch_probes`](Self::top_k_batch_probes), and the
+    /// shard layer's batch entry point — it passes globally ranked
+    /// `orders` to every shard). Per-query probe lists are merged so each
+    /// scanned cluster's rows stream from memory exactly once per batch.
+    /// `scanned` counts scored rows only, mirroring
+    /// [`top_k_clusters`](Self::top_k_clusters).
+    pub fn scan_clusters_batch(
+        &self,
+        qs: &[&[f32]],
+        k: usize,
+        orders: &[Vec<u32>],
+    ) -> Vec<TopKResult> {
         let nq = qs.len();
+        debug_assert_eq!(nq, orders.len());
         if nq == 0 {
             return Vec::new();
         }
         let d = self.d;
         let c = self.km.c;
-        let n_probe = n_probe.clamp(1, c);
         let kk = k.min(self.n).max(1);
         let mut qflat = vec![0f32; nq * d];
         for (j, q) in qs.iter().enumerate() {
@@ -352,30 +466,10 @@ impl IvfIndex {
             qflat[j * d..(j + 1) * d].copy_from_slice(q);
         }
 
-        // ---- centroid ranking, whole batch at once -------------------------
-        // NOTE: deliberately the native multi-query kernel, not
-        // `self.backend`: single-query probing ranks centroids with the
-        // native `km.centroid_scores` regardless of backend (the centroid
-        // block need not match a PJRT executable's compiled shape), and
-        // batch/single parity requires the same scores here. The native
-        // multi kernel is bit-identical to per-query `centroid_scores`.
-        let mut cscores = vec![0f32; nq * c];
-        crate::linalg::simd::matvec_block_multi(&self.km.centroids, d, &qflat, nq, &mut cscores);
         // invert per-query probe sets into per-cluster query lists
         let mut cluster_queries: Vec<Vec<u32>> = vec![Vec::new(); c];
-        for j in 0..nq {
-            let scores = &cscores[j * c..(j + 1) * c];
-            let cmp = |a: &u32, b: &u32| {
-                scores[*b as usize]
-                    .partial_cmp(&scores[*a as usize])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            };
-            let mut order: Vec<u32> = (0..c as u32).collect();
-            if n_probe < c {
-                order.select_nth_unstable_by(n_probe - 1, cmp);
-                order.truncate(n_probe);
-            }
-            for &cl in &order {
+        for (j, order) in orders.iter().enumerate() {
+            for &cl in order {
                 cluster_queries[cl as usize].push(j as u32);
             }
         }
@@ -431,14 +525,12 @@ impl IvfIndex {
                 }
                 (tks, scanned, pushed)
             });
-            let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(cap)).collect();
-            let mut scanned = vec![c; nq];
+            let mut frags: Vec<Vec<Vec<Scored>>> = (0..nq).map(|_| Vec::new()).collect();
+            let mut scanned = vec![0usize; nq];
             let mut pushed = vec![0usize; nq];
             for (part_tks, part_scanned, part_pushed) in parts {
                 for (j, tk) in part_tks.into_iter().enumerate() {
-                    for s in tk.into_sorted() {
-                        tks[j].push(s.id, s.score);
-                    }
+                    frags[j].push(tk.into_sorted());
                 }
                 for (j, sc) in part_scanned.into_iter().enumerate() {
                     scanned[j] += sc;
@@ -447,6 +539,8 @@ impl IvfIndex {
                     pushed[j] += p;
                 }
             }
+            let tks: Vec<TopK> =
+                frags.into_iter().map(|f| crate::util::topk::merge_topk(f, cap)).collect();
             // per-query finish: survivors → exact re-rank, pending exact
             let np = self.pending_ids.len();
             let mut pend = vec![0f32; np * nq];
@@ -462,7 +556,7 @@ impl IvfIndex {
                     match self.finish_quant_probes(qv, &qqs[j], cands, qs[j], kk, dropped) {
                         // the f32 fallback returns the identical exact
                         // result (and identical scan accounting)
-                        None => self.top_k_probes_f32(qs[j], k, n_probe),
+                        None => self.scan_clusters_f32(qs[j], k, &orders[j]),
                         Some(mut tk2) => {
                             let mut sc = scanned[j];
                             if np > 0 {
@@ -510,18 +604,18 @@ impl IvfIndex {
             }
             (tks, scanned)
         });
-        let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(kk)).collect();
-        let mut scanned = vec![c; nq]; // centroid scoring work, as in top_k_probes
+        let mut frags: Vec<Vec<Vec<Scored>>> = (0..nq).map(|_| Vec::new()).collect();
+        let mut scanned = vec![0usize; nq];
         for (part_tks, part_scanned) in parts {
             for (j, tk) in part_tks.into_iter().enumerate() {
-                for s in tk.into_sorted() {
-                    tks[j].push(s.id, s.score);
-                }
+                frags[j].push(tk.into_sorted());
             }
             for (j, sc) in part_scanned.into_iter().enumerate() {
                 scanned[j] += sc;
             }
         }
+        let mut tks: Vec<TopK> =
+            frags.into_iter().map(|f| crate::util::topk::merge_topk(f, kk)).collect();
 
         // ---- pending segment: every query scans it exactly -----------------
         if !self.pending_ids.is_empty() {

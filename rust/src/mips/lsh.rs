@@ -17,9 +17,9 @@ use crate::config::IndexConfig;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::linalg;
+use crate::linalg::quant::QuantView;
 use crate::scorer::ScoreBackend;
 use crate::util::rng::Pcg64;
-use crate::util::topk::TopK;
 use std::sync::Arc;
 
 /// One SRP hash table.
@@ -44,10 +44,42 @@ pub struct SrpLsh {
     aug: Vec<f32>,
     /// whether to probe all 1-bit-flip neighbors of the query bucket
     pub multiprobe: bool,
+    /// SQ8 shadow copy for the two-stage candidate scan (None = plain
+    /// f32 gather scan)
+    quant: Option<QuantView>,
+    /// pass-1 retention factor (`k·overscan` candidates)
+    overscan: usize,
+}
+
+/// `max_i ‖row_i‖²` — the Neyshabur–Srebro norm bound. Standalone so the
+/// shard layer can compute it once over the *global* dataset and hand
+/// every shard the same `M`: identical augmentation ⇒ identical hash
+/// codes ⇒ the per-shard candidate sets union to exactly the monolithic
+/// candidate set (shard-count invariance).
+pub(crate) fn max_sq_norm(ds: &Dataset) -> f64 {
+    let mut max_norm2 = 0f64;
+    for i in 0..ds.n {
+        let r = ds.row(i);
+        max_norm2 = max_norm2.max(linalg::dot(r, r) as f64);
+    }
+    max_norm2
 }
 
 impl SrpLsh {
     pub fn build(ds: Arc<Dataset>, cfg: &IndexConfig, backend: Arc<dyn ScoreBackend>) -> Result<Self> {
+        Self::build_scaled(ds, cfg, backend, None)
+    }
+
+    /// [`build`](Self::build) with an externally supplied norm bound
+    /// `M² = max‖v‖²` (the shard layer passes the global bound; `None`
+    /// computes it from `ds`). `M²` may exceed the local max (never be
+    /// below it) — augmentation coordinates stay well-defined.
+    pub(crate) fn build_scaled(
+        ds: Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+        global_max_norm2: Option<f64>,
+    ) -> Result<Self> {
         let n = ds.n;
         let d = ds.d;
         let bits = cfg.bits.clamp(1, 24);
@@ -56,11 +88,7 @@ impl SrpLsh {
         let mut rng = Pcg64::new(cfg.seed ^ 0x15B4);
 
         // ---- Neyshabur–Srebro augmentation ---------------------------------
-        let mut max_norm2 = 0f64;
-        for i in 0..n {
-            let r = ds.row(i);
-            max_norm2 = max_norm2.max(linalg::dot(r, r) as f64);
-        }
+        let max_norm2 = global_max_norm2.unwrap_or_else(|| max_sq_norm(&ds));
         let aug: Vec<f32> = (0..n)
             .map(|i| {
                 let r = ds.row(i);
@@ -97,7 +125,18 @@ impl SrpLsh {
             tables.push(Table { planes, bucket_off, members });
         }
 
-        Ok(SrpLsh { ds, backend, tables, bits, d_aug, aug, multiprobe: true })
+        let quant = if cfg.quant {
+            Some(QuantView::encode(&ds.data, d, cfg.quant_block.max(1)))
+        } else {
+            None
+        };
+        let overscan = cfg.overscan.max(1);
+        Ok(SrpLsh { ds, backend, tables, bits, d_aug, aug, multiprobe: true, quant, overscan })
+    }
+
+    /// Whether the quantized screening pass is enabled.
+    pub fn quant_enabled(&self) -> bool {
+        self.quant.is_some()
     }
 
     /// Collect candidate ids for a query (deduplicated via a stamp array).
@@ -141,26 +180,27 @@ fn hash_row(planes: &[f32], bits: usize, d_aug: usize, v: &[f32], aug: f32) -> u
 }
 
 impl MipsIndex for SrpLsh {
+    /// With `index.quant`, the candidate scan is two-stage: candidates
+    /// are screened on u8 codes ([`super::scan_candidates_quant`], ¼ of
+    /// the gather traffic) and only the survivors are gathered and
+    /// re-ranked in f32 — bit-identical ids/scores/`scanned` by the
+    /// coverage-certificate contract, else the plain f32 gather scan.
     fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
         let cands = self.candidates(q);
-        let d = self.ds.d;
-        let mut tk = TopK::new(k.min(self.ds.n).max(1));
-        // gather candidate rows into blocks and score
-        const BLOCK: usize = 1024;
-        let mut rows = vec![0f32; BLOCK * d];
-        let mut out = vec![0f32; BLOCK];
-        let mut start = 0;
-        while start < cands.len() {
-            let end = (start + BLOCK).min(cands.len());
-            let ids = &cands[start..end];
-            let rows_buf = &mut rows[..(end - start) * d];
-            self.ds.gather(ids, rows_buf);
-            let out_buf = &mut out[..end - start];
-            self.backend.scores(rows_buf, d, q, out_buf);
-            tk.push_ids(ids, out_buf);
-            start = end;
+        if let Some(qv) = &self.quant {
+            if let Some(r) = super::scan_candidates_quant(
+                &self.ds,
+                qv,
+                self.backend.as_ref(),
+                q,
+                k,
+                &cands,
+                self.overscan,
+            ) {
+                return r;
+            }
         }
-        TopKResult { items: tk.into_sorted(), scanned: cands.len() }
+        super::scan_candidates_f32(&self.ds, self.backend.as_ref(), q, k, &cands)
     }
 
     /// Batch-aware probing: per-query candidate sets are unioned and every
@@ -168,8 +208,11 @@ impl MipsIndex for SrpLsh {
     /// ([`ScoreBackend::scores_batch`]), with each row pushed only to the
     /// queries whose buckets produced it — results and per-query `scanned`
     /// counts are identical to per-query [`top_k`](MipsIndex::top_k) calls.
+    /// With quantization enabled the batch degrades to per-query
+    /// two-stage scans (the screen already cuts the gather traffic the
+    /// union pass would have shared).
     fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
-        if qs.len() <= 1 {
+        if qs.len() <= 1 || self.quant.is_some() {
             return qs.iter().map(|q| self.top_k(q, k)).collect();
         }
         let cand_sets: Vec<Vec<u32>> = qs.iter().map(|q| self.candidates(q)).collect();
@@ -187,12 +230,13 @@ impl MipsIndex for SrpLsh {
     }
     fn describe(&self) -> String {
         format!(
-            "srp-lsh over n={} d={}: {} tables × {} bits, multiprobe={}",
+            "srp-lsh over n={} d={}: {} tables × {} bits, multiprobe={}{}",
             self.ds.n,
             self.ds.d,
             self.tables.len(),
             self.bits,
-            self.multiprobe
+            self.multiprobe,
+            if self.quant.is_some() { ", sq8 screen" } else { "" }
         )
     }
 }
@@ -305,6 +349,46 @@ mod tests {
                 }
                 assert_eq!(got.scanned, want.scanned, "nq={nq} query {j}");
             }
+        }
+    }
+
+    #[test]
+    fn quant_candidate_scan_bit_identical_to_f32() {
+        // the SQ8 screen must not change anything observable: same build
+        // with and without index.quant returns identical ids, scores, and
+        // scanned accounting (single queries and batches)
+        let ds = Arc::new(synth::imagenet_like(3000, 16, 30, 0.25, 15));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut qcfg = cfg(7, 10);
+        qcfg.quant = true;
+        qcfg.quant_block = 48;
+        qcfg.overscan = 3;
+        let qidx = SrpLsh::build(ds.clone(), &qcfg, backend.clone()).unwrap();
+        let fidx = SrpLsh::build(ds.clone(), &cfg(7, 10), backend).unwrap();
+        assert!(qidx.quant_enabled() && !fidx.quant_enabled());
+        let mut rng = Pcg64::new(16);
+        for k in [1usize, 10, 40] {
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            let got = qidx.top_k(&q, k);
+            let want = fidx.top_k(&q, k);
+            assert_eq!(got.ids(), want.ids(), "k={k}");
+            for (g, w) in got.items.iter().zip(&want.items) {
+                assert_eq!(g.score, w.score, "k={k}");
+            }
+            assert_eq!(got.scanned, want.scanned, "k={k}");
+        }
+        // batch path (per-query two-stage under quant) vs f32 batch
+        let qs_owned: Vec<Vec<f32>> =
+            (0..5).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+        let qs: Vec<&[f32]> = qs_owned.iter().map(|q| q.as_slice()).collect();
+        let got = qidx.top_k_batch(&qs, 12);
+        let want = fidx.top_k_batch(&qs, 12);
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.ids(), w.ids(), "query {j}");
+            for (a, b) in g.items.iter().zip(&w.items) {
+                assert_eq!(a.score, b.score, "query {j}");
+            }
+            assert_eq!(g.scanned, w.scanned, "query {j}");
         }
     }
 

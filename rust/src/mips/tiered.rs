@@ -22,9 +22,9 @@ use crate::config::IndexConfig;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::linalg;
+use crate::linalg::quant::QuantView;
 use crate::scorer::ScoreBackend;
 use crate::util::rng::Pcg64;
-use crate::util::topk::TopK;
 use std::sync::Arc;
 
 struct Rung {
@@ -44,6 +44,11 @@ pub struct TieredLsh {
     /// measured approximate-top-k gap (Definition 3.1), in *score units of
     /// a unit-norm query*; scale by ‖θ‖ for a given query
     gap_per_unit_query: f64,
+    /// SQ8 shadow copy for the two-stage candidate scan (None = plain
+    /// f32 gather scan)
+    quant: Option<QuantView>,
+    /// pass-1 retention factor (`k·overscan` candidates)
+    overscan: usize,
 }
 
 impl TieredLsh {
@@ -80,9 +85,26 @@ impl TieredLsh {
             rungs.push(Rung { bits, planes, bucket_off, members });
         }
 
-        let mut idx = TieredLsh { ds, backend, rungs, gap_per_unit_query: 0.0 };
+        let quant = if cfg.quant {
+            Some(QuantView::encode(&ds.data, d, cfg.quant_block.max(1)))
+        } else {
+            None
+        };
+        let mut idx = TieredLsh {
+            ds,
+            backend,
+            rungs,
+            gap_per_unit_query: 0.0,
+            quant,
+            overscan: cfg.overscan.max(1),
+        };
         idx.gap_per_unit_query = idx.measure_gap(8, cfg.seed ^ 0xC0FF);
         Ok(idx)
+    }
+
+    /// Whether the quantized screening pass is enabled.
+    pub fn quant_enabled(&self) -> bool {
+        self.quant.is_some()
     }
 
     /// Measure the empirical Definition-3.1 gap on `probes` random
@@ -174,36 +196,37 @@ fn srp_hash(planes: &[f32], bits: usize, v: &[f32]) -> u32 {
 }
 
 impl MipsIndex for TieredLsh {
+    /// With `index.quant`, the candidate scan is two-stage
+    /// ([`super::scan_candidates_quant`]): screen on u8 codes, exact
+    /// re-rank of survivors, bit-identical by the coverage certificate —
+    /// else the plain f32 gather scan.
     fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
         let k = k.min(self.ds.n).max(1);
-        let d = self.ds.d;
         let cands = self.candidates(q, k);
-        // exact-score candidates
-        let mut tk = TopK::new(k);
-        const BLOCK: usize = 1024;
-        let mut rows = vec![0f32; BLOCK * d];
-        let mut out = vec![0f32; BLOCK];
-        let mut start = 0;
-        while start < cands.len() {
-            let end = (start + BLOCK).min(cands.len());
-            let ids = &cands[start..end];
-            let rows_buf = &mut rows[..(end - start) * d];
-            self.ds.gather(ids, rows_buf);
-            let out_buf = &mut out[..end - start];
-            self.backend.scores(rows_buf, d, q, out_buf);
-            tk.push_ids(ids, out_buf);
-            start = end;
+        if let Some(qv) = &self.quant {
+            if let Some(r) = super::scan_candidates_quant(
+                &self.ds,
+                qv,
+                self.backend.as_ref(),
+                q,
+                k,
+                &cands,
+                self.overscan,
+            ) {
+                return r;
+            }
         }
-        TopKResult { items: tk.into_sorted(), scanned: cands.len() }
+        super::scan_candidates_f32(&self.ds, self.backend.as_ref(), q, k, &cands)
     }
 
     /// Batch-aware probing: each query's ladder walk produces its
     /// candidate set exactly as [`top_k`](MipsIndex::top_k) would, then
     /// the union is gathered and scored once per batch via
     /// [`ScoreBackend::scores_batch`] — identical results, one stream of
-    /// the gathered rows instead of one per query.
+    /// the gathered rows instead of one per query. With quantization
+    /// enabled the batch degrades to per-query two-stage scans.
     fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
-        if qs.len() <= 1 {
+        if qs.len() <= 1 || self.quant.is_some() {
             return qs.iter().map(|q| self.top_k(q, k)).collect();
         }
         let kk = k.min(self.ds.n).max(1);
@@ -332,6 +355,31 @@ mod tests {
                 }
                 assert_eq!(got.scanned, want.scanned, "nq={nq} query {j}");
             }
+        }
+    }
+
+    #[test]
+    fn quant_candidate_scan_bit_identical_to_f32() {
+        let ds = Arc::new(synth::imagenet_like(2500, 12, 25, 0.25, 21));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut qcfg = cfg();
+        qcfg.quant = true;
+        qcfg.overscan = 3;
+        let qidx = TieredLsh::build(ds.clone(), &qcfg, backend.clone()).unwrap();
+        let fidx = TieredLsh::build(ds.clone(), &cfg(), backend).unwrap();
+        assert!(qidx.quant_enabled() && !fidx.quant_enabled());
+        // identical ladders (planes are seed-derived, data-independent)
+        assert_eq!(qidx.gap_bound().unwrap(), fidx.gap_bound().unwrap());
+        let mut rng = Pcg64::new(22);
+        for k in [1usize, 25, 120] {
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            let got = qidx.top_k(&q, k);
+            let want = fidx.top_k(&q, k);
+            assert_eq!(got.ids(), want.ids(), "k={k}");
+            for (g, w) in got.items.iter().zip(&want.items) {
+                assert_eq!(g.score, w.score, "k={k}");
+            }
+            assert_eq!(got.scanned, want.scanned, "k={k}");
         }
     }
 

@@ -1,0 +1,276 @@
+//! [`ShardedPartitionEstimator`] — Algorithm 3 decomposed over a row
+//! partition, merged by **log-sum-exp**.
+//!
+//! The partition function is additive over a partition of the state
+//! space: `Z = Σ_x e^{θ·φ(x)} = Σ_s Z_s`. Each shard runs its own
+//! Algorithm 3 against its sub-index — exact head over its local top-k
+//! `S_s`, upweighted uniform tail `T_s` of its remaining rows — giving
+//! an unbiased `Ẑ_s` (Theorem 3.4 applied to `X_s`). The merge
+//!
+//! ```text
+//! log Ẑ = LSE_s(log Ẑ_s) = m + ln Σ_s e^{log Ẑ_s − m},  m = max_s log Ẑ_s
+//! ```
+//!
+//! is numerically the same log-space combination the monolithic
+//! estimator uses internally, so `E[Ẑ] = Σ_s E[Ẑ_s] = Σ_s Z_s = Z`
+//! stays unbiased, and the `(ε, δ)` budget of Theorem 3.4 splits across
+//! shards in proportion to their `k_s · l_s` products (we split both
+//! `k` and `l` proportionally to shard size, preserving the global
+//! `k·l` up to rounding).
+//!
+//! Tail samples come from streams keyed by `(seed, round, shard)`, so an
+//! estimate at a given round is replayable.
+
+use super::ShardedIndex;
+use crate::data::Dataset;
+use crate::estimator::partition::{combine_head_tail, PartitionEstimate};
+use crate::estimator::EstimateWork;
+use crate::linalg::MaxSumExp;
+use crate::mips::MipsIndex;
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use rustc_hash::FxHashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Merge per-shard `log Ẑ_s` partials: `log Σ_s Ẑ_s` — exactly
+/// [`crate::linalg::logsumexp`], named for the shard-merge role it plays
+/// here (`Z = Σ_s Z_s` under a row partition).
+pub fn merge_log_partials(partials: &[f64]) -> f64 {
+    crate::linalg::logsumexp(partials)
+}
+
+/// Algorithm 3 over a [`ShardedIndex`]: per-shard head+tail estimates in
+/// parallel, log-sum-exp merge.
+pub struct ShardedPartitionEstimator {
+    /// the **global** dataset (tail rows are scored through the shard
+    /// map, so no per-shard row copies need to be retained)
+    ds: Arc<Dataset>,
+    index: Arc<ShardedIndex>,
+    backend: Arc<dyn ScoreBackend>,
+    /// global head size k (split across shards by row count)
+    pub k: usize,
+    /// global tail sample size l (split across shards by row count)
+    pub l: usize,
+    seed: u64,
+    round: AtomicU64,
+}
+
+impl ShardedPartitionEstimator {
+    pub fn new(
+        ds: Arc<Dataset>,
+        index: Arc<ShardedIndex>,
+        backend: Arc<dyn ScoreBackend>,
+        k: usize,
+        l: usize,
+        seed: u64,
+    ) -> Self {
+        let k = k.clamp(1, index.n().max(1));
+        let l = l.max(1);
+        ShardedPartitionEstimator { ds, index, backend, k, l, seed, round: AtomicU64::new(0) }
+    }
+
+    /// Estimate at an explicit round (replayable; distinct rounds draw
+    /// independent tails).
+    pub fn estimate_at(&self, q: &[f32], round: u64) -> PartitionEstimate {
+        let ns = self.index.n_shards();
+        let n = self.index.n();
+        // rank the shared IVF probe structure ONCE per query (None for
+        // non-IVF kinds) — every shard scans the same cluster list
+        let order = self.index.coarse_order(q);
+        // one (log Ẑ_s, work) partial per shard, in shard order — the
+        // index's fan-out so `shard_parallel` governs this path too
+        let parts = self
+            .index
+            .fan_out(|s| self.shard_partial(s, q, round, n, order.as_deref()));
+        let mut partials = Vec::with_capacity(ns);
+        // centroid-ranking work accounted once, like the sharded top_k
+        let mut work = EstimateWork { scanned: self.index.coarse_cost(), k: 0, l: 0 };
+        for (log_z_s, w) in parts {
+            partials.push(log_z_s);
+            work.scanned += w.scanned;
+            work.k += w.k;
+            work.l += w.l;
+        }
+        PartitionEstimate { log_z: merge_log_partials(&partials), work }
+    }
+
+    /// Convenience: estimate at the next internal round.
+    pub fn estimate(&self, q: &[f32]) -> PartitionEstimate {
+        let r = self.round.fetch_add(1, Ordering::Relaxed);
+        self.estimate_at(q, r)
+    }
+
+    /// One shard's Algorithm 3: local top-k head (scanning the shared
+    /// probe list on IVF shards), keyed uniform tail, log-space combine —
+    /// an unbiased estimate of `Z_s`.
+    fn shard_partial(
+        &self,
+        s: usize,
+        q: &[f32],
+        round: u64,
+        n: usize,
+        order: Option<&[u32]>,
+    ) -> (f64, EstimateWork) {
+        let n_s = self.index.map().shard_len(s);
+        if n_s == 0 {
+            return (f64::NEG_INFINITY, EstimateWork::default());
+        }
+        // proportional (ε, δ)-budget split, ≥ 1 so every shard is covered
+        let k_s = ((self.k * n_s).div_ceil(n)).clamp(1, n_s);
+        let l_s = ((self.l * n_s) / n).max(1);
+        let top = self.index.shard_top_k_local_in(s, q, k_s, order);
+        let k_eff = top.items.len();
+        let exclude: FxHashSet<u32> = top.items.iter().map(|it| it.id).collect();
+        let mut rng = {
+            let mut h = self.seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            h = h.wrapping_add(0xE57_1u64.wrapping_mul(0x2545_F491_4F6C_DD1D));
+            Pcg64::new_stream(h, s as u64)
+        };
+        let l_s = l_s.min(n_s.saturating_sub(k_eff)).max(1);
+        // tail ids drawn in shard-local space (uniform over X_s \ S_s),
+        // scored from the global dataset through the shard map
+        let t_ids: Vec<u32> = if k_eff < n_s {
+            rng.with_replacement_excluding(n_s as u64, l_s, &exclude)
+                .into_iter()
+                .map(|local| self.index.map().to_global(s, local))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let d = self.ds.d;
+        let mut t_scores = vec![0f32; t_ids.len()];
+        if !t_ids.is_empty() {
+            if self.backend.prefers_gather() {
+                let mut rows = vec![0f32; t_ids.len() * d];
+                self.ds.gather(&t_ids, &mut rows);
+                self.backend.scores(&rows, d, q, &mut t_scores);
+            } else {
+                for (o, &id) in t_scores.iter_mut().zip(&t_ids) {
+                    *o = crate::linalg::dot(self.ds.row(id as usize), q);
+                }
+            }
+        }
+        let mut head = MaxSumExp::default();
+        for it in &top.items {
+            head.push(it.score as f64);
+        }
+        let mut tail = MaxSumExp::default();
+        tail.push_all(&t_scores);
+        let log_z_s = combine_head_tail(&head, &tail, n_s, k_eff, t_ids.len());
+        (
+            log_z_s,
+            EstimateWork { scanned: top.scanned, k: k_eff, l: t_ids.len() },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, IndexKind};
+    use crate::data::synth;
+    use crate::data::Dataset;
+    use crate::estimator::partition::exact_log_partition;
+    use crate::scorer::NativeScorer;
+
+    fn sharded(
+        ds: &Arc<Dataset>,
+        shards: usize,
+        backend: &Arc<dyn ScoreBackend>,
+    ) -> Arc<ShardedIndex> {
+        let mut cfg = Config::default().index;
+        cfg.kind = IndexKind::Brute;
+        cfg.shards = shards;
+        Arc::new(ShardedIndex::build(ds, &cfg, backend.clone()).unwrap())
+    }
+
+    #[test]
+    fn merge_log_partials_is_logsumexp() {
+        let xs = [0.0f64, 1.0, -2.0];
+        let want = xs.iter().map(|x| x.exp()).sum::<f64>().ln();
+        assert!((merge_log_partials(&xs) - want).abs() < 1e-12);
+        assert_eq!(merge_log_partials(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+        assert_eq!(merge_log_partials(&[]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn degenerate_heads_make_the_merge_exact() {
+        // k ≥ n: every shard's head covers its whole partition, so each
+        // partial is its exact log Z_s and the LSE merge must equal the
+        // exact global log-partition for ANY shard count — a
+        // deterministic check of the Z = Σ_s Z_s decomposition.
+        let ds = Arc::new(synth::imagenet_like(600, 8, 10, 0.3, 1));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let want = exact_log_partition(&ds, backend.as_ref(), &{
+            let mut rng = Pcg64::new(2);
+            synth::random_theta(&ds, 0.2, &mut rng)
+        });
+        let mut rng = Pcg64::new(2);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        for shards in [1usize, 3, 7] {
+            let est = ShardedPartitionEstimator::new(
+                ds.clone(),
+                sharded(&ds, shards, &backend),
+                backend.clone(),
+                ds.n,
+                5,
+                3,
+            );
+            let got = est.estimate_at(&q, 0);
+            assert!(
+                (got.log_z - want).abs() < 1e-5,
+                "shards={shards}: {} vs {want}",
+                got.log_z
+            );
+            assert_eq!(got.work.k, ds.n);
+        }
+    }
+
+    #[test]
+    fn sharded_estimate_is_unbiased() {
+        // E[Ẑ] = Σ_s E[Ẑ_s] = Z: average Ẑ/Z in the linear domain
+        let ds = Arc::new(synth::imagenet_like(800, 8, 10, 0.3, 4));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let est = ShardedPartitionEstimator::new(
+            ds.clone(),
+            sharded(&ds, 4, &backend),
+            backend.clone(),
+            60,
+            60,
+            5,
+        );
+        let mut rng = Pcg64::new(6);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let true_log_z = exact_log_partition(&ds, backend.as_ref(), &q);
+        let reps = 600u64;
+        let mean_ratio: f64 = (0..reps)
+            .map(|r| (est.estimate_at(&q, r).log_z - true_log_z).exp())
+            .sum::<f64>()
+            / reps as f64;
+        assert!((mean_ratio - 1.0).abs() < 0.07, "E[Ẑ]/Z = {mean_ratio}");
+    }
+
+    #[test]
+    fn rounds_replayable() {
+        let ds = Arc::new(synth::imagenet_like(500, 8, 10, 0.3, 7));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let est = ShardedPartitionEstimator::new(
+            ds.clone(),
+            sharded(&ds, 3, &backend),
+            backend.clone(),
+            40,
+            40,
+            8,
+        );
+        let mut rng = Pcg64::new(9);
+        let q = synth::random_theta(&ds, 0.1, &mut rng);
+        let a = est.estimate_at(&q, 5).log_z;
+        let b = est.estimate_at(&q, 5).log_z;
+        assert_eq!(a, b);
+        let c = est.estimate_at(&q, 6).log_z;
+        assert_ne!(a, c, "distinct rounds must draw fresh tails");
+    }
+
+    use crate::util::rng::Pcg64;
+}

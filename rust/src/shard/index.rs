@@ -1,0 +1,445 @@
+//! [`ShardedIndex`] — `N` sub-indexes behind one [`MipsIndex`]: parallel
+//! per-shard fan-out, k-way merge, global-id mapping, and per-query
+//! `scanned` accounting that matches the monolithic index exactly.
+//!
+//! See the [module docs](crate::shard) for the decomposition math and
+//! the per-kind ingredients (shared IVF coarse quantizer, shared LSH
+//! norm bound) that make `shard=N` bit-identical to `shard=1` on
+//! brute/IVF/LSH.
+
+use super::ShardMap;
+use crate::config::{IndexConfig, IndexKind};
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::mips::brute::BruteForce;
+use crate::mips::ivf::{self, IvfIndex};
+use crate::mips::kmeans::Kmeans;
+use crate::mips::lsh::{self, SrpLsh};
+use crate::mips::tiered::TieredLsh;
+use crate::mips::{MipsIndex, TopKResult};
+use crate::scorer::ScoreBackend;
+use crate::util::pool;
+use crate::util::topk::{merge_topk, Scored};
+use std::sync::Arc;
+
+/// One shard's sub-index (concrete, so sparse updates can route through
+/// without trait-object downcasting).
+enum SubIndex {
+    Brute(BruteForce),
+    Ivf(IvfIndex),
+    Lsh(SrpLsh),
+    Tiered(TieredLsh),
+}
+
+impl SubIndex {
+    fn as_dyn(&self) -> &dyn MipsIndex {
+        match self {
+            SubIndex::Brute(i) => i,
+            SubIndex::Ivf(i) => i,
+            SubIndex::Lsh(i) => i,
+            SubIndex::Tiered(i) => i,
+        }
+    }
+}
+
+/// Shared IVF probe structure: the globally trained coarse quantizer the
+/// shard layer ranks against (once per query), plus the resolved probe
+/// count.
+struct CoarseProbe {
+    km: Kmeans,
+    n_probe: usize,
+}
+
+/// A [`MipsIndex`] over `N` disjoint row partitions, each behind its own
+/// sub-index of the configured kind.
+pub struct ShardedIndex {
+    map: ShardMap,
+    shards: Vec<SubIndex>,
+    /// IVF only: rank probes once per query, fan the cluster list out
+    coarse: Option<CoarseProbe>,
+    parallel: bool,
+    kind: IndexKind,
+    n: usize,
+    d: usize,
+    /// merged gap bound (max over shards; None for heuristic kinds)
+    gap: Option<f64>,
+}
+
+impl ShardedIndex {
+    /// Partition `ds` per `cfg.shard_strategy` into `cfg.shards` parts
+    /// (clamped to `[1, n]`) and build one sub-index of `cfg.kind` per
+    /// part. IVF shards share a coarse quantizer trained on the global
+    /// dataset; SRP-LSH shards share the global norm bound.
+    pub fn build(
+        ds: &Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+    ) -> Result<ShardedIndex> {
+        let map = ShardMap::new(ds.n, cfg.shards, cfg.shard_strategy);
+        // per-shard row copies: brute/LSH/tiered sub-indexes keep the Arc
+        // themselves; IVF re-copies rows into its grouped storage and the
+        // Arcs drop at the end of this function, so a sharded IVF engine
+        // holds the same two data copies the monolithic one does
+        let shard_ds: Vec<Arc<Dataset>> =
+            map.split(ds).into_iter().map(Arc::new).collect();
+        let mut shards = Vec::with_capacity(map.shards());
+        let mut coarse = None;
+        match cfg.kind {
+            IndexKind::Brute => {
+                for sd in &shard_ds {
+                    let mut idx = BruteForce::new(sd.clone(), backend.clone());
+                    if cfg.quant {
+                        idx = idx.with_quant(cfg.quant_block, cfg.overscan);
+                    }
+                    shards.push(SubIndex::Brute(idx));
+                }
+            }
+            IndexKind::Ivf => {
+                let (n_clusters, n_probe) = ivf::resolve_sizes(cfg, ds.n);
+                let km = ivf::train_coarse(ds, cfg, n_clusters);
+                for sd in &shard_ds {
+                    shards.push(SubIndex::Ivf(IvfIndex::build_with_kmeans(
+                        sd.clone(),
+                        cfg,
+                        backend.clone(),
+                        km.clone(),
+                        n_probe,
+                    )));
+                }
+                coarse = Some(CoarseProbe { km, n_probe });
+            }
+            IndexKind::Lsh => {
+                let m2 = lsh::max_sq_norm(ds);
+                for sd in &shard_ds {
+                    shards.push(SubIndex::Lsh(SrpLsh::build_scaled(
+                        sd.clone(),
+                        cfg,
+                        backend.clone(),
+                        Some(m2),
+                    )?));
+                }
+            }
+            IndexKind::Tiered => {
+                for sd in &shard_ds {
+                    shards.push(SubIndex::Tiered(TieredLsh::build(
+                        sd.clone(),
+                        cfg,
+                        backend.clone(),
+                    )?));
+                }
+            }
+        }
+        let gap = match cfg.kind {
+            IndexKind::Brute => Some(0.0),
+            IndexKind::Tiered => Some(
+                shards
+                    .iter()
+                    .map(|s| s.as_dyn().gap_bound().unwrap_or(0.0))
+                    .fold(0.0, f64::max),
+            ),
+            _ => None,
+        };
+        Ok(ShardedIndex {
+            map,
+            shards,
+            coarse,
+            parallel: cfg.shard_parallel,
+            kind: cfg.kind,
+            n: ds.n,
+            d: ds.d,
+            gap,
+        })
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The row partition.
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Fan a per-shard closure out across the shards — parallel over
+    /// scoped pool threads when `shard_parallel` is set (and there is
+    /// more than one shard), sequential otherwise. Results come back in
+    /// shard order either way. The sharded sampler/estimator reuse this
+    /// so the `shard_parallel` knob governs every sharded entry point.
+    pub(crate) fn fan_out<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let ns = self.shards.len();
+        let nthreads = if self.parallel { pool::default_threads().min(ns) } else { 1 };
+        let parts = pool::parallel_chunks(ns, nthreads, |_, s, e| {
+            (s..e).map(&f).collect::<Vec<T>>()
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Merge per-shard results (shard-local ids) into the global top-k:
+    /// map ids through [`ShardMap::to_global`], k-way merge with the
+    /// deterministic `(score, id)` tie-break, sum the `scanned` work.
+    fn merge(&self, parts: Vec<TopKResult>, k: usize) -> TopKResult {
+        let kk = k.min(self.n).max(1);
+        let scanned = parts.iter().map(|r| r.scanned).sum();
+        let frags = parts.into_iter().enumerate().map(|(s, r)| {
+            r.items
+                .into_iter()
+                .map(|it| Scored { id: self.map.to_global(s, it.id), score: it.score })
+                .collect::<Vec<Scored>>()
+        });
+        TopKResult { items: merge_topk(frags, kk).into_sorted(), scanned }
+    }
+
+    /// The shared probe ranking for `q` (`None` for non-IVF kinds). The
+    /// sharded estimator ranks once per query and hands the list to every
+    /// shard through [`shard_top_k_local_in`](Self::shard_top_k_local_in)
+    /// — the same rank-once discipline [`top_k`](MipsIndex::top_k) uses.
+    pub fn coarse_order(&self, q: &[f32]) -> Option<Vec<u32>> {
+        self.coarse
+            .as_ref()
+            .map(|cp| ivf::rank_clusters(&cp.km, q, cp.n_probe.clamp(1, cp.km.c)))
+    }
+
+    /// Centroid-ranking work behind [`coarse_order`](Self::coarse_order)
+    /// (0 for non-IVF kinds) — callers account it once per query.
+    pub fn coarse_cost(&self) -> usize {
+        self.coarse.as_ref().map(|cp| cp.km.c).unwrap_or(0)
+    }
+
+    /// Per-shard top-k in **shard-local** id space (what the sharded
+    /// estimator decomposes over). IVF shards scan the given shared probe
+    /// list; `scanned` counts scored rows only — centroid work is the
+    /// caller's, via [`coarse_cost`](Self::coarse_cost).
+    pub fn shard_top_k_local_in(
+        &self,
+        s: usize,
+        q: &[f32],
+        k: usize,
+        order: Option<&[u32]>,
+    ) -> TopKResult {
+        match (order, &self.shards[s]) {
+            (Some(ord), SubIndex::Ivf(idx)) => idx.top_k_clusters(q, k, ord),
+            (_, sub) => sub.as_dyn().top_k(q, k),
+        }
+    }
+
+    /// Route a sparse row update to its shard (IVF shards only, matching
+    /// the monolithic [`IvfIndex::update_row`]): the global id maps to
+    /// `(shard, local)` and the shard's tombstone/pending machinery takes
+    /// over.
+    ///
+    /// # Panics
+    /// If the sub-indexes are not IVF.
+    pub fn update_row(&mut self, gid: u32, new_vec: &[f32]) {
+        debug_assert_eq!(new_vec.len(), self.d);
+        let (s, local) = self.map.to_local(gid);
+        match &mut self.shards[s] {
+            SubIndex::Ivf(idx) => idx.update_row(local, new_vec),
+            _ => panic!("update_row requires ivf shards (kind = {})", self.kind.name()),
+        }
+    }
+
+    /// Total rows awaiting compaction across shards.
+    pub fn pending_len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| match s {
+                SubIndex::Ivf(idx) => idx.pending_len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Compact every IVF shard (fold pending updates back into
+    /// cluster-contiguous storage; no-op for other kinds).
+    pub fn compact(&mut self) {
+        for s in &mut self.shards {
+            if let SubIndex::Ivf(idx) = s {
+                idx.compact();
+            }
+        }
+    }
+
+    /// The per-query shared probe rankings for a batch (`None` for
+    /// non-IVF kinds) — the batch analogue of
+    /// [`coarse_order`](Self::coarse_order).
+    fn coarse_orders_batch(&self, qs: &[&[f32]]) -> Option<Vec<Vec<u32>>> {
+        self.coarse
+            .as_ref()
+            .map(|cp| ivf::rank_clusters_batch(&cp.km, qs, cp.n_probe.clamp(1, cp.km.c)))
+    }
+}
+
+impl MipsIndex for ShardedIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+        // rank probes ONCE against the shared centroids (IVF); every
+        // shard scans its members of the same cluster list
+        let order = self.coarse_order(q);
+        let per_shard = self.fan_out(|s| self.shard_top_k_local_in(s, q, k, order.as_deref()));
+        let mut merged = self.merge(per_shard, k);
+        merged.scanned += self.coarse_cost(); // centroid ranking, counted once
+        merged
+    }
+
+    /// Batched fan-out: every shard answers the whole batch with its own
+    /// batch-aware scan (merged probe scans, candidate-union gathers),
+    /// then results merge per query. Per-query results are exactly what
+    /// per-query [`top_k`](MipsIndex::top_k) calls would return.
+    fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
+        let nq = qs.len();
+        if nq <= 1 {
+            return qs.iter().map(|q| self.top_k(q, k)).collect();
+        }
+        let orders = self.coarse_orders_batch(qs);
+        let per_shard: Vec<Vec<TopKResult>> = match &orders {
+            Some(ords) => self.fan_out(|s| match &self.shards[s] {
+                SubIndex::Ivf(idx) => idx.scan_clusters_batch(qs, k, ords),
+                _ => unreachable!("coarse orders imply ivf shards"),
+            }),
+            None => self.fan_out(|s| self.shards[s].as_dyn().top_k_batch(qs, k)),
+        };
+        // transpose by value: each per-shard result is consumed exactly
+        // once, no fragment cloning on the batched hot path
+        let mut iters: Vec<std::vec::IntoIter<TopKResult>> =
+            per_shard.into_iter().map(|v| v.into_iter()).collect();
+        (0..nq)
+            .map(|_| {
+                let parts: Vec<TopKResult> = iters
+                    .iter_mut()
+                    .map(|it| it.next().expect("each shard answers every query"))
+                    .collect();
+                let mut merged = self.merge(parts, k);
+                merged.scanned += self.coarse_cost();
+                merged
+            })
+            .collect()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn gap_bound(&self) -> Option<f64> {
+        self.gap
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sharded[{}×{}, {}{}] over n={} d={}: {}",
+            self.shards.len(),
+            self.kind.name(),
+            self.map.strategy().name(),
+            if self.parallel { ", parallel" } else { "" },
+            self.n,
+            self.d,
+            self.shards
+                .first()
+                .map(|s| s.as_dyn().describe())
+                .unwrap_or_default()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, ShardStrategy};
+    use crate::data::synth;
+    use crate::scorer::NativeScorer;
+    use crate::util::rng::Pcg64;
+
+    fn cfg(kind: IndexKind, shards: usize) -> IndexConfig {
+        let mut c = Config::default().index;
+        c.kind = kind;
+        c.shards = shards;
+        c.n_clusters = 32;
+        c.n_probe = 6;
+        c.kmeans_iters = 4;
+        c.train_sample = 1500;
+        c.tables = 8;
+        c.bits = 7;
+        c.rungs = 6;
+        c
+    }
+
+    #[test]
+    fn sharded_brute_equals_monolithic() {
+        let ds = Arc::new(synth::imagenet_like(2000, 12, 20, 0.3, 1));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mono = BruteForce::new(ds.clone(), backend.clone());
+        let mut rng = Pcg64::new(2);
+        for strategy in [ShardStrategy::RoundRobin, ShardStrategy::Contiguous] {
+            let mut c = cfg(IndexKind::Brute, 3);
+            c.shard_strategy = strategy;
+            let sharded = ShardedIndex::build(&ds, &c, backend.clone()).unwrap();
+            assert_eq!(sharded.n_shards(), 3);
+            let q = synth::random_theta(&ds, 0.05, &mut rng);
+            let got = sharded.top_k(&q, 25);
+            let want = mono.top_k(&q, 25);
+            assert_eq!(got.ids(), want.ids(), "{strategy:?}");
+            for (g, w) in got.items.iter().zip(&want.items) {
+                assert_eq!(g.score, w.score, "{strategy:?}");
+            }
+            assert_eq!(got.scanned, want.scanned, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn fan_out_parallel_and_sequential_agree() {
+        let ds = Arc::new(synth::imagenet_like(1500, 8, 10, 0.3, 4));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut cp = cfg(IndexKind::Ivf, 4);
+        cp.shard_parallel = true;
+        let mut cs = cfg(IndexKind::Ivf, 4);
+        cs.shard_parallel = false;
+        let a = ShardedIndex::build(&ds, &cp, backend.clone()).unwrap();
+        let b = ShardedIndex::build(&ds, &cs, backend).unwrap();
+        let mut rng = Pcg64::new(5);
+        let q = synth::random_theta(&ds, 0.05, &mut rng);
+        let ra = a.top_k(&q, 30);
+        let rb = b.top_k(&q, 30);
+        assert_eq!(ra.ids(), rb.ids());
+        assert_eq!(ra.scanned, rb.scanned);
+        assert!(a.describe().contains("sharded[4×ivf"));
+    }
+
+    #[test]
+    fn k_larger_than_shard_sizes() {
+        // k exceeding every shard's row count must still return the
+        // global top-k (clamped to n)
+        let ds = Arc::new(synth::uniform_sphere(40, 4, 6));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let sharded = ShardedIndex::build(&ds, &cfg(IndexKind::Brute, 8), backend.clone()).unwrap();
+        let mono = BruteForce::new(ds.clone(), backend);
+        let q = [1.0f32, 0.0, 0.0, 0.0];
+        let got = sharded.top_k(&q, 100);
+        let want = mono.top_k(&q, 100);
+        assert_eq!(got.items.len(), 40);
+        assert_eq!(got.ids(), want.ids());
+    }
+
+    #[test]
+    fn gap_bound_per_kind() {
+        let ds = Arc::new(synth::imagenet_like(1200, 8, 10, 0.3, 7));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let b = ShardedIndex::build(&ds, &cfg(IndexKind::Brute, 2), backend.clone()).unwrap();
+        assert_eq!(b.gap_bound(), Some(0.0));
+        let i = ShardedIndex::build(&ds, &cfg(IndexKind::Ivf, 2), backend.clone()).unwrap();
+        assert_eq!(i.gap_bound(), None);
+        let t = ShardedIndex::build(&ds, &cfg(IndexKind::Tiered, 2), backend).unwrap();
+        assert!(t.gap_bound().unwrap() >= 0.0);
+        assert_eq!(t.name(), "sharded");
+    }
+}

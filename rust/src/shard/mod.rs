@@ -1,0 +1,266 @@
+//! Data-parallel sharding — the fan-out/merge layer between the MIPS
+//! indexes and the engine.
+//!
+//! The amortization story of the paper is a serving story: preprocess
+//! once, then answer a stream of `top_k(θ)` queries sublinearly. A
+//! single monolithic index caps throughput at one scan's rate; this
+//! module splits the database into `N` disjoint row partitions, each
+//! behind its own sub-index (any [`crate::config::IndexKind`]), fans
+//! queries out across the shards in parallel, and k-way-merges the
+//! per-shard results ([`crate::util::topk::merge_topk`]).
+//!
+//! ## Why the math decomposes
+//!
+//! Every estimator in this system is built from quantities that are
+//! **associative over a partition of the state space** `X = ⊔_s X_s`:
+//!
+//! * **top-k**: the global top-k of `⊔_s X_s` is the k-way merge of the
+//!   per-shard top-k sets (each shard's top-k contains its members of the
+//!   global top-k). With deterministic `(score, id)` tie-breaking the
+//!   merge is *bit-identical* to the monolithic scan — enforced by tests
+//!   for brute, IVF (shared coarse quantizer, see below) and SRP-LSH
+//!   (shared norm bound).
+//! * **Gumbel-max sampling** (Algorithm 1): `argmax_{i∈X}(y_i + G_i) =
+//!   argmax_s [ argmax_{i∈X_s}(y_i + G_i) ]` — per-shard perturbed
+//!   maxima merge by argmax. With the Gumbel stream *keyed by global id*
+//!   (a frozen `G_{r,i}` per draw round `r`), the per-shard maxima are
+//!   functions of shard content only, so `N = 1` and `N = k` produce the
+//!   same sample ([`sampler::ShardedGumbelSampler`]).
+//! * **partition function** (Algorithm 3): `Z = Σ_s Z_s`, so per-shard
+//!   estimates merge by log-sum-exp:
+//!   `log Ẑ = LSE_s(log Ẑ_s)` — each `Ẑ_s` unbiased for `Z_s` makes the
+//!   merged `Ẑ` unbiased for `Z`
+//!   ([`estimator::ShardedPartitionEstimator`]).
+//!
+//! ## Shard-count invariance
+//!
+//! Two per-kind ingredients make `shard=N` bit-identical to `shard=1`:
+//!
+//! * **IVF**: the coarse quantizer is trained once on the *global*
+//!   dataset ([`crate::mips::ivf::train_coarse`]) and shared by every
+//!   shard; the shard layer ranks probes once per query and fans the
+//!   same cluster list out, so the per-shard probed rows union to
+//!   exactly the monolithic probed rows (and the centroid-ranking work
+//!   is accounted once).
+//! * **SRP-LSH**: the Neyshabur–Srebro norm bound `M² = max‖v‖²` is
+//!   computed on the global dataset and shared, and the projection
+//!   planes are seed-derived (data-independent) — so every row hashes to
+//!   the same buckets it would in the monolithic index.
+//!
+//! Tiered LSH shards too, but its ladder walk stops on a shard-local
+//! candidate count, so it is *approximate* under sharding (per-shard
+//! gap bounds merge by max) — exactly like the monolithic ladder is
+//! approximate; no parity is claimed or tested for it.
+//!
+//! Row partitions come in two strategies
+//! ([`crate::config::ShardStrategy`]): round-robin (`shard = id mod N`)
+//! and balanced contiguous ranges. [`ShardMap`] owns the global-id ↔
+//! `(shard, local-id)` bijection; both directions are cheap (O(1)
+//! arithmetic for round-robin, O(log N) bound search for contiguous)
+//! and monotone in the local id, which is what preserves tie-breaking
+//! under the merge.
+
+pub mod estimator;
+pub mod index;
+pub mod sampler;
+
+pub use estimator::ShardedPartitionEstimator;
+pub use index::ShardedIndex;
+pub use sampler::ShardedGumbelSampler;
+
+use crate::config::ShardStrategy;
+use crate::data::Dataset;
+
+/// The global-id ↔ (shard, local-id) bijection for a row partition.
+#[derive(Clone, Debug)]
+pub struct ShardMap {
+    n: usize,
+    shards: usize,
+    strategy: ShardStrategy,
+    /// contiguous strategy: shard `s` owns global ids
+    /// `bounds[s] .. bounds[s+1]` (balanced `⌊s·n/N⌋` splits)
+    bounds: Vec<usize>,
+}
+
+impl ShardMap {
+    /// Partition `[0, n)` into `shards` parts (clamped to `[1, n]` so no
+    /// shard is empty).
+    pub fn new(n: usize, shards: usize, strategy: ShardStrategy) -> ShardMap {
+        let shards = shards.clamp(1, n.max(1));
+        let mut bounds = vec![0usize; shards + 1];
+        for (s, b) in bounds.iter_mut().enumerate() {
+            *b = s * n / shards;
+        }
+        bounds[shards] = n;
+        ShardMap { n, shards, strategy, bounds }
+    }
+
+    /// Total number of rows.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn strategy(&self) -> ShardStrategy {
+        self.strategy
+    }
+
+    /// Rows owned by shard `s`.
+    pub fn shard_len(&self, s: usize) -> usize {
+        debug_assert!(s < self.shards);
+        match self.strategy {
+            // |{ i < n : i ≡ s (mod N) }| = ⌈(n − s)/N⌉
+            ShardStrategy::RoundRobin => (self.n + self.shards - 1 - s) / self.shards,
+            ShardStrategy::Contiguous => self.bounds[s + 1] - self.bounds[s],
+        }
+    }
+
+    /// Global id → (shard, local id).
+    #[inline]
+    pub fn to_local(&self, gid: u32) -> (usize, u32) {
+        debug_assert!((gid as usize) < self.n);
+        match self.strategy {
+            ShardStrategy::RoundRobin => {
+                let s = gid as usize % self.shards;
+                (s, gid / self.shards as u32)
+            }
+            ShardStrategy::Contiguous => {
+                let s = self.bounds.partition_point(|&b| b <= gid as usize) - 1;
+                (s, gid - self.bounds[s] as u32)
+            }
+        }
+    }
+
+    /// (shard, local id) → global id. Strictly increasing in `local` for
+    /// both strategies — per-shard `(score, local-id)` tie-breaking
+    /// therefore agrees with global `(score, global-id)` tie-breaking,
+    /// which the bit-parity of the sharded merge relies on.
+    #[inline]
+    pub fn to_global(&self, s: usize, local: u32) -> u32 {
+        debug_assert!(s < self.shards);
+        match self.strategy {
+            ShardStrategy::RoundRobin => local * self.shards as u32 + s as u32,
+            ShardStrategy::Contiguous => self.bounds[s] as u32 + local,
+        }
+    }
+
+    /// Materialize the per-shard datasets (row `l` of shard `s` is global
+    /// row `to_global(s, l)`; labels travel along).
+    pub fn split(&self, ds: &Dataset) -> Vec<Dataset> {
+        let d = ds.d;
+        (0..self.shards)
+            .map(|s| {
+                let len = self.shard_len(s);
+                let mut data = Vec::with_capacity(len * d);
+                let mut labels = Vec::with_capacity(if ds.labels.is_empty() { 0 } else { len });
+                for l in 0..len {
+                    let g = self.to_global(s, l as u32) as usize;
+                    data.extend_from_slice(ds.row(g));
+                    if !ds.labels.is_empty() {
+                        labels.push(ds.labels[g]);
+                    }
+                }
+                let mut shard = Dataset::new(data, len, d).expect("shard split sizes are exact");
+                shard.labels = labels;
+                shard
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn map_is_a_bijection_for_both_strategies() {
+        for strategy in [ShardStrategy::RoundRobin, ShardStrategy::Contiguous] {
+            for (n, shards) in [(1usize, 1usize), (10, 3), (1000, 7), (5, 8), (64, 64)] {
+                let map = ShardMap::new(n, shards, strategy);
+                assert!(map.shards() >= 1 && map.shards() <= n);
+                let total: usize = (0..map.shards()).map(|s| map.shard_len(s)).sum();
+                assert_eq!(total, n, "{strategy:?} n={n} shards={shards}");
+                let mut seen = vec![false; n];
+                for s in 0..map.shards() {
+                    for l in 0..map.shard_len(s) {
+                        let g = map.to_global(s, l as u32);
+                        assert!(!seen[g as usize], "{strategy:?}: duplicate gid {g}");
+                        seen[g as usize] = true;
+                        assert_eq!(map.to_local(g), (s, l as u32), "{strategy:?}");
+                    }
+                }
+                assert!(seen.iter().all(|&x| x), "{strategy:?}: rows missing");
+            }
+        }
+    }
+
+    #[test]
+    fn to_global_is_monotone_in_local() {
+        for strategy in [ShardStrategy::RoundRobin, ShardStrategy::Contiguous] {
+            let map = ShardMap::new(101, 4, strategy);
+            for s in 0..map.shards() {
+                let len = map.shard_len(s);
+                for l in 1..len {
+                    assert!(
+                        map.to_global(s, l as u32) > map.to_global(s, l as u32 - 1),
+                        "{strategy:?} shard {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_preserves_rows_and_labels() {
+        let ds = synth::imagenet_like(300, 8, 5, 0.3, 3);
+        for strategy in [ShardStrategy::RoundRobin, ShardStrategy::Contiguous] {
+            let map = ShardMap::new(ds.n, 4, strategy);
+            let parts = map.split(&ds);
+            assert_eq!(parts.len(), 4);
+            for (s, part) in parts.iter().enumerate() {
+                assert_eq!(part.n, map.shard_len(s));
+                assert_eq!(part.d, ds.d);
+                for l in 0..part.n {
+                    let g = map.to_global(s, l as u32) as usize;
+                    assert_eq!(part.row(l), ds.row(g), "{strategy:?} shard {s} row {l}");
+                    if !ds.labels.is_empty() {
+                        assert_eq!(part.labels[l], ds.labels[g]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shards_clamped_to_n() {
+        let map = ShardMap::new(3, 10, ShardStrategy::RoundRobin);
+        assert_eq!(map.shards(), 3);
+        for s in 0..3 {
+            assert_eq!(map.shard_len(s), 1);
+        }
+        // n = 0 stays well-formed (no shard, no rows — build paths never
+        // construct this, but the map must not panic)
+        let map = ShardMap::new(0, 4, ShardStrategy::Contiguous);
+        assert_eq!(map.shards(), 1);
+        assert_eq!(map.shard_len(0), 0);
+    }
+
+    #[test]
+    fn random_gids_roundtrip() {
+        let mut rng = Pcg64::new(7);
+        for strategy in [ShardStrategy::RoundRobin, ShardStrategy::Contiguous] {
+            let map = ShardMap::new(12345, 11, strategy);
+            for _ in 0..2000 {
+                let g = rng.next_below(12345) as u32;
+                let (s, l) = map.to_local(g);
+                assert_eq!(map.to_global(s, l), g, "{strategy:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! [`ShardedGumbelSampler`] — Algorithm 1 with **frozen, id-keyed Gumbel
+//! streams**, decomposed per shard.
+//!
+//! The plain [`LazyGumbelSampler`](crate::sampler::lazy_gumbel) draws
+//! Gumbels from one sequential RNG, which ties the realized noise to the
+//! iteration order. Here every random quantity is a deterministic
+//! function of `(seed, draw round, global id)`:
+//!
+//! * each top-set element `i` gets `G_{r,i}` from its own keyed stream,
+//!   so the per-shard maxima `M_s = max_{i ∈ S ∩ X_s}(y_i + G_{r,i})`
+//!   depend only on shard *content* and merge by argmax:
+//!   `argmax_i = argmax_s M_s`;
+//! * the lazy tail is materialized per fixed-size **id block** (block
+//!   size `⌈√n⌉`, independent of the shard count): each block `β` has
+//!   its own keyed stream drawing `m_β ~ Binomial(live_β, 1 − F(B))`,
+//!   uniform positions among the block's non-top ids, and truncated
+//!   Gumbels above `B` — exactly the lazy-tail construction of
+//!   [`crate::gumbel::sample_tail`], applied blockwise (a sum of
+//!   per-block binomials with per-block uniform positions is the global
+//!   binomial with global uniform positions).
+//!
+//! Since the merged top set `S`, the cutoff
+//! `B = max_{i∈S}(y_i + G_{r,i}) − S_min − c`, and the block partition
+//! are all shard-count invariant (the sharded index's top-k is
+//! bit-identical across shard counts), the **sample itself is
+//! bit-identical for `shard=1` and `shard=N`** — enforced by tests. The
+//! distribution is unchanged from Algorithm 1 (Theorem 3.1: exact
+//! softmax samples when `S_min + c` bounds the tail), because keying
+//! streams by id only re-indexes which i.i.d. Gumbel goes where.
+
+use super::ShardedIndex;
+use crate::data::Dataset;
+use crate::gumbel;
+use crate::mips::{MipsIndex, TopKResult};
+use crate::sampler::{SampleOutcome, SampleWork, Sampler};
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use rustc_hash::FxHashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Stream-salt for top-set Gumbels (`idx` = global id).
+const SALT_TOP: u64 = 0x517;
+/// Stream-salt for tail blocks (`idx` = block index).
+const SALT_TAIL: u64 = 0x7A11;
+
+/// Algorithm 1 over a [`ShardedIndex`] with id-keyed frozen Gumbel
+/// streams: per-shard perturbed maxima merged by argmax, blockwise lazy
+/// tail.
+pub struct ShardedGumbelSampler {
+    ds: Arc<Dataset>,
+    index: Arc<ShardedIndex>,
+    backend: Arc<dyn ScoreBackend>,
+    /// top-set size k (paper: O(√n))
+    pub k: usize,
+    /// approximate-MIPS gap allowance c ≥ 0
+    pub gap_c: f64,
+    seed: u64,
+    /// next draw round (each round has its own frozen Gumbel field)
+    round: AtomicU64,
+}
+
+/// Reusable per-θ state: merged top set, its per-shard partition, and the
+/// tail-block bookkeeping.
+pub struct ShardedSession {
+    /// merged global top-k (shard-count invariant)
+    pub top: TopKResult,
+    /// `top.items` partitioned by owning shard (global ids kept)
+    by_shard: Vec<Vec<(u32, f64)>>,
+    /// sorted global ids of the top set (per-block exclusion ranges)
+    s_ids: Vec<u32>,
+    /// tail block size `⌈√n⌉` (shard-count invariant)
+    block: usize,
+    /// per block: number of non-top ids
+    live: Vec<u32>,
+}
+
+impl ShardedGumbelSampler {
+    pub fn new(
+        ds: Arc<Dataset>,
+        index: Arc<ShardedIndex>,
+        backend: Arc<dyn ScoreBackend>,
+        k: usize,
+        gap_c: f64,
+        seed: u64,
+    ) -> Self {
+        let k = k.clamp(1, ds.n);
+        ShardedGumbelSampler { ds, index, backend, k, gap_c, seed, round: AtomicU64::new(0) }
+    }
+
+    /// A generator keyed by `(seed, round, salt, idx)` — distinct keys
+    /// give independent streams (SplitMix expansion + PCG stream
+    /// selection + burn-in, see [`Pcg64::new_stream`]).
+    fn keyed(&self, round: u64, salt: u64, idx: u64) -> Pcg64 {
+        let mut h = self.seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h = h.wrapping_add(salt.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        Pcg64::new_stream(h, idx)
+    }
+
+    /// Open a per-θ session: one sharded MIPS retrieval, reused across
+    /// every draw for this θ (the paper's "access the MIPS structure once
+    /// per parameter value").
+    pub fn session(&self, q: &[f32]) -> ShardedSession {
+        let top = self.index.top_k(q, self.k);
+        let ns = self.index.n_shards();
+        let mut by_shard: Vec<Vec<(u32, f64)>> = vec![Vec::new(); ns];
+        for it in &top.items {
+            let (s, _) = self.index.map().to_local(it.id);
+            by_shard[s].push((it.id, it.score as f64));
+        }
+        let mut s_ids: Vec<u32> = top.items.iter().map(|s| s.id).collect();
+        s_ids.sort_unstable();
+        let n = self.ds.n;
+        let block = (n as f64).sqrt().ceil().max(1.0) as usize;
+        let nblocks = n.div_ceil(block);
+        let mut live: Vec<u32> = (0..nblocks)
+            .map(|b| (((b + 1) * block).min(n) - b * block) as u32)
+            .collect();
+        for &id in &s_ids {
+            live[id as usize / block] -= 1;
+        }
+        ShardedSession { top, by_shard, s_ids, block, live }
+    }
+
+    /// One draw at an explicit round index (rounds are the replayable
+    /// coordinate of the frozen streams; distinct rounds are independent
+    /// draws).
+    pub fn sample_at(&self, sess: &ShardedSession, q: &[f32], round: u64) -> SampleOutcome {
+        debug_assert!(!sess.top.items.is_empty());
+        // ---- per-shard perturbed maxima over S, merged by argmax --------
+        let mut best_id = sess.top.items[0].id;
+        let mut best = f64::NEG_INFINITY;
+        for part in &sess.by_shard {
+            // shard max M_s = max_{i ∈ S ∩ X_s} (y_i + G_{r,i})
+            let mut shard_best_id = 0u32;
+            let mut shard_best = f64::NEG_INFINITY;
+            for &(id, y) in part {
+                let g = self.keyed(round, SALT_TOP, id as u64).gumbel();
+                let v = y + g;
+                if v > shard_best {
+                    shard_best = v;
+                    shard_best_id = id;
+                }
+            }
+            if shard_best > best {
+                best = shard_best;
+                best_id = shard_best_id;
+            }
+        }
+        let b = best - sess.top.s_min() - self.gap_c;
+
+        // ---- blockwise lazy tail ----------------------------------------
+        let p = gumbel::tail_prob(b);
+        let n = self.ds.n;
+        let mut tail_ids: Vec<u32> = Vec::new();
+        let mut tail_gumbels: Vec<f64> = Vec::new();
+        for (blk, &live) in sess.live.iter().enumerate() {
+            if live == 0 {
+                continue;
+            }
+            let lo = blk * sess.block;
+            let hi = ((blk + 1) * sess.block).min(n);
+            let mut rng = self.keyed(round, SALT_TAIL, blk as u64);
+            let mb = rng.binomial(live as u64, p) as usize;
+            if mb == 0 {
+                continue;
+            }
+            // block-local exclusion: top ids inside [lo, hi), rebased
+            let a = sess.s_ids.partition_point(|&x| (x as usize) < lo);
+            let z = sess.s_ids.partition_point(|&x| (x as usize) < hi);
+            let excl: FxHashSet<u32> =
+                sess.s_ids[a..z].iter().map(|&x| x - lo as u32).collect();
+            let picks = rng.distinct_excluding((hi - lo) as u64, mb, &excl);
+            for pick in picks {
+                tail_ids.push(lo as u32 + pick);
+            }
+            for _ in 0..mb {
+                tail_gumbels.push(rng.gumbel_above(b));
+            }
+        }
+        let m = tail_ids.len();
+        if m > 0 {
+            let scores = self.score_ids(&tail_ids, q);
+            for ((&id, &g), &y) in tail_ids.iter().zip(&tail_gumbels).zip(&scores) {
+                let v = y as f64 + g;
+                if v > best {
+                    best = v;
+                    best_id = id;
+                }
+            }
+        }
+        SampleOutcome {
+            id: best_id,
+            work: SampleWork { scanned: sess.top.scanned, k: sess.top.items.len(), m },
+        }
+    }
+
+    /// Score global ids — gather-free on backends that score rows in
+    /// place (mirrors the lazy sampler's fast path).
+    fn score_ids(&self, ids: &[u32], q: &[f32]) -> Vec<f32> {
+        let d = self.ds.d;
+        if self.backend.prefers_gather() {
+            let mut rows = vec![0f32; ids.len() * d];
+            self.ds.gather(ids, &mut rows);
+            let mut out = vec![0f32; ids.len()];
+            self.backend.scores(&rows, d, q, &mut out);
+            out
+        } else {
+            ids.iter()
+                .map(|&id| crate::linalg::dot(self.ds.row(id as usize), q))
+                .collect()
+        }
+    }
+}
+
+impl Sampler for ShardedGumbelSampler {
+    /// The `rng` parameter is unused: all randomness comes from the
+    /// frozen keyed streams; the internal round counter advances per
+    /// draw.
+    fn sample(&self, q: &[f32], _rng: &mut Pcg64) -> SampleOutcome {
+        let sess = self.session(q);
+        let r = self.round.fetch_add(1, Ordering::Relaxed);
+        self.sample_at(&sess, q, r)
+    }
+
+    fn sample_many(&self, q: &[f32], count: usize, _rng: &mut Pcg64) -> Vec<SampleOutcome> {
+        let sess = self.session(q);
+        let r0 = self.round.fetch_add(count as u64, Ordering::Relaxed);
+        (r0..r0 + count as u64).map(|r| self.sample_at(&sess, q, r)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-gumbel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, IndexKind};
+    use crate::data::synth;
+    use crate::sampler::exact::ExactSampler;
+    use crate::scorer::NativeScorer;
+    use crate::util::stats::gof_ok;
+
+    fn sharded(
+        ds: &Arc<Dataset>,
+        shards: usize,
+        backend: &Arc<dyn ScoreBackend>,
+    ) -> Arc<ShardedIndex> {
+        let mut cfg = Config::default().index;
+        cfg.kind = IndexKind::Brute;
+        cfg.shards = shards;
+        Arc::new(ShardedIndex::build(ds, &cfg, backend.clone()).unwrap())
+    }
+
+    #[test]
+    fn exact_softmax_sampling_via_keyed_streams() {
+        // Theorem 3.1 still holds with id-keyed frozen streams: chi-square
+        // GOF against the true softmax distribution.
+        let ds = Arc::new(synth::imagenet_like(300, 8, 10, 0.3, 1));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let index = sharded(&ds, 3, &backend);
+        let sampler =
+            ShardedGumbelSampler::new(ds.clone(), index, backend.clone(), 30, 0.0, 99);
+        let exact = ExactSampler::new(ds.clone(), backend);
+        let mut rng = Pcg64::new(2);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let probs = exact.probabilities(&q);
+        let total = 40_000u64;
+        let mut counts = vec![0u64; ds.n];
+        let sess = sampler.session(&q);
+        for r in 0..total {
+            counts[sampler.sample_at(&sess, &q, r).id as usize] += 1;
+        }
+        assert!(gof_ok(&counts, &probs, total, 5.0), "sharded sampler GOF failed");
+    }
+
+    #[test]
+    fn tail_work_stays_sublinear() {
+        let ds = Arc::new(synth::imagenet_like(4000, 8, 10, 0.3, 3));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let index = sharded(&ds, 4, &backend);
+        let k = (ds.n as f64).sqrt() as usize;
+        let sampler = ShardedGumbelSampler::new(ds.clone(), index, backend, k, 0.0, 7);
+        let mut rng = Pcg64::new(4);
+        let q = synth::random_theta(&ds, 0.05, &mut rng);
+        let outs = sampler.sample_many(&q, 100, &mut rng);
+        let mean_m: f64 = outs.iter().map(|o| o.work.m as f64).sum::<f64>() / 100.0;
+        // Theorem 3.2 with k = √n: E[m] ≤ √n (generous slack)
+        assert!(mean_m <= 2.5 * (ds.n as f64).sqrt(), "mean_m={mean_m}");
+    }
+
+    #[test]
+    fn rounds_are_replayable_and_distinct() {
+        let ds = Arc::new(synth::imagenet_like(500, 8, 10, 0.3, 5));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let index = sharded(&ds, 2, &backend);
+        let sampler = ShardedGumbelSampler::new(ds.clone(), index, backend, 25, 0.0, 11);
+        let mut rng = Pcg64::new(6);
+        let q = synth::random_theta(&ds, 0.1, &mut rng);
+        let sess = sampler.session(&q);
+        // same round → same sample; different rounds → fresh draws
+        assert_eq!(sampler.sample_at(&sess, &q, 3).id, sampler.sample_at(&sess, &q, 3).id);
+        let distinct: FxHashSet<u32> =
+            (0..200).map(|r| sampler.sample_at(&sess, &q, r).id).collect();
+        assert!(distinct.len() > 1, "draws must vary across rounds");
+    }
+}

@@ -149,6 +149,27 @@ impl TopK {
     }
 }
 
+/// K-way merge of independently collected top-k fragments into one global
+/// top-k collector — the reduction step shared by the sharded fan-out
+/// ([`crate::shard`]) and the IVF merged-probe batch scan. Because
+/// [`TopK`] retention is push-order independent (deterministic
+/// `(score, id)` tie-break), the merged collector retains exactly the `k`
+/// best elements of the fragment union regardless of fragment boundaries
+/// or ordering — which is what makes sharded and unsharded scans
+/// bit-identical.
+pub fn merge_topk<I>(fragments: I, k: usize) -> TopK
+where
+    I: IntoIterator<Item = Vec<Scored>>,
+{
+    let mut tk = TopK::new(k);
+    for frag in fragments {
+        for s in frag {
+            tk.push(s.id, s.score);
+        }
+    }
+    tk
+}
+
 /// Exact top-k by full sort — the reference implementation used in tests
 /// and for small inputs.
 pub fn topk_reference(scores: &[f32], k: usize) -> Vec<Scored> {
@@ -230,6 +251,37 @@ mod tests {
         let out = tk.into_sorted();
         let ids: Vec<u32> = out.iter().map(|s| s.id).collect();
         assert_eq!(ids, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn merge_topk_equals_flat_collection() {
+        // merging arbitrary fragmentations of a score stream must equal
+        // collecting the stream directly (push-order independence)
+        let mut rng = Pcg64::new(9);
+        for trial in 0..20 {
+            let n = 50 + rng.next_below(500) as usize;
+            let k = 1 + rng.next_below(32) as usize;
+            let scored: Vec<Scored> = (0..n)
+                .map(|i| Scored { id: i as u32, score: (rng.gaussian() as f32 * 10.0).round() })
+                .collect();
+            let mut flat = TopK::new(k);
+            for s in &scored {
+                flat.push(s.id, s.score);
+            }
+            // split into ragged fragments
+            let nfrag = 1 + rng.next_below(7) as usize;
+            let mut frags: Vec<Vec<Scored>> = vec![Vec::new(); nfrag];
+            for (i, s) in scored.into_iter().enumerate() {
+                frags[i % nfrag].push(s);
+            }
+            let merged = merge_topk(frags, k).into_sorted();
+            let want = flat.into_sorted();
+            assert_eq!(merged.len(), want.len(), "trial {trial}");
+            for (g, w) in merged.iter().zip(&want) {
+                assert_eq!(g.id, w.id, "trial {trial}");
+                assert_eq!(g.score, w.score, "trial {trial}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Sharding invariants: a `ShardedIndex` with `N` shards must be
+//! **bit-identical** (ids, f32 score bits, and `scanned` accounting) to
+//! the monolithic index — and to itself at any other shard count — on
+//! brute, IVF (shared coarse quantizer) and SRP-LSH (shared norm bound),
+//! for single queries and batches, through sparse updates and
+//! compaction, and with the SQ8 screen on. On top of the index parity,
+//! the samplers/estimators driven through a sharded index must be
+//! shard-count invariant too: the plain Algorithm 1/3 consume their RNG
+//! identically because the merged top set is identical, and the sharded
+//! sampler's id-keyed frozen Gumbel streams make the *sample* itself
+//! invariant by construction.
+
+use gmips::config::{Config, IndexConfig, IndexKind, ShardStrategy};
+use gmips::data::{self, synth, Dataset};
+use gmips::mips::brute::BruteForce;
+use gmips::mips::ivf::IvfIndex;
+use gmips::mips::lsh::SrpLsh;
+use gmips::mips::{MipsIndex, TopKResult};
+use gmips::prelude::{LazyGumbelSampler, PartitionEstimator, Sampler};
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::shard::{ShardedGumbelSampler, ShardedIndex};
+use gmips::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Bit-level result parity: same ids AND same f32 score bits.
+fn assert_parity(got: &TopKResult, want: &TopKResult, label: &str) {
+    assert_eq!(got.ids(), want.ids(), "{label}: ids diverge");
+    for (g, w) in got.items.iter().zip(&want.items) {
+        assert_eq!(g.score.to_bits(), w.score.to_bits(), "{label}: scores diverge");
+    }
+    assert_eq!(got.scanned, want.scanned, "{label}: scanned accounting diverges");
+}
+
+fn base_cfg(kind: IndexKind) -> IndexConfig {
+    let mut c = Config::default().index;
+    c.kind = kind;
+    c.n_clusters = 36;
+    c.n_probe = 7;
+    c.kmeans_iters = 5;
+    c.train_sample = 2000;
+    c.tables = 8;
+    c.bits = 7;
+    c
+}
+
+fn sharded(
+    ds: &Arc<Dataset>,
+    cfg: &IndexConfig,
+    shards: usize,
+    strategy: ShardStrategy,
+    backend: &Arc<dyn ScoreBackend>,
+) -> ShardedIndex {
+    let mut c = cfg.clone();
+    c.shards = shards;
+    c.shard_strategy = strategy;
+    ShardedIndex::build(ds, &c, backend.clone()).unwrap()
+}
+
+const STRATEGIES: [ShardStrategy; 2] = [ShardStrategy::RoundRobin, ShardStrategy::Contiguous];
+
+#[test]
+fn brute_shard_parity_single_and_batch() {
+    let ds = Arc::new(synth::imagenet_like(3000, 16, 25, 0.3, 1));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    for quant in [false, true] {
+        let mut cfg = base_cfg(IndexKind::Brute);
+        cfg.quant = quant;
+        let mono = if quant {
+            BruteForce::new(ds.clone(), backend.clone()).with_quant(cfg.quant_block, cfg.overscan)
+        } else {
+            BruteForce::new(ds.clone(), backend.clone())
+        };
+        let mut rng = Pcg64::new(2);
+        for strategy in STRATEGIES {
+            for shards in [1usize, 2, 5] {
+                let idx = sharded(&ds, &cfg, shards, strategy, &backend);
+                for k in [1usize, 17, 80] {
+                    let q = synth::random_theta(&ds, 0.05, &mut rng);
+                    let label = format!("brute quant={quant} {strategy:?} N={shards} k={k}");
+                    assert_parity(&idx.top_k(&q, k), &mono.top_k(&q, k), &label);
+                }
+                // batch path vs monolithic batch
+                let qs_owned: Vec<Vec<f32>> =
+                    (0..5).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+                let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+                let got = idx.top_k_batch(&qs, 23);
+                let want = mono.top_k_batch(&qs, 23);
+                for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                    let label = format!("brute batch quant={quant} {strategy:?} N={shards} q{j}");
+                    assert_parity(g, w, &label);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ivf_shard_parity_through_updates_and_compaction() {
+    let ds = Arc::new(synth::imagenet_like(4000, 16, 30, 0.25, 3));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    for quant in [false, true] {
+        let mut cfg = base_cfg(IndexKind::Ivf);
+        cfg.quant = quant;
+        for strategy in STRATEGIES {
+            // fresh pair per strategy: updates/compaction mutate state
+            let mut mono = IvfIndex::build(ds.clone(), &cfg, backend.clone()).unwrap();
+            let mut idx = sharded(&ds, &cfg, 4, strategy, &backend);
+            let mut rng = Pcg64::new(4);
+            let check = |idx: &ShardedIndex, mono: &IvfIndex, rng: &mut Pcg64, stage: &str| {
+                for k in [1usize, 20, 60] {
+                    let q = synth::random_theta(&ds, 0.05, rng);
+                    let label = format!("ivf quant={quant} {strategy:?} {stage} k={k}");
+                    assert_parity(&idx.top_k(&q, k), &mono.top_k(&q, k), &label);
+                }
+                let qs_owned: Vec<Vec<f32>> =
+                    (0..6).map(|_| synth::random_theta(&ds, 0.05, rng)).collect();
+                let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+                let got = idx.top_k_batch(&qs, 25);
+                let want = mono.top_k_batch(&qs, 25);
+                for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                    let label =
+                        format!("ivf batch quant={quant} {strategy:?} {stage} q{j}");
+                    assert_parity(g, w, &label);
+                }
+            };
+            check(&idx, &mono, &mut rng, "fresh");
+            // identical sparse updates on both indexes (global ids route
+            // through the shard map)
+            let mut urng = Pcg64::new(5);
+            for id in [9u32, 777, 2500, 3999] {
+                let v: Vec<f32> = (0..ds.d).map(|_| urng.gaussian() as f32 * 0.3).collect();
+                idx.update_row(id, &v);
+                mono.update_row(id, &v);
+            }
+            assert_eq!(idx.pending_len(), 4);
+            check(&idx, &mono, &mut rng, "pending");
+            idx.compact();
+            mono.compact();
+            assert_eq!(idx.pending_len(), 0);
+            check(&idx, &mono, &mut rng, "compacted");
+        }
+    }
+}
+
+#[test]
+fn lsh_shard_parity() {
+    let ds = Arc::new(synth::imagenet_like(3000, 12, 25, 0.3, 7));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    for quant in [false, true] {
+        let mut cfg = base_cfg(IndexKind::Lsh);
+        cfg.quant = quant;
+        let mono = SrpLsh::build(ds.clone(), &cfg, backend.clone()).unwrap();
+        let mut rng = Pcg64::new(8);
+        for strategy in STRATEGIES {
+            for shards in [2usize, 3] {
+                let idx = sharded(&ds, &cfg, shards, strategy, &backend);
+                for k in [1usize, 15, 50] {
+                    let q = synth::random_theta(&ds, 0.05, &mut rng);
+                    let label = format!("lsh quant={quant} {strategy:?} N={shards} k={k}");
+                    assert_parity(&idx.top_k(&q, k), &mono.top_k(&q, k), &label);
+                }
+                let qs_owned: Vec<Vec<f32>> =
+                    (0..4).map(|_| synth::random_theta(&ds, 0.05, &mut rng)).collect();
+                let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+                let got = idx.top_k_batch(&qs, 18);
+                let want = mono.top_k_batch(&qs, 18);
+                for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                    let label = format!("lsh batch quant={quant} {strategy:?} N={shards} q{j}");
+                    assert_parity(g, w, &label);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiered_shards_return_full_k_with_gap_bound() {
+    // tiered LSH makes no parity claim under sharding (the ladder walk
+    // stops on shard-local counts) — but it must stay a well-formed
+    // approximate index: k results, merged gap bound
+    let ds = Arc::new(synth::imagenet_like(2000, 12, 20, 0.3, 9));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut cfg = base_cfg(IndexKind::Tiered);
+    cfg.rungs = 6;
+    cfg.bits = 12;
+    let idx = sharded(&ds, &cfg, 3, ShardStrategy::RoundRobin, &backend);
+    let mut rng = Pcg64::new(10);
+    let q = synth::random_theta(&ds, 0.05, &mut rng);
+    for k in [1usize, 40, 200] {
+        let got = idx.top_k(&q, k);
+        assert_eq!(got.items.len(), k, "k={k}");
+    }
+    assert!(idx.gap_bound().unwrap() >= 0.0);
+}
+
+#[test]
+fn lazy_sampler_and_estimator_are_shard_count_invariant() {
+    // the plain Algorithm 1 sampler / Algorithm 3 estimator consume their
+    // sequential RNG identically over a sharded index because the merged
+    // top set is bit-identical — so shard=1 and shard=4 give the same
+    // samples and the same log Ẑ bits under the same seed
+    let ds = Arc::new(synth::imagenet_like(2500, 12, 20, 0.3, 11));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let cfg = base_cfg(IndexKind::Ivf);
+    let one: Arc<dyn MipsIndex> =
+        Arc::new(sharded(&ds, &cfg, 1, ShardStrategy::RoundRobin, &backend));
+    let four: Arc<dyn MipsIndex> =
+        Arc::new(sharded(&ds, &cfg, 4, ShardStrategy::Contiguous, &backend));
+    let mut qrng = Pcg64::new(12);
+    let q = synth::random_theta(&ds, 0.05, &mut qrng);
+
+    let s1 = LazyGumbelSampler::new(ds.clone(), one.clone(), backend.clone(), 60, 0.0);
+    let s4 = LazyGumbelSampler::new(ds.clone(), four.clone(), backend.clone(), 60, 0.0);
+    let mut r1 = Pcg64::new(13);
+    let mut r4 = Pcg64::new(13);
+    let a: Vec<u32> = s1.sample_many(&q, 50, &mut r1).iter().map(|o| o.id).collect();
+    let b: Vec<u32> = s4.sample_many(&q, 50, &mut r4).iter().map(|o| o.id).collect();
+    assert_eq!(a, b, "Algorithm 1 over sharded index must be shard-count invariant");
+
+    let e1 = PartitionEstimator::new(ds.clone(), one, backend.clone(), 50, 50);
+    let e4 = PartitionEstimator::new(ds.clone(), four, backend.clone(), 50, 50);
+    let mut r1 = Pcg64::new(14);
+    let mut r4 = Pcg64::new(14);
+    for i in 0..10 {
+        let za = e1.estimate(&q, &mut r1).log_z;
+        let zb = e4.estimate(&q, &mut r4).log_z;
+        assert_eq!(za.to_bits(), zb.to_bits(), "estimate {i}");
+    }
+}
+
+#[test]
+fn sharded_gumbel_sampler_bit_identical_across_shard_counts() {
+    // the tentpole guarantee: id-keyed frozen Gumbel streams make the
+    // sharded sampler's draws identical for shard=1 and shard=N, across
+    // strategies, round by round
+    let ds = Arc::new(synth::imagenet_like(2000, 12, 20, 0.3, 15));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let cfg = base_cfg(IndexKind::Brute);
+    let mut qrng = Pcg64::new(16);
+    let q = synth::random_theta(&ds, 0.05, &mut qrng);
+    let seed = 1234u64;
+    let reference: Vec<u32> = {
+        let idx = Arc::new(sharded(&ds, &cfg, 1, ShardStrategy::RoundRobin, &backend));
+        let s = ShardedGumbelSampler::new(ds.clone(), idx, backend.clone(), 45, 0.0, seed);
+        let sess = s.session(&q);
+        (0..300).map(|r| s.sample_at(&sess, &q, r).id).collect()
+    };
+    for strategy in STRATEGIES {
+        for shards in [2usize, 4, 7] {
+            let idx = Arc::new(sharded(&ds, &cfg, shards, strategy, &backend));
+            let s = ShardedGumbelSampler::new(ds.clone(), idx, backend.clone(), 45, 0.0, seed);
+            let sess = s.session(&q);
+            let got: Vec<u32> = (0..300).map(|r| s.sample_at(&sess, &q, r).id).collect();
+            assert_eq!(got, reference, "{strategy:?} N={shards}");
+        }
+    }
+}
+
+#[test]
+fn sharded_index_via_build_and_engine_paths() {
+    // end-to-end construction wiring: build_index dispatches on
+    // index.shards, and the engine serves every op over the sharded index
+    use gmips::coordinator::{Engine, Request, Response};
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.data.n = 2500;
+    cfg.data.d = 12;
+    cfg.index.kind = IndexKind::Ivf;
+    cfg.index.n_clusters = 30;
+    cfg.index.n_probe = 8;
+    cfg.index.kmeans_iters = 3;
+    cfg.index.train_sample = 1200;
+    cfg.index.shards = 4;
+    cfg.validate().unwrap();
+    let engine = Engine::from_config(&cfg, None).unwrap();
+    assert_eq!(engine.index.name(), "sharded");
+    assert!(engine.index.describe().contains("sharded[4×ivf"));
+    let mut rng = Pcg64::new(17);
+    let theta = data::random_theta(&engine.ds, 0.05, &mut rng);
+    match engine.handle(&Request::Sample { theta: theta.clone(), count: 3 }, &mut rng) {
+        Response::Samples { ids, .. } => assert_eq!(ids.len(), 3),
+        other => panic!("{other:?}"),
+    }
+    match engine.handle(&Request::TopK { theta: theta.clone(), k: 9 }, &mut rng) {
+        Response::TopK { ids, .. } => assert_eq!(ids.len(), 9),
+        other => panic!("{other:?}"),
+    }
+    match engine.handle(&Request::LogPartition { theta }, &mut rng) {
+        Response::LogPartition { log_z, .. } => assert!(log_z.is_finite()),
+        other => panic!("{other:?}"),
+    }
+}
