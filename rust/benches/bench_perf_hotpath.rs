@@ -8,8 +8,10 @@
 //! (single-query, 8 sequential queries, and one 8-query batch), SQ8
 //! quantized scan vs f32 scan (plus the end-to-end two-stage brute
 //! top-k) on a ≥100k × 128 dataset, sharded fan-out scan at 1/4/8
-//! shards on the same dataset (`shard_scan_speedup`), lazy tail draw,
-//! full Alg-1 sample, Alg-3 estimate.
+//! shards on the same dataset (`shard_scan_speedup`), sharded
+//! Algorithm-4 expect-features vs monolithic on the same dataset
+//! (`sharded_expect_speedup`), lazy tail draw, full Alg-1 sample,
+//! Alg-3 estimate.
 //!
 //! Besides the banner table, results are written machine-readably to
 //! `BENCH_perf_hotpath.json` (stage name, mean seconds, iters, GFLOP/s
@@ -315,6 +317,53 @@ fn main() {
         );
     }
 
+    // ---- sharded Algorithm 4: monolithic vs 4/8-shard fan-out (≥100k × 128) ----
+    // acceptance: the per-shard decomposed expect-features (head fan-out
+    // + keyed tails + weighted-LSE merge) must beat the monolithic
+    // Algorithm 4 wall-clock on a scan-dominated dataset
+    let sharded_expect_speedup;
+    {
+        use gmips::estimator::expectation::ExpectationEstimator;
+        use gmips::mips::brute::BruteForce;
+        use gmips::shard::{ShardedExpectationEstimator, ShardedIndex};
+        let kq = (qn as f64).sqrt().round() as usize;
+        let mut erng = Pcg64::new(29);
+        let theta = data::random_theta(&qds, cfg.data.temperature, &mut erng);
+        let mono_idx: Arc<dyn MipsIndex> =
+            Arc::new(BruteForce::new(qds.clone(), backend.clone()));
+        let mono_est =
+            ExpectationEstimator::new(qds.clone(), mono_idx, backend.clone(), kq, kq);
+        let s = bench.run(&format!("Alg4 expect_features monolithic {qn}x{qd}"), || {
+            std::hint::black_box(mono_est.expect_features(&theta, &mut erng));
+        });
+        let mono_mean = s.mean_s;
+        record(&mut results, s, None);
+        let mut means = Vec::new();
+        for shards in [4usize, 8] {
+            let mut icfg = cfg.index.clone();
+            icfg.kind = gmips::config::IndexKind::Brute;
+            icfg.shards = shards;
+            let idx = Arc::new(ShardedIndex::build(&qds, &icfg, backend.clone()).unwrap());
+            let est =
+                ShardedExpectationEstimator::new(qds.clone(), idx, backend.clone(), kq, kq, 31);
+            let s = bench.run(
+                &format!("Alg4 expect_features sharded N={shards} {qn}x{qd}"),
+                || {
+                    std::hint::black_box(est.expect_features(&theta));
+                },
+            );
+            means.push(s.mean_s);
+            record(&mut results, s, None);
+        }
+        sharded_expect_speedup = mono_mean / means[0].min(means[1]);
+        println!(
+            "sharded expect_features speedup vs monolithic: 4sh {:.2}x, 8sh {:.2}x (recorded {:.2}x)",
+            mono_mean / means[0],
+            mono_mean / means[1],
+            sharded_expect_speedup
+        );
+    }
+
     // ---- lazy tail draw ---------------------------------------------------------
     let exclude: FxHashSet<u32> = (0..k as u32).collect();
     let b = gumbel::fixed_cutoff(ds.n, k);
@@ -396,6 +445,7 @@ fn main() {
         ("batch_queries", Json::num(NQ as f64)),
         ("quant_scan_speedup", Json::num(quant_speedup)),
         ("shard_scan_speedup", Json::num(shard_scan_speedup)),
+        ("sharded_expect_speedup", Json::num(sharded_expect_speedup)),
         ("stages", Json::Arr(stages)),
     ]);
     match std::fs::write("BENCH_perf_hotpath.json", doc.to_string()) {

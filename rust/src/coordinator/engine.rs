@@ -7,13 +7,10 @@
 use super::api::{Request, Response};
 use crate::config::Config;
 use crate::data::{self, Dataset};
+use crate::dispatch::{self, ExpectationDispatch, PartitionDispatch, SamplerDispatch};
 use crate::error::Result;
-use crate::estimator::expectation::ExpectationEstimator;
-use crate::estimator::partition::PartitionEstimator;
-use crate::mips::{self, brute::BruteForce, MipsIndex};
-use crate::sampler::lazy_gumbel::LazyGumbelSampler;
+use crate::mips::{self, brute::BruteForce, BuiltIndex, MipsIndex};
 use crate::sampler::tv_bound;
-use crate::sampler::Sampler;
 use crate::scorer::{NativeScorer, ScoreBackend};
 use crate::util::rng::Pcg64;
 use crate::util::timing::{LatencyHistogram, Stopwatch};
@@ -47,9 +44,9 @@ pub struct Engine {
     pub ds: Arc<Dataset>,
     pub index: Arc<dyn MipsIndex>,
     pub backend: Arc<dyn ScoreBackend>,
-    pub sampler: LazyGumbelSampler,
-    pub partition: PartitionEstimator,
-    pub expectation: ExpectationEstimator,
+    pub sampler: SamplerDispatch,
+    pub partition: PartitionDispatch,
+    pub expectation: ExpectationDispatch,
     pub metrics: EngineMetrics,
     pub config: Config,
 }
@@ -62,46 +59,31 @@ impl Engine {
     pub fn from_config(cfg: &Config, backend: Option<Arc<dyn ScoreBackend>>) -> Result<Engine> {
         let backend = backend.unwrap_or_else(|| Arc::new(NativeScorer));
         let ds = Arc::new(data::load_or_generate(&cfg.data));
-        let index = mips::build_index(&ds, &cfg.index, backend.clone())?;
+        let index = mips::build_index_typed(&ds, &cfg.index, backend.clone())?;
         Ok(Self::from_parts(cfg.clone(), ds, index, backend))
     }
 
     /// Assemble from prebuilt parts (tests, benches, examples).
+    ///
+    /// `index` accepts anything convertible into a
+    /// [`BuiltIndex`]: an `Arc<dyn MipsIndex>` gets the monolithic
+    /// sampler/estimator stack, an `Arc<ShardedIndex>` (or the
+    /// [`mips::build_index_typed`] result) routes sampling, partition
+    /// estimation and feature expectation through the sharded
+    /// implementations — a server configured with `index.shards > 1` no
+    /// longer silently falls back to the monolithic stack.
     pub fn from_parts(
         config: Config,
         ds: Arc<Dataset>,
-        index: Arc<dyn MipsIndex>,
+        index: impl Into<BuiltIndex>,
         backend: Arc<dyn ScoreBackend>,
     ) -> Engine {
-        // honour the index's measured gap if larger than the configured one
-        let gap_c = config
-            .sampler
-            .gap_c
-            .max(index.gap_bound().unwrap_or(0.0));
-        let sampler = LazyGumbelSampler::new(
-            ds.clone(),
-            index.clone(),
-            backend.clone(),
-            config.sampler_k(),
-            gap_c,
-        );
-        let partition = PartitionEstimator::new(
-            ds.clone(),
-            index.clone(),
-            backend.clone(),
-            config.estimator_k(),
-            config.estimator_l(),
-        );
-        let expectation = ExpectationEstimator::new(
-            ds.clone(),
-            index.clone(),
-            backend.clone(),
-            config.estimator_k(),
-            config.estimator_l(),
-        );
+        let built = index.into();
+        let (sampler, partition, expectation) =
+            dispatch::build_stack(&config, &ds, &built, &backend);
         Engine {
             ds,
-            index,
+            index: built.as_dyn(),
             backend,
             sampler,
             partition,
@@ -166,7 +148,7 @@ impl Engine {
                 if theta.len() != self.ds.d {
                     return Self::dim_error(theta.len(), self.ds.d);
                 }
-                let top = self.index.top_k(theta, self.sampler.k);
+                let top = self.index.top_k(theta, self.sampler.k());
                 let brute = BruteForce::new(self.ds.clone(), self.backend.clone());
                 let mut all = vec![0f32; self.ds.n];
                 brute.all_scores(theta, &mut all);
@@ -176,11 +158,14 @@ impl Engine {
             }
             Request::Stats => Response::Stats {
                 text: format!(
-                    "{}\nbackend={} simd={} k={} \n{}",
+                    "{}\nbackend={} simd={} k={} sampler={} partition={} expectation={}\n{}",
                     self.index.describe(),
                     self.backend.name(),
                     crate::linalg::simd::kernel().name(),
-                    self.sampler.k,
+                    self.sampler.k(),
+                    self.sampler.name(),
+                    self.partition.name(),
+                    self.expectation.name(),
                     self.metrics.summary()
                 ),
             },

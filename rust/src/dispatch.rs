@@ -1,0 +1,222 @@
+//! Monolithic ↔ sharded **enum dispatch** for the sampler/estimator
+//! stack.
+//!
+//! The engine (and the learner's Algorithm 4 gradient) must route each
+//! operation onto the implementation that matches the built index:
+//!
+//! | op                | monolithic index            | [`ShardedIndex`](crate::shard::ShardedIndex) |
+//! |-------------------|-----------------------------|-----------------------------------|
+//! | sample            | [`LazyGumbelSampler`]       | [`ShardedGumbelSampler`]          |
+//! | log-partition     | [`PartitionEstimator`]      | [`ShardedPartitionEstimator`]     |
+//! | expect-features   | [`ExpectationEstimator`]    | [`ShardedExpectationEstimator`]   |
+//!
+//! Historically the engine always built the left column, so a server
+//! configured with `index.shards > 1` still got its *scans* sharded but
+//! silently lost the sharded semantics — replayable id/shard-keyed
+//! streams, per-shard decomposed tail draws, log-sum-exp merges. These
+//! enums make the routing explicit and cheap (one match per request; no
+//! trait-object indirection on the estimator hot paths), and
+//! [`build_stack`] is the single constructor both the engine and the
+//! learner share.
+//!
+//! The sharded variants draw all randomness from frozen streams keyed by
+//! `(seed, round, salt, idx)` ([`crate::util::rng::Pcg64::keyed`]) — the
+//! `rng` argument threaded through the dispatch methods is consumed only
+//! by the monolithic variants.
+
+use crate::config::Config;
+use crate::data::Dataset;
+use crate::estimator::expectation::{ExpectationEstimator, FeatureExpectation};
+use crate::estimator::partition::{PartitionEstimate, PartitionEstimator};
+use crate::mips::BuiltIndex;
+use crate::sampler::lazy_gumbel::LazyGumbelSampler;
+use crate::sampler::{SampleOutcome, Sampler};
+use crate::scorer::ScoreBackend;
+use crate::shard::{ShardedExpectationEstimator, ShardedGumbelSampler, ShardedPartitionEstimator};
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Algorithm 1 behind either implementation.
+pub enum SamplerDispatch {
+    Mono(LazyGumbelSampler),
+    Sharded(ShardedGumbelSampler),
+}
+
+impl SamplerDispatch {
+    /// Top-set size k.
+    pub fn k(&self) -> usize {
+        match self {
+            SamplerDispatch::Mono(s) => s.k,
+            SamplerDispatch::Sharded(s) => s.k,
+        }
+    }
+
+    /// Implementation name for stats/metrics (`lazy-gumbel` /
+    /// `sharded-gumbel`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerDispatch::Mono(s) => s.name(),
+            SamplerDispatch::Sharded(s) => s.name(),
+        }
+    }
+
+    /// Draw `count` samples for one θ (one MIPS retrieval per θ).
+    pub fn sample_many(&self, q: &[f32], count: usize, rng: &mut Pcg64) -> Vec<SampleOutcome> {
+        match self {
+            SamplerDispatch::Mono(s) => s.sample_many(q, count, rng),
+            SamplerDispatch::Sharded(s) => s.sample_many(q, count, rng),
+        }
+    }
+
+    /// Batched draws: `counts[i]` samples for `qs[i]`, one batched
+    /// retrieval for the whole batch.
+    pub fn sample_batch(
+        &self,
+        qs: &[&[f32]],
+        counts: &[usize],
+        rng: &mut Pcg64,
+    ) -> Vec<Vec<SampleOutcome>> {
+        match self {
+            SamplerDispatch::Mono(s) => s.sample_batch(qs, counts, rng),
+            SamplerDispatch::Sharded(s) => s.sample_batch(qs, counts),
+        }
+    }
+}
+
+/// Algorithm 3 behind either implementation.
+pub enum PartitionDispatch {
+    Mono(PartitionEstimator),
+    Sharded(ShardedPartitionEstimator),
+}
+
+impl PartitionDispatch {
+    /// Implementation name for stats/metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionDispatch::Mono(_) => "alg3",
+            PartitionDispatch::Sharded(_) => "sharded-alg3",
+        }
+    }
+
+    /// One `log Ẑ` estimate.
+    pub fn estimate(&self, q: &[f32], rng: &mut Pcg64) -> PartitionEstimate {
+        match self {
+            PartitionDispatch::Mono(e) => e.estimate(q, rng),
+            PartitionDispatch::Sharded(e) => e.estimate(q),
+        }
+    }
+
+    /// Batched estimates sharing one retrieval/fan-out.
+    pub fn estimate_batch(&self, qs: &[&[f32]], rng: &mut Pcg64) -> Vec<PartitionEstimate> {
+        match self {
+            PartitionDispatch::Mono(e) => e.estimate_batch(qs, rng),
+            PartitionDispatch::Sharded(e) => e.estimate_batch(qs),
+        }
+    }
+}
+
+/// Algorithm 4 behind either implementation.
+pub enum ExpectationDispatch {
+    Mono(ExpectationEstimator),
+    Sharded(ShardedExpectationEstimator),
+}
+
+impl ExpectationDispatch {
+    /// Implementation name for stats/metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExpectationDispatch::Mono(_) => "alg4",
+            ExpectationDispatch::Sharded(_) => "sharded-alg4",
+        }
+    }
+
+    /// One `E_θ[φ]` estimate (the MLE gradient's model term).
+    pub fn expect_features(&self, q: &[f32], rng: &mut Pcg64) -> FeatureExpectation {
+        match self {
+            ExpectationDispatch::Mono(e) => e.expect_features(q, rng),
+            ExpectationDispatch::Sharded(e) => e.expect_features(q),
+        }
+    }
+
+    /// Batched estimates sharing one retrieval/fan-out.
+    pub fn expect_features_batch(
+        &self,
+        qs: &[&[f32]],
+        rng: &mut Pcg64,
+    ) -> Vec<FeatureExpectation> {
+        match self {
+            ExpectationDispatch::Mono(e) => e.expect_features_batch(qs, rng),
+            ExpectationDispatch::Sharded(e) => e.expect_features_batch(qs),
+        }
+    }
+}
+
+/// Build the sampler/partition/expectation stack matching the built
+/// index: monolithic implementations over a [`BuiltIndex::Mono`],
+/// sharded ones over a [`BuiltIndex::Sharded`] (seeded from
+/// `config.index.seed`; the three subsystems use distinct stream salts,
+/// so one seed is safe to share).
+pub fn build_stack(
+    config: &Config,
+    ds: &Arc<Dataset>,
+    index: &BuiltIndex,
+    backend: &Arc<dyn ScoreBackend>,
+) -> (SamplerDispatch, PartitionDispatch, ExpectationDispatch) {
+    // honour the index's measured gap if larger than the configured one
+    let gap_c = config.sampler.gap_c.max(index.as_dyn().gap_bound().unwrap_or(0.0));
+    let (k, l) = (config.estimator_k(), config.estimator_l());
+    match index {
+        BuiltIndex::Mono(idx) => (
+            SamplerDispatch::Mono(LazyGumbelSampler::new(
+                ds.clone(),
+                idx.clone(),
+                backend.clone(),
+                config.sampler_k(),
+                gap_c,
+            )),
+            PartitionDispatch::Mono(PartitionEstimator::new(
+                ds.clone(),
+                idx.clone(),
+                backend.clone(),
+                k,
+                l,
+            )),
+            ExpectationDispatch::Mono(ExpectationEstimator::new(
+                ds.clone(),
+                idx.clone(),
+                backend.clone(),
+                k,
+                l,
+            )),
+        ),
+        BuiltIndex::Sharded(idx) => {
+            let seed = config.index.seed;
+            (
+                SamplerDispatch::Sharded(ShardedGumbelSampler::new(
+                    ds.clone(),
+                    idx.clone(),
+                    backend.clone(),
+                    config.sampler_k(),
+                    gap_c,
+                    seed,
+                )),
+                PartitionDispatch::Sharded(ShardedPartitionEstimator::new(
+                    ds.clone(),
+                    idx.clone(),
+                    backend.clone(),
+                    k,
+                    l,
+                    seed,
+                )),
+                ExpectationDispatch::Sharded(ShardedExpectationEstimator::new(
+                    ds.clone(),
+                    idx.clone(),
+                    backend.clone(),
+                    k,
+                    l,
+                    seed,
+                )),
+            )
+        }
+    }
+}

@@ -55,11 +55,10 @@ impl ExpectationEstimator {
 
     fn draw_tail(&self, exclude: &FxHashSet<u32>, rng: &mut Pcg64) -> Vec<u32> {
         let n = self.ds.n;
-        let k = exclude.len();
-        if k >= n {
+        let l = super::effective_tail_len(self.l, n, exclude.len());
+        if l == 0 {
             return Vec::new();
         }
-        let l = self.l.min(8 * (n - k)).max(1);
         rng.with_replacement_excluding(n as u64, l, exclude)
     }
 
@@ -175,21 +174,7 @@ impl ExpectationEstimator {
     }
 
     fn score_ids(&self, ids: &[u32], q: &[f32]) -> Vec<f32> {
-        if ids.is_empty() {
-            return Vec::new();
-        }
-        let d = self.ds.d;
-        if self.backend.prefers_gather() {
-            let mut rows = vec![0f32; ids.len() * d];
-            self.ds.gather(ids, &mut rows);
-            let mut out = vec![0f32; ids.len()];
-            self.backend.scores(&rows, d, q, &mut out);
-            out
-        } else {
-            ids.iter()
-                .map(|&id| crate::linalg::dot(self.ds.row(id as usize), q))
-                .collect()
-        }
+        crate::scorer::score_ids(&self.ds, self.backend.as_ref(), ids, q)
     }
 }
 

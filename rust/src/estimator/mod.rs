@@ -12,6 +12,27 @@
 pub mod expectation;
 pub mod partition;
 
+/// Effective tail-sample size for Algorithms 3 **and** 4: the configured
+/// `l` capped at the tail population `n − k`, floored at 1 whenever any
+/// tail row exists, and 0 when the head already covers everything.
+///
+/// This is the one documented capping rule. The tail is drawn *with
+/// replacement*, so `l > n − k` is well-defined — but the two estimators
+/// share a single `(S, T)` draw contract (the `log Ẑ` returned by
+/// Algorithm 4 must be a valid Algorithm 3 estimate of the same `Z`), so
+/// they must agree on the realized `|T|` for any configured `l`.
+/// Historically Algorithm 3 capped at `n − k` while Algorithm 4 capped at
+/// `8(n − k)`, silently breaking that contract for large `l`; the tighter
+/// cap wins because past `n − k` extra with-replacement draws add tail
+/// *scoring* cost linearly while the variance of the tail mean is already
+/// dominated by the population size.
+pub fn effective_tail_len(l: usize, n: usize, k: usize) -> usize {
+    if k >= n {
+        return 0;
+    }
+    l.min(n - k).max(1)
+}
+
 /// Work accounting for one estimation query.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EstimateWork {
@@ -19,4 +40,20 @@ pub struct EstimateWork {
     pub scanned: usize,
     pub k: usize,
     pub l: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::effective_tail_len;
+
+    #[test]
+    fn tail_cap_rule() {
+        // capped at the tail population, floored at 1, zero when k ≥ n
+        assert_eq!(effective_tail_len(50, 100, 20), 50);
+        assert_eq!(effective_tail_len(500, 100, 20), 80);
+        assert_eq!(effective_tail_len(0, 100, 20), 1);
+        assert_eq!(effective_tail_len(10, 100, 100), 0);
+        assert_eq!(effective_tail_len(10, 100, 150), 0);
+        assert_eq!(effective_tail_len(1, 2, 1), 1);
+    }
 }

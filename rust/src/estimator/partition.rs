@@ -63,29 +63,19 @@ impl PartitionEstimator {
         let k = top.items.len();
         debug_assert!(k > 0);
 
-        // tail sample T (uniform, with replacement, excluding S)
+        // tail sample T (uniform, with replacement, excluding S) — sized
+        // by the rule shared with Algorithm 4
         let exclude: FxHashSet<u32> = top.items.iter().map(|s| s.id).collect();
-        let l = self.l.min(n.saturating_sub(k)).max(1);
-        let t_ids = if k < n {
+        let l = super::effective_tail_len(self.l, n, k);
+        let t_ids = if l > 0 {
             rng.with_replacement_excluding(n as u64, l, &exclude)
         } else {
             Vec::new()
         };
 
-        // score T (gather-free on backends that score rows in place)
-        let d = self.ds.d;
-        let mut t_scores = vec![0f32; t_ids.len()];
-        if !t_ids.is_empty() {
-            if self.backend.prefers_gather() {
-                let mut rows = vec![0f32; t_ids.len() * d];
-                self.ds.gather(&t_ids, &mut rows);
-                self.backend.scores(&rows, d, q, &mut t_scores);
-            } else {
-                for (o, &id) in t_scores.iter_mut().zip(&t_ids) {
-                    *o = crate::linalg::dot(self.ds.row(id as usize), q);
-                }
-            }
-        }
+        // score T via the shared fast path (gather-free on backends
+        // that score rows in place)
+        let t_scores = crate::scorer::score_ids(&self.ds, self.backend.as_ref(), &t_ids, q);
 
         // log-space combination relative to the global head max
         let mut head = MaxSumExp::default();

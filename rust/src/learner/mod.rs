@@ -20,11 +20,13 @@
 
 use crate::config::LearnConfig;
 use crate::data::Dataset;
+use crate::dispatch::ExpectationDispatch;
 use crate::error::Result;
 use crate::estimator::expectation::{exact_feature_expectation, ExpectationEstimator};
 use crate::linalg;
-use crate::mips::MipsIndex;
+use crate::mips::{BuiltIndex, MipsIndex};
 use crate::scorer::ScoreBackend;
+use crate::shard::{ShardedExpectationEstimator, ShardedIndex};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 use std::time::Instant;
@@ -74,6 +76,9 @@ pub struct LearnResult {
 pub struct Learner {
     ds: Arc<Dataset>,
     index: Arc<dyn MipsIndex>,
+    /// the concrete sharded index when training over one —
+    /// [`GradMethod::Amortized`] then runs the sharded Algorithm 4
+    sharded: Option<Arc<ShardedIndex>>,
     backend: Arc<dyn ScoreBackend>,
     cfg: LearnConfig,
     /// training subset D (ids into ds)
@@ -85,17 +90,32 @@ pub struct Learner {
 impl Learner {
     /// Pick `D` as `train_size` members of one latent cluster (the
     /// "water images" analog), or uniformly if the dataset has no labels.
+    ///
+    /// `index` accepts anything convertible into a [`BuiltIndex`]; pass
+    /// the [`crate::mips::build_index_typed`] result (or an
+    /// `Arc<ShardedIndex>`) so sharded MLE training routes its
+    /// Algorithm 4 gradients through the sharded estimator — a plain
+    /// `Arc<dyn MipsIndex>` trains with the monolithic one.
     pub fn new(
         ds: Arc<Dataset>,
-        index: Arc<dyn MipsIndex>,
+        index: impl Into<BuiltIndex>,
         backend: Arc<dyn ScoreBackend>,
         cfg: LearnConfig,
     ) -> Result<Self> {
+        let built = index.into();
         let mut rng = Pcg64::new(cfg.seed);
         let train_ids = pick_coherent_subset(&ds, cfg.train_size, &mut rng);
         let mut data_mean = vec![0f32; ds.d];
         linalg::mean_rows(&ds.data, ds.d, &train_ids, &mut data_mean);
-        Ok(Learner { ds, index, backend, cfg, train_ids, data_mean })
+        Ok(Learner {
+            ds,
+            index: built.as_dyn(),
+            sharded: built.sharded().cloned(),
+            backend,
+            cfg,
+            train_ids,
+            data_mean,
+        })
     }
 
     /// Exact mean log-likelihood of D under θ (evaluation; full scan).
@@ -121,13 +141,31 @@ impl Learner {
         let l_ours = ((self.cfg.l_ratio * k_ours as f64).round() as usize).max(1);
         let k_topk = ((self.cfg.topk_mult * sqrt_n).round() as usize).clamp(1, n);
 
-        let est_ours = ExpectationEstimator::new(
-            self.ds.clone(),
-            self.index.clone(),
-            self.backend.clone(),
-            k_ours,
-            l_ours,
-        );
+        // "ours" routes through the sharded Algorithm 4 when training
+        // over a sharded index (keyed per-shard tail draws, weighted-LSE
+        // merge); the top-k baseline is head-only, so the plain estimator
+        // over the (possibly sharded) index is already exact for it
+        let est_ours = match &self.sharded {
+            // fold the caller's rng into the stream seed so `rng` drives
+            // the sharded estimator exactly as documented — distinct rng
+            // states give distinct (still replayable) keyed tail draws,
+            // instead of every run replaying cfg.seed's rounds 0, 1, …
+            Some(idx) => ExpectationDispatch::Sharded(ShardedExpectationEstimator::new(
+                self.ds.clone(),
+                idx.clone(),
+                self.backend.clone(),
+                k_ours,
+                l_ours,
+                self.cfg.seed ^ rng.next_u64(),
+            )),
+            None => ExpectationDispatch::Mono(ExpectationEstimator::new(
+                self.ds.clone(),
+                self.index.clone(),
+                self.backend.clone(),
+                k_ours,
+                l_ours,
+            )),
+        };
         let est_topk = ExpectationEstimator::new(
             self.ds.clone(),
             self.index.clone(),

@@ -45,8 +45,12 @@
 //! parallel fan-out and k-way merge — bit-identical to the monolithic
 //! index on brute/IVF/LSH (shared IVF coarse quantizer, shared LSH norm
 //! bound) — with sharded sampling (per-shard Gumbel maxima merged by
-//! argmax under id-keyed frozen streams) and sharded partition
-//! estimation (per-shard partials merged by log-sum-exp).
+//! argmax under id-keyed frozen streams), sharded partition estimation
+//! (per-shard partials merged by log-sum-exp), and sharded Algorithm-4
+//! expectation estimation (per-shard `(log Ẑ_s, μ̂_s)` fragments merged
+//! by weighted log-sum-exp). The [`dispatch`] enums route the engine and
+//! the learner onto whichever implementation matches the built index, so
+//! `index.shards > 1` serves every operation through the sharded stack.
 //!
 //! ## Quickstart
 //!
@@ -76,6 +80,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dispatch;
 pub mod error;
 pub mod estimator;
 pub mod eval;
@@ -99,13 +104,16 @@ pub mod prelude {
     pub use crate::estimator::expectation::ExpectationEstimator;
     pub use crate::estimator::partition::PartitionEstimator;
     pub use crate::learner::{GradMethod, Learner};
-    pub use crate::mips::{build_index, MipsIndex};
+    pub use crate::mips::{build_index, build_index_typed, BuiltIndex, MipsIndex};
     pub use crate::sampler::exact::ExactSampler;
     pub use crate::sampler::fixed_b::FixedBSampler;
     pub use crate::sampler::lazy_gumbel::LazyGumbelSampler;
     pub use crate::sampler::Sampler;
     pub use crate::scorer::{NativeScorer, ScoreBackend};
-    pub use crate::shard::{ShardedGumbelSampler, ShardedIndex, ShardedPartitionEstimator};
+    pub use crate::shard::{
+        ShardedExpectationEstimator, ShardedGumbelSampler, ShardedIndex,
+        ShardedPartitionEstimator,
+    };
     pub use crate::util::rng::Pcg64;
     pub use crate::walk::RandomWalk;
 }

@@ -178,7 +178,9 @@ fn cmd_learn(args: &Args) -> Result<()> {
     cfg.learn.iters = args.get_usize("iters", cfg.learn.iters)?;
     let backend = make_backend(&cfg)?;
     let ds = Arc::new(data::load_or_generate(&cfg.data));
-    let index = gmips::mips::build_index(&ds, &cfg.index, backend.clone())?;
+    // typed build so `index.shards > 1` trains through the sharded
+    // Algorithm 4 estimator
+    let index = gmips::mips::build_index_typed(&ds, &cfg.index, backend.clone())?;
     let learner = Learner::new(ds, index, backend, cfg.learn.clone())?;
     let mut rng = Pcg64::new(cfg.learn.seed);
     for method in [GradMethod::Exact, GradMethod::TopK, GradMethod::Amortized] {

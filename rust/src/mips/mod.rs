@@ -86,19 +86,69 @@ pub trait MipsIndex: Send + Sync {
     }
 }
 
-/// Build the configured index over a dataset. With `index.shards > 1`
-/// the configured kind becomes the *per-shard* index behind a
-/// data-parallel [`crate::shard::ShardedIndex`] (fan-out/merge,
-/// bit-identical to the unsharded index on brute/IVF/LSH).
-pub fn build_index(
+/// A freshly built index with the concrete sharded type preserved.
+///
+/// `Arc<dyn MipsIndex>` erases whether the index is a
+/// [`crate::shard::ShardedIndex`], which is exactly the information the
+/// engine and learner need to route sampling/estimation onto the sharded
+/// sampler/estimator implementations (keyed replayable streams,
+/// per-shard decomposed draws) instead of silently falling back to the
+/// monolithic ones. Build through [`build_index_typed`] and erase with
+/// [`as_dyn`](Self::as_dyn) only where a plain index is all that's
+/// needed.
+#[derive(Clone)]
+pub enum BuiltIndex {
+    Mono(Arc<dyn MipsIndex>),
+    Sharded(Arc<crate::shard::ShardedIndex>),
+}
+
+impl BuiltIndex {
+    /// The index as a plain trait object (for `top_k` and friends).
+    pub fn as_dyn(&self) -> Arc<dyn MipsIndex> {
+        match self {
+            BuiltIndex::Mono(i) => i.clone(),
+            // Arc<ShardedIndex> unsize-coerces against the return type
+            BuiltIndex::Sharded(i) => i.clone(),
+        }
+    }
+
+    /// The concrete sharded index, when this is one.
+    pub fn sharded(&self) -> Option<&Arc<crate::shard::ShardedIndex>> {
+        match self {
+            BuiltIndex::Mono(_) => None,
+            BuiltIndex::Sharded(i) => Some(i),
+        }
+    }
+}
+
+impl From<Arc<dyn MipsIndex>> for BuiltIndex {
+    fn from(i: Arc<dyn MipsIndex>) -> Self {
+        BuiltIndex::Mono(i)
+    }
+}
+
+impl From<Arc<crate::shard::ShardedIndex>> for BuiltIndex {
+    fn from(i: Arc<crate::shard::ShardedIndex>) -> Self {
+        BuiltIndex::Sharded(i)
+    }
+}
+
+/// Build the configured index over a dataset, preserving the concrete
+/// sharded type. With `index.shards > 1` the configured kind becomes the
+/// *per-shard* index behind a data-parallel
+/// [`crate::shard::ShardedIndex`] (fan-out/merge, bit-identical to the
+/// unsharded index on brute/IVF/LSH).
+pub fn build_index_typed(
     ds: &Arc<Dataset>,
     cfg: &IndexConfig,
     backend: Arc<dyn ScoreBackend>,
-) -> Result<Arc<dyn MipsIndex>> {
+) -> Result<BuiltIndex> {
     if cfg.shards > 1 {
-        return Ok(Arc::new(crate::shard::ShardedIndex::build(ds, cfg, backend)?));
+        return Ok(BuiltIndex::Sharded(Arc::new(crate::shard::ShardedIndex::build(
+            ds, cfg, backend,
+        )?)));
     }
-    Ok(match cfg.kind {
+    Ok(BuiltIndex::Mono(match cfg.kind {
         IndexKind::Brute => {
             let mut idx = brute::BruteForce::new(ds.clone(), backend);
             if cfg.quant {
@@ -109,7 +159,17 @@ pub fn build_index(
         IndexKind::Ivf => Arc::new(ivf::IvfIndex::build(ds.clone(), cfg, backend)?),
         IndexKind::Lsh => Arc::new(lsh::SrpLsh::build(ds.clone(), cfg, backend)?),
         IndexKind::Tiered => Arc::new(tiered::TieredLsh::build(ds.clone(), cfg, backend)?),
-    })
+    }))
+}
+
+/// [`build_index_typed`] with the sharded type erased — the convenience
+/// form for callers that only ever call [`MipsIndex`] methods.
+pub fn build_index(
+    ds: &Arc<Dataset>,
+    cfg: &IndexConfig,
+    backend: Arc<dyn ScoreBackend>,
+) -> Result<Arc<dyn MipsIndex>> {
+    Ok(build_index_typed(ds, cfg, backend)?.as_dyn())
 }
 
 /// Exact top-k over an explicit candidate id list: gather candidate rows

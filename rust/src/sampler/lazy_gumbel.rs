@@ -44,22 +44,12 @@ impl LazyGumbelSampler {
         LazyGumbelSampler { ds, index, backend, k, gap_c }
     }
 
-    /// Score a set of rows by id — gather-free fast path for the native
-    /// backend (§Perf iteration 1: the gather+block-score path copied
-    /// `m·d` floats per draw; per-row dots read the dataset in place).
+    /// Score a set of rows by id via the shared
+    /// [`crate::scorer::score_ids`] fast path (§Perf iteration 1: the
+    /// gather+block-score path copied `m·d` floats per draw; per-row
+    /// dots read the dataset in place).
     fn score_ids(&self, ids: &[u32], q: &[f32]) -> Vec<f32> {
-        let d = self.ds.d;
-        if self.backend.prefers_gather() {
-            let mut rows = vec![0f32; ids.len() * d];
-            self.ds.gather(ids, &mut rows);
-            let mut out = vec![0f32; ids.len()];
-            self.backend.scores(&rows, d, q, &mut out);
-            out
-        } else {
-            ids.iter()
-                .map(|&id| crate::linalg::dot(self.ds.row(id as usize), q))
-                .collect()
-        }
+        crate::scorer::score_ids(&self.ds, self.backend.as_ref(), ids, q)
     }
 
     /// Open a per-θ sampling session: one MIPS retrieval + one exclusion

@@ -24,7 +24,28 @@
 //! memory once per query batch — the per-query and batched paths produce
 //! bit-identical scores by construction.
 
+use crate::data::Dataset;
 use crate::linalg::{self, simd, MaxSumExp};
+
+/// Score a scattered id list against `q` — the one shared tail-scoring
+/// fast path for every sampler/estimator: gather-free per-row dots on
+/// backends that score rows in place (native), one gather + block scan
+/// on backends that prefer staged rows (PJRT).
+pub fn score_ids(ds: &Dataset, backend: &dyn ScoreBackend, ids: &[u32], q: &[f32]) -> Vec<f32> {
+    if ids.is_empty() {
+        return Vec::new();
+    }
+    let d = ds.d;
+    if backend.prefers_gather() {
+        let mut rows = vec![0f32; ids.len() * d];
+        ds.gather(ids, &mut rows);
+        let mut out = vec![0f32; ids.len()];
+        backend.scores(&rows, d, q, &mut out);
+        out
+    } else {
+        ids.iter().map(|&id| linalg::dot(ds.row(id as usize), q)).collect()
+    }
+}
 
 /// A backend that can score row blocks against one query or a batch.
 pub trait ScoreBackend: Send + Sync {

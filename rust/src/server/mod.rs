@@ -69,11 +69,41 @@ impl Server {
 
 fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
+    // A blocking `reader.lines()` loop would pin this thread inside
+    // `read` for as long as the client keeps the connection open but
+    // idle — `serve()`'s final `join` would then never return after a
+    // shutdown requested on *another* connection. Poll with a short read
+    // timeout instead so the stop flag is honoured promptly.
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(25)))
+        .map_err(Error::Io)?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
     let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line.map_err(Error::Io)?;
+    // Raw byte buffer, NOT read_line: `read_until` appends whatever was
+    // read even when it errors, so a request split across the timeout
+    // boundary is completed by the next iteration — read_line would
+    // discard already-consumed bytes whenever the partial read ends
+    // mid-way through a multibyte UTF-8 character, desynchronizing the
+    // framing.
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return Ok(()), // EOF: client went away
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+        let line = String::from_utf8_lossy(&buf);
         if line.trim().is_empty() {
+            buf.clear();
             continue;
         }
         let reply = match Json::parse(&line) {
@@ -97,8 +127,8 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
         };
         writeln!(writer, "{}", reply.to_json().to_string()).map_err(Error::Io)?;
         writer.flush().map_err(Error::Io)?;
+        buf.clear();
     }
-    Ok(())
 }
 
 /// Blocking JSON-lines client.
@@ -184,6 +214,24 @@ mod tests {
         }
         client.shutdown_server().unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_returns_despite_idle_connections() {
+        // regression: an idle client used to pin its connection thread
+        // inside a blocking read forever, so `serve()`'s final join never
+        // returned after a shutdown issued on another connection
+        let (addr, handle, _engine) = spawn_server();
+        let idle = Client::connect(&addr).unwrap(); // never sends a byte
+        let mut active = Client::connect(&addr).unwrap();
+        match active.call(&Request::Stats).unwrap() {
+            Response::Stats { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        active.shutdown_server().unwrap();
+        // must return promptly even though `idle` is still open
+        handle.join().unwrap();
+        drop(idle);
     }
 
     #[test]

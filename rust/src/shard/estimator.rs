@@ -14,17 +14,18 @@
 //! is numerically the same log-space combination the monolithic
 //! estimator uses internally, so `E[Ẑ] = Σ_s E[Ẑ_s] = Σ_s Z_s = Z`
 //! stays unbiased, and the `(ε, δ)` budget of Theorem 3.4 splits across
-//! shards in proportion to their `k_s · l_s` products (we split both
-//! `k` and `l` proportionally to shard size, preserving the global
-//! `k·l` up to rounding).
+//! shards in proportion to their `k_s · l_s` products (both `k` and `l`
+//! are apportioned to shard size by largest remainder —
+//! [`super::apportion`] — so the global totals are preserved exactly,
+//! up to a floor of one per shard).
 //!
 //! Tail samples come from streams keyed by `(seed, round, shard)`, so an
 //! estimate at a given round is replayable.
 
-use super::ShardedIndex;
+use super::{apportion, ShardedIndex};
 use crate::data::Dataset;
 use crate::estimator::partition::{combine_head_tail, PartitionEstimate};
-use crate::estimator::EstimateWork;
+use crate::estimator::{effective_tail_len, EstimateWork};
 use crate::linalg::MaxSumExp;
 use crate::mips::MipsIndex;
 use crate::scorer::ScoreBackend;
@@ -32,6 +33,12 @@ use crate::util::rng::Pcg64;
 use rustc_hash::FxHashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Stream-salt for the Algorithm 3 per-shard tail draws (`idx` = shard).
+/// Distinct from the sharded sampler's `SALT_TOP`/`SALT_TAIL` and the
+/// sharded expectation estimator's salt, so the three subsystems can
+/// share one seed with independent streams.
+const SALT_ALG3_TAIL: u64 = 0xA1_93;
 
 /// Merge per-shard `log Ẑ_s` partials: `log Σ_s Ẑ_s` — exactly
 /// [`crate::linalg::logsumexp`], named for the shard-merge role it plays
@@ -73,18 +80,64 @@ impl ShardedPartitionEstimator {
     /// Estimate at an explicit round (replayable; distinct rounds draw
     /// independent tails).
     pub fn estimate_at(&self, q: &[f32], round: u64) -> PartitionEstimate {
-        let ns = self.index.n_shards();
-        let n = self.index.n();
         // rank the shared IVF probe structure ONCE per query (None for
         // non-IVF kinds) — every shard scans the same cluster list
         let order = self.index.coarse_order(q);
+        // proportional (ε, δ)-budget split with exact largest-remainder
+        // totals (Σ k_s = k, Σ l_s = l, up to the ≥1-per-shard floor)
+        let k_split = apportion(self.k, self.index.map());
+        let l_split = apportion(self.l, self.index.map());
         // one (log Ẑ_s, work) partial per shard, in shard order — the
         // index's fan-out so `shard_parallel` governs this path too
-        let parts = self
-            .index
-            .fan_out(|s| self.shard_partial(s, q, round, n, order.as_deref()));
-        let mut partials = Vec::with_capacity(ns);
-        // centroid-ranking work accounted once, like the sharded top_k
+        let parts = self.index.fan_out(|s| {
+            self.shard_partial(s, q, round, k_split[s], l_split[s], order.as_deref())
+        });
+        self.merge_partials(parts)
+    }
+
+    /// Convenience: estimate at the next internal round.
+    pub fn estimate(&self, q: &[f32]) -> PartitionEstimate {
+        let r = self.round.fetch_add(1, Ordering::Relaxed);
+        self.estimate_at(q, r)
+    }
+
+    /// Batched Algorithm 3 over the shards: **one fan-out for the whole
+    /// batch** (each shard computes its partials for every query before
+    /// any merge), query `i` served at round `r0 + i` — bit-identical to
+    /// the corresponding sequence of [`estimate_at`](Self::estimate_at)
+    /// calls.
+    pub fn estimate_batch(&self, qs: &[&[f32]]) -> Vec<PartitionEstimate> {
+        let r0 = self.round.fetch_add(qs.len() as u64, Ordering::Relaxed);
+        self.estimate_batch_at(qs, r0)
+    }
+
+    /// [`estimate_batch`](Self::estimate_batch) at an explicit base round.
+    pub fn estimate_batch_at(&self, qs: &[&[f32]], r0: u64) -> Vec<PartitionEstimate> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        let orders = self.index.coarse_orders_batch(qs);
+        let k_split = apportion(self.k, self.index.map());
+        let l_split = apportion(self.l, self.index.map());
+        // [shard][query] partials from a single fan-out
+        let per_shard: Vec<Vec<(f64, EstimateWork)>> = self.index.fan_out(|s| {
+            qs.iter()
+                .enumerate()
+                .map(|(i, q)| {
+                    let order = orders.as_ref().map(|o| o[i].as_slice());
+                    self.shard_partial(s, q, r0 + i as u64, k_split[s], l_split[s], order)
+                })
+                .collect()
+        });
+        (0..qs.len())
+            .map(|i| self.merge_partials(per_shard.iter().map(|sh| sh[i]).collect()))
+            .collect()
+    }
+
+    /// Log-sum-exp merge of per-shard `(log Ẑ_s, work)` partials, with
+    /// the centroid-ranking work accounted once, like the sharded top_k.
+    fn merge_partials(&self, parts: Vec<(f64, EstimateWork)>) -> PartitionEstimate {
+        let mut partials = Vec::with_capacity(parts.len());
         let mut work = EstimateWork { scanned: self.index.coarse_cost(), k: 0, l: 0 };
         for (log_z_s, w) in parts {
             partials.push(log_z_s);
@@ -95,12 +148,6 @@ impl ShardedPartitionEstimator {
         PartitionEstimate { log_z: merge_log_partials(&partials), work }
     }
 
-    /// Convenience: estimate at the next internal round.
-    pub fn estimate(&self, q: &[f32]) -> PartitionEstimate {
-        let r = self.round.fetch_add(1, Ordering::Relaxed);
-        self.estimate_at(q, r)
-    }
-
     /// One shard's Algorithm 3: local top-k head (scanning the shared
     /// probe list on IVF shards), keyed uniform tail, log-space combine —
     /// an unbiased estimate of `Z_s`.
@@ -109,48 +156,30 @@ impl ShardedPartitionEstimator {
         s: usize,
         q: &[f32],
         round: u64,
-        n: usize,
+        k_s: usize,
+        l_s: usize,
         order: Option<&[u32]>,
     ) -> (f64, EstimateWork) {
         let n_s = self.index.map().shard_len(s);
         if n_s == 0 {
             return (f64::NEG_INFINITY, EstimateWork::default());
         }
-        // proportional (ε, δ)-budget split, ≥ 1 so every shard is covered
-        let k_s = ((self.k * n_s).div_ceil(n)).clamp(1, n_s);
-        let l_s = ((self.l * n_s) / n).max(1);
-        let top = self.index.shard_top_k_local_in(s, q, k_s, order);
+        let top = self.index.shard_top_k_local_in(s, q, k_s.clamp(1, n_s), order);
         let k_eff = top.items.len();
         let exclude: FxHashSet<u32> = top.items.iter().map(|it| it.id).collect();
-        let mut rng = {
-            let mut h = self.seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            h = h.wrapping_add(0xE57_1u64.wrapping_mul(0x2545_F491_4F6C_DD1D));
-            Pcg64::new_stream(h, s as u64)
-        };
-        let l_s = l_s.min(n_s.saturating_sub(k_eff)).max(1);
+        let mut rng = Pcg64::keyed(self.seed, round, SALT_ALG3_TAIL, s as u64);
+        let l_eff = effective_tail_len(l_s, n_s, k_eff);
         // tail ids drawn in shard-local space (uniform over X_s \ S_s),
         // scored from the global dataset through the shard map
-        let t_ids: Vec<u32> = if k_eff < n_s {
-            rng.with_replacement_excluding(n_s as u64, l_s, &exclude)
+        let t_ids: Vec<u32> = if l_eff > 0 {
+            rng.with_replacement_excluding(n_s as u64, l_eff, &exclude)
                 .into_iter()
                 .map(|local| self.index.map().to_global(s, local))
                 .collect()
         } else {
             Vec::new()
         };
-        let d = self.ds.d;
-        let mut t_scores = vec![0f32; t_ids.len()];
-        if !t_ids.is_empty() {
-            if self.backend.prefers_gather() {
-                let mut rows = vec![0f32; t_ids.len() * d];
-                self.ds.gather(&t_ids, &mut rows);
-                self.backend.scores(&rows, d, q, &mut t_scores);
-            } else {
-                for (o, &id) in t_scores.iter_mut().zip(&t_ids) {
-                    *o = crate::linalg::dot(self.ds.row(id as usize), q);
-                }
-            }
-        }
+        let t_scores = crate::scorer::score_ids(&self.ds, self.backend.as_ref(), &t_ids, q);
         let mut head = MaxSumExp::default();
         for it in &top.items {
             head.push(it.score as f64);

@@ -1,0 +1,415 @@
+//! [`ShardedExpectationEstimator`] — Algorithm 4 decomposed over a row
+//! partition, merged by **weighted log-sum-exp**.
+//!
+//! The unnormalized feature expectation factors over a partition of the
+//! state space exactly like the partition function:
+//!
+//! ```text
+//! Z·μ = Σ_x e^{θ·φ(x)} φ(x) = Σ_s Z_s·μ_s,   Z = Σ_s Z_s
+//! ```
+//!
+//! Each shard runs its own Algorithm 4 against its sub-index — exact
+//! head over its local top-k `S_s` (via
+//! [`ShardedIndex::shard_top_k_local_in`]), upweighted uniform tail
+//! `T_s ⊂ X_s \ S_s` from a keyed stream — producing a fragment
+//! `(log Ẑ_s, μ̂_s)` whose numerator `Ẑ_s·μ̂_s` is unbiased for
+//! `Z_s·μ_s` (Theorem 3.5 applied to `X_s`) and whose `Ẑ_s` is unbiased
+//! for `Z_s` (Theorem 3.4). The merge is a weighted log-sum-exp:
+//!
+//! ```text
+//! log Ẑ = LSE_s(log Ẑ_s),   μ̂ = Σ_s e^{log Ẑ_s − m} μ̂_s / Σ_s e^{log Ẑ_s − m}
+//! ```
+//!
+//! (`m = max_s log Ẑ_s`), so the merged numerator `Ẑ·μ̂ = Σ_s Ẑ_s·μ̂_s`
+//! stays unbiased for `Z·μ` — the same ratio-estimator contract the
+//! monolithic `F̂ = Ĵ/Ẑ` has, with the `(ε, δ)` budget of Theorem 3.5
+//! split across shards by [`apportion`] (largest remainder, exact
+//! totals).
+//!
+//! Tail draws come from streams keyed by `(seed, round, shard)`
+//! ([`Pcg64::keyed`], Algorithm 4's salt), so an estimate at a given
+//! round is replayable and [`expect_features_batch`] is bit-identical to
+//! the corresponding sequence of single-query calls.
+//!
+//! [`expect_features_batch`]: ShardedExpectationEstimator::expect_features_batch
+
+use super::{apportion, ShardedIndex};
+use crate::data::Dataset;
+use crate::estimator::expectation::FeatureExpectation;
+use crate::estimator::{effective_tail_len, EstimateWork};
+use crate::mips::MipsIndex;
+use crate::scorer::ScoreBackend;
+use crate::util::rng::Pcg64;
+use rustc_hash::FxHashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Stream-salt for the Algorithm 4 per-shard tail draws (`idx` = shard).
+/// Distinct from the sampler's and Algorithm 3's salts so all three
+/// sharded subsystems can share one seed with independent streams.
+const SALT_ALG4_TAIL: u64 = 0xA1_94;
+
+/// One shard's Algorithm 4 fragment: `log Ẑ_s`, the shard-normalized
+/// feature mean `μ̂_s` (f64 so the merge keeps full precision), and the
+/// work it cost.
+struct ShardFragment {
+    log_z: f64,
+    mean: Vec<f64>,
+    work: EstimateWork,
+}
+
+/// Algorithm 4 over a [`ShardedIndex`]: per-shard head+tail fragments in
+/// parallel, weighted log-sum-exp merge.
+pub struct ShardedExpectationEstimator {
+    /// the **global** dataset (head/tail rows are resolved through the
+    /// shard map, so no per-shard row copies need to be retained)
+    ds: Arc<Dataset>,
+    index: Arc<ShardedIndex>,
+    backend: Arc<dyn ScoreBackend>,
+    /// global head size k (split across shards by largest remainder)
+    pub k: usize,
+    /// global tail sample size l (split across shards by largest remainder)
+    pub l: usize,
+    seed: u64,
+    round: AtomicU64,
+}
+
+impl ShardedExpectationEstimator {
+    pub fn new(
+        ds: Arc<Dataset>,
+        index: Arc<ShardedIndex>,
+        backend: Arc<dyn ScoreBackend>,
+        k: usize,
+        l: usize,
+        seed: u64,
+    ) -> Self {
+        let k = k.clamp(1, index.n().max(1));
+        let l = l.max(1);
+        ShardedExpectationEstimator { ds, index, backend, k, l, seed, round: AtomicU64::new(0) }
+    }
+
+    /// `E_θ[φ]` at an explicit round (replayable; distinct rounds draw
+    /// independent tails).
+    pub fn expect_features_at(&self, q: &[f32], round: u64) -> FeatureExpectation {
+        let order = self.index.coarse_order(q);
+        let k_split = apportion(self.k, self.index.map());
+        let l_split = apportion(self.l, self.index.map());
+        let frags = self.index.fan_out(|s| {
+            self.shard_fragment(s, q, round, k_split[s], l_split[s], order.as_deref())
+        });
+        self.merge_fragments(frags)
+    }
+
+    /// Convenience: estimate at the next internal round.
+    pub fn expect_features(&self, q: &[f32]) -> FeatureExpectation {
+        let r = self.round.fetch_add(1, Ordering::Relaxed);
+        self.expect_features_at(q, r)
+    }
+
+    /// Batched Algorithm 4 over the shards: **one fan-out for the whole
+    /// batch** (each shard computes its fragment for every query before
+    /// any merge, scanning the shared per-query IVF probe lists), query
+    /// `i` served at round `r0 + i` — bit-identical to the corresponding
+    /// sequence of [`expect_features_at`](Self::expect_features_at)
+    /// calls. The engine drains concurrent `expect_features` requests
+    /// through this so the fan-out amortizes across users.
+    pub fn expect_features_batch(&self, qs: &[&[f32]]) -> Vec<FeatureExpectation> {
+        let r0 = self.round.fetch_add(qs.len() as u64, Ordering::Relaxed);
+        self.expect_features_batch_at(qs, r0)
+    }
+
+    /// [`expect_features_batch`](Self::expect_features_batch) at an
+    /// explicit base round.
+    pub fn expect_features_batch_at(&self, qs: &[&[f32]], r0: u64) -> Vec<FeatureExpectation> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        let orders = self.index.coarse_orders_batch(qs);
+        let k_split = apportion(self.k, self.index.map());
+        let l_split = apportion(self.l, self.index.map());
+        // [shard][query] fragments from a single fan-out
+        let per_shard: Vec<Vec<ShardFragment>> = self.index.fan_out(|s| {
+            qs.iter()
+                .enumerate()
+                .map(|(i, q)| {
+                    let order = orders.as_ref().map(|o| o[i].as_slice());
+                    self.shard_fragment(s, q, r0 + i as u64, k_split[s], l_split[s], order)
+                })
+                .collect()
+        });
+        // transpose by value: each fragment is consumed exactly once
+        let mut iters: Vec<std::vec::IntoIter<ShardFragment>> =
+            per_shard.into_iter().map(|v| v.into_iter()).collect();
+        (0..qs.len())
+            .map(|_| {
+                let frags: Vec<ShardFragment> = iters
+                    .iter_mut()
+                    .map(|it| it.next().expect("each shard answers every query"))
+                    .collect();
+                self.merge_fragments(frags)
+            })
+            .collect()
+    }
+
+    /// One shard's Algorithm 4 on `X_s`: local top-k head, keyed
+    /// upweighted uniform tail, producing the `(log Ẑ_s, μ̂_s)` fragment.
+    fn shard_fragment(
+        &self,
+        s: usize,
+        q: &[f32],
+        round: u64,
+        k_s: usize,
+        l_s: usize,
+        order: Option<&[u32]>,
+    ) -> ShardFragment {
+        let d = self.ds.d;
+        let map = self.index.map();
+        let n_s = map.shard_len(s);
+        if n_s == 0 {
+            return ShardFragment {
+                log_z: f64::NEG_INFINITY,
+                mean: Vec::new(),
+                work: EstimateWork::default(),
+            };
+        }
+        // head: shard-local top-k (shared probe list on IVF shards)
+        let top = self.index.shard_top_k_local_in(s, q, k_s.clamp(1, n_s), order);
+        let k_eff = top.items.len();
+        let exclude: FxHashSet<u32> = top.items.iter().map(|it| it.id).collect();
+        // tail: keyed uniform draw over X_s \ S_s, shared cap rule
+        let mut rng = Pcg64::keyed(self.seed, round, SALT_ALG4_TAIL, s as u64);
+        let l_eff = effective_tail_len(l_s, n_s, k_eff);
+        let t_ids: Vec<u32> = if l_eff > 0 {
+            rng.with_replacement_excluding(n_s as u64, l_eff, &exclude)
+                .into_iter()
+                .map(|local| map.to_global(s, local))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let t_scores = self.score_ids(&t_ids, q);
+        let weight =
+            if t_ids.is_empty() { 0.0 } else { (n_s - k_eff) as f64 / t_ids.len() as f64 };
+
+        // log-space combine relative to the shard's own reference score
+        let m = top
+            .s_max()
+            .max(t_scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64);
+        let mut z_hat = 0f64;
+        let mut wsum = vec![0f64; d];
+        for it in &top.items {
+            let w = ((it.score as f64) - m).exp();
+            z_hat += w;
+            let row = self.ds.row(map.to_global(s, it.id) as usize);
+            for (acc, &x) in wsum.iter_mut().zip(row) {
+                *acc += w * x as f64;
+            }
+        }
+        for (&id, &y) in t_ids.iter().zip(&t_scores) {
+            let w = ((y as f64) - m).exp() * weight;
+            z_hat += w;
+            let row = self.ds.row(id as usize);
+            for (acc, &x) in wsum.iter_mut().zip(row) {
+                *acc += w * x as f64;
+            }
+        }
+        for x in wsum.iter_mut() {
+            *x /= z_hat;
+        }
+        ShardFragment {
+            log_z: m + z_hat.ln(),
+            mean: wsum,
+            work: EstimateWork { scanned: top.scanned, k: k_eff, l: t_ids.len() },
+        }
+    }
+
+    /// Weighted log-sum-exp merge: `log Ẑ = LSE_s(log Ẑ_s)` and
+    /// `μ̂ = Σ_s Ẑ_s μ̂_s / Σ_s Ẑ_s`, carried relative to the max partial
+    /// so no shard's weight can overflow. Centroid-ranking work is
+    /// accounted once, like the sharded top_k.
+    fn merge_fragments(&self, frags: Vec<ShardFragment>) -> FeatureExpectation {
+        let d = self.ds.d;
+        let mut work = EstimateWork { scanned: self.index.coarse_cost(), k: 0, l: 0 };
+        let mut m = f64::NEG_INFINITY;
+        for f in &frags {
+            m = m.max(f.log_z);
+            work.scanned += f.work.scanned;
+            work.k += f.work.k;
+            work.l += f.work.l;
+        }
+        if !m.is_finite() {
+            // only reachable for an all-empty partition, which build
+            // paths never construct — stay well-formed regardless
+            return FeatureExpectation { mean: vec![0f32; d], log_z: f64::NEG_INFINITY, work };
+        }
+        let mut z = 0f64;
+        let mut wsum = vec![0f64; d];
+        for f in &frags {
+            if f.log_z == f64::NEG_INFINITY {
+                continue;
+            }
+            let w = (f.log_z - m).exp();
+            z += w;
+            for (acc, &x) in wsum.iter_mut().zip(&f.mean) {
+                *acc += w * x;
+            }
+        }
+        let mean: Vec<f32> = wsum.iter().map(|&x| (x / z) as f32).collect();
+        FeatureExpectation { mean, log_z: m + z.ln(), work }
+    }
+
+    /// Score global ids via the shared [`crate::scorer::score_ids`]
+    /// fast path.
+    fn score_ids(&self, ids: &[u32], q: &[f32]) -> Vec<f32> {
+        crate::scorer::score_ids(&self.ds, self.backend.as_ref(), ids, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, IndexKind};
+    use crate::data::synth;
+    use crate::estimator::expectation::exact_feature_expectation;
+    use crate::estimator::partition::exact_log_partition;
+    use crate::scorer::NativeScorer;
+    use crate::util::rng::Pcg64;
+
+    fn sharded(
+        ds: &Arc<Dataset>,
+        shards: usize,
+        backend: &Arc<dyn ScoreBackend>,
+    ) -> Arc<ShardedIndex> {
+        let mut cfg = Config::default().index;
+        cfg.kind = IndexKind::Brute;
+        cfg.shards = shards;
+        Arc::new(ShardedIndex::build(ds, &cfg, backend.clone()).unwrap())
+    }
+
+    #[test]
+    fn degenerate_heads_make_the_merge_exact() {
+        // k ≥ n: every shard's head covers its whole partition, so the
+        // merged mean must equal the exact E_θ[φ] for ANY shard count —
+        // a deterministic check of the Z·μ = Σ_s Z_s·μ_s decomposition.
+        let ds = Arc::new(synth::imagenet_like(600, 8, 10, 0.3, 1));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut rng = Pcg64::new(2);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let (want_mean, want_log_z) = exact_feature_expectation(&ds, backend.as_ref(), &q);
+        for shards in [1usize, 3, 7] {
+            let est = ShardedExpectationEstimator::new(
+                ds.clone(),
+                sharded(&ds, shards, &backend),
+                backend.clone(),
+                ds.n,
+                5,
+                3,
+            );
+            let got = est.expect_features_at(&q, 0);
+            assert!(
+                (got.log_z - want_log_z).abs() < 1e-5,
+                "shards={shards}: log_z {} vs {want_log_z}",
+                got.log_z
+            );
+            for (j, (&g, &w)) in got.mean.iter().zip(&want_mean).enumerate() {
+                assert!(
+                    (g - w).abs() < 1e-5,
+                    "shards={shards} coord {j}: {g} vs {w}"
+                );
+            }
+            assert_eq!(got.work.k, ds.n);
+        }
+    }
+
+    #[test]
+    fn sharded_numerator_is_unbiased_and_shard_count_consistent() {
+        // E[Ẑ·μ̂] = Z·μ: average exp(log Ẑ − log Z)·μ̂ (the normalized
+        // numerator) in the linear domain and compare against the exact
+        // expectation, for several shard counts
+        let ds = Arc::new(synth::imagenet_like(800, 8, 10, 0.3, 4));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let mut rng = Pcg64::new(5);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let (want_mean, true_log_z) = exact_feature_expectation(&ds, backend.as_ref(), &q);
+        for shards in [1usize, 3, 7] {
+            let est = ShardedExpectationEstimator::new(
+                ds.clone(),
+                sharded(&ds, shards, &backend),
+                backend.clone(),
+                80,
+                120,
+                6,
+            );
+            let reps = 300u64;
+            let mut num = vec![0f64; ds.d];
+            let mut ratio = 0f64;
+            for r in 0..reps {
+                let e = est.expect_features_at(&q, r);
+                let w = (e.log_z - true_log_z).exp();
+                ratio += w / reps as f64;
+                for (acc, &x) in num.iter_mut().zip(&e.mean) {
+                    *acc += w * x as f64 / reps as f64;
+                }
+            }
+            assert!((ratio - 1.0).abs() < 0.08, "shards={shards}: E[Ẑ]/Z = {ratio}");
+            let err = num
+                .iter()
+                .zip(&want_mean)
+                .map(|(&a, &b)| (a - b as f64).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 0.05, "shards={shards}: max coord error {err}");
+        }
+    }
+
+    #[test]
+    fn shared_st_draw_gives_a_valid_alg3_log_z() {
+        let ds = Arc::new(synth::imagenet_like(700, 8, 10, 0.3, 7));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let est = ShardedExpectationEstimator::new(
+            ds.clone(),
+            sharded(&ds, 3, &backend),
+            backend.clone(),
+            90,
+            140,
+            8,
+        );
+        let mut rng = Pcg64::new(9);
+        let q = synth::random_theta(&ds, 0.2, &mut rng);
+        let want = exact_log_partition(&ds, backend.as_ref(), &q);
+        let e = est.expect_features_at(&q, 0);
+        assert!((e.log_z - want).abs() < 0.3, "{} vs {}", e.log_z, want);
+        assert!(e.work.l > 0);
+    }
+
+    #[test]
+    fn rounds_replayable_and_batch_matches_singles() {
+        let ds = Arc::new(synth::imagenet_like(500, 8, 10, 0.3, 10));
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let est = ShardedExpectationEstimator::new(
+            ds.clone(),
+            sharded(&ds, 4, &backend),
+            backend.clone(),
+            40,
+            60,
+            11,
+        );
+        let mut rng = Pcg64::new(12);
+        let q1 = synth::random_theta(&ds, 0.1, &mut rng);
+        let q2 = synth::random_theta(&ds, 0.1, &mut rng);
+        // replayable
+        let a = est.expect_features_at(&q1, 5);
+        let b = est.expect_features_at(&q1, 5);
+        assert_eq!(a.log_z.to_bits(), b.log_z.to_bits());
+        assert_eq!(a.mean, b.mean);
+        let c = est.expect_features_at(&q1, 6);
+        assert_ne!(a.log_z.to_bits(), c.log_z.to_bits(), "rounds must draw fresh tails");
+        // batch at base round r0 ≡ singles at rounds r0, r0+1
+        let batch = est.expect_features_batch_at(&[&q1, &q2], 20);
+        let s1 = est.expect_features_at(&q1, 20);
+        let s2 = est.expect_features_at(&q2, 21);
+        assert_eq!(batch[0].mean, s1.mean);
+        assert_eq!(batch[0].log_z.to_bits(), s1.log_z.to_bits());
+        assert_eq!(batch[1].mean, s2.mean);
+        assert_eq!(batch[1].log_z.to_bits(), s2.log_z.to_bits());
+    }
+}

@@ -266,8 +266,9 @@ impl ShardedIndex {
 
     /// The per-query shared probe rankings for a batch (`None` for
     /// non-IVF kinds) — the batch analogue of
-    /// [`coarse_order`](Self::coarse_order).
-    fn coarse_orders_batch(&self, qs: &[&[f32]]) -> Option<Vec<Vec<u32>>> {
+    /// [`coarse_order`](Self::coarse_order). The sharded estimators rank
+    /// once per batch and hand each shard its per-query cluster lists.
+    pub(crate) fn coarse_orders_batch(&self, qs: &[&[f32]]) -> Option<Vec<Vec<u32>>> {
         self.coarse
             .as_ref()
             .map(|cp| ivf::rank_clusters_batch(&cp.km, qs, cp.n_probe.clamp(1, cp.km.c)))

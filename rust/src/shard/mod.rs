@@ -31,6 +31,12 @@
 //!   `log Ẑ = LSE_s(log Ẑ_s)` — each `Ẑ_s` unbiased for `Z_s` makes the
 //!   merged `Ẑ` unbiased for `Z`
 //!   ([`estimator::ShardedPartitionEstimator`]).
+//! * **feature expectation** (Algorithm 4): the unnormalized moment
+//!   factors the same way, `Z·μ = Σ_s Z_s·μ_s`, so per-shard
+//!   `(log Ẑ_s, μ̂_s)` fragments merge by *weighted* log-sum-exp
+//!   ([`expectation::ShardedExpectationEstimator`]). Estimation budgets
+//!   `k`/`l` split across shards by [`apportion`] (largest remainder —
+//!   global totals preserved exactly, up to a floor of one per shard).
 //!
 //! ## Shard-count invariance
 //!
@@ -61,10 +67,12 @@
 //! under the merge.
 
 pub mod estimator;
+pub mod expectation;
 pub mod index;
 pub mod sampler;
 
 pub use estimator::ShardedPartitionEstimator;
+pub use expectation::ShardedExpectationEstimator;
 pub use index::ShardedIndex;
 pub use sampler::ShardedGumbelSampler;
 
@@ -172,6 +180,55 @@ impl ShardMap {
     }
 }
 
+/// Split a global sample budget (the estimators' `k` or `l`) across the
+/// row partition: every non-empty shard gets a floor of 1 (so its
+/// per-shard head/tail estimator stays well-formed), and the residual
+/// `total − #non-empty` is apportioned proportionally to shard size by
+/// **largest remainder** (Hamilton's method) — shard `s` gets
+/// `⌊R·n_s/n⌋` plus one of the `R − Σ⌊·⌋` leftover units, awarded in
+/// decreasing fractional-remainder order (ties to the lower shard id,
+/// so the split is deterministic).
+///
+/// Unlike the previous per-shard `div_ceil` / `floor+max(1)` rounding —
+/// whose sum could drift `O(#shards)` above the global budget — the
+/// totals here are exact: `Σ_s quota_s = total` whenever
+/// `total ≥ #non-empty shards`, and `= #non-empty shards` below that
+/// (the floor is the only source of excess, and it is what keeps every
+/// shard's estimate defined).
+pub fn apportion(total: usize, map: &ShardMap) -> Vec<usize> {
+    let n = map.n();
+    let ns = map.shards();
+    // floor: every non-empty shard serves ≥ 1 so its estimator stays
+    // well-formed
+    let mut quota: Vec<usize> =
+        (0..ns).map(|s| usize::from(map.shard_len(s) > 0)).collect();
+    let nonempty: usize = quota.iter().sum();
+    let residual = total.saturating_sub(nonempty);
+    if n == 0 || residual == 0 {
+        return quota;
+    }
+    let mut assigned = 0usize;
+    // (remainder, shard) — `residual·n_s` fits u128 far beyond any n
+    let mut rems: Vec<(u128, usize)> = Vec::with_capacity(ns);
+    for (s, q) in quota.iter_mut().enumerate() {
+        let exact = residual as u128 * map.shard_len(s) as u128;
+        let share = (exact / n as u128) as usize;
+        *q += share;
+        assigned += share;
+        rems.push((exact % n as u128, s));
+    }
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, s) in rems.iter().take(residual - assigned) {
+        quota[s] += 1;
+    }
+    debug_assert_eq!(
+        quota.iter().sum::<usize>(),
+        nonempty + residual,
+        "apportion must preserve the global budget"
+    );
+    quota
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +306,42 @@ mod tests {
         let map = ShardMap::new(0, 4, ShardStrategy::Contiguous);
         assert_eq!(map.shards(), 1);
         assert_eq!(map.shard_len(0), 0);
+    }
+
+    #[test]
+    fn apportion_preserves_totals() {
+        for strategy in [ShardStrategy::RoundRobin, ShardStrategy::Contiguous] {
+            for (n, shards) in [(100usize, 3usize), (1000, 7), (97, 13), (64, 64), (5, 8)] {
+                let map = ShardMap::new(n, shards, strategy);
+                for total in [1usize, 2, 5, 40, 97, n, 3 * n] {
+                    let q = apportion(total, &map);
+                    let sum: usize = q.iter().sum();
+                    let want = total.max(map.shards());
+                    assert_eq!(sum, want, "{strategy:?} n={n} N={shards} total={total}");
+                    for (s, &qs) in q.iter().enumerate() {
+                        assert!(qs >= 1, "shard {s} starved");
+                        // proportional up to the ±1 remainder unit + floor
+                        let exact = total as f64 * map.shard_len(s) as f64 / n as f64;
+                        assert!(
+                            (qs as f64 - exact).abs() <= 2.0,
+                            "{strategy:?} shard {s}: quota {qs} vs exact share {exact}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apportion_beats_divceil_drift() {
+        // the bug this replaces: ⌈k·n_s/n⌉ per shard overshoots by up to
+        // one per shard — with 64 shards and k=70 that's nearly 2×
+        let map = ShardMap::new(640, 64, ShardStrategy::RoundRobin);
+        let k = 70usize;
+        let divceil: usize = (0..64).map(|s| (k * map.shard_len(s)).div_ceil(640)).sum();
+        assert!(divceil > k + 30, "premise: div_ceil drifts ({divceil})");
+        let sum: usize = apportion(k, &map).iter().sum();
+        assert_eq!(sum, k);
     }
 
     #[test]

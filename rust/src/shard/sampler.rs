@@ -88,13 +88,11 @@ impl ShardedGumbelSampler {
         ShardedGumbelSampler { ds, index, backend, k, gap_c, seed, round: AtomicU64::new(0) }
     }
 
-    /// A generator keyed by `(seed, round, salt, idx)` — distinct keys
-    /// give independent streams (SplitMix expansion + PCG stream
-    /// selection + burn-in, see [`Pcg64::new_stream`]).
+    /// A generator keyed by `(seed, round, salt, idx)` — the shared
+    /// [`Pcg64::keyed`] derivation every sharded subsystem uses; distinct
+    /// keys give independent streams.
     fn keyed(&self, round: u64, salt: u64, idx: u64) -> Pcg64 {
-        let mut h = self.seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        h = h.wrapping_add(salt.wrapping_mul(0xBF58_476D_1CE4_E5B9));
-        Pcg64::new_stream(h, idx)
+        Pcg64::keyed(self.seed, round, salt, idx)
     }
 
     /// Open a per-θ session: one sharded MIPS retrieval, reused across
@@ -102,6 +100,12 @@ impl ShardedGumbelSampler {
     /// per parameter value").
     pub fn session(&self, q: &[f32]) -> ShardedSession {
         let top = self.index.top_k(q, self.k);
+        self.session_from_top(top)
+    }
+
+    /// Build the per-θ session state from an already-retrieved merged top
+    /// set (the batch path retrieves all tops in one fan-out first).
+    pub fn session_from_top(&self, top: TopKResult) -> ShardedSession {
         let ns = self.index.n_shards();
         let mut by_shard: Vec<Vec<(u32, f64)>> = vec![Vec::new(); ns];
         for it in &top.items {
@@ -120,6 +124,24 @@ impl ShardedGumbelSampler {
             live[id as usize / block] -= 1;
         }
         ShardedSession { top, by_shard, s_ids, block, live }
+    }
+
+    /// Batched sampling: draw `counts[i]` samples for `qs[i]`. ONE
+    /// batched sharded retrieval ([`MipsIndex::top_k_batch`], fan-out +
+    /// merge shared across the whole batch) opens every session; draws
+    /// then consume rounds from the internal counter exactly like
+    /// [`sample_many`](Sampler::sample_many).
+    pub fn sample_batch(&self, qs: &[&[f32]], counts: &[usize]) -> Vec<Vec<SampleOutcome>> {
+        debug_assert_eq!(qs.len(), counts.len());
+        let tops = self.index.top_k_batch(qs, self.k);
+        let mut all = Vec::with_capacity(qs.len());
+        for ((top, q), &count) in tops.into_iter().zip(qs).zip(counts) {
+            let sess = self.session_from_top(top);
+            let count = count.max(1);
+            let r0 = self.round.fetch_add(count as u64, Ordering::Relaxed);
+            all.push((r0..r0 + count as u64).map(|r| self.sample_at(&sess, q, r)).collect());
+        }
+        all
     }
 
     /// One draw at an explicit round index (rounds are the replayable
@@ -195,21 +217,10 @@ impl ShardedGumbelSampler {
         }
     }
 
-    /// Score global ids — gather-free on backends that score rows in
-    /// place (mirrors the lazy sampler's fast path).
+    /// Score global ids via the shared [`crate::scorer::score_ids`]
+    /// fast path.
     fn score_ids(&self, ids: &[u32], q: &[f32]) -> Vec<f32> {
-        let d = self.ds.d;
-        if self.backend.prefers_gather() {
-            let mut rows = vec![0f32; ids.len() * d];
-            self.ds.gather(ids, &mut rows);
-            let mut out = vec![0f32; ids.len()];
-            self.backend.scores(&rows, d, q, &mut out);
-            out
-        } else {
-            ids.iter()
-                .map(|&id| crate::linalg::dot(self.ds.row(id as usize), q))
-                .collect()
-        }
+        crate::scorer::score_ids(&self.ds, self.backend.as_ref(), ids, q)
     }
 }
 

@@ -121,6 +121,6 @@ fn config_roundtrip_through_files() {
     assert_eq!(cfg.data.n, 3000);
     assert_eq!(cfg.sampler_k(), (2.0 * (3000f64).sqrt()).round() as usize);
     let engine = Engine::from_config(&cfg, None).unwrap();
-    assert_eq!(engine.sampler.k, cfg.sampler_k());
+    assert_eq!(engine.sampler.k(), cfg.sampler_k());
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,216 @@
+//! Engine-level sharded serving: an `Engine` built with
+//! `index.shards > 1` must route sample / log-partition /
+//! expect-features through the **sharded** sampler/estimator
+//! implementations (no silent monolithic fallback), serve
+//! shard-count-invariant samples and statistically matched estimates,
+//! batch bit-identically to singles, and train a sharded `Learner`
+//! (`GradMethod::Amortized`) with the paper's Table-2 ordering intact.
+
+use gmips::config::{Config, IndexKind};
+use gmips::coordinator::{Engine, Request, Response};
+use gmips::data::{self, synth};
+use gmips::dispatch::{ExpectationDispatch, PartitionDispatch, SamplerDispatch};
+use gmips::estimator::expectation::exact_feature_expectation;
+use gmips::estimator::partition::exact_log_partition;
+use gmips::learner::{GradMethod, Learner};
+use gmips::mips::MipsIndex;
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::shard::ShardedIndex;
+use gmips::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn engine_cfg(shards: usize) -> Config {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.data.n = 2500;
+    cfg.data.d = 12;
+    cfg.index.kind = IndexKind::Brute;
+    cfg.index.shards = shards;
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn engine_routes_to_the_sharded_stack() {
+    let sharded = Engine::from_config(&engine_cfg(4), None).unwrap();
+    assert!(matches!(sharded.sampler, SamplerDispatch::Sharded(_)));
+    assert!(matches!(sharded.partition, PartitionDispatch::Sharded(_)));
+    assert!(matches!(sharded.expectation, ExpectationDispatch::Sharded(_)));
+    assert_eq!(sharded.index.name(), "sharded");
+    let mut rng = Pcg64::new(1);
+    match sharded.handle(&Request::Stats, &mut rng) {
+        Response::Stats { text } => {
+            assert!(text.contains("sampler=sharded-gumbel"), "{text}");
+            assert!(text.contains("partition=sharded-alg3"), "{text}");
+            assert!(text.contains("expectation=sharded-alg4"), "{text}");
+        }
+        other => panic!("{other:?}"),
+    }
+    // shards = 1 keeps the monolithic stack (and says so)
+    let mono = Engine::from_config(&engine_cfg(1), None).unwrap();
+    assert!(matches!(mono.sampler, SamplerDispatch::Mono(_)));
+    assert!(matches!(mono.partition, PartitionDispatch::Mono(_)));
+    assert!(matches!(mono.expectation, ExpectationDispatch::Mono(_)));
+    match mono.handle(&Request::Stats, &mut rng) {
+        Response::Stats { text } => {
+            assert!(text.contains("sampler=lazy-gumbel"), "{text}");
+            assert!(text.contains("partition=alg3"), "{text}");
+            assert!(text.contains("expectation=alg4"), "{text}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn sharded_engines_serve_invariant_samples_and_matched_estimates() {
+    // two fresh engines differing ONLY in shard count: the id-keyed
+    // frozen streams make the served samples bit-identical, and every
+    // estimate (including the monolithic shards=1 engine's) must match
+    // the exact quantities within Algorithm 3/4 tolerance
+    let e2 = Engine::from_config(&engine_cfg(2), None).unwrap();
+    let e4 = Engine::from_config(&engine_cfg(4), None).unwrap();
+    let e1 = Engine::from_config(&engine_cfg(1), None).unwrap();
+    let mut trng = Pcg64::new(7);
+    let theta = data::random_theta(&e2.ds, 0.05, &mut trng);
+
+    let mut r2 = Pcg64::new(3);
+    let mut r4 = Pcg64::new(3);
+    let ids = |resp: Response| -> Vec<u32> {
+        match resp {
+            Response::Samples { ids, .. } => ids,
+            other => panic!("{other:?}"),
+        }
+    };
+    let a = ids(e2.handle(&Request::Sample { theta: theta.clone(), count: 40 }, &mut r2));
+    let b = ids(e4.handle(&Request::Sample { theta: theta.clone(), count: 40 }, &mut r4));
+    assert_eq!(a, b, "served samples must be shard-count invariant");
+
+    let exact_lz = exact_log_partition(&e2.ds, e2.backend.as_ref(), &theta);
+    let (exact_mean, _) = exact_feature_expectation(&e2.ds, e2.backend.as_ref(), &theta);
+    for (label, e) in [("shards=1", &e1), ("shards=2", &e2), ("shards=4", &e4)] {
+        let mut rng = Pcg64::new(9);
+        match e.handle(&Request::LogPartition { theta: theta.clone() }, &mut rng) {
+            Response::LogPartition { log_z, k, l } => {
+                assert!((log_z - exact_lz).abs() < 0.5, "{label}: {log_z} vs {exact_lz}");
+                assert!(k > 0 && l > 0, "{label}");
+            }
+            other => panic!("{other:?}"),
+        }
+        match e.handle(&Request::ExpectFeatures { theta: theta.clone() }, &mut rng) {
+            Response::Features { mean, log_z } => {
+                assert_eq!(mean.len(), e.ds.d);
+                assert!((log_z - exact_lz).abs() < 0.5, "{label}");
+                let err = mean
+                    .iter()
+                    .zip(&exact_mean)
+                    .map(|(&a, &b)| (a - b).abs() as f64)
+                    .fold(0.0, f64::max);
+                assert!(err < 0.15, "{label}: max coord error {err}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}
+
+#[test]
+fn sharded_batch_serving_matches_singles() {
+    // the batched fan-out paths consume the same keyed rounds the
+    // single-request paths would, so two fresh identical engines — one
+    // draining a batch, one serving the same requests singly in grouped
+    // order — must answer bit-identically
+    let batch_engine = Engine::from_config(&engine_cfg(3), None).unwrap();
+    let single_engine = Engine::from_config(&engine_cfg(3), None).unwrap();
+    let mut trng = Pcg64::new(11);
+    let t1 = data::random_theta(&batch_engine.ds, 0.05, &mut trng);
+    let t2 = data::random_theta(&batch_engine.ds, 0.05, &mut trng);
+
+    let reqs = vec![
+        Request::Sample { theta: t1.clone(), count: 3 },
+        Request::LogPartition { theta: t1.clone() },
+        Request::ExpectFeatures { theta: t2.clone() },
+        Request::Sample { theta: t2.clone(), count: 2 },
+        Request::LogPartition { theta: t2.clone() },
+        Request::ExpectFeatures { theta: t1.clone() },
+    ];
+    let mut rng = Pcg64::new(13);
+    let batched = batch_engine.handle_batch(&reqs, &mut rng);
+
+    // same ops in handle_batch's grouping order: samples, partitions,
+    // expects — each dispatch family has its own round counter
+    let mut rng = Pcg64::new(13);
+    let singles: Vec<Response> = [0usize, 3, 1, 4, 2, 5]
+        .iter()
+        .map(|&i| single_engine.handle(&reqs[i], &mut rng))
+        .collect();
+    let pick = |i: usize| -> &Response {
+        // invert the grouped order back to request order
+        match i {
+            0 => &singles[0],
+            3 => &singles[1],
+            1 => &singles[2],
+            4 => &singles[3],
+            2 => &singles[4],
+            5 => &singles[5],
+            _ => unreachable!(),
+        }
+    };
+    for i in 0..reqs.len() {
+        match (&batched[i], pick(i)) {
+            (Response::Samples { ids: a, .. }, Response::Samples { ids: b, .. }) => {
+                assert_eq!(a, b, "request {i}")
+            }
+            (
+                Response::LogPartition { log_z: a, .. },
+                Response::LogPartition { log_z: b, .. },
+            ) => assert_eq!(a.to_bits(), b.to_bits(), "request {i}"),
+            (
+                Response::Features { mean: a, log_z: la },
+                Response::Features { mean: b, log_z: lb },
+            ) => {
+                assert_eq!(a, b, "request {i}");
+                assert_eq!(la.to_bits(), lb.to_bits(), "request {i}");
+            }
+            other => panic!("request {i}: mismatched kinds {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn sharded_learner_preserves_table2_ordering() {
+    // GradMethod::Amortized over a sharded index runs the sharded
+    // Algorithm 4; the paper's Table 2 ordering (exact ≈ ours > top-k)
+    // must survive the decomposition
+    let ds = Arc::new(synth::imagenet_like(1500, 8, 10, 0.25, 4));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut icfg = Config::default().index;
+    icfg.kind = IndexKind::Brute;
+    icfg.shards = 3;
+    let index = Arc::new(ShardedIndex::build(&ds, &icfg, backend.clone()).unwrap());
+
+    let mut lcfg = Config::default().learn;
+    lcfg.iters = 60;
+    lcfg.eval_every = 60;
+    lcfg.lr = 4.0;
+    lcfg.lr_halve_every = 31;
+    lcfg.train_size = 8;
+    lcfg.k_mult = 5.0;
+    lcfg.l_ratio = 5.0;
+    lcfg.topk_mult = 1.0;
+    let learner = Learner::new(ds, index, backend, lcfg).unwrap();
+
+    let mut rng = Pcg64::new(5);
+    let exact = learner.train(GradMethod::Exact, &mut rng);
+    let ours = learner.train(GradMethod::Amortized, &mut rng);
+    let topk = learner.train(GradMethod::TopK, &mut rng);
+    assert!(
+        (ours.final_ll - exact.final_ll).abs() < 0.3,
+        "ours {} vs exact {}",
+        ours.final_ll,
+        exact.final_ll
+    );
+    assert!(
+        topk.final_ll < exact.final_ll - 0.1,
+        "top-k {} should lag exact {}",
+        topk.final_ll,
+        exact.final_ll
+    );
+}
