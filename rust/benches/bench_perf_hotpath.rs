@@ -5,9 +5,12 @@
 //! Stages: native single/batched block scoring, fused vs two-pass
 //! `(max, Σexp)` reductions, fused expectation fragments, PJRT block
 //! scoring (when artifacts exist), top-k collection, IVF probe
-//! (single-query, 8 sequential queries, and one 8-query batch), SQ8
-//! quantized scan vs f32 scan (plus the end-to-end two-stage brute
-//! top-k) on a ≥100k × 128 dataset, sharded fan-out scan at 1/4/8
+//! (single-query, 8 sequential queries, and one 8-query batch),
+//! SQ8/SQ4/PQ quantized scans vs f32 scan (plus the end-to-end
+//! two-stage/ladder brute top-k) and the register-blocked multi-query
+//! integer kernel vs sequential single-query scoring
+//! (`quant_batch_kernel_speedup`) on a ≥100k × 128 dataset, sharded
+//! fan-out scan at 1/4/8
 //! shards on the same dataset (`shard_scan_speedup`), sharded
 //! Algorithm-4 expect-features vs monolithic on the same dataset
 //! (`sharded_expect_speedup`), lazy tail draw, full Alg-1 sample,
@@ -200,8 +203,15 @@ fn main() {
         seq_mean / batch_mean
     );
 
-    // ---- big-scan dataset shared by the SQ8 and sharding stages ----------------
-    let qn = opts.n.max(100_000);
+    // ---- big-scan dataset shared by the quantized and sharding stages ----------
+    // default floor 100k so the scans are memory-bound and the recorded
+    // speedups meaningful; an explicit GMIPS_BENCH_N (CI smoke) wins so
+    // the trajectory job stays cheap
+    let qn = if std::env::var("GMIPS_BENCH_N").is_ok() {
+        opts.n.max(4_096)
+    } else {
+        opts.n.max(100_000)
+    };
     let qd = 128usize;
     let qds = {
         let mut qdata = cfg.data.clone();
@@ -216,6 +226,9 @@ fn main() {
     // acceptance: ≥2× pass-1 scan throughput; the two-stage brute top_k
     // below shows the end-to-end effect (screen + exact re-rank)
     let quant_speedup;
+    let sq4_scan_speedup;
+    let pq_scan_speedup;
+    let quant_batch_kernel_speedup;
     {
         use gmips::linalg::quant::{QuantQuery, QuantView};
         use gmips::mips::brute::BruteForce;
@@ -274,6 +287,100 @@ fn main() {
             std::hint::black_box(bq.top_k(&theta, kq));
         });
         record(&mut results, s, Some(scan_flops));
+
+        // ---- SQ4 + PQ screening tiers vs the same f32 scan (PR 5) ----------
+        // acceptance: pass-1 bandwidth cuts beyond SQ8's 4× — SQ4 reads
+        // ⅛, PQ(m=16,b=4) ~¹⁄₆₄ of the f32 bytes
+        {
+            use gmips::linalg::pq::PqView;
+            use gmips::linalg::quant::Sq4View;
+            let sq4 = Sq4View::encode(&qds.data, qd, 64);
+            let s = bench.run(&format!("sq4 quant scan+topk {qn}x{qd}"), || {
+                let mut tk = TopK::new(kq);
+                let mut start = 0;
+                while start < qn {
+                    let end = (start + 4096).min(qn);
+                    let out = &mut sbuf[..end - start];
+                    sq4.scores(start, end, std::hint::black_box(&qq), out);
+                    tk.push_block(start as u32, out);
+                    start = end;
+                }
+                std::hint::black_box(tk.into_sorted());
+            });
+            sq4_scan_speedup = f32_mean / s.mean_s;
+            record(&mut results, s, Some(scan_flops));
+            println!("sq4 quantized scan speedup vs f32: {sq4_scan_speedup:.2}x");
+
+            let pv = PqView::train(&qds.data, qd, qd / 8, 4, 4096, 8, 17);
+            let lut = pv.encode_query(&theta);
+            let s = bench.run(&format!("pq(m={},b=4) scan+topk {qn}x{qd}", qd / 8), || {
+                let mut tk = TopK::new(kq);
+                let mut start = 0;
+                while start < qn {
+                    let end = (start + 4096).min(qn);
+                    let out = &mut sbuf[..end - start];
+                    pv.scores(start, end, std::hint::black_box(&lut), out);
+                    tk.push_block(start as u32, out);
+                    start = end;
+                }
+                std::hint::black_box(tk.into_sorted());
+            });
+            pq_scan_speedup = f32_mean / s.mean_s;
+            record(&mut results, s, Some(scan_flops));
+            println!("pq quantized scan speedup vs f32: {pq_scan_speedup:.2}x");
+
+            // end-to-end ladder scans (screen + certificate + exact re-rank)
+            let mut tcfg = cfg.index.clone();
+            tcfg.quant = gmips::config::QuantKind::Sq4;
+            let b4 = BruteForce::new(qds.clone(), Arc::new(NativeScorer)).with_tier_cfg(&tcfg);
+            let s = bench.run(&format!("brute top_k sq4 ladder {qn}x{qd}"), || {
+                std::hint::black_box(b4.top_k(&theta, kq));
+            });
+            record(&mut results, s, Some(scan_flops));
+            tcfg.quant = gmips::config::QuantKind::Pq;
+            tcfg.pq_bits = 4;
+            let bp = BruteForce::new(qds.clone(), Arc::new(NativeScorer)).with_tier_cfg(&tcfg);
+            let s = bench.run(&format!("brute top_k pq ladder {qn}x{qd}"), || {
+                std::hint::black_box(bp.top_k(&theta, kq));
+            });
+            record(&mut results, s, Some(scan_flops));
+        }
+
+        // ---- multi-query integer kernel: 8q sequential vs register-blocked -
+        // acceptance: `scores_batch` streams each code block once per
+        // batch instead of once per query (and re-pays the u8→i16
+        // widening once per 4-query block)
+        {
+            let mut qrng2 = Pcg64::new(19);
+            let qs_owned: Vec<Vec<f32>> = (0..NQ)
+                .map(|_| data::random_theta(&qds, cfg.data.temperature, &mut qrng2))
+                .collect();
+            let qqs: Vec<gmips::linalg::quant::QuantQuery> =
+                qs_owned.iter().map(|q| gmips::linalg::quant::QuantQuery::encode(q)).collect();
+            let qq_refs: Vec<&gmips::linalg::quant::QuantQuery> = qqs.iter().collect();
+            let qblock = 4096.min(qn);
+            let mut out_multi = vec![0f32; NQ * qblock];
+            let s = bench.run(&format!("sq8 scores x8q sequential {qblock}x{qd}"), || {
+                for (j, qqj) in qqs.iter().enumerate() {
+                    qv.scores(
+                        0,
+                        qblock,
+                        std::hint::black_box(qqj),
+                        &mut out_multi[j * qblock..(j + 1) * qblock],
+                    );
+                }
+            });
+            let seq_mean = s.mean_s;
+            record(&mut results, s, Some(scan_flops / qn as f64 * qblock as f64 * NQ as f64));
+            let s = bench.run(&format!("sq8 scores_batch x8q {qblock}x{qd}"), || {
+                qv.scores_batch(0, qblock, std::hint::black_box(&qq_refs), &mut out_multi);
+            });
+            quant_batch_kernel_speedup = seq_mean / s.mean_s;
+            record(&mut results, s, Some(scan_flops / qn as f64 * qblock as f64 * NQ as f64));
+            println!(
+                "sq8 multi-query kernel speedup vs 8 sequential: {quant_batch_kernel_speedup:.2}x"
+            );
+        }
     }
 
     // ---- sharded fan-out scan: 1 vs 4 vs 8 shards (≥100k × 128) ----------------
@@ -444,6 +551,9 @@ fn main() {
         ("d", Json::num(d as f64)),
         ("batch_queries", Json::num(NQ as f64)),
         ("quant_scan_speedup", Json::num(quant_speedup)),
+        ("sq4_scan_speedup", Json::num(sq4_scan_speedup)),
+        ("pq_scan_speedup", Json::num(pq_scan_speedup)),
+        ("quant_batch_kernel_speedup", Json::num(quant_batch_kernel_speedup)),
         ("shard_scan_speedup", Json::num(shard_scan_speedup)),
         ("sharded_expect_speedup", Json::num(sharded_expect_speedup)),
         ("stages", Json::Arr(stages)),

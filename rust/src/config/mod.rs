@@ -10,7 +10,7 @@ pub mod toml;
 
 use crate::error::{Error, Result};
 use crate::util::cli::Args;
-use toml::TomlDoc;
+use toml::{TomlDoc, TomlValue};
 
 /// Which synthetic dataset family to generate (see `data::synth`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -106,6 +106,51 @@ impl ShardStrategy {
     }
 }
 
+/// Quantized screening tier for the two-stage MIPS scans (all results
+/// stay bit-identical to the f32-only scan via the coverage-certificate
+/// contract of `linalg::quant`; a tier that cannot certify falls back up
+/// the ladder PQ/SQ4 → SQ8 → f32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantKind {
+    /// No quantized screening: plain f32 scans.
+    Off,
+    /// 8-bit scalar codes (¼ the scan bandwidth; tightest error bound).
+    Sq8,
+    /// Packed 4-bit scalar codes (⅛ the bandwidth; falls back to SQ8
+    /// when its looser bound cannot certify).
+    Sq4,
+    /// Product quantization: per-subspace codebooks + per-query lookup
+    /// tables (`pq_m`/`pq_bits` knobs; smallest codes, loosest bound,
+    /// same SQ8 safety net).
+    Pq,
+}
+
+impl QuantKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" | "none" | "f32" => Ok(QuantKind::Off),
+            "sq8" | "int8" => Ok(QuantKind::Sq8),
+            "sq4" | "int4" => Ok(QuantKind::Sq4),
+            "pq" => Ok(QuantKind::Pq),
+            other => Err(Error::config(format!(
+                "unknown index.quant '{other}' (expected off|sq8|sq4|pq, or a bool)"
+            ))),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantKind::Off => "off",
+            QuantKind::Sq8 => "sq8",
+            QuantKind::Sq4 => "sq4",
+            QuantKind::Pq => "pq",
+        }
+    }
+    /// Whether any quantized screening tier is active.
+    pub fn enabled(&self) -> bool {
+        !matches!(self, QuantKind::Off)
+    }
+}
+
 /// Score computation backend for block scans.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -170,15 +215,23 @@ pub struct IndexConfig {
     pub bits: usize,
     /// Tiered LSH: number of ladder rungs
     pub rungs: usize,
-    /// SQ8 two-stage scan (brute + IVF): screen candidates on int8
-    /// quantized scores, then re-rank survivors with the exact f32
-    /// kernels. Results are bit-identical to the f32-only scan.
-    pub quant: bool,
+    /// quantized screening tier for the two-stage scans (all four index
+    /// kinds): screen candidates on compressed codes, then re-rank
+    /// survivors with the exact f32 kernels. Results are bit-identical
+    /// to the f32-only scan (certificate miss → tier ladder
+    /// PQ/SQ4 → SQ8 → f32).
+    pub quant: QuantKind,
     /// quantized pass-1 retains `k·overscan` candidates before the exact
     /// re-rank (larger = fewer exact-scan fallbacks, more pass-2 work)
     pub overscan: usize,
-    /// rows per SQ8 `(scale, offset)` quantization block
+    /// rows per SQ8/SQ4 `(scale, offset)` quantization block
     pub quant_block: usize,
+    /// PQ: number of subspaces (must divide `data.d`; 0 = auto — the
+    /// largest of 8/4/2/1 dividing d picks the subspace width)
+    pub pq_m: usize,
+    /// PQ: bits per subspace code (4 → 16 centroids + SIMD LUT gather,
+    /// 8 → 256 centroids)
+    pub pq_bits: usize,
     /// number of data-parallel sub-indexes (1 = monolithic). Each shard
     /// holds a disjoint row partition behind its own index; queries fan
     /// out and k-way-merge, bit-identical to the unsharded index on
@@ -289,9 +342,11 @@ impl Default for Config {
                 tables: 16,
                 bits: 14,
                 rungs: 12,
-                quant: false,
+                quant: QuantKind::Off,
                 overscan: 4,
                 quant_block: 64,
+                pq_m: 0,
+                pq_bits: 8,
                 shards: 1,
                 shard_strategy: ShardStrategy::RoundRobin,
                 shard_parallel: true,
@@ -397,9 +452,18 @@ impl Config {
         c.index.tables = doc.get_usize("index.tables", c.index.tables)?;
         c.index.bits = doc.get_usize("index.bits", c.index.bits)?;
         c.index.rungs = doc.get_usize("index.rungs", c.index.rungs)?;
-        c.index.quant = doc.get_bool("index.quant", c.index.quant)?;
+        if let Some(v) = doc.get("index.quant") {
+            // historical bool form (`quant = true`) still means SQ8
+            c.index.quant = match v {
+                TomlValue::Bool(true) => QuantKind::Sq8,
+                TomlValue::Bool(false) => QuantKind::Off,
+                other => QuantKind::parse(other.as_str()?)?,
+            };
+        }
         c.index.overscan = doc.get_usize("index.overscan", c.index.overscan)?;
         c.index.quant_block = doc.get_usize("index.quant_block", c.index.quant_block)?;
+        c.index.pq_m = doc.get_usize("index.pq_m", c.index.pq_m)?;
+        c.index.pq_bits = doc.get_usize("index.pq_bits", c.index.pq_bits)?;
         c.index.shards = doc.get_usize("index.shards", c.index.shards)?;
         if let Some(v) = doc.get("index.shard_strategy") {
             c.index.shard_strategy = ShardStrategy::parse(v.as_str()?)?;
@@ -490,8 +554,32 @@ impl Config {
         if self.runtime.block == 0 {
             return Err(Error::config("runtime.block must be positive"));
         }
-        if self.index.overscan == 0 || self.index.quant_block == 0 {
-            return Err(Error::config("index.overscan and index.quant_block must be positive"));
+        if self.index.overscan == 0 {
+            return Err(Error::config(
+                "index.overscan must be ≥ 1 (pass 1 keeps k·overscan candidates)",
+            ));
+        }
+        if self.index.quant_block == 0 {
+            return Err(Error::config(
+                "index.quant_block must be ≥ 1 (rows per SQ8/SQ4 quantization block)",
+            ));
+        }
+        if self.index.pq_bits != 4 && self.index.pq_bits != 8 {
+            return Err(Error::config(format!(
+                "index.pq_bits = {} is unsupported: PQ codes are 4-bit (16 centroids \
+                 per subspace, SIMD LUT gather) or 8-bit (256 centroids)",
+                self.index.pq_bits
+            )));
+        }
+        if self.index.quant == QuantKind::Pq
+            && self.index.pq_m != 0
+            && self.data.d % self.index.pq_m != 0
+        {
+            return Err(Error::config(format!(
+                "index.pq_m = {} must evenly divide data.d = {} so every subspace has \
+                 the same width (set pq_m = 0 to auto-pick a divisor)",
+                self.index.pq_m, self.data.d
+            )));
         }
         if self.index.shards == 0 {
             return Err(Error::config("index.shards must be ≥ 1 (1 = unsharded)"));
@@ -611,16 +699,61 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_bad_pq_combos() {
+        // pq_bits outside {4, 8} always rejected, with an actionable message
+        let mut c = Config::default();
+        c.index.pq_bits = 6;
+        let err = format!("{}", c.validate().unwrap_err());
+        assert!(err.contains("pq_bits"), "{err}");
+        // pq_m not dividing d rejected only when the pq tier is selected
+        let mut c = Config::default();
+        c.data.d = 64;
+        c.index.pq_m = 7;
+        c.validate().unwrap(); // quant = off: pq knobs inert
+        c.index.quant = QuantKind::Pq;
+        let err = format!("{}", c.validate().unwrap_err());
+        assert!(err.contains("pq_m") && err.contains("divide"), "{err}");
+        c.index.pq_m = 16;
+        c.validate().unwrap();
+        c.index.pq_m = 0; // auto always valid
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn quant_kind_from_toml_string_and_bool() {
+        let mut c = Config::default();
+        assert_eq!(c.index.quant, QuantKind::Off);
+        // string form selects the tier
+        let doc =
+            TomlDoc::parse("[index]\nquant = \"pq\"\npq_m = 8\npq_bits = 4").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.index.quant, QuantKind::Pq);
+        assert_eq!(c.index.pq_m, 8);
+        assert_eq!(c.index.pq_bits, 4);
+        // historical bool form still means SQ8 / off
+        let doc = TomlDoc::parse("[index]\nquant = true").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.index.quant, QuantKind::Sq8);
+        let doc = TomlDoc::parse("[index]\nquant = false").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.index.quant, QuantKind::Off);
+        for k in ["off", "sq8", "sq4", "pq"] {
+            assert_eq!(QuantKind::parse(k).unwrap().name(), k);
+        }
+        assert!(QuantKind::parse("int3").is_err());
+    }
+
+    #[test]
     fn quant_and_micro_wait_knobs_from_toml() {
         let mut c = Config::default();
-        assert!(!c.index.quant);
+        assert!(!c.index.quant.enabled());
         assert_eq!(c.serve.micro_wait_us, 0);
         let doc = TomlDoc::parse(
             "[index]\nquant = true\noverscan = 8\nquant_block = 32\n[serve]\nmicro_wait_us = 150",
         )
         .unwrap();
         c.apply_toml(&doc).unwrap();
-        assert!(c.index.quant);
+        assert_eq!(c.index.quant, QuantKind::Sq8);
         assert_eq!(c.index.overscan, 8);
         assert_eq!(c.index.quant_block, 32);
         assert_eq!(c.serve.micro_wait_us, 150);

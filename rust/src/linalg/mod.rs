@@ -9,6 +9,7 @@
 //! streaming [`MaxSumExp`] algebra every fragment merge builds on.
 //! Everything here is allocation-free given caller-provided buffers.
 
+pub mod pq;
 pub mod quant;
 pub mod simd;
 

@@ -1,0 +1,681 @@
+//! Product-quantization (PQ) screening codes — the most compressed tier
+//! of the two-stage MIPS scan (Jégou et al. 2011; the screening-tier
+//! framing follows Chen et al. 2018, "Learning to Screen for Fast
+//! Softmax Inference", but kept **bit-exact** via the same
+//! pass-2 + coverage-certificate contract as [`crate::linalg::quant`]).
+//!
+//! ## Encoding
+//!
+//! Rows are split into `m` subspaces of `dsub = d/m` dims. Each subspace
+//! gets its own k-means codebook of `2^bits` centroids (trained by
+//! [`crate::mips::kmeans`] on a deterministic row subsample), and every
+//! row stores one code per subspace — `m` bytes/row at 8 bits,
+//! `m/2` bytes/row at 4 bits, vs `4d` for f32. Codes are stored
+//! **plane-major** (`codes[sub][row]`), so a contiguous scan reads `m`
+//! sequential streams and the 4-bit kernels can table-gather 32 rows per
+//! instruction.
+//!
+//! ## Asymmetric-distance scoring
+//!
+//! A query builds one lookup table per subspace,
+//! `lut[sub][c] = q_sub · centroid[sub][c]`, so a row scores as the sum
+//! of `m` table entries — no per-row arithmetic beyond the gather. The
+//! f64 tables are quantized to **u8 with one shared step** `scale` and
+//! per-subspace minima, which makes the hot sum pure integer:
+//!
+//! ```text
+//! score ≈ Q = scale · Σ_sub lut_u8[sub][code] + Σ_sub lmin[sub]
+//! ```
+//!
+//! The integer sum is what the SIMD kernels compute: at 4 bits each
+//! subspace table is 16 bytes, so AVX2 `pshufb` / NEON `tbl` gathers 32
+//! rows' entries per instruction into u16 lane accumulators (exact for
+//! `m ≤ 256`); at 8 bits the gather is an unrolled scalar loop (a
+//! 256-entry table exceeds the in-register shuffle width). Every kernel
+//! produces the identical integer, and single-/multi-query entry points
+//! share the per-row arithmetic, so batch output is bit-identical to
+//! per-query calls.
+//!
+//! ## Error bound / certificate
+//!
+//! [`PqView::encode_query`] derives the per-query bound the coverage
+//! certificate of [`crate::linalg::quant::coverage_proved`] consumes:
+//!
+//! ```text
+//! |score − Q| ≤ Σ_sub ‖q_sub‖₂·maxres_sub   (Cauchy–Schwarz, reconstruction)
+//!             + m · scale/2                  (LUT quantization)
+//!             + fp slack                     (f32 kernel arithmetic)
+//! ```
+//!
+//! where `maxres_sub` is the largest subspace residual norm over encoded
+//! rows. The bound is far looser than SQ8's, so PQ certifies less often
+//! — a miss rides the tier ladder (`mips::two_stage`) down to SQ8/f32
+//! and correctness never depends on it firing.
+
+use crate::linalg::simd::{self, Kernel};
+use crate::mips::kmeans;
+
+/// Rows per scoring chunk (keeps the u32 scratch on the stack and the
+/// plane segments L1-resident across a batch's queries).
+const PQ_CHUNK: usize = 256;
+
+/// Product-quantized shadow copy of a row-major `[n × d]` f32 matrix.
+#[derive(Clone, Debug)]
+pub struct PqView {
+    /// subspaces
+    m: usize,
+    /// dims per subspace = d/m
+    dsub: usize,
+    /// codebook slots per subspace = 2^bits (actual count in `csub`)
+    k: usize,
+    /// bits per code (4 or 8)
+    bits: usize,
+    n: usize,
+    d: usize,
+    /// centroids, `[m × k × dsub]` (unused slots zeroed)
+    cents: Vec<f32>,
+    /// trained centroids per subspace (≤ k; tiny datasets train fewer)
+    csub: Vec<usize>,
+    /// plane-major codes: bits=8 → `[m × n]`, bits=4 → `[m × ⌈n/2⌉]`
+    /// nibble-packed (row r in byte r/2, even rows in the low nibble)
+    codes: Vec<u8>,
+    /// bytes per plane
+    stride: usize,
+    /// per-subspace max residual norm `max_r ‖x_sub − cent(code)‖₂`
+    maxres: Vec<f32>,
+    /// `max |x|` over the encoded matrix (fp-slack ingredient)
+    max_abs: f32,
+}
+
+/// A query encoded for PQ screening: u8-quantized lookup tables plus the
+/// exact offset/scale pair and the precomputed certificate bound.
+#[derive(Clone, Debug)]
+pub struct PqLut {
+    /// u8 table entries, `[m × k]` (shared step, per-subspace minima)
+    lut: Vec<u8>,
+    /// shared LUT quantization step
+    scale: f64,
+    /// `Σ_sub lmin[sub]` — the error-free offset part of every score
+    off_sum: f64,
+    /// per-query error bound (module docs)
+    eps: f32,
+}
+
+impl PqView {
+    /// Train per-subspace codebooks on a deterministic stride-subsample
+    /// of ≤ `train_n` rows and encode every row. `m` must divide `d`;
+    /// `bits` ∈ {4, 8}. `iters` is clamped to [1, 10] (codebooks of 16
+    /// or 256 sub-centroids converge in a handful of Lloyd steps).
+    pub fn train(
+        rows: &[f32],
+        d: usize,
+        m: usize,
+        bits: usize,
+        train_n: usize,
+        iters: usize,
+        seed: u64,
+    ) -> PqView {
+        assert!(m >= 1 && d > 0 && d % m == 0, "pq_m must divide d (got m={m}, d={d})");
+        assert!(bits == 4 || bits == 8, "pq_bits must be 4 or 8 (got {bits})");
+        let n = rows.len() / d;
+        debug_assert_eq!(rows.len(), n * d);
+        let dsub = d / m;
+        let k = 1usize << bits;
+        let stride = if bits == 4 { n.div_ceil(2) } else { n };
+        let mut pv = PqView {
+            m,
+            dsub,
+            k,
+            bits,
+            n,
+            d,
+            cents: vec![0f32; m * k * dsub],
+            csub: vec![0usize; m],
+            codes: vec![0u8; m * stride],
+            stride,
+            maxres: vec![0f32; m],
+            max_abs: 0.0,
+        };
+        if n == 0 {
+            return pv;
+        }
+        let tn = train_n.clamp(1, n);
+        let step = n.div_ceil(tn);
+        let picks: Vec<usize> = (0..n).step_by(step).collect();
+        let mut train_buf = vec![0f32; picks.len() * dsub];
+        let iters = iters.clamp(1, 10);
+        for sub in 0..m {
+            let off = sub * dsub;
+            for (t, &r) in picks.iter().enumerate() {
+                train_buf[t * dsub..(t + 1) * dsub]
+                    .copy_from_slice(&rows[r * d + off..r * d + off + dsub]);
+            }
+            let km = kmeans::train(
+                &train_buf,
+                picks.len(),
+                dsub,
+                k.min(picks.len()),
+                iters,
+                seed ^ ((sub as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            );
+            pv.csub[sub] = km.c;
+            pv.cents[sub * k * dsub..sub * k * dsub + km.c * dsub]
+                .copy_from_slice(&km.centroids);
+        }
+        pv.reencode(rows);
+        pv
+    }
+
+    /// Re-encode every row against the **unchanged** codebooks — the
+    /// compaction coherence hook (mirrors re-running the scalar views'
+    /// `encode`; codebooks stay fixed like the IVF coarse quantizer).
+    /// The nearest-centroid assignment pass is the whole cost of a PQ
+    /// (re-)encode — `n·m·2^bits·dsub` distance terms — and each
+    /// subspace owns its code plane and `maxres` entry, so the pass fans
+    /// out across subspaces on the scoped pool.
+    pub fn reencode(&mut self, rows: &[f32]) {
+        debug_assert_eq!(rows.len(), self.n * self.d);
+        if self.n == 0 {
+            return;
+        }
+        self.max_abs = rows.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        let (n, d, m) = (self.n, self.d, self.m);
+        let (dsub, k, bits, stride) = (self.dsub, self.k, self.bits, self.stride);
+        let cents = &self.cents;
+        let csub = &self.csub;
+        // threads only pay off once the assignment pass is substantial
+        let nthreads = if n * m * k >= (1 << 20) {
+            crate::util::pool::default_threads().min(m)
+        } else {
+            1
+        };
+        let parts = crate::util::pool::parallel_chunks(m, nthreads, |_, s0, e0| {
+            let mut planes = vec![0u8; (e0 - s0) * stride];
+            let mut worsts = vec![0f32; e0 - s0];
+            for sub in s0..e0 {
+                let off = sub * dsub;
+                let sc = &cents[sub * k * dsub..(sub + 1) * k * dsub];
+                let cs = csub[sub];
+                let plane = &mut planes[(sub - s0) * stride..(sub - s0 + 1) * stride];
+                let mut worst = 0f64;
+                for r in 0..n {
+                    let v = &rows[r * d + off..r * d + off + dsub];
+                    let (code, d2) = nearest(sc, cs, dsub, v);
+                    worst = worst.max(d2);
+                    if bits == 8 {
+                        plane[r] = code;
+                    } else if r % 2 == 0 {
+                        plane[r / 2] = (plane[r / 2] & 0xf0) | code;
+                    } else {
+                        plane[r / 2] = (plane[r / 2] & 0x0f) | (code << 4);
+                    }
+                }
+                worsts[sub - s0] = worst.sqrt() as f32;
+            }
+            (s0, planes, worsts)
+        });
+        for (s0, planes, worsts) in parts {
+            let nsub = worsts.len();
+            self.codes[s0 * stride..(s0 + nsub) * stride].copy_from_slice(&planes);
+            self.maxres[s0..s0 + nsub].copy_from_slice(&worsts);
+        }
+    }
+
+    /// Number of encoded rows.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Feature dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of subspaces.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Bits per subspace code.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    fn get_code(&self, sub: usize, r: usize) -> u8 {
+        if self.bits == 8 {
+            self.codes[sub * self.stride + r]
+        } else {
+            let b = self.codes[sub * self.stride + r / 2];
+            if r % 2 == 0 {
+                b & 0x0f
+            } else {
+                b >> 4
+            }
+        }
+    }
+
+    /// Build the per-query lookup tables and certificate bound.
+    pub fn encode_query(&self, q: &[f32]) -> PqLut {
+        debug_assert_eq!(q.len(), self.d);
+        let (m, k, dsub) = (self.m, self.k, self.dsub);
+        let mut lutf = vec![0f64; m * k];
+        let mut lmin = vec![0f64; m];
+        let mut span = 0f64;
+        let mut res_term = 0f64;
+        let l1: f64 = q.iter().map(|&x| x.abs() as f64).sum();
+        for sub in 0..m {
+            let qs = &q[sub * dsub..(sub + 1) * dsub];
+            let cents = &self.cents[sub * k * dsub..(sub + 1) * k * dsub];
+            let cs = self.csub[sub];
+            let mut mn = 0f64;
+            let mut mx = 0f64;
+            for c in 0..cs {
+                let cent = &cents[c * dsub..(c + 1) * dsub];
+                let mut s = 0f64;
+                for (a, b) in qs.iter().zip(cent) {
+                    s += *a as f64 * *b as f64;
+                }
+                lutf[sub * k + c] = s;
+                if c == 0 {
+                    mn = s;
+                    mx = s;
+                } else {
+                    mn = mn.min(s);
+                    mx = mx.max(s);
+                }
+            }
+            lmin[sub] = mn;
+            span = span.max(mx - mn);
+            let qn: f64 = qs.iter().map(|&a| a as f64 * a as f64).sum();
+            res_term += qn.sqrt() * self.maxres[sub] as f64;
+        }
+        let scale = span / 255.0;
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let mut lut = vec![0u8; m * k];
+        let mut off_sum = 0f64;
+        for sub in 0..m {
+            off_sum += lmin[sub];
+            for c in 0..self.csub[sub] {
+                lut[sub * k + c] =
+                    ((lutf[sub * k + c] - lmin[sub]) * inv).round().clamp(0.0, 255.0) as u8;
+            }
+        }
+        let lut_err = m as f64 * scale * 0.5;
+        let fp = (self.d as f64 + 2.0) * 1.2e-7 * self.max_abs as f64 * l1;
+        let eps = ((res_term + lut_err + fp) * 1.05 + 1e-12) as f32;
+        PqLut { lut, scale, off_sum, eps }
+    }
+
+    /// Uniform bound on `|exact score − PQ score|` for every encoded row
+    /// against `lut` (derived in [`encode_query`](Self::encode_query)).
+    pub fn error_bound(&self, lut: &PqLut) -> f32 {
+        lut.eps
+    }
+
+    /// PQ approximate scores for rows `[row_start, row_end)`:
+    /// `out[i] = Q_{row_start+i}` (module docs).
+    pub fn scores(&self, row_start: usize, row_end: usize, lut: &PqLut, out: &mut [f32]) {
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        debug_assert_eq!(out.len(), row_end - row_start);
+        debug_assert_eq!(lut.lut.len(), self.m * self.k);
+        let mut acc = [0u32; PQ_CHUNK];
+        let mut r = row_start;
+        while r < row_end {
+            let e = (r + PQ_CHUNK).min(row_end);
+            let nr = e - r;
+            self.accum_into(r, e, &lut.lut, &mut acc[..nr]);
+            let base = r - row_start;
+            for (o, &a) in out[base..base + nr].iter_mut().zip(&acc[..nr]) {
+                *o = (lut.scale * a as f64 + lut.off_sum) as f32;
+            }
+            r = e;
+        }
+    }
+
+    /// PQ scores for an explicit (gathered) id list — the scattered
+    /// candidate-screening form; per-score arithmetic identical to
+    /// [`scores`](Self::scores).
+    pub fn scores_ids(&self, ids: &[u32], lut: &PqLut, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len());
+        for (o, &id) in out.iter_mut().zip(ids) {
+            let r = id as usize;
+            debug_assert!(r < self.n);
+            let mut s = 0u32;
+            for sub in 0..self.m {
+                s += lut.lut[sub * self.k + self.get_code(sub, r) as usize] as u32;
+            }
+            *o = (lut.scale * s as f64 + lut.off_sum) as f32;
+        }
+    }
+
+    /// Multi-query PQ scores — query-major
+    /// `out[j·nr + i] = Q_{row_start+i}(luts[j])`. The whole batch works
+    /// through each [`PQ_CHUNK`]-row segment of the (tiny) code planes
+    /// while it is L1-resident, so codes stream from memory once per
+    /// batch. Bit-identical to per-query [`scores`](Self::scores) calls.
+    pub fn scores_batch(
+        &self,
+        row_start: usize,
+        row_end: usize,
+        luts: &[&PqLut],
+        out: &mut [f32],
+    ) {
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        let nr = row_end - row_start;
+        let nq = luts.len();
+        debug_assert_eq!(out.len(), nq * nr);
+        let mut acc = [0u32; PQ_CHUNK];
+        let mut r = row_start;
+        while r < row_end {
+            let e = (r + PQ_CHUNK).min(row_end);
+            let nrr = e - r;
+            for (j, lut) in luts.iter().enumerate() {
+                self.accum_into(r, e, &lut.lut, &mut acc[..nrr]);
+                let base = j * nr + (r - row_start);
+                for (o, &a) in out[base..base + nrr].iter_mut().zip(&acc[..nrr]) {
+                    *o = (lut.scale * a as f64 + lut.off_sum) as f32;
+                }
+            }
+            r = e;
+        }
+    }
+
+    /// Integer LUT sums for rows `[row_start, row_end)` into `acc`
+    /// (overwritten). Dispatches the 4-bit table-gather kernels when the
+    /// u16 lane accumulators cannot overflow (`m ≤ 256`); every kernel
+    /// computes the identical integers.
+    fn accum_into(&self, row_start: usize, row_end: usize, lut: &[u8], acc: &mut [u32]) {
+        debug_assert_eq!(acc.len(), row_end - row_start);
+        acc.iter_mut().for_each(|x| *x = 0);
+        match simd::kernel() {
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 if self.bits == 4 && self.m <= 256 => unsafe {
+                self.accum4_avx2(row_start, row_end, lut, acc)
+            },
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon if self.bits == 4 && self.m <= 256 => unsafe {
+                self.accum4_neon(row_start, row_end, lut, acc)
+            },
+            _ => self.accum_scalar(row_start, row_end, lut, acc),
+        }
+    }
+
+    /// Scalar LUT gather (the dispatch fallback, the 8-bit path, and the
+    /// test reference). Adds into `acc` over pre-zeroed entries.
+    fn accum_scalar(&self, row_start: usize, row_end: usize, lut: &[u8], acc: &mut [u32]) {
+        for sub in 0..self.m {
+            let l = &lut[sub * self.k..(sub + 1) * self.k];
+            let plane = &self.codes[sub * self.stride..(sub + 1) * self.stride];
+            if self.bits == 8 {
+                for (a, &c) in acc.iter_mut().zip(&plane[row_start..row_end]) {
+                    *a += l[c as usize] as u32;
+                }
+            } else {
+                for (i, r) in (row_start..row_end).enumerate() {
+                    let b = plane[r / 2];
+                    let c = if r % 2 == 0 { b & 0x0f } else { b >> 4 };
+                    acc[i] += l[c as usize] as u32;
+                }
+            }
+        }
+    }
+
+    /// AVX2 4-bit kernel: per subspace, `pshufb` gathers 32 rows' table
+    /// entries from the 16-byte LUT in one shuffle; entries accumulate in
+    /// u16 lanes (exact: `m ≤ 256` ⇒ sums ≤ 255·256 < 2¹⁶) and widen to
+    /// u32 on store. Scalar prologue/epilogue handle the odd-row nibble
+    /// phase and the ragged tail.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn accum4_avx2(&self, row_start: usize, row_end: usize, lut: &[u8], acc: &mut [u32]) {
+        use std::arch::x86_64::*;
+        let mut r = row_start;
+        if r % 2 == 1 && r < row_end {
+            self.accum_scalar(r, r + 1, lut, &mut acc[..1]);
+            r += 1;
+        }
+        let mask = _mm_set1_epi8(0x0f);
+        while r + 32 <= row_end {
+            let base = r - row_start;
+            let mut a0 = _mm256_setzero_si256(); // rows r..r+16, u16 lanes
+            let mut a1 = _mm256_setzero_si256(); // rows r+16..r+32
+            for sub in 0..self.m {
+                let raw = _mm_loadu_si128(
+                    self.codes.as_ptr().add(sub * self.stride + r / 2) as *const __m128i
+                );
+                let lo = _mm_and_si128(raw, mask);
+                let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
+                let tbl = _mm_loadu_si128(lut.as_ptr().add(sub * self.k) as *const __m128i);
+                let tlo = _mm_shuffle_epi8(tbl, lo);
+                let thi = _mm_shuffle_epi8(tbl, hi);
+                let even = _mm_unpacklo_epi8(tlo, thi); // rows r..r+16 in order
+                let odd = _mm_unpackhi_epi8(tlo, thi); // rows r+16..r+32
+                a0 = _mm256_add_epi16(a0, _mm256_cvtepu8_epi16(even));
+                a1 = _mm256_add_epi16(a1, _mm256_cvtepu8_epi16(odd));
+            }
+            store_u16_as_u32(a0, acc.as_mut_ptr().add(base));
+            store_u16_as_u32(a1, acc.as_mut_ptr().add(base + 16));
+            r += 32;
+        }
+        if r < row_end {
+            let base = r - row_start;
+            self.accum_scalar(r, row_end, lut, &mut acc[base..]);
+        }
+    }
+
+    /// NEON 4-bit kernel: `tbl` (vqtbl1q) gathers 32 rows' entries per
+    /// subspace from the 16-byte LUT; u16 widening accumulate, u32 store.
+    #[cfg(target_arch = "aarch64")]
+    #[target_feature(enable = "neon")]
+    unsafe fn accum4_neon(&self, row_start: usize, row_end: usize, lut: &[u8], acc: &mut [u32]) {
+        use std::arch::aarch64::*;
+        let mut r = row_start;
+        if r % 2 == 1 && r < row_end {
+            self.accum_scalar(r, r + 1, lut, &mut acc[..1]);
+            r += 1;
+        }
+        while r + 32 <= row_end {
+            let base = r - row_start;
+            let mut a = [vdupq_n_u16(0); 4]; // rows r+0..8, 8..16, 16..24, 24..32
+            for sub in 0..self.m {
+                let raw = vld1q_u8(self.codes.as_ptr().add(sub * self.stride + r / 2));
+                let lo = vandq_u8(raw, vdupq_n_u8(0x0f));
+                let hi = vshrq_n_u8::<4>(raw);
+                let tbl = vld1q_u8(lut.as_ptr().add(sub * self.k));
+                let tlo = vqtbl1q_u8(tbl, lo);
+                let thi = vqtbl1q_u8(tbl, hi);
+                let even = vzip1q_u8(tlo, thi); // rows r..r+16 in order
+                let odd = vzip2q_u8(tlo, thi); // rows r+16..r+32
+                a[0] = vaddw_u8(a[0], vget_low_u8(even));
+                a[1] = vaddw_u8(a[1], vget_high_u8(even));
+                a[2] = vaddw_u8(a[2], vget_low_u8(odd));
+                a[3] = vaddw_u8(a[3], vget_high_u8(odd));
+            }
+            for (t, &av) in a.iter().enumerate() {
+                vst1q_u32(acc.as_mut_ptr().add(base + t * 8), vmovl_u16(vget_low_u16(av)));
+                vst1q_u32(
+                    acc.as_mut_ptr().add(base + t * 8 + 4),
+                    vmovl_u16(vget_high_u16(av)),
+                );
+            }
+            r += 32;
+        }
+        if r < row_end {
+            let base = r - row_start;
+            self.accum_scalar(r, row_end, lut, &mut acc[base..]);
+        }
+    }
+}
+
+/// Widen 16 u16 lanes to u32 and store (AVX2 helper).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn store_u16_as_u32(v: std::arch::x86_64::__m256i, dst: *mut u32) {
+    use std::arch::x86_64::*;
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256::<1>(v);
+    _mm256_storeu_si256(dst as *mut __m256i, _mm256_cvtepu16_epi32(lo));
+    _mm256_storeu_si256(dst.add(8) as *mut __m256i, _mm256_cvtepu16_epi32(hi));
+}
+
+/// Nearest centroid among the first `cs` of `cents` (L2), returning
+/// `(code, squared distance)` — the assignment step of encoding.
+fn nearest(cents: &[f32], cs: usize, dsub: usize, v: &[f32]) -> (u8, f64) {
+    let mut best = 0usize;
+    let mut bd = f64::INFINITY;
+    for c in 0..cs {
+        let cent = &cents[c * dsub..(c + 1) * dsub];
+        let mut s = 0f64;
+        for (x, y) in v.iter().zip(cent) {
+            let df = (x - y) as f64;
+            s += df * df;
+        }
+        if s < bd {
+            bd = s;
+            best = c;
+        }
+    }
+    (best as u8, bd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+    use crate::util::check::Checker;
+    use crate::util::rng::Pcg64;
+
+    fn random_rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n * d).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn property_pq_error_bound_holds_per_row() {
+        // the certificate contract: |exact − Q| ≤ ε for EVERY row, across
+        // dims, subspace counts, and both code widths
+        Checker::new(61).cases(40).check_u64(1u64 << 32, |seed| {
+            let mut rng = Pcg64::new(seed ^ 0x90);
+            let n = 50 + rng.next_below(300) as usize;
+            let dsub = 1 + rng.next_below(6) as usize;
+            let m = 1 + rng.next_below(8) as usize;
+            let d = m * dsub;
+            let rows = random_rows(n, d, seed);
+            let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            for bits in [4usize, 8] {
+                let pv = PqView::train(&rows, d, m, bits, n, 5, seed);
+                let lut = pv.encode_query(&q);
+                let eps = pv.error_bound(&lut) as f64;
+                let mut out = vec![0f32; n];
+                pv.scores(0, n, &lut, &mut out);
+                for r in 0..n {
+                    let exact = linalg::dot(&rows[r * d..(r + 1) * d], &q) as f64;
+                    if (exact - out[r] as f64).abs() > eps {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn simd_accum_matches_scalar_on_ragged_ranges() {
+        // the 4-bit table-gather kernel vs the scalar reference, across
+        // odd starts (nibble phase), 32-row blocks, and ragged tails
+        let (n, d, m) = (301usize, 16usize, 8usize);
+        let rows = random_rows(n, d, 7);
+        let pv = PqView::train(&rows, d, m, 4, n, 4, 9);
+        let mut rng = Pcg64::new(11);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let lut = pv.encode_query(&q);
+        for (s, e) in [(0usize, 301usize), (1, 300), (3, 36), (0, 31), (32, 96), (299, 301)] {
+            let mut got = vec![0u32; e - s];
+            pv.accum_into(s, e, &lut.lut, &mut got);
+            let mut want = vec![0u32; e - s];
+            pv.accum_scalar(s, e, &lut.lut, &mut want);
+            assert_eq!(got, want, "range=({s},{e})");
+        }
+    }
+
+    #[test]
+    fn scores_forms_are_bit_identical() {
+        // contiguous, scattered, and batched scoring must agree bit for
+        // bit on the same rows for both code widths
+        let (n, d, m) = (150usize, 12usize, 4usize);
+        let rows = random_rows(n, d, 3);
+        let mut rng = Pcg64::new(5);
+        for bits in [4usize, 8] {
+            let pv = PqView::train(&rows, d, m, bits, n, 4, 13);
+            let qs: Vec<Vec<f32>> = (0..5)
+                .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+                .collect();
+            let luts: Vec<PqLut> = qs.iter().map(|q| pv.encode_query(q)).collect();
+            let refs: Vec<&PqLut> = luts.iter().collect();
+            let mut batch = vec![0f32; 5 * n];
+            pv.scores_batch(0, n, &refs, &mut batch);
+            for (j, lut) in luts.iter().enumerate() {
+                let mut single = vec![0f32; n];
+                pv.scores(0, n, lut, &mut single);
+                for (a, b) in batch[j * n..(j + 1) * n].iter().zip(&single) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} q={j}");
+                }
+                let ids: Vec<u32> = (0..n as u32).rev().collect();
+                let mut scattered = vec![0f32; n];
+                pv.scores_ids(&ids, lut, &mut scattered);
+                for (i, &id) in ids.iter().enumerate() {
+                    assert_eq!(
+                        scattered[i].to_bits(),
+                        single[id as usize].to_bits(),
+                        "bits={bits} q={j} id={id}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reencode_after_row_change_restores_bound() {
+        // rewriting rows and re-encoding must keep the bound sound for
+        // the new contents (codebooks unchanged)
+        let (n, d, m) = (80usize, 8usize, 4usize);
+        let mut rows = random_rows(n, d, 21);
+        let mut pv = PqView::train(&rows, d, m, 4, n, 4, 23);
+        let mut rng = Pcg64::new(25);
+        for x in rows[10 * d..14 * d].iter_mut() {
+            *x = 3.0 + rng.gaussian() as f32; // far outside the codebooks
+        }
+        pv.reencode(&rows);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let lut = pv.encode_query(&q);
+        let eps = pv.error_bound(&lut) as f64;
+        let mut out = vec![0f32; n];
+        pv.scores(0, n, &lut, &mut out);
+        for r in 0..n {
+            let exact = linalg::dot(&rows[r * d..(r + 1) * d], &q) as f64;
+            assert!((exact - out[r] as f64).abs() <= eps, "row {r}");
+        }
+    }
+
+    #[test]
+    fn tiny_and_empty_datasets() {
+        // n < 2^bits trains fewer centroids; n = 0 must not panic
+        let pv = PqView::train(&[], 8, 2, 4, 10, 3, 1);
+        assert_eq!(pv.n(), 0);
+        let lut = pv.encode_query(&[0.0; 8]);
+        assert!(pv.error_bound(&lut) >= 0.0);
+        let rows = random_rows(3, 8, 2);
+        let pv = PqView::train(&rows, 8, 2, 8, 10, 3, 1);
+        assert_eq!(pv.n(), 3);
+        let q = vec![1.0f32; 8];
+        let lut = pv.encode_query(&q);
+        let mut out = vec![0f32; 3];
+        pv.scores(0, 3, &lut, &mut out);
+        let eps = pv.error_bound(&lut) as f64;
+        for r in 0..3 {
+            let exact = linalg::dot(&rows[r * 8..(r + 1) * 8], &q) as f64;
+            assert!((exact - out[r] as f64).abs() <= eps);
+        }
+    }
+}

@@ -71,6 +71,22 @@
 //! `vmlal_s16` chains, and the portable fallback is an unrolled scalar
 //! loop. All three produce the same exact integer, so quantized scores
 //! are identical across kernels.
+//!
+//! ## SQ4 and multi-query batching
+//!
+//! [`Sq4View`] packs **4-bit** codes two per byte (⅛ of the f32 row
+//! bandwidth) with the identical per-block affine scheme at 15 levels —
+//! the whole error-bound/certificate algebra above carries over with the
+//! wider step `scale = (max − min)/15`, so SQ4 certifies less often and
+//! rides the tier ladder (see `mips::two_stage`) down to SQ8/f32 when it
+//! cannot. The multi-query entry points
+//! ([`QuantView::scores_batch`]/[`Sq4View::scores_batch`]) stream each
+//! code block **once per batch**: the register-blocked `_x4` kernels
+//! widen every row's codes once and run four queries' `madd`
+//! accumulations against the shared registers (mirroring
+//! `simd::matvec_block_multi` for f32), producing exactly the integers
+//! the single-query kernels produce — batch output is bit-identical to
+//! per-query calls.
 
 use crate::linalg::simd::{self, Kernel};
 
@@ -222,10 +238,7 @@ impl QuantView {
     /// underflows below fp noise. A 5% fudge absorbs the rounding of the
     /// bound arithmetic itself.
     pub fn error_bound(&self, qq: &QuantQuery) -> f32 {
-        let quant = self.max_scaled_csum as f64 * (qq.scale as f64) * 0.5
-            + self.max_scale as f64 * 0.5 * (qq.l1 as f64);
-        let fp = (self.d as f64 + 2.0) * 1.2e-7 * self.max_abs as f64 * qq.l1 as f64;
-        ((quant + fp) * 1.05 + 1e-12) as f32
+        affine_error_bound(self.max_scaled_csum, self.max_scale, self.max_abs, self.d, qq)
     }
 
     /// Quantized approximate scores for an explicit (gathered) id list:
@@ -282,6 +295,78 @@ impl QuantView {
             r = seg_end;
         }
     }
+
+    /// Multi-query quantized scores for rows `[row_start, row_end)` —
+    /// query-major output: `out[j·nr + i] = Q_{row_start+i}(qqs[j])`.
+    /// Each code block streams from memory once for the whole batch (the
+    /// register-blocked 4-query kernel shares every row's widened codes),
+    /// and each integer dot is the exact integer the single-query kernel
+    /// computes, so the output is bit-identical to per-query
+    /// [`scores`](Self::scores) calls.
+    pub fn scores_batch(
+        &self,
+        row_start: usize,
+        row_end: usize,
+        qqs: &[&QuantQuery],
+        out: &mut [f32],
+    ) {
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        let nr = row_end - row_start;
+        let nq = qqs.len();
+        debug_assert_eq!(out.len(), nq * nr);
+        if nq == 0 || nr == 0 {
+            return;
+        }
+        let d = self.d;
+        // allocation-free: the integer scratch covers QGROUP queries per
+        // code chunk on the stack; the chunk's codes stay L1-resident
+        // across query groups, so larger batches still stream each code
+        // block from memory once
+        const QGROUP: usize = 8;
+        let mut ibuf = [0i32; QGROUP * QCHUNK];
+        let mut r = row_start;
+        while r < row_end {
+            let b = r / self.block;
+            let seg_end = row_end.min((b + 1) * self.block);
+            let mut s = r;
+            while s < seg_end {
+                let e = seg_end.min(s + QCHUNK);
+                let m = e - s;
+                for (g, qgrp) in qqs.chunks(QGROUP).enumerate() {
+                    let gl = qgrp.len();
+                    matvec_u8i16_batch(&self.codes[s * d..e * d], d, qgrp, &mut ibuf[..gl * m]);
+                    for (jj, qq) in qgrp.iter().enumerate() {
+                        debug_assert_eq!(qq.codes.len(), d);
+                        let sc = self.scales[b] as f64 * qq.scale as f64;
+                        let off = self.offsets[b] as f64 * qq.sumq as f64;
+                        let base = (g * QGROUP + jj) * nr + (s - row_start);
+                        let ips = &ibuf[jj * m..(jj + 1) * m];
+                        for (o, &ip) in out[base..base + m].iter_mut().zip(ips) {
+                            *o = (sc * ip as f64 + off) as f32;
+                        }
+                    }
+                }
+                s = e;
+            }
+            r = seg_end;
+        }
+    }
+}
+
+/// The shared error-bound arithmetic of the affine (SQ8/SQ4) views: the
+/// quantization terms from the module-doc derivation plus the
+/// deterministic fp slack described on [`QuantView::error_bound`].
+fn affine_error_bound(
+    max_scaled_csum: f32,
+    max_scale: f32,
+    max_abs: f32,
+    d: usize,
+    qq: &QuantQuery,
+) -> f32 {
+    let quant = max_scaled_csum as f64 * (qq.scale as f64) * 0.5
+        + max_scale as f64 * 0.5 * (qq.l1 as f64);
+    let fp = (d as f64 + 2.0) * 1.2e-7 * max_abs as f64 * qq.l1 as f64;
+    ((quant + fp) * 1.05 + 1e-12) as f32
 }
 
 /// A query encoded for the integer screening pass.
@@ -334,6 +419,231 @@ impl QuantQuery {
 #[inline]
 pub fn coverage_proved(dropped: bool, q_floor: f32, eps: f32, kth_exact: f32) -> bool {
     !dropped || q_floor + eps < kth_exact
+}
+
+// ---------------------------------------------------------------------------
+// SQ4: packed 4-bit scalar quantization
+// ---------------------------------------------------------------------------
+
+/// Packed 4-bit (SQ4) shadow copy of a row-major `[n × d]` f32 matrix:
+/// the [`QuantView`] scheme at 15 levels with two codes per byte (row
+/// stride `⌈d/2⌉` bytes — ⅛ of the f32 row bandwidth). Dimension `j` of
+/// a row lives in byte `j/2`, even `j` in the low nibble. Scoring and
+/// the error bound mirror [`QuantView`] exactly, with
+/// `scale = (max − min)/15`.
+#[derive(Clone, Debug)]
+pub struct Sq4View {
+    /// packed nibble codes, row-major with `stride` bytes per row
+    codes: Vec<u8>,
+    n: usize,
+    d: usize,
+    /// bytes per row = ⌈d/2⌉
+    stride: usize,
+    /// rows per (scale, offset) block
+    block: usize,
+    scales: Vec<f32>,
+    offsets: Vec<f32>,
+    /// per-block `scale · max_row(Σ_j code_j)`
+    scaled_csums: Vec<f32>,
+    abs_maxes: Vec<f32>,
+    max_scale: f32,
+    max_scaled_csum: f32,
+    max_abs: f32,
+}
+
+impl Sq4View {
+    /// Encode a row-major `[n × d]` matrix with `block` rows per
+    /// `(scale, offset)` pair.
+    pub fn encode(rows: &[f32], d: usize, block: usize) -> Sq4View {
+        let block = block.max(1);
+        let n = if d == 0 { 0 } else { rows.len() / d };
+        debug_assert_eq!(rows.len(), n * d);
+        let stride = d.div_ceil(2);
+        let nblocks = n.div_ceil(block);
+        let mut qv = Sq4View {
+            codes: vec![0u8; n * stride],
+            n,
+            d,
+            stride,
+            block,
+            scales: vec![0f32; nblocks],
+            offsets: vec![0f32; nblocks],
+            scaled_csums: vec![0f32; nblocks],
+            abs_maxes: vec![0f32; nblocks],
+            max_scale: 0.0,
+            max_scaled_csum: 0.0,
+            max_abs: 0.0,
+        };
+        for b in 0..nblocks {
+            qv.encode_block(rows, b);
+        }
+        qv.max_scale = qv.scales.iter().cloned().fold(0.0, f32::max);
+        qv.max_scaled_csum = qv.scaled_csums.iter().cloned().fold(0.0, f32::max);
+        qv.max_abs = qv.abs_maxes.iter().cloned().fold(0.0, f32::max);
+        qv
+    }
+
+    fn encode_block(&mut self, rows: &[f32], b: usize) {
+        let d = self.d;
+        let lo = b * self.block;
+        let hi = ((b + 1) * self.block).min(self.n);
+        let vals = &rows[lo * d..hi * d];
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        let mut amax = 0f32;
+        for &x in vals {
+            mn = mn.min(x);
+            mx = mx.max(x);
+            amax = amax.max(x.abs());
+        }
+        let (scale, offset) = if mx > mn { ((mx - mn) / 15.0, mn) } else { (0.0, mn) };
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let mut csum_max = 0u32;
+        for r in lo..hi {
+            let mut csum = 0u32;
+            let row = &mut self.codes[r * self.stride..(r + 1) * self.stride];
+            row.iter_mut().for_each(|x| *x = 0);
+            for j in 0..d {
+                let x = rows[r * d + j];
+                let c = if scale > 0.0 {
+                    ((x - offset) * inv).round().clamp(0.0, 15.0) as u8
+                } else {
+                    0u8
+                };
+                row[j / 2] |= if j % 2 == 0 { c } else { c << 4 };
+                csum += c as u32;
+            }
+            csum_max = csum_max.max(csum);
+        }
+        self.scales[b] = scale;
+        self.offsets[b] = offset;
+        self.scaled_csums[b] = scale * csum_max as f32;
+        self.abs_maxes[b] = amax;
+    }
+
+    /// Number of encoded rows.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Feature dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rows per quantization block.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Uniform bound on `|exact score − quantized score|` for every row
+    /// against `qq` — the [`QuantView::error_bound`] algebra with the
+    /// 15-level step.
+    pub fn error_bound(&self, qq: &QuantQuery) -> f32 {
+        affine_error_bound(self.max_scaled_csum, self.max_scale, self.max_abs, self.d, qq)
+    }
+
+    /// Quantized scores for an explicit (gathered) id list — the
+    /// scattered candidate-screening form, per-score arithmetic identical
+    /// to [`scores`](Self::scores).
+    pub fn scores_ids(&self, ids: &[u32], qq: &QuantQuery, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ids.len());
+        debug_assert_eq!(qq.codes.len(), self.d);
+        let sq = qq.scale as f64;
+        let sumq = qq.sumq as f64;
+        for (o, &id) in out.iter_mut().zip(ids) {
+            let r = id as usize;
+            debug_assert!(r < self.n);
+            let b = r / self.block;
+            let sc = self.scales[b] as f64 * sq;
+            let off = self.offsets[b] as f64 * sumq;
+            let ip =
+                dot_u4i16(&self.codes[r * self.stride..(r + 1) * self.stride], self.d, &qq.codes);
+            *o = (sc * ip as f64 + off) as f32;
+        }
+    }
+
+    /// Quantized scores for rows `[row_start, row_end)` —
+    /// `out[i] = Q_{row_start + i}`, mirroring [`QuantView::scores`].
+    pub fn scores(&self, row_start: usize, row_end: usize, qq: &QuantQuery, out: &mut [f32]) {
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        debug_assert_eq!(out.len(), row_end - row_start);
+        debug_assert_eq!(qq.codes.len(), self.d);
+        let sq = qq.scale as f64;
+        let sumq = qq.sumq as f64;
+        let mut r = row_start;
+        while r < row_end {
+            let b = r / self.block;
+            let seg_end = row_end.min((b + 1) * self.block);
+            let sc = self.scales[b] as f64 * sq;
+            let off = self.offsets[b] as f64 * sumq;
+            for rr in r..seg_end {
+                let ip = dot_u4i16(
+                    &self.codes[rr * self.stride..(rr + 1) * self.stride],
+                    self.d,
+                    &qq.codes,
+                );
+                out[rr - row_start] = (sc * ip as f64 + off) as f32;
+            }
+            r = seg_end;
+        }
+    }
+
+    /// Multi-query SQ4 scores — query-major
+    /// `out[j·nr + i] = Q_{row_start+i}(qqs[j])`, streaming each packed
+    /// code row once per batch via the register-blocked 4-query kernel.
+    /// Bit-identical to per-query [`scores`](Self::scores) calls.
+    pub fn scores_batch(
+        &self,
+        row_start: usize,
+        row_end: usize,
+        qqs: &[&QuantQuery],
+        out: &mut [f32],
+    ) {
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        let nr = row_end - row_start;
+        let nq = qqs.len();
+        debug_assert_eq!(out.len(), nq * nr);
+        if nq == 0 || nr == 0 {
+            return;
+        }
+        let mut r = row_start;
+        while r < row_end {
+            let b = r / self.block;
+            let seg_end = row_end.min((b + 1) * self.block);
+            for rr in r..seg_end {
+                let row = &self.codes[rr * self.stride..(rr + 1) * self.stride];
+                let i = rr - row_start;
+                let mut j = 0;
+                while j + 4 <= nq {
+                    let s = dot_u4i16_x4(
+                        row,
+                        self.d,
+                        &qqs[j].codes,
+                        &qqs[j + 1].codes,
+                        &qqs[j + 2].codes,
+                        &qqs[j + 3].codes,
+                    );
+                    for (t, &ip) in s.iter().enumerate() {
+                        let qq = qqs[j + t];
+                        let sc = self.scales[b] as f64 * qq.scale as f64;
+                        let off = self.offsets[b] as f64 * qq.sumq as f64;
+                        out[(j + t) * nr + i] = (sc * ip as f64 + off) as f32;
+                    }
+                    j += 4;
+                }
+                while j < nq {
+                    let qq = qqs[j];
+                    let sc = self.scales[b] as f64 * qq.scale as f64;
+                    let off = self.offsets[b] as f64 * qq.sumq as f64;
+                    let ip = dot_u4i16(row, self.d, &qq.codes);
+                    out[j * nr + i] = (sc * ip as f64 + off) as f32;
+                    j += 1;
+                }
+            }
+            r = seg_end;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -398,6 +708,128 @@ fn dot_u8i16_scalar(codes: &[u8], u: &[i16]) -> i32 {
     s0 + s1 + s2 + s3 + tail
 }
 
+/// Multi-query integer scores for a contiguous code block — query-major
+/// `out[j·nrows + r] = Σ_t codes[r·d + t]·qqs[j].codes[t]`. Register-
+/// blocked: each row's codes are widened once and accumulated against 4
+/// queries at a time, so the batch streams the code block once instead
+/// of once per query. Every integer equals the single-query kernel's.
+fn matvec_u8i16_batch(codes: &[u8], d: usize, qqs: &[&QuantQuery], out: &mut [i32]) {
+    let nq = qqs.len();
+    if d == 0 {
+        out.iter_mut().for_each(|x| *x = 0);
+        return;
+    }
+    let nrows = codes.len() / d;
+    debug_assert_eq!(codes.len(), nrows * d);
+    debug_assert_eq!(out.len(), nq * nrows);
+    for r in 0..nrows {
+        let row = &codes[r * d..(r + 1) * d];
+        let mut j = 0;
+        while j + 4 <= nq {
+            let s = dot_u8i16_x4(
+                row,
+                &qqs[j].codes,
+                &qqs[j + 1].codes,
+                &qqs[j + 2].codes,
+                &qqs[j + 3].codes,
+            );
+            for (t, &ip) in s.iter().enumerate() {
+                out[(j + t) * nrows + r] = ip;
+            }
+            j += 4;
+        }
+        while j < nq {
+            out[j * nrows + r] = dot_u8i16(row, &qqs[j].codes);
+            j += 1;
+        }
+    }
+}
+
+/// Four-query u8×i16 dot sharing one widening pass over the codes. All
+/// kernels produce exactly the integers [`dot_u8i16`] would per query.
+#[inline]
+fn dot_u8i16_x4(codes: &[u8], u0: &[i16], u1: &[i16], u2: &[i16], u3: &[i16]) -> [i32; 4] {
+    debug_assert!(
+        codes.len() == u0.len()
+            && codes.len() == u1.len()
+            && codes.len() == u2.len()
+            && codes.len() == u3.len()
+    );
+    match simd::kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dot_x4(codes, u0, u1, u2, u3) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dot_x4(codes, u0, u1, u2, u3) },
+        _ => [
+            dot_u8i16_scalar(codes, u0),
+            dot_u8i16_scalar(codes, u1),
+            dot_u8i16_scalar(codes, u2),
+            dot_u8i16_scalar(codes, u3),
+        ],
+    }
+}
+
+/// Exact integer dot over one packed-nibble row:
+/// `Σ_j nibble_j(codes)·u[j]` (4-bit codes × i16 query codes → i32;
+/// overflow-free a fortiori under the [`QuantQuery::encode`] range cap,
+/// since every code is ≤ 15 < 255). All kernels compute the identical
+/// integer.
+#[inline]
+fn dot_u4i16(codes: &[u8], d: usize, u: &[i16]) -> i32 {
+    debug_assert_eq!(codes.len(), d.div_ceil(2));
+    debug_assert_eq!(u.len(), d);
+    match simd::kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dot4(codes, d, u) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dot4(codes, d, u) },
+        _ => dot_u4i16_scalar(codes, d, u),
+    }
+}
+
+/// Four-query packed-nibble dot sharing one unpacking pass.
+#[inline]
+fn dot_u4i16_x4(
+    codes: &[u8],
+    d: usize,
+    u0: &[i16],
+    u1: &[i16],
+    u2: &[i16],
+    u3: &[i16],
+) -> [i32; 4] {
+    debug_assert_eq!(codes.len(), d.div_ceil(2));
+    debug_assert!(u0.len() == d && u1.len() == d && u2.len() == d && u3.len() == d);
+    match simd::kernel() {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { avx2::dot4_x4(codes, d, u0, u1, u2, u3) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dot4_x4(codes, d, u0, u1, u2, u3) },
+        _ => [
+            dot_u4i16_scalar(codes, d, u0),
+            dot_u4i16_scalar(codes, d, u1),
+            dot_u4i16_scalar(codes, d, u2),
+            dot_u4i16_scalar(codes, d, u3),
+        ],
+    }
+}
+
+/// Unrolled scalar packed-nibble dot — the dispatch fallback and the
+/// test reference (two independent accumulators over the nibble pair).
+fn dot_u4i16_scalar(codes: &[u8], d: usize, u: &[i16]) -> i32 {
+    let pairs = d / 2;
+    let (mut s0, mut s1) = (0i32, 0i32);
+    for p in 0..pairs {
+        let b = codes[p];
+        s0 += (b & 0x0f) as i32 * u[2 * p] as i32;
+        s1 += (b >> 4) as i32 * u[2 * p + 1] as i32;
+    }
+    let mut s = s0 + s1;
+    if d % 2 == 1 {
+        s += (codes[pairs] & 0x0f) as i32 * u[d - 1] as i32;
+    }
+    s
+}
+
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use std::arch::x86_64::*;
@@ -445,6 +877,143 @@ mod avx2 {
             *o = dot_raw(codes.as_ptr().add(r * d), u.as_ptr(), d);
         }
     }
+
+    /// 4-query u8×i16 dot: each 16-code chunk is widened once and
+    /// `madd`-accumulated into four per-query i32 accumulators — the
+    /// register-blocked kernel behind the multi-query batch scan. Each
+    /// lane follows the exact arithmetic of [`dot_raw`], so per-query
+    /// integers are identical to single-query calls.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_x4_raw(
+        c: *const u8,
+        u0: *const i16,
+        u1: *const i16,
+        u2: *const i16,
+        u3: *const i16,
+        n: usize,
+    ) -> [i32; 4] {
+        let chunks = n / 16;
+        let mut a0 = _mm256_setzero_si256();
+        let mut a1 = _mm256_setzero_si256();
+        let mut a2 = _mm256_setzero_si256();
+        let mut a3 = _mm256_setzero_si256();
+        for k in 0..chunks {
+            let i = k * 16;
+            let cv = _mm256_cvtepu8_epi16(_mm_loadu_si128(c.add(i) as *const __m128i));
+            let l0 = _mm256_loadu_si256(u0.add(i) as *const __m256i);
+            let l1 = _mm256_loadu_si256(u1.add(i) as *const __m256i);
+            let l2 = _mm256_loadu_si256(u2.add(i) as *const __m256i);
+            let l3 = _mm256_loadu_si256(u3.add(i) as *const __m256i);
+            a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(cv, l0));
+            a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(cv, l1));
+            a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(cv, l2));
+            a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(cv, l3));
+        }
+        let mut s = [hsum_i32(a0), hsum_i32(a1), hsum_i32(a2), hsum_i32(a3)];
+        for i in chunks * 16..n {
+            let cc = *c.add(i) as i32;
+            s[0] += cc * *u0.add(i) as i32;
+            s[1] += cc * *u1.add(i) as i32;
+            s[2] += cc * *u2.add(i) as i32;
+            s[3] += cc * *u3.add(i) as i32;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_x4(
+        codes: &[u8],
+        u0: &[i16],
+        u1: &[i16],
+        u2: &[i16],
+        u3: &[i16],
+    ) -> [i32; 4] {
+        dot_x4_raw(codes.as_ptr(), u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr(), codes.len())
+    }
+
+    /// Unpack 16 packed bytes (32 nibble codes, dim `2p` in byte `p`'s
+    /// low nibble) into two i16×16 vectors in dimension order. The
+    /// `srli_epi16`+mask idiom pulls high nibbles per byte; the
+    /// `unpacklo/hi` interleave restores even/odd dimension order.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack32(raw: __m128i) -> (__m256i, __m256i) {
+        let mask = _mm_set1_epi8(0x0f);
+        let lo = _mm_and_si128(raw, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
+        let even = _mm_unpacklo_epi8(lo, hi); // dims 0..16 in order
+        let odd = _mm_unpackhi_epi8(lo, hi); // dims 16..32
+        (_mm256_cvtepu8_epi16(even), _mm256_cvtepu8_epi16(odd))
+    }
+
+    /// Packed-nibble (SQ4) × i16 dot: 32 dims per iteration through
+    /// [`unpack32`], two `madd` accumulations per chunk; scalar tail.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_raw(c: *const u8, u: *const i16, d: usize) -> i32 {
+        let chunks = d / 32;
+        let mut acc = _mm256_setzero_si256();
+        for k in 0..chunks {
+            let raw = _mm_loadu_si128(c.add(k * 16) as *const __m128i);
+            let (cv0, cv1) = unpack32(raw);
+            let uv0 = _mm256_loadu_si256(u.add(k * 32) as *const __m256i);
+            let uv1 = _mm256_loadu_si256(u.add(k * 32 + 16) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv0, uv0));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv1, uv1));
+        }
+        let mut s = hsum_i32(acc);
+        for j in chunks * 32..d {
+            let b = *c.add(j / 2);
+            let nib = if j % 2 == 0 { b & 0x0f } else { b >> 4 };
+            s += nib as i32 * *u.add(j) as i32;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4(codes: &[u8], d: usize, u: &[i16]) -> i32 {
+        dot4_raw(codes.as_ptr(), u.as_ptr(), d)
+    }
+
+    /// 4-query packed-nibble dot: nibbles unpacked once per 32-dim chunk,
+    /// `madd`-accumulated against four queries' codes.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4_x4(
+        codes: &[u8],
+        d: usize,
+        u0: &[i16],
+        u1: &[i16],
+        u2: &[i16],
+        u3: &[i16],
+    ) -> [i32; 4] {
+        let c = codes.as_ptr();
+        let us = [u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr()];
+        let chunks = d / 32;
+        let mut acc = [
+            _mm256_setzero_si256(),
+            _mm256_setzero_si256(),
+            _mm256_setzero_si256(),
+            _mm256_setzero_si256(),
+        ];
+        for k in 0..chunks {
+            let raw = _mm_loadu_si128(c.add(k * 16) as *const __m128i);
+            let (cv0, cv1) = unpack32(raw);
+            for (a, &u) in acc.iter_mut().zip(&us) {
+                let uv0 = _mm256_loadu_si256(u.add(k * 32) as *const __m256i);
+                let uv1 = _mm256_loadu_si256(u.add(k * 32 + 16) as *const __m256i);
+                *a = _mm256_add_epi32(*a, _mm256_madd_epi16(cv0, uv0));
+                *a = _mm256_add_epi32(*a, _mm256_madd_epi16(cv1, uv1));
+            }
+        }
+        let mut s = [hsum_i32(acc[0]), hsum_i32(acc[1]), hsum_i32(acc[2]), hsum_i32(acc[3])];
+        for j in chunks * 32..d {
+            let b = *c.add(j / 2);
+            let nib = (if j % 2 == 0 { b & 0x0f } else { b >> 4 }) as i32;
+            for (t, &u) in us.iter().enumerate() {
+                s[t] += nib * *u.add(j) as i32;
+            }
+        }
+        s
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -481,6 +1050,132 @@ mod neon {
         for (r, o) in out.iter_mut().enumerate() {
             *o = dot_raw(codes.as_ptr().add(r * d), u.as_ptr(), d);
         }
+    }
+
+    /// 4-query u8×i16 dot: codes widened once per 8-code chunk, `vmlal`
+    /// chains into four per-query accumulators (register-blocked batch
+    /// kernel; per-query integers identical to [`dot_raw`]).
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_x4_raw(
+        c: *const u8,
+        u0: *const i16,
+        u1: *const i16,
+        u2: *const i16,
+        u3: *const i16,
+        n: usize,
+    ) -> [i32; 4] {
+        let chunks = n / 8;
+        let mut acc = [vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0)];
+        let us = [u0, u1, u2, u3];
+        for k in 0..chunks {
+            let i = k * 8;
+            let cv = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(c.add(i))));
+            let (clo, chi) = (vget_low_s16(cv), vget_high_s16(cv));
+            for (a, &u) in acc.iter_mut().zip(&us) {
+                let uv = vld1q_s16(u.add(i));
+                *a = vmlal_s16(*a, clo, vget_low_s16(uv));
+                *a = vmlal_s16(*a, chi, vget_high_s16(uv));
+            }
+        }
+        let mut s = [vaddvq_s32(acc[0]), vaddvq_s32(acc[1]), vaddvq_s32(acc[2]), vaddvq_s32(acc[3])];
+        for i in chunks * 8..n {
+            let cc = *c.add(i) as i32;
+            for (t, &u) in us.iter().enumerate() {
+                s[t] += cc * *u.add(i) as i32;
+            }
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_x4(
+        codes: &[u8],
+        u0: &[i16],
+        u1: &[i16],
+        u2: &[i16],
+        u3: &[i16],
+    ) -> [i32; 4] {
+        dot_x4_raw(codes.as_ptr(), u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr(), codes.len())
+    }
+
+    /// Unpack 8 packed bytes (16 nibble codes, dim `2p` in byte `p`'s low
+    /// nibble) into two i16×8 vectors in dimension order (`vzip`
+    /// interleave restores even/odd dims).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn unpack16(raw: uint8x8_t) -> (int16x8_t, int16x8_t) {
+        let lo = vand_u8(raw, vdup_n_u8(0x0f));
+        let hi = vshr_n_u8::<4>(raw);
+        let even = vzip1_u8(lo, hi); // dims 0..8 in order
+        let odd = vzip2_u8(lo, hi); // dims 8..16
+        (
+            vreinterpretq_s16_u16(vmovl_u8(even)),
+            vreinterpretq_s16_u16(vmovl_u8(odd)),
+        )
+    }
+
+    /// Packed-nibble (SQ4) × i16 dot: 16 dims per iteration.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot4_raw(c: *const u8, u: *const i16, d: usize) -> i32 {
+        let chunks = d / 16;
+        let mut acc = vdupq_n_s32(0);
+        for k in 0..chunks {
+            let (cv0, cv1) = unpack16(vld1_u8(c.add(k * 8)));
+            let uv0 = vld1q_s16(u.add(k * 16));
+            let uv1 = vld1q_s16(u.add(k * 16 + 8));
+            acc = vmlal_s16(acc, vget_low_s16(cv0), vget_low_s16(uv0));
+            acc = vmlal_s16(acc, vget_high_s16(cv0), vget_high_s16(uv0));
+            acc = vmlal_s16(acc, vget_low_s16(cv1), vget_low_s16(uv1));
+            acc = vmlal_s16(acc, vget_high_s16(cv1), vget_high_s16(uv1));
+        }
+        let mut s = vaddvq_s32(acc);
+        for j in chunks * 16..d {
+            let b = *c.add(j / 2);
+            let nib = if j % 2 == 0 { b & 0x0f } else { b >> 4 };
+            s += nib as i32 * *u.add(j) as i32;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot4(codes: &[u8], d: usize, u: &[i16]) -> i32 {
+        dot4_raw(codes.as_ptr(), u.as_ptr(), d)
+    }
+
+    /// 4-query packed-nibble dot: nibbles unpacked once per 16-dim chunk.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot4_x4(
+        codes: &[u8],
+        d: usize,
+        u0: &[i16],
+        u1: &[i16],
+        u2: &[i16],
+        u3: &[i16],
+    ) -> [i32; 4] {
+        let c = codes.as_ptr();
+        let us = [u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr()];
+        let chunks = d / 16;
+        let mut acc = [vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0)];
+        for k in 0..chunks {
+            let (cv0, cv1) = unpack16(vld1_u8(c.add(k * 8)));
+            for (a, &u) in acc.iter_mut().zip(&us) {
+                let uv0 = vld1q_s16(u.add(k * 16));
+                let uv1 = vld1q_s16(u.add(k * 16 + 8));
+                *a = vmlal_s16(*a, vget_low_s16(cv0), vget_low_s16(uv0));
+                *a = vmlal_s16(*a, vget_high_s16(cv0), vget_high_s16(uv0));
+                *a = vmlal_s16(*a, vget_low_s16(cv1), vget_low_s16(uv1));
+                *a = vmlal_s16(*a, vget_high_s16(cv1), vget_high_s16(uv1));
+            }
+        }
+        let mut s = [vaddvq_s32(acc[0]), vaddvq_s32(acc[1]), vaddvq_s32(acc[2]), vaddvq_s32(acc[3])];
+        for j in chunks * 16..d {
+            let b = *c.add(j / 2);
+            let nib = (if j % 2 == 0 { b & 0x0f } else { b >> 4 }) as i32;
+            for (t, &u) in us.iter().enumerate() {
+                s[t] += nib * *u.add(j) as i32;
+            }
+        }
+        s
     }
 }
 
@@ -672,6 +1367,154 @@ mod tests {
             for (i, &id) in ids.iter().enumerate() {
                 assert_eq!(out[i], full[id as usize], "block={block} id={id}");
             }
+        }
+    }
+
+    #[test]
+    fn simd_x4_dot_matches_scalar_on_ragged_lengths() {
+        // the register-blocked 4-query kernel must produce per-query
+        // integers identical to the single-query scalar reference
+        let mut rng = Pcg64::new(13);
+        for len in [0usize, 1, 7, 15, 16, 17, 33, 100, 300] {
+            let codes: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+            let us: Vec<Vec<i16>> = (0..4)
+                .map(|_| {
+                    (0..len).map(|_| (rng.next_below(32767) as i32 - 16383) as i16).collect()
+                })
+                .collect();
+            let got = dot_u8i16_x4(&codes, &us[0], &us[1], &us[2], &us[3]);
+            for (t, u) in us.iter().enumerate() {
+                assert_eq!(got[t], dot_u8i16_scalar(&codes, u), "len={len} q={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_u4_dot_matches_scalar_on_ragged_dims() {
+        // packed-nibble kernels (single and 4-query) vs the scalar
+        // reference across odd dims, nibble tails, and extreme values
+        let mut rng = Pcg64::new(14);
+        for d in [0usize, 1, 2, 3, 15, 16, 17, 31, 32, 33, 63, 64, 100, 257] {
+            let codes: Vec<u8> = (0..d.div_ceil(2)).map(|_| rng.next_below(256) as u8).collect();
+            let us: Vec<Vec<i16>> = (0..4)
+                .map(|_| (0..d).map(|_| (rng.next_below(32767) as i32 - 16383) as i16).collect())
+                .collect();
+            assert_eq!(dot_u4i16(&codes, d, &us[0]), dot_u4i16_scalar(&codes, d, &us[0]), "d={d}");
+            let got = dot_u4i16_x4(&codes, d, &us[0], &us[1], &us[2], &us[3]);
+            for (t, u) in us.iter().enumerate() {
+                assert_eq!(got[t], dot_u4i16_scalar(&codes, d, u), "d={d} q={t}");
+            }
+        }
+        // extreme values: all-15 nibbles against max-magnitude codes
+        for d in [32usize, 100] {
+            let codes = vec![0xffu8; d.div_ceil(2)];
+            let u = vec![16383i16; d];
+            assert_eq!(dot_u4i16(&codes, d, &u), 15 * 16383 * d as i32);
+        }
+    }
+
+    #[test]
+    fn property_sq4_error_bound_holds_per_row() {
+        Checker::new(43).cases(60).check_vec_with_param(600, 24, |xs, d| {
+            let n = xs.len() / d;
+            if n == 0 {
+                return true;
+            }
+            let rows = &xs[..n * d];
+            let q: Vec<f32> = (0..d).map(|j| (j as f32 * 0.9).cos() + xs[j % xs.len()]).collect();
+            for block in [1usize, 3, 64] {
+                let qv = Sq4View::encode(rows, d, block);
+                let qq = QuantQuery::encode(&q);
+                let eps = qv.error_bound(&qq) as f64;
+                let mut out = vec![0f32; n];
+                qv.scores(0, n, &qq, &mut out);
+                for r in 0..n {
+                    let exact = linalg::dot(&rows[r * d..(r + 1) * d], &q) as f64;
+                    if (exact - out[r] as f64).abs() > eps {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn sq4_scores_ids_and_ranges_consistent() {
+        let mut rng = Pcg64::new(15);
+        let (n, d) = (77usize, 9usize);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let qq = QuantQuery::encode(&q);
+        for block in [1usize, 5, 64] {
+            let qv = Sq4View::encode(&rows, d, block);
+            let mut full = vec![0f32; n];
+            qv.scores(0, n, &qq, &mut full);
+            for (s, e) in [(0usize, 0usize), (3, 29), (29, 77), (76, 77)] {
+                let mut part = vec![0f32; e - s];
+                qv.scores(s, e, &qq, &mut part);
+                assert_eq!(&part[..], &full[s..e], "block={block} range=({s},{e})");
+            }
+            let mut ids: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(30);
+            let mut out = vec![0f32; ids.len()];
+            qv.scores_ids(&ids, &qq, &mut out);
+            for (i, &id) in ids.iter().enumerate() {
+                assert_eq!(out[i], full[id as usize], "block={block} id={id}");
+            }
+        }
+    }
+
+    #[test]
+    fn scores_batch_bit_identical_to_single_query() {
+        // the multi-query kernels (SQ8 and SQ4) must produce exactly the
+        // single-query scores, for every batch size incl. the 4-query
+        // register blocks and their remainders
+        let mut rng = Pcg64::new(16);
+        let (n, d) = (130usize, 37usize);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let qv8 = QuantView::encode(&rows, d, 24);
+        let qv4 = Sq4View::encode(&rows, d, 24);
+        for nq in [1usize, 2, 3, 4, 5, 8, 9] {
+            let qs: Vec<Vec<f32>> = (0..nq)
+                .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+                .collect();
+            let qqs: Vec<QuantQuery> = qs.iter().map(|q| QuantQuery::encode(q)).collect();
+            let refs: Vec<&QuantQuery> = qqs.iter().collect();
+            for (s, e) in [(0usize, n), (5, 97)] {
+                let nr = e - s;
+                let mut batch8 = vec![0f32; nq * nr];
+                qv8.scores_batch(s, e, &refs, &mut batch8);
+                let mut batch4 = vec![0f32; nq * nr];
+                qv4.scores_batch(s, e, &refs, &mut batch4);
+                for (j, qq) in qqs.iter().enumerate() {
+                    let mut single = vec![0f32; nr];
+                    qv8.scores(s, e, qq, &mut single);
+                    for (a, b) in batch8[j * nr..(j + 1) * nr].iter().zip(&single) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "sq8 nq={nq} q={j}");
+                    }
+                    qv4.scores(s, e, qq, &mut single);
+                    for (a, b) in batch4[j * nr..(j + 1) * nr].iter().zip(&single) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "sq4 nq={nq} q={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sq4_constant_rows_encode_exactly() {
+        let d = 5;
+        let rows: Vec<f32> = vec![-0.4; 9 * d];
+        let qv = Sq4View::encode(&rows, d, 4);
+        let q: Vec<f32> = vec![1.0, -2.0, 0.5, 0.0, 3.0];
+        let qq = QuantQuery::encode(&q);
+        let mut out = vec![0f32; 9];
+        qv.scores(0, 9, &qq, &mut out);
+        let want = -0.4 * q.iter().sum::<f32>();
+        for (r, &got) in out.iter().enumerate() {
+            assert!((got - want).abs() < 1e-5, "row {r}: {got} vs {want}");
         }
     }
 

@@ -2,22 +2,25 @@
 //! compares against, and the correctness oracle for the approximate
 //! indexes.
 //!
-//! With [`with_quant`](BruteForce::with_quant) the scan becomes
-//! two-stage: pass 1 screens every row on SQ8 quantized scores (¼ of the
-//! memory traffic), pass 2 re-ranks the few survivors with the exact f32
-//! kernels. The error-bound/overscan contract of
-//! [`crate::linalg::quant`] guarantees the returned ids *and* f32 scores
-//! are bit-identical to the f32-only scan.
+//! With a quantized tier configured ([`with_tier_cfg`] /
+//! [`with_quant`]) the scan becomes two-stage: pass 1 screens every row
+//! on compressed codes (SQ8 ¼, SQ4 ⅛, PQ ~¹⁄₃₂ at its defaults),
+//! pass 2 re-ranks the few survivors with the exact f32 kernels. The
+//! error-bound/certificate contract of [`crate::linalg::quant`]
+//! guarantees the returned ids *and* f32 scores are bit-identical to the
+//! f32-only scan — a certificate miss rides the tier ladder
+//! (PQ/SQ4 → SQ8 → f32, see [`crate::mips::two_stage`]).
+//!
+//! [`with_tier_cfg`]: BruteForce::with_tier_cfg
+//! [`with_quant`]: BruteForce::with_quant
 
+use super::two_stage::{self, QuantTier, TierLadder, TierQuery};
 use super::{MipsIndex, TopKResult};
+use crate::config::{IndexConfig, QuantKind};
 use crate::data::Dataset;
-use crate::linalg::quant::{coverage_proved, QuantQuery, QuantView};
 use crate::scorer::ScoreBackend;
-use crate::util::topk::{Scored, TopK};
+use crate::util::topk::TopK;
 use std::sync::Arc;
-
-/// Rows per survivor gather/re-rank block (pass 2).
-const GATHER_BLOCK: usize = 1024;
 
 /// Exact scan over the whole database in scorer-sized blocks.
 pub struct BruteForce {
@@ -25,8 +28,8 @@ pub struct BruteForce {
     backend: Arc<dyn ScoreBackend>,
     /// rows per scoring call (PJRT backends want their AOT block size)
     pub block: usize,
-    /// SQ8 shadow copy for the two-stage scan (None = plain f32 scan)
-    quant: Option<QuantView>,
+    /// screening-tier ladder for the two-stage scan (None = plain f32)
+    quant: Option<TierLadder>,
     /// pass-1 retention factor (`k·overscan` candidates)
     overscan: usize,
 }
@@ -42,11 +45,23 @@ impl BruteForce {
     }
 
     /// Enable the SQ8 two-stage scan (`qblock` rows per quantization
-    /// block, `k·overscan` pass-1 candidates). Results stay bit-identical
-    /// to the f32-only scan.
-    pub fn with_quant(mut self, qblock: usize, overscan: usize) -> Self {
-        self.quant = Some(QuantView::encode(&self.ds.data, self.ds.d, qblock.max(1)));
-        self.overscan = overscan.max(1);
+    /// block, `k·overscan` pass-1 candidates) — the historical
+    /// single-rung form. Results stay bit-identical to the f32-only scan.
+    pub fn with_quant(self, qblock: usize, overscan: usize) -> Self {
+        let mut cfg = crate::config::Config::default().index;
+        cfg.quant = QuantKind::Sq8;
+        cfg.quant_block = qblock.max(1);
+        cfg.overscan = overscan.max(1);
+        self.with_tier_cfg(&cfg)
+    }
+
+    /// Enable the configured screening-tier ladder
+    /// (`index.quant = sq8|sq4|pq` plus the `quant_block`/`overscan`/
+    /// `pq_m`/`pq_bits` knobs). Results stay bit-identical to the
+    /// f32-only scan on every rung.
+    pub fn with_tier_cfg(mut self, cfg: &IndexConfig) -> Self {
+        self.quant = TierLadder::from_cfg(&self.ds.data, self.ds.d, cfg);
+        self.overscan = cfg.overscan.max(1);
         self
     }
 
@@ -91,56 +106,13 @@ impl BruteForce {
         TopKResult { items: tk.into_sorted(), scanned: n }
     }
 
-    /// Exact f32 re-rank of pass-1 candidates (gather + score into `tk`).
-    fn rerank_exact(&self, cands: &[u32], q: &[f32], tk: &mut TopK) {
-        let d = self.ds.d;
-        let mut rows = vec![0f32; GATHER_BLOCK.min(cands.len().max(1)) * d];
-        let mut out = vec![0f32; GATHER_BLOCK];
-        let mut start = 0;
-        while start < cands.len() {
-            let end = (start + GATHER_BLOCK).min(cands.len());
-            let ids = &cands[start..end];
-            let rows_buf = &mut rows[..(end - start) * d];
-            self.ds.gather(ids, rows_buf);
-            let out_buf = &mut out[..end - start];
-            self.backend.scores(rows_buf, d, q, out_buf);
-            tk.push_ids(ids, out_buf);
-            start = end;
-        }
-    }
-
-    /// Finish a quantized pass: exact re-rank of the retained candidates
-    /// plus the coverage certificate. `dropped` says pass 1 actually
-    /// rejected/evicted rows (more were pushed than its capacity held —
-    /// when false, the candidates are the whole scanned set and coverage
-    /// is trivially proved). `None` when the certificate fails (caller
-    /// falls back to the f32 scan).
-    fn finish_quant(
-        &self,
-        qv: &QuantView,
-        qq: &QuantQuery,
-        cands: Vec<Scored>,
-        q: &[f32],
-        kk: usize,
-        dropped: bool,
-    ) -> Option<TopKResult> {
-        let q_floor = cands.last().map(|s| s.score).unwrap_or(f32::NEG_INFINITY);
-        let ids: Vec<u32> = cands.iter().map(|s| s.id).collect();
-        let mut tk = TopK::new(kk);
-        self.rerank_exact(&ids, q, &mut tk);
-        if !coverage_proved(dropped, q_floor, qv.error_bound(qq), tk.threshold()) {
-            return None;
-        }
-        // pass 1 visited every row; account the scan like the f32 path
-        Some(TopKResult { items: tk.into_sorted(), scanned: self.ds.n })
-    }
-
-    /// Two-stage scan: SQ8 screening pass over all rows, exact re-rank of
-    /// the retained candidates, coverage certificate. `None` when the
-    /// certificate fails or the screen cannot prune anything
+    /// Two-stage scan over the given ladder rungs: per rung, a screening
+    /// pass over all rows, exact re-rank of the retained candidates, and
+    /// the coverage certificate — a miss tries the next rung. `None`
+    /// when no rung certifies or the screen cannot prune anything
     /// (`k·overscan ≥ n`) — the caller falls back to
     /// [`top_k_f32`](Self::top_k_f32).
-    fn top_k_quant(&self, qv: &QuantView, q: &[f32], k: usize) -> Option<TopKResult> {
+    fn top_k_quant(&self, q: &[f32], k: usize, tiers: &[QuantTier]) -> Option<TopKResult> {
         let n = self.ds.n;
         let kk = k.min(n).max(1);
         let cap = kk.saturating_mul(self.overscan).min(n).max(kk);
@@ -149,28 +121,36 @@ impl BruteForce {
             // strictly cheaper than screen + gather-re-rank-all
             return None;
         }
-        let qq = QuantQuery::encode(q);
-        let mut tk = TopK::new(cap);
         let mut buf = vec![0f32; self.block];
-        let mut start = 0;
-        while start < n {
-            let end = (start + self.block).min(n);
-            let out = &mut buf[..end - start];
-            qv.scores(start, end, &qq, out);
-            tk.push_block(start as u32, out);
-            start = end;
+        for tier in tiers {
+            let tq = tier.encode_query(q);
+            let mut tk = TopK::new(cap);
+            let mut start = 0;
+            while start < n {
+                let end = (start + self.block).min(n);
+                let out = &mut buf[..end - start];
+                tier.scores(start, end, &tq, out);
+                tk.push_block(start as u32, out);
+                start = end;
+            }
+            let rerank = |ids: &[u32], tk: &mut TopK| {
+                two_stage::rerank_gather(&self.ds, self.backend.as_ref(), q, ids, tk)
+            };
+            let finished =
+                two_stage::finish_screen(tier, &tq, tk.into_sorted(), n, cap, kk, rerank);
+            if let Some(tk2) = finished {
+                // pass 1 visited every row; account like the f32 path
+                return Some(TopKResult { items: tk2.into_sorted(), scanned: n });
+            }
         }
-        // cap < n, so a full collector really did drop rows
-        let cands = tk.into_sorted();
-        let dropped = cands.len() == cap;
-        self.finish_quant(qv, &qq, cands, q, kk, dropped)
+        None
     }
 }
 
 impl MipsIndex for BruteForce {
     fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
-        if let Some(qv) = &self.quant {
-            if let Some(r) = self.top_k_quant(qv, q, k) {
+        if let Some(ladder) = &self.quant {
+            if let Some(r) = self.top_k_quant(q, k, ladder.tiers()) {
                 return r;
             }
         }
@@ -193,17 +173,24 @@ impl MipsIndex for BruteForce {
         let n = self.ds.n;
         let kk = k.min(n).max(1);
         let cap = kk.saturating_mul(self.overscan).min(n).max(kk);
-        if let (Some(qv), true) = (&self.quant, cap < n) {
-            let qqs: Vec<QuantQuery> = qs.iter().map(|q| QuantQuery::encode(q)).collect();
+        if let (Some(ladder), true) = (&self.quant, cap < n) {
+            // batched pass 1 on the primary (most compressed) tier: each
+            // code block streams once for the whole batch; a per-query
+            // certificate miss rides the remaining rungs, then f32 —
+            // exactly the single-query ladder walk, so batch ≡ singles
+            let primary = ladder.primary();
+            let tqs: Vec<TierQuery> = qs.iter().map(|q| primary.encode_query(q)).collect();
+            let batch = two_stage::TierBatch::new(primary, &tqs);
             let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(cap)).collect();
-            let mut buf = vec![0f32; self.block];
+            let mut buf = vec![0f32; self.block * nq];
             let mut start = 0;
             while start < n {
                 let end = (start + self.block).min(n);
-                for (j, qq) in qqs.iter().enumerate() {
-                    let out = &mut buf[..end - start];
-                    qv.scores(start, end, qq, out);
-                    tks[j].push_block(start as u32, out);
+                let bn = end - start;
+                let out = &mut buf[..bn * nq];
+                batch.scores_all(start, end, out);
+                for (j, tk) in tks.iter_mut().enumerate() {
+                    tk.push_block(start as u32, &out[j * bn..(j + 1) * bn]);
                 }
                 start = end;
             }
@@ -211,10 +198,26 @@ impl MipsIndex for BruteForce {
                 .into_iter()
                 .enumerate()
                 .map(|(j, tk)| {
-                    let cands = tk.into_sorted();
-                    let dropped = cands.len() == cap; // cap < n ⇒ rows were dropped
-                    self.finish_quant(qv, &qqs[j], cands, qs[j], kk, dropped)
-                        .unwrap_or_else(|| self.top_k_f32(qs[j], k))
+                    two_stage::finish_screen(
+                        primary,
+                        &tqs[j],
+                        tk.into_sorted(),
+                        n,
+                        cap,
+                        kk,
+                        |ids, tk| {
+                            two_stage::rerank_gather(
+                                &self.ds,
+                                self.backend.as_ref(),
+                                qs[j],
+                                ids,
+                                tk,
+                            )
+                        },
+                    )
+                    .map(|tk2| TopKResult { items: tk2.into_sorted(), scanned: n })
+                    .or_else(|| self.top_k_quant(qs[j], k, &ladder.tiers()[1..]))
+                    .unwrap_or_else(|| self.top_k_f32(qs[j], k))
                 })
                 .collect();
         }
@@ -253,12 +256,12 @@ impl MipsIndex for BruteForce {
         "brute"
     }
     fn describe(&self) -> String {
-        if let Some(qv) = &self.quant {
+        if let Some(ladder) = &self.quant {
             format!(
-                "brute over n={} d={} (sq8 two-stage, block={}, overscan={})",
+                "brute over n={} d={} ({} two-stage, overscan={})",
                 self.ds.n,
                 self.ds.d,
-                qv.block(),
+                ladder.describe(),
                 self.overscan
             )
         } else {

@@ -8,20 +8,22 @@
 //! `n_probe` best clusters, exact-score their member rows, keep the top-k.
 //!
 //! With `index.quant` the probe scan is two-stage: the probed clusters
-//! are screened on an SQ8 shadow copy of the grouped storage (¼ of the
-//! memory traffic), then only the surviving candidates are re-ranked
-//! with the exact f32 kernels — bit-identical results by the
-//! error-bound/overscan contract of [`crate::linalg::quant`].
+//! are screened on a quantized shadow copy of the grouped storage (SQ8
+//! ¼, SQ4 ⅛, PQ ~¹⁄₃₂ at its defaults), then only the surviving
+//! candidates are re-ranked with the exact f32 kernels — bit-identical
+//! results by the error-bound/certificate contract of
+//! [`crate::linalg::quant`], with certificate misses riding the tier
+//! ladder of [`crate::mips::two_stage`].
 //!
 //! No theoretical guarantee (the paper notes this too) — accuracy is
 //! certified downstream by the TV-bound certificate (§4.2.1).
 
 use super::kmeans::{self, Kmeans};
+use super::two_stage::{self, QuantTier, TierLadder, TierQuery};
 use super::{MipsIndex, TopKResult};
 use crate::config::IndexConfig;
 use crate::data::Dataset;
 use crate::error::Result;
-use crate::linalg::quant::{coverage_proved, QuantQuery, QuantView};
 use crate::scorer::ScoreBackend;
 use crate::util::rng::Pcg64;
 use crate::util::topk::{Scored, TopK};
@@ -145,12 +147,10 @@ pub struct IvfIndex {
     pub n_probe: usize,
     n: usize,
     d: usize,
-    /// SQ8 shadow copy of `grouped` for the two-stage probe scan
-    quant: Option<QuantView>,
+    /// screening-tier ladder over `grouped` for the two-stage probe scan
+    quant: Option<TierLadder>,
     /// pass-1 retention factor (`k·overscan` candidates)
     overscan: usize,
-    /// rows per SQ8 quantization block (kept for compaction re-encodes)
-    quant_block: usize,
     /// ids whose grouped copy is outdated (live version in pending)
     stale: rustc_hash::FxHashSet<u32>,
     /// LSM-style pending segment: updated rows awaiting compaction
@@ -205,9 +205,7 @@ impl IvfIndex {
             ids[pos] = i as u32;
         }
 
-        let quant_block = cfg.quant_block.max(1);
-        let quant =
-            if cfg.quant { Some(QuantView::encode(&grouped, d, quant_block)) } else { None };
+        let quant = TierLadder::from_cfg(&grouped, d, cfg);
 
         IvfIndex {
             grouped,
@@ -220,7 +218,6 @@ impl IvfIndex {
             d,
             quant,
             overscan: cfg.overscan.max(1),
-            quant_block,
             stale: rustc_hash::FxHashSet::default(),
             pending_ids: Vec::new(),
             pending_rows: Vec::new(),
@@ -258,8 +255,8 @@ impl IvfIndex {
     /// probe list out to every shard without multiply-counting the
     /// centroid work.
     pub fn top_k_clusters(&self, q: &[f32], k: usize, clusters: &[u32]) -> TopKResult {
-        if let Some(qv) = &self.quant {
-            if let Some(r) = self.scan_clusters_quant(qv, q, k, clusters) {
+        if let Some(ladder) = &self.quant {
+            if let Some(r) = self.scan_clusters_quant(q, k, clusters, ladder.tiers()) {
                 return r;
             }
         }
@@ -324,46 +321,22 @@ impl IvfIndex {
         }
     }
 
-    /// Finish a quantized probe pass: exact re-rank of the retained
-    /// grouped positions plus the coverage certificate (the pending
-    /// segment is the caller's, it is shared with the f32 path).
-    /// `dropped` says pass 1 actually rejected/evicted pushed rows (when
-    /// false, the candidates are the whole scanned set and coverage is
-    /// trivially proved). `None` when the certificate fails.
-    fn finish_quant_probes(
-        &self,
-        qv: &QuantView,
-        qq: &QuantQuery,
-        cands: Vec<Scored>,
-        q: &[f32],
-        kk: usize,
-        dropped: bool,
-    ) -> Option<TopK> {
-        let q_floor = cands.last().map(|s| s.score).unwrap_or(f32::NEG_INFINITY);
-        let positions: Vec<u32> = cands.iter().map(|s| s.id).collect();
-        let mut tk = TopK::new(kk);
-        self.rerank_grouped(&positions, q, &mut tk);
-        if !coverage_proved(dropped, q_floor, qv.error_bound(qq), tk.threshold()) {
-            return None;
-        }
-        Some(tk)
-    }
-
-    /// Two-stage scan of the given clusters: SQ8 screening (collecting
-    /// grouped positions), exact re-rank of the retained candidates +
-    /// coverage certificate, then the pending segment exactly. `scanned`
-    /// counts scored rows only, like [`scan_clusters_f32`]. `None` when
-    /// the certificate fails or the screen cannot prune anything
+    /// Two-stage scan of the given clusters over the given ladder rungs:
+    /// per rung, a screening pass (collecting grouped positions), exact
+    /// re-rank of the retained candidates + coverage certificate — a
+    /// miss tries the next rung — then the pending segment exactly.
+    /// `scanned` counts scored rows only, like [`scan_clusters_f32`].
+    /// `None` when no rung certifies or the screen cannot prune anything
     /// (`k·overscan` covers the probed rows) — the caller falls back to
     /// the f32 scan.
     ///
     /// [`scan_clusters_f32`]: Self::scan_clusters_f32
     fn scan_clusters_quant(
         &self,
-        qv: &QuantView,
         q: &[f32],
         k: usize,
         clusters: &[u32],
+        tiers: &[QuantTier],
     ) -> Option<TopKResult> {
         let kk = k.min(self.n).max(1);
         let cap = kk.saturating_mul(self.overscan).min(self.n).max(kk);
@@ -376,41 +349,52 @@ impl IvfIndex {
             // strictly cheaper than screen + gather-re-rank-all
             return None;
         }
-        let qq = QuantQuery::encode(q);
-        let mut tk = TopK::new(cap);
         let mut buf: Vec<f32> = Vec::new();
-        let mut scanned = 0usize;
-        let mut pushed = 0usize;
-        for &c in clusters {
-            let (s, e) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
-            if s == e {
-                continue;
-            }
-            buf.resize(e - s, 0.0);
-            qv.scores(s, e, &qq, &mut buf);
-            if self.stale.is_empty() {
-                tk.push_block(s as u32, &buf);
-                pushed += e - s;
-            } else {
-                for (j, &id) in self.ids[s..e].iter().enumerate() {
-                    if !self.stale.contains(&id) {
-                        tk.push((s + j) as u32, buf[j]);
-                        pushed += 1;
+        for tier in tiers {
+            let tq = tier.encode_query(q);
+            let mut tk = TopK::new(cap);
+            let mut scanned = 0usize;
+            let mut pushed = 0usize;
+            for &c in clusters {
+                let (s, e) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
+                if s == e {
+                    continue;
+                }
+                buf.resize(e - s, 0.0);
+                tier.scores(s, e, &tq, &mut buf);
+                if self.stale.is_empty() {
+                    tk.push_block(s as u32, &buf);
+                    pushed += e - s;
+                } else {
+                    for (j, &id) in self.ids[s..e].iter().enumerate() {
+                        if !self.stale.contains(&id) {
+                            tk.push((s + j) as u32, buf[j]);
+                            pushed += 1;
+                        }
                     }
                 }
+                scanned += e - s;
             }
-            scanned += e - s;
+            let finished = two_stage::finish_screen(
+                tier,
+                &tq,
+                tk.into_sorted(),
+                pushed,
+                cap,
+                kk,
+                |positions, tk| self.rerank_grouped(positions, q, tk),
+            );
+            if let Some(mut tk2) = finished {
+                if !self.pending_ids.is_empty() {
+                    buf.resize(self.pending_ids.len(), 0.0);
+                    self.backend.scores(&self.pending_rows, self.d, q, &mut buf);
+                    tk2.push_ids(&self.pending_ids, &buf);
+                    scanned += self.pending_ids.len();
+                }
+                return Some(TopKResult { items: tk2.into_sorted(), scanned });
+            }
         }
-        let cands = tk.into_sorted();
-        let dropped = cands.len() == cap && pushed > cap;
-        let mut tk = self.finish_quant_probes(qv, &qq, cands, q, kk, dropped)?;
-        if !self.pending_ids.is_empty() {
-            buf.resize(self.pending_ids.len(), 0.0);
-            self.backend.scores(&self.pending_rows, self.d, q, &mut buf);
-            tk.push_ids(&self.pending_ids, &buf);
-            scanned += self.pending_ids.len();
-        }
-        Some(TopKResult { items: tk.into_sorted(), scanned })
+        None
     }
 
     /// Batched query with an explicit probe count: centroids are scored
@@ -493,29 +477,38 @@ impl IvfIndex {
         };
 
         let cap = kk.saturating_mul(self.overscan).min(self.n).max(kk);
-        if let (Some(qv), true) = (&self.quant, cap < self.n) {
-            let qqs: Vec<QuantQuery> = qs.iter().map(|q| QuantQuery::encode(q)).collect();
-            // pass 1 over SQ8 codes, collecting grouped positions
+        if let (Some(ladder), true) = (&self.quant, cap < self.n) {
+            // batched pass 1 on the primary tier: each probed cluster's
+            // codes stream once for that cluster's whole query list via
+            // the multi-query kernel; per-query certificate misses ride
+            // the remaining rungs (then f32) exactly like single queries
+            let primary = ladder.primary();
+            let tqs: Vec<TierQuery> = qs.iter().map(|q| primary.encode_query(q)).collect();
             let parts = crate::util::pool::parallel_chunks(active.len(), nthreads, |_, s, e| {
                 let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(cap)).collect();
                 let mut scanned = vec![0usize; nq];
                 let mut pushed = vec![0usize; nq];
                 let mut out: Vec<f32> = Vec::new();
+                // per-thread batch handle: query unwrap + selection
+                // scratch reused across this chunk's clusters
+                let mut tb = two_stage::TierBatch::new(primary, &tqs);
                 for &cl in &active[s..e] {
                     let (cs, ce) = (self.offsets[cl as usize], self.offsets[cl as usize + 1]);
                     let nr = ce - cs;
                     let ids = &self.ids[cs..ce];
-                    out.resize(nr, 0.0);
-                    for &qj in &cluster_queries[cl as usize] {
-                        qv.scores(cs, ce, &qqs[qj as usize], &mut out);
+                    let qlist = &cluster_queries[cl as usize];
+                    out.resize(qlist.len() * nr, 0.0);
+                    tb.scores_sel(cs, ce, qlist, &mut out);
+                    for (jj, &qj) in qlist.iter().enumerate() {
+                        let sc = &out[jj * nr..(jj + 1) * nr];
                         let tk = &mut tks[qj as usize];
                         if self.stale.is_empty() {
-                            tk.push_block(cs as u32, &out);
+                            tk.push_block(cs as u32, sc);
                             pushed[qj as usize] += nr;
                         } else {
                             for (t, &id) in ids.iter().enumerate() {
                                 if !self.stale.contains(&id) {
-                                    tk.push((cs + t) as u32, out[t]);
+                                    tk.push((cs + t) as u32, sc[t]);
                                     pushed[qj as usize] += 1;
                                 }
                             }
@@ -551,12 +544,22 @@ impl IvfIndex {
                 .into_iter()
                 .enumerate()
                 .map(|(j, tk)| {
-                    let cands = tk.into_sorted();
-                    let dropped = cands.len() == cap && pushed[j] > cap;
-                    match self.finish_quant_probes(qv, &qqs[j], cands, qs[j], kk, dropped) {
-                        // the f32 fallback returns the identical exact
-                        // result (and identical scan accounting)
-                        None => self.scan_clusters_f32(qs[j], k, &orders[j]),
+                    let finished = two_stage::finish_screen(
+                        primary,
+                        &tqs[j],
+                        tk.into_sorted(),
+                        pushed[j],
+                        cap,
+                        kk,
+                        |positions, tk| self.rerank_grouped(positions, qs[j], tk),
+                    );
+                    match finished {
+                        // certificate miss: the remaining rungs (then the
+                        // f32 scan) return the identical exact result and
+                        // identical scan accounting
+                        None => self
+                            .scan_clusters_quant(qs[j], k, &orders[j], &ladder.tiers()[1..])
+                            .unwrap_or_else(|| self.scan_clusters_f32(qs[j], k, &orders[j])),
                         Some(mut tk2) => {
                             let mut sc = scanned[j];
                             if np > 0 {
@@ -720,9 +723,10 @@ impl IvfIndex {
         self.pending_rows.clear();
         self.stale.clear();
         // every block of the rebuilt storage is touched, so the coherence
-        // re-encode is a full pass
-        if self.quant.is_some() {
-            self.quant = Some(QuantView::encode(&self.grouped, d, self.quant_block));
+        // re-encode is a full pass over every ladder rung (PQ keeps its
+        // codebooks and re-assigns codes)
+        if let Some(ladder) = &mut self.quant {
+            ladder.reencode(&self.grouped);
         }
     }
 }
@@ -756,7 +760,10 @@ impl MipsIndex for IvfIndex {
             self.km.c,
             self.n_probe,
             100.0 * self.expected_scan_fraction(),
-            if self.quant.is_some() { ", sq8 two-stage" } else { "" }
+            self.quant
+                .as_ref()
+                .map(|l| format!(", {} two-stage", l.describe()))
+                .unwrap_or_default()
         )
     }
 }
@@ -946,7 +953,7 @@ mod tests {
         let ds = Arc::new(synth::imagenet_like(4_000, 16, 30, 0.25, 13));
         let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
         let mut qcfg = test_cfg();
-        qcfg.quant = true;
+        qcfg.quant = crate::config::QuantKind::Sq8;
         qcfg.quant_block = 48;
         qcfg.overscan = 4;
         let mut qidx = IvfIndex::build(ds.clone(), &qcfg, backend.clone()).unwrap();
@@ -984,7 +991,7 @@ mod tests {
         let ds = Arc::new(synth::imagenet_like(3_000, 16, 25, 0.25, 21));
         let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
         let mut cfg = test_cfg();
-        cfg.quant = true;
+        cfg.quant = crate::config::QuantKind::Sq8;
         let idx = IvfIndex::build(ds.clone(), &cfg, backend).unwrap();
         let mut rng = Pcg64::new(22);
         for nq in [2usize, 5] {

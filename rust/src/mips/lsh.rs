@@ -12,12 +12,12 @@
 //! buckets across tables (plus optional 1-bit multiprobe to boost recall),
 //! exact-score the candidates, and keep the top-k.
 
+use super::two_stage::{self, TierLadder};
 use super::{MipsIndex, TopKResult};
 use crate::config::IndexConfig;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::linalg;
-use crate::linalg::quant::QuantView;
 use crate::scorer::ScoreBackend;
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
@@ -44,9 +44,9 @@ pub struct SrpLsh {
     aug: Vec<f32>,
     /// whether to probe all 1-bit-flip neighbors of the query bucket
     pub multiprobe: bool,
-    /// SQ8 shadow copy for the two-stage candidate scan (None = plain
-    /// f32 gather scan)
-    quant: Option<QuantView>,
+    /// screening-tier ladder for the two-stage candidate scan (None =
+    /// plain f32 gather scan)
+    quant: Option<TierLadder>,
     /// pass-1 retention factor (`k·overscan` candidates)
     overscan: usize,
 }
@@ -125,11 +125,7 @@ impl SrpLsh {
             tables.push(Table { planes, bucket_off, members });
         }
 
-        let quant = if cfg.quant {
-            Some(QuantView::encode(&ds.data, d, cfg.quant_block.max(1)))
-        } else {
-            None
-        };
+        let quant = TierLadder::from_cfg(&ds.data, d, cfg);
         let overscan = cfg.overscan.max(1);
         Ok(SrpLsh { ds, backend, tables, bits, d_aug, aug, multiprobe: true, quant, overscan })
     }
@@ -181,16 +177,17 @@ fn hash_row(planes: &[f32], bits: usize, d_aug: usize, v: &[f32], aug: f32) -> u
 
 impl MipsIndex for SrpLsh {
     /// With `index.quant`, the candidate scan is two-stage: candidates
-    /// are screened on u8 codes ([`super::scan_candidates_quant`], ¼ of
-    /// the gather traffic) and only the survivors are gathered and
-    /// re-ranked in f32 — bit-identical ids/scores/`scanned` by the
-    /// coverage-certificate contract, else the plain f32 gather scan.
+    /// are screened on the ladder's compressed codes
+    /// ([`two_stage::scan_candidates_quant`]) and only the survivors are
+    /// gathered and re-ranked in f32 — bit-identical
+    /// ids/scores/`scanned` by the coverage-certificate contract, else
+    /// the plain f32 gather scan.
     fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
         let cands = self.candidates(q);
-        if let Some(qv) = &self.quant {
-            if let Some(r) = super::scan_candidates_quant(
+        if let Some(ladder) = &self.quant {
+            if let Some(r) = two_stage::scan_candidates_quant(
                 &self.ds,
-                qv,
+                ladder,
                 self.backend.as_ref(),
                 q,
                 k,
@@ -236,7 +233,10 @@ impl MipsIndex for SrpLsh {
             self.tables.len(),
             self.bits,
             self.multiprobe,
-            if self.quant.is_some() { ", sq8 screen" } else { "" }
+            self.quant
+                .as_ref()
+                .map(|l| format!(", {} screen", l.describe()))
+                .unwrap_or_default()
         )
     }
 }
@@ -360,7 +360,7 @@ mod tests {
         let ds = Arc::new(synth::imagenet_like(3000, 16, 30, 0.25, 15));
         let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
         let mut qcfg = cfg(7, 10);
-        qcfg.quant = true;
+        qcfg.quant = crate::config::QuantKind::Sq8;
         qcfg.quant_block = 48;
         qcfg.overscan = 3;
         let qidx = SrpLsh::build(ds.clone(), &qcfg, backend.clone()).unwrap();

@@ -18,11 +18,11 @@ pub mod ivf;
 pub mod kmeans;
 pub mod lsh;
 pub mod tiered;
+pub mod two_stage;
 
 use crate::config::{IndexConfig, IndexKind};
 use crate::data::Dataset;
 use crate::error::Result;
-use crate::linalg::quant::{coverage_proved, QuantQuery, QuantView};
 use crate::scorer::ScoreBackend;
 use crate::util::topk::{Scored, TopK};
 use std::sync::Arc;
@@ -151,8 +151,8 @@ pub fn build_index_typed(
     Ok(BuiltIndex::Mono(match cfg.kind {
         IndexKind::Brute => {
             let mut idx = brute::BruteForce::new(ds.clone(), backend);
-            if cfg.quant {
-                idx = idx.with_quant(cfg.quant_block, cfg.overscan);
+            if cfg.quant.enabled() {
+                idx = idx.with_tier_cfg(cfg);
             }
             Arc::new(idx)
         }
@@ -200,59 +200,6 @@ pub(crate) fn scan_candidates_f32(
         start = end;
     }
     TopKResult { items: tk.into_sorted(), scanned: cands.len() }
-}
-
-/// Two-stage candidate scan: screen the candidate list on u8 codes
-/// ([`QuantView::scores_ids`], ¼ of the gather traffic), keep the
-/// `k·overscan` best quantized scores, exact-re-rank the survivors with
-/// the same f32 kernels [`scan_candidates_f32`] uses, and certify the
-/// result with the coverage certificate of [`crate::linalg::quant`] —
-/// when it fires, ids *and* scores are bit-identical to the f32-only
-/// candidate scan, with the same `scanned` accounting (pass 1 visits
-/// every candidate). `None` when the screen cannot prune
-/// (`k·overscan ≥ |cands|`) or the certificate fails; the caller falls
-/// back to [`scan_candidates_f32`].
-pub(crate) fn scan_candidates_quant(
-    ds: &Dataset,
-    qv: &QuantView,
-    backend: &dyn ScoreBackend,
-    q: &[f32],
-    k: usize,
-    cands: &[u32],
-    overscan: usize,
-) -> Option<TopKResult> {
-    let kk = k.min(ds.n).max(1);
-    let cap = kk.saturating_mul(overscan).max(kk);
-    if cap >= cands.len() {
-        // pass 1 would retain everything: the one-stage scan is strictly
-        // cheaper than screen + gather-re-rank-all
-        return None;
-    }
-    let qq = QuantQuery::encode(q);
-    let mut tk = TopK::new(cap);
-    const BLOCK: usize = 4096;
-    let mut out = vec![0f32; BLOCK.min(cands.len())];
-    let mut start = 0;
-    while start < cands.len() {
-        let end = (start + BLOCK).min(cands.len());
-        let ids = &cands[start..end];
-        let out_buf = &mut out[..end - start];
-        qv.scores_ids(ids, &qq, out_buf);
-        tk.push_ids(ids, out_buf);
-        start = end;
-    }
-    // cap < cands.len(), so a full collector really did drop candidates
-    let kept = tk.into_sorted();
-    let dropped = kept.len() == cap;
-    let q_floor = kept.last().map(|s| s.score).unwrap_or(f32::NEG_INFINITY);
-    let survivors: Vec<u32> = kept.iter().map(|s| s.id).collect();
-    let mut reranked = scan_candidates_f32(ds, backend, q, kk, &survivors);
-    let kth = reranked.s_min() as f32;
-    if !coverage_proved(dropped, q_floor, qv.error_bound(&qq), kth) {
-        return None;
-    }
-    reranked.scanned = cands.len();
-    Some(reranked)
 }
 
 /// Batch-scan per-query candidate sets (the LSH families' batching

@@ -17,12 +17,12 @@
 //! data-dependent `c` that the samplers then feed into the
 //! `B ← B − c` adjustment (§3.4).
 
+use super::two_stage::{self, TierLadder};
 use super::{MipsIndex, TopKResult};
 use crate::config::IndexConfig;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::linalg;
-use crate::linalg::quant::QuantView;
 use crate::scorer::ScoreBackend;
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
@@ -44,9 +44,9 @@ pub struct TieredLsh {
     /// measured approximate-top-k gap (Definition 3.1), in *score units of
     /// a unit-norm query*; scale by ‖θ‖ for a given query
     gap_per_unit_query: f64,
-    /// SQ8 shadow copy for the two-stage candidate scan (None = plain
-    /// f32 gather scan)
-    quant: Option<QuantView>,
+    /// screening-tier ladder for the two-stage candidate scan (None =
+    /// plain f32 gather scan)
+    quant: Option<TierLadder>,
     /// pass-1 retention factor (`k·overscan` candidates)
     overscan: usize,
 }
@@ -85,11 +85,7 @@ impl TieredLsh {
             rungs.push(Rung { bits, planes, bucket_off, members });
         }
 
-        let quant = if cfg.quant {
-            Some(QuantView::encode(&ds.data, d, cfg.quant_block.max(1)))
-        } else {
-            None
-        };
+        let quant = TierLadder::from_cfg(&ds.data, d, cfg);
         let mut idx = TieredLsh {
             ds,
             backend,
@@ -197,16 +193,16 @@ fn srp_hash(planes: &[f32], bits: usize, v: &[f32]) -> u32 {
 
 impl MipsIndex for TieredLsh {
     /// With `index.quant`, the candidate scan is two-stage
-    /// ([`super::scan_candidates_quant`]): screen on u8 codes, exact
-    /// re-rank of survivors, bit-identical by the coverage certificate —
-    /// else the plain f32 gather scan.
+    /// ([`two_stage::scan_candidates_quant`]): screen on the ladder's
+    /// compressed codes, exact re-rank of survivors, bit-identical by
+    /// the coverage certificate — else the plain f32 gather scan.
     fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
         let k = k.min(self.ds.n).max(1);
         let cands = self.candidates(q, k);
-        if let Some(qv) = &self.quant {
-            if let Some(r) = super::scan_candidates_quant(
+        if let Some(ladder) = &self.quant {
+            if let Some(r) = two_stage::scan_candidates_quant(
                 &self.ds,
-                qv,
+                ladder,
                 self.backend.as_ref(),
                 q,
                 k,
@@ -363,7 +359,7 @@ mod tests {
         let ds = Arc::new(synth::imagenet_like(2500, 12, 25, 0.25, 21));
         let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
         let mut qcfg = cfg();
-        qcfg.quant = true;
+        qcfg.quant = crate::config::QuantKind::Sq8;
         qcfg.overscan = 3;
         let qidx = TieredLsh::build(ds.clone(), &qcfg, backend.clone()).unwrap();
         let fidx = TieredLsh::build(ds.clone(), &cfg(), backend).unwrap();

@@ -1,0 +1,502 @@
+//! The shared two-stage screen: quantized pass-1 keep → coverage
+//! certificate → exact pass-2 re-rank → fallback ladder.
+//!
+//! Brute, IVF, and the LSH families all scan the same way when a
+//! quantized tier is configured: pass 1 screens rows on compressed codes
+//! and keeps the `k·overscan` best, pass 2 re-ranks the survivors with
+//! the exact f32 kernels, and the coverage certificate
+//! ([`crate::linalg::quant::coverage_proved`]) decides whether the
+//! re-ranked result provably **is** the exact top-k. This module is the
+//! single seam those indexes plug into:
+//!
+//! * [`QuantTier`] — one screening tier (SQ8 / SQ4 / PQ) behind a
+//!   uniform encode/score/bound interface, so new code formats slot in
+//!   here and every index picks them up.
+//! * [`TierLadder`] — the configured tier stack, most-compressed first.
+//!   A certificate miss falls **up** the ladder (PQ/SQ4 → SQ8) before
+//!   surrendering to the plain f32 scan, so adversarial data costs at
+//!   most the cheap screens; results are bit-identical to the f32-only
+//!   scan on every rung by the certificate contract.
+//! * [`finish_screen`] / [`rerank_gather`] — the shared pass-2 +
+//!   certificate step the per-index screens feed.
+//! * [`scan_candidates_quant`] — the complete two-stage candidate-list
+//!   scan the LSH families use.
+
+use super::TopKResult;
+use crate::config::{IndexConfig, QuantKind};
+use crate::data::Dataset;
+use crate::linalg::pq::{PqLut, PqView};
+use crate::linalg::quant::{coverage_proved, QuantQuery, QuantView, Sq4View};
+use crate::scorer::ScoreBackend;
+use crate::util::topk::{Scored, TopK};
+
+/// Rows per survivor gather/re-rank block (pass 2).
+const GATHER_BLOCK: usize = 1024;
+
+/// One quantized screening tier behind the uniform interface the
+/// two-stage scan drives. All variants guarantee
+/// `|exact − quantized| ≤ error_bound` per row, and their batched entry
+/// points are bit-identical to single-query scoring.
+pub enum QuantTier {
+    /// 8-bit scalar codes ([`QuantView`]).
+    Sq8(QuantView),
+    /// Packed 4-bit scalar codes ([`Sq4View`]).
+    Sq4(Sq4View),
+    /// Product quantization ([`PqView`]).
+    Pq(PqView),
+}
+
+/// A query encoded for one tier (integer codes for the scalar tiers, u8
+/// lookup tables for PQ).
+pub enum TierQuery {
+    Int(QuantQuery),
+    Lut(PqLut),
+}
+
+impl TierQuery {
+    fn int(&self) -> &QuantQuery {
+        match self {
+            TierQuery::Int(q) => q,
+            TierQuery::Lut(_) => unreachable!("integer tier scored with a PQ query"),
+        }
+    }
+    fn lut(&self) -> &PqLut {
+        match self {
+            TierQuery::Lut(l) => l,
+            TierQuery::Int(_) => unreachable!("PQ tier scored with an integer query"),
+        }
+    }
+}
+
+impl QuantTier {
+    /// Encode a query for this tier's screening pass.
+    pub fn encode_query(&self, q: &[f32]) -> TierQuery {
+        match self {
+            QuantTier::Sq8(_) | QuantTier::Sq4(_) => TierQuery::Int(QuantQuery::encode(q)),
+            QuantTier::Pq(v) => TierQuery::Lut(v.encode_query(q)),
+        }
+    }
+
+    /// Uniform per-row bound `|exact − quantized| ≤ ε` for `tq`.
+    pub fn error_bound(&self, tq: &TierQuery) -> f32 {
+        match self {
+            QuantTier::Sq8(v) => v.error_bound(tq.int()),
+            QuantTier::Sq4(v) => v.error_bound(tq.int()),
+            QuantTier::Pq(v) => v.error_bound(tq.lut()),
+        }
+    }
+
+    /// Quantized scores for rows `[row_start, row_end)`.
+    pub fn scores(&self, row_start: usize, row_end: usize, tq: &TierQuery, out: &mut [f32]) {
+        match self {
+            QuantTier::Sq8(v) => v.scores(row_start, row_end, tq.int(), out),
+            QuantTier::Sq4(v) => v.scores(row_start, row_end, tq.int(), out),
+            QuantTier::Pq(v) => v.scores(row_start, row_end, tq.lut(), out),
+        }
+    }
+
+    /// Quantized scores for an explicit (gathered) id list.
+    pub fn scores_ids(&self, ids: &[u32], tq: &TierQuery, out: &mut [f32]) {
+        match self {
+            QuantTier::Sq8(v) => v.scores_ids(ids, tq.int(), out),
+            QuantTier::Sq4(v) => v.scores_ids(ids, tq.int(), out),
+            QuantTier::Pq(v) => v.scores_ids(ids, tq.lut(), out),
+        }
+    }
+
+    /// Multi-query quantized scores, query-major `[nq × nrows]` — each
+    /// code block streams once for the whole batch; output bit-identical
+    /// to per-query [`scores`](Self::scores) calls.
+    pub fn scores_batch(
+        &self,
+        row_start: usize,
+        row_end: usize,
+        tqs: &[&TierQuery],
+        out: &mut [f32],
+    ) {
+        match self {
+            QuantTier::Sq8(v) => {
+                let qs: Vec<&QuantQuery> = tqs.iter().map(|t| t.int()).collect();
+                v.scores_batch(row_start, row_end, &qs, out);
+            }
+            QuantTier::Sq4(v) => {
+                let qs: Vec<&QuantQuery> = tqs.iter().map(|t| t.int()).collect();
+                v.scores_batch(row_start, row_end, &qs, out);
+            }
+            QuantTier::Pq(v) => {
+                let qs: Vec<&PqLut> = tqs.iter().map(|t| t.lut()).collect();
+                v.scores_batch(row_start, row_end, &qs, out);
+            }
+        }
+    }
+
+    /// Tier name for logs/describe strings.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantTier::Sq8(_) => "sq8",
+            QuantTier::Sq4(_) => "sq4",
+            QuantTier::Pq(_) => "pq",
+        }
+    }
+}
+
+/// Per-batch scoring handle for one tier: the whole query batch
+/// unwrapped to its homogeneous form **once**, plus reusable selection
+/// scratch — so the batched pass-1 screens (brute's block loop, IVF's
+/// per-cluster merged-probe loop) stay allocation-free per scoring call.
+pub struct TierBatch<'a> {
+    tier: &'a QuantTier,
+    int: Vec<&'a QuantQuery>,
+    lut: Vec<&'a PqLut>,
+    int_sel: Vec<&'a QuantQuery>,
+    lut_sel: Vec<&'a PqLut>,
+}
+
+impl<'a> TierBatch<'a> {
+    /// Unwrap `tqs` (all encoded by `tier`) into the tier's homogeneous
+    /// query form.
+    pub fn new(tier: &'a QuantTier, tqs: &'a [TierQuery]) -> TierBatch<'a> {
+        let mut int = Vec::new();
+        let mut lut = Vec::new();
+        match tier {
+            QuantTier::Sq8(_) | QuantTier::Sq4(_) => int.extend(tqs.iter().map(|t| t.int())),
+            QuantTier::Pq(_) => lut.extend(tqs.iter().map(|t| t.lut())),
+        }
+        TierBatch { tier, int, lut, int_sel: Vec::new(), lut_sel: Vec::new() }
+    }
+
+    /// Multi-query scores for the whole batch, query-major
+    /// `[nq × nrows]` — [`QuantTier::scores_batch`] without the per-call
+    /// unwrap.
+    pub fn scores_all(&self, row_start: usize, row_end: usize, out: &mut [f32]) {
+        match self.tier {
+            QuantTier::Sq8(v) => v.scores_batch(row_start, row_end, &self.int, out),
+            QuantTier::Sq4(v) => v.scores_batch(row_start, row_end, &self.int, out),
+            QuantTier::Pq(v) => v.scores_batch(row_start, row_end, &self.lut, out),
+        }
+    }
+
+    /// Multi-query scores for the query subset `qsel` (indices into the
+    /// batch), query-major `[qsel.len() × nrows]`, reusing the internal
+    /// selection scratch — no allocation after warmup.
+    pub fn scores_sel(&mut self, row_start: usize, row_end: usize, qsel: &[u32], out: &mut [f32]) {
+        match self.tier {
+            QuantTier::Sq8(v) => {
+                self.int_sel.clear();
+                self.int_sel.extend(qsel.iter().map(|&j| self.int[j as usize]));
+                v.scores_batch(row_start, row_end, &self.int_sel, out);
+            }
+            QuantTier::Sq4(v) => {
+                self.int_sel.clear();
+                self.int_sel.extend(qsel.iter().map(|&j| self.int[j as usize]));
+                v.scores_batch(row_start, row_end, &self.int_sel, out);
+            }
+            QuantTier::Pq(v) => {
+                self.lut_sel.clear();
+                self.lut_sel.extend(qsel.iter().map(|&j| self.lut[j as usize]));
+                v.scores_batch(row_start, row_end, &self.lut_sel, out);
+            }
+        }
+    }
+}
+
+/// The configured screening-tier stack, most-compressed first, with SQ8
+/// as the safety rung under SQ4/PQ (tentpole ladder:
+/// PQ/SQ4 → SQ8 → f32; the f32 rung is the caller's plain scan).
+///
+/// Memory: the SQ4/PQ ladders **eagerly** encode the SQ8 rung too, so
+/// their quantized footprint is dominated by its `n·d` bytes (¼ of the
+/// f32 rows) — the PQ/SQ4 codes only add `≤ n·d/8` on top. The rung is
+/// built eagerly because scans take `&self`: materializing it lazily on
+/// the first certificate miss would put locking on the hot path.
+pub struct TierLadder {
+    tiers: Vec<QuantTier>,
+    desc: String,
+}
+
+/// `pq_m` resolution: 0 auto-picks the widest subspace of 8/4/2/1 dims
+/// that divides `d`; an explicit `pq_m` must divide `d` — the same rule
+/// `Config::validate` enforces on the config path, asserted here so
+/// direct library builds fail loudly instead of silently training a
+/// different subspace count.
+fn resolve_pq_m(d: usize, pq_m: usize) -> usize {
+    if pq_m != 0 {
+        assert!(
+            d % pq_m == 0,
+            "index.pq_m = {pq_m} must evenly divide d = {d} (0 = auto)"
+        );
+        return pq_m;
+    }
+    for dsub in [8usize, 4, 2] {
+        if d % dsub == 0 {
+            return d / dsub;
+        }
+    }
+    d
+}
+
+impl TierLadder {
+    /// Build the configured ladder over a row-major `[n × d]` matrix
+    /// (`None` when `index.quant` is off). PQ codebooks train on a
+    /// deterministic subsample capped at `64 · 2^pq_bits` rows (and by
+    /// `index.train_sample` when set).
+    pub fn from_cfg(rows: &[f32], d: usize, cfg: &IndexConfig) -> Option<TierLadder> {
+        let block = cfg.quant_block.max(1);
+        let tiers = match cfg.quant {
+            QuantKind::Off => return None,
+            QuantKind::Sq8 => vec![QuantTier::Sq8(QuantView::encode(rows, d, block))],
+            QuantKind::Sq4 => vec![
+                QuantTier::Sq4(Sq4View::encode(rows, d, block)),
+                QuantTier::Sq8(QuantView::encode(rows, d, block)),
+            ],
+            QuantKind::Pq => {
+                let m = resolve_pq_m(d, cfg.pq_m);
+                let bits = if cfg.pq_bits == 4 { 4 } else { 8 };
+                let n = if d == 0 { 0 } else { rows.len() / d };
+                let base = if cfg.train_sample == 0 { n } else { cfg.train_sample.min(n) };
+                let train_n = base.min(64 << bits).max(1);
+                vec![
+                    QuantTier::Pq(PqView::train(
+                        rows,
+                        d,
+                        m,
+                        bits,
+                        train_n,
+                        cfg.kmeans_iters,
+                        cfg.seed ^ 0x90C0DE,
+                    )),
+                    QuantTier::Sq8(QuantView::encode(rows, d, block)),
+                ]
+            }
+        };
+        let desc = match &tiers[0] {
+            QuantTier::Pq(v) => format!("pq(m={},b={})→sq8", v.m(), v.bits()),
+            QuantTier::Sq4(_) => "sq4→sq8".to_string(),
+            QuantTier::Sq8(_) => "sq8".to_string(),
+        };
+        Some(TierLadder { tiers, desc })
+    }
+
+    /// The tiers, most-compressed first.
+    pub fn tiers(&self) -> &[QuantTier] {
+        &self.tiers
+    }
+
+    /// The first (most compressed) tier — what batched pass-1 screens
+    /// run; per-query certificate misses continue with
+    /// [`tiers`](Self::tiers)`[1..]`.
+    pub fn primary(&self) -> &QuantTier {
+        &self.tiers[0]
+    }
+
+    /// Ladder summary for describe strings (e.g. `pq(m=16,b=4)→sq8`).
+    pub fn describe(&self) -> &str {
+        &self.desc
+    }
+
+    /// Re-encode every tier against the current contents of `rows` —
+    /// the compaction coherence hook. Scalar tiers re-encode their
+    /// blocks; PQ re-assigns codes against its fixed codebooks.
+    pub fn reencode(&mut self, rows: &[f32]) {
+        for t in &mut self.tiers {
+            match t {
+                QuantTier::Sq8(v) => *v = QuantView::encode(rows, v.d(), v.block()),
+                QuantTier::Sq4(v) => *v = Sq4View::encode(rows, v.d(), v.block()),
+                QuantTier::Pq(v) => v.reencode(rows),
+            }
+        }
+    }
+}
+
+/// Finish one tier's screen: exact pass-2 re-rank of the retained
+/// candidates plus the coverage certificate. `cands` is pass 1's sorted
+/// keep (capacity `cap`), `pushed` how many rows pass 1 offered —
+/// `dropped` (rows were actually rejected/evicted) holds iff the
+/// collector filled *and* more was offered than it holds. `rerank`
+/// scores the retained ids with the exact f32 kernels into the returned
+/// collector. `None` when the certificate fails — the caller tries the
+/// next ladder rung (or the f32 scan).
+pub(crate) fn finish_screen(
+    tier: &QuantTier,
+    tq: &TierQuery,
+    cands: Vec<Scored>,
+    pushed: usize,
+    cap: usize,
+    kk: usize,
+    rerank: impl FnOnce(&[u32], &mut TopK),
+) -> Option<TopK> {
+    let dropped = cands.len() == cap && pushed > cap;
+    let q_floor = cands.last().map(|s| s.score).unwrap_or(f32::NEG_INFINITY);
+    let ids: Vec<u32> = cands.iter().map(|s| s.id).collect();
+    let mut tk = TopK::new(kk);
+    rerank(&ids, &mut tk);
+    if !coverage_proved(dropped, q_floor, tier.error_bound(tq), tk.threshold()) {
+        return None;
+    }
+    Some(tk)
+}
+
+/// Exact pass-2 re-rank for dataset-id candidates: gather the rows in
+/// blocks, score with the same f32 kernels the one-stage scan uses, push
+/// into `tk`. Shared by the brute screen and the candidate-list scan
+/// (IVF reranks from its grouped storage instead).
+pub(crate) fn rerank_gather(
+    ds: &Dataset,
+    backend: &dyn ScoreBackend,
+    q: &[f32],
+    ids: &[u32],
+    tk: &mut TopK,
+) {
+    let d = ds.d;
+    let mut rows = vec![0f32; GATHER_BLOCK.min(ids.len().max(1)) * d];
+    let mut out = vec![0f32; GATHER_BLOCK];
+    let mut start = 0;
+    while start < ids.len() {
+        let end = (start + GATHER_BLOCK).min(ids.len());
+        let chunk = &ids[start..end];
+        let rows_buf = &mut rows[..(end - start) * d];
+        ds.gather(chunk, rows_buf);
+        let out_buf = &mut out[..end - start];
+        backend.scores(rows_buf, d, q, out_buf);
+        tk.push_ids(chunk, out_buf);
+        start = end;
+    }
+}
+
+/// Two-stage candidate-list scan (the LSH families' quantized path):
+/// screen the candidates on the ladder's codes
+/// ([`QuantTier::scores_ids`]), keep the `k·overscan` best, exact-re-rank
+/// the survivors, certify — walking the ladder on certificate misses.
+/// When a rung certifies, ids *and* scores are bit-identical to the
+/// f32-only candidate scan, with the same `scanned` accounting (pass 1
+/// visits every candidate). `None` when the screen cannot prune
+/// (`k·overscan ≥ |cands|`) or no rung certifies; the caller falls back
+/// to [`super::scan_candidates_f32`].
+pub(crate) fn scan_candidates_quant(
+    ds: &Dataset,
+    ladder: &TierLadder,
+    backend: &dyn ScoreBackend,
+    q: &[f32],
+    k: usize,
+    cands: &[u32],
+    overscan: usize,
+) -> Option<TopKResult> {
+    let kk = k.min(ds.n).max(1);
+    let cap = kk.saturating_mul(overscan).max(kk);
+    if cap >= cands.len() {
+        // pass 1 would retain everything: the one-stage scan is strictly
+        // cheaper than screen + gather-re-rank-all
+        return None;
+    }
+    const BLOCK: usize = 4096;
+    let mut out = vec![0f32; BLOCK.min(cands.len())];
+    for tier in ladder.tiers() {
+        let tq = tier.encode_query(q);
+        let mut tk = TopK::new(cap);
+        let mut start = 0;
+        while start < cands.len() {
+            let end = (start + BLOCK).min(cands.len());
+            let ids = &cands[start..end];
+            let out_buf = &mut out[..end - start];
+            tier.scores_ids(ids, &tq, out_buf);
+            tk.push_ids(ids, out_buf);
+            start = end;
+        }
+        let rerank = |ids: &[u32], tk: &mut TopK| rerank_gather(ds, backend, q, ids, tk);
+        let finished = finish_screen(tier, &tq, tk.into_sorted(), cands.len(), cap, kk, rerank);
+        if let Some(tk2) = finished {
+            return Some(TopKResult { items: tk2.into_sorted(), scanned: cands.len() });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn resolve_pq_m_prefers_wide_divisors() {
+        assert_eq!(resolve_pq_m(64, 16), 16); // explicit divisor wins
+        assert_eq!(resolve_pq_m(64, 0), 8); // auto: dsub = 8
+        assert_eq!(resolve_pq_m(12, 0), 3); // dsub = 4
+        assert_eq!(resolve_pq_m(7, 0), 7); // prime d → per-dim tables
+    }
+
+    #[test]
+    #[should_panic(expected = "must evenly divide")]
+    fn resolve_pq_m_rejects_non_divisors() {
+        // direct library builds get the same rule Config::validate
+        // enforces, loudly
+        resolve_pq_m(64, 7);
+    }
+
+    #[test]
+    fn ladder_shapes_per_kind() {
+        let mut rng = Pcg64::new(1);
+        let d = 16usize;
+        let rows: Vec<f32> = (0..200 * d).map(|_| rng.gaussian() as f32).collect();
+        let mut cfg = Config::default().index;
+        cfg.quant = crate::config::QuantKind::Off;
+        assert!(TierLadder::from_cfg(&rows, d, &cfg).is_none());
+        cfg.quant = crate::config::QuantKind::Sq8;
+        let l = TierLadder::from_cfg(&rows, d, &cfg).unwrap();
+        assert_eq!(l.tiers().len(), 1);
+        assert_eq!(l.describe(), "sq8");
+        cfg.quant = crate::config::QuantKind::Sq4;
+        let l = TierLadder::from_cfg(&rows, d, &cfg).unwrap();
+        assert_eq!(l.tiers().len(), 2);
+        assert_eq!(l.primary().name(), "sq4");
+        assert_eq!(l.tiers()[1].name(), "sq8");
+        cfg.quant = crate::config::QuantKind::Pq;
+        cfg.pq_bits = 4;
+        let l = TierLadder::from_cfg(&rows, d, &cfg).unwrap();
+        assert_eq!(l.primary().name(), "pq");
+        assert!(l.describe().contains("pq(m=2,b=4)"), "{}", l.describe());
+    }
+
+    #[test]
+    fn tier_queries_score_consistently_across_forms() {
+        // every tier: scores / scores_ids / scores_batch agree bitwise
+        let mut rng = Pcg64::new(2);
+        let (n, d) = (120usize, 24usize);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let mut cfg = Config::default().index;
+        cfg.pq_bits = 4;
+        for kind in
+            [crate::config::QuantKind::Sq8, crate::config::QuantKind::Sq4, crate::config::QuantKind::Pq]
+        {
+            cfg.quant = kind;
+            let ladder = TierLadder::from_cfg(&rows, d, &cfg).unwrap();
+            for tier in ladder.tiers() {
+                let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                let tq = tier.encode_query(&q);
+                let mut full = vec![0f32; n];
+                tier.scores(0, n, &tq, &mut full);
+                let ids: Vec<u32> = (0..n as u32).step_by(3).collect();
+                let mut scattered = vec![0f32; ids.len()];
+                tier.scores_ids(&ids, &tq, &mut scattered);
+                for (i, &id) in ids.iter().enumerate() {
+                    assert_eq!(
+                        scattered[i].to_bits(),
+                        full[id as usize].to_bits(),
+                        "{} id {id}",
+                        tier.name()
+                    );
+                }
+                let tq2 = tier.encode_query(&q);
+                let refs = [&tq, &tq2];
+                let mut batch = vec![0f32; 2 * n];
+                tier.scores_batch(0, n, &refs, &mut batch);
+                for j in 0..2 {
+                    for (a, b) in batch[j * n..(j + 1) * n].iter().zip(&full) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{} batch q{j}", tier.name());
+                    }
+                }
+                assert!(tier.error_bound(&tq) >= 0.0);
+            }
+        }
+    }
+}

@@ -88,8 +88,8 @@ impl ShardedIndex {
             IndexKind::Brute => {
                 for sd in &shard_ds {
                     let mut idx = BruteForce::new(sd.clone(), backend.clone());
-                    if cfg.quant {
-                        idx = idx.with_quant(cfg.quant_block, cfg.overscan);
+                    if cfg.quant.enabled() {
+                        idx = idx.with_tier_cfg(cfg);
                     }
                     shards.push(SubIndex::Brute(idx));
                 }

@@ -1,20 +1,30 @@
-//! SQ8 two-stage scan invariants (Checker-driven): the quantized
-//! screening pass is a pure bandwidth optimization — pass 1 must always
-//! retain the exact top-k (coverage), and the end-to-end `top_k` /
-//! `top_k_batch` results must be bit-identical to the f32-only scan on
-//! brute and IVF, including through sparse updates and compaction.
+//! Quantized two-stage scan invariants (Checker-driven): the screening
+//! pass — SQ8, SQ4, or PQ — is a pure bandwidth optimization. Pass 1
+//! must always retain the exact top-k whenever its certificate fires
+//! (coverage), the per-row error bounds must hold, and the end-to-end
+//! `top_k` / `top_k_batch` results must be bit-identical to the
+//! f32-only scan on brute, IVF, LSH, and the sharded index — including
+//! through sparse updates, compaction, the tier-ladder fallback
+//! (PQ/SQ4 → SQ8 → f32), and the multi-query kernels.
 
-use gmips::config::{Config, IndexConfig};
+use gmips::config::{Config, IndexConfig, QuantKind};
 use gmips::data::{self, synth};
+use gmips::linalg::pq::PqView;
 use gmips::linalg::{self, quant::*};
 use gmips::mips::brute::BruteForce;
 use gmips::mips::ivf::IvfIndex;
+use gmips::mips::lsh::SrpLsh;
 use gmips::mips::{MipsIndex, TopKResult};
 use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::shard::ShardedIndex;
 use gmips::util::check::Checker;
 use gmips::util::rng::Pcg64;
 use gmips::util::topk::{topk_reference, TopK};
 use std::sync::Arc;
+
+/// Every active tier configuration the suites sweep (PQ at both widths).
+const TIERS: [(QuantKind, usize); 4] =
+    [(QuantKind::Sq8, 8), (QuantKind::Sq4, 8), (QuantKind::Pq, 4), (QuantKind::Pq, 8)];
 
 /// Bit-level result parity: same ids AND same f32 score bits.
 fn assert_parity(got: &TopKResult, want: &TopKResult, label: &str) {
@@ -116,7 +126,7 @@ fn brute_quant_batch_bit_parity() {
     }
 }
 
-fn ivf_cfg(quant: bool) -> IndexConfig {
+fn ivf_cfg(quant: QuantKind) -> IndexConfig {
     let mut cfg = Config::default().index;
     cfg.n_clusters = 35;
     cfg.n_probe = 7;
@@ -134,8 +144,8 @@ fn ivf_quant_bit_parity_through_updates_and_compaction() {
     // be invisible in the results across the whole update lifecycle
     let ds = Arc::new(synth::imagenet_like(3_500, 16, 30, 0.25, 5));
     let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
-    let mut q_idx = IvfIndex::build(ds.clone(), &ivf_cfg(true), backend.clone()).unwrap();
-    let mut f_idx = IvfIndex::build(ds.clone(), &ivf_cfg(false), backend).unwrap();
+    let mut q_idx = IvfIndex::build(ds.clone(), &ivf_cfg(QuantKind::Sq8), backend.clone()).unwrap();
+    let mut f_idx = IvfIndex::build(ds.clone(), &ivf_cfg(QuantKind::Off), backend).unwrap();
     let mut rng = Pcg64::new(6);
     let phases: [(&str, bool, bool); 3] =
         [("fresh", false, false), ("pending", true, false), ("compacted", false, true)];
@@ -200,11 +210,224 @@ fn adversarial_flat_data_stays_bit_exact() {
 fn build_index_honours_quant_config() {
     let ds = Arc::new(synth::imagenet_like(1_200, 8, 10, 0.3, 9));
     let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
-    let mut cfg = ivf_cfg(true);
-    cfg.kind = gmips::config::IndexKind::Brute;
-    let idx = gmips::mips::build_index(&ds, &cfg, backend.clone()).unwrap();
-    assert!(idx.describe().contains("sq8"), "{}", idx.describe());
-    cfg.kind = gmips::config::IndexKind::Ivf;
-    let idx = gmips::mips::build_index(&ds, &cfg, backend).unwrap();
-    assert!(idx.describe().contains("sq8"), "{}", idx.describe());
+    for (quant, name) in
+        [(QuantKind::Sq8, "sq8"), (QuantKind::Sq4, "sq4"), (QuantKind::Pq, "pq(")]
+    {
+        let mut cfg = ivf_cfg(quant);
+        cfg.kind = gmips::config::IndexKind::Brute;
+        let idx = gmips::mips::build_index(&ds, &cfg, backend.clone()).unwrap();
+        assert!(idx.describe().contains(name), "{}", idx.describe());
+        cfg.kind = gmips::config::IndexKind::Ivf;
+        let idx = gmips::mips::build_index(&ds, &cfg, backend.clone()).unwrap();
+        assert!(idx.describe().contains(name), "{}", idx.describe());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PQ / SQ4 screening tiers (PR 5)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_new_tier_error_bounds_hold_per_row() {
+    // satellite (a): the per-row PQ and SQ4 error bounds hold on random
+    // data across dims, blocks/subspaces, and code widths
+    Checker::new(71).cases(25).check_u64(1u64 << 32, |seed| {
+        let mut rng = Pcg64::new(seed ^ 0xF00D);
+        let n = 100 + rng.next_below(400) as usize;
+        let dsub = 1 + rng.next_below(5) as usize;
+        let m = 1 + rng.next_below(6) as usize;
+        let d = m * dsub;
+        let ds = synth::imagenet_like(n, d, 8, 0.4, seed);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let mut exact = vec![0f32; n];
+        linalg::matvec_block(&ds.data, d, &q, &mut exact);
+        // SQ4
+        let block = 1 + rng.next_below(70) as usize;
+        let sq4 = Sq4View::encode(&ds.data, d, block);
+        let qq = QuantQuery::encode(&q);
+        let eps4 = sq4.error_bound(&qq) as f64;
+        let mut out = vec![0f32; n];
+        sq4.scores(0, n, &qq, &mut out);
+        for r in 0..n {
+            if (exact[r] as f64 - out[r] as f64).abs() > eps4 {
+                return false;
+            }
+        }
+        // PQ at both widths
+        for bits in [4usize, 8] {
+            let pv = PqView::train(&ds.data, d, m, bits, n, 5, seed ^ 7);
+            let lut = pv.encode_query(&q);
+            let eps = pv.error_bound(&lut) as f64;
+            pv.scores(0, n, &lut, &mut out);
+            for r in 0..n {
+                if (exact[r] as f64 - out[r] as f64).abs() > eps {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn new_tiers_bit_parity_on_brute_ivf_lsh() {
+    // satellite (b): certified results are bit-identical to the f32 scan
+    // on brute/IVF/LSH for every tier config, incl. update_row + compact
+    let ds = Arc::new(synth::imagenet_like(3_000, 16, 25, 0.25, 31));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut rng = Pcg64::new(32);
+    for (quant, pq_bits) in TIERS {
+        let mut qcfg = ivf_cfg(quant);
+        qcfg.pq_bits = pq_bits;
+        let label = format!("{}/b{pq_bits}", quant.name());
+        // brute
+        let fb = BruteForce::new(ds.clone(), backend.clone());
+        let qb = BruteForce::new(ds.clone(), backend.clone()).with_tier_cfg(&qcfg);
+        for k in [1usize, 20, 75] {
+            let q = data::random_theta(&ds, 0.05, &mut rng);
+            assert_parity(&qb.top_k(&q, k), &fb.top_k(&q, k), &format!("brute {label} k={k}"));
+        }
+        // LSH
+        let mut lcfg = qcfg.clone();
+        lcfg.tables = 8;
+        lcfg.bits = 7;
+        let mut fcfg = lcfg.clone();
+        fcfg.quant = QuantKind::Off;
+        let ql = SrpLsh::build(ds.clone(), &lcfg, backend.clone()).unwrap();
+        let fl = SrpLsh::build(ds.clone(), &fcfg, backend.clone()).unwrap();
+        for k in [1usize, 12, 40] {
+            let q = data::random_theta(&ds, 0.05, &mut rng);
+            assert_parity(&ql.top_k(&q, k), &fl.top_k(&q, k), &format!("lsh {label} k={k}"));
+        }
+        // IVF through the update lifecycle
+        let mut qi = IvfIndex::build(ds.clone(), &qcfg, backend.clone()).unwrap();
+        let mut fi = IvfIndex::build(ds.clone(), &ivf_cfg(QuantKind::Off), backend.clone()).unwrap();
+        let mut urng = Pcg64::new(33);
+        for stage in ["fresh", "pending", "compacted"] {
+            if stage == "pending" {
+                for id in [7u32, 811, 2_222] {
+                    let v: Vec<f32> = (0..ds.d).map(|_| urng.gaussian() as f32 * 0.3).collect();
+                    qi.update_row(id, &v);
+                    fi.update_row(id, &v);
+                }
+            }
+            if stage == "compacted" {
+                qi.compact();
+                fi.compact();
+            }
+            for k in [1usize, 30] {
+                let q = data::random_theta(&ds, 0.05, &mut rng);
+                assert_parity(
+                    &qi.top_k(&q, k),
+                    &fi.top_k(&q, k),
+                    &format!("ivf {label} {stage} k={k}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn new_tiers_sharded_parity() {
+    // acceptance: certified PQ/SQ4 scans return bit-identical results on
+    // the sharded index too (per-shard codebooks differ from the
+    // monolithic ones — the certificate contract makes that invisible)
+    let ds = Arc::new(synth::imagenet_like(2_500, 16, 20, 0.3, 41));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut rng = Pcg64::new(42);
+    for kind in [gmips::config::IndexKind::Brute, gmips::config::IndexKind::Ivf] {
+        for (quant, pq_bits) in [(QuantKind::Sq4, 8), (QuantKind::Pq, 4)] {
+            let mut cfg = ivf_cfg(quant);
+            cfg.kind = kind;
+            cfg.pq_bits = pq_bits;
+            let mono = gmips::mips::build_index(&ds, &cfg, backend.clone()).unwrap();
+            cfg.shards = 3;
+            let idx = ShardedIndex::build(&ds, &cfg, backend.clone()).unwrap();
+            let label = format!("{:?} {}/b{pq_bits}", kind, quant.name());
+            for k in [1usize, 25, 70] {
+                let q = data::random_theta(&ds, 0.05, &mut rng);
+                assert_parity(&idx.top_k(&q, k), &mono.top_k(&q, k), &format!("{label} k={k}"));
+            }
+            let qs_owned: Vec<Vec<f32>> =
+                (0..5).map(|_| data::random_theta(&ds, 0.05, &mut rng)).collect();
+            let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+            let got = idx.top_k_batch(&qs, 21);
+            let want = mono.top_k_batch(&qs, 21);
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_parity(g, w, &format!("{label} batch q{j}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_flat_data_walks_the_ladder() {
+    // satellite (c): (near-)identical rows collapse quantized scores into
+    // ties on EVERY tier — the ladder must keep falling (PQ/SQ4 → SQ8 →
+    // f32) and end bit-exact regardless of which rung certifies
+    let mut rng = Pcg64::new(51);
+    let (n, d) = (600usize, 8usize);
+    let base: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    for jitter in [0.0f32, 1e-6] {
+        let data_flat: Vec<f32> = (0..n)
+            .flat_map(|_| {
+                base.iter().map(|&x| x + jitter * rng.gaussian() as f32).collect::<Vec<f32>>()
+            })
+            .collect();
+        let ds = Arc::new(gmips::data::Dataset::new(data_flat, n, d).unwrap());
+        let f32_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer));
+        for (quant, pq_bits) in TIERS {
+            let mut cfg = ivf_cfg(quant);
+            cfg.pq_bits = pq_bits;
+            cfg.quant_block = 32;
+            cfg.overscan = 1;
+            let q_idx = BruteForce::new(ds.clone(), Arc::new(NativeScorer)).with_tier_cfg(&cfg);
+            for _ in 0..3 {
+                let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                let got = q_idx.top_k(&q, 10);
+                let want = f32_idx.top_k(&q, 10);
+                assert_parity(
+                    &got,
+                    &want,
+                    &format!("flat jitter={jitter} {}/b{pq_bits}", quant.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_query_batches_bit_identical_to_singles_on_all_tiers() {
+    // satellite (d): the batched (register-blocked / shared-LUT) kernels
+    // drive top_k_batch to exactly the per-query results on every tier
+    let ds = Arc::new(synth::imagenet_like(2_000, 24, 18, 0.3, 61));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut rng = Pcg64::new(62);
+    for (quant, pq_bits) in TIERS {
+        let mut cfg = ivf_cfg(quant);
+        cfg.pq_bits = pq_bits;
+        let qb = BruteForce::new(ds.clone(), backend.clone()).with_tier_cfg(&cfg);
+        let qi = IvfIndex::build(ds.clone(), &cfg, backend.clone()).unwrap();
+        for nq in [2usize, 5, 9] {
+            let qs_owned: Vec<Vec<f32>> =
+                (0..nq).map(|_| data::random_theta(&ds, 0.05, &mut rng)).collect();
+            let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+            for (name, batch) in
+                [("brute", qb.top_k_batch(&qs, 27)), ("ivf", qi.top_k_batch(&qs, 27))]
+            {
+                for (j, got) in batch.iter().enumerate() {
+                    let want = if name == "brute" {
+                        qb.top_k(qs[j], 27)
+                    } else {
+                        qi.top_k(qs[j], 27)
+                    };
+                    assert_parity(
+                        got,
+                        &want,
+                        &format!("{name} {}/b{pq_bits} nq={nq} q{j}", quant.name()),
+                    );
+                }
+            }
+        }
+    }
 }

@@ -10,7 +10,7 @@
 //! sampler's id-keyed frozen Gumbel streams make the *sample* itself
 //! invariant by construction.
 
-use gmips::config::{Config, IndexConfig, IndexKind, ShardStrategy};
+use gmips::config::{Config, IndexConfig, IndexKind, QuantKind, ShardStrategy};
 use gmips::data::{self, synth, Dataset};
 use gmips::mips::brute::BruteForce;
 use gmips::mips::ivf::IvfIndex;
@@ -62,11 +62,12 @@ const STRATEGIES: [ShardStrategy; 2] = [ShardStrategy::RoundRobin, ShardStrategy
 fn brute_shard_parity_single_and_batch() {
     let ds = Arc::new(synth::imagenet_like(3000, 16, 25, 0.3, 1));
     let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
-    for quant in [false, true] {
+    for quant in [QuantKind::Off, QuantKind::Sq8, QuantKind::Sq4, QuantKind::Pq] {
         let mut cfg = base_cfg(IndexKind::Brute);
         cfg.quant = quant;
-        let mono = if quant {
-            BruteForce::new(ds.clone(), backend.clone()).with_quant(cfg.quant_block, cfg.overscan)
+        cfg.pq_bits = 4;
+        let mono = if quant.enabled() {
+            BruteForce::new(ds.clone(), backend.clone()).with_tier_cfg(&cfg)
         } else {
             BruteForce::new(ds.clone(), backend.clone())
         };
@@ -76,7 +77,7 @@ fn brute_shard_parity_single_and_batch() {
                 let idx = sharded(&ds, &cfg, shards, strategy, &backend);
                 for k in [1usize, 17, 80] {
                     let q = synth::random_theta(&ds, 0.05, &mut rng);
-                    let label = format!("brute quant={quant} {strategy:?} N={shards} k={k}");
+                    let label = format!("brute quant={} {strategy:?} N={shards} k={k}", quant.name());
                     assert_parity(&idx.top_k(&q, k), &mono.top_k(&q, k), &label);
                 }
                 // batch path vs monolithic batch
@@ -86,7 +87,7 @@ fn brute_shard_parity_single_and_batch() {
                 let got = idx.top_k_batch(&qs, 23);
                 let want = mono.top_k_batch(&qs, 23);
                 for (j, (g, w)) in got.iter().zip(&want).enumerate() {
-                    let label = format!("brute batch quant={quant} {strategy:?} N={shards} q{j}");
+                    let label = format!("brute batch quant={} {strategy:?} N={shards} q{j}", quant.name());
                     assert_parity(g, w, &label);
                 }
             }
@@ -98,9 +99,10 @@ fn brute_shard_parity_single_and_batch() {
 fn ivf_shard_parity_through_updates_and_compaction() {
     let ds = Arc::new(synth::imagenet_like(4000, 16, 30, 0.25, 3));
     let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
-    for quant in [false, true] {
+    for quant in [QuantKind::Off, QuantKind::Sq8, QuantKind::Pq] {
         let mut cfg = base_cfg(IndexKind::Ivf);
         cfg.quant = quant;
+        cfg.pq_bits = 4;
         for strategy in STRATEGIES {
             // fresh pair per strategy: updates/compaction mutate state
             let mut mono = IvfIndex::build(ds.clone(), &cfg, backend.clone()).unwrap();
@@ -109,7 +111,7 @@ fn ivf_shard_parity_through_updates_and_compaction() {
             let check = |idx: &ShardedIndex, mono: &IvfIndex, rng: &mut Pcg64, stage: &str| {
                 for k in [1usize, 20, 60] {
                     let q = synth::random_theta(&ds, 0.05, rng);
-                    let label = format!("ivf quant={quant} {strategy:?} {stage} k={k}");
+                    let label = format!("ivf quant={} {strategy:?} {stage} k={k}", quant.name());
                     assert_parity(&idx.top_k(&q, k), &mono.top_k(&q, k), &label);
                 }
                 let qs_owned: Vec<Vec<f32>> =
@@ -119,7 +121,7 @@ fn ivf_shard_parity_through_updates_and_compaction() {
                 let want = mono.top_k_batch(&qs, 25);
                 for (j, (g, w)) in got.iter().zip(&want).enumerate() {
                     let label =
-                        format!("ivf batch quant={quant} {strategy:?} {stage} q{j}");
+                        format!("ivf batch quant={} {strategy:?} {stage} q{j}", quant.name());
                     assert_parity(g, w, &label);
                 }
             };
@@ -146,9 +148,10 @@ fn ivf_shard_parity_through_updates_and_compaction() {
 fn lsh_shard_parity() {
     let ds = Arc::new(synth::imagenet_like(3000, 12, 25, 0.3, 7));
     let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
-    for quant in [false, true] {
+    for quant in [QuantKind::Off, QuantKind::Sq4, QuantKind::Pq] {
         let mut cfg = base_cfg(IndexKind::Lsh);
         cfg.quant = quant;
+        cfg.pq_bits = 4;
         let mono = SrpLsh::build(ds.clone(), &cfg, backend.clone()).unwrap();
         let mut rng = Pcg64::new(8);
         for strategy in STRATEGIES {
@@ -156,7 +159,7 @@ fn lsh_shard_parity() {
                 let idx = sharded(&ds, &cfg, shards, strategy, &backend);
                 for k in [1usize, 15, 50] {
                     let q = synth::random_theta(&ds, 0.05, &mut rng);
-                    let label = format!("lsh quant={quant} {strategy:?} N={shards} k={k}");
+                    let label = format!("lsh quant={} {strategy:?} N={shards} k={k}", quant.name());
                     assert_parity(&idx.top_k(&q, k), &mono.top_k(&q, k), &label);
                 }
                 let qs_owned: Vec<Vec<f32>> =
@@ -165,7 +168,7 @@ fn lsh_shard_parity() {
                 let got = idx.top_k_batch(&qs, 18);
                 let want = mono.top_k_batch(&qs, 18);
                 for (j, (g, w)) in got.iter().zip(&want).enumerate() {
-                    let label = format!("lsh batch quant={quant} {strategy:?} N={shards} q{j}");
+                    let label = format!("lsh batch quant={} {strategy:?} N={shards} q{j}", quant.name());
                     assert_parity(g, w, &label);
                 }
             }
