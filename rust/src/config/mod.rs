@@ -303,6 +303,51 @@ pub struct ServeConfig {
     /// before serving it — trades a little p50 latency for deeper batches
     /// under moderate load. 0 (default) = serve whatever is queued.
     pub micro_wait_us: u64,
+    /// max concurrent client connections; excess connections get an
+    /// immediate `overloaded` error and are closed instead of queueing
+    pub max_conns: usize,
+    /// max bytes in one request line; longer lines are rejected with an
+    /// error and the connection resynchronizes at the next newline
+    pub max_line_bytes: usize,
+    /// how long (ms) a connection thread keeps trying to enqueue a
+    /// request on a full coordinator queue before shedding it with an
+    /// `overloaded` error (bounds latency under saturation)
+    pub shed_ms: u64,
+}
+
+/// Remote shard-serving parameters (coordinator side of the networked
+/// fan-out; see `crate::remote`).
+#[derive(Clone, Debug)]
+pub struct RemoteConfig {
+    /// comma-separated shard-server addresses, in shard order
+    /// (`"host:port,host:port"`); shard s of N lives at the s-th entry
+    pub addrs: String,
+    /// per-request deadline (ms) covering all retries to one shard
+    pub deadline_ms: u64,
+    /// TCP connect timeout (ms) per attempt
+    pub connect_timeout_ms: u64,
+    /// retry attempts per shard call after the first try
+    pub retries: u32,
+    /// base backoff (ms) between retries; attempt a sleeps
+    /// `backoff_ms · 2^a` plus deterministic jitter
+    pub backoff_ms: u64,
+    /// background heartbeat period (ms); 0 disables the prober
+    pub heartbeat_ms: u64,
+    /// consecutive failures before a shard is declared down and the
+    /// fan-out stops paying its retry budget
+    pub down_after: u32,
+}
+
+impl RemoteConfig {
+    /// Shard addresses in shard order (split on commas, trimmed,
+    /// empties dropped).
+    pub fn addr_list(&self) -> Vec<String> {
+        self.addrs
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect()
+    }
 }
 
 /// Full system config.
@@ -315,6 +360,7 @@ pub struct Config {
     pub learn: LearnConfig,
     pub runtime: RuntimeConfig,
     pub serve: ServeConfig,
+    pub remote: RemoteConfig,
 }
 
 impl Default for Config {
@@ -375,6 +421,18 @@ impl Default for Config {
                 workers: 0,
                 queue_depth: 256,
                 micro_wait_us: 0,
+                max_conns: 64,
+                max_line_bytes: 1 << 20,
+                shed_ms: 100,
+            },
+            remote: RemoteConfig {
+                addrs: String::new(),
+                deadline_ms: 2000,
+                connect_timeout_ms: 500,
+                retries: 3,
+                backoff_ms: 20,
+                heartbeat_ms: 200,
+                down_after: 2,
             },
         }
     }
@@ -498,6 +556,18 @@ impl Config {
         c.serve.workers = doc.get_usize("serve.workers", c.serve.workers)?;
         c.serve.queue_depth = doc.get_usize("serve.queue_depth", c.serve.queue_depth)?;
         c.serve.micro_wait_us = doc.get_u64("serve.micro_wait_us", c.serve.micro_wait_us)?;
+        c.serve.max_conns = doc.get_usize("serve.max_conns", c.serve.max_conns)?;
+        c.serve.max_line_bytes = doc.get_usize("serve.max_line_bytes", c.serve.max_line_bytes)?;
+        c.serve.shed_ms = doc.get_u64("serve.shed_ms", c.serve.shed_ms)?;
+
+        c.remote.addrs = doc.get_str("remote.addrs", &c.remote.addrs)?;
+        c.remote.deadline_ms = doc.get_u64("remote.deadline_ms", c.remote.deadline_ms)?;
+        c.remote.connect_timeout_ms =
+            doc.get_u64("remote.connect_timeout_ms", c.remote.connect_timeout_ms)?;
+        c.remote.retries = doc.get_u64("remote.retries", c.remote.retries as u64)? as u32;
+        c.remote.backoff_ms = doc.get_u64("remote.backoff_ms", c.remote.backoff_ms)?;
+        c.remote.heartbeat_ms = doc.get_u64("remote.heartbeat_ms", c.remote.heartbeat_ms)?;
+        c.remote.down_after = doc.get_u64("remote.down_after", c.remote.down_after as u64)? as u32;
         Ok(())
     }
 
@@ -589,6 +659,20 @@ impl Config {
         }
         if self.learn.train_size == 0 || self.learn.train_size > self.data.n {
             return Err(Error::config("learn.train_size must be in [1, n]"));
+        }
+        if self.serve.max_conns == 0 {
+            return Err(Error::config("serve.max_conns must be ≥ 1"));
+        }
+        if self.serve.max_line_bytes < 256 {
+            return Err(Error::config(
+                "serve.max_line_bytes must be ≥ 256 (requests must fit on one line)",
+            ));
+        }
+        if self.remote.deadline_ms == 0 {
+            return Err(Error::config("remote.deadline_ms must be positive"));
+        }
+        if self.remote.connect_timeout_ms == 0 {
+            return Err(Error::config("remote.connect_timeout_ms must be positive"));
         }
         Ok(())
     }
@@ -758,6 +842,41 @@ mod tests {
         assert_eq!(c.index.quant_block, 32);
         assert_eq!(c.serve.micro_wait_us, 150);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn remote_and_serve_knobs_from_toml() {
+        let mut c = Config::default();
+        assert_eq!(c.serve.max_conns, 64);
+        assert_eq!(c.serve.max_line_bytes, 1 << 20);
+        assert_eq!(c.serve.shed_ms, 100);
+        assert!(c.remote.addr_list().is_empty());
+        let doc = TomlDoc::parse(
+            "[serve]\nmax_conns = 8\nmax_line_bytes = 4096\nshed_ms = 50\n\
+             [remote]\naddrs = \"127.0.0.1:9001, 127.0.0.1:9002\"\ndeadline_ms = 500\n\
+             retries = 2\nbackoff_ms = 5\nheartbeat_ms = 0\ndown_after = 3",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.serve.max_conns, 8);
+        assert_eq!(c.serve.max_line_bytes, 4096);
+        assert_eq!(c.serve.shed_ms, 50);
+        assert_eq!(c.remote.addr_list(), vec!["127.0.0.1:9001", "127.0.0.1:9002"]);
+        assert_eq!(c.remote.deadline_ms, 500);
+        assert_eq!(c.remote.retries, 2);
+        assert_eq!(c.remote.backoff_ms, 5);
+        assert_eq!(c.remote.heartbeat_ms, 0);
+        assert_eq!(c.remote.down_after, 3);
+        c.validate().unwrap();
+        // degenerate limits must be rejected
+        c.serve.max_conns = 0;
+        assert!(c.validate().is_err());
+        c.serve.max_conns = 8;
+        c.serve.max_line_bytes = 16;
+        assert!(c.validate().is_err());
+        c.serve.max_line_bytes = 4096;
+        c.remote.deadline_ms = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -94,6 +94,13 @@ pub enum Response {
     Features { mean: Vec<f32>, log_z: f64 },
     Tv { bound: f64 },
     Stats { text: String },
+    /// A successful answer computed while some remote shards were
+    /// unreachable: `inner` holds the result renormalized over the
+    /// `ok_shards` surviving shards (of `shards` total). On the wire this
+    /// is the inner object plus `"degraded": true` and
+    /// `"shards_ok": "s/N"`, so clients that ignore the extra keys keep
+    /// working and clients that care can tell partial answers apart.
+    Degraded { inner: Box<Response>, ok_shards: usize, shards: usize },
     Error { message: String },
 }
 
@@ -128,6 +135,17 @@ impl Response {
             Response::Stats { text } => {
                 Json::obj(vec![("ok", Json::Bool(true)), ("stats", Json::str(text.clone()))])
             }
+            Response::Degraded { inner, ok_shards, shards } => {
+                let mut j = inner.to_json();
+                if let Json::Obj(kvs) = &mut j {
+                    kvs.push(("degraded".to_string(), Json::Bool(true)));
+                    kvs.push((
+                        "shards_ok".to_string(),
+                        Json::str(format!("{ok_shards}/{shards}")),
+                    ));
+                }
+                j
+            }
             Response::Error { message } => Json::obj(vec![
                 ("ok", Json::Bool(false)),
                 ("error", Json::str(message.clone())),
@@ -142,6 +160,21 @@ impl Response {
                 message: j.get("error").and_then(|e| e.as_str().ok()).unwrap_or("?").to_string(),
             });
         }
+        let body = Self::body_from_json(j)?;
+        if j.get("degraded").map(|d| d.as_bool()).transpose()?.unwrap_or(false) {
+            let (ok_shards, shards) = j
+                .get("shards_ok")
+                .and_then(|v| v.as_str().ok())
+                .and_then(|s| s.split_once('/'))
+                .and_then(|(a, b)| Some((a.parse().ok()?, b.parse().ok()?)))
+                .unwrap_or((0, 0));
+            return Ok(Response::Degraded { inner: Box::new(body), ok_shards, shards });
+        }
+        Ok(body)
+    }
+
+    /// The non-degraded payload probes, shared by [`Response::from_json`].
+    fn body_from_json(j: &Json) -> Result<Response> {
         if let Some(b) = j.get("tv_bound") {
             return Ok(Response::Tv { bound: b.as_f64()? });
         }
@@ -213,6 +246,34 @@ mod tests {
         roundtrip_resp(Response::Tv { bound: 1e-4 });
         roundtrip_resp(Response::Stats { text: "ok".into() });
         roundtrip_resp(Response::Error { message: "boom".into() });
+        roundtrip_resp(Response::Degraded {
+            inner: Box::new(Response::LogPartition { log_z: 3.5, k: 4, l: 8 }),
+            ok_shards: 3,
+            shards: 4,
+        });
+        roundtrip_resp(Response::Degraded {
+            inner: Box::new(Response::Samples { ids: vec![7], scanned: 40, tail_m: 1 }),
+            ok_shards: 1,
+            shards: 2,
+        });
+    }
+
+    #[test]
+    fn degraded_marks_the_wire_object() {
+        let r = Response::Degraded {
+            inner: Box::new(Response::Features { mean: vec![0.5], log_z: 1.0 }),
+            ok_shards: 2,
+            shards: 3,
+        };
+        let text = r.to_json().to_string();
+        assert!(text.contains(r#""degraded":true"#), "{text}");
+        assert!(text.contains(r#""shards_ok":"2/3""#), "{text}");
+        // clients that ignore the extra keys still parse the payload
+        let j = Json::parse(&text).unwrap();
+        match Response::body_from_json(&j).unwrap() {
+            Response::Features { mean, .. } => assert_eq!(mean, vec![0.5]),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

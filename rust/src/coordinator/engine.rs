@@ -8,8 +8,9 @@ use super::api::{Request, Response};
 use crate::config::Config;
 use crate::data::{self, Dataset};
 use crate::dispatch::{self, ExpectationDispatch, PartitionDispatch, SamplerDispatch};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::mips::{self, brute::BruteForce, BuiltIndex, MipsIndex};
+use crate::remote::{RemoteExpectation, RemoteIndex, RemotePartition, RemoteSampler, RemoteStack};
 use crate::sampler::tv_bound;
 use crate::scorer::{NativeScorer, ScoreBackend};
 use crate::util::rng::Pcg64;
@@ -49,6 +50,10 @@ pub struct Engine {
     pub expectation: ExpectationDispatch,
     pub metrics: EngineMetrics,
     pub config: Config,
+    /// `Some` when this engine fronts out-of-process shard servers
+    /// ([`Engine::from_remote`]); the TopK path then fans out through the
+    /// stack directly so it can surface per-shard health.
+    pub remote: Option<Arc<RemoteStack>>,
 }
 
 impl Engine {
@@ -90,6 +95,61 @@ impl Engine {
             expectation,
             metrics: EngineMetrics::default(),
             config,
+            remote: None,
+        }
+    }
+
+    /// Build a coordinator engine over **remote shard servers**
+    /// (`remote.addrs`): every sample/partition/expectation/topk request
+    /// fans out to the shard servers and merges their fragments, instead
+    /// of scanning locally. The dataset is still materialized locally
+    /// from the config seeds — it is the source of truth for dimension
+    /// checks and the exact-scan `tv_certify` audit — and must agree
+    /// with what the shard servers built from the same config.
+    pub fn from_remote(cfg: &Config, backend: Option<Arc<dyn ScoreBackend>>) -> Result<Engine> {
+        let backend = backend.unwrap_or_else(|| Arc::new(NativeScorer));
+        let ds = Arc::new(data::load_or_generate(&cfg.data));
+        let stack = Arc::new(RemoteStack::connect(cfg)?);
+        if stack.n() != ds.n || stack.d() != ds.d {
+            return Err(Error::config(format!(
+                "shard servers hold n={} d={} but this config generates n={} d={} — \
+                 coordinator and shard servers must share one config",
+                stack.n(),
+                stack.d(),
+                ds.n,
+                ds.d
+            )));
+        }
+        let gap_c = cfg.sampler.gap_c.max(stack.gap().unwrap_or(0.0));
+        let sampler = SamplerDispatch::Remote(RemoteSampler::new(
+            stack.clone(),
+            cfg.sampler_k(),
+            gap_c,
+            cfg.index.seed,
+        ));
+        let partition = PartitionDispatch::Remote(RemotePartition::new(stack.clone()));
+        let expectation = ExpectationDispatch::Remote(RemoteExpectation::new(stack.clone()));
+        let index: Arc<dyn MipsIndex> = Arc::new(RemoteIndex::new(stack.clone()));
+        Ok(Engine {
+            ds,
+            index,
+            backend,
+            sampler,
+            partition,
+            expectation,
+            metrics: EngineMetrics::default(),
+            config: cfg.clone(),
+            remote: Some(stack),
+        })
+    }
+
+    /// Mark a response degraded when the remote fan-out lost shards.
+    fn wrap_status(r: Response, status: Option<(usize, usize)>) -> Response {
+        match status {
+            Some((ok, total)) if ok < total => {
+                Response::Degraded { inner: Box::new(r), ok_shards: ok, shards: total }
+            }
+            _ => r,
         }
     }
 
@@ -101,12 +161,19 @@ impl Engine {
                 if theta.len() != self.ds.d {
                     return Self::dim_error(theta.len(), self.ds.d);
                 }
-                let outs = self.sampler.sample_many(theta, (*count).max(1), rng);
-                let r = Response::Samples {
-                    ids: outs.iter().map(|o| o.id).collect(),
-                    scanned: outs.first().map(|o| o.work.scanned).unwrap_or(0),
-                    tail_m: outs.iter().map(|o| o.work.m).sum(),
+                let many = self.sampler.sample_many_status(theta, (*count).max(1), rng);
+                let (outs, status) = match many {
+                    Ok(v) => v,
+                    Err(e) => return Response::Error { message: e.to_string() },
                 };
+                let r = Self::wrap_status(
+                    Response::Samples {
+                        ids: outs.iter().map(|o| o.id).collect(),
+                        scanned: outs.first().map(|o| o.work.scanned).unwrap_or(0),
+                        tail_m: outs.iter().map(|o| o.work.m).sum(),
+                    },
+                    status,
+                );
                 self.metrics.sample.record(sw.micros());
                 r
             }
@@ -114,11 +181,21 @@ impl Engine {
                 if theta.len() != self.ds.d {
                     return Self::dim_error(theta.len(), self.ds.d);
                 }
-                let top = self.index.top_k(theta, (*k).max(1));
-                let r = Response::TopK {
-                    ids: top.items.iter().map(|s| s.id).collect(),
-                    scores: top.items.iter().map(|s| s.score).collect(),
+                let (top, status) = if let Some(stack) = &self.remote {
+                    match stack.top_k_status(&[theta.as_slice()], (*k).max(1)) {
+                        Ok((mut v, st)) => (v.pop().unwrap_or_default(), Some(st)),
+                        Err(e) => return Response::Error { message: e.to_string() },
+                    }
+                } else {
+                    (self.index.top_k(theta, (*k).max(1)), None)
                 };
+                let r = Self::wrap_status(
+                    Response::TopK {
+                        ids: top.items.iter().map(|s| s.id).collect(),
+                        scores: top.items.iter().map(|s| s.score).collect(),
+                    },
+                    status,
+                );
                 self.metrics.topk.record(sw.micros());
                 r
             }
@@ -126,12 +203,14 @@ impl Engine {
                 if theta.len() != self.ds.d {
                     return Self::dim_error(theta.len(), self.ds.d);
                 }
-                let est = self.partition.estimate(theta, rng);
-                let r = Response::LogPartition {
-                    log_z: est.log_z,
-                    k: est.work.k,
-                    l: est.work.l,
+                let (est, status) = match self.partition.estimate_status(theta, rng) {
+                    Ok(v) => v,
+                    Err(e) => return Response::Error { message: e.to_string() },
                 };
+                let r = Self::wrap_status(
+                    Response::LogPartition { log_z: est.log_z, k: est.work.k, l: est.work.l },
+                    status,
+                );
                 self.metrics.partition.record(sw.micros());
                 r
             }
@@ -139,8 +218,14 @@ impl Engine {
                 if theta.len() != self.ds.d {
                     return Self::dim_error(theta.len(), self.ds.d);
                 }
-                let est = self.expectation.expect_features(theta, rng);
-                let r = Response::Features { mean: est.mean, log_z: est.log_z };
+                let (est, status) = match self.expectation.expect_features_status(theta, rng) {
+                    Ok(v) => v,
+                    Err(e) => return Response::Error { message: e.to_string() },
+                };
+                let r = Self::wrap_status(
+                    Response::Features { mean: est.mean, log_z: est.log_z },
+                    status,
+                );
                 self.metrics.expect.record(sw.micros());
                 r
             }
@@ -212,15 +297,26 @@ impl Engine {
                     counts.push((*count).max(1));
                 }
             }
-            let all = self.sampler.sample_batch(&qs, &counts, rng);
-            let micros = sw.micros() / samples.len() as f64;
-            for (&i, outs) in samples.iter().zip(all) {
-                resps[i] = Some(Response::Samples {
-                    ids: outs.iter().map(|o| o.id).collect(),
-                    scanned: outs.first().map(|o| o.work.scanned).unwrap_or(0),
-                    tail_m: outs.iter().map(|o| o.work.m).sum(),
-                });
-                self.metrics.sample.record(micros);
+            match self.sampler.sample_batch_status(&qs, &counts, rng) {
+                Ok((all, status)) => {
+                    let micros = sw.micros() / samples.len() as f64;
+                    for (&i, outs) in samples.iter().zip(all) {
+                        resps[i] = Some(Self::wrap_status(
+                            Response::Samples {
+                                ids: outs.iter().map(|o| o.id).collect(),
+                                scanned: outs.first().map(|o| o.work.scanned).unwrap_or(0),
+                                tail_m: outs.iter().map(|o| o.work.m).sum(),
+                            },
+                            status,
+                        ));
+                        self.metrics.sample.record(micros);
+                    }
+                }
+                Err(e) => {
+                    for &i in &samples {
+                        resps[i] = Some(Response::Error { message: e.to_string() });
+                    }
+                }
             }
         }
 
@@ -232,15 +328,26 @@ impl Engine {
                     qs.push(theta.as_slice());
                 }
             }
-            let ests = self.partition.estimate_batch(&qs, rng);
-            let micros = sw.micros() / partitions.len() as f64;
-            for (&i, est) in partitions.iter().zip(ests) {
-                resps[i] = Some(Response::LogPartition {
-                    log_z: est.log_z,
-                    k: est.work.k,
-                    l: est.work.l,
-                });
-                self.metrics.partition.record(micros);
+            match self.partition.estimate_batch_status(&qs, rng) {
+                Ok((ests, status)) => {
+                    let micros = sw.micros() / partitions.len() as f64;
+                    for (&i, est) in partitions.iter().zip(ests) {
+                        resps[i] = Some(Self::wrap_status(
+                            Response::LogPartition {
+                                log_z: est.log_z,
+                                k: est.work.k,
+                                l: est.work.l,
+                            },
+                            status,
+                        ));
+                        self.metrics.partition.record(micros);
+                    }
+                }
+                Err(e) => {
+                    for &i in &partitions {
+                        resps[i] = Some(Response::Error { message: e.to_string() });
+                    }
+                }
             }
         }
 
@@ -252,11 +359,22 @@ impl Engine {
                     qs.push(theta.as_slice());
                 }
             }
-            let ests = self.expectation.expect_features_batch(&qs, rng);
-            let micros = sw.micros() / expects.len() as f64;
-            for (&i, est) in expects.iter().zip(ests) {
-                resps[i] = Some(Response::Features { mean: est.mean, log_z: est.log_z });
-                self.metrics.expect.record(micros);
+            match self.expectation.expect_features_batch_status(&qs, rng) {
+                Ok((ests, status)) => {
+                    let micros = sw.micros() / expects.len() as f64;
+                    for (&i, est) in expects.iter().zip(ests) {
+                        resps[i] = Some(Self::wrap_status(
+                            Response::Features { mean: est.mean, log_z: est.log_z },
+                            status,
+                        ));
+                        self.metrics.expect.record(micros);
+                    }
+                }
+                Err(e) => {
+                    for &i in &expects {
+                        resps[i] = Some(Response::Error { message: e.to_string() });
+                    }
+                }
             }
         }
 
@@ -268,13 +386,28 @@ impl Engine {
                     qs.push(theta.as_slice());
                 }
             }
-            let tops = self.index.top_k_batch(&qs, k);
+            let (tops, status) = if let Some(stack) = &self.remote {
+                match stack.top_k_status(&qs, k) {
+                    Ok((v, st)) => (v, Some(st)),
+                    Err(e) => {
+                        for &i in &idxs {
+                            resps[i] = Some(Response::Error { message: e.to_string() });
+                        }
+                        continue;
+                    }
+                }
+            } else {
+                (self.index.top_k_batch(&qs, k), None)
+            };
             let micros = sw.micros() / idxs.len() as f64;
             for (&i, top) in idxs.iter().zip(tops) {
-                resps[i] = Some(Response::TopK {
-                    ids: top.items.iter().map(|s| s.id).collect(),
-                    scores: top.items.iter().map(|s| s.score).collect(),
-                });
+                resps[i] = Some(Self::wrap_status(
+                    Response::TopK {
+                        ids: top.items.iter().map(|s| s.id).collect(),
+                        scores: top.items.iter().map(|s| s.score).collect(),
+                    },
+                    status,
+                ));
                 self.metrics.topk.record(micros);
             }
         }

@@ -26,6 +26,7 @@ pub use engine::{Engine, EngineMetrics};
 use crate::error::{Error, Result};
 use crate::util::pool::WorkQueue;
 use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -59,6 +60,9 @@ pub struct Coordinator {
     engine: Arc<Engine>,
     queue: Arc<WorkQueue<Job>>,
     workers: Vec<JoinHandle<()>>,
+    /// requests shed by the front-end because the queue stayed full past
+    /// its shed deadline (`serve.shed_ms`)
+    shed: AtomicU64,
 }
 
 impl Coordinator {
@@ -112,7 +116,7 @@ impl Coordinator {
                 }
             }));
         }
-        Coordinator { engine, queue, workers: handles }
+        Coordinator { engine, queue, workers: handles, shed: AtomicU64::new(0) }
     }
 
     /// Enqueue a request (blocks when the queue is full — backpressure).
@@ -140,6 +144,22 @@ impl Coordinator {
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// Requests currently waiting in the submission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Record one front-end load-shed (queue stayed full past the shed
+    /// deadline and the request was answered `overloaded`).
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total requests shed so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     /// Drain and stop all workers.

@@ -23,12 +23,25 @@
 //! `(seed, round, salt, idx)` ([`crate::util::rng::Pcg64::keyed`]) — the
 //! `rng` argument threaded through the dispatch methods is consumed only
 //! by the monolithic variants.
+//!
+//! A third column, `Remote(...)`, routes the same three operations onto
+//! the [`crate::remote`] fan-out over out-of-process shard servers. The
+//! remote variants can *partially* fail (some shards down), so each
+//! operation also has a `*_status` twin returning the `(ok, total)`
+//! shard count alongside the result — `None` for the in-process
+//! variants, which cannot degrade. The plain methods degrade silently
+//! (empty/`-inf` results on total fan-out failure) and exist for callers
+//! that cannot carry a status, e.g. the learner; the engine always uses
+//! the `*_status` twins.
 
 use crate::config::Config;
 use crate::data::Dataset;
+use crate::error::Result;
 use crate::estimator::expectation::{ExpectationEstimator, FeatureExpectation};
 use crate::estimator::partition::{PartitionEstimate, PartitionEstimator};
+use crate::estimator::EstimateWork;
 use crate::mips::BuiltIndex;
+use crate::remote::{RemoteExpectation, RemotePartition, RemoteSampler};
 use crate::sampler::lazy_gumbel::LazyGumbelSampler;
 use crate::sampler::{SampleOutcome, Sampler};
 use crate::scorer::ScoreBackend;
@@ -40,6 +53,7 @@ use std::sync::Arc;
 pub enum SamplerDispatch {
     Mono(LazyGumbelSampler),
     Sharded(ShardedGumbelSampler),
+    Remote(RemoteSampler),
 }
 
 impl SamplerDispatch {
@@ -48,15 +62,17 @@ impl SamplerDispatch {
         match self {
             SamplerDispatch::Mono(s) => s.k,
             SamplerDispatch::Sharded(s) => s.k,
+            SamplerDispatch::Remote(s) => s.k,
         }
     }
 
     /// Implementation name for stats/metrics (`lazy-gumbel` /
-    /// `sharded-gumbel`).
+    /// `sharded-gumbel` / `remote-gumbel`).
     pub fn name(&self) -> &'static str {
         match self {
             SamplerDispatch::Mono(s) => s.name(),
             SamplerDispatch::Sharded(s) => s.name(),
+            SamplerDispatch::Remote(s) => s.name(),
         }
     }
 
@@ -65,6 +81,9 @@ impl SamplerDispatch {
         match self {
             SamplerDispatch::Mono(s) => s.sample_many(q, count, rng),
             SamplerDispatch::Sharded(s) => s.sample_many(q, count, rng),
+            SamplerDispatch::Remote(s) => {
+                s.sample_many(q, count).map(|(v, _)| v).unwrap_or_default()
+            }
         }
     }
 
@@ -79,6 +98,38 @@ impl SamplerDispatch {
         match self {
             SamplerDispatch::Mono(s) => s.sample_batch(qs, counts, rng),
             SamplerDispatch::Sharded(s) => s.sample_batch(qs, counts),
+            SamplerDispatch::Remote(s) => s
+                .sample_batch(qs, counts)
+                .map(|(v, _)| v)
+                .unwrap_or_else(|_| vec![Vec::new(); qs.len()]),
+        }
+    }
+
+    /// [`sample_many`](Self::sample_many) with remote fan-out health:
+    /// `Some((ok, total))` from the remote variant (`Err` only when *no*
+    /// shard answered), `None` from the in-process variants.
+    pub fn sample_many_status(
+        &self,
+        q: &[f32],
+        count: usize,
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<SampleOutcome>, Option<(usize, usize)>)> {
+        match self {
+            SamplerDispatch::Remote(s) => s.sample_many(q, count).map(|(v, st)| (v, Some(st))),
+            other => Ok((other.sample_many(q, count, rng), None)),
+        }
+    }
+
+    /// [`sample_batch`](Self::sample_batch) with remote fan-out health.
+    pub fn sample_batch_status(
+        &self,
+        qs: &[&[f32]],
+        counts: &[usize],
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<Vec<SampleOutcome>>, Option<(usize, usize)>)> {
+        match self {
+            SamplerDispatch::Remote(s) => s.sample_batch(qs, counts).map(|(v, st)| (v, Some(st))),
+            other => Ok((other.sample_batch(qs, counts, rng), None)),
         }
     }
 }
@@ -87,6 +138,18 @@ impl SamplerDispatch {
 pub enum PartitionDispatch {
     Mono(PartitionEstimator),
     Sharded(ShardedPartitionEstimator),
+    Remote(RemotePartition),
+}
+
+/// Degenerate estimate used when every remote shard is unreachable and
+/// the caller has no error channel (the status methods return `Err`
+/// instead).
+fn failed_partition() -> PartitionEstimate {
+    PartitionEstimate { log_z: f64::NEG_INFINITY, work: EstimateWork::default() }
+}
+
+fn failed_expectation() -> FeatureExpectation {
+    FeatureExpectation { mean: Vec::new(), log_z: f64::NEG_INFINITY, work: EstimateWork::default() }
 }
 
 impl PartitionDispatch {
@@ -95,6 +158,7 @@ impl PartitionDispatch {
         match self {
             PartitionDispatch::Mono(_) => "alg3",
             PartitionDispatch::Sharded(_) => "sharded-alg3",
+            PartitionDispatch::Remote(e) => e.name(),
         }
     }
 
@@ -103,6 +167,9 @@ impl PartitionDispatch {
         match self {
             PartitionDispatch::Mono(e) => e.estimate(q, rng),
             PartitionDispatch::Sharded(e) => e.estimate(q),
+            PartitionDispatch::Remote(e) => {
+                e.estimate(q).map(|(v, _)| v).unwrap_or_else(|_| failed_partition())
+            }
         }
     }
 
@@ -111,6 +178,35 @@ impl PartitionDispatch {
         match self {
             PartitionDispatch::Mono(e) => e.estimate_batch(qs, rng),
             PartitionDispatch::Sharded(e) => e.estimate_batch(qs),
+            PartitionDispatch::Remote(e) => e
+                .estimate_batch(qs)
+                .map(|(v, _)| v)
+                .unwrap_or_else(|_| vec![failed_partition(); qs.len()]),
+        }
+    }
+
+    /// [`estimate`](Self::estimate) with remote fan-out health.
+    pub fn estimate_status(
+        &self,
+        q: &[f32],
+        rng: &mut Pcg64,
+    ) -> Result<(PartitionEstimate, Option<(usize, usize)>)> {
+        match self {
+            PartitionDispatch::Remote(e) => e.estimate(q).map(|(v, st)| (v, Some(st))),
+            other => Ok((other.estimate(q, rng), None)),
+        }
+    }
+
+    /// [`estimate_batch`](Self::estimate_batch) with remote fan-out
+    /// health.
+    pub fn estimate_batch_status(
+        &self,
+        qs: &[&[f32]],
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<PartitionEstimate>, Option<(usize, usize)>)> {
+        match self {
+            PartitionDispatch::Remote(e) => e.estimate_batch(qs).map(|(v, st)| (v, Some(st))),
+            other => Ok((other.estimate_batch(qs, rng), None)),
         }
     }
 }
@@ -119,6 +215,7 @@ impl PartitionDispatch {
 pub enum ExpectationDispatch {
     Mono(ExpectationEstimator),
     Sharded(ShardedExpectationEstimator),
+    Remote(RemoteExpectation),
 }
 
 impl ExpectationDispatch {
@@ -127,6 +224,7 @@ impl ExpectationDispatch {
         match self {
             ExpectationDispatch::Mono(_) => "alg4",
             ExpectationDispatch::Sharded(_) => "sharded-alg4",
+            ExpectationDispatch::Remote(e) => e.name(),
         }
     }
 
@@ -135,6 +233,9 @@ impl ExpectationDispatch {
         match self {
             ExpectationDispatch::Mono(e) => e.expect_features(q, rng),
             ExpectationDispatch::Sharded(e) => e.expect_features(q),
+            ExpectationDispatch::Remote(e) => {
+                e.expect_features(q).map(|(v, _)| v).unwrap_or_else(|_| failed_expectation())
+            }
         }
     }
 
@@ -147,6 +248,38 @@ impl ExpectationDispatch {
         match self {
             ExpectationDispatch::Mono(e) => e.expect_features_batch(qs, rng),
             ExpectationDispatch::Sharded(e) => e.expect_features_batch(qs),
+            ExpectationDispatch::Remote(e) => e
+                .expect_features_batch(qs)
+                .map(|(v, _)| v)
+                .unwrap_or_else(|_| vec![failed_expectation(); qs.len()]),
+        }
+    }
+
+    /// [`expect_features`](Self::expect_features) with remote fan-out
+    /// health.
+    pub fn expect_features_status(
+        &self,
+        q: &[f32],
+        rng: &mut Pcg64,
+    ) -> Result<(FeatureExpectation, Option<(usize, usize)>)> {
+        match self {
+            ExpectationDispatch::Remote(e) => e.expect_features(q).map(|(v, st)| (v, Some(st))),
+            other => Ok((other.expect_features(q, rng), None)),
+        }
+    }
+
+    /// [`expect_features_batch`](Self::expect_features_batch) with remote
+    /// fan-out health.
+    pub fn expect_features_batch_status(
+        &self,
+        qs: &[&[f32]],
+        rng: &mut Pcg64,
+    ) -> Result<(Vec<FeatureExpectation>, Option<(usize, usize)>)> {
+        match self {
+            ExpectationDispatch::Remote(e) => {
+                e.expect_features_batch(qs).map(|(v, st)| (v, Some(st)))
+            }
+            other => Ok((other.expect_features_batch(qs, rng), None)),
         }
     }
 }

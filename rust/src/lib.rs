@@ -51,6 +51,14 @@
 //! by weighted log-sum-exp). The [`dispatch`] enums route the engine and
 //! the learner onto whichever implementation matches the built index, so
 //! `index.shards > 1` serves every operation through the sharded stack.
+//! The [`remote`] layer distributes that same fan-out across processes:
+//! shard servers answer per-shard fragments over the JSON-lines wire
+//! protocol and a coordinator-side [`remote::RemoteStack`] merges them
+//! with the identical merge code — bit-parity with the in-process
+//! sharded stack — under per-request deadlines, bounded retries with
+//! backoff, background health probing, and graceful degradation when
+//! shards die (responses renormalize over survivors and carry a
+//! `degraded` flag).
 //!
 //! ## Quickstart
 //!
@@ -88,6 +96,7 @@ pub mod gumbel;
 pub mod learner;
 pub mod linalg;
 pub mod mips;
+pub mod remote;
 pub mod runtime;
 pub mod sampler;
 pub mod scorer;

@@ -6,7 +6,9 @@
 //!   partition    estimate log Z for random θ (Algorithm 3) vs exact
 //!   learn        run the §4.4 MLE experiment (exact / top-k / ours)
 //!   walk         run the §4.2.2 random-walk comparison
-//!   serve        start the TCP inference server
+//!   serve        start the TCP inference server (--remote: fan out to
+//!                shard servers listed in remote.addrs)
+//!   shard-serve  start one shard server (--shard-id S) for the remote tier
 //!   eval <exp>   regenerate a paper table/figure
 //!                (fig2|table1|fig4|table2|fig7|fig8|walk|all)
 //!   selfcheck    load artifacts, compare PJRT vs native numerics
@@ -30,7 +32,7 @@ use std::sync::Arc;
 
 const VALUE_KEYS: &[&str] = &[
     "preset", "config", "set", "n", "d", "seed", "backend", "index", "out", "count", "k", "l",
-    "queries", "steps", "addr", "workers", "iters", "artifacts",
+    "queries", "steps", "addr", "workers", "iters", "artifacts", "shard-id",
 ];
 
 fn main() {
@@ -61,7 +63,8 @@ fn print_help() {
          \u{20}  partition [--queries Q]\n\
          \u{20}  learn [--iters I]\n\
          \u{20}  walk [--n N] [--queries Q]\n\
-         \u{20}  serve [--addr HOST:PORT] [--workers W]\n\
+         \u{20}  serve [--addr HOST:PORT] [--workers W] [--remote]\n\
+         \u{20}  shard-serve --shard-id S [--addr HOST:PORT]\n\
          \u{20}  eval fig2|table1|fig4|table2|fig7|fig8|walk|all [--n N] [--queries Q]\n\
          \u{20}  selfcheck [--artifacts DIR]\n\n\
          common options: --preset P --config FILE --set sec.key=v,... --n N --d D --seed S\n\
@@ -95,6 +98,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "learn" => cmd_learn(args),
         "walk" => cmd_walk(args),
         "serve" => cmd_serve(args),
+        "shard-serve" => cmd_shard_serve(args),
         "eval" => cmd_eval(args),
         "selfcheck" => cmd_selfcheck(args),
         other => Err(Error::Cli(format!("unknown subcommand '{other}' (try --help)"))),
@@ -206,7 +210,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = Config::from_args(args)?;
     let addr = args.get_str("addr", &cfg.serve.addr);
     let workers = args.get_usize("workers", cfg.serve.workers)?;
-    let engine = build_engine(args)?;
+    let engine = if args.has_flag("remote") {
+        let backend = make_backend(&cfg)?;
+        eprintln!("connecting to shard servers at {} ...", cfg.remote.addrs);
+        let engine = Engine::from_remote(&cfg, Some(backend))?;
+        eprintln!("{}", engine.index.describe());
+        Arc::new(engine)
+    } else {
+        build_engine(args)?
+    };
     let coord = Arc::new(Coordinator::start_with_wait(
         engine,
         workers,
@@ -214,8 +226,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.data.seed,
         cfg.serve.micro_wait_us,
     ));
-    let server = Server::bind(coord, &addr)?;
+    let server = Server::bind_with(coord, &addr, &cfg.serve)?;
     println!("gmips serving on {}", server.local_addr()?);
+    server.serve()
+}
+
+fn cmd_shard_serve(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let shard = args.get_usize("shard-id", 0)?;
+    let addr = args.get_str("addr", &cfg.serve.addr);
+    let backend = make_backend(&cfg)?;
+    eprintln!("building shard engine {shard}/{} ...", cfg.index.shards);
+    let engine = Arc::new(gmips::remote::ShardEngine::from_config(&cfg, shard, Some(backend))?);
+    eprintln!("{}", engine.describe());
+    let handler = Arc::new(gmips::remote::ShardHandler::new(engine));
+    let server = Server::bind_handler(handler, &addr, &cfg.serve)?;
+    println!("gmips shard {shard} serving on {}", server.local_addr()?);
     server.serve()
 }
 

@@ -1,0 +1,183 @@
+//! Fault-tolerant client for one shard server.
+//!
+//! [`ShardClient`] wraps the JSON-lines [`crate::server::Client`] with
+//! the robustness contract of the remote tier:
+//!
+//! * every call runs under a **deadline** covering all attempts
+//!   (connect + write + read timeouts are all capped by the time left);
+//! * transport failures (connect refusal, IO error, EOF, corrupt frame)
+//!   are retried up to `remote.retries` times with **exponential backoff
+//!   plus deterministic jitter**, reconnecting from scratch each time;
+//! * protocol-level errors (`{"ok":false}` from a healthy server) are
+//!   returned immediately — the server answered, retrying is pointless.
+//!
+//! The connection is cached between calls and dropped on any failure, so
+//! a restarted shard server is picked up by the next attempt without any
+//! explicit reconnect step.
+
+use super::protocol::{ShardRequest, ShardResponse};
+use crate::config::RemoteConfig;
+use crate::error::{Error, Result};
+use crate::server::Client;
+use crate::util::json::Json;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Longest backoff doubling (2^6 · backoff_ms); keeps the exponential
+/// from overflowing or dwarfing any sane deadline.
+const MAX_BACKOFF_SHIFT: u32 = 6;
+
+/// Deadline/retry-aware connection to one shard server.
+pub struct ShardClient {
+    addr: String,
+    shard: usize,
+    deadline: Duration,
+    connect_timeout: Duration,
+    retries: u32,
+    backoff_ms: u64,
+    conn: Mutex<Option<Client>>,
+}
+
+impl ShardClient {
+    pub fn new(addr: &str, shard: usize, cfg: &RemoteConfig) -> ShardClient {
+        ShardClient {
+            addr: addr.to_string(),
+            shard,
+            deadline: Duration::from_millis(cfg.deadline_ms.max(1)),
+            connect_timeout: Duration::from_millis(cfg.connect_timeout_ms.max(1)),
+            retries: cfg.retries,
+            backoff_ms: cfg.backoff_ms,
+            conn: Mutex::new(None),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// One call under the configured per-request deadline.
+    pub fn call(&self, req: &ShardRequest) -> Result<ShardResponse> {
+        self.call_with_deadline(req, Instant::now() + self.deadline)
+    }
+
+    /// One call that must finish (including all retries and backoff
+    /// sleeps) before `deadline`.
+    pub fn call_with_deadline(
+        &self,
+        req: &ShardRequest,
+        deadline: Instant,
+    ) -> Result<ShardResponse> {
+        let line = req.to_json().to_string();
+        let mut last: Option<Error> = None;
+        for attempt in 0..=self.retries {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.attempt(&line, deadline - now) {
+                Ok(ShardResponse::Error { message }) => {
+                    // the server is up and answered: a protocol error is
+                    // not transient, so fail fast without retries
+                    return Err(Error::serve(format!("shard {}: {message}", self.shard)));
+                }
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    // drop the cached connection; the next attempt
+                    // reconnects (a restarted server rejoins here)
+                    *self.conn.lock().unwrap() = None;
+                    last = Some(e);
+                }
+            }
+            if attempt < self.retries {
+                let sleep = self.backoff(attempt);
+                if Instant::now() + sleep >= deadline {
+                    break; // backoff would blow the deadline: give up now
+                }
+                std::thread::sleep(sleep);
+            }
+        }
+        Err(Error::serve(format!(
+            "shard {} at {} unreachable: {}",
+            self.shard,
+            self.addr,
+            last.map(|e| e.to_string()).unwrap_or_else(|| "deadline expired".into())
+        )))
+    }
+
+    /// Background-probe the shard (same path as a request, so a ping
+    /// exercising connect + call + parse is an honest health signal).
+    pub fn ping(&self) -> Result<ShardResponse> {
+        self.call(&ShardRequest::Ping)
+    }
+
+    fn attempt(&self, line: &str, remaining: Duration) -> Result<ShardResponse> {
+        let floor = Duration::from_millis(1);
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            let t = self.connect_timeout.min(remaining).max(floor);
+            *guard = Some(Client::connect_timeout(&self.addr, t)?);
+        }
+        let client = guard.as_mut().expect("connection was just established");
+        client.set_io_timeout(Some(remaining.max(floor)))?;
+        let reply = client.call_line(line)?;
+        ShardResponse::from_json(&Json::parse(&reply)?)
+    }
+
+    /// Deterministic backoff: `backoff_ms · 2^attempt` plus a
+    /// `(shard, attempt)`-keyed jitter so concurrent shard retries don't
+    /// run in lockstep, without any global RNG state.
+    fn backoff(&self, attempt: u32) -> Duration {
+        let base = self.backoff_ms << attempt.min(MAX_BACKOFF_SHIFT);
+        let jitter = if self.backoff_ms == 0 {
+            0
+        } else {
+            (self.shard as u64 * 7 + attempt as u64 * 13) % self.backoff_ms
+        };
+        Duration::from_millis(base + jitter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn client(shard: usize, backoff_ms: u64, retries: u32) -> ShardClient {
+        let mut cfg = crate::config::Config::default().remote;
+        cfg.backoff_ms = backoff_ms;
+        cfg.retries = retries;
+        ShardClient::new("127.0.0.1:1", shard, &cfg)
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_grows() {
+        let c = client(2, 20, 3);
+        let b: Vec<u64> = (0..3).map(|a| c.backoff(a).as_millis() as u64).collect();
+        assert_eq!(b, (0..3).map(|a| c.backoff(a).as_millis() as u64).collect::<Vec<_>>());
+        assert!(b[0] >= 20 && b[1] >= 40 && b[2] >= 80, "{b:?}");
+        for (a, &ms) in b.iter().enumerate() {
+            assert!(ms < (20u64 << a) + 20, "jitter must stay under one base unit: {b:?}");
+        }
+        // zero base backoff must not divide by zero
+        assert_eq!(client(0, 0, 1).backoff(0), Duration::from_millis(0));
+    }
+
+    #[test]
+    fn unreachable_shard_fails_within_deadline_budget() {
+        // nothing listens on the address: the call must return an error
+        // (not hang) and respect the retry budget
+        let mut cfg = crate::config::Config::default().remote;
+        cfg.deadline_ms = 300;
+        cfg.connect_timeout_ms = 30;
+        cfg.retries = 1;
+        cfg.backoff_ms = 5;
+        let c = ShardClient::new("127.0.0.1:1", 0, &cfg);
+        let t0 = Instant::now();
+        let err = c.call(&ShardRequest::Ping).unwrap_err();
+        assert!(err.to_string().contains("unreachable"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "bounded by deadline + retries");
+    }
+}

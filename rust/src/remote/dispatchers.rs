@@ -1,0 +1,213 @@
+//! Remote counterparts of the sharded sampler/estimator stack.
+//!
+//! Each dispatcher drives a [`RemoteStack`] fan-out and then runs the
+//! *same* coordinator-side math as the in-process sharded stack:
+//!
+//! * [`RemoteSampler`] — Algorithm 1: remote top-k fragments → merged
+//!   session → per-shard perturbed argmax and lazy tail draws from the
+//!   id-keyed frozen streams ([`crate::shard::sampler`]), with tail
+//!   candidates scored by their owning shard server over the wire;
+//! * [`RemotePartition`] — Algorithm 3: remote per-shard partials merged
+//!   by log-sum-exp;
+//! * [`RemoteExpectation`] — Algorithm 4: remote per-shard fragments
+//!   merged by weighted log-sum-exp.
+//!
+//! With every shard up the results are **bit-identical** to the
+//! in-process sharded stack (same frozen streams, same merges, same
+//! round counters). Under faults each op returns the `(ok, total)` shard
+//! status so the engine can mark the response degraded; only a total
+//! fan-out failure is an `Err`. A tail candidate whose owning shard is
+//! down simply drops out of the fold — the draw renormalizes over the
+//! rows that remain reachable rather than failing.
+
+use super::stack::RemoteStack;
+use crate::error::Result;
+use crate::estimator::expectation::FeatureExpectation;
+use crate::estimator::partition::PartitionEstimate;
+use crate::sampler::{SampleOutcome, SampleWork};
+use crate::shard::sampler::{
+    build_session, fold_tail, lazy_tail_draws, perturbed_argmax, ShardedSession,
+};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Keep the worse of two `(ok, total)` shard statuses.
+fn worse(a: (usize, usize), b: (usize, usize)) -> (usize, usize) {
+    if b.0 < a.0 {
+        b
+    } else {
+        a
+    }
+}
+
+/// Algorithm 1 over remote shards.
+pub struct RemoteSampler {
+    stack: Arc<RemoteStack>,
+    /// top-set size (paper: k = Θ(√n))
+    pub k: usize,
+    /// threshold slack c ≥ sup(gap) for the lazy tail bound
+    pub gap_c: f64,
+    seed: u64,
+    round: AtomicU64,
+}
+
+impl RemoteSampler {
+    pub fn new(stack: Arc<RemoteStack>, k: usize, gap_c: f64, seed: u64) -> RemoteSampler {
+        let k = k.clamp(1, stack.n().max(1));
+        RemoteSampler { stack, k, gap_c, seed, round: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        "remote-gumbel"
+    }
+
+    /// Draw `count` samples for one θ (one remote retrieval fan-out).
+    pub fn sample_many(
+        &self,
+        q: &[f32],
+        count: usize,
+    ) -> Result<(Vec<SampleOutcome>, (usize, usize))> {
+        let (mut tops, st) = self.stack.top_k_status(&[q], self.k)?;
+        let top = tops.pop().expect("one top-k result per query");
+        let sess = build_session(self.stack.map(), self.stack.n(), top);
+        let r0 = self.round.fetch_add(count as u64, Ordering::Relaxed);
+        let mut status = st;
+        let mut outs = Vec::with_capacity(count);
+        for i in 0..count {
+            let (o, s2) = self.sample_at(&sess, q, r0 + i as u64);
+            status = worse(status, s2);
+            outs.push(o);
+        }
+        Ok((outs, status))
+    }
+
+    /// Batched draws: `counts[i]` samples for `qs[i]`, one fan-out for
+    /// the whole batch (same round bookkeeping as the in-process sharded
+    /// sampler, so the two are replay-identical).
+    pub fn sample_batch(
+        &self,
+        qs: &[&[f32]],
+        counts: &[usize],
+    ) -> Result<(Vec<Vec<SampleOutcome>>, (usize, usize))> {
+        let (tops, st) = self.stack.top_k_status(qs, self.k)?;
+        let mut status = st;
+        let mut all = Vec::with_capacity(qs.len());
+        for ((&q, &count), top) in qs.iter().zip(counts).zip(tops) {
+            let sess = build_session(self.stack.map(), self.stack.n(), top);
+            // same clamp as the in-process batch path: an empty request
+            // still consumes (and draws) one round
+            let count = count.max(1);
+            let r0 = self.round.fetch_add(count as u64, Ordering::Relaxed);
+            let mut outs = Vec::with_capacity(count);
+            for i in 0..count {
+                let (o, s2) = self.sample_at(&sess, q, r0 + i as u64);
+                status = worse(status, s2);
+                outs.push(o);
+            }
+            all.push(outs);
+        }
+        Ok((all, status))
+    }
+
+    /// One draw at an explicit round: per-shard perturbed argmax over the
+    /// merged head, then lazy tail draws scored remotely by their owning
+    /// shards. Tail candidates whose shard is down drop out of the fold.
+    fn sample_at(
+        &self,
+        sess: &ShardedSession,
+        q: &[f32],
+        round: u64,
+    ) -> (SampleOutcome, (usize, usize)) {
+        let ns = self.stack.shards();
+        let (best_id, best) = perturbed_argmax(sess, self.seed, round);
+        let b = best - sess.top.s_min() - self.gap_c;
+        let (tail_ids, tail_gumbels) = lazy_tail_draws(sess, self.stack.n(), self.seed, round, b);
+        let m = tail_ids.len();
+        let mut pick = (best_id, best);
+        let mut status = (ns, ns);
+        if m > 0 {
+            let (scores, st) = self.stack.score_ids_status(q, &tail_ids);
+            status = st;
+            let mut ids = Vec::with_capacity(m);
+            let mut gumbels = Vec::with_capacity(m);
+            let mut vals = Vec::with_capacity(m);
+            for ((&tid, &g), sc) in tail_ids.iter().zip(&tail_gumbels).zip(scores) {
+                if let Some(y) = sc {
+                    ids.push(tid);
+                    gumbels.push(g);
+                    vals.push(y);
+                }
+            }
+            pick = fold_tail(pick.0, pick.1, &ids, &gumbels, &vals);
+        }
+        let work = SampleWork { scanned: sess.top.scanned, k: sess.top.items.len(), m };
+        (SampleOutcome { id: pick.0, work }, status)
+    }
+}
+
+/// Algorithm 3 over remote shards.
+pub struct RemotePartition {
+    stack: Arc<RemoteStack>,
+    round: AtomicU64,
+}
+
+impl RemotePartition {
+    pub fn new(stack: Arc<RemoteStack>) -> RemotePartition {
+        RemotePartition { stack, round: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        "remote-alg3"
+    }
+
+    /// One `log Ẑ` estimate (advances the replayable round counter by
+    /// one, exactly like the in-process sharded estimator).
+    pub fn estimate(&self, q: &[f32]) -> Result<(PartitionEstimate, (usize, usize))> {
+        let r = self.round.fetch_add(1, Ordering::Relaxed);
+        let (mut v, st) = self.stack.alg3_status(&[q], r)?;
+        Ok((v.pop().expect("one estimate per query"), st))
+    }
+
+    /// Batched estimates sharing one fan-out; query `i` runs at round
+    /// `r0 + i`.
+    pub fn estimate_batch(
+        &self,
+        qs: &[&[f32]],
+    ) -> Result<(Vec<PartitionEstimate>, (usize, usize))> {
+        let r0 = self.round.fetch_add(qs.len() as u64, Ordering::Relaxed);
+        self.stack.alg3_status(qs, r0)
+    }
+}
+
+/// Algorithm 4 over remote shards.
+pub struct RemoteExpectation {
+    stack: Arc<RemoteStack>,
+    round: AtomicU64,
+}
+
+impl RemoteExpectation {
+    pub fn new(stack: Arc<RemoteStack>) -> RemoteExpectation {
+        RemoteExpectation { stack, round: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        "remote-alg4"
+    }
+
+    /// One `E_θ[φ]` estimate.
+    pub fn expect_features(&self, q: &[f32]) -> Result<(FeatureExpectation, (usize, usize))> {
+        let r = self.round.fetch_add(1, Ordering::Relaxed);
+        let (mut v, st) = self.stack.alg4_status(&[q], r)?;
+        Ok((v.pop().expect("one expectation per query"), st))
+    }
+
+    /// Batched estimates sharing one fan-out; query `i` runs at round
+    /// `r0 + i`.
+    pub fn expect_features_batch(
+        &self,
+        qs: &[&[f32]],
+    ) -> Result<(Vec<FeatureExpectation>, (usize, usize))> {
+        let r0 = self.round.fetch_add(qs.len() as u64, Ordering::Relaxed);
+        self.stack.alg4_status(qs, r0)
+    }
+}

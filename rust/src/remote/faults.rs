@@ -1,0 +1,143 @@
+//! Deterministic fault injection for the networked serving path.
+//!
+//! A [`FaultPlan`] is a set of atomic knobs the server front-end
+//! consults at well-defined points; tests (and the `GMIPS_FAULTS` env
+//! var) flip them at runtime to drive the failure drills without any
+//! nondeterministic machinery:
+//!
+//! * `delay_ms` — hold every response for a fixed delay (deadline /
+//!   backoff exercises);
+//! * `drop_conns` — a budget of connections to sever instead of
+//!   answering (retry/reconnect exercises; each drop decrements the
+//!   budget, so a test injects exactly N failures);
+//! * `corrupt_frames` — a budget of responses replaced by a garbage
+//!   line (frame-level corruption; the client treats it like an IO
+//!   fault and retries on a fresh connection);
+//! * `down` — the kill switch: the acceptor refuses new connections and
+//!   every open connection closes mid-stream. Clearing it "restarts"
+//!   the shard in place, which is how the degraded-then-recovered drill
+//!   runs without process juggling.
+//!
+//! All knobs are plain atomics: flipping them is race-free, and a plan
+//! shared with a live [`crate::server::Server`] takes effect on the
+//! next request.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Runtime-adjustable fault switches for one server.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    delay_ms: AtomicU64,
+    drop_conns: AtomicU64,
+    corrupt_frames: AtomicU64,
+    down: AtomicBool,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `GMIPS_FAULTS` (`"delay_ms=5,drop_conns=3,corrupt_frames=2,
+    /// down=1"`); unknown or malformed entries are ignored so a stray
+    /// env var can't take a server down by accident.
+    pub fn from_env() -> Self {
+        let plan = Self::new();
+        if let Ok(spec) = std::env::var("GMIPS_FAULTS") {
+            for part in spec.split(',') {
+                let Some((key, val)) = part.split_once('=') else { continue };
+                let Ok(x) = val.trim().parse::<u64>() else { continue };
+                match key.trim() {
+                    "delay_ms" => plan.set_delay_ms(x),
+                    "drop_conns" => plan.set_drop_conns(x),
+                    "corrupt_frames" => plan.set_corrupt_frames(x),
+                    "down" => plan.set_down(x != 0),
+                    _ => {}
+                }
+            }
+        }
+        plan
+    }
+
+    /// True when any knob is active (lets the server skip the fault
+    /// checks entirely in the common case).
+    pub fn armed(&self) -> bool {
+        self.delay_ms.load(Ordering::Relaxed) > 0
+            || self.drop_conns.load(Ordering::Relaxed) > 0
+            || self.corrupt_frames.load(Ordering::Relaxed) > 0
+            || self.down.load(Ordering::Relaxed)
+    }
+
+    pub fn set_delay_ms(&self, ms: u64) {
+        self.delay_ms.store(ms, Ordering::Relaxed);
+    }
+
+    pub fn delay_ms(&self) -> u64 {
+        self.delay_ms.load(Ordering::Relaxed)
+    }
+
+    /// Arm a budget of `n` dropped connections.
+    pub fn set_drop_conns(&self, n: u64) {
+        self.drop_conns.store(n, Ordering::Relaxed);
+    }
+
+    /// Consume one unit of the drop budget; true → sever this connection.
+    pub fn take_drop(&self) -> bool {
+        take_budget(&self.drop_conns)
+    }
+
+    /// Arm a budget of `n` corrupted response frames.
+    pub fn set_corrupt_frames(&self, n: u64) {
+        self.corrupt_frames.store(n, Ordering::Relaxed);
+    }
+
+    /// Consume one unit of the corruption budget; true → garble this reply.
+    pub fn take_corrupt(&self) -> bool {
+        take_budget(&self.corrupt_frames)
+    }
+
+    /// Kill (true) or restart (false) the served shard in place.
+    pub fn set_down(&self, down: bool) {
+        self.down.store(down, Ordering::Relaxed);
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::Relaxed)
+    }
+}
+
+/// Decrement-if-positive on an atomic budget counter.
+fn take_budget(counter: &AtomicU64) -> bool {
+    counter
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |x| x.checked_sub(1))
+        .is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_deplete_exactly() {
+        let plan = FaultPlan::new();
+        assert!(!plan.armed());
+        plan.set_drop_conns(2);
+        assert!(plan.armed());
+        assert!(plan.take_drop());
+        assert!(plan.take_drop());
+        assert!(!plan.take_drop(), "budget of 2 must allow exactly 2 drops");
+        plan.set_corrupt_frames(1);
+        assert!(plan.take_corrupt());
+        assert!(!plan.take_corrupt());
+    }
+
+    #[test]
+    fn down_toggles() {
+        let plan = FaultPlan::new();
+        assert!(!plan.is_down());
+        plan.set_down(true);
+        assert!(plan.is_down() && plan.armed());
+        plan.set_down(false);
+        assert!(!plan.is_down());
+    }
+}

@@ -1,0 +1,133 @@
+//! Per-shard health tracking for the remote fan-out.
+//!
+//! Health is derived from *observed outcomes* — request results and the
+//! background heartbeat both feed the same board — with a
+//! consecutive-failure threshold before a shard is declared down:
+//!
+//! * `Up` — last probe succeeded;
+//! * `Degraded` — at least one recent failure, but fewer than
+//!   `down_after` in a row (requests still try it, paying the retry
+//!   budget);
+//! * `Down` — `down_after`+ consecutive failures. The fan-out skips the
+//!   shard without burning deadline; only the heartbeat keeps probing,
+//!   so one successful ping flips it straight back to `Up` (the
+//!   rejoin path of the degraded-then-recovered drill).
+//!
+//! Everything is atomics — the request path reads one `u8` per shard.
+
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+
+/// One shard's serving state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardHealth {
+    Up,
+    Degraded,
+    Down,
+}
+
+impl ShardHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardHealth::Up => "up",
+            ShardHealth::Degraded => "degraded",
+            ShardHealth::Down => "down",
+        }
+    }
+}
+
+const UP: u8 = 0;
+const DEGRADED: u8 = 1;
+const DOWN: u8 = 2;
+
+/// Lock-free health states for all shards of one remote stack.
+#[derive(Debug)]
+pub struct HealthBoard {
+    states: Vec<AtomicU8>,
+    /// consecutive failures per shard (reset on success)
+    fails: Vec<AtomicU32>,
+    down_after: u32,
+}
+
+impl HealthBoard {
+    /// All shards start `Up`; `down_after` consecutive failures demote a
+    /// shard to `Down` (clamped to ≥ 1 so a single success/failure is
+    /// always decisive when configured that way).
+    pub fn new(shards: usize, down_after: u32) -> Self {
+        HealthBoard {
+            states: (0..shards).map(|_| AtomicU8::new(UP)).collect(),
+            fails: (0..shards).map(|_| AtomicU32::new(0)).collect(),
+            down_after: down_after.max(1),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn state(&self, s: usize) -> ShardHealth {
+        match self.states[s].load(Ordering::Relaxed) {
+            UP => ShardHealth::Up,
+            DEGRADED => ShardHealth::Degraded,
+            _ => ShardHealth::Down,
+        }
+    }
+
+    pub fn is_down(&self, s: usize) -> bool {
+        self.states[s].load(Ordering::Relaxed) == DOWN
+    }
+
+    /// A successful probe/request: straight back to `Up`.
+    pub fn record_success(&self, s: usize) {
+        self.fails[s].store(0, Ordering::Relaxed);
+        self.states[s].store(UP, Ordering::Relaxed);
+    }
+
+    /// A failed probe/request (after the caller's retry budget):
+    /// `Degraded` until `down_after` consecutive failures, then `Down`.
+    pub fn record_failure(&self, s: usize) {
+        let f = self.fails[s].fetch_add(1, Ordering::Relaxed).saturating_add(1);
+        let state = if f >= self.down_after { DOWN } else { DEGRADED };
+        self.states[s].store(state, Ordering::Relaxed);
+    }
+
+    /// Number of shards not currently `Down`.
+    pub fn live(&self) -> usize {
+        (0..self.shards()).filter(|&s| !self.is_down(s)).count()
+    }
+
+    /// `"up up down"`-style summary for stats output.
+    pub fn summary(&self) -> String {
+        (0..self.shards())
+            .map(|s| self.state(s).name())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demotion_and_recovery() {
+        let hb = HealthBoard::new(2, 2);
+        assert_eq!(hb.state(0), ShardHealth::Up);
+        hb.record_failure(0);
+        assert_eq!(hb.state(0), ShardHealth::Degraded);
+        assert!(!hb.is_down(0));
+        hb.record_failure(0);
+        assert_eq!(hb.state(0), ShardHealth::Down);
+        assert_eq!(hb.live(), 1);
+        hb.record_success(0);
+        assert_eq!(hb.state(0), ShardHealth::Up);
+        assert_eq!(hb.live(), 2);
+        assert_eq!(hb.summary(), "up up");
+    }
+
+    #[test]
+    fn down_after_clamps_to_one() {
+        let hb = HealthBoard::new(1, 0);
+        hb.record_failure(0);
+        assert_eq!(hb.state(0), ShardHealth::Down);
+    }
+}

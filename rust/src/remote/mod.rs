@@ -1,0 +1,59 @@
+//! Networked shard serving — the fault-tolerant distributed tier above
+//! [`crate::shard`].
+//!
+//! PRs 3–4 made every operation **decomposable over a row partition**:
+//! per-shard top-k fragments merge by k-way `(score, id)` merge, the
+//! Algorithm-3/4 partials `(log Ẑ_s, ·)` merge by (weighted)
+//! log-sum-exp, and the keyed Gumbel maxima merge by argmax — all keyed
+//! by the monotone global-id bijection ([`crate::shard::ShardMap`]).
+//! This module puts a network between the fan-out and the merge, so
+//! capacity grows with machines instead of cores:
+//!
+//! * **shard servers** ([`shard::ShardEngine`] behind the JSON-lines
+//!   [`crate::server::Server`]) answer per-shard top-k fragments,
+//!   Algorithm-3/4 partials, and tail-row scoring for *their* shard of
+//!   the partition (the [`protocol`] ops);
+//! * a coordinator-side **fan-out stack** ([`stack::RemoteStack`]) calls
+//!   every shard in parallel and merges with the *same* `shard::` merge
+//!   code the in-process path uses — with no faults injected, the remote
+//!   answers are **bit-identical** to the in-process
+//!   [`crate::shard::ShardedIndex`] stack at the same seeds (enforced by
+//!   the cross-process conformance suite `tests/remote_serving.rs`);
+//! * the [`dispatchers`] wrap the stack in the same round-counter
+//!   discipline the sharded sampler/estimators use, so the engine's
+//!   `Remote` dispatch variants replay the exact frozen-stream rounds.
+//!
+//! ## Fault tolerance by construction
+//!
+//! Every remote call carries a **deadline** (the per-request budget,
+//! propagated to connect/read/write timeouts), retries transient
+//! connect/IO failures with **bounded exponential backoff plus
+//! deterministic jitter**, and reconnects automatically
+//! ([`client::ShardClient`]). A background **heartbeat** maintains
+//! per-shard health (up/degraded/down — [`health::HealthBoard`]); shards
+//! down past the retry budget are skipped without burning the deadline,
+//! and the merge **renormalizes over the surviving shards**: the
+//! response is the exact same estimator applied to the surviving
+//! sub-population, flagged `degraded: true` / `shards_ok: s/N` instead
+//! of failing the request. Saturation sheds instead of collapsing (the
+//! server front-end's deadline-aware `try_submit` path returns an
+//! explicit `overloaded` error), and a deterministic fault-injection
+//! harness ([`faults::FaultPlan`]) drives the test suite: dropped
+//! connections, delayed responses, corrupted frames, and shards killed
+//! mid-stream.
+
+pub mod client;
+pub mod dispatchers;
+pub mod faults;
+pub mod health;
+pub mod protocol;
+pub mod shard;
+pub mod stack;
+
+pub use client::ShardClient;
+pub use dispatchers::{RemoteExpectation, RemotePartition, RemoteSampler};
+pub use faults::FaultPlan;
+pub use health::{HealthBoard, ShardHealth};
+pub use protocol::{ShardRequest, ShardResponse};
+pub use shard::{ShardEngine, ShardHandler};
+pub use stack::{RemoteIndex, RemoteStack};

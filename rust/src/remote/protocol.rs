@@ -1,0 +1,449 @@
+//! The coordinator ↔ shard-server wire protocol.
+//!
+//! Same transport as the public API (`server/`): one JSON object per
+//! line over TCP. The ops are the *per-shard* units of the sharded
+//! decomposition — exactly the closures the in-process
+//! [`crate::shard::ShardedIndex::fan_out`] runs, so a remote shard's
+//! answer is bit-identical to its in-process counterpart:
+//!
+//! | op           | answers                                              |
+//! |--------------|------------------------------------------------------|
+//! | `ping`       | handshake: shard id, shard count, `n`, `d`, coarse cost, gap bound |
+//! | `shard_topk` | this shard's top-k fragments (global ids) for a θ-batch |
+//! | `shard_alg3` | this shard's `(log Ẑ_s, work)` partials at rounds `r0+i` |
+//! | `shard_alg4` | this shard's `(log Ẑ_s, μ̂_s, work)` fragments at rounds `r0+i` |
+//! | `score_ids`  | exact scores `θ·φ(x)` for the requested global ids   |
+//!
+//! Numbers survive the trip exactly: the JSON writer emits
+//! shortest-roundtrip decimal for `f64` (and integers as integers), so
+//! `f32` scores and `f64` log-partials parse back to the identical bits
+//! — the foundation of the cross-process conformance guarantee.
+//! Non-finite values (an empty shard's `log Ẑ_s = -∞`) are tagged as
+//! strings since JSON has no literal for them.
+
+use crate::error::{Error, Result};
+use crate::estimator::EstimateWork;
+use crate::mips::TopKResult;
+use crate::shard::expectation::ShardFragment;
+use crate::util::json::Json;
+use crate::util::topk::Scored;
+
+/// Encode a possibly non-finite `f64` (JSON has no `inf`/`nan`).
+fn num_tagged(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x == f64::INFINITY {
+        Json::str("inf")
+    } else if x == f64::NEG_INFINITY {
+        Json::str("-inf")
+    } else {
+        Json::str("nan")
+    }
+}
+
+/// Decode [`num_tagged`].
+fn f64_tagged(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "nan" => Ok(f64::NAN),
+            other => Err(Error::json(format!("expected number, got '{other}'"))),
+        },
+        other => Err(Error::json(format!("expected number, got {other:?}"))),
+    }
+}
+
+fn arr_u32(ids: &[u32]) -> Json {
+    Json::Arr(ids.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn as_u32_vec(j: &Json) -> Result<Vec<u32>> {
+    j.as_arr()?.iter().map(|x| x.as_usize().map(|v| v as u32)).collect()
+}
+
+fn as_f64_vec(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()?.iter().map(|x| x.as_f64()).collect()
+}
+
+fn thetas_json(thetas: &[Vec<f32>]) -> Json {
+    Json::Arr(thetas.iter().map(|t| Json::arr_f32(t)).collect())
+}
+
+fn thetas_from(j: &Json) -> Result<Vec<Vec<f32>>> {
+    j.as_arr()?.iter().map(|t| t.as_f32_vec()).collect()
+}
+
+/// A request from the coordinator's fan-out client to one shard server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardRequest {
+    /// Handshake + heartbeat probe.
+    Ping,
+    /// This shard's top-k fragments (global ids) for each θ.
+    TopK { thetas: Vec<Vec<f32>>, k: usize },
+    /// This shard's Algorithm-3 partials; θ `i` is served at round `r0 + i`.
+    Alg3 { thetas: Vec<Vec<f32>>, r0: u64 },
+    /// This shard's Algorithm-4 fragments; θ `i` is served at round `r0 + i`.
+    Alg4 { thetas: Vec<Vec<f32>>, r0: u64 },
+    /// Exact scores `θ·φ(x)` for global ids owned by this shard.
+    ScoreIds { theta: Vec<f32>, ids: Vec<u32> },
+}
+
+impl ShardRequest {
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            ShardRequest::Ping => "ping",
+            ShardRequest::TopK { .. } => "shard_topk",
+            ShardRequest::Alg3 { .. } => "shard_alg3",
+            ShardRequest::Alg4 { .. } => "shard_alg4",
+            ShardRequest::ScoreIds { .. } => "score_ids",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ShardRequest::Ping => Json::obj(vec![("op", Json::str("ping"))]),
+            ShardRequest::TopK { thetas, k } => Json::obj(vec![
+                ("op", Json::str("shard_topk")),
+                ("k", Json::num(*k as f64)),
+                ("thetas", thetas_json(thetas)),
+            ]),
+            ShardRequest::Alg3 { thetas, r0 } => Json::obj(vec![
+                ("op", Json::str("shard_alg3")),
+                ("r0", Json::num(*r0 as f64)),
+                ("thetas", thetas_json(thetas)),
+            ]),
+            ShardRequest::Alg4 { thetas, r0 } => Json::obj(vec![
+                ("op", Json::str("shard_alg4")),
+                ("r0", Json::num(*r0 as f64)),
+                ("thetas", thetas_json(thetas)),
+            ]),
+            ShardRequest::ScoreIds { theta, ids } => Json::obj(vec![
+                ("op", Json::str("score_ids")),
+                ("theta", Json::arr_f32(theta)),
+                ("ids", arr_u32(ids)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<ShardRequest> {
+        let op = v.req("op")?.as_str()?;
+        match op {
+            "ping" => Ok(ShardRequest::Ping),
+            "shard_topk" => Ok(ShardRequest::TopK {
+                thetas: thetas_from(v.req("thetas")?)?,
+                k: v.req("k")?.as_usize()?,
+            }),
+            "shard_alg3" => Ok(ShardRequest::Alg3 {
+                thetas: thetas_from(v.req("thetas")?)?,
+                r0: v.req("r0")?.as_usize()? as u64,
+            }),
+            "shard_alg4" => Ok(ShardRequest::Alg4 {
+                thetas: thetas_from(v.req("thetas")?)?,
+                r0: v.req("r0")?.as_usize()? as u64,
+            }),
+            "score_ids" => Ok(ShardRequest::ScoreIds {
+                theta: v.req("theta")?.as_f32_vec()?,
+                ids: as_u32_vec(v.req("ids")?)?,
+            }),
+            other => Err(Error::serve(format!("unknown shard op '{other}'"))),
+        }
+    }
+}
+
+/// A shard server's reply.
+#[derive(Debug)]
+pub enum ShardResponse {
+    /// Handshake: identity and the shared merge parameters.
+    Pong {
+        shard: usize,
+        shards: usize,
+        n: usize,
+        d: usize,
+        /// centroid-ranking work the coordinator accounts once per query
+        coarse_cost: usize,
+        /// merged gap bound of the underlying index (None for heuristic kinds)
+        gap: Option<f64>,
+    },
+    /// Per-θ top-k fragments in **global** id space.
+    TopK { results: Vec<TopKResult> },
+    /// Per-θ `(log Ẑ_s, work)` Algorithm-3 partials.
+    Alg3 { partials: Vec<(f64, EstimateWork)> },
+    /// Per-θ Algorithm-4 fragments.
+    Alg4 { frags: Vec<ShardFragment> },
+    /// Scores aligned with the requested ids.
+    Scores { scores: Vec<f32> },
+    /// Shard-side failure.
+    Error { message: String },
+}
+
+fn work_fields(w: &EstimateWork) -> Vec<(&'static str, Json)> {
+    vec![
+        ("scanned", Json::num(w.scanned as f64)),
+        ("k", Json::num(w.k as f64)),
+        ("l", Json::num(w.l as f64)),
+    ]
+}
+
+fn work_from(v: &Json) -> Result<EstimateWork> {
+    Ok(EstimateWork {
+        scanned: v.req("scanned")?.as_usize()?,
+        k: v.req("k")?.as_usize()?,
+        l: v.req("l")?.as_usize()?,
+    })
+}
+
+impl ShardResponse {
+    pub fn to_json(&self) -> Json {
+        let ok = |mut kvs: Vec<(&str, Json)>| {
+            kvs.insert(0, ("ok", Json::Bool(true)));
+            Json::obj(kvs)
+        };
+        match self {
+            ShardResponse::Pong { shard, shards, n, d, coarse_cost, gap } => ok(vec![
+                ("pong", Json::Bool(true)),
+                ("shard", Json::num(*shard as f64)),
+                ("shards", Json::num(*shards as f64)),
+                ("n", Json::num(*n as f64)),
+                ("d", Json::num(*d as f64)),
+                ("coarse_cost", Json::num(*coarse_cost as f64)),
+                ("gap", gap.map(Json::Num).unwrap_or(Json::Null)),
+            ]),
+            ShardResponse::TopK { results } => ok(vec![(
+                "results",
+                Json::Arr(
+                    results
+                        .iter()
+                        .map(|r| {
+                            let ids: Vec<u32> = r.items.iter().map(|it| it.id).collect();
+                            let scores: Vec<f32> = r.items.iter().map(|it| it.score).collect();
+                            Json::obj(vec![
+                                ("ids", arr_u32(&ids)),
+                                ("scores", Json::arr_f32(&scores)),
+                                ("scanned", Json::num(r.scanned as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+            ShardResponse::Alg3 { partials } => ok(vec![(
+                "partials",
+                Json::Arr(
+                    partials
+                        .iter()
+                        .map(|(log_z, w)| {
+                            let mut kvs = vec![("log_z", num_tagged(*log_z))];
+                            kvs.extend(work_fields(w));
+                            Json::obj(kvs)
+                        })
+                        .collect(),
+                ),
+            )]),
+            ShardResponse::Alg4 { frags } => ok(vec![(
+                "frags",
+                Json::Arr(
+                    frags
+                        .iter()
+                        .map(|f| {
+                            let mut kvs = vec![
+                                ("log_z", num_tagged(f.log_z)),
+                                (
+                                    "mean",
+                                    Json::Arr(f.mean.iter().map(|&x| Json::Num(x)).collect()),
+                                ),
+                            ];
+                            kvs.extend(work_fields(&f.work));
+                            Json::obj(kvs)
+                        })
+                        .collect(),
+                ),
+            )]),
+            ShardResponse::Scores { scores } => ok(vec![("scores", Json::arr_f32(scores))]),
+            ShardResponse::Error { message } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(message.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<ShardResponse> {
+        if let Some(ok) = v.get("ok") {
+            if !ok.as_bool()? {
+                let message = v
+                    .get("error")
+                    .and_then(|e| e.as_str().ok())
+                    .unwrap_or("unknown shard error")
+                    .to_string();
+                return Ok(ShardResponse::Error { message });
+            }
+        }
+        if v.get("pong").is_some() {
+            return Ok(ShardResponse::Pong {
+                shard: v.req("shard")?.as_usize()?,
+                shards: v.req("shards")?.as_usize()?,
+                n: v.req("n")?.as_usize()?,
+                d: v.req("d")?.as_usize()?,
+                coarse_cost: v.req("coarse_cost")?.as_usize()?,
+                gap: match v.req("gap")? {
+                    Json::Null => None,
+                    g => Some(g.as_f64()?),
+                },
+            });
+        }
+        if let Some(rs) = v.get("results") {
+            let results = rs
+                .as_arr()?
+                .iter()
+                .map(|r| {
+                    let ids = as_u32_vec(r.req("ids")?)?;
+                    let scores = r.req("scores")?.as_f32_vec()?;
+                    if ids.len() != scores.len() {
+                        return Err(Error::serve("ids/scores length mismatch"));
+                    }
+                    Ok(TopKResult {
+                        items: ids
+                            .into_iter()
+                            .zip(scores)
+                            .map(|(id, score)| Scored { id, score })
+                            .collect(),
+                        scanned: r.req("scanned")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<TopKResult>>>()?;
+            return Ok(ShardResponse::TopK { results });
+        }
+        if let Some(ps) = v.get("partials") {
+            let partials = ps
+                .as_arr()?
+                .iter()
+                .map(|p| Ok((f64_tagged(p.req("log_z")?)?, work_from(p)?)))
+                .collect::<Result<Vec<(f64, EstimateWork)>>>()?;
+            return Ok(ShardResponse::Alg3 { partials });
+        }
+        if let Some(fs) = v.get("frags") {
+            let frags = fs
+                .as_arr()?
+                .iter()
+                .map(|f| {
+                    Ok(ShardFragment {
+                        log_z: f64_tagged(f.req("log_z")?)?,
+                        mean: as_f64_vec(f.req("mean")?)?,
+                        work: work_from(f)?,
+                    })
+                })
+                .collect::<Result<Vec<ShardFragment>>>()?;
+            return Ok(ShardResponse::Alg4 { frags });
+        }
+        if let Some(sc) = v.get("scores") {
+            return Ok(ShardResponse::Scores { scores: sc.as_f32_vec()? });
+        }
+        Err(Error::serve("unrecognized shard response shape"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: ShardRequest) {
+        let j = r.to_json();
+        let back = ShardRequest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(ShardRequest::Ping);
+        roundtrip_req(ShardRequest::TopK {
+            thetas: vec![vec![0.25, -1.5], vec![3.0, 0.0]],
+            k: 7,
+        });
+        roundtrip_req(ShardRequest::Alg3 { thetas: vec![vec![1.0]], r0: 42 });
+        roundtrip_req(ShardRequest::Alg4 { thetas: vec![vec![1.0, 2.0]], r0: 0 });
+        roundtrip_req(ShardRequest::ScoreIds { theta: vec![0.5], ids: vec![3, 9, 4_000_000] });
+    }
+
+    #[test]
+    fn responses_roundtrip_bit_exact() {
+        // the conformance contract: f32 scores and f64 partials survive
+        // the wire with identical bits
+        let score = 0.1f32 + 0.2f32; // not exactly representable in decimal
+        let r = ShardResponse::TopK {
+            results: vec![TopKResult {
+                items: vec![Scored { id: 5, score }, Scored { id: 0, score: -1.25e-30 }],
+                scanned: 123,
+            }],
+        };
+        let back =
+            ShardResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        match back {
+            ShardResponse::TopK { results } => {
+                assert_eq!(results[0].items[0].score.to_bits(), score.to_bits());
+                assert_eq!(results[0].items[1].score.to_bits(), (-1.25e-30f32).to_bits());
+                assert_eq!(results[0].items[0].id, 5);
+                assert_eq!(results[0].scanned, 123);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        let log_z = (0.1f64 + 0.2).ln();
+        let r = ShardResponse::Alg3 {
+            partials: vec![
+                (log_z, EstimateWork { scanned: 10, k: 3, l: 4 }),
+                (f64::NEG_INFINITY, EstimateWork::default()),
+            ],
+        };
+        let back =
+            ShardResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        match back {
+            ShardResponse::Alg3 { partials } => {
+                assert_eq!(partials[0].0.to_bits(), log_z.to_bits());
+                assert_eq!(partials[1].0, f64::NEG_INFINITY);
+                assert_eq!(partials[0].1.k, 3);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        let mean = vec![0.1 + 0.2, -3.5e-20];
+        let r = ShardResponse::Alg4 {
+            frags: vec![ShardFragment {
+                log_z,
+                mean: mean.clone(),
+                work: EstimateWork { scanned: 1, k: 2, l: 3 },
+            }],
+        };
+        let back =
+            ShardResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        match back {
+            ShardResponse::Alg4 { frags } => {
+                assert_eq!(frags[0].mean[0].to_bits(), mean[0].to_bits());
+                assert_eq!(frags[0].mean[1].to_bits(), mean[1].to_bits());
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pong_and_error_roundtrip() {
+        let r = ShardResponse::Pong { shard: 2, shards: 4, n: 1000, d: 16, coarse_cost: 32, gap: None };
+        match ShardResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap() {
+            ShardResponse::Pong { shard, shards, n, d, coarse_cost, gap } => {
+                assert_eq!((shard, shards, n, d, coarse_cost, gap), (2, 4, 1000, 16, 32, None));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        let r = ShardResponse::Error { message: "boom".into() };
+        match ShardResponse::from_json(&r.to_json()).unwrap() {
+            ShardResponse::Error { message } => assert_eq!(message, "boom"),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_op_is_error() {
+        let v = Json::parse(r#"{"op":"frobnicate"}"#).unwrap();
+        assert!(ShardRequest::from_json(&v).is_err());
+        assert!(ShardResponse::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! The shard-server side of the remote tier: a full sharded stack that
+//! answers for **one** shard.
+//!
+//! A [`ShardEngine`] builds the same deterministic artifacts the
+//! coordinator's in-process sharded stack builds — the seed-generated
+//! dataset, the [`ShardedIndex`] with its globally trained IVF coarse
+//! quantizer / shared LSH norm bound, the sharded estimators with the
+//! same `k`/`l` budgets and stream seed — from the same [`Config`], then
+//! serves only the per-shard entry points for its assigned shard
+//! (`shard_top_k_batch`, `shard_partials_batch_at`,
+//! `shard_fragments_batch_at`). Per-shard answers are therefore produced
+//! by *literally the same code paths* the in-process fan-out closures
+//! run, which is what makes the cross-process conformance tests
+//! bit-exact: the remote coordinator merges wire fragments with the same
+//! merge functions over the same per-shard values.
+//!
+//! Building the full stack per shard costs memory proportional to the
+//! whole dataset on each server. That is the simplest deployment that
+//! preserves bit-parity (the IVF coarse quantizer and LSH norm bound are
+//! *global* artifacts by design — see [`crate::shard`]); the fan-out
+//! still divides the *scan* work `N` ways, which is where the time goes.
+
+use super::protocol::{ShardRequest, ShardResponse};
+use crate::config::Config;
+use crate::data::{self, Dataset};
+use crate::error::{Error, Result};
+use crate::mips::MipsIndex;
+use crate::scorer::{self, NativeScorer, ScoreBackend};
+use crate::server::ServeHandler;
+use crate::shard::{ShardedExpectationEstimator, ShardedIndex, ShardedPartitionEstimator};
+use crate::util::json::Json;
+use std::sync::Arc;
+
+/// One shard's serving engine.
+pub struct ShardEngine {
+    ds: Arc<Dataset>,
+    index: Arc<ShardedIndex>,
+    backend: Arc<dyn ScoreBackend>,
+    partition: ShardedPartitionEstimator,
+    expectation: ShardedExpectationEstimator,
+    shard: usize,
+}
+
+impl ShardEngine {
+    /// Build the full sharded stack from `cfg` (dataset regenerated from
+    /// the config seeds, so every shard server and the coordinator agree
+    /// on the data without shipping it), answering for shard `shard` of
+    /// `cfg.index.shards`.
+    pub fn from_config(
+        cfg: &Config,
+        shard: usize,
+        backend: Option<Arc<dyn ScoreBackend>>,
+    ) -> Result<ShardEngine> {
+        let backend = backend.unwrap_or_else(|| Arc::new(NativeScorer));
+        let ds = Arc::new(data::load_or_generate(&cfg.data));
+        let index = Arc::new(ShardedIndex::build(&ds, &cfg.index, backend.clone())?);
+        if shard >= index.n_shards() {
+            return Err(Error::config(format!(
+                "shard id {shard} out of range: index has {} shards",
+                index.n_shards()
+            )));
+        }
+        let (k, l) = (cfg.estimator_k(), cfg.estimator_l());
+        let partition = ShardedPartitionEstimator::new(
+            ds.clone(),
+            index.clone(),
+            backend.clone(),
+            k,
+            l,
+            cfg.index.seed,
+        );
+        let expectation = ShardedExpectationEstimator::new(
+            ds.clone(),
+            index.clone(),
+            backend.clone(),
+            k,
+            l,
+            cfg.index.seed,
+        );
+        Ok(ShardEngine { ds, index, backend, partition, expectation, shard })
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// One-line identity for logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "shard {}/{} ({} index, n={} d={})",
+            self.shard,
+            self.index.n_shards(),
+            self.index.name(),
+            self.ds.n,
+            self.ds.d
+        )
+    }
+
+    /// Answer one shard request. Never panics on malformed input —
+    /// dimension/range problems come back as [`ShardResponse::Error`].
+    pub fn handle(&self, req: &ShardRequest) -> ShardResponse {
+        match req {
+            ShardRequest::Ping => ShardResponse::Pong {
+                shard: self.shard,
+                shards: self.index.n_shards(),
+                n: self.ds.n,
+                d: self.ds.d,
+                coarse_cost: self.index.coarse_cost(),
+                gap: self.index.gap_bound(),
+            },
+            ShardRequest::TopK { thetas, k } => {
+                let qs = match self.borrow_thetas(thetas) {
+                    Ok(qs) => qs,
+                    Err(e) => return ShardResponse::Error { message: e },
+                };
+                let mut results = self.index.shard_top_k_batch(self.shard, &qs, (*k).max(1));
+                // local → global ids before they cross the wire, so the
+                // coordinator merges fragments exactly like the
+                // in-process `ShardedIndex::merge` does
+                for r in &mut results {
+                    for it in &mut r.items {
+                        it.id = self.index.map().to_global(self.shard, it.id);
+                    }
+                }
+                ShardResponse::TopK { results }
+            }
+            ShardRequest::Alg3 { thetas, r0 } => match self.borrow_thetas(thetas) {
+                Ok(qs) => ShardResponse::Alg3 {
+                    partials: self.partition.shard_partials_batch_at(self.shard, &qs, *r0),
+                },
+                Err(e) => ShardResponse::Error { message: e },
+            },
+            ShardRequest::Alg4 { thetas, r0 } => match self.borrow_thetas(thetas) {
+                Ok(qs) => ShardResponse::Alg4 {
+                    frags: self.expectation.shard_fragments_batch_at(self.shard, &qs, *r0),
+                },
+                Err(e) => ShardResponse::Error { message: e },
+            },
+            ShardRequest::ScoreIds { theta, ids } => {
+                if theta.len() != self.ds.d {
+                    return ShardResponse::Error {
+                        message: format!(
+                            "theta has dim {}, database has dim {}",
+                            theta.len(),
+                            self.ds.d
+                        ),
+                    };
+                }
+                if let Some(&bad) = ids.iter().find(|&&i| i as usize >= self.ds.n) {
+                    return ShardResponse::Error {
+                        message: format!("id {bad} out of range (n={})", self.ds.n),
+                    };
+                }
+                // the engine holds the full (seed-regenerated) dataset, so
+                // any global id is scoreable; the coordinator routes ids
+                // by owning shard to divide the work
+                ShardResponse::Scores {
+                    scores: scorer::score_ids(&self.ds, self.backend.as_ref(), ids, theta),
+                }
+            }
+        }
+    }
+
+    fn borrow_thetas<'a>(
+        &self,
+        thetas: &'a [Vec<f32>],
+    ) -> std::result::Result<Vec<&'a [f32]>, String> {
+        for t in thetas {
+            if t.len() != self.ds.d {
+                return Err(format!(
+                    "theta has dim {}, database has dim {}",
+                    t.len(),
+                    self.ds.d
+                ));
+            }
+        }
+        Ok(thetas.iter().map(|t| t.as_slice()).collect())
+    }
+}
+
+/// [`ServeHandler`] adapter: parse [`ShardRequest`], answer, serialize.
+pub struct ShardHandler {
+    engine: Arc<ShardEngine>,
+}
+
+impl ShardHandler {
+    pub fn new(engine: Arc<ShardEngine>) -> ShardHandler {
+        ShardHandler { engine }
+    }
+}
+
+impl ServeHandler for ShardHandler {
+    fn respond(&self, j: &Json) -> Json {
+        match ShardRequest::from_json(j) {
+            Ok(req) => self.engine.handle(&req).to_json(),
+            Err(e) => self.error(&e.to_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IndexKind;
+
+    fn tiny_cfg(shards: usize) -> Config {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.data.n = 600;
+        cfg.data.d = 8;
+        cfg.data.clusters = 10;
+        cfg.index.kind = IndexKind::Brute;
+        cfg.index.shards = shards;
+        cfg
+    }
+
+    #[test]
+    fn shard_engine_answers_all_ops() {
+        let cfg = tiny_cfg(2);
+        let eng = ShardEngine::from_config(&cfg, 1, None).unwrap();
+        let theta = vec![0.1f32; 8];
+        match eng.handle(&ShardRequest::Ping) {
+            ShardResponse::Pong { shard, shards, n, d, .. } => {
+                assert_eq!((shard, shards, n, d), (1, 2, 600, 8));
+            }
+            other => panic!("{other:?}"),
+        }
+        match eng.handle(&ShardRequest::TopK { thetas: vec![theta.clone()], k: 5 }) {
+            ShardResponse::TopK { results } => {
+                assert_eq!(results.len(), 1);
+                assert_eq!(results[0].items.len(), 5);
+                // ids must be global ids owned by shard 1
+                for it in &results[0].items {
+                    assert_eq!(eng.index.map().to_local(it.id).0, 1);
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        match eng.handle(&ShardRequest::Alg3 { thetas: vec![theta.clone()], r0: 0 }) {
+            ShardResponse::Alg3 { partials } => {
+                assert_eq!(partials.len(), 1);
+                assert!(partials[0].0.is_finite());
+            }
+            other => panic!("{other:?}"),
+        }
+        match eng.handle(&ShardRequest::Alg4 { thetas: vec![theta.clone()], r0: 0 }) {
+            ShardResponse::Alg4 { frags } => {
+                assert_eq!(frags.len(), 1);
+                assert_eq!(frags[0].mean.len(), 8);
+            }
+            other => panic!("{other:?}"),
+        }
+        match eng.handle(&ShardRequest::ScoreIds { theta, ids: vec![0, 3, 599] }) {
+            ShardResponse::Scores { scores } => assert_eq!(scores.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_error_not_panic() {
+        let cfg = tiny_cfg(2);
+        let eng = ShardEngine::from_config(&cfg, 0, None).unwrap();
+        match eng.handle(&ShardRequest::TopK { thetas: vec![vec![1.0; 3]], k: 5 }) {
+            ShardResponse::Error { message } => assert!(message.contains("dim"), "{message}"),
+            other => panic!("{other:?}"),
+        }
+        match eng.handle(&ShardRequest::ScoreIds { theta: vec![0.0; 8], ids: vec![600] }) {
+            ShardResponse::Error { message } => assert!(message.contains("range"), "{message}"),
+            other => panic!("{other:?}"),
+        }
+        assert!(ShardEngine::from_config(&cfg, 5, None).is_err(), "shard id out of range");
+    }
+}

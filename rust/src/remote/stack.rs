@@ -1,0 +1,549 @@
+//! [`RemoteStack`] — the coordinator-side fan-out/merge client over a set
+//! of shard servers.
+//!
+//! `connect` performs a validating handshake (every reachable server must
+//! agree on its shard id, the shard count, `n`, `d`, the coarse-probe
+//! cost, and the gap bound — a mis-wired `remote.addrs` list fails fast
+//! instead of silently merging fragments from the wrong partition), then
+//! serves the three fan-out ops:
+//!
+//! * [`top_k_status`](RemoteStack::top_k_status) — per-shard top-k
+//!   fragments (already in global id space) merged with
+//!   [`crate::util::topk::merge_topk`], the coarse cost accounted once —
+//!   the exact merge of the in-process `ShardedIndex`;
+//! * [`alg3_status`](RemoteStack::alg3_status) — Algorithm-3 partials
+//!   merged by [`crate::shard::estimator::merge_partials_with`];
+//! * [`alg4_status`](RemoteStack::alg4_status) — Algorithm-4 fragments
+//!   merged by [`crate::shard::expectation::merge_shard_fragments`];
+//! * [`score_ids_status`](RemoteStack::score_ids_status) — tail-row
+//!   scoring routed to each id's owning shard (the sampler's lazy-tail
+//!   unit).
+//!
+//! Every op fans out in parallel (one thread per shard — the calls are
+//! network-bound), skips shards the [`HealthBoard`] marks `Down` without
+//! burning deadline, and **renormalizes over the surviving shards** when
+//! some fail: the `(ok, total)` status pair the `*_status` methods return
+//! is what the engine turns into the response's `degraded` flag. Only
+//! when *zero* shards answer does an op return `Err`. A background
+//! heartbeat (period `remote.heartbeat_ms`; `0` disables it) keeps
+//! probing every shard — including `Down` ones, which request traffic
+//! skips — so a restarted shard server rejoins the fan-out without any
+//! operator action.
+
+use super::client::ShardClient;
+use super::health::HealthBoard;
+use super::protocol::{ShardRequest, ShardResponse};
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::estimator::expectation::FeatureExpectation;
+use crate::estimator::partition::PartitionEstimate;
+use crate::estimator::EstimateWork;
+use crate::mips::{MipsIndex, TopKResult};
+use crate::shard::estimator::merge_partials_with;
+use crate::shard::expectation::{merge_shard_fragments, ShardFragment};
+use crate::shard::ShardMap;
+use crate::util::pool;
+use crate::util::topk::merge_topk;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Background health prober; stops and joins on drop.
+struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn spawn_heartbeat(
+    clients: Vec<Arc<ShardClient>>,
+    health: Arc<HealthBoard>,
+    period_ms: u64,
+) -> Heartbeat {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let period = Duration::from_millis(period_ms.max(1));
+    let handle = std::thread::spawn(move || {
+        while !stop2.load(Ordering::Relaxed) {
+            for (s, c) in clients.iter().enumerate() {
+                if stop2.load(Ordering::Relaxed) {
+                    return;
+                }
+                // one probe bounded by the period, so a dead shard can't
+                // stall the loop for the full request deadline
+                match c.call_with_deadline(&ShardRequest::Ping, Instant::now() + period) {
+                    Ok(_) => health.record_success(s),
+                    Err(_) => health.record_failure(s),
+                }
+            }
+            // sleep in small steps so drop/join stays prompt
+            let mut slept = Duration::ZERO;
+            while slept < period && !stop2.load(Ordering::Relaxed) {
+                let step = Duration::from_millis(20).min(period - slept);
+                std::thread::sleep(step);
+                slept += step;
+            }
+        }
+    });
+    Heartbeat { stop, handle: Some(handle) }
+}
+
+/// Fan-out/merge client over `N` shard servers.
+pub struct RemoteStack {
+    clients: Vec<Arc<ShardClient>>,
+    health: Arc<HealthBoard>,
+    map: ShardMap,
+    n: usize,
+    d: usize,
+    coarse_cost: usize,
+    gap: Option<f64>,
+    /// kept for its Drop (stops the probe thread)
+    _heartbeat: Option<Heartbeat>,
+}
+
+impl RemoteStack {
+    /// Connect to `remote.addrs` (shard `s` = the `s`-th address) and
+    /// validate the handshake. Servers unreachable right now are marked
+    /// `Down` (the heartbeat keeps probing them); at least one must
+    /// answer, and every answer must agree on the merge parameters.
+    pub fn connect(cfg: &Config) -> Result<RemoteStack> {
+        let addrs = cfg.remote.addr_list();
+        if addrs.is_empty() {
+            return Err(Error::config(
+                "remote.addrs is empty — set remote.addrs = \"host:port,host:port,...\"",
+            ));
+        }
+        let ns = addrs.len();
+        let clients: Vec<Arc<ShardClient>> = addrs
+            .iter()
+            .enumerate()
+            .map(|(s, a)| Arc::new(ShardClient::new(a, s, &cfg.remote)))
+            .collect();
+        let health = Arc::new(HealthBoard::new(ns, cfg.remote.down_after));
+        let mut meta: Option<(usize, usize, usize, Option<f64>)> = None;
+        for (s, c) in clients.iter().enumerate() {
+            match c.ping() {
+                Ok(ShardResponse::Pong { shard, shards, n, d, coarse_cost, gap }) => {
+                    if shard != s {
+                        return Err(Error::config(format!(
+                            "server at {} serves shard {shard}, but it is listed at \
+                             position {s} of remote.addrs — fix the address order",
+                            c.addr()
+                        )));
+                    }
+                    if shards != ns {
+                        return Err(Error::config(format!(
+                            "server at {} belongs to a {shards}-shard deployment, but \
+                             remote.addrs lists {ns} addresses",
+                            c.addr()
+                        )));
+                    }
+                    match meta {
+                        None => meta = Some((n, d, coarse_cost, gap)),
+                        Some((n0, d0, cc0, g0)) => {
+                            if (n, d, coarse_cost, gap) != (n0, d0, cc0, g0) {
+                                return Err(Error::config(format!(
+                                    "server at {} disagrees on the merge parameters \
+                                     (n={n} d={d} coarse_cost={coarse_cost} gap={gap:?} \
+                                     vs n={n0} d={d0} coarse_cost={cc0} gap={g0:?}) — \
+                                     all shard servers must share one config",
+                                    c.addr()
+                                )));
+                            }
+                        }
+                    }
+                    health.record_success(s);
+                }
+                Ok(other) => {
+                    return Err(Error::serve(format!(
+                        "unexpected handshake reply from {}: {other:?}",
+                        c.addr()
+                    )));
+                }
+                Err(_) => {
+                    // straight to Down: requests skip it, the heartbeat
+                    // picks it up when it comes back
+                    for _ in 0..cfg.remote.down_after.max(1) {
+                        health.record_failure(s);
+                    }
+                }
+            }
+        }
+        let Some((n, d, coarse_cost, gap)) = meta else {
+            return Err(Error::serve(format!(
+                "no shard server reachable during handshake ({ns} tried)"
+            )));
+        };
+        let map = ShardMap::new(n, ns, cfg.index.shard_strategy);
+        if map.shards() != ns {
+            return Err(Error::config(format!(
+                "{ns} shard servers over n={n} rows — at most n shards are possible"
+            )));
+        }
+        let heartbeat = if cfg.remote.heartbeat_ms > 0 {
+            Some(spawn_heartbeat(clients.clone(), health.clone(), cfg.remote.heartbeat_ms))
+        } else {
+            None
+        };
+        Ok(RemoteStack {
+            clients,
+            health,
+            map,
+            n,
+            d,
+            coarse_cost,
+            gap,
+            _heartbeat: heartbeat,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn gap(&self) -> Option<f64> {
+        self.gap
+    }
+
+    pub fn coarse_cost(&self) -> usize {
+        self.coarse_cost
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    pub fn health(&self) -> &HealthBoard {
+        &self.health
+    }
+
+    /// Run a per-shard closure across all shards in parallel (one thread
+    /// per shard — the work is network-bound), results in shard order.
+    fn fan_out<T, F>(&self, f: F) -> Vec<Option<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Option<T> + Sync,
+    {
+        let ns = self.clients.len();
+        let parts =
+            pool::parallel_chunks(ns, ns, |_, s, e| (s..e).map(&f).collect::<Vec<Option<T>>>());
+        parts.into_iter().flatten().collect()
+    }
+
+    /// One shard call with health bookkeeping: `Down` shards are skipped
+    /// without touching the network; failures (after the client's retry
+    /// budget) demote the shard.
+    fn call_shard(&self, s: usize, req: &ShardRequest) -> Option<ShardResponse> {
+        if self.health.is_down(s) {
+            return None;
+        }
+        match self.clients[s].call(req) {
+            Ok(resp) => {
+                self.health.record_success(s);
+                Some(resp)
+            }
+            Err(_) => {
+                self.health.record_failure(s);
+                None
+            }
+        }
+    }
+
+    fn owned(qs: &[&[f32]]) -> Vec<Vec<f32>> {
+        qs.iter().map(|q| q.to_vec()).collect()
+    }
+
+    /// Batched remote top-k: per-shard fragments (global ids) merged with
+    /// the deterministic `(score, id)` k-way merge, coarse cost accounted
+    /// once — bit-identical to the in-process `ShardedIndex` merge over
+    /// the shards that answered. Returns the per-query results plus the
+    /// `(ok, total)` shard status.
+    pub fn top_k_status(
+        &self,
+        qs: &[&[f32]],
+        k: usize,
+    ) -> Result<(Vec<TopKResult>, (usize, usize))> {
+        let ns = self.clients.len();
+        if qs.is_empty() {
+            return Ok((Vec::new(), (ns, ns)));
+        }
+        let req = ShardRequest::TopK { thetas: Self::owned(qs), k };
+        let replies = self.fan_out(|s| match self.call_shard(s, &req) {
+            Some(ShardResponse::TopK { results }) if results.len() == qs.len() => Some(results),
+            _ => None,
+        });
+        let ok = replies.iter().filter(|r| r.is_some()).count();
+        if ok == 0 {
+            return Err(Error::serve(format!(
+                "top-k fan-out failed: all {ns} shard servers unreachable"
+            )));
+        }
+        let kk = k.min(self.n).max(1);
+        let mut iters: Vec<std::vec::IntoIter<TopKResult>> =
+            replies.into_iter().flatten().map(|v| v.into_iter()).collect();
+        let merged = (0..qs.len())
+            .map(|_| {
+                let mut scanned = self.coarse_cost;
+                let frags = iters
+                    .iter_mut()
+                    .map(|it| {
+                        let r = it.next().expect("validated: one result per query");
+                        scanned += r.scanned;
+                        r.items
+                    })
+                    .collect::<Vec<_>>();
+                TopKResult { items: merge_topk(frags, kk).into_sorted(), scanned }
+            })
+            .collect();
+        Ok((merged, (ok, ns)))
+    }
+
+    /// Batched remote Algorithm 3 (query `i` at round `r0 + i`):
+    /// log-sum-exp merge of the surviving shards' partials — with every
+    /// shard up this is bit-identical to the in-process sharded
+    /// estimator; under faults it renormalizes over the survivors.
+    pub fn alg3_status(
+        &self,
+        qs: &[&[f32]],
+        r0: u64,
+    ) -> Result<(Vec<PartitionEstimate>, (usize, usize))> {
+        let ns = self.clients.len();
+        if qs.is_empty() {
+            return Ok((Vec::new(), (ns, ns)));
+        }
+        let req = ShardRequest::Alg3 { thetas: Self::owned(qs), r0 };
+        let replies = self.fan_out(|s| match self.call_shard(s, &req) {
+            Some(ShardResponse::Alg3 { partials }) if partials.len() == qs.len() => Some(partials),
+            _ => None,
+        });
+        let ok = replies.iter().filter(|r| r.is_some()).count();
+        if ok == 0 {
+            return Err(Error::serve(format!(
+                "log-partition fan-out failed: all {ns} shard servers unreachable"
+            )));
+        }
+        let survivors: Vec<Vec<(f64, EstimateWork)>> = replies.into_iter().flatten().collect();
+        let merged = (0..qs.len())
+            .map(|i| {
+                merge_partials_with(self.coarse_cost, survivors.iter().map(|p| p[i]).collect())
+            })
+            .collect();
+        Ok((merged, (ok, ns)))
+    }
+
+    /// Batched remote Algorithm 4 (query `i` at round `r0 + i`): weighted
+    /// log-sum-exp merge of the surviving shards' fragments — the
+    /// renormalization over survivors is automatic (`μ̂` divides by the
+    /// surviving `Σ_s Ẑ_s`).
+    pub fn alg4_status(
+        &self,
+        qs: &[&[f32]],
+        r0: u64,
+    ) -> Result<(Vec<FeatureExpectation>, (usize, usize))> {
+        let ns = self.clients.len();
+        if qs.is_empty() {
+            return Ok((Vec::new(), (ns, ns)));
+        }
+        let req = ShardRequest::Alg4 { thetas: Self::owned(qs), r0 };
+        let replies = self.fan_out(|s| match self.call_shard(s, &req) {
+            Some(ShardResponse::Alg4 { frags }) if frags.len() == qs.len() => Some(frags),
+            _ => None,
+        });
+        let ok = replies.iter().filter(|r| r.is_some()).count();
+        if ok == 0 {
+            return Err(Error::serve(format!(
+                "expectation fan-out failed: all {ns} shard servers unreachable"
+            )));
+        }
+        let mut iters: Vec<std::vec::IntoIter<ShardFragment>> =
+            replies.into_iter().flatten().map(|v| v.into_iter()).collect();
+        let merged = (0..qs.len())
+            .map(|_| {
+                let frags: Vec<ShardFragment> = iters
+                    .iter_mut()
+                    .map(|it| it.next().expect("validated: one fragment per query"))
+                    .collect();
+                merge_shard_fragments(self.d, self.coarse_cost, frags)
+            })
+            .collect();
+        Ok((merged, (ok, ns)))
+    }
+
+    /// Score global ids for `q`, each id routed to its owning shard.
+    /// Ids owned by a shard that fails come back `None` (the caller —
+    /// the remote sampler's lazy tail — drops them and degrades instead
+    /// of failing the draw), so this op never errors.
+    pub fn score_ids_status(&self, q: &[f32], ids: &[u32]) -> (Vec<Option<f32>>, (usize, usize)) {
+        let ns = self.clients.len();
+        if ids.is_empty() {
+            return (Vec::new(), (ns, ns));
+        }
+        // (positions, ids) per owning shard
+        let mut by_shard: Vec<(Vec<usize>, Vec<u32>)> = vec![Default::default(); ns];
+        for (pos, &id) in ids.iter().enumerate() {
+            let (s, _) = self.map.to_local(id);
+            by_shard[s].0.push(pos);
+            by_shard[s].1.push(id);
+        }
+        let replies = self.fan_out(|s| {
+            if by_shard[s].1.is_empty() {
+                return Some(Vec::new());
+            }
+            let req = ShardRequest::ScoreIds { theta: q.to_vec(), ids: by_shard[s].1.clone() };
+            match self.call_shard(s, &req) {
+                Some(ShardResponse::Scores { scores })
+                    if scores.len() == by_shard[s].1.len() =>
+                {
+                    Some(scores)
+                }
+                _ => None,
+            }
+        });
+        let mut out = vec![None; ids.len()];
+        let mut failed = 0usize;
+        for (s, reply) in replies.into_iter().enumerate() {
+            match reply {
+                Some(scores) => {
+                    for (&pos, &y) in by_shard[s].0.iter().zip(&scores) {
+                        out[pos] = Some(y);
+                    }
+                }
+                None => failed += 1,
+            }
+        }
+        (out, (ns - failed, ns))
+    }
+}
+
+/// [`MipsIndex`] facade over the remote fan-out, so the engine's plain
+/// top-k path (and anything else that only needs an index) works
+/// unchanged against remote shards. Total fan-out failure degrades to an
+/// empty result here — the engine's TopK arm uses
+/// [`RemoteStack::top_k_status`] directly to surface errors and the
+/// degraded flag.
+pub struct RemoteIndex {
+    stack: Arc<RemoteStack>,
+}
+
+impl RemoteIndex {
+    pub fn new(stack: Arc<RemoteStack>) -> RemoteIndex {
+        RemoteIndex { stack }
+    }
+}
+
+impl MipsIndex for RemoteIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> TopKResult {
+        match self.stack.top_k_status(&[q], k) {
+            Ok((mut v, _)) => v.pop().unwrap_or_default(),
+            Err(_) => TopKResult::default(),
+        }
+    }
+
+    fn top_k_batch(&self, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
+        match self.stack.top_k_status(qs, k) {
+            Ok((v, _)) => v,
+            Err(_) => vec![TopKResult::default(); qs.len()],
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.stack.n()
+    }
+
+    fn d(&self) -> usize {
+        self.stack.d()
+    }
+
+    fn gap_bound(&self) -> Option<f64> {
+        self.stack.gap()
+    }
+
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "remote[{} shards, health: {}] n={} d={}",
+            self.stack.shards(),
+            self.stack.health().summary(),
+            self.stack.n(),
+            self.stack.d()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+
+    fn cfg_with_addrs(addrs: &str) -> Config {
+        let mut cfg = Config::default();
+        cfg.remote.addrs = addrs.to_string();
+        cfg.remote.deadline_ms = 400;
+        cfg.remote.connect_timeout_ms = 50;
+        cfg.remote.retries = 0;
+        cfg.remote.backoff_ms = 1;
+        cfg.remote.heartbeat_ms = 0;
+        cfg
+    }
+
+    #[test]
+    fn empty_addr_list_is_a_config_error() {
+        let err = RemoteStack::connect(&cfg_with_addrs("")).unwrap_err();
+        assert!(err.to_string().contains("remote.addrs"), "{err}");
+    }
+
+    #[test]
+    fn unreachable_servers_fail_the_handshake() {
+        let err = RemoteStack::connect(&cfg_with_addrs("127.0.0.1:1")).unwrap_err();
+        assert!(err.to_string().contains("no shard server reachable"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_shard_count_is_rejected() {
+        // a fake server that claims to be shard 0 of a 3-shard deployment
+        // while remote.addrs lists a single address
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            if let Ok((stream, _)) = listener.accept() {
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut line = String::new();
+                let _ = reader.read_line(&mut line);
+                let pong = ShardResponse::Pong {
+                    shard: 0,
+                    shards: 3,
+                    n: 100,
+                    d: 4,
+                    coarse_cost: 0,
+                    gap: Some(0.0),
+                };
+                let mut stream = stream;
+                let _ = writeln!(stream, "{}", pong.to_json());
+            }
+        });
+        let err = RemoteStack::connect(&cfg_with_addrs(&addr.to_string())).unwrap_err();
+        assert!(err.to_string().contains("3-shard"), "{err}");
+        server.join().unwrap();
+    }
+}

@@ -5,28 +5,159 @@
 //! Wire format: one JSON object per line, request → response
 //! (see [`crate::coordinator::api`]). `{"op":"shutdown"}` stops the
 //! server (used by tests and the CLI's `--oneshot` mode).
+//!
+//! The framing/accept layer is generic over a [`ServeHandler`], so the
+//! same server fronts both the coordinator (inference API) and a
+//! [`crate::remote::ShardEngine`] (shard-serving API). The front-end owns
+//! the robustness knobs:
+//!
+//! * finished connection threads are reaped on every accept, and at most
+//!   `serve.max_conns` connections run at once — excess connections get
+//!   an immediate `overloaded` reply instead of a silent queue;
+//! * request lines are capped at `serve.max_line_bytes`; longer lines
+//!   are answered with an error and the connection resynchronizes at the
+//!   next newline instead of buffering without bound;
+//! * under queue saturation the coordinator handler stops blocking in
+//!   `submit` and sheds with an explicit `overloaded` error after
+//!   `serve.shed_ms` (bounded worst-case latency);
+//! * an optional [`FaultPlan`] injects failures (drops, delays, corrupt
+//!   frames, a kill switch) at well-defined points for the fault drills.
 
+use crate::config::ServeConfig;
 use crate::coordinator::{api::Request, Coordinator, Response};
 use crate::error::{Error, Result};
+use crate::remote::faults::FaultPlan;
 use crate::util::json::Json;
+use crate::util::timing::Stopwatch;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+/// Answers parsed request objects for a [`Server`]. Implementations must
+/// be cheap to share across connection threads.
+pub trait ServeHandler: Send + Sync {
+    /// Answer one parsed request object (already valid JSON).
+    fn respond(&self, req: &Json) -> Json;
+
+    /// Shape an error (bad json, oversized line, overload) as a reply in
+    /// this handler's wire format. The default matches both the
+    /// coordinator and shard protocols.
+    fn error(&self, message: &str) -> Json {
+        Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(message))])
+    }
+}
+
+/// [`ServeHandler`] fronting the [`Coordinator`]: parses the typed
+/// [`Request`], enqueues with a bounded shed deadline instead of blocking
+/// forever on a saturated queue, and annotates `stats` responses with
+/// queue depth and shed count.
+pub struct CoordHandler {
+    coordinator: Arc<Coordinator>,
+    shed_ms: u64,
+}
+
+impl CoordHandler {
+    pub fn new(coordinator: Arc<Coordinator>, shed_ms: u64) -> Self {
+        CoordHandler { coordinator, shed_ms }
+    }
+}
+
+impl ServeHandler for CoordHandler {
+    fn respond(&self, j: &Json) -> Json {
+        let req = match Request::from_json(j) {
+            Ok(r) => r,
+            Err(e) => return self.error(&e.to_string()),
+        };
+        // Deadline-aware enqueue: a full queue is retried for at most
+        // `shed_ms`, then the request is shed with an explicit error —
+        // saturation degrades into bounded-latency rejections, never
+        // into an unbounded blocking pile-up of connection threads.
+        let sw = Stopwatch::start();
+        let ticket = loop {
+            match self.coordinator.try_submit(req.clone()) {
+                Ok(t) => break Some(t),
+                Err(_) if sw.millis() < self.shed_ms as f64 => {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(_) => break None,
+            }
+        };
+        let resp = match ticket {
+            None => {
+                self.coordinator.note_shed();
+                Response::Error { message: "overloaded: coordinator queue full".into() }
+            }
+            Some(t) => match t.wait() {
+                Ok(r) => r,
+                Err(e) => Response::Error { message: e.to_string() },
+            },
+        };
+        let resp = match resp {
+            Response::Stats { text } => Response::Stats {
+                text: format!(
+                    "{text}\nserve: queue_depth={} shed={}",
+                    self.coordinator.queue_depth(),
+                    self.coordinator.shed_count()
+                ),
+            },
+            r => r,
+        };
+        resp.to_json()
+    }
+}
+
 /// Blocking JSON-lines server.
 pub struct Server {
-    coordinator: Arc<Coordinator>,
+    handler: Arc<dyn ServeHandler>,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
+    max_conns: usize,
+    max_line_bytes: usize,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Server {
-    /// Bind to `addr` (e.g. `127.0.0.1:7431`; port 0 picks a free port).
+    /// Bind a coordinator front-end to `addr` (e.g. `127.0.0.1:7431`;
+    /// port 0 picks a free port) with the default serve limits.
     pub fn bind(coordinator: Arc<Coordinator>, addr: &str) -> Result<Server> {
+        let serve = crate::config::Config::default().serve;
+        Self::bind_with(coordinator, addr, &serve)
+    }
+
+    /// [`bind`](Self::bind) with explicit serve limits.
+    pub fn bind_with(
+        coordinator: Arc<Coordinator>,
+        addr: &str,
+        serve: &ServeConfig,
+    ) -> Result<Server> {
+        let handler = Arc::new(CoordHandler::new(coordinator, serve.shed_ms));
+        Self::bind_handler(handler, addr, serve)
+    }
+
+    /// Bind an arbitrary handler (e.g. a shard engine) to `addr`.
+    pub fn bind_handler(
+        handler: Arc<dyn ServeHandler>,
+        addr: &str,
+        serve: &ServeConfig,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::serve(format!("cannot bind {addr}: {e}")))?;
-        Ok(Server { coordinator, listener, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(Server {
+            handler,
+            listener,
+            stop: Arc::new(AtomicBool::new(false)),
+            max_conns: serve.max_conns.max(1),
+            max_line_bytes: serve.max_line_bytes.max(256),
+            faults: None,
+        })
+    }
+
+    /// Attach a fault-injection plan (tests / drills). The plan is
+    /// consulted live, so flipping its knobs affects a running server.
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Server {
+        self.faults = Some(plan);
+        self
     }
 
     /// The actually-bound address.
@@ -43,10 +174,30 @@ impl Server {
         while !self.stop.load(Ordering::SeqCst) {
             match self.listener.accept() {
                 Ok((stream, _)) => {
-                    let coord = self.coordinator.clone();
+                    // reap finished connection threads so a long-lived
+                    // server doesn't leak one JoinHandle per past client
+                    conns.retain(|h| !h.is_finished());
+                    if let Some(f) = &self.faults {
+                        if f.is_down() {
+                            drop(stream); // killed shard: refuse service
+                            continue;
+                        }
+                    }
+                    if conns.len() >= self.max_conns {
+                        // over the connection cap: explicit overloaded
+                        // reply and close, never a silent queue
+                        let reply = self.handler.error("overloaded: too many connections");
+                        let mut w = BufWriter::new(stream);
+                        let _ = writeln!(w, "{}", reply.to_string());
+                        let _ = w.flush();
+                        continue;
+                    }
+                    let handler = self.handler.clone();
                     let stop = self.stop.clone();
+                    let faults = self.faults.clone();
+                    let cap = self.max_line_bytes;
                     conns.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, &coord, &stop);
+                        let _ = handle_conn(stream, &*handler, &stop, cap, faults.as_deref());
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -67,7 +218,18 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Result<()> {
+fn write_json(writer: &mut BufWriter<TcpStream>, j: &Json) -> Result<()> {
+    writeln!(writer, "{}", j.to_string()).map_err(Error::Io)?;
+    writer.flush().map_err(Error::Io)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    handler: &dyn ServeHandler,
+    stop: &AtomicBool,
+    max_line: usize,
+    faults: Option<&FaultPlan>,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     // A blocking `reader.lines()` loop would pin this thread inside
     // `read` for as long as the client keeps the connection open but
@@ -86,9 +248,17 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
     // mid-way through a multibyte UTF-8 character, desynchronizing the
     // framing.
     let mut buf: Vec<u8> = Vec::new();
+    // true while discarding the tail of an oversized line (the error was
+    // already sent; framing resynchronizes at the next newline)
+    let mut dropping = false;
     loop {
         if stop.load(Ordering::SeqCst) {
             return Ok(());
+        }
+        if let Some(f) = faults {
+            if f.is_down() {
+                return Ok(()); // killed shard: sever mid-stream
+            }
         }
         match reader.read_until(b'\n', &mut buf) {
             Ok(0) => return Ok(()), // EOF: client went away
@@ -97,36 +267,76 @@ fn handle_conn(stream: TcpStream, coord: &Coordinator, stop: &AtomicBool) -> Res
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                // partial read: bound memory for a line that never ends
+                if buf.len() > max_line && !dropping {
+                    write_json(
+                        &mut writer,
+                        &handler.error(&format!("request line exceeds {max_line} bytes")),
+                    )?;
+                    dropping = true;
+                }
+                if dropping {
+                    buf.clear();
+                }
                 continue;
             }
             Err(e) => return Err(Error::Io(e)),
+        }
+        let ended = buf.last() == Some(&b'\n');
+        if dropping {
+            // still inside the oversized line: discard through its newline
+            buf.clear();
+            if ended {
+                dropping = false;
+            }
+            continue;
+        }
+        if buf.len() > max_line {
+            write_json(
+                &mut writer,
+                &handler.error(&format!("request line exceeds {max_line} bytes")),
+            )?;
+            buf.clear();
+            continue;
         }
         let line = String::from_utf8_lossy(&buf);
         if line.trim().is_empty() {
             buf.clear();
             continue;
         }
+        if let Some(f) = faults {
+            if f.armed() {
+                let ms = f.delay_ms();
+                if ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                if f.is_down() || f.take_drop() {
+                    return Ok(()); // sever instead of answering
+                }
+                if f.take_corrupt() {
+                    writeln!(writer, "{{\"ok\":tr%garbage").map_err(Error::Io)?;
+                    writer.flush().map_err(Error::Io)?;
+                    buf.clear();
+                    continue;
+                }
+            }
+        }
         let reply = match Json::parse(&line) {
-            Err(e) => Response::Error { message: format!("bad json: {e}") },
+            Err(e) => handler.error(&format!("bad json: {e}")),
             Ok(j) => {
                 if j.get("op").and_then(|o| o.as_str().ok()) == Some("shutdown") {
                     stop.store(true, Ordering::SeqCst);
-                    let msg = Response::Stats { text: "shutting down".into() };
-                    writeln!(writer, "{}", msg.to_json().to_string()).map_err(Error::Io)?;
-                    writer.flush().map_err(Error::Io)?;
+                    let ack = Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("stats", Json::str("shutting down")),
+                    ]);
+                    write_json(&mut writer, &ack)?;
                     return Ok(());
                 }
-                match Request::from_json(&j) {
-                    Err(e) => Response::Error { message: e.to_string() },
-                    Ok(req) => match coord.call(req) {
-                        Ok(resp) => resp,
-                        Err(e) => Response::Error { message: e.to_string() },
-                    },
-                }
+                handler.respond(&j)
             }
         };
-        writeln!(writer, "{}", reply.to_json().to_string()).map_err(Error::Io)?;
-        writer.flush().map_err(Error::Io)?;
+        write_json(&mut writer, &reply)?;
         buf.clear();
     }
 }
@@ -141,18 +351,60 @@ impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| Error::serve(format!("cannot connect to {addr}: {e}")))?;
+        Self::from_stream(stream)
+    }
+
+    /// [`connect`](Self::connect) with a bounded TCP connect timeout
+    /// (tries each resolved address in turn).
+    pub fn connect_timeout(addr: &str, timeout: std::time::Duration) -> Result<Client> {
+        use std::net::ToSocketAddrs;
+        let addrs = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::serve(format!("cannot resolve {addr}: {e}")))?;
+        let mut last: Option<std::io::Error> = None;
+        for a in addrs {
+            match TcpStream::connect_timeout(&a, timeout) {
+                Ok(s) => return Self::from_stream(s),
+                Err(e) => last = Some(e),
+            }
+        }
+        let why = last.map(|e| e.to_string()).unwrap_or_else(|| "no addresses resolved".into());
+        Err(Error::serve(format!("cannot connect to {addr}: {why}")))
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client> {
         stream.set_nodelay(true).ok();
         let reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
         Ok(Client { reader, writer: BufWriter::new(stream) })
     }
 
+    /// Read/write timeouts for subsequent calls (`None` = block forever).
+    pub fn set_io_timeout(&mut self, timeout: Option<std::time::Duration>) -> Result<()> {
+        let s = self.reader.get_ref();
+        s.set_read_timeout(timeout).map_err(Error::Io)?;
+        s.set_write_timeout(timeout).map_err(Error::Io)
+    }
+
     /// Send one request and wait for the response.
     pub fn call(&mut self, req: &Request) -> Result<Response> {
-        writeln!(self.writer, "{}", req.to_json().to_string()).map_err(Error::Io)?;
+        let line = self.call_line(&req.to_json().to_string())?;
+        Response::from_json(&Json::parse(&line)?)
+    }
+
+    /// Send one raw JSON line and read one reply line (shared by the
+    /// typed coordinator calls and the remote shard protocol).
+    pub fn call_line(&mut self, request_line: &str) -> Result<String> {
+        writeln!(self.writer, "{request_line}").map_err(Error::Io)?;
         self.writer.flush().map_err(Error::Io)?;
         let mut line = String::new();
-        self.reader.read_line(&mut line).map_err(Error::Io)?;
-        Response::from_json(&Json::parse(&line)?)
+        let n = self.reader.read_line(&mut line).map_err(Error::Io)?;
+        if n == 0 {
+            // read_line's Ok(0) is a silent EOF — surface it as an
+            // explicit failure so callers retry/reconnect instead of
+            // parsing an empty string
+            return Err(Error::serve("server closed connection"));
+        }
+        Ok(line)
     }
 
     /// Ask the server to shut down.
@@ -173,7 +425,7 @@ mod tests {
     use crate::data;
     use crate::util::rng::Pcg64;
 
-    fn spawn_server() -> (String, std::thread::JoinHandle<()>, Arc<Engine>) {
+    fn tiny_cfg() -> Config {
         let mut cfg = Config::preset("tiny").unwrap();
         cfg.data.n = 1500;
         cfg.data.d = 8;
@@ -182,14 +434,28 @@ mod tests {
         cfg.index.n_probe = 6;
         cfg.index.kmeans_iters = 3;
         cfg.index.train_sample = 800;
+        cfg
+    }
+
+    fn spawn_server_with(
+        serve: Option<ServeConfig>,
+    ) -> (String, std::thread::JoinHandle<()>, Arc<Engine>) {
+        let cfg = tiny_cfg();
         let engine = Arc::new(Engine::from_config(&cfg, None).unwrap());
         let coord = Arc::new(Coordinator::start(engine.clone(), 2, 16, 9));
-        let server = Server::bind(coord, "127.0.0.1:0").unwrap();
+        let server = match serve {
+            Some(s) => Server::bind_with(coord, "127.0.0.1:0", &s).unwrap(),
+            None => Server::bind(coord, "127.0.0.1:0").unwrap(),
+        };
         let addr = server.local_addr().unwrap();
         let h = std::thread::spawn(move || {
             server.serve().unwrap();
         });
         (addr, h, engine)
+    }
+
+    fn spawn_server() -> (String, std::thread::JoinHandle<()>, Arc<Engine>) {
+        spawn_server_with(None)
     }
 
     #[test]
@@ -207,9 +473,12 @@ mod tests {
             Response::LogPartition { log_z, .. } => assert!(log_z.is_finite()),
             other => panic!("{other:?}"),
         }
-        // malformed line → error response, connection stays usable
+        // stats now carry the front-end's queue/shed counters
         match client.call(&Request::Stats).unwrap() {
-            Response::Stats { .. } => {}
+            Response::Stats { text } => {
+                assert!(text.contains("queue_depth="), "{text}");
+                assert!(text.contains("shed="), "{text}");
+            }
             other => panic!("{other:?}"),
         }
         client.shutdown_server().unwrap();
@@ -254,5 +523,65 @@ mod tests {
         writeln!(writer, "{}", r#"{"op":"shutdown"}"#).unwrap();
         writer.flush().unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_line_rejected_then_resynchronized() {
+        let mut serve = Config::default().serve;
+        serve.max_line_bytes = 1024;
+        let (addr, handle, _engine) = spawn_server_with(Some(serve));
+        let mut client = Client::connect(&addr).unwrap();
+        // a 64 KiB garbage line must get an error, not unbounded buffering
+        let big = "x".repeat(64 * 1024);
+        let reply = client.call_line(&big).unwrap();
+        assert!(reply.contains("exceeds"), "{reply}");
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        // framing resynchronizes at the newline: the next request works
+        match client.call(&Request::Stats).unwrap() {
+            Response::Stats { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        client.shutdown_server().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn connection_cap_sheds_with_overloaded() {
+        let mut serve = Config::default().serve;
+        serve.max_conns = 1;
+        let (addr, handle, _engine) = spawn_server_with(Some(serve));
+        let mut first = Client::connect(&addr).unwrap();
+        // a completed call guarantees the first connection is registered
+        match first.call(&Request::Stats).unwrap() {
+            Response::Stats { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // second connection is over the cap → explicit overloaded reply
+        let mut second = Client::connect(&addr).unwrap();
+        match second.call(&Request::Stats) {
+            Ok(Response::Error { message }) => assert!(message.contains("overloaded"), "{message}"),
+            other => panic!("expected overloaded error, got {other:?}"),
+        }
+        drop(second);
+        first.shutdown_server().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn client_reports_server_close_as_clear_error() {
+        // a server that hangs up mid-call must surface as an explicit
+        // "closed connection" error, not an empty-string parse failure
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap(); // swallow the request, hang up
+        });
+        let mut client = Client::connect(&addr).unwrap();
+        let err = client.call(&Request::Stats).unwrap_err();
+        h.join().unwrap();
+        assert!(err.to_string().contains("server closed connection"), "{err}");
     }
 }

@@ -47,6 +47,26 @@ pub fn merge_log_partials(partials: &[f64]) -> f64 {
     crate::linalg::logsumexp(partials)
 }
 
+/// Log-sum-exp merge of per-shard `(log Ẑ_s, work)` partials with the
+/// coarse-ranking cost accounted once. Free function so the remote
+/// coordinator (which knows `coarse_cost` from the shard handshake but
+/// holds no local index) merges wire partials bit-identically to the
+/// in-process path.
+pub fn merge_partials_with(
+    coarse_cost: usize,
+    parts: Vec<(f64, EstimateWork)>,
+) -> PartitionEstimate {
+    let mut partials = Vec::with_capacity(parts.len());
+    let mut work = EstimateWork { scanned: coarse_cost, k: 0, l: 0 };
+    for (log_z_s, w) in parts {
+        partials.push(log_z_s);
+        work.scanned += w.scanned;
+        work.k += w.k;
+        work.l += w.l;
+    }
+    PartitionEstimate { log_z: merge_log_partials(&partials), work }
+}
+
 /// Algorithm 3 over a [`ShardedIndex`]: per-shard head+tail estimates in
 /// parallel, log-sum-exp merge.
 pub struct ShardedPartitionEstimator {
@@ -137,15 +157,48 @@ impl ShardedPartitionEstimator {
     /// Log-sum-exp merge of per-shard `(log Ẑ_s, work)` partials, with
     /// the centroid-ranking work accounted once, like the sharded top_k.
     fn merge_partials(&self, parts: Vec<(f64, EstimateWork)>) -> PartitionEstimate {
-        let mut partials = Vec::with_capacity(parts.len());
-        let mut work = EstimateWork { scanned: self.index.coarse_cost(), k: 0, l: 0 };
-        for (log_z_s, w) in parts {
-            partials.push(log_z_s);
-            work.scanned += w.scanned;
-            work.k += w.k;
-            work.l += w.l;
+        merge_partials_with(self.index.coarse_cost(), parts)
+    }
+
+    /// One shard's partial at an explicit round — the unit a remote shard
+    /// server exports over the wire. Ranks the shared coarse probe order
+    /// and apportions the global `(k, l)` budget internally, so the
+    /// result is bit-identical to the closure the in-process fan-out
+    /// would run for shard `s`.
+    pub fn shard_partial_at(&self, s: usize, q: &[f32], round: u64) -> (f64, EstimateWork) {
+        let order = self.index.coarse_order(q);
+        let k_split = apportion(self.k, self.index.map());
+        let l_split = apportion(self.l, self.index.map());
+        self.shard_partial(s, q, round, k_split[s], l_split[s], order.as_deref())
+    }
+
+    /// Batched per-shard partials: query `i` at round `r0 + i`, coarse
+    /// orders ranked once for the whole batch — matches the per-shard
+    /// closure of [`estimate_batch_at`](Self::estimate_batch_at).
+    pub fn shard_partials_batch_at(
+        &self,
+        s: usize,
+        qs: &[&[f32]],
+        r0: u64,
+    ) -> Vec<(f64, EstimateWork)> {
+        if qs.is_empty() {
+            return Vec::new();
         }
-        PartitionEstimate { log_z: merge_log_partials(&partials), work }
+        if qs.len() == 1 {
+            // single-query path ranks its own coarse order, exactly like
+            // the engine's unbatched route through estimate_at
+            return vec![self.shard_partial_at(s, qs[0], r0)];
+        }
+        let orders = self.index.coarse_orders_batch(qs);
+        let k_split = apportion(self.k, self.index.map());
+        let l_split = apportion(self.l, self.index.map());
+        qs.iter()
+            .enumerate()
+            .map(|(i, q)| {
+                let order = orders.as_ref().map(|o| o[i].as_slice());
+                self.shard_partial(s, q, r0 + i as u64, k_split[s], l_split[s], order)
+            })
+            .collect()
     }
 
     /// One shard's Algorithm 3: local top-k head (scanning the shared

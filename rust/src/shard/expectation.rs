@@ -51,11 +51,52 @@ const SALT_ALG4_TAIL: u64 = 0xA1_94;
 
 /// One shard's Algorithm 4 fragment: `log Ẑ_s`, the shard-normalized
 /// feature mean `μ̂_s` (f64 so the merge keeps full precision), and the
-/// work it cost.
-struct ShardFragment {
-    log_z: f64,
-    mean: Vec<f64>,
-    work: EstimateWork,
+/// work it cost. Public (with public fields) because it is also the unit
+/// a remote shard server ships over the wire.
+#[derive(Clone, Debug)]
+pub struct ShardFragment {
+    pub log_z: f64,
+    pub mean: Vec<f64>,
+    pub work: EstimateWork,
+}
+
+/// Weighted log-sum-exp merge: `log Ẑ = LSE_s(log Ẑ_s)` and
+/// `μ̂ = Σ_s Ẑ_s μ̂_s / Σ_s Ẑ_s`, carried relative to the max partial so
+/// no shard's weight can overflow. Free function so the remote
+/// coordinator merges wire fragments bit-identically to the in-process
+/// path (`coarse_cost` comes from the shard handshake there).
+pub fn merge_shard_fragments(
+    d: usize,
+    coarse_cost: usize,
+    frags: Vec<ShardFragment>,
+) -> FeatureExpectation {
+    let mut work = EstimateWork { scanned: coarse_cost, k: 0, l: 0 };
+    let mut m = f64::NEG_INFINITY;
+    for f in &frags {
+        m = m.max(f.log_z);
+        work.scanned += f.work.scanned;
+        work.k += f.work.k;
+        work.l += f.work.l;
+    }
+    if !m.is_finite() {
+        // only reachable for an all-empty partition, which build paths
+        // never construct — stay well-formed regardless
+        return FeatureExpectation { mean: vec![0f32; d], log_z: f64::NEG_INFINITY, work };
+    }
+    let mut z = 0f64;
+    let mut wsum = vec![0f64; d];
+    for f in &frags {
+        if f.log_z == f64::NEG_INFINITY {
+            continue;
+        }
+        let w = (f.log_z - m).exp();
+        z += w;
+        for (acc, &x) in wsum.iter_mut().zip(&f.mean) {
+            *acc += w * x;
+        }
+    }
+    let mean: Vec<f32> = wsum.iter().map(|&x| (x / z) as f32).collect();
+    FeatureExpectation { mean, log_z: m + z.ln(), work }
 }
 
 /// Algorithm 4 over a [`ShardedIndex`]: per-shard head+tail fragments in
@@ -223,39 +264,53 @@ impl ShardedExpectationEstimator {
         }
     }
 
-    /// Weighted log-sum-exp merge: `log Ẑ = LSE_s(log Ẑ_s)` and
-    /// `μ̂ = Σ_s Ẑ_s μ̂_s / Σ_s Ẑ_s`, carried relative to the max partial
-    /// so no shard's weight can overflow. Centroid-ranking work is
-    /// accounted once, like the sharded top_k.
+    /// Weighted log-sum-exp merge with the centroid-ranking work
+    /// accounted once, like the sharded top_k — delegates to
+    /// [`merge_shard_fragments`].
     fn merge_fragments(&self, frags: Vec<ShardFragment>) -> FeatureExpectation {
-        let d = self.ds.d;
-        let mut work = EstimateWork { scanned: self.index.coarse_cost(), k: 0, l: 0 };
-        let mut m = f64::NEG_INFINITY;
-        for f in &frags {
-            m = m.max(f.log_z);
-            work.scanned += f.work.scanned;
-            work.k += f.work.k;
-            work.l += f.work.l;
+        merge_shard_fragments(self.ds.d, self.index.coarse_cost(), frags)
+    }
+
+    /// One shard's fragment at an explicit round — the unit a remote
+    /// shard server exports over the wire. Ranks the shared coarse probe
+    /// order and apportions the global `(k, l)` budget internally, so the
+    /// result is bit-identical to the closure the in-process fan-out
+    /// would run for shard `s`.
+    pub fn shard_fragment_at(&self, s: usize, q: &[f32], round: u64) -> ShardFragment {
+        let order = self.index.coarse_order(q);
+        let k_split = apportion(self.k, self.index.map());
+        let l_split = apportion(self.l, self.index.map());
+        self.shard_fragment(s, q, round, k_split[s], l_split[s], order.as_deref())
+    }
+
+    /// Batched per-shard fragments: query `i` at round `r0 + i`, coarse
+    /// orders ranked once for the whole batch — matches the per-shard
+    /// closure of
+    /// [`expect_features_batch_at`](Self::expect_features_batch_at).
+    pub fn shard_fragments_batch_at(
+        &self,
+        s: usize,
+        qs: &[&[f32]],
+        r0: u64,
+    ) -> Vec<ShardFragment> {
+        if qs.is_empty() {
+            return Vec::new();
         }
-        if !m.is_finite() {
-            // only reachable for an all-empty partition, which build
-            // paths never construct — stay well-formed regardless
-            return FeatureExpectation { mean: vec![0f32; d], log_z: f64::NEG_INFINITY, work };
+        if qs.len() == 1 {
+            // single-query path ranks its own coarse order, exactly like
+            // the engine's unbatched route through expect_features_at
+            return vec![self.shard_fragment_at(s, qs[0], r0)];
         }
-        let mut z = 0f64;
-        let mut wsum = vec![0f64; d];
-        for f in &frags {
-            if f.log_z == f64::NEG_INFINITY {
-                continue;
-            }
-            let w = (f.log_z - m).exp();
-            z += w;
-            for (acc, &x) in wsum.iter_mut().zip(&f.mean) {
-                *acc += w * x;
-            }
-        }
-        let mean: Vec<f32> = wsum.iter().map(|&x| (x / z) as f32).collect();
-        FeatureExpectation { mean, log_z: m + z.ln(), work }
+        let orders = self.index.coarse_orders_batch(qs);
+        let k_split = apportion(self.k, self.index.map());
+        let l_split = apportion(self.l, self.index.map());
+        qs.iter()
+            .enumerate()
+            .map(|(i, q)| {
+                let order = orders.as_ref().map(|o| o[i].as_slice());
+                self.shard_fragment(s, q, r0 + i as u64, k_split[s], l_split[s], order)
+            })
+            .collect()
     }
 
     /// Score global ids via the shared [`crate::scorer::score_ids`]

@@ -273,6 +273,28 @@ impl ShardedIndex {
             .as_ref()
             .map(|cp| ivf::rank_clusters_batch(&cp.km, qs, cp.n_probe.clamp(1, cp.km.c)))
     }
+
+    /// One shard's answers to a whole query batch, in **shard-local** id
+    /// space — the per-shard closure of
+    /// [`top_k_batch`](MipsIndex::top_k_batch) as a standalone entry
+    /// point (what a remote shard server runs). Centroid ranking is
+    /// shared per batch; `scanned` counts scored rows only, matching the
+    /// in-process fan-out exactly.
+    pub fn shard_top_k_batch(&self, s: usize, qs: &[&[f32]], k: usize) -> Vec<TopKResult> {
+        if qs.len() <= 1 {
+            return qs
+                .iter()
+                .map(|q| {
+                    let order = self.coarse_order(q);
+                    self.shard_top_k_local_in(s, q, k, order.as_deref())
+                })
+                .collect();
+        }
+        match (self.coarse_orders_batch(qs), &self.shards[s]) {
+            (Some(ords), SubIndex::Ivf(idx)) => idx.scan_clusters_batch(qs, k, &ords),
+            (_, sub) => sub.as_dyn().top_k_batch(qs, k),
+        }
+    }
 }
 
 impl MipsIndex for ShardedIndex {

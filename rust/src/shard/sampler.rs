@@ -28,7 +28,7 @@
 //! softmax samples when `S_min + c` bounds the tail), because keying
 //! streams by id only re-indexes which i.i.d. Gumbel goes where.
 
-use super::ShardedIndex;
+use super::{ShardMap, ShardedIndex};
 use crate::data::Dataset;
 use crate::gumbel;
 use crate::mips::{MipsIndex, TopKResult};
@@ -43,6 +43,114 @@ use std::sync::Arc;
 const SALT_TOP: u64 = 0x517;
 /// Stream-salt for tail blocks (`idx` = block index).
 const SALT_TAIL: u64 = 0x7A11;
+
+/// Build the per-θ session state from a merged top set. Free function so
+/// the remote coordinator (which holds a [`ShardMap`] but no local
+/// [`ShardedIndex`]) can run the same construction bit-identically.
+pub fn build_session(map: &ShardMap, n: usize, top: TopKResult) -> ShardedSession {
+    let ns = map.shards();
+    let mut by_shard: Vec<Vec<(u32, f64)>> = vec![Vec::new(); ns];
+    for it in &top.items {
+        let (s, _) = map.to_local(it.id);
+        by_shard[s].push((it.id, it.score as f64));
+    }
+    let mut s_ids: Vec<u32> = top.items.iter().map(|s| s.id).collect();
+    s_ids.sort_unstable();
+    let block = (n as f64).sqrt().ceil().max(1.0) as usize;
+    let nblocks = n.div_ceil(block);
+    let mut live: Vec<u32> =
+        (0..nblocks).map(|b| (((b + 1) * block).min(n) - b * block) as u32).collect();
+    for &id in &s_ids {
+        live[id as usize / block] -= 1;
+    }
+    ShardedSession { top, by_shard, s_ids, block, live }
+}
+
+/// Per-shard perturbed maxima over the top set `S`, merged by argmax:
+/// `argmax_{i∈S}(y_i + G_{r,i})` with each `G_{r,i}` from its id-keyed
+/// frozen stream. Returns `(best_id, best_value)`.
+pub fn perturbed_argmax(sess: &ShardedSession, seed: u64, round: u64) -> (u32, f64) {
+    debug_assert!(!sess.top.items.is_empty());
+    let mut best_id = sess.top.items[0].id;
+    let mut best = f64::NEG_INFINITY;
+    for part in &sess.by_shard {
+        // shard max M_s = max_{i ∈ S ∩ X_s} (y_i + G_{r,i})
+        let mut shard_best_id = 0u32;
+        let mut shard_best = f64::NEG_INFINITY;
+        for &(id, y) in part {
+            let g = Pcg64::keyed(seed, round, SALT_TOP, id as u64).gumbel();
+            let v = y + g;
+            if v > shard_best {
+                shard_best = v;
+                shard_best_id = id;
+            }
+        }
+        if shard_best > best {
+            best = shard_best;
+            best_id = shard_best_id;
+        }
+    }
+    (best_id, best)
+}
+
+/// Materialize the blockwise lazy tail above cutoff `b`: per-block keyed
+/// streams draw `m_β ~ Binomial(live_β, 1 − F(b))`, uniform non-top
+/// positions, and truncated Gumbels. Returns `(tail_ids, tail_gumbels)`
+/// in matched order.
+pub fn lazy_tail_draws(
+    sess: &ShardedSession,
+    n: usize,
+    seed: u64,
+    round: u64,
+    b: f64,
+) -> (Vec<u32>, Vec<f64>) {
+    let p = gumbel::tail_prob(b);
+    let mut tail_ids: Vec<u32> = Vec::new();
+    let mut tail_gumbels: Vec<f64> = Vec::new();
+    for (blk, &live) in sess.live.iter().enumerate() {
+        if live == 0 {
+            continue;
+        }
+        let lo = blk * sess.block;
+        let hi = ((blk + 1) * sess.block).min(n);
+        let mut rng = Pcg64::keyed(seed, round, SALT_TAIL, blk as u64);
+        let mb = rng.binomial(live as u64, p) as usize;
+        if mb == 0 {
+            continue;
+        }
+        // block-local exclusion: top ids inside [lo, hi), rebased
+        let a = sess.s_ids.partition_point(|&x| (x as usize) < lo);
+        let z = sess.s_ids.partition_point(|&x| (x as usize) < hi);
+        let excl: FxHashSet<u32> = sess.s_ids[a..z].iter().map(|&x| x - lo as u32).collect();
+        let picks = rng.distinct_excluding((hi - lo) as u64, mb, &excl);
+        for pick in picks {
+            tail_ids.push(lo as u32 + pick);
+        }
+        for _ in 0..mb {
+            tail_gumbels.push(rng.gumbel_above(b));
+        }
+    }
+    (tail_ids, tail_gumbels)
+}
+
+/// Fold scored tail candidates into the running argmax (tail-id order, as
+/// the in-process sampler does). Returns the updated `(best_id, best)`.
+pub fn fold_tail(
+    mut best_id: u32,
+    mut best: f64,
+    tail_ids: &[u32],
+    tail_gumbels: &[f64],
+    scores: &[f32],
+) -> (u32, f64) {
+    for ((&id, &g), &y) in tail_ids.iter().zip(tail_gumbels).zip(scores) {
+        let v = y as f64 + g;
+        if v > best {
+            best = v;
+            best_id = id;
+        }
+    }
+    (best_id, best)
+}
 
 /// Algorithm 1 over a [`ShardedIndex`] with id-keyed frozen Gumbel
 /// streams: per-shard perturbed maxima merged by argmax, blockwise lazy
@@ -88,13 +196,6 @@ impl ShardedGumbelSampler {
         ShardedGumbelSampler { ds, index, backend, k, gap_c, seed, round: AtomicU64::new(0) }
     }
 
-    /// A generator keyed by `(seed, round, salt, idx)` — the shared
-    /// [`Pcg64::keyed`] derivation every sharded subsystem uses; distinct
-    /// keys give independent streams.
-    fn keyed(&self, round: u64, salt: u64, idx: u64) -> Pcg64 {
-        Pcg64::keyed(self.seed, round, salt, idx)
-    }
-
     /// Open a per-θ session: one sharded MIPS retrieval, reused across
     /// every draw for this θ (the paper's "access the MIPS structure once
     /// per parameter value").
@@ -106,24 +207,7 @@ impl ShardedGumbelSampler {
     /// Build the per-θ session state from an already-retrieved merged top
     /// set (the batch path retrieves all tops in one fan-out first).
     pub fn session_from_top(&self, top: TopKResult) -> ShardedSession {
-        let ns = self.index.n_shards();
-        let mut by_shard: Vec<Vec<(u32, f64)>> = vec![Vec::new(); ns];
-        for it in &top.items {
-            let (s, _) = self.index.map().to_local(it.id);
-            by_shard[s].push((it.id, it.score as f64));
-        }
-        let mut s_ids: Vec<u32> = top.items.iter().map(|s| s.id).collect();
-        s_ids.sort_unstable();
-        let n = self.ds.n;
-        let block = (n as f64).sqrt().ceil().max(1.0) as usize;
-        let nblocks = n.div_ceil(block);
-        let mut live: Vec<u32> = (0..nblocks)
-            .map(|b| (((b + 1) * block).min(n) - b * block) as u32)
-            .collect();
-        for &id in &s_ids {
-            live[id as usize / block] -= 1;
-        }
-        ShardedSession { top, by_shard, s_ids, block, live }
+        build_session(self.index.map(), self.ds.n, top)
     }
 
     /// Batched sampling: draw `counts[i]` samples for `qs[i]`. ONE
@@ -148,68 +232,17 @@ impl ShardedGumbelSampler {
     /// coordinate of the frozen streams; distinct rounds are independent
     /// draws).
     pub fn sample_at(&self, sess: &ShardedSession, q: &[f32], round: u64) -> SampleOutcome {
-        debug_assert!(!sess.top.items.is_empty());
         // ---- per-shard perturbed maxima over S, merged by argmax --------
-        let mut best_id = sess.top.items[0].id;
-        let mut best = f64::NEG_INFINITY;
-        for part in &sess.by_shard {
-            // shard max M_s = max_{i ∈ S ∩ X_s} (y_i + G_{r,i})
-            let mut shard_best_id = 0u32;
-            let mut shard_best = f64::NEG_INFINITY;
-            for &(id, y) in part {
-                let g = self.keyed(round, SALT_TOP, id as u64).gumbel();
-                let v = y + g;
-                if v > shard_best {
-                    shard_best = v;
-                    shard_best_id = id;
-                }
-            }
-            if shard_best > best {
-                best = shard_best;
-                best_id = shard_best_id;
-            }
-        }
+        let (mut best_id, best) = perturbed_argmax(sess, self.seed, round);
         let b = best - sess.top.s_min() - self.gap_c;
 
         // ---- blockwise lazy tail ----------------------------------------
-        let p = gumbel::tail_prob(b);
-        let n = self.ds.n;
-        let mut tail_ids: Vec<u32> = Vec::new();
-        let mut tail_gumbels: Vec<f64> = Vec::new();
-        for (blk, &live) in sess.live.iter().enumerate() {
-            if live == 0 {
-                continue;
-            }
-            let lo = blk * sess.block;
-            let hi = ((blk + 1) * sess.block).min(n);
-            let mut rng = self.keyed(round, SALT_TAIL, blk as u64);
-            let mb = rng.binomial(live as u64, p) as usize;
-            if mb == 0 {
-                continue;
-            }
-            // block-local exclusion: top ids inside [lo, hi), rebased
-            let a = sess.s_ids.partition_point(|&x| (x as usize) < lo);
-            let z = sess.s_ids.partition_point(|&x| (x as usize) < hi);
-            let excl: FxHashSet<u32> =
-                sess.s_ids[a..z].iter().map(|&x| x - lo as u32).collect();
-            let picks = rng.distinct_excluding((hi - lo) as u64, mb, &excl);
-            for pick in picks {
-                tail_ids.push(lo as u32 + pick);
-            }
-            for _ in 0..mb {
-                tail_gumbels.push(rng.gumbel_above(b));
-            }
-        }
+        let (tail_ids, tail_gumbels) =
+            lazy_tail_draws(sess, self.ds.n, self.seed, round, b);
         let m = tail_ids.len();
         if m > 0 {
             let scores = self.score_ids(&tail_ids, q);
-            for ((&id, &g), &y) in tail_ids.iter().zip(&tail_gumbels).zip(&scores) {
-                let v = y as f64 + g;
-                if v > best {
-                    best = v;
-                    best_id = id;
-                }
-            }
+            (best_id, _) = fold_tail(best_id, best, &tail_ids, &tail_gumbels, &scores);
         }
         SampleOutcome {
             id: best_id,

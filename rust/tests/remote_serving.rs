@@ -1,0 +1,341 @@
+//! Networked shard serving: cross-process conformance and fault drills.
+//!
+//! * with no faults injected, a coordinator fanning out to shard servers
+//!   over TCP answers **bit-identically** to the in-process sharded
+//!   engine built from the same config (N ∈ {1, 2, 4} shards, singles
+//!   and batches);
+//! * transient faults (severed connections, corrupted frames) are
+//!   absorbed by the client's bounded retry and never reach the caller;
+//! * a killed shard degrades service (`degraded: true`, `shards_ok`
+//!   `s/N`, merge renormalized over survivors) instead of failing it,
+//!   skips the dead shard without burning the deadline, and rejoins
+//!   automatically once the heartbeat sees it again;
+//! * queue saturation sheds with an explicit `overloaded` error instead
+//!   of piling up connection threads.
+
+use gmips::config::{Config, IndexKind};
+use gmips::coordinator::{Coordinator, Engine, Request, Response};
+use gmips::data;
+use gmips::dispatch::{ExpectationDispatch, PartitionDispatch, SamplerDispatch};
+use gmips::mips::MipsIndex;
+use gmips::remote::{FaultPlan, ShardEngine, ShardHandler, ShardHealth};
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::server::{Client, Server};
+use gmips::shard::ShardedIndex;
+use gmips::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+fn remote_cfg(shards: usize) -> Config {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.data.n = 1800;
+    cfg.data.d = 10;
+    cfg.index.kind = IndexKind::Brute;
+    cfg.index.shards = shards;
+    cfg.remote.deadline_ms = 2000;
+    cfg.remote.connect_timeout_ms = 250;
+    cfg.remote.retries = 2;
+    cfg.remote.backoff_ms = 5;
+    cfg.remote.heartbeat_ms = 0; // tests opt in explicitly
+    cfg.remote.down_after = 1;
+    cfg
+}
+
+/// One in-process "fleet" of shard servers, each a full [`ShardEngine`]
+/// behind the JSON-lines server with its own fault plan.
+struct ShardFleet {
+    addrs: Vec<String>,
+    stops: Vec<Arc<AtomicBool>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    plans: Vec<Arc<FaultPlan>>,
+}
+
+impl ShardFleet {
+    fn spawn(cfg: &Config) -> ShardFleet {
+        let mut fleet = ShardFleet {
+            addrs: Vec::new(),
+            stops: Vec::new(),
+            handles: Vec::new(),
+            plans: Vec::new(),
+        };
+        for s in 0..cfg.index.shards.max(1) {
+            let engine = Arc::new(ShardEngine::from_config(cfg, s, None).unwrap());
+            let plan = Arc::new(FaultPlan::new());
+            let server = Server::bind_handler(
+                Arc::new(ShardHandler::new(engine)),
+                "127.0.0.1:0",
+                &cfg.serve,
+            )
+            .unwrap()
+            .with_faults(plan.clone());
+            fleet.addrs.push(server.local_addr().unwrap());
+            fleet.stops.push(server.stop_flag());
+            fleet.plans.push(plan);
+            fleet.handles.push(std::thread::spawn(move || {
+                let _ = server.serve();
+            }));
+        }
+        fleet
+    }
+
+    fn addr_csv(&self) -> String {
+        self.addrs.join(",")
+    }
+
+    fn shutdown(self) {
+        for s in &self.stops {
+            s.store(true, Ordering::SeqCst);
+        }
+        for h in self.handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// The in-process reference: the same sharded stack the shard servers
+/// run, assembled locally (works for 1 shard too, where `from_config`
+/// would build the monolithic stack instead).
+fn local_reference(cfg: &Config) -> Engine {
+    let ds = Arc::new(data::load_or_generate(&cfg.data));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let index = Arc::new(ShardedIndex::build(&ds, &cfg.index, backend.clone()).unwrap());
+    Engine::from_parts(cfg.clone(), ds, index, backend)
+}
+
+#[test]
+fn remote_matches_in_process_bit_for_bit() {
+    for shards in [1usize, 2, 4] {
+        let mut cfg = remote_cfg(shards);
+        let fleet = ShardFleet::spawn(&cfg);
+        cfg.remote.addrs = fleet.addr_csv();
+        cfg.validate().unwrap();
+        let remote = Engine::from_remote(&cfg, None).unwrap();
+        let local = local_reference(&cfg);
+        let mut rng_r = Pcg64::new(7);
+        let mut rng_l = Pcg64::new(7);
+        let mut rng_q = Pcg64::new(11);
+
+        // singles: every op, several θ — responses must be identical
+        for qi in 0..3 {
+            let theta = data::random_theta(&local.ds, 0.05, &mut rng_q);
+            for req in [
+                Request::Sample { theta: theta.clone(), count: 3 },
+                Request::TopK { theta: theta.clone(), k: 9 },
+                Request::LogPartition { theta: theta.clone() },
+                Request::ExpectFeatures { theta: theta.clone() },
+            ] {
+                let a = remote.handle(&req, &mut rng_r);
+                let b = local.handle(&req, &mut rng_l);
+                assert_eq!(a, b, "shards={shards} q={qi} req={req:?}");
+            }
+        }
+
+        // batches: grouped fan-outs must replay the same rounds
+        let thetas: Vec<Vec<f32>> =
+            (0..3).map(|_| data::random_theta(&local.ds, 0.05, &mut rng_q)).collect();
+        let reqs = vec![
+            Request::Sample { theta: thetas[0].clone(), count: 2 },
+            Request::TopK { theta: thetas[1].clone(), k: 5 },
+            Request::LogPartition { theta: thetas[2].clone() },
+            Request::Sample { theta: thetas[1].clone(), count: 4 },
+            Request::ExpectFeatures { theta: thetas[0].clone() },
+            Request::TopK { theta: thetas[2].clone(), k: 5 },
+        ];
+        let ra = remote.handle_batch(&reqs, &mut rng_r);
+        let rb = local.handle_batch(&reqs, &mut rng_l);
+        assert_eq!(ra, rb, "shards={shards} batch");
+
+        fleet.shutdown();
+    }
+}
+
+#[test]
+fn engine_routes_to_the_remote_stack() {
+    let mut cfg = remote_cfg(2);
+    let fleet = ShardFleet::spawn(&cfg);
+    cfg.remote.addrs = fleet.addr_csv();
+    let remote = Engine::from_remote(&cfg, None).unwrap();
+    assert!(matches!(remote.sampler, SamplerDispatch::Remote(_)));
+    assert!(matches!(remote.partition, PartitionDispatch::Remote(_)));
+    assert!(matches!(remote.expectation, ExpectationDispatch::Remote(_)));
+    assert_eq!(remote.index.name(), "remote");
+    let mut rng = Pcg64::new(1);
+    match remote.handle(&Request::Stats, &mut rng) {
+        Response::Stats { text } => {
+            assert!(text.contains("remote[2 shards"), "{text}");
+            assert!(text.contains("sampler=remote-gumbel"), "{text}");
+            assert!(text.contains("partition=remote-alg3"), "{text}");
+            assert!(text.contains("expectation=remote-alg4"), "{text}");
+        }
+        other => panic!("{other:?}"),
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn transient_faults_are_retried_not_degraded() {
+    let mut cfg = remote_cfg(2);
+    let fleet = ShardFleet::spawn(&cfg);
+    cfg.remote.addrs = fleet.addr_csv();
+    let remote = Engine::from_remote(&cfg, None).unwrap();
+    let mut rng = Pcg64::new(3);
+    let theta = data::random_theta(&remote.ds, 0.05, &mut rng);
+
+    // baseline answer with no faults
+    let want = remote.handle(&Request::LogPartition { theta: theta.clone() }, &mut rng);
+    assert!(matches!(want, Response::LogPartition { .. }), "{want:?}");
+
+    // one severed connection: the client reconnects and retries inside
+    // its deadline, so the caller sees a normal (not degraded) answer
+    fleet.plans[1].set_drop_conns(1);
+    let got = remote.handle(&Request::LogPartition { theta: theta.clone() }, &mut rng);
+    assert!(matches!(got, Response::LogPartition { .. }), "{got:?}");
+
+    // one corrupted frame: treated as an IO fault, retried the same way
+    fleet.plans[0].set_corrupt_frames(1);
+    let got = remote.handle(&Request::LogPartition { theta: theta.clone() }, &mut rng);
+    assert!(matches!(got, Response::LogPartition { .. }), "{got:?}");
+
+    // both shards still healthy after the drill
+    let stack = remote.remote.as_ref().unwrap();
+    assert_eq!(stack.health().state(0), ShardHealth::Up);
+    assert_eq!(stack.health().state(1), ShardHealth::Up);
+    fleet.shutdown();
+}
+
+#[test]
+fn killed_shard_degrades_then_recovers() {
+    let mut cfg = remote_cfg(2);
+    cfg.remote.heartbeat_ms = 30;
+    cfg.remote.retries = 0;
+    cfg.remote.deadline_ms = 500;
+    let fleet = ShardFleet::spawn(&cfg);
+    cfg.remote.addrs = fleet.addr_csv();
+    let remote = Engine::from_remote(&cfg, None).unwrap();
+    let stack = remote.remote.as_ref().unwrap().clone();
+    let mut rng = Pcg64::new(5);
+    let theta = data::random_theta(&remote.ds, 0.05, &mut rng);
+
+    // healthy fleet: plain responses
+    let r = remote.handle(&Request::LogPartition { theta: theta.clone() }, &mut rng);
+    assert!(matches!(r, Response::LogPartition { .. }), "{r:?}");
+
+    // kill shard 1 in place: the acceptor refuses connections and open
+    // connections sever mid-stream
+    fleet.plans[1].set_down(true);
+    match remote.handle(&Request::LogPartition { theta: theta.clone() }, &mut rng) {
+        Response::Degraded { inner, ok_shards, shards } => {
+            assert_eq!((ok_shards, shards), (1, 2));
+            match *inner {
+                Response::LogPartition { log_z, .. } => {
+                    // renormalized over the surviving shard: finite, and
+                    // below the full-population estimate
+                    assert!(log_z.is_finite());
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        other => panic!("expected degraded response, got {other:?}"),
+    }
+    assert_eq!(stack.health().state(1), ShardHealth::Down);
+
+    // while the shard is down it is skipped, not re-timed-out: degraded
+    // answers come back well inside the per-request deadline
+    let t0 = Instant::now();
+    for req in [
+        Request::Sample { theta: theta.clone(), count: 2 },
+        Request::TopK { theta: theta.clone(), k: 6 },
+        Request::ExpectFeatures { theta: theta.clone() },
+    ] {
+        match remote.handle(&req, &mut rng) {
+            Response::Degraded { ok_shards, shards, .. } => {
+                assert_eq!((ok_shards, shards), (1, 2));
+            }
+            other => panic!("expected degraded response, got {other:?}"),
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(400),
+        "down shard must be skipped without burning the deadline ({:?})",
+        t0.elapsed()
+    );
+
+    // restart the shard in place: the heartbeat must revive it with no
+    // operator action
+    fleet.plans[1].set_down(false);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while stack.health().state(1) != ShardHealth::Up {
+        assert!(Instant::now() < deadline, "heartbeat never revived the restarted shard");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let r = remote.handle(&Request::LogPartition { theta: theta.clone() }, &mut rng);
+    assert!(matches!(r, Response::LogPartition { .. }), "recovered: {r:?}");
+    fleet.shutdown();
+}
+
+#[test]
+fn saturation_sheds_with_explicit_overload() {
+    let mut cfg = remote_cfg(1);
+    cfg.serve.shed_ms = 1;
+    cfg.serve.queue_depth = 1;
+    let fleet = ShardFleet::spawn(&cfg);
+    cfg.remote.addrs = fleet.addr_csv();
+    let engine = Arc::new(Engine::from_remote(&cfg, None).unwrap());
+    let mut rng = Pcg64::new(9);
+    let theta = data::random_theta(&engine.ds, 0.05, &mut rng);
+
+    // one worker, queue depth 1, and an 80 ms injected service delay:
+    // concurrent clients must overflow the queue
+    let coord = Arc::new(Coordinator::start(engine, 1, cfg.serve.queue_depth, 13));
+    let server = Server::bind_with(coord, "127.0.0.1:0", &cfg.serve).unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_flag();
+    let serve_handle = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    fleet.plans[0].set_delay_ms(80);
+
+    let n_clients = 8;
+    let barrier = Arc::new(Barrier::new(n_clients));
+    let mut workers = Vec::new();
+    for _ in 0..n_clients {
+        let addr = addr.clone();
+        let theta = theta.clone();
+        let barrier = barrier.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            barrier.wait();
+            client.call(&Request::LogPartition { theta }).unwrap()
+        }));
+    }
+    let responses: Vec<Response> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    let shed = responses
+        .iter()
+        .filter(|r| matches!(r, Response::Error { message } if message.contains("overloaded")))
+        .count();
+    let served = responses
+        .iter()
+        .filter(|r| matches!(r, Response::LogPartition { .. } | Response::Degraded { .. }))
+        .count();
+    assert!(shed >= 1, "saturation must shed explicitly: {responses:?}");
+    assert!(served >= 1, "some requests must still be served: {responses:?}");
+    assert_eq!(shed + served, n_clients, "{responses:?}");
+
+    // the front-end survives the storm and reports the sheds
+    fleet.plans[0].set_delay_ms(0);
+    let mut client = Client::connect(&addr).unwrap();
+    match client.call(&Request::Stats).unwrap() {
+        Response::Stats { text } => {
+            assert!(text.contains("queue_depth="), "{text}");
+            let counted: usize =
+                text.rsplit("shed=").next().unwrap().trim().parse().expect("shed count");
+            assert!(counted >= shed, "sheds must be counted: {text}");
+        }
+        other => panic!("{other:?}"),
+    }
+    stop.store(true, Ordering::SeqCst);
+    serve_handle.join().unwrap();
+    fleet.shutdown();
+}
