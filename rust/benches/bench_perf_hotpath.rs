@@ -558,8 +558,24 @@ fn main() {
         ("sharded_expect_speedup", Json::num(sharded_expect_speedup)),
         ("stages", Json::Arr(stages)),
     ]);
-    match std::fs::write("BENCH_perf_hotpath.json", doc.to_string()) {
+    // temp-file + rename so a crash mid-write never leaves a truncated
+    // JSON for downstream tooling to choke on
+    match write_atomic("BENCH_perf_hotpath.json", doc.to_string().as_bytes()) {
         Ok(()) => println!("\nwrote BENCH_perf_hotpath.json"),
         Err(e) => eprintln!("could not write BENCH_perf_hotpath.json: {e}"),
     }
+}
+
+fn write_atomic(path: &str, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    let tmp = format!("{path}.tmp.{}", std::process::id());
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    let renamed = std::fs::rename(&tmp, path);
+    if renamed.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    renamed
 }

@@ -242,6 +242,13 @@ pub struct IndexConfig {
     /// fan shard scans out over `util::pool` threads (false = sequential
     /// fan-out, useful for deterministic profiling)
     pub shard_parallel: bool,
+    /// snapshot file for crash-safe persistence: `gmips build --save`
+    /// writes it; serve/shard-serve/learn warm-open it when it exists
+    /// (and persist a fresh build to it otherwise). "" = no persistence.
+    pub path: String,
+    /// serve large snapshot sections zero-copy from an mmap (default);
+    /// false reads the whole file into RAM instead
+    pub mmap: bool,
     pub seed: u64,
 }
 
@@ -396,6 +403,8 @@ impl Default for Config {
                 shards: 1,
                 shard_strategy: ShardStrategy::RoundRobin,
                 shard_parallel: true,
+                path: String::new(),
+                mmap: true,
                 seed: 7,
             },
             sampler: SamplerConfig { k_mult: 5.0, l_mult: 5.0, gap_c: 0.0 },
@@ -527,6 +536,8 @@ impl Config {
             c.index.shard_strategy = ShardStrategy::parse(v.as_str()?)?;
         }
         c.index.shard_parallel = doc.get_bool("index.shard_parallel", c.index.shard_parallel)?;
+        c.index.path = doc.get_str("index.path", &c.index.path)?;
+        c.index.mmap = doc.get_bool("index.mmap", c.index.mmap)?;
         c.index.seed = doc.get_u64("index.seed", c.index.seed)?;
 
         c.sampler.k_mult = doc.get_f64("sampler.k_mult", c.sampler.k_mult)?;
@@ -605,6 +616,11 @@ impl Config {
         }
         if let Some(i) = args.get("index") {
             c.index.kind = IndexKind::parse(i)?;
+        }
+        // `--index` already means the index *kind*, so the snapshot file
+        // gets its own flag
+        if let Some(p) = args.get("index-path") {
+            c.index.path = p.to_string();
         }
         c.validate()?;
         Ok(c)

@@ -9,7 +9,7 @@ use crate::config::Config;
 use crate::data::{self, Dataset};
 use crate::dispatch::{self, ExpectationDispatch, PartitionDispatch, SamplerDispatch};
 use crate::error::{Error, Result};
-use crate::mips::{self, brute::BruteForce, BuiltIndex, MipsIndex};
+use crate::mips::{brute::BruteForce, BuiltIndex, MipsIndex};
 use crate::remote::{RemoteExpectation, RemoteIndex, RemotePartition, RemoteSampler, RemoteStack};
 use crate::sampler::tv_bound;
 use crate::scorer::{NativeScorer, ScoreBackend};
@@ -54,18 +54,25 @@ pub struct Engine {
     /// ([`Engine::from_remote`]); the TopK path then fans out through the
     /// stack directly so it can surface per-shard health.
     pub remote: Option<Arc<RemoteStack>>,
+    /// True when the index was warm-opened from a snapshot whose quantized
+    /// shadow sections were corrupt: answers are bit-identical (served from
+    /// the f32 tier) but the bandwidth savings are gone until a re-save.
+    pub snapshot_degraded: bool,
 }
 
 impl Engine {
-    /// Build everything from config: generate/load data, build the index,
-    /// wire the samplers/estimators with `k = k_mult·√n` etc.
+    /// Build everything from config: warm-open the snapshot at
+    /// `index.path` when one exists (saving a fresh build there
+    /// otherwise), or generate/load data and build the index, then wire
+    /// the samplers/estimators with `k = k_mult·√n` etc.
     ///
     /// `backend` lets the caller inject a PJRT scorer; `None` = native.
     pub fn from_config(cfg: &Config, backend: Option<Arc<dyn ScoreBackend>>) -> Result<Engine> {
         let backend = backend.unwrap_or_else(|| Arc::new(NativeScorer));
-        let ds = Arc::new(data::load_or_generate(&cfg.data));
-        let index = mips::build_index_typed(&ds, &cfg.index, backend.clone())?;
-        Ok(Self::from_parts(cfg.clone(), ds, index, backend))
+        let opened = crate::store::load_or_build(cfg, backend.clone(), true)?;
+        let mut engine = Self::from_parts(cfg.clone(), opened.ds, opened.index, backend);
+        engine.snapshot_degraded = opened.degraded;
+        Ok(engine)
     }
 
     /// Assemble from prebuilt parts (tests, benches, examples).
@@ -73,7 +80,7 @@ impl Engine {
     /// `index` accepts anything convertible into a
     /// [`BuiltIndex`]: an `Arc<dyn MipsIndex>` gets the monolithic
     /// sampler/estimator stack, an `Arc<ShardedIndex>` (or the
-    /// [`mips::build_index_typed`] result) routes sampling, partition
+    /// [`crate::mips::build_index_typed`] result) routes sampling, partition
     /// estimation and feature expectation through the sharded
     /// implementations — a server configured with `index.shards > 1` no
     /// longer silently falls back to the monolithic stack.
@@ -96,6 +103,7 @@ impl Engine {
             metrics: EngineMetrics::default(),
             config,
             remote: None,
+            snapshot_degraded: false,
         }
     }
 
@@ -140,6 +148,7 @@ impl Engine {
             metrics: EngineMetrics::default(),
             config: cfg.clone(),
             remote: Some(stack),
+            snapshot_degraded: false,
         })
     }
 
@@ -243,7 +252,8 @@ impl Engine {
             }
             Request::Stats => Response::Stats {
                 text: format!(
-                    "{}\nbackend={} simd={} k={} sampler={} partition={} expectation={}\n{}",
+                    "{}\nbackend={} simd={} k={} sampler={} partition={} expectation={} \
+                     snapshot_degraded={}\n{}",
                     self.index.describe(),
                     self.backend.name(),
                     crate::linalg::simd::kernel().name(),
@@ -251,6 +261,7 @@ impl Engine {
                     self.sampler.name(),
                     self.partition.name(),
                     self.expectation.name(),
+                    self.snapshot_degraded,
                     self.metrics.summary()
                 ),
             },

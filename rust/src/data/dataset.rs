@@ -12,16 +12,21 @@
 
 use crate::error::{Error, Result};
 use crate::linalg;
+use crate::store::blob::Blob;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"GMD1";
 
 /// Dense feature database.
+///
+/// Row storage is a [`Blob`]: owned when generated/loaded, zero-copy
+/// mapped when opened from an index snapshot (`crate::store`). Either
+/// way it derefs to `&[f32]`, so scan kernels and callers are agnostic.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     /// row-major `[n × d]`
-    pub data: Vec<f32>,
+    pub data: Blob<f32>,
     pub n: usize,
     pub d: usize,
     /// latent generator cluster per row (empty if unknown)
@@ -39,7 +44,24 @@ impl Dataset {
                 d
             )));
         }
-        Ok(Dataset { data, n, d, labels: Vec::new() })
+        Ok(Dataset { data: data.into(), n, d, labels: Vec::new() })
+    }
+
+    /// Build from already-validated blob storage (snapshot open path;
+    /// the blob may serve directly from a memory map).
+    pub fn from_blob(data: Blob<f32>, n: usize, d: usize, labels: Vec<u32>) -> Result<Self> {
+        if data.len() != n * d {
+            return Err(Error::data(format!(
+                "matrix size {} != n*d = {}*{}",
+                data.len(),
+                n,
+                d
+            )));
+        }
+        if !labels.is_empty() && labels.len() != n {
+            return Err(Error::data(format!("labels len {} != n = {}", labels.len(), n)));
+        }
+        Ok(Dataset { data, n, d, labels })
     }
 
     /// Row accessor.
@@ -52,8 +74,9 @@ impl Dataset {
     /// datasets to unit norm).
     pub fn normalize_rows(&mut self) {
         let d = self.d;
+        let data = self.data.to_mut();
         for r in 0..self.n {
-            linalg::normalize(&mut self.data[r * d..(r + 1) * d]);
+            linalg::normalize(&mut data[r * d..(r + 1) * d]);
         }
     }
 
@@ -63,7 +86,7 @@ impl Dataset {
     pub fn prefix(&self, m: usize) -> Dataset {
         let m = m.min(self.n);
         Dataset {
-            data: self.data[..m * self.d].to_vec(),
+            data: self.data[..m * self.d].to_vec().into(),
             n: m,
             d: self.d,
             labels: if self.labels.is_empty() { vec![] } else { self.labels[..m].to_vec() },
@@ -158,7 +181,7 @@ impl Dataset {
         } else {
             Vec::new()
         };
-        Ok(Dataset { data, n, d, labels })
+        Ok(Dataset { data: data.into(), n, d, labels })
     }
 }
 

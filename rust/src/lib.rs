@@ -102,6 +102,7 @@ pub mod sampler;
 pub mod scorer;
 pub mod server;
 pub mod shard;
+pub mod store;
 pub mod util;
 pub mod walk;
 

@@ -52,8 +52,11 @@
 //! — a miss rides the tier ladder (`mips::two_stage`) down to SQ8/f32
 //! and correctness never depends on it firing.
 
+use crate::error::Result;
 use crate::linalg::simd::{self, Kernel};
 use crate::mips::kmeans;
+use crate::store::blob::Blob;
+use crate::store::format::{tag, ByteWriter, Snapshot, SnapshotWriter};
 
 /// Rows per scoring chunk (keeps the u32 scratch on the stack and the
 /// plane segments L1-resident across a batch's queries).
@@ -77,8 +80,9 @@ pub struct PqView {
     /// trained centroids per subspace (≤ k; tiny datasets train fewer)
     csub: Vec<usize>,
     /// plane-major codes: bits=8 → `[m × n]`, bits=4 → `[m × ⌈n/2⌉]`
-    /// nibble-packed (row r in byte r/2, even rows in the low nibble)
-    codes: Vec<u8>,
+    /// nibble-packed (row r in byte r/2, even rows in the low nibble);
+    /// owned or snapshot-mapped
+    codes: Blob<u8>,
     /// bytes per plane
     stride: usize,
     /// per-subspace max residual norm `max_r ‖x_sub − cent(code)‖₂`
@@ -131,7 +135,7 @@ impl PqView {
             d,
             cents: vec![0f32; m * k * dsub],
             csub: vec![0usize; m],
-            codes: vec![0u8; m * stride],
+            codes: vec![0u8; m * stride].into(),
             stride,
             maxres: vec![0f32; m],
             max_abs: 0.0,
@@ -214,9 +218,10 @@ impl PqView {
             }
             (s0, planes, worsts)
         });
+        let codes = self.codes.to_mut();
         for (s0, planes, worsts) in parts {
             let nsub = worsts.len();
-            self.codes[s0 * stride..(s0 + nsub) * stride].copy_from_slice(&planes);
+            codes[s0 * stride..(s0 + nsub) * stride].copy_from_slice(&planes);
             self.maxres[s0..s0 + nsub].copy_from_slice(&worsts);
         }
     }
@@ -505,6 +510,68 @@ impl PqView {
             let base = r - row_start;
             self.accum_scalar(r, row_end, lut, &mut acc[base..]);
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot persistence (crate::store)
+// ---------------------------------------------------------------------------
+
+impl PqView {
+    /// Write this view as `PQ_META` + `PQ_CODES` sections under `arg`.
+    pub(crate) fn save_sections(&self, w: &mut SnapshotWriter, arg: u32) -> Result<()> {
+        let mut m = ByteWriter::default();
+        m.u64(self.m as u64);
+        m.u64(self.dsub as u64);
+        m.u64(self.k as u64);
+        m.u64(self.bits as u64);
+        m.u64(self.n as u64);
+        m.u64(self.d as u64);
+        m.u64(self.stride as u64);
+        m.f32(self.max_abs);
+        let csub: Vec<u64> = self.csub.iter().map(|&c| c as u64).collect();
+        m.slice(&csub);
+        m.slice(&self.maxres);
+        m.slice(&self.cents);
+        w.section(tag::PQ_META, arg, m.bytes())?;
+        w.section(tag::PQ_CODES, arg, &self.codes)
+    }
+
+    /// Reopen from a snapshot; the code planes serve zero-copy when the
+    /// snapshot is mapped. `None` when the sections are missing, corrupt,
+    /// or shape-inconsistent — the tier ladder then degrades.
+    pub(crate) fn open_sections(snap: &Snapshot, arg: u32) -> Option<PqView> {
+        let mut r = snap.reader_soft(tag::PQ_META, arg)?;
+        let m = r.usize().ok()?;
+        let dsub = r.usize().ok()?;
+        let k = r.usize().ok()?;
+        let bits = r.usize().ok()?;
+        let n = r.usize().ok()?;
+        let d = r.usize().ok()?;
+        let stride = r.usize().ok()?;
+        let max_abs = r.f32().ok()?;
+        let csub64: Vec<u64> = r.vec().ok()?;
+        let maxres: Vec<f32> = r.vec().ok()?;
+        let cents: Vec<f32> = r.vec().ok()?;
+        let codes: Blob<u8> = snap.blob_soft(tag::PQ_CODES, arg)?;
+        if !(bits == 4 || bits == 8)
+            || m == 0
+            || k != 1usize << bits
+            || m.checked_mul(dsub)? != d
+            || stride != if bits == 4 { n.div_ceil(2) } else { n }
+        {
+            return None;
+        }
+        let csub: Vec<usize> = csub64.iter().map(|&c| c as usize).collect();
+        if csub.len() != m
+            || maxres.len() != m
+            || cents.len() != m.checked_mul(k)?.checked_mul(dsub)?
+            || codes.len() != m.checked_mul(stride)?
+            || csub.iter().any(|&c| c > k)
+        {
+            return None;
+        }
+        Some(PqView { m, dsub, k, bits, n, d, cents, csub, codes, stride, maxres, max_abs })
     }
 }
 

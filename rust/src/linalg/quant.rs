@@ -88,7 +88,10 @@
 //! the single-query kernels produce — batch output is bit-identical to
 //! per-query calls.
 
+use crate::error::Result;
 use crate::linalg::simd::{self, Kernel};
+use crate::store::blob::Blob;
+use crate::store::format::{tag, ByteWriter, Snapshot, SnapshotWriter};
 
 /// Rows scored per inner chunk (keeps the i32 scratch on the stack).
 const QCHUNK: usize = 256;
@@ -99,8 +102,8 @@ pub const DEFAULT_BLOCK: usize = 64;
 /// Quantized (SQ8) shadow copy of a row-major `[n × d]` f32 matrix.
 #[derive(Clone, Debug)]
 pub struct QuantView {
-    /// u8 codes, row-major `[n × d]`
-    codes: Vec<u8>,
+    /// u8 codes, row-major `[n × d]` (owned or snapshot-mapped)
+    codes: Blob<u8>,
     n: usize,
     d: usize,
     /// rows per (scale, offset) block
@@ -129,7 +132,7 @@ impl QuantView {
         debug_assert_eq!(rows.len(), n * d);
         let nblocks = n.div_ceil(block);
         let mut qv = QuantView {
-            codes: vec![0u8; n * d],
+            codes: vec![0u8; n * d].into(),
             n,
             d,
             block,
@@ -183,6 +186,7 @@ impl QuantView {
         // reconstructs the value exactly
         let (scale, offset) = if mx > mn { ((mx - mn) / 255.0, mn) } else { (0.0, mn) };
         let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let codes = self.codes.to_mut();
         let mut csum_max = 0u32;
         for r in lo..hi {
             let mut csum = 0u32;
@@ -193,7 +197,7 @@ impl QuantView {
                 } else {
                     0u8
                 };
-                self.codes[r * d + j] = c;
+                codes[r * d + j] = c;
                 csum += c as u32;
             }
             csum_max = csum_max.max(csum);
@@ -434,7 +438,8 @@ pub fn coverage_proved(dropped: bool, q_floor: f32, eps: f32, kth_exact: f32) ->
 #[derive(Clone, Debug)]
 pub struct Sq4View {
     /// packed nibble codes, row-major with `stride` bytes per row
-    codes: Vec<u8>,
+    /// (owned or snapshot-mapped)
+    codes: Blob<u8>,
     n: usize,
     d: usize,
     /// bytes per row = ⌈d/2⌉
@@ -461,7 +466,7 @@ impl Sq4View {
         let stride = d.div_ceil(2);
         let nblocks = n.div_ceil(block);
         let mut qv = Sq4View {
-            codes: vec![0u8; n * stride],
+            codes: vec![0u8; n * stride].into(),
             n,
             d,
             stride,
@@ -498,10 +503,12 @@ impl Sq4View {
         }
         let (scale, offset) = if mx > mn { ((mx - mn) / 15.0, mn) } else { (0.0, mn) };
         let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let stride = self.stride;
+        let codes = self.codes.to_mut();
         let mut csum_max = 0u32;
         for r in lo..hi {
             let mut csum = 0u32;
-            let row = &mut self.codes[r * self.stride..(r + 1) * self.stride];
+            let row = &mut codes[r * stride..(r + 1) * stride];
             row.iter_mut().for_each(|x| *x = 0);
             for j in 0..d {
                 let x = rows[r * d + j];
@@ -643,6 +650,131 @@ impl Sq4View {
             }
             r = seg_end;
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot persistence (crate::store)
+// ---------------------------------------------------------------------------
+
+impl QuantView {
+    /// Write this view as `SQ8_META` + `SQ8_CODES` sections under `arg`.
+    pub(crate) fn save_sections(&self, w: &mut SnapshotWriter, arg: u32) -> Result<()> {
+        let mut m = ByteWriter::default();
+        m.u64(self.n as u64);
+        m.u64(self.d as u64);
+        m.u64(self.block as u64);
+        m.slice(&self.scales);
+        m.slice(&self.offsets);
+        m.slice(&self.scaled_csums);
+        m.slice(&self.abs_maxes);
+        w.section(tag::SQ8_META, arg, m.bytes())?;
+        w.section(tag::SQ8_CODES, arg, &self.codes)
+    }
+
+    /// Reopen from a snapshot; the code plane serves zero-copy when the
+    /// snapshot is mapped. `None` when the sections are missing, corrupt,
+    /// or shape-inconsistent — the tier ladder then degrades to the f32
+    /// tier instead of refusing to serve.
+    pub(crate) fn open_sections(snap: &Snapshot, arg: u32) -> Option<QuantView> {
+        let mut r = snap.reader_soft(tag::SQ8_META, arg)?;
+        let n = r.usize().ok()?;
+        let d = r.usize().ok()?;
+        let block = r.usize().ok()?;
+        let scales: Vec<f32> = r.vec().ok()?;
+        let offsets: Vec<f32> = r.vec().ok()?;
+        let scaled_csums: Vec<f32> = r.vec().ok()?;
+        let abs_maxes: Vec<f32> = r.vec().ok()?;
+        let codes: Blob<u8> = snap.blob_soft(tag::SQ8_CODES, arg)?;
+        if block == 0 {
+            return None;
+        }
+        let nblocks = n.div_ceil(block);
+        if codes.len() != n.checked_mul(d)?
+            || scales.len() != nblocks
+            || offsets.len() != nblocks
+            || scaled_csums.len() != nblocks
+            || abs_maxes.len() != nblocks
+        {
+            return None;
+        }
+        // recompute the cached maxes with the same fold as encode()
+        let max_scale = scales.iter().cloned().fold(0.0f32, f32::max);
+        let max_scaled_csum = scaled_csums.iter().cloned().fold(0.0f32, f32::max);
+        let max_abs = abs_maxes.iter().cloned().fold(0.0f32, f32::max);
+        Some(QuantView {
+            codes,
+            n,
+            d,
+            block,
+            scales,
+            offsets,
+            scaled_csums,
+            abs_maxes,
+            max_scale,
+            max_scaled_csum,
+            max_abs,
+        })
+    }
+}
+
+impl Sq4View {
+    /// Write this view as `SQ4_META` + `SQ4_CODES` sections under `arg`.
+    pub(crate) fn save_sections(&self, w: &mut SnapshotWriter, arg: u32) -> Result<()> {
+        let mut m = ByteWriter::default();
+        m.u64(self.n as u64);
+        m.u64(self.d as u64);
+        m.u64(self.stride as u64);
+        m.u64(self.block as u64);
+        m.slice(&self.scales);
+        m.slice(&self.offsets);
+        m.slice(&self.scaled_csums);
+        m.slice(&self.abs_maxes);
+        w.section(tag::SQ4_META, arg, m.bytes())?;
+        w.section(tag::SQ4_CODES, arg, &self.codes)
+    }
+
+    /// Reopen from a snapshot (soft: `None` degrades to the f32 tier).
+    pub(crate) fn open_sections(snap: &Snapshot, arg: u32) -> Option<Sq4View> {
+        let mut r = snap.reader_soft(tag::SQ4_META, arg)?;
+        let n = r.usize().ok()?;
+        let d = r.usize().ok()?;
+        let stride = r.usize().ok()?;
+        let block = r.usize().ok()?;
+        let scales: Vec<f32> = r.vec().ok()?;
+        let offsets: Vec<f32> = r.vec().ok()?;
+        let scaled_csums: Vec<f32> = r.vec().ok()?;
+        let abs_maxes: Vec<f32> = r.vec().ok()?;
+        let codes: Blob<u8> = snap.blob_soft(tag::SQ4_CODES, arg)?;
+        if block == 0 || stride != d.div_ceil(2) {
+            return None;
+        }
+        let nblocks = n.div_ceil(block);
+        if codes.len() != n.checked_mul(stride)?
+            || scales.len() != nblocks
+            || offsets.len() != nblocks
+            || scaled_csums.len() != nblocks
+            || abs_maxes.len() != nblocks
+        {
+            return None;
+        }
+        let max_scale = scales.iter().cloned().fold(0.0f32, f32::max);
+        let max_scaled_csum = scaled_csums.iter().cloned().fold(0.0f32, f32::max);
+        let max_abs = abs_maxes.iter().cloned().fold(0.0f32, f32::max);
+        Some(Sq4View {
+            codes,
+            n,
+            d,
+            stride,
+            block,
+            scales,
+            offsets,
+            scaled_csums,
+            abs_maxes,
+            max_scale,
+            max_scaled_csum,
+            max_abs,
+        })
     }
 }
 

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   gen-data     generate a synthetic dataset and write it to disk
+//!   build        build the index once and save a snapshot (--save PATH);
+//!                serve/shard-serve/learn warm-open it via --index-path
 //!   sample       draw samples for random θ and print them
 //!   partition    estimate log Z for random θ (Algorithm 3) vs exact
 //!   learn        run the §4.4 MLE experiment (exact / top-k / ours)
@@ -32,7 +34,7 @@ use std::sync::Arc;
 
 const VALUE_KEYS: &[&str] = &[
     "preset", "config", "set", "n", "d", "seed", "backend", "index", "out", "count", "k", "l",
-    "queries", "steps", "addr", "workers", "iters", "artifacts", "shard-id",
+    "queries", "steps", "addr", "workers", "iters", "artifacts", "shard-id", "save", "index-path",
 ];
 
 fn main() {
@@ -59,6 +61,7 @@ fn print_help() {
          usage: gmips <subcommand> [options]\n\n\
          subcommands:\n\
          \u{20}  gen-data --out data.bin [--preset imagenet|wordemb] [--n N] [--d D]\n\
+         \u{20}  build --save index.gmips (or set index.path; snapshot is checksummed + atomic)\n\
          \u{20}  sample [--count C] [--queries Q] [--backend native|pjrt]\n\
          \u{20}  partition [--queries Q]\n\
          \u{20}  learn [--iters I]\n\
@@ -68,7 +71,8 @@ fn print_help() {
          \u{20}  eval fig2|table1|fig4|table2|fig7|fig8|walk|all [--n N] [--queries Q]\n\
          \u{20}  selfcheck [--artifacts DIR]\n\n\
          common options: --preset P --config FILE --set sec.key=v,... --n N --d D --seed S\n\
-         \u{20}                --index ivf|lsh|tiered|brute --backend native|pjrt"
+         \u{20}                --index ivf|lsh|tiered|brute --backend native|pjrt\n\
+         \u{20}                --index-path FILE (warm-open a saved snapshot; missing file = build)"
     );
 }
 
@@ -93,6 +97,7 @@ fn make_backend(cfg: &Config) -> Result<Arc<dyn ScoreBackend>> {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand().unwrap() {
         "gen-data" => cmd_gen_data(args),
+        "build" => cmd_build(args),
         "sample" => cmd_sample(args),
         "partition" => cmd_partition(args),
         "learn" => cmd_learn(args),
@@ -120,6 +125,31 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_build(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let path = args.get_str("save", &cfg.index.path);
+    if path.is_empty() {
+        return Err(Error::Cli(
+            "build needs a destination: pass --save PATH (or set index.path)".into(),
+        ));
+    }
+    let backend = make_backend(&cfg)?;
+    eprintln!(
+        "building index: n={} d={} index={} shards={} backend={} ...",
+        cfg.data.n,
+        cfg.data.d,
+        cfg.index.kind.name(),
+        cfg.index.shards,
+        backend.name()
+    );
+    let ds = Arc::new(data::load_or_generate(&cfg.data));
+    let index = gmips::mips::build_index_typed(&ds, &cfg.index, backend)?;
+    gmips::store::save_index(&path, &cfg, &ds, &index)?;
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!("saved snapshot {path} ({bytes} bytes, {} rows × {} dims)", ds.n, ds.d);
+    Ok(())
+}
+
 fn build_engine(args: &Args) -> Result<Arc<Engine>> {
     let cfg = Config::from_args(args)?;
     let backend = make_backend(&cfg)?;
@@ -131,6 +161,9 @@ fn build_engine(args: &Args) -> Result<Arc<Engine>> {
         backend.name()
     );
     let engine = Engine::from_config(&cfg, Some(backend))?;
+    if engine.snapshot_degraded {
+        eprintln!("warning: snapshot quantized sections corrupt — serving from the f32 tier");
+    }
     eprintln!("{}", engine.index.describe());
     Ok(Arc::new(engine))
 }
@@ -181,11 +214,14 @@ fn cmd_learn(args: &Args) -> Result<()> {
     let mut cfg = Config::from_args(args)?;
     cfg.learn.iters = args.get_usize("iters", cfg.learn.iters)?;
     let backend = make_backend(&cfg)?;
-    let ds = Arc::new(data::load_or_generate(&cfg.data));
-    // typed build so `index.shards > 1` trains through the sharded
-    // Algorithm 4 estimator
-    let index = gmips::mips::build_index_typed(&ds, &cfg.index, backend.clone())?;
-    let learner = Learner::new(ds, index, backend, cfg.learn.clone())?;
+    // typed load-or-build so `index.shards > 1` trains through the
+    // sharded Algorithm 4 estimator, and `--index-path` warm-opens a
+    // saved snapshot instead of rebuilding per run
+    let opened = gmips::store::load_or_build(&cfg, backend.clone(), true)?;
+    if opened.degraded {
+        eprintln!("warning: snapshot quantized sections corrupt — training from the f32 tier");
+    }
+    let learner = Learner::new(opened.ds, opened.index, backend, cfg.learn.clone())?;
     let mut rng = Pcg64::new(cfg.learn.seed);
     for method in [GradMethod::Exact, GradMethod::TopK, GradMethod::Amortized] {
         let res = learner.train(method, &mut rng);

@@ -18,7 +18,9 @@ use super::two_stage::{self, QuantTier, TierLadder, TierQuery};
 use super::{MipsIndex, TopKResult};
 use crate::config::{IndexConfig, QuantKind};
 use crate::data::Dataset;
+use crate::error::{Error, Result};
 use crate::scorer::ScoreBackend;
+use crate::store::format::{sec_arg, tag, ByteWriter, Snapshot, SnapshotWriter};
 use crate::util::topk::TopK;
 use std::sync::Arc;
 
@@ -104,6 +106,34 @@ impl BruteForce {
             start = end;
         }
         TopKResult { items: tk.into_sorted(), scanned: n }
+    }
+
+    /// Rebuild a brute-force index from snapshot sections written by
+    /// [`MipsIndex::save_sections`]. The dataset rows themselves come
+    /// from the caller (they live in the shared `DATASET_ROWS` section);
+    /// only the scan shape (`block`) and the quantized shadow tiers are
+    /// read here. A missing/corrupt shadow section degrades to the plain
+    /// f32 scan (sets `degraded`) — answers stay bit-identical by the
+    /// coverage-certificate contract, only `scanned` accounting can
+    /// differ from a freshly built two-stage index.
+    pub fn open_from(
+        ds: Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+        snap: &Snapshot,
+        shard: u32,
+        degraded: &mut bool,
+    ) -> Result<BruteForce> {
+        let mut r = snap.reader(tag::BRUTE_META, sec_arg(shard, 0))?;
+        let block = r.usize()?;
+        if block == 0 {
+            return Err(Error::data(format!(
+                "snapshot {}: brute meta has block=0",
+                snap.path()
+            )));
+        }
+        let quant = TierLadder::open_from(snap, cfg, shard, degraded);
+        Ok(BruteForce { ds, backend, block, quant, overscan: cfg.overscan.max(1) })
     }
 
     /// Two-stage scan over the given ladder rungs: per rung, a screening
@@ -254,6 +284,15 @@ impl MipsIndex for BruteForce {
     }
     fn name(&self) -> &'static str {
         "brute"
+    }
+    fn save_sections(&self, w: &mut SnapshotWriter, shard: u32) -> Result<()> {
+        let mut m = ByteWriter::default();
+        m.u64(self.block as u64);
+        w.section(tag::BRUTE_META, sec_arg(shard, 0), m.bytes())?;
+        if let Some(ladder) = &self.quant {
+            ladder.save_sections(w, shard)?;
+        }
+        Ok(())
     }
     fn describe(&self) -> String {
         if let Some(ladder) = &self.quant {

@@ -23,8 +23,10 @@ use super::two_stage::{self, QuantTier, TierLadder, TierQuery};
 use super::{MipsIndex, TopKResult};
 use crate::config::IndexConfig;
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::scorer::ScoreBackend;
+use crate::store::blob::Blob;
+use crate::store::format::{self, sec_arg, tag, ByteWriter, Snapshot, SnapshotWriter};
 use crate::util::rng::Pcg64;
 use crate::util::topk::{Scored, TopK};
 use std::sync::Arc;
@@ -136,7 +138,8 @@ fn select_probes(scores: &[f32], c: usize, n_probe: usize) -> Vec<u32> {
 /// Clustering-based MIPS index with contiguous per-cluster storage.
 pub struct IvfIndex {
     /// rows regrouped cluster-contiguously, row-major `[n × d]`
-    grouped: Vec<f32>,
+    /// (owned, or mapped straight out of a snapshot)
+    grouped: Blob<f32>,
     /// original dataset id of each grouped row
     ids: Vec<u32>,
     /// cluster boundaries into `grouped`/`ids`: cluster c occupies
@@ -208,7 +211,7 @@ impl IvfIndex {
         let quant = TierLadder::from_cfg(&grouped, d, cfg);
 
         IvfIndex {
-            grouped,
+            grouped: grouped.into(),
             ids,
             offsets,
             km,
@@ -716,7 +719,7 @@ impl IvfIndex {
             }
             offsets[c + 1] = ids.len();
         }
-        self.grouped = grouped;
+        self.grouped = grouped.into();
         self.ids = ids;
         self.offsets = offsets;
         self.pending_ids.clear();
@@ -728,6 +731,129 @@ impl IvfIndex {
         if let Some(ladder) = &mut self.quant {
             ladder.reencode(&self.grouped);
         }
+    }
+
+    // ---- snapshot persistence ------------------------------------------
+
+    /// Write this index's own sections — everything except the coarse
+    /// quantizer: layout + LSM update state under `IVF_META`, the
+    /// cluster-grouped row storage under `IVF_GROUPED` (raw Pod bytes,
+    /// 64-byte aligned, so a mapped open scans it zero-copy), and the
+    /// quantized shadow tiers. Split from the trait method so the shard
+    /// layer can save the *shared* coarse quantizer exactly once.
+    pub(crate) fn save_body(&self, w: &mut SnapshotWriter, shard: u32) -> Result<()> {
+        let arg = sec_arg(shard, 0);
+        let mut m = ByteWriter::default();
+        m.u64(self.n as u64);
+        m.u64(self.d as u64);
+        let offsets: Vec<u64> = self.offsets.iter().map(|&o| o as u64).collect();
+        m.slice(&offsets);
+        m.slice(&self.ids);
+        // FxHashSet iteration order is nondeterministic — sort so saving
+        // the same index twice yields byte-identical snapshots
+        let mut stale: Vec<u32> = self.stale.iter().copied().collect();
+        stale.sort_unstable();
+        m.slice(&stale);
+        m.slice(&self.pending_ids);
+        m.slice(&self.pending_rows);
+        w.section(tag::IVF_META, arg, m.bytes())?;
+        w.section(tag::IVF_GROUPED, arg, format::as_bytes(&self.grouped))?;
+        if let Some(ladder) = &self.quant {
+            ladder.save_sections(w, shard)?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild from snapshot sections written by the
+    /// [`MipsIndex::save_sections`] impl (monolithic layout: coarse
+    /// quantizer and body at shard 0). `n_probe` is re-resolved from the
+    /// config — it is a query-time knob, not part of the built structure.
+    /// A missing/corrupt quantized shadow degrades to the f32 probe scan
+    /// (sets `degraded`); answers stay bit-identical either way.
+    pub fn open_from(
+        ds: Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+        snap: &Snapshot,
+        degraded: &mut bool,
+    ) -> Result<Self> {
+        let km = crate::store::read_kmeans(snap, sec_arg(0, 0))?;
+        let (_, n_probe) = resolve_sizes(cfg, ds.n);
+        Self::open_shard(ds, cfg, backend, snap, km, n_probe, 0, degraded)
+    }
+
+    /// Rebuild one shard's IVF structure over an externally supplied
+    /// coarse quantizer. The shard layer reads the shared `Kmeans` once
+    /// and passes the same resolved `n_probe` to every shard, mirroring
+    /// [`build_with_kmeans`](Self::build_with_kmeans). Every structural
+    /// invariant the scan code indexes by is re-validated here so a
+    /// corrupt-but-checksum-colliding file errors instead of panicking.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn open_shard(
+        ds: Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+        snap: &Snapshot,
+        km: Kmeans,
+        n_probe: usize,
+        shard: u32,
+        degraded: &mut bool,
+    ) -> Result<Self> {
+        let arg = sec_arg(shard, 0);
+        let bad = |why: &str| {
+            Error::data(format!(
+                "snapshot {}: IVF section (shard {shard}) is inconsistent: {why}",
+                snap.path()
+            ))
+        };
+        let mut r = snap.reader(tag::IVF_META, arg)?;
+        let n = r.usize()?;
+        let d = r.usize()?;
+        let offsets64: Vec<u64> = r.vec()?;
+        let ids: Vec<u32> = r.vec()?;
+        let stale_list: Vec<u32> = r.vec()?;
+        let pending_ids: Vec<u32> = r.vec()?;
+        let pending_rows: Vec<f32> = r.vec()?;
+        let grouped: Blob<f32> = snap.blob(tag::IVF_GROUPED, arg)?;
+        if n != ds.n || d != ds.d {
+            return Err(bad("stored shape does not match the dataset"));
+        }
+        if offsets64.len() != km.c + 1 {
+            return Err(bad("cluster offset table does not match the coarse quantizer"));
+        }
+        let offsets: Vec<usize> = offsets64.iter().map(|&o| o as usize).collect();
+        if offsets[0] != 0
+            || offsets.windows(2).any(|w| w[0] > w[1])
+            || *offsets.last().unwrap() != ids.len()
+        {
+            return Err(bad("cluster offsets are not a monotone cover of the grouped rows"));
+        }
+        if grouped.len() != ids.len().checked_mul(d).unwrap_or(usize::MAX) {
+            return Err(bad("grouped row storage does not match the id list"));
+        }
+        if ids.iter().any(|&i| i as usize >= n) {
+            return Err(bad("grouped id out of range"));
+        }
+        if pending_rows.len() != pending_ids.len().checked_mul(d).unwrap_or(usize::MAX) {
+            return Err(bad("pending segment rows do not match pending ids"));
+        }
+        let quant = TierLadder::open_from(snap, cfg, shard, degraded);
+        let n_probe = n_probe.clamp(1, km.c);
+        Ok(IvfIndex {
+            grouped,
+            ids,
+            offsets,
+            km,
+            backend,
+            n_probe,
+            n,
+            d,
+            quant,
+            overscan: cfg.overscan.max(1),
+            stale: stale_list.into_iter().collect(),
+            pending_ids,
+            pending_rows,
+        })
     }
 }
 
@@ -751,6 +877,10 @@ impl MipsIndex for IvfIndex {
     }
     fn name(&self) -> &'static str {
         "ivf"
+    }
+    fn save_sections(&self, w: &mut SnapshotWriter, shard: u32) -> Result<()> {
+        crate::store::write_kmeans(w, sec_arg(shard, 0), &self.km)?;
+        self.save_body(w, shard)
     }
     fn describe(&self) -> String {
         format!(

@@ -16,9 +16,10 @@ use super::two_stage::{self, TierLadder};
 use super::{MipsIndex, TopKResult};
 use crate::config::IndexConfig;
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::linalg;
 use crate::scorer::ScoreBackend;
+use crate::store::format::{sec_arg, tag, ByteReader, ByteWriter, Snapshot, SnapshotWriter};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
@@ -135,6 +136,62 @@ impl SrpLsh {
         self.quant.is_some()
     }
 
+    // ---- snapshot persistence ------------------------------------------
+
+    /// Rebuild from the `LSH_META` section written by
+    /// [`MipsIndex::save_sections`]. The persisted augmentation
+    /// coordinates already encode the build-time norm bound (global bound
+    /// under sharding), so nothing is recomputed and hash codes — hence
+    /// candidate sets — are bit-identical to the saved index. Bucket
+    /// tables are re-validated before use so a corrupt file errors
+    /// instead of panicking on an out-of-range bucket or member.
+    pub fn open_from(
+        ds: Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+        snap: &Snapshot,
+        shard: u32,
+        degraded: &mut bool,
+    ) -> Result<Self> {
+        let mut r = snap.reader(tag::LSH_META, sec_arg(shard, 0))?;
+        let bad = |why: &str| {
+            Error::data(format!(
+                "snapshot {}: LSH section (shard {shard}) is inconsistent: {why}",
+                snap.path()
+            ))
+        };
+        let bits = r.usize()?;
+        let d_aug = r.usize()?;
+        let multiprobe = r.u8()? != 0;
+        let aug: Vec<f32> = r.vec()?;
+        let ntables = r.usize()?;
+        if !(1..=24).contains(&bits) {
+            return Err(bad("bits out of range"));
+        }
+        if d_aug != ds.d + 1 || aug.len() != ds.n {
+            return Err(bad("augmentation does not match the dataset shape"));
+        }
+        if ntables == 0 || ntables > 4096 {
+            return Err(bad("implausible table count"));
+        }
+        let mut tables = Vec::with_capacity(ntables);
+        for _ in 0..ntables {
+            tables.push(read_table(&mut r, bits, d_aug, ds.n, &bad)?);
+        }
+        let quant = TierLadder::open_from(snap, cfg, shard, degraded);
+        Ok(SrpLsh {
+            ds,
+            backend,
+            tables,
+            bits,
+            d_aug,
+            aug,
+            multiprobe,
+            quant,
+            overscan: cfg.overscan.max(1),
+        })
+    }
+
     /// Collect candidate ids for a query (deduplicated via a stamp array).
     fn candidates(&self, q: &[f32]) -> Vec<u32> {
         let mut seen = vec![false; self.ds.n];
@@ -159,6 +216,43 @@ impl SrpLsh {
         }
         cands
     }
+}
+
+/// Append one hash table to the meta byte stream (planes + CSR buckets).
+fn write_table(m: &mut ByteWriter, t: &Table) {
+    m.slice(&t.planes);
+    m.slice(&t.bucket_off);
+    m.slice(&t.members);
+}
+
+/// Read back one hash table, validating every invariant the probe path
+/// indexes by: plane shape, CSR monotonicity/cover, and member range.
+fn read_table(
+    r: &mut ByteReader,
+    bits: usize,
+    d_aug: usize,
+    n: usize,
+    bad: &dyn Fn(&str) -> Error,
+) -> Result<Table> {
+    let planes: Vec<f32> = r.vec()?;
+    let bucket_off: Vec<u32> = r.vec()?;
+    let members: Vec<u32> = r.vec()?;
+    if planes.len() != bits * d_aug {
+        return Err(bad("projection planes do not match bits × d_aug"));
+    }
+    if bucket_off.len() != (1usize << bits) + 1 {
+        return Err(bad("bucket table does not match bits"));
+    }
+    if bucket_off[0] != 0
+        || bucket_off.windows(2).any(|w| w[0] > w[1])
+        || *bucket_off.last().unwrap() as usize != members.len()
+    {
+        return Err(bad("bucket offsets are not a monotone cover of the members"));
+    }
+    if members.iter().any(|&id| id as usize >= n) {
+        return Err(bad("bucket member out of range"));
+    }
+    Ok(Table { planes, bucket_off, members })
 }
 
 /// SRP hash of an (augmented) vector: bit b = sign(planes_b · [v; aug]).
@@ -224,6 +318,22 @@ impl MipsIndex for SrpLsh {
     }
     fn name(&self) -> &'static str {
         "lsh"
+    }
+    fn save_sections(&self, w: &mut SnapshotWriter, shard: u32) -> Result<()> {
+        let mut m = ByteWriter::default();
+        m.u64(self.bits as u64);
+        m.u64(self.d_aug as u64);
+        m.u8(self.multiprobe as u8);
+        m.slice(&self.aug);
+        m.u64(self.tables.len() as u64);
+        for t in &self.tables {
+            write_table(&mut m, t);
+        }
+        w.section(tag::LSH_META, sec_arg(shard, 0), m.bytes())?;
+        if let Some(ladder) = &self.quant {
+            ladder.save_sections(w, shard)?;
+        }
+        Ok(())
     }
     fn describe(&self) -> String {
         format!(

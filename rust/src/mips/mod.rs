@@ -84,6 +84,21 @@ pub trait MipsIndex: Send + Sync {
     fn describe(&self) -> String {
         format!("{} over n={} d={}", self.name(), self.n(), self.d())
     }
+
+    /// Serialize this index's sections into a snapshot under `shard`
+    /// (see `crate::store`). The local kinds implement it; the default
+    /// covers indexes with nothing meaningful to persist locally (e.g. a
+    /// remote proxy).
+    fn save_sections(
+        &self,
+        _w: &mut crate::store::SnapshotWriter,
+        _shard: u32,
+    ) -> Result<()> {
+        Err(crate::error::Error::index(format!(
+            "index kind {} does not support snapshot persistence",
+            self.name()
+        )))
+    }
 }
 
 /// A freshly built index with the concrete sharded type preserved.

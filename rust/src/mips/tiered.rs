@@ -21,9 +21,10 @@ use super::two_stage::{self, TierLadder};
 use super::{MipsIndex, TopKResult};
 use crate::config::IndexConfig;
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::linalg;
 use crate::scorer::ScoreBackend;
+use crate::store::format::{sec_arg, tag, ByteWriter, Snapshot, SnapshotWriter};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
@@ -101,6 +102,76 @@ impl TieredLsh {
     /// Whether the quantized screening pass is enabled.
     pub fn quant_enabled(&self) -> bool {
         self.quant.is_some()
+    }
+
+    // ---- snapshot persistence ------------------------------------------
+
+    /// Rebuild from the `TIERED_META` section written by
+    /// [`MipsIndex::save_sections`]. The build-time *measured* gap
+    /// (Definition 3.1) is persisted and restored verbatim — re-measuring
+    /// on open would both cost probe scans and report a different bound
+    /// than the index the snapshot was taken from.
+    pub fn open_from(
+        ds: Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+        snap: &Snapshot,
+        shard: u32,
+        degraded: &mut bool,
+    ) -> Result<Self> {
+        let mut r = snap.reader(tag::TIERED_META, sec_arg(shard, 0))?;
+        let bad = |why: &str| {
+            Error::data(format!(
+                "snapshot {}: tiered-LSH section (shard {shard}) is inconsistent: {why}",
+                snap.path()
+            ))
+        };
+        let gap_per_unit_query = r.f64()?;
+        if !gap_per_unit_query.is_finite() || gap_per_unit_query < 0.0 {
+            return Err(bad("measured gap is not a finite non-negative value"));
+        }
+        let n_rungs = r.usize()?;
+        if n_rungs == 0 || n_rungs > 24 {
+            return Err(bad("implausible rung count"));
+        }
+        let d = ds.d;
+        let n = ds.n;
+        let mut rungs = Vec::with_capacity(n_rungs);
+        for _ in 0..n_rungs {
+            let bits = r.usize()?;
+            let planes: Vec<f32> = r.vec()?;
+            let bucket_off: Vec<u32> = r.vec()?;
+            let members: Vec<u32> = r.vec()?;
+            if !(1..=27).contains(&bits) {
+                // build caps at max(20, rungs+3) ≤ 27 bits
+                return Err(bad("rung bits out of range"));
+            }
+            if planes.len() != bits * d {
+                return Err(bad("rung planes do not match bits × d"));
+            }
+            if bucket_off.len() != (1usize << bits) + 1 {
+                return Err(bad("rung bucket table does not match bits"));
+            }
+            if bucket_off[0] != 0
+                || bucket_off.windows(2).any(|w| w[0] > w[1])
+                || *bucket_off.last().unwrap() as usize != members.len()
+            {
+                return Err(bad("rung bucket offsets are not a monotone cover of the members"));
+            }
+            if members.iter().any(|&id| id as usize >= n) {
+                return Err(bad("rung bucket member out of range"));
+            }
+            rungs.push(Rung { bits, planes, bucket_off, members });
+        }
+        let quant = TierLadder::open_from(snap, cfg, shard, degraded);
+        Ok(TieredLsh {
+            ds,
+            backend,
+            rungs,
+            gap_per_unit_query,
+            quant,
+            overscan: cfg.overscan.max(1),
+        })
     }
 
     /// Measure the empirical Definition-3.1 gap on `probes` random
@@ -241,6 +312,22 @@ impl MipsIndex for TieredLsh {
     }
     fn name(&self) -> &'static str {
         "tiered"
+    }
+    fn save_sections(&self, w: &mut SnapshotWriter, shard: u32) -> Result<()> {
+        let mut m = ByteWriter::default();
+        m.f64(self.gap_per_unit_query);
+        m.u64(self.rungs.len() as u64);
+        for rung in &self.rungs {
+            m.u64(rung.bits as u64);
+            m.slice(&rung.planes);
+            m.slice(&rung.bucket_off);
+            m.slice(&rung.members);
+        }
+        w.section(tag::TIERED_META, sec_arg(shard, 0), m.bytes())?;
+        if let Some(ladder) = &self.quant {
+            ladder.save_sections(w, shard)?;
+        }
+        Ok(())
     }
     fn describe(&self) -> String {
         format!(

@@ -25,9 +25,11 @@
 use super::TopKResult;
 use crate::config::{IndexConfig, QuantKind};
 use crate::data::Dataset;
+use crate::error::Result;
 use crate::linalg::pq::{PqLut, PqView};
 use crate::linalg::quant::{coverage_proved, QuantQuery, QuantView, Sq4View};
 use crate::scorer::ScoreBackend;
+use crate::store::format::{sec_arg, Snapshot, SnapshotWriter};
 use crate::util::topk::{Scored, TopK};
 
 /// Rows per survivor gather/re-rank block (pass 2).
@@ -305,6 +307,66 @@ impl TierLadder {
                 QuantTier::Pq(v) => v.reencode(rows),
             }
         }
+    }
+
+    /// Write every tier's sections under `shard` (slot = ladder
+    /// position, so the primary tier is slot 0 and the SQ8 safety rung
+    /// slot 1).
+    pub(crate) fn save_sections(&self, w: &mut SnapshotWriter, shard: u32) -> Result<()> {
+        for (slot, tier) in self.tiers.iter().enumerate() {
+            let arg = sec_arg(shard, slot as u32);
+            match tier {
+                QuantTier::Sq8(v) => v.save_sections(w, arg)?,
+                QuantTier::Sq4(v) => v.save_sections(w, arg)?,
+                QuantTier::Pq(v) => v.save_sections(w, arg)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Reopen the ladder `cfg` calls for from a snapshot. `None` with
+    /// `degraded` untouched when `index.quant` is off; `None` with
+    /// `degraded = true` when any tier section is missing, corrupt, or
+    /// shape-inconsistent — the index then serves from the f32 tier
+    /// (answers stay bit-identical by the certificate contract, only the
+    /// screening bandwidth savings are lost).
+    pub(crate) fn open_from(
+        snap: &Snapshot,
+        cfg: &IndexConfig,
+        shard: u32,
+        degraded: &mut bool,
+    ) -> Option<TierLadder> {
+        if matches!(cfg.quant, QuantKind::Off) {
+            return None;
+        }
+        let opened = Self::open_tiers(snap, cfg, shard);
+        if opened.is_none() {
+            *degraded = true;
+        }
+        opened
+    }
+
+    fn open_tiers(snap: &Snapshot, cfg: &IndexConfig, shard: u32) -> Option<TierLadder> {
+        let tiers = match cfg.quant {
+            QuantKind::Off => return None,
+            QuantKind::Sq8 => {
+                vec![QuantTier::Sq8(QuantView::open_sections(snap, sec_arg(shard, 0))?)]
+            }
+            QuantKind::Sq4 => vec![
+                QuantTier::Sq4(Sq4View::open_sections(snap, sec_arg(shard, 0))?),
+                QuantTier::Sq8(QuantView::open_sections(snap, sec_arg(shard, 1))?),
+            ],
+            QuantKind::Pq => vec![
+                QuantTier::Pq(PqView::open_sections(snap, sec_arg(shard, 0))?),
+                QuantTier::Sq8(QuantView::open_sections(snap, sec_arg(shard, 1))?),
+            ],
+        };
+        let desc = match &tiers[0] {
+            QuantTier::Pq(v) => format!("pq(m={},b={})→sq8", v.m(), v.bits()),
+            QuantTier::Sq4(_) => "sq4→sq8".to_string(),
+            QuantTier::Sq8(_) => "sq8".to_string(),
+        };
+        Some(TierLadder { tiers, desc })
     }
 }
 

@@ -87,8 +87,11 @@ impl ShardClient {
                 Ok(resp) => return Ok(resp),
                 Err(e) => {
                     // drop the cached connection; the next attempt
-                    // reconnects (a restarted server rejoins here)
-                    *self.conn.lock().unwrap() = None;
+                    // reconnects (a restarted server rejoins here). A
+                    // poisoned lock just means another thread panicked
+                    // mid-call — the connection is dropped either way,
+                    // so recover the guard instead of propagating.
+                    *self.conn.lock().unwrap_or_else(|p| p.into_inner()) = None;
                     last = Some(e);
                 }
             }
@@ -116,7 +119,13 @@ impl ShardClient {
 
     fn attempt(&self, line: &str, remaining: Duration) -> Result<ShardResponse> {
         let floor = Duration::from_millis(1);
-        let mut guard = self.conn.lock().unwrap();
+        // recover from poisoning: the panicked holder may have left the
+        // connection mid-frame, so treat it as dead and reconnect
+        let mut guard = self.conn.lock().unwrap_or_else(|p| {
+            let mut g = p.into_inner();
+            *g = None;
+            g
+        });
         if guard.is_none() {
             let t = self.connect_timeout.min(remaining).max(floor);
             *guard = Some(Client::connect_timeout(&self.addr, t)?);

@@ -24,7 +24,7 @@ use super::protocol::{ShardRequest, ShardResponse};
 use crate::config::Config;
 use crate::data::{self, Dataset};
 use crate::error::{Error, Result};
-use crate::mips::MipsIndex;
+use crate::mips::{BuiltIndex, MipsIndex};
 use crate::scorer::{self, NativeScorer, ScoreBackend};
 use crate::server::ServeHandler;
 use crate::shard::{ShardedExpectationEstimator, ShardedIndex, ShardedPartitionEstimator};
@@ -39,6 +39,9 @@ pub struct ShardEngine {
     partition: ShardedPartitionEstimator,
     expectation: ShardedExpectationEstimator,
     shard: usize,
+    /// True when the index came from a snapshot whose quantized shadow
+    /// sections were corrupt (answers unchanged, served from f32).
+    snapshot_degraded: bool,
 }
 
 impl ShardEngine {
@@ -46,14 +49,36 @@ impl ShardEngine {
     /// the config seeds, so every shard server and the coordinator agree
     /// on the data without shipping it), answering for shard `shard` of
     /// `cfg.index.shards`.
+    ///
+    /// When `index.path` points at an existing snapshot the stack is
+    /// warm-opened from it instead of rebuilt — every shard server
+    /// mapping the same file shares one cold build. A missing file falls
+    /// back to building (without saving: concurrent shard servers racing
+    /// to write one path would be worse than one explicit `gmips build`).
     pub fn from_config(
         cfg: &Config,
         shard: usize,
         backend: Option<Arc<dyn ScoreBackend>>,
     ) -> Result<ShardEngine> {
         let backend = backend.unwrap_or_else(|| Arc::new(NativeScorer));
-        let ds = Arc::new(data::load_or_generate(&cfg.data));
-        let index = Arc::new(ShardedIndex::build(&ds, &cfg.index, backend.clone())?);
+        let path = cfg.index.path.clone();
+        let (ds, index, snapshot_degraded) =
+            if !path.is_empty() && std::path::Path::new(&path).exists() {
+                let opened = crate::store::load_or_build(cfg, backend.clone(), false)?;
+                match opened.index {
+                    BuiltIndex::Sharded(sx) => (opened.ds, sx, opened.degraded),
+                    BuiltIndex::Mono(_) => {
+                        return Err(Error::config(format!(
+                            "snapshot {path} holds a monolithic index — a shard server needs \
+                             index.shards > 1 at build time"
+                        )))
+                    }
+                }
+            } else {
+                let ds = Arc::new(data::load_or_generate(&cfg.data));
+                let index = Arc::new(ShardedIndex::build(&ds, &cfg.index, backend.clone())?);
+                (ds, index, false)
+            };
         if shard >= index.n_shards() {
             return Err(Error::config(format!(
                 "shard id {shard} out of range: index has {} shards",
@@ -77,7 +102,7 @@ impl ShardEngine {
             l,
             cfg.index.seed,
         );
-        Ok(ShardEngine { ds, index, backend, partition, expectation, shard })
+        Ok(ShardEngine { ds, index, backend, partition, expectation, shard, snapshot_degraded })
     }
 
     pub fn shard(&self) -> usize {
@@ -87,12 +112,13 @@ impl ShardEngine {
     /// One-line identity for logs.
     pub fn describe(&self) -> String {
         format!(
-            "shard {}/{} ({} index, n={} d={})",
+            "shard {}/{} ({} index, n={} d={}){}",
             self.shard,
             self.index.n_shards(),
             self.index.name(),
             self.ds.n,
-            self.ds.d
+            self.ds.d,
+            if self.snapshot_degraded { " [snapshot degraded: serving f32 tier]" } else { "" }
         )
     }
 

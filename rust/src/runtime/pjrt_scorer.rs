@@ -74,7 +74,10 @@ impl PjrtScorer {
     }
 
     fn with_inner<T>(&self, f: impl FnOnce(&mut Inner) -> Result<T>) -> Result<T> {
-        let mut g = self.inner.lock().unwrap();
+        // recover from poisoning: the staging buffer is overwritten from
+        // scratch by every call, so a panic mid-call leaves nothing that
+        // the next caller could observe
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         f(&mut g)
     }
 }

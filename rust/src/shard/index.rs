@@ -8,9 +8,9 @@
 //! brute/IVF/LSH.
 
 use super::ShardMap;
-use crate::config::{IndexConfig, IndexKind};
+use crate::config::{IndexConfig, IndexKind, ShardStrategy};
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::mips::brute::BruteForce;
 use crate::mips::ivf::{self, IvfIndex};
 use crate::mips::kmeans::Kmeans;
@@ -18,6 +18,7 @@ use crate::mips::lsh::{self, SrpLsh};
 use crate::mips::tiered::TieredLsh;
 use crate::mips::{MipsIndex, TopKResult};
 use crate::scorer::ScoreBackend;
+use crate::store::format::{sec_arg, tag, ByteWriter, Snapshot, SnapshotWriter, SHARED_SHARD};
 use crate::util::pool;
 use crate::util::topk::{merge_topk, Scored};
 use std::sync::Arc;
@@ -154,6 +155,165 @@ impl ShardedIndex {
     /// Number of shards.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    // ---- snapshot persistence ------------------------------------------
+
+    /// Write every shard's sections plus the shared structure: partition
+    /// shape + merged gap under `SHARD_META`, the shared IVF coarse
+    /// quantizer exactly once (at the `SHARED_SHARD` slot — per-shard IVF
+    /// bodies deliberately skip their own copy), and one section group
+    /// per shard under its shard id. A `shard-serve --shard-id S`
+    /// process opens the same file and reads only shard `S`'s group.
+    pub fn save_sections_all(&self, w: &mut SnapshotWriter) -> Result<()> {
+        if self.shards.len() >= SHARED_SHARD as usize {
+            return Err(Error::index(format!(
+                "cannot snapshot {} shards: the section id space caps at {}",
+                self.shards.len(),
+                SHARED_SHARD - 1
+            )));
+        }
+        let mut m = ByteWriter::default();
+        m.u64(self.n as u64);
+        m.u64(self.shards.len() as u64);
+        m.u8(match self.map.strategy() {
+            ShardStrategy::RoundRobin => 0,
+            ShardStrategy::Contiguous => 1,
+        });
+        match self.gap {
+            Some(g) => {
+                m.u8(1);
+                m.f64(g);
+            }
+            None => {
+                m.u8(0);
+                m.f64(0.0);
+            }
+        }
+        m.u8(self.coarse.is_some() as u8);
+        w.section(tag::SHARD_META, sec_arg(SHARED_SHARD, 0), m.bytes())?;
+        if let Some(cp) = &self.coarse {
+            crate::store::write_kmeans(w, sec_arg(SHARED_SHARD, 0), &cp.km)?;
+        }
+        for (s, sub) in self.shards.iter().enumerate() {
+            let shard = s as u32;
+            match sub {
+                SubIndex::Brute(i) => i.save_sections(w, shard)?,
+                SubIndex::Ivf(i) => i.save_body(w, shard)?,
+                SubIndex::Lsh(i) => i.save_sections(w, shard)?,
+                SubIndex::Tiered(i) => i.save_sections(w, shard)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the full sharded index from a snapshot written by
+    /// [`save_sections_all`](Self::save_sections_all). The partition is
+    /// re-derived from the config and cross-checked against the stored
+    /// shape (the fingerprint already pins `shards`/`shard_strategy`, so
+    /// a mismatch here means corruption, not misconfiguration). Shard
+    /// datasets are re-split from the global rows; per-shard structures
+    /// open from their own section groups, IVF shards sharing the single
+    /// stored coarse quantizer exactly as the build path shares it.
+    pub fn open_from(
+        snap: &Snapshot,
+        ds: &Arc<Dataset>,
+        cfg: &IndexConfig,
+        backend: Arc<dyn ScoreBackend>,
+        degraded: &mut bool,
+    ) -> Result<ShardedIndex> {
+        let bad = |why: &str| {
+            Error::data(format!("snapshot {}: shard map is inconsistent: {why}", snap.path()))
+        };
+        let mut r = snap.reader(tag::SHARD_META, sec_arg(SHARED_SHARD, 0))?;
+        let n = r.usize()?;
+        let n_shards = r.usize()?;
+        let strategy = match r.u8()? {
+            0 => ShardStrategy::RoundRobin,
+            1 => ShardStrategy::Contiguous,
+            _ => return Err(bad("unknown shard strategy")),
+        };
+        let has_gap = r.u8()? != 0;
+        let gap_value = r.f64()?;
+        let has_coarse = r.u8()? != 0;
+
+        let map = ShardMap::new(ds.n, cfg.shards, cfg.shard_strategy);
+        if n != ds.n || n_shards != map.shards() || strategy != cfg.shard_strategy {
+            return Err(bad("stored partition does not match the configured one"));
+        }
+        let shard_ds: Vec<Arc<Dataset>> = map.split(ds).into_iter().map(Arc::new).collect();
+
+        let mut coarse = None;
+        let mut shards = Vec::with_capacity(map.shards());
+        match cfg.kind {
+            IndexKind::Brute => {
+                for (s, sd) in shard_ds.iter().enumerate() {
+                    shards.push(SubIndex::Brute(BruteForce::open_from(
+                        sd.clone(),
+                        cfg,
+                        backend.clone(),
+                        snap,
+                        s as u32,
+                        degraded,
+                    )?));
+                }
+            }
+            IndexKind::Ivf => {
+                if !has_coarse {
+                    return Err(bad("IVF shards need the shared coarse quantizer section"));
+                }
+                let km = crate::store::read_kmeans(snap, sec_arg(SHARED_SHARD, 0))?;
+                let (_, n_probe) = ivf::resolve_sizes(cfg, ds.n);
+                for (s, sd) in shard_ds.iter().enumerate() {
+                    shards.push(SubIndex::Ivf(IvfIndex::open_shard(
+                        sd.clone(),
+                        cfg,
+                        backend.clone(),
+                        snap,
+                        km.clone(),
+                        n_probe,
+                        s as u32,
+                        degraded,
+                    )?));
+                }
+                let n_probe = n_probe.clamp(1, km.c);
+                coarse = Some(CoarseProbe { km, n_probe });
+            }
+            IndexKind::Lsh => {
+                for (s, sd) in shard_ds.iter().enumerate() {
+                    shards.push(SubIndex::Lsh(SrpLsh::open_from(
+                        sd.clone(),
+                        cfg,
+                        backend.clone(),
+                        snap,
+                        s as u32,
+                        degraded,
+                    )?));
+                }
+            }
+            IndexKind::Tiered => {
+                for (s, sd) in shard_ds.iter().enumerate() {
+                    shards.push(SubIndex::Tiered(TieredLsh::open_from(
+                        sd.clone(),
+                        cfg,
+                        backend.clone(),
+                        snap,
+                        s as u32,
+                        degraded,
+                    )?));
+                }
+            }
+        }
+        Ok(ShardedIndex {
+            map,
+            shards,
+            coarse,
+            parallel: cfg.shard_parallel,
+            kind: cfg.kind,
+            n: ds.n,
+            d: ds.d,
+            gap: has_gap.then_some(gap_value),
+        })
     }
 
     /// The row partition.

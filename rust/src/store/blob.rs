@@ -1,0 +1,296 @@
+//! Owned-vs-mapped storage for the big flat arrays behind the index
+//! structures (f32 rows, SQ8/SQ4/PQ code planes, IVF grouped rows).
+//!
+//! [`Blob<T>`] is a drop-in replacement for `Vec<T>` in struct fields:
+//! it derefs to `&[T]`, so every existing read-side call site (slicing,
+//! `as_ptr`, iteration, coercion to `&[T]` arguments) compiles
+//! unchanged, while the storage behind it is either an owned vector or
+//! a range of a shared read-only memory map ([`Mmap`]). Writers go
+//! through [`Blob::to_mut`], which transparently copies a mapped range
+//! into an owned vector first (copy-on-write) — mutation never touches
+//! the mapped file.
+//!
+//! ## Alignment contract
+//!
+//! A mapped `Blob<T>` is only constructed ([`Blob::from_map`]) when the
+//! byte offset is a multiple of `align_of::<T>()` and the byte length is
+//! a multiple of `size_of::<T>()`. The snapshot format guarantees much
+//! more: every section starts on a 64-byte boundary (cache-line sized,
+//! covering every SIMD load the scan kernels issue), so `mmap`-backed
+//! code planes and row storage feed the AVX2/NEON kernels directly with
+//! no copy and no realignment. `mmap` itself returns page-aligned
+//! addresses, so section offset alignment is preserved in memory.
+//!
+//! Only plain-old-data element types are permitted ([`Pod`]): every bit
+//! pattern is a valid value and the in-file layout equals the in-memory
+//! layout on little-endian targets (asserted at snapshot open, mirroring
+//! the dataset codec).
+
+use std::fs::File;
+use std::io;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Marker for element types that can be reinterpreted from raw bytes:
+/// fixed layout, no padding, no invalid bit patterns, no drop glue.
+pub trait Pod: Copy + Send + Sync + 'static {}
+
+impl Pod for u8 {}
+impl Pod for i16 {}
+impl Pod for u32 {}
+impl Pod for u64 {}
+impl Pod for f32 {}
+impl Pod for f64 {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    // Raw libc bindings: the offline registry carries no `libc` crate,
+    // and these two calls (identical signatures on Linux/macOS 64-bit,
+    // where `off_t` is i64) are all the store needs.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A shared read-only memory map of a whole file. Unmapped on drop.
+///
+/// On non-unix or non-64-bit targets [`Mmap::map`] returns
+/// `ErrorKind::Unsupported` and callers fall back to reading the file
+/// into RAM — the snapshot format works identically either way.
+pub struct Mmap {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+// The mapping is read-only for its entire lifetime, so shared access
+// from any thread is safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `file` read-only in its entirety.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn map(file: &File) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "file too large to map"));
+        }
+        let len = len as usize;
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    /// Stub for targets without the raw mmap bindings.
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn map(_file: &File) -> io::Result<Mmap> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "mmap unavailable on this target"))
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if self.len > 0 {
+            // Failure leaks the mapping; there is no recovery path and
+            // the process is usually exiting anyway.
+            let _ = unsafe { sys::munmap(self.ptr, self.len) };
+        }
+    }
+}
+
+/// `Vec<T>`-or-mapped-range storage. See the module docs.
+pub enum Blob<T: Pod> {
+    /// Heap-owned storage — what builds and copy-on-write produce.
+    Owned(Vec<T>),
+    /// A `[off, off + len·size_of::<T>())` byte range of a shared map.
+    Mapped {
+        map: Arc<Mmap>,
+        /// byte offset into the map (multiple of `align_of::<T>()`)
+        off: usize,
+        /// element count
+        len: usize,
+    },
+}
+
+impl<T: Pod> Blob<T> {
+    /// View a byte range of `map` as `[T]`. `None` when the range is out
+    /// of bounds, misaligned for `T`, or not a whole number of elements
+    /// — the caller turns that into a descriptive open error.
+    pub fn from_map(map: Arc<Mmap>, off: usize, bytes: usize) -> Option<Blob<T>> {
+        let size = std::mem::size_of::<T>();
+        if size == 0 || bytes % size != 0 || off % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        let end = off.checked_add(bytes)?;
+        if end > map.bytes().len() {
+            return None;
+        }
+        Some(Blob::Mapped { map, off, len: bytes / size })
+    }
+
+    /// Whether this blob serves directly from a memory map.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Blob::Mapped { .. })
+    }
+
+    /// Mutable access to the elements, converting a mapped range into an
+    /// owned copy first (copy-on-write).
+    pub fn to_mut(&mut self) -> &mut Vec<T> {
+        if let Blob::Mapped { .. } = self {
+            *self = Blob::Owned(self.as_slice().to_vec());
+        }
+        match self {
+            Blob::Owned(v) => v,
+            Blob::Mapped { .. } => unreachable!("mapped blob was just converted to owned"),
+        }
+    }
+
+    fn as_slice(&self) -> &[T] {
+        match self {
+            Blob::Owned(v) => v,
+            Blob::Mapped { map, off, len } => {
+                // Safety: bounds, alignment and element-size divisibility
+                // were validated in `from_map`; `T: Pod` means every bit
+                // pattern is a valid value; the map is immutable and kept
+                // alive by the Arc.
+                unsafe {
+                    std::slice::from_raw_parts(map.bytes().as_ptr().add(*off) as *const T, *len)
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod> Deref for Blob<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Blob<T> {
+    fn from(v: Vec<T>) -> Blob<T> {
+        Blob::Owned(v)
+    }
+}
+
+impl<T: Pod> Default for Blob<T> {
+    fn default() -> Blob<T> {
+        Blob::Owned(Vec::new())
+    }
+}
+
+impl<T: Pod> Clone for Blob<T> {
+    fn clone(&self) -> Blob<T> {
+        match self {
+            Blob::Owned(v) => Blob::Owned(v.clone()),
+            // cloning a mapped blob clones the Arc, not the bytes
+            Blob::Mapped { map, off, len } => {
+                Blob::Mapped { map: map.clone(), off: *off, len: *len }
+            }
+        }
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for Blob<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // print like the Vec this replaced so derived Debug output on
+        // containing structs stays familiar
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Blob<T> {
+    fn eq(&self, other: &Blob<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn owned_blob_behaves_like_vec() {
+        let mut b: Blob<u32> = vec![1u32, 2, 3].into();
+        assert_eq!(&b[..], &[1, 2, 3]);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_mapped());
+        b.to_mut().push(4);
+        assert_eq!(&b[..], &[1, 2, 3, 4]);
+        assert_eq!(b.clone(), b);
+    }
+
+    #[test]
+    fn mapped_blob_reads_and_copies_on_write() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("gmips_blob_test_{}", std::process::id()));
+        {
+            let mut f = File::create(&path).unwrap();
+            // 64 zero bytes of "header", then 4 f32 values
+            f.write_all(&[0u8; 64]).unwrap();
+            for v in [1.5f32, -2.0, 0.0, 3.25] {
+                f.write_all(&v.to_le_bytes()).unwrap();
+            }
+        }
+        let file = File::open(&path).unwrap();
+        match Mmap::map(&file) {
+            Ok(map) => {
+                let map = Arc::new(map);
+                let mut b: Blob<f32> = Blob::from_map(map.clone(), 64, 16).unwrap();
+                assert!(b.is_mapped());
+                assert_eq!(&b[..], &[1.5, -2.0, 0.0, 3.25]);
+                // misaligned / out-of-bounds / ragged ranges are rejected
+                assert!(Blob::<f32>::from_map(map.clone(), 65, 8).is_none());
+                assert!(Blob::<f32>::from_map(map.clone(), 64, 17).is_none());
+                assert!(Blob::<f32>::from_map(map.clone(), 64, 1 << 30).is_none());
+                // copy-on-write detaches from the map
+                b.to_mut()[0] = 9.0;
+                assert!(!b.is_mapped());
+                assert_eq!(b[0], 9.0);
+            }
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::Unsupported),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,756 @@
+//! The on-disk snapshot format and its atomic writer / validating
+//! reader.
+//!
+//! ## Layout
+//!
+//! ```text
+//! offset 0    header (48 bytes):
+//!               [0..8)   magic  "GMIPSNP1"
+//!               [8..12)  format version (u32 LE)
+//!               [12..16) reserved (zero)
+//!               [16..24) config fingerprint (u64 LE)
+//!               [24..32) section-table offset (u64 LE)
+//!               [32..40) section count (u64 LE)
+//!               [40..48) FNV-1a-64 of bytes [0..40)
+//! offset 64   first section (every section starts 64-byte aligned,
+//!             zero-padded gaps between sections)
+//! ...
+//! table_off   section table: 32-byte entries
+//!               { tag u32, arg u32, off u64, len u64, checksum u64 }
+//! ```
+//!
+//! All integers are little-endian; opening asserts a little-endian
+//! target (the same contract as the dataset codec). `arg` carries
+//! `shard << 16 | slot` so one file holds per-shard copies of a section
+//! (shard `0xFFFF` marks shard-shared sections such as the coarse
+//! quantizer). Checksums are FNV-1a-64 over the exact section bytes.
+//!
+//! ## Crash safety
+//!
+//! [`SnapshotWriter`] writes everything to `<path>.tmp`, `fsync`s it,
+//! then atomically renames over `<path>` and `fsync`s the directory. A
+//! crash at any point leaves the previous snapshot untouched; a stale
+//! `.tmp` from a crashed save is simply overwritten by the next one.
+//!
+//! ## Validation
+//!
+//! [`Snapshot::open`] eagerly validates magic, version, header
+//! checksum, table bounds, and every section's bounds and alignment.
+//! Per-section content checksums are verified on access: required
+//! sections fail the open with a descriptive error, while the quantized
+//! shadow sections use the `_soft` accessors so the caller can degrade
+//! to the f32 tier instead of refusing to serve.
+
+use std::fs::{self, File};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::store::blob::{Blob, Mmap, Pod};
+
+/// File magic: "GMIPS sNaPshot", format family 1.
+pub const MAGIC: [u8; 8] = *b"GMIPSNP1";
+/// Current format version. Bump on any incompatible layout change.
+pub const VERSION: u32 = 1;
+/// Section alignment: cache-line sized, covering every SIMD load width
+/// the scan kernels use, so mapped sections feed them directly.
+pub const ALIGN: usize = 64;
+/// Header length in bytes.
+pub const HEADER_LEN: usize = 48;
+/// Serialized section-table entry length in bytes.
+pub const ENTRY_LEN: usize = 32;
+/// Shard value in `arg` marking a section shared by all shards.
+pub const SHARED_SHARD: u32 = 0xFFFF;
+
+const ZEROS: [u8; ALIGN] = [0u8; ALIGN];
+// backstop against absurd section counts from corrupt headers
+const MAX_SECTIONS: u64 = 1 << 20;
+
+/// Section tags. Kept dense and append-only: renumbering is a format
+/// version bump.
+pub mod tag {
+    pub const CONFIG_STR: u32 = 1;
+    pub const DATASET_META: u32 = 2;
+    pub const DATASET_ROWS: u32 = 3;
+    pub const SHARD_META: u32 = 4;
+    pub const KMEANS: u32 = 5;
+    pub const BRUTE_META: u32 = 6;
+    pub const IVF_META: u32 = 7;
+    pub const IVF_GROUPED: u32 = 8;
+    pub const LSH_META: u32 = 9;
+    pub const TIERED_META: u32 = 10;
+    pub const SQ8_META: u32 = 11;
+    pub const SQ8_CODES: u32 = 12;
+    pub const SQ4_META: u32 = 13;
+    pub const SQ4_CODES: u32 = 14;
+    pub const PQ_META: u32 = 15;
+    pub const PQ_CODES: u32 = 16;
+}
+
+/// Human name for a tag, for error messages.
+pub fn tag_name(t: u32) -> &'static str {
+    match t {
+        tag::CONFIG_STR => "config-string",
+        tag::DATASET_META => "dataset-meta",
+        tag::DATASET_ROWS => "dataset-rows",
+        tag::SHARD_META => "shard-meta",
+        tag::KMEANS => "kmeans",
+        tag::BRUTE_META => "brute-meta",
+        tag::IVF_META => "ivf-meta",
+        tag::IVF_GROUPED => "ivf-grouped-rows",
+        tag::LSH_META => "lsh-meta",
+        tag::TIERED_META => "tiered-meta",
+        tag::SQ8_META => "sq8-meta",
+        tag::SQ8_CODES => "sq8-codes",
+        tag::SQ4_META => "sq4-meta",
+        tag::SQ4_CODES => "sq4-codes",
+        tag::PQ_META => "pq-meta",
+        tag::PQ_CODES => "pq-codes",
+        _ => "unknown-section",
+    }
+}
+
+/// Pack a shard id and a per-shard slot into a section `arg`.
+pub fn sec_arg(shard: u32, slot: u32) -> u32 {
+    (shard << 16) | (slot & 0xFFFF)
+}
+
+/// FNV-1a 64-bit hash — the format's checksum and fingerprint hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Reinterpret a Pod slice as its raw little-endian bytes.
+pub fn as_bytes<T: Pod>(v: &[T]) -> &[u8] {
+    le_guard();
+    // Safety: T is Pod (no padding, fixed layout); lifetime is tied to v.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// The format stores native little-endian bytes; refuse to run
+/// elsewhere (same contract as the GMD1 dataset codec).
+fn le_guard() {
+    assert!(cfg!(target_endian = "little"), "snapshot format requires a little-endian target");
+}
+
+/// One entry of the section table.
+#[derive(Clone, Copy, Debug)]
+pub struct SectionEntry {
+    pub tag: u32,
+    pub arg: u32,
+    pub off: u64,
+    pub len: u64,
+    pub checksum: u64,
+}
+
+// ---------------------------------------------------------------------------
+// writer
+
+/// Streams sections into `<path>.tmp`, then commits atomically in
+/// [`SnapshotWriter::finish`]. Dropping an unfinished writer removes
+/// the temp file.
+pub struct SnapshotWriter {
+    file: File,
+    tmp: PathBuf,
+    dest: PathBuf,
+    pos: u64,
+    entries: Vec<SectionEntry>,
+    finished: bool,
+}
+
+impl SnapshotWriter {
+    /// Start a snapshot destined for `path`.
+    pub fn create(path: &str) -> Result<SnapshotWriter> {
+        le_guard();
+        let dest = PathBuf::from(path);
+        if let Some(dir) = dest.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = PathBuf::from(format!("{path}.tmp"));
+        let mut file = File::create(&tmp)?;
+        // placeholder header; the real one lands in finish() once the
+        // table offset and fingerprint are known
+        file.write_all(&[0u8; HEADER_LEN])?;
+        Ok(SnapshotWriter {
+            file,
+            tmp,
+            dest,
+            pos: HEADER_LEN as u64,
+            entries: Vec::new(),
+            finished: false,
+        })
+    }
+
+    fn pad_to_align(&mut self) -> Result<()> {
+        let rem = (self.pos % ALIGN as u64) as usize;
+        if rem != 0 {
+            let pad = ALIGN - rem;
+            self.file.write_all(&ZEROS[..pad])?;
+            self.pos += pad as u64;
+        }
+        Ok(())
+    }
+
+    /// Append one section (64-byte aligned, checksummed).
+    pub fn section(&mut self, tag: u32, arg: u32, bytes: &[u8]) -> Result<()> {
+        self.pad_to_align()?;
+        self.entries.push(SectionEntry {
+            tag,
+            arg,
+            off: self.pos,
+            len: bytes.len() as u64,
+            checksum: fnv1a64(bytes),
+        });
+        self.file.write_all(bytes)?;
+        self.pos += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Write the section table and header, fsync, and atomically rename
+    /// over the destination. `fingerprint` is the config fingerprint
+    /// recorded in the header.
+    pub fn finish(mut self, fingerprint: u64) -> Result<()> {
+        self.pad_to_align()?;
+        let table_off = self.pos;
+        let mut bw = ByteWriter::default();
+        for e in &self.entries {
+            bw.u32(e.tag);
+            bw.u32(e.arg);
+            bw.u64(e.off);
+            bw.u64(e.len);
+            bw.u64(e.checksum);
+        }
+        self.file.write_all(bw.bytes())?;
+
+        let mut header = [0u8; HEADER_LEN];
+        header[0..8].copy_from_slice(&MAGIC);
+        header[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        // [12..16) reserved, zero
+        header[16..24].copy_from_slice(&fingerprint.to_le_bytes());
+        header[24..32].copy_from_slice(&table_off.to_le_bytes());
+        header[32..40].copy_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        let hsum = fnv1a64(&header[..40]);
+        header[40..48].copy_from_slice(&hsum.to_le_bytes());
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.write_all(&header)?;
+
+        // durability: file contents first, then the rename, then the
+        // directory entry
+        self.file.sync_all()?;
+        fs::rename(&self.tmp, &self.dest)?;
+        self.finished = true;
+        #[cfg(unix)]
+        {
+            let dir = match self.dest.parent() {
+                Some(d) if !d.as_os_str().is_empty() => d,
+                _ => Path::new("."),
+            };
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SnapshotWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reader
+
+/// How to bring snapshot bytes into the process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpenMode {
+    /// Read the whole file into RAM.
+    Read,
+    /// Zero-copy `mmap`; falls back to [`OpenMode::Read`] on targets
+    /// without mmap support.
+    Mmap,
+}
+
+enum SnapBytes {
+    Owned(Vec<u8>),
+    Mapped(Arc<Mmap>),
+}
+
+/// An opened, header-validated snapshot.
+pub struct Snapshot {
+    bytes: SnapBytes,
+    /// config fingerprint from the header
+    pub fingerprint: u64,
+    sections: Vec<SectionEntry>,
+    path: String,
+}
+
+impl Snapshot {
+    /// Open and validate header + section table. Content checksums are
+    /// verified on section access.
+    pub fn open(path: &str, mode: OpenMode) -> Result<Snapshot> {
+        le_guard();
+        let bytes = match mode {
+            OpenMode::Read => SnapBytes::Owned(read_file(path)?),
+            OpenMode::Mmap => {
+                let file = File::open(path)
+                    .map_err(|e| Error::data(format!("snapshot {path}: {e}")))?;
+                match Mmap::map(&file) {
+                    Ok(m) => SnapBytes::Mapped(Arc::new(m)),
+                    // unsupported target — identical behavior, owned bytes
+                    Err(e) if e.kind() == std::io::ErrorKind::Unsupported => {
+                        SnapBytes::Owned(read_file(path)?)
+                    }
+                    Err(e) => {
+                        return Err(Error::data(format!("snapshot {path}: mmap failed: {e}")))
+                    }
+                }
+            }
+        };
+        let mut snap = Snapshot {
+            bytes,
+            fingerprint: 0,
+            sections: Vec::new(),
+            path: path.to_string(),
+        };
+        snap.validate_layout()?;
+        Ok(snap)
+    }
+
+    fn validate_layout(&mut self) -> Result<()> {
+        let data = self.data();
+        let path = &self.path;
+        if data.len() < HEADER_LEN {
+            return Err(Error::data(format!(
+                "snapshot {path}: file is {} bytes, smaller than the {HEADER_LEN}-byte header \
+                 (truncated?)",
+                data.len()
+            )));
+        }
+        if data[0..8] != MAGIC {
+            return Err(Error::data(format!(
+                "snapshot {path}: bad magic — not a gmips snapshot file"
+            )));
+        }
+        let version = u32::from_le_bytes(data[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::data(format!(
+                "snapshot {path}: format version {version} is not supported by this binary \
+                 (expected {VERSION}); rebuild the snapshot with `gmips build --save`"
+            )));
+        }
+        let hsum = u64::from_le_bytes(data[40..48].try_into().unwrap());
+        if fnv1a64(&data[..40]) != hsum {
+            return Err(Error::data(format!(
+                "snapshot {path}: header checksum mismatch — file is corrupt or truncated"
+            )));
+        }
+        let fingerprint = u64::from_le_bytes(data[16..24].try_into().unwrap());
+        let table_off = u64::from_le_bytes(data[24..32].try_into().unwrap());
+        let n_sections = u64::from_le_bytes(data[32..40].try_into().unwrap());
+        let flen = data.len() as u64;
+        if n_sections > MAX_SECTIONS {
+            return Err(Error::data(format!(
+                "snapshot {path}: implausible section count {n_sections} — file is corrupt"
+            )));
+        }
+        let table_len = n_sections * ENTRY_LEN as u64;
+        let table_end = table_off.checked_add(table_len).unwrap_or(u64::MAX);
+        if table_off < HEADER_LEN as u64 || table_off % ALIGN as u64 != 0 || table_end > flen {
+            return Err(Error::data(format!(
+                "snapshot {path}: section table out of bounds (offset {table_off}, \
+                 {n_sections} entries, file {flen} bytes) — file is corrupt or truncated"
+            )));
+        }
+        let mut sections = Vec::with_capacity(n_sections as usize);
+        for i in 0..n_sections as usize {
+            let b = &data[table_off as usize + i * ENTRY_LEN..][..ENTRY_LEN];
+            let e = SectionEntry {
+                tag: u32::from_le_bytes(b[0..4].try_into().unwrap()),
+                arg: u32::from_le_bytes(b[4..8].try_into().unwrap()),
+                off: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+                len: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+                checksum: u64::from_le_bytes(b[24..32].try_into().unwrap()),
+            };
+            let end = e.off.checked_add(e.len).unwrap_or(u64::MAX);
+            if e.off < HEADER_LEN as u64 || e.off % ALIGN as u64 != 0 || end > table_off {
+                return Err(Error::data(format!(
+                    "snapshot {path}: section {} (arg {:#x}) out of bounds \
+                     (offset {}, len {}) — file is corrupt or truncated",
+                    tag_name(e.tag),
+                    e.arg,
+                    e.off,
+                    e.len
+                )));
+            }
+            sections.push(e);
+        }
+        self.fingerprint = fingerprint;
+        self.sections = sections;
+        Ok(())
+    }
+
+    fn data(&self) -> &[u8] {
+        match &self.bytes {
+            SnapBytes::Owned(v) => v,
+            SnapBytes::Mapped(m) => m.bytes(),
+        }
+    }
+
+    /// Whether the snapshot is served from a memory map.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.bytes, SnapBytes::Mapped(_))
+    }
+
+    /// The snapshot's path, for error/log messages.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// All section-table entries (corruption drills introspect these).
+    pub fn sections(&self) -> &[SectionEntry] {
+        &self.sections
+    }
+
+    fn find(&self, tag: u32, arg: u32) -> Option<&SectionEntry> {
+        self.sections.iter().find(|e| e.tag == tag && e.arg == arg)
+    }
+
+    fn section_slice(&self, e: &SectionEntry) -> &[u8] {
+        // bounds were validated in validate_layout
+        &self.data()[e.off as usize..(e.off + e.len) as usize]
+    }
+
+    /// Checksum-verified bytes of a required section; missing or
+    /// corrupt → descriptive error.
+    pub fn bytes(&self, tag: u32, arg: u32) -> Result<&[u8]> {
+        let e = self.find(tag, arg).ok_or_else(|| {
+            Error::data(format!(
+                "snapshot {}: missing required section {} (arg {:#x}) — file was built by an \
+                 incompatible configuration or is corrupt",
+                self.path,
+                tag_name(tag),
+                arg
+            ))
+        })?;
+        let b = self.section_slice(e);
+        if fnv1a64(b) != e.checksum {
+            return Err(Error::data(format!(
+                "snapshot {}: checksum mismatch in section {} (arg {:#x}) — file is corrupt",
+                self.path,
+                tag_name(tag),
+                arg
+            )));
+        }
+        Ok(b)
+    }
+
+    /// Like [`Snapshot::bytes`], but missing/corrupt → `None` so the
+    /// caller can degrade (quantized shadow sections).
+    pub fn bytes_soft(&self, tag: u32, arg: u32) -> Option<&[u8]> {
+        let e = self.find(tag, arg)?;
+        let b = self.section_slice(e);
+        if fnv1a64(b) != e.checksum {
+            return None;
+        }
+        Some(b)
+    }
+
+    fn blob_from_entry<T: Pod>(&self, e: &SectionEntry) -> Option<Blob<T>> {
+        match &self.bytes {
+            SnapBytes::Owned(_) => {
+                let b = self.section_slice(e);
+                let size = std::mem::size_of::<T>();
+                if b.len() % size != 0 {
+                    return None;
+                }
+                let len = b.len() / size;
+                let mut v: Vec<T> = Vec::with_capacity(len);
+                // Safety: T is Pod; byte-for-byte copy of exactly len
+                // elements into a fresh, properly aligned Vec buffer.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, b.len());
+                    v.set_len(len);
+                }
+                Some(Blob::Owned(v))
+            }
+            SnapBytes::Mapped(m) => Blob::from_map(m.clone(), e.off as usize, e.len as usize),
+        }
+    }
+
+    /// A typed view of an aligned-blob section: zero-copy when mapped,
+    /// copied into an owned `Vec` otherwise. Checksum-verified.
+    pub fn blob<T: Pod>(&self, tag: u32, arg: u32) -> Result<Blob<T>> {
+        self.bytes(tag, arg)?; // presence + checksum
+        let e = *self.find(tag, arg).expect("section present: bytes() succeeded");
+        self.blob_from_entry(&e).ok_or_else(|| {
+            Error::data(format!(
+                "snapshot {}: section {} (arg {:#x}) has a ragged length for its element type \
+                 — file is corrupt",
+                self.path,
+                tag_name(tag),
+                arg
+            ))
+        })
+    }
+
+    /// Soft variant of [`Snapshot::blob`] for degradable sections.
+    pub fn blob_soft<T: Pod>(&self, tag: u32, arg: u32) -> Option<Blob<T>> {
+        self.bytes_soft(tag, arg)?;
+        let e = *self.find(tag, arg)?;
+        self.blob_from_entry(&e)
+    }
+
+    /// A cursor over a required meta section's bytes.
+    pub fn reader(&self, tag: u32, arg: u32) -> Result<ByteReader<'_>> {
+        Ok(ByteReader::new(self.bytes(tag, arg)?, tag_name(tag)))
+    }
+
+    /// Soft cursor for degradable meta sections.
+    pub fn reader_soft(&self, tag: u32, arg: u32) -> Option<ByteReader<'_>> {
+        Some(ByteReader::new(self.bytes_soft(tag, arg)?, tag_name(tag)))
+    }
+}
+
+fn read_file(path: &str) -> Result<Vec<u8>> {
+    let mut f = File::open(path).map_err(|e| Error::data(format!("snapshot {path}: {e}")))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).map_err(|e| Error::data(format!("snapshot {path}: {e}")))?;
+    Ok(buf)
+}
+
+// ---------------------------------------------------------------------------
+// meta-section codecs
+
+/// Little-endian append-only buffer for meta sections.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    /// Length-prefixed Pod slice.
+    pub fn slice<T: Pod>(&mut self, v: &[T]) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(as_bytes(v));
+    }
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Bounds-checked cursor over a meta section. Every read that would run
+/// past the end returns a descriptive error instead of panicking, which
+/// is what makes bit-flipped length prefixes safe.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8], what: &'static str) -> ByteReader<'a> {
+        le_guard();
+        ByteReader { buf, pos: 0, what }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).unwrap_or(usize::MAX);
+        if end > self.buf.len() {
+            return Err(Error::data(format!(
+                "snapshot section {}: truncated (needed {} bytes at offset {}, have {})",
+                self.what,
+                n,
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let b = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(b)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            Error::data(format!(
+                "snapshot section {}: value {v} does not fit in usize on this target",
+                self.what
+            ))
+        })
+    }
+
+    /// Length-prefixed Pod vector.
+    pub fn vec<T: Pod>(&mut self) -> Result<Vec<T>> {
+        let len = self.usize()?;
+        let size = std::mem::size_of::<T>();
+        let nbytes = len.checked_mul(size).ok_or_else(|| {
+            Error::data(format!(
+                "snapshot section {}: implausible vector length {len} — corrupt",
+                self.what
+            ))
+        })?;
+        let b = self.take(nbytes)?;
+        let mut v: Vec<T> = Vec::with_capacity(len);
+        // Safety: T is Pod; byte copy of exactly len elements into a
+        // fresh Vec buffer (which is aligned for T).
+        unsafe {
+            std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, nbytes);
+            v.set_len(len);
+        }
+        Ok(v)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.usize()?;
+        let b = self.take(len)?;
+        String::from_utf8(b.to_vec()).map_err(|_| {
+            Error::data(format!("snapshot section {}: invalid UTF-8 string — corrupt", self.what))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("gmips_fmt_{}_{}", std::process::id(), name))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn round_trip_and_alignment() {
+        let path = tmp_path("rt");
+        let mut w = SnapshotWriter::create(&path).unwrap();
+        w.section(tag::CONFIG_STR, 0, b"hello").unwrap();
+        let rows: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        w.section(tag::DATASET_ROWS, 0, as_bytes(&rows)).unwrap();
+        w.finish(fnv1a64(b"hello")).unwrap();
+
+        for mode in [OpenMode::Read, OpenMode::Mmap] {
+            let snap = Snapshot::open(&path, mode).unwrap();
+            assert_eq!(snap.fingerprint, fnv1a64(b"hello"));
+            assert_eq!(snap.bytes(tag::CONFIG_STR, 0).unwrap(), b"hello");
+            let blob: Blob<f32> = snap.blob(tag::DATASET_ROWS, 0).unwrap();
+            assert_eq!(&blob[..], &rows[..]);
+            for e in snap.sections() {
+                assert_eq!(e.off % ALIGN as u64, 0, "section {} misaligned", tag_name(e.tag));
+            }
+            assert!(snap.bytes(tag::KMEANS, 0).is_err(), "missing section must error");
+        }
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn byte_codec_round_trip_and_truncation() {
+        let mut bw = ByteWriter::default();
+        bw.u64(42);
+        bw.f64(-1.25);
+        bw.slice(&[7u32, 8, 9]);
+        bw.str("gmips");
+        let buf = bw.bytes().to_vec();
+
+        let mut r = ByteReader::new(&buf, "test");
+        assert_eq!(r.u64().unwrap(), 42);
+        assert_eq!(r.f64().unwrap(), -1.25);
+        assert_eq!(r.vec::<u32>().unwrap(), vec![7, 8, 9]);
+        assert_eq!(r.str().unwrap(), "gmips");
+
+        // truncated buffer: reads error, never panic
+        let mut r = ByteReader::new(&buf[..10], "test");
+        assert_eq!(r.u64().unwrap(), 42);
+        assert!(r.f64().is_err());
+        // corrupt length prefix: huge value errors cleanly
+        let mut bad = buf.clone();
+        bad[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = ByteReader::new(&bad, "test");
+        let _ = r.u64().unwrap();
+        let _ = r.f64().unwrap();
+        assert!(r.vec::<u32>().is_err());
+    }
+
+    #[test]
+    fn interrupted_save_leaves_previous_snapshot_intact() {
+        let path = tmp_path("atomic");
+        let mut w = SnapshotWriter::create(&path).unwrap();
+        w.section(tag::CONFIG_STR, 0, b"v1").unwrap();
+        w.finish(fnv1a64(b"v1")).unwrap();
+
+        // simulate a crash mid-save: garbage temp file next to the
+        // snapshot, never renamed
+        fs::write(format!("{path}.tmp"), b"garbage from a crashed save").unwrap();
+        let snap = Snapshot::open(&path, OpenMode::Read).unwrap();
+        assert_eq!(snap.bytes(tag::CONFIG_STR, 0).unwrap(), b"v1");
+
+        // a later save overwrites the stale temp file and commits
+        let mut w = SnapshotWriter::create(&path).unwrap();
+        w.section(tag::CONFIG_STR, 0, b"v2").unwrap();
+        w.finish(fnv1a64(b"v2")).unwrap();
+        let snap = Snapshot::open(&path, OpenMode::Read).unwrap();
+        assert_eq!(snap.bytes(tag::CONFIG_STR, 0).unwrap(), b"v2");
+        assert!(!Path::new(&format!("{path}.tmp")).exists());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn dropped_writer_removes_temp_file() {
+        let path = tmp_path("drop");
+        {
+            let mut w = SnapshotWriter::create(&path).unwrap();
+            w.section(tag::CONFIG_STR, 0, b"x").unwrap();
+            // dropped without finish()
+        }
+        assert!(!Path::new(&format!("{path}.tmp")).exists());
+        assert!(!Path::new(&path).exists());
+    }
+}

@@ -1,0 +1,327 @@
+//! Crash-safe persistent index store.
+//!
+//! The amortization argument of the paper rests on paying the MIPS
+//! preprocessing cost *once* — this module makes that literal across
+//! process restarts. A snapshot is a single file holding everything a
+//! serving process needs: the dataset rows, the built index structure
+//! for any of the four kinds (brute/IVF/LSH/tiered, monolithic or
+//! sharded), and the SQ8/SQ4/PQ quantized shadow codes, all in one
+//! checksummed, versioned container (see [`format`] for the layout and
+//! the crash-safety story, [`blob`] for the mmap alignment contract).
+//!
+//! Design points:
+//!
+//! * **Atomic save** — [`save_index`] writes `<path>.tmp` and renames;
+//!   a crash mid-save never clobbers the previous good snapshot.
+//! * **Zero-copy open** — with `index.mmap = true` (default) the big
+//!   sections (f32 rows, IVF grouped rows, quantized code planes) are
+//!   served straight from the mapped file through [`blob::Blob`]; the
+//!   f32 and integer scan kernels run against the mapped bytes with no
+//!   deserialization. `index.mmap = false` reads into RAM instead.
+//! * **Config fingerprint** — the build-affecting config fields are
+//!   serialized to a human-readable string, hashed into the header, and
+//!   stored verbatim; opening under a different build config fails with
+//!   both strings in the error instead of silently serving stale data.
+//!   Query-time knobs (`n_probe`, `overscan`, `shard_parallel`, `path`,
+//!   `mmap`, temperature) are deliberately excluded so they can change
+//!   between save and open.
+//! * **Degrade over refuse** — a corrupt quantized shadow section drops
+//!   the tier ladder and serves from the f32 tier (answers stay
+//!   bit-identical by the coverage-certificate contract), with a log
+//!   line and a stats flag. Corruption anywhere else is a descriptive
+//!   error; truncated or bit-flipped files never panic.
+//! * **Reopen ≙ rebuild** — a reopened index is bit-identical to a
+//!   fresh build under the same config, including the IVF pending
+//!   ingest segment, so `update_row` + `compact()` keep working and
+//!   `compact()` can re-snapshot.
+
+pub mod blob;
+pub mod format;
+
+use std::sync::Arc;
+
+use crate::config::{Config, IndexKind};
+use crate::data::{self, Dataset};
+use crate::error::{Error, Result};
+use crate::mips::kmeans::Kmeans;
+use crate::mips::{self, BuiltIndex, MipsIndex};
+use crate::scorer::ScoreBackend;
+use crate::shard::ShardedIndex;
+
+pub use blob::{Blob, Mmap};
+pub use format::{
+    fnv1a64, sec_arg, tag, ByteReader, ByteWriter, OpenMode, SectionEntry, Snapshot,
+    SnapshotWriter, SHARED_SHARD, VERSION,
+};
+
+/// Result of [`open_index`] / [`load_or_build`].
+pub struct Opened {
+    pub ds: Arc<Dataset>,
+    pub index: BuiltIndex,
+    /// a quantized shadow section was corrupt and the index serves from
+    /// the f32 tier (answers unchanged, bandwidth savings lost)
+    pub degraded: bool,
+    /// the index was built fresh (no usable snapshot at `index.path`)
+    pub built: bool,
+}
+
+/// The build-affecting config fields, serialized deterministically.
+/// Stored verbatim in the snapshot and hashed into the header; any
+/// difference at open time is a descriptive config-mismatch error.
+pub fn fingerprint_string(cfg: &Config) -> String {
+    let d = &cfg.data;
+    let i = &cfg.index;
+    format!(
+        "gmips-snapshot-v{VERSION} \
+         data(kind={} n={} d={} clusters={} noise={} zipf_s={} seed={} path={:?}) \
+         index(kind={} n_clusters={} kmeans_iters={} train_sample={} tables={} bits={} \
+         rungs={} quant={} quant_block={} pq_m={} pq_bits={} shards={} shard_strategy={} \
+         seed={})",
+        d.kind.name(),
+        d.n,
+        d.d,
+        d.clusters,
+        d.noise,
+        d.zipf_s,
+        d.seed,
+        d.path,
+        i.kind.name(),
+        i.n_clusters,
+        i.kmeans_iters,
+        i.train_sample,
+        i.tables,
+        i.bits,
+        i.rungs,
+        i.quant.name(),
+        i.quant_block,
+        i.pq_m,
+        i.pq_bits,
+        i.shards,
+        i.shard_strategy.name(),
+        i.seed,
+    )
+}
+
+/// Save a built index (any kind, monolithic or sharded) together with
+/// its dataset as one atomic snapshot file at `path`.
+pub fn save_index(path: &str, cfg: &Config, ds: &Dataset, index: &BuiltIndex) -> Result<()> {
+    let fp = fingerprint_string(cfg);
+    let mut w = SnapshotWriter::create(path)?;
+    w.section(tag::CONFIG_STR, 0, fp.as_bytes())?;
+    let mut bw = ByteWriter::default();
+    bw.u64(ds.n as u64);
+    bw.u64(ds.d as u64);
+    bw.slice(&ds.labels);
+    w.section(tag::DATASET_META, 0, bw.bytes())?;
+    w.section(tag::DATASET_ROWS, 0, format::as_bytes(&ds.data))?;
+    match index {
+        BuiltIndex::Mono(ix) => ix.save_sections(&mut w, 0)?,
+        BuiltIndex::Sharded(sx) => sx.save_sections_all(&mut w)?,
+    }
+    w.finish(fnv1a64(fp.as_bytes()))
+}
+
+/// Open a snapshot saved by [`save_index`], validating version,
+/// fingerprint, bounds, and checksums. The index kind and shard count
+/// come from `cfg` and must match what was saved (enforced through the
+/// fingerprint).
+pub fn open_index(path: &str, cfg: &Config, backend: Arc<dyn ScoreBackend>) -> Result<Opened> {
+    let mode = if cfg.index.mmap { OpenMode::Mmap } else { OpenMode::Read };
+    let snap = Snapshot::open(path, mode)?;
+
+    let stored = std::str::from_utf8(snap.bytes(tag::CONFIG_STR, 0)?)
+        .map_err(|_| {
+            Error::data(format!("snapshot {path}: config string is not UTF-8 — file is corrupt"))
+        })?
+        .to_string();
+    if snap.fingerprint != fnv1a64(stored.as_bytes()) {
+        return Err(Error::data(format!(
+            "snapshot {path}: header fingerprint disagrees with the stored config string — \
+             file is corrupt"
+        )));
+    }
+    let expect = fingerprint_string(cfg);
+    if stored != expect {
+        return Err(Error::config(format!(
+            "snapshot {path} was built under a different configuration:\n  snapshot: {stored}\n  \
+             current:  {expect}\nrebuild it with `gmips build --save {path}` (or point \
+             index.path elsewhere)"
+        )));
+    }
+
+    let mut r = snap.reader(tag::DATASET_META, 0)?;
+    let n = r.usize()?;
+    let d = r.usize()?;
+    let labels: Vec<u32> = r.vec()?;
+    let rows: Blob<f32> = snap.blob(tag::DATASET_ROWS, 0)?;
+    let ds = Arc::new(Dataset::from_blob(rows, n, d, labels)?);
+
+    let mut degraded = false;
+    let index = if cfg.index.shards > 1 {
+        BuiltIndex::Sharded(Arc::new(ShardedIndex::open_from(
+            &snap,
+            &ds,
+            &cfg.index,
+            backend,
+            &mut degraded,
+        )?))
+    } else {
+        let icfg = &cfg.index;
+        BuiltIndex::Mono(match icfg.kind {
+            IndexKind::Brute => Arc::new(mips::brute::BruteForce::open_from(
+                ds.clone(),
+                icfg,
+                backend,
+                &snap,
+                0,
+                &mut degraded,
+            )?) as Arc<dyn MipsIndex>,
+            IndexKind::Ivf => Arc::new(mips::ivf::IvfIndex::open_from(
+                ds.clone(),
+                icfg,
+                backend,
+                &snap,
+                &mut degraded,
+            )?) as Arc<dyn MipsIndex>,
+            IndexKind::Lsh => Arc::new(mips::lsh::SrpLsh::open_from(
+                ds.clone(),
+                icfg,
+                backend,
+                &snap,
+                0,
+                &mut degraded,
+            )?) as Arc<dyn MipsIndex>,
+            IndexKind::Tiered => Arc::new(mips::tiered::TieredLsh::open_from(
+                ds.clone(),
+                icfg,
+                backend,
+                &snap,
+                0,
+                &mut degraded,
+            )?) as Arc<dyn MipsIndex>,
+        })
+    };
+    if degraded {
+        eprintln!(
+            "warning: snapshot {path}: quantized shadow section corrupt or unreadable — \
+             serving from the f32 tier (answers unchanged, screening bandwidth lost)"
+        );
+    }
+    Ok(Opened { ds, index, degraded, built: false })
+}
+
+/// The engine/learner/shard-server entry point: warm-open the snapshot
+/// at `cfg.index.path` when it exists, otherwise build fresh (and, when
+/// `save_on_build` is set and a path is configured, persist the build so
+/// the next start is warm).
+pub fn load_or_build(
+    cfg: &Config,
+    backend: Arc<dyn ScoreBackend>,
+    save_on_build: bool,
+) -> Result<Opened> {
+    let path = cfg.index.path.clone();
+    if !path.is_empty() && std::path::Path::new(&path).exists() {
+        return open_index(&path, cfg, backend);
+    }
+    let ds = Arc::new(data::load_or_generate(&cfg.data));
+    let index = mips::build_index_typed(&ds, &cfg.index, backend)?;
+    if !path.is_empty() && save_on_build {
+        save_index(&path, cfg, &ds, &index)?;
+    }
+    Ok(Opened { ds, index, degraded: false, built: true })
+}
+
+// ---------------------------------------------------------------------------
+// shared sub-structure codecs
+
+/// Serialize a trained k-means quantizer into a `KMEANS` section.
+pub(crate) fn write_kmeans(w: &mut SnapshotWriter, arg: u32, km: &Kmeans) -> Result<()> {
+    let mut bw = ByteWriter::default();
+    bw.u64(km.c as u64);
+    bw.u64(km.d as u64);
+    bw.f64(km.inertia);
+    bw.slice(&km.centroids);
+    w.section(tag::KMEANS, arg, bw.bytes())
+}
+
+/// Read a `KMEANS` section back.
+pub(crate) fn read_kmeans(snap: &Snapshot, arg: u32) -> Result<Kmeans> {
+    let mut r = snap.reader(tag::KMEANS, arg)?;
+    let c = r.usize()?;
+    let d = r.usize()?;
+    let inertia = r.f64()?;
+    let centroids: Vec<f32> = r.vec()?;
+    let want = c.checked_mul(d).unwrap_or(usize::MAX);
+    if centroids.len() != want {
+        return Err(Error::data(format!(
+            "snapshot {}: kmeans section shape mismatch (c={c} d={d} but {} centroid values)",
+            snap.path(),
+            centroids.len()
+        )));
+    }
+    Ok(Kmeans { centroids, c, d, inertia })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::scorer::NativeScorer;
+
+    #[test]
+    fn fingerprint_tracks_build_knobs_only() {
+        let cfg = Config::default();
+        let base = fingerprint_string(&cfg);
+        assert_eq!(base, fingerprint_string(&cfg), "deterministic");
+
+        let mut c = cfg.clone();
+        c.index.n_clusters = 999;
+        assert_ne!(base, fingerprint_string(&c), "build knob must change the fingerprint");
+        let mut c = cfg.clone();
+        c.data.seed = 999;
+        assert_ne!(base, fingerprint_string(&c));
+
+        // query-time knobs must NOT change it
+        let mut c = cfg.clone();
+        c.index.n_probe = 99;
+        c.index.overscan = 9;
+        c.index.shard_parallel = false;
+        c.index.path = "/tmp/x.idx".to_string();
+        c.index.mmap = false;
+        assert_eq!(base, fingerprint_string(&c));
+    }
+
+    #[test]
+    fn save_open_round_trip_and_config_mismatch() {
+        let path = std::env::temp_dir()
+            .join(format!("gmips_store_rt_{}.idx", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let mut cfg = Config::default();
+        cfg.data.n = 400;
+        cfg.data.d = 8;
+        cfg.data.clusters = 10;
+        cfg.index.kind = IndexKind::Brute;
+        let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+        let ds = Arc::new(synth::generate(&cfg.data));
+        let index = mips::build_index_typed(&ds, &cfg.index, backend.clone()).unwrap();
+        save_index(&path, &cfg, &ds, &index).unwrap();
+
+        let opened = open_index(&path, &cfg, backend.clone()).unwrap();
+        assert!(!opened.degraded);
+        assert_eq!(opened.ds.n, ds.n);
+        assert_eq!(opened.ds.data, ds.data);
+        let q = ds.row(0);
+        let fresh = index.as_dyn().top_k(q, 5);
+        let warm = opened.index.as_dyn().top_k(q, 5);
+        assert_eq!(fresh.items, warm.items);
+
+        // a changed build knob must be rejected with both fingerprints
+        let mut other = cfg.clone();
+        other.index.seed ^= 1;
+        let err = format!("{}", open_index(&path, &other, backend).unwrap_err());
+        assert!(err.contains("different configuration"), "{err}");
+        assert!(err.contains("snapshot:") && err.contains("current:"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -111,11 +111,20 @@ impl<T> WorkQueue<T> {
         }
     }
 
+    /// Lock the queue state, recovering from poisoning. A worker that
+    /// panicked while holding the lock can only have left the queue in a
+    /// structurally valid state (every critical section mutates the
+    /// `VecDeque` through safe, panic-free operations), so propagating
+    /// the poison would turn one worker's panic into a wedged server.
+    fn locked(&self) -> std::sync::MutexGuard<'_, QueueInner<T>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Blocking push. Returns `false` if the queue is closed.
     pub fn push(&self, item: T) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         while g.items.len() >= self.capacity && !g.closed {
-            g = self.not_full.wait(g).unwrap();
+            g = self.not_full.wait(g).unwrap_or_else(|p| p.into_inner());
         }
         if g.closed {
             return false;
@@ -128,7 +137,7 @@ impl<T> WorkQueue<T> {
 
     /// Non-blocking push. `Err(item)` when full or closed.
     pub fn try_push(&self, item: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         if g.closed || g.items.len() >= self.capacity {
             return Err(item);
         }
@@ -140,7 +149,7 @@ impl<T> WorkQueue<T> {
 
     /// Blocking pop. `None` once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         loop {
             if let Some(item) = g.items.pop_front() {
                 drop(g);
@@ -150,7 +159,7 @@ impl<T> WorkQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = self.not_empty.wait(g).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -162,7 +171,7 @@ impl<T> WorkQueue<T> {
     /// pops with no added latency. `None` once closed *and* drained.
     pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
         let max = max.max(1);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         loop {
             if !g.items.is_empty() {
                 let take = g.items.len().min(max);
@@ -174,7 +183,7 @@ impl<T> WorkQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = self.not_empty.wait(g).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -189,14 +198,14 @@ impl<T> WorkQueue<T> {
             return self.pop_batch(max);
         }
         let max = max.max(1);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         loop {
             // block until the first item (or close)
             while g.items.is_empty() {
                 if g.closed {
                     return None;
                 }
-                g = self.not_empty.wait(g).unwrap();
+                g = self.not_empty.wait(g).unwrap_or_else(|p| p.into_inner());
             }
             // micro-wait: deepen the batch until `max`, close, or the deadline
             let deadline = std::time::Instant::now() + wait;
@@ -205,7 +214,10 @@ impl<T> WorkQueue<T> {
                 if now >= deadline {
                     break;
                 }
-                let (guard, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+                let (guard, timeout) = self
+                    .not_empty
+                    .wait_timeout(g, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
                 g = guard;
                 if timeout.timed_out() {
                     break;
@@ -227,7 +239,7 @@ impl<T> WorkQueue<T> {
 
     /// Close the queue; wakes all blocked producers/consumers.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.locked();
         g.closed = true;
         drop(g);
         self.not_full.notify_all();
@@ -235,7 +247,7 @@ impl<T> WorkQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.locked().items.len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -1,0 +1,372 @@
+//! Crash-safe snapshot store invariants: warm-reopening a saved index
+//! must be indistinguishable from rebuilding it — top-k ids and score
+//! bits, perturbed samples, and Algorithm-3/4 estimates at the same
+//! seeds — for every index kind × quantization tier, in both read and
+//! mmap modes, monolithic and sharded, including through the IVF
+//! `update_row`/`compact()` lifecycle on a reopened index. Interrupted
+//! saves must leave the previous snapshot intact, and corruption
+//! anywhere in the file must produce a descriptive error (or, for the
+//! quantized shadow sections only, a degraded open with bit-identical
+//! f32 answers) — never a panic.
+
+use gmips::config::{Config, IndexKind, QuantKind};
+use gmips::coordinator::Engine;
+use gmips::data;
+use gmips::mips::{self, ivf::IvfIndex, BuiltIndex, MipsIndex, TopKResult};
+use gmips::scorer::{NativeScorer, ScoreBackend};
+use gmips::store::{self, tag, OpenMode, Snapshot};
+use gmips::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn tmp_path(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("gmips_persist_{}_{name}.idx", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn base_cfg(kind: IndexKind, quant: QuantKind) -> Config {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.data.n = 1_200;
+    cfg.data.d = 16;
+    cfg.data.clusters = 12;
+    cfg.index.kind = kind;
+    cfg.index.n_clusters = 24;
+    cfg.index.n_probe = 6;
+    cfg.index.kmeans_iters = 3;
+    cfg.index.train_sample = 600;
+    cfg.index.tables = 4;
+    cfg.index.bits = 6;
+    cfg.index.quant = quant;
+    cfg.index.quant_block = 48;
+    cfg.index.overscan = 3;
+    cfg
+}
+
+/// Bit-level fingerprints of every serving operation at fixed seeds.
+#[derive(Debug, PartialEq)]
+struct Probe {
+    topk_ids: Vec<Vec<u32>>,
+    topk_bits: Vec<Vec<u32>>,
+    sample_ids: Vec<Vec<u32>>,
+    logz_bits: Vec<u64>,
+    mean_bits: Vec<Vec<u32>>,
+}
+
+fn probe(engine: &Engine, seed: u64) -> Probe {
+    let mut rng = Pcg64::new(seed);
+    let mut p = Probe {
+        topk_ids: Vec::new(),
+        topk_bits: Vec::new(),
+        sample_ids: Vec::new(),
+        logz_bits: Vec::new(),
+        mean_bits: Vec::new(),
+    };
+    for _ in 0..3 {
+        let theta = data::random_theta(&engine.ds, 0.05, &mut rng);
+        let top = engine.index.top_k(&theta, 12);
+        p.topk_ids.push(top.items.iter().map(|s| s.id).collect());
+        p.topk_bits.push(top.items.iter().map(|s| s.score.to_bits()).collect());
+        let (outs, _) = engine.sampler.sample_many_status(&theta, 4, &mut rng).unwrap();
+        p.sample_ids.push(outs.iter().map(|o| o.id).collect());
+        let (est, _) = engine.partition.estimate_status(&theta, &mut rng).unwrap();
+        p.logz_bits.push(est.log_z.to_bits());
+        let (est, _) = engine.expectation.expect_features_status(&theta, &mut rng).unwrap();
+        p.logz_bits.push(est.log_z.to_bits());
+        p.mean_bits.push(est.mean.iter().map(|v| v.to_bits()).collect());
+    }
+    p
+}
+
+fn assert_topk_parity(got: &TopKResult, want: &TopKResult, label: &str) {
+    assert_eq!(got.ids(), want.ids(), "{label}: ids diverge");
+    for (g, w) in got.items.iter().zip(&want.items) {
+        assert_eq!(g.score.to_bits(), w.score.to_bits(), "{label}: score bits diverge");
+    }
+}
+
+#[test]
+fn round_trip_bit_parity_all_kinds_and_tiers() {
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    for kind in [IndexKind::Brute, IndexKind::Ivf, IndexKind::Lsh, IndexKind::Tiered] {
+        for quant in [QuantKind::Off, QuantKind::Sq8, QuantKind::Sq4, QuantKind::Pq] {
+            let cfg = base_cfg(kind, quant);
+            let label = format!("{}/{}", kind.name(), quant.name());
+            let path = tmp_path(&format!("rt_{}_{}", kind.name(), quant.name()));
+            let _ = std::fs::remove_file(&path);
+            let ds = Arc::new(data::load_or_generate(&cfg.data));
+            let index = mips::build_index_typed(&ds, &cfg.index, backend.clone()).unwrap();
+            store::save_index(&path, &cfg, &ds, &index).unwrap();
+            let fresh = Engine::from_parts(cfg.clone(), ds, index, backend.clone());
+            let want = probe(&fresh, 0xAB);
+            for mmap in [true, false] {
+                let mut c = cfg.clone();
+                c.index.mmap = mmap;
+                let opened = store::open_index(&path, &c, backend.clone()).unwrap();
+                assert!(!opened.degraded, "{label}: clean snapshot must not degrade");
+                let warm = Engine::from_parts(c, opened.ds, opened.index, backend.clone());
+                assert_eq!(probe(&warm, 0xAB), want, "{label} mmap={mmap}");
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+#[test]
+fn sharded_round_trip_bit_parity() {
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    for kind in [IndexKind::Brute, IndexKind::Ivf] {
+        for quant in [QuantKind::Off, QuantKind::Sq8] {
+            let mut cfg = base_cfg(kind, quant);
+            cfg.index.shards = 3;
+            let label = format!("sharded {}/{}", kind.name(), quant.name());
+            let path = tmp_path(&format!("shard_{}_{}", kind.name(), quant.name()));
+            let _ = std::fs::remove_file(&path);
+            let ds = Arc::new(data::load_or_generate(&cfg.data));
+            let index = mips::build_index_typed(&ds, &cfg.index, backend.clone()).unwrap();
+            assert!(matches!(index, BuiltIndex::Sharded(_)), "{label}: expected sharded build");
+            store::save_index(&path, &cfg, &ds, &index).unwrap();
+            let fresh = Engine::from_parts(cfg.clone(), ds, index, backend.clone());
+            let want = probe(&fresh, 0xCD);
+            for mmap in [true, false] {
+                let mut c = cfg.clone();
+                c.index.mmap = mmap;
+                let opened = store::open_index(&path, &c, backend.clone()).unwrap();
+                assert!(!opened.degraded, "{label}");
+                assert!(matches!(opened.index, BuiltIndex::Sharded(_)), "{label}");
+                let warm = Engine::from_parts(c, opened.ds, opened.index, backend.clone());
+                assert_eq!(probe(&warm, 0xCD), want, "{label} mmap={mmap}");
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+#[test]
+fn reopened_ivf_updates_compacts_and_resnapshots_like_fresh() {
+    let cfg = base_cfg(IndexKind::Ivf, QuantKind::Sq8);
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let ds = Arc::new(data::load_or_generate(&cfg.data));
+    let path = tmp_path("ivf_lifecycle");
+    let _ = std::fs::remove_file(&path);
+
+    let mut fresh = IvfIndex::build(ds.clone(), &cfg.index, backend.clone()).unwrap();
+    let saved = BuiltIndex::Mono(Arc::new(
+        IvfIndex::build(ds.clone(), &cfg.index, backend.clone()).unwrap(),
+    ) as Arc<dyn MipsIndex>);
+    store::save_index(&path, &cfg, &ds, &saved).unwrap();
+
+    let snap = Snapshot::open(&path, OpenMode::Mmap).unwrap();
+    let mut degraded = false;
+    let mut warm =
+        IvfIndex::open_from(ds.clone(), &cfg.index, backend.clone(), &snap, &mut degraded)
+            .unwrap();
+    assert!(!degraded);
+
+    let mut rng = Pcg64::new(0x11);
+    let mut urng = Pcg64::new(0x12);
+    for stage in ["fresh", "pending", "compacted"] {
+        if stage == "pending" {
+            for id in [5u32, 600, 1_100] {
+                let v: Vec<f32> = (0..ds.d).map(|_| urng.gaussian() as f32 * 0.3).collect();
+                fresh.update_row(id, &v);
+                warm.update_row(id, &v);
+            }
+        }
+        if stage == "compacted" {
+            fresh.compact();
+            warm.compact();
+        }
+        for k in [1usize, 20] {
+            let q = data::random_theta(&ds, 0.05, &mut rng);
+            assert_topk_parity(&warm.top_k(&q, k), &fresh.top_k(&q, k), &format!("{stage} k={k}"));
+        }
+    }
+
+    // the mutated, compacted, reopened index must itself re-snapshot
+    drop(snap);
+    let path2 = tmp_path("ivf_resnap");
+    let _ = std::fs::remove_file(&path2);
+    let rewrapped = BuiltIndex::Mono(Arc::new(warm) as Arc<dyn MipsIndex>);
+    store::save_index(&path2, &cfg, &ds, &rewrapped).unwrap();
+    let reopened = store::open_index(&path2, &cfg, backend).unwrap();
+    assert!(!reopened.degraded);
+    for k in [1usize, 20] {
+        let q = data::random_theta(&ds, 0.05, &mut rng);
+        assert_topk_parity(
+            &reopened.index.as_dyn().top_k(&q, k),
+            &fresh.top_k(&q, k),
+            &format!("re-snapshot k={k}"),
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&path2);
+}
+
+#[test]
+fn interrupted_save_preserves_previous_snapshot() {
+    let cfg = base_cfg(IndexKind::Brute, QuantKind::Sq8);
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let path = tmp_path("interrupted");
+    let _ = std::fs::remove_file(&path);
+    let ds = Arc::new(data::load_or_generate(&cfg.data));
+    let index = mips::build_index_typed(&ds, &cfg.index, backend.clone()).unwrap();
+    store::save_index(&path, &cfg, &ds, &index).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // crash leftovers: a half-written temp file must never shadow or
+    // clobber the committed snapshot
+    std::fs::write(format!("{path}.tmp"), b"partial garbage from a dead writer").unwrap();
+    let opened = store::open_index(&path, &cfg, backend.clone()).unwrap();
+    assert!(!opened.degraded);
+
+    // a writer that dies before finish(): destination untouched
+    {
+        let mut w = store::SnapshotWriter::create(&path).unwrap();
+        w.section(tag::CONFIG_STR, 0, b"half-written snapshot").unwrap();
+        // dropped without finish() — simulated crash
+    }
+    assert_eq!(std::fs::read(&path).unwrap(), good, "previous snapshot must be intact");
+    assert!(
+        !std::path::Path::new(&format!("{path}.tmp")).exists(),
+        "unfinished temp file must be cleaned up"
+    );
+    let fresh = Engine::from_parts(cfg.clone(), ds, index, backend.clone());
+    let opened = store::open_index(&path, &cfg, backend.clone()).unwrap();
+    let warm = Engine::from_parts(cfg.clone(), opened.ds, opened.index, backend);
+    assert_eq!(probe(&warm, 0xEF), probe(&fresh, 0xEF));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corruption_drill_errors_or_degrades_but_never_panics() {
+    let cfg = base_cfg(IndexKind::Brute, QuantKind::Sq8);
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let path = tmp_path("drill_src");
+    let _ = std::fs::remove_file(&path);
+    let ds = Arc::new(data::load_or_generate(&cfg.data));
+    let index = mips::build_index_typed(&ds, &cfg.index, backend.clone()).unwrap();
+    store::save_index(&path, &cfg, &ds, &index).unwrap();
+
+    let mut rng = Pcg64::new(0x77);
+    let theta = data::random_theta(&ds, 0.05, &mut rng);
+    let want = index.as_dyn().top_k(&theta, 10);
+
+    let good = std::fs::read(&path).unwrap();
+    let entries: Vec<store::SectionEntry> =
+        Snapshot::open(&path, OpenMode::Read).unwrap().sections().to_vec();
+    let table_off = u64::from_le_bytes(good[24..32].try_into().unwrap()) as usize;
+    let _ = std::fs::remove_file(&path);
+
+    let drill = tmp_path("drill_mut");
+    // Ok(degraded) when the snapshot still opens, Err(..) otherwise; a
+    // successful open must answer bit-identically to the fresh index
+    // regardless of what was corrupted.
+    let try_open = |bytes: &[u8], label: &str| -> Option<bool> {
+        std::fs::write(&drill, bytes).unwrap();
+        let mut outcome = None;
+        for mmap in [false, true] {
+            let mut c = cfg.clone();
+            c.index.mmap = mmap;
+            let one = match store::open_index(&drill, &c, backend.clone()) {
+                Err(e) => {
+                    assert!(!e.to_string().is_empty(), "{label}: error must be descriptive");
+                    None
+                }
+                Ok(opened) => {
+                    let got = opened.index.as_dyn().top_k(&theta, 10);
+                    assert_topk_parity(&got, &want, &format!("{label} mmap={mmap}"));
+                    Some(opened.degraded)
+                }
+            };
+            if mmap {
+                assert_eq!(outcome, Some(one), "{label}: read and mmap modes must agree");
+            } else {
+                outcome = Some(one);
+            }
+        }
+        outcome.unwrap()
+    };
+
+    // every header byte: the header checksum must catch the flip
+    for i in 0..store::format::HEADER_LEN {
+        let mut b = good.clone();
+        b[i] ^= 0xFF;
+        assert!(try_open(&b, &format!("header byte {i}")).is_none(), "header byte {i}");
+    }
+
+    // truncations: empty, mid-header, header-only, mid-sections, one byte short
+    for cut in [0usize, 7, store::format::HEADER_LEN - 1, store::format::HEADER_LEN] {
+        assert!(try_open(&good[..cut], &format!("truncate {cut}")).is_none(), "truncate {cut}");
+    }
+    for cut in [good.len() / 2, good.len() - 1] {
+        assert!(try_open(&good[..cut], &format!("truncate {cut}")).is_none(), "truncate {cut}");
+    }
+
+    // first/last byte of every section's payload
+    let quant_tag = |t: u32| {
+        t == tag::SQ8_META
+            || t == tag::SQ8_CODES
+            || t == tag::SQ4_META
+            || t == tag::SQ4_CODES
+            || t == tag::PQ_META
+            || t == tag::PQ_CODES
+    };
+    for e in &entries {
+        if e.len == 0 {
+            continue;
+        }
+        for pos in [e.off as usize, (e.off + e.len - 1) as usize] {
+            let mut b = good.clone();
+            b[pos] ^= 0xFF;
+            let label = format!("section tag={} byte {pos}", e.tag);
+            let got = try_open(&b, &label);
+            if quant_tag(e.tag) {
+                assert_eq!(got, Some(true), "{label}: quantized shadow must degrade, not fail");
+            } else {
+                assert!(got.is_none(), "{label}: non-quant corruption must be an error");
+            }
+        }
+    }
+
+    // section-table entries: flip a byte of tag/off/len/checksum in each.
+    // Depending on which field lands where this is either a descriptive
+    // error or (for quantized entries) a degraded open — try_open already
+    // enforces no-panic and bit-parity on any successful open.
+    for i in 0..entries.len() {
+        for field_off in [0usize, 8, 16, 24] {
+            let mut b = good.clone();
+            b[table_off + i * store::format::ENTRY_LEN + field_off] ^= 0xFF;
+            try_open(&b, &format!("table entry {i} byte {field_off}"));
+        }
+    }
+
+    let _ = std::fs::remove_file(&drill);
+}
+
+#[test]
+fn load_or_build_saves_then_warm_opens() {
+    let mut cfg = base_cfg(IndexKind::Ivf, QuantKind::Sq8);
+    let path = tmp_path("load_or_build");
+    let _ = std::fs::remove_file(&path);
+    cfg.index.path = path.clone();
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+
+    let cold = store::load_or_build(&cfg, backend.clone(), true).unwrap();
+    assert!(cold.built, "no snapshot yet: must build");
+    assert!(std::path::Path::new(&path).exists(), "save_on_build must persist");
+
+    let warm = store::load_or_build(&cfg, backend.clone(), true).unwrap();
+    assert!(!warm.built, "snapshot exists: must warm-open");
+    assert!(!warm.degraded);
+
+    let e_cold = Engine::from_parts(cfg.clone(), cold.ds, cold.index, backend.clone());
+    let e_warm = Engine::from_parts(cfg.clone(), warm.ds, warm.index, backend.clone());
+    assert_eq!(probe(&e_warm, 0x33), probe(&e_cold, 0x33));
+
+    // engines built from config take the same path
+    let via_engine = Engine::from_config(&cfg, Some(backend)).unwrap();
+    assert!(!via_engine.snapshot_degraded);
+    assert_eq!(probe(&via_engine, 0x33), probe(&e_cold, 0x33));
+    let _ = std::fs::remove_file(&path);
+}
