@@ -73,7 +73,26 @@ fn main() -> Result<()> {
     }
 
     match client.call(&Request::Stats)? {
-        Response::Stats { text } => println!("\nserver stats:\n{text}"),
+        Response::Stats { text, numbers } => {
+            println!("\nserver stats:\n{text}");
+            println!(
+                "structured: cert_hit_rate={:.3} rows/req={:.1} queue_depth={} shed={}",
+                numbers.certificate_hit_rate,
+                numbers.scanned_rows_per_request,
+                numbers.queue_depth,
+                numbers.shed
+            );
+        }
+        other => println!("unexpected {other:?}"),
+    }
+
+    // Prometheus scrape over the same wire (the `gmips metrics`
+    // subcommand does exactly this against a long-running server)
+    match client.call(&Request::Metrics)? {
+        Response::Metrics { exposition } => {
+            let families = exposition.lines().filter(|l| l.starts_with("# TYPE")).count();
+            println!("metrics scrape: {families} families");
+        }
         other => println!("unexpected {other:?}"),
     }
 

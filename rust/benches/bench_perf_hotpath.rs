@@ -13,8 +13,9 @@
 //! fan-out scan at 1/4/8
 //! shards on the same dataset (`shard_scan_speedup`), sharded
 //! Algorithm-4 expect-features vs monolithic on the same dataset
-//! (`sharded_expect_speedup`), lazy tail draw, full Alg-1 sample,
-//! Alg-3 estimate.
+//! (`sharded_expect_speedup`), the obs metrics/trace instrumentation
+//! overhead probe (`obs_overhead_pct`, target ≤2%), lazy tail draw,
+//! full Alg-1 sample, Alg-3 estimate.
 //!
 //! Besides the banner table, results are written machine-readably to
 //! `BENCH_perf_hotpath.json` (stage name, mean seconds, iters, GFLOP/s
@@ -383,6 +384,67 @@ fn main() {
         }
     }
 
+    // ---- obs overhead: metrics + trace checks on the screening hot loop --------
+    // acceptance (PR 8): with the registry enabled, the per-block counter
+    // adds and trace_active() checks the serving paths pay must cost ≤2%
+    // over the identical uninstrumented scan
+    let obs_overhead_pct;
+    {
+        let mut orng = Pcg64::new(41);
+        let theta = data::random_theta(&qds, cfg.data.temperature, &mut orng);
+        let kq = (qn as f64).sqrt().round() as usize;
+        let mut sbuf = vec![0f32; 4096];
+        gmips::obs::set_enabled(false);
+        let s = bench.run(&format!("obs_overhead plain scan {qn}x{qd}"), || {
+            let mut tk = TopK::new(kq);
+            let mut start = 0;
+            while start < qn {
+                let end = (start + 4096).min(qn);
+                let out = &mut sbuf[..end - start];
+                NativeScorer.scores(
+                    std::hint::black_box(&qds.data[start * qd..end * qd]),
+                    qd,
+                    &theta,
+                    out,
+                );
+                tk.push_block(start as u32, out);
+                start = end;
+            }
+            std::hint::black_box(tk.into_sorted());
+        });
+        let plain_mean = s.mean_s;
+        record(&mut results, s, Some(scan_flops_big));
+
+        gmips::obs::set_enabled(true);
+        let obs = gmips::obs::registry();
+        let s = bench.run(&format!("obs_overhead instrumented scan {qn}x{qd}"), || {
+            let mut tk = TopK::new(kq);
+            let mut start = 0;
+            while start < qn {
+                let end = (start + 4096).min(qn);
+                let out = &mut sbuf[..end - start];
+                NativeScorer.scores(
+                    std::hint::black_box(&qds.data[start * qd..end * qd]),
+                    qd,
+                    &theta,
+                    out,
+                );
+                obs.screen_rows_screened.add((end - start) as u64);
+                if gmips::obs::trace_active() {
+                    gmips::obs::trace_stage(gmips::obs::Stage::Screen, 0.0);
+                }
+                tk.push_block(start as u32, out);
+                start = end;
+            }
+            obs.requests.inc();
+            std::hint::black_box(tk.into_sorted());
+        });
+        gmips::obs::set_enabled(false);
+        obs_overhead_pct = (s.mean_s - plain_mean) / plain_mean * 100.0;
+        record(&mut results, s, Some(scan_flops_big));
+        println!("obs instrumentation overhead: {obs_overhead_pct:.2}% (target ≤2%)");
+    }
+
     // ---- sharded fan-out scan: 1 vs 4 vs 8 shards (≥100k × 128) ----------------
     // acceptance: the data-parallel fan-out must beat the monolithic scan
     // wall-clock; the baseline is a TRUE monolithic BruteForce scan (a
@@ -554,6 +616,7 @@ fn main() {
         ("sq4_scan_speedup", Json::num(sq4_scan_speedup)),
         ("pq_scan_speedup", Json::num(pq_scan_speedup)),
         ("quant_batch_kernel_speedup", Json::num(quant_batch_kernel_speedup)),
+        ("obs_overhead_pct", Json::num(obs_overhead_pct)),
         ("shard_scan_speedup", Json::num(shard_scan_speedup)),
         ("sharded_expect_speedup", Json::num(sharded_expect_speedup)),
         ("stages", Json::Arr(stages)),

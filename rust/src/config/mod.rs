@@ -345,6 +345,20 @@ pub struct RemoteConfig {
     pub down_after: u32,
 }
 
+/// Observability parameters (`crate::obs`): the metrics registry gate
+/// and the sampled request-tracing knobs.
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// master switch for registry writes (false = counters/gauges no-op;
+    /// the `metrics` op still answers, with frozen values)
+    pub enabled: bool,
+    /// trace 1 request in every `trace_sample` (deterministic,
+    /// counter-based); 0 disables tracing, 1 traces every request
+    pub trace_sample: u64,
+    /// JSON-lines sink path for sampled traces, appended; "" = discard
+    pub trace_sink: String,
+}
+
 impl RemoteConfig {
     /// Shard addresses in shard order (split on commas, trimmed,
     /// empties dropped).
@@ -368,6 +382,7 @@ pub struct Config {
     pub runtime: RuntimeConfig,
     pub serve: ServeConfig,
     pub remote: RemoteConfig,
+    pub obs: ObsConfig,
 }
 
 impl Default for Config {
@@ -442,6 +457,11 @@ impl Default for Config {
                 backoff_ms: 20,
                 heartbeat_ms: 200,
                 down_after: 2,
+            },
+            obs: ObsConfig {
+                enabled: true,
+                trace_sample: 0,
+                trace_sink: String::new(),
             },
         }
     }
@@ -579,6 +599,10 @@ impl Config {
         c.remote.backoff_ms = doc.get_u64("remote.backoff_ms", c.remote.backoff_ms)?;
         c.remote.heartbeat_ms = doc.get_u64("remote.heartbeat_ms", c.remote.heartbeat_ms)?;
         c.remote.down_after = doc.get_u64("remote.down_after", c.remote.down_after as u64)? as u32;
+
+        c.obs.enabled = doc.get_bool("obs.enabled", c.obs.enabled)?;
+        c.obs.trace_sample = doc.get_u64("obs.trace_sample", c.obs.trace_sample)?;
+        c.obs.trace_sink = doc.get_str("obs.trace_sink", &c.obs.trace_sink)?;
         Ok(())
     }
 
@@ -893,6 +917,23 @@ mod tests {
         c.serve.max_line_bytes = 4096;
         c.remote.deadline_ms = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn obs_knobs_from_toml() {
+        let mut c = Config::default();
+        assert!(c.obs.enabled);
+        assert_eq!(c.obs.trace_sample, 0);
+        assert_eq!(c.obs.trace_sink, "");
+        let doc = TomlDoc::parse(
+            "[obs]\nenabled = false\ntrace_sample = 128\ntrace_sink = \"/tmp/traces.jsonl\"",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert!(!c.obs.enabled);
+        assert_eq!(c.obs.trace_sample, 128);
+        assert_eq!(c.obs.trace_sink, "/tmp/traces.jsonl");
+        c.validate().unwrap();
     }
 
     #[test]

@@ -24,6 +24,9 @@ pub enum Request {
     TvCertify { theta: Vec<f32> },
     /// Engine + metrics snapshot.
     Stats,
+    /// Prometheus-text exposition of the obs registry (plus per-shard
+    /// aggregation when serving `--remote`).
+    Metrics,
 }
 
 impl Request {
@@ -35,6 +38,7 @@ impl Request {
             Request::ExpectFeatures { .. } => "expect_features",
             Request::TvCertify { .. } => "tv_certify",
             Request::Stats => "stats",
+            Request::Metrics => "metrics",
         }
     }
 
@@ -52,6 +56,7 @@ impl Request {
             "expect_features" => Request::ExpectFeatures { theta: theta(j)? },
             "tv_certify" => Request::TvCertify { theta: theta(j)? },
             "stats" => Request::Stats,
+            "metrics" => Request::Metrics,
             other => return Err(Error::serve(format!("unknown op '{other}'"))),
         })
     }
@@ -81,8 +86,26 @@ impl Request {
                 ("theta", Json::arr_f32(theta)),
             ]),
             Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
+            Request::Metrics => Json::obj(vec![("op", Json::str("metrics"))]),
         }
     }
+}
+
+/// Machine-readable serving health numbers carried alongside the
+/// human-oriented [`Response::Stats`] text. All fields default to zero /
+/// `false` when absent on the wire, so old and new peers interoperate.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct StatsNumbers {
+    /// tier-ladder certificate hit rate across all rungs (0..=1)
+    pub certificate_hit_rate: f64,
+    /// mean rows scanned per handled request
+    pub scanned_rows_per_request: f64,
+    /// requests currently waiting in the coordinator queue
+    pub queue_depth: u64,
+    /// requests shed by the front-end so far
+    pub shed: u64,
+    /// serving from a degraded snapshot (quantized shadow lost)
+    pub snapshot_degraded: bool,
 }
 
 /// A query result.
@@ -93,7 +116,9 @@ pub enum Response {
     LogPartition { log_z: f64, k: usize, l: usize },
     Features { mean: Vec<f32>, log_z: f64 },
     Tv { bound: f64 },
-    Stats { text: String },
+    Stats { text: String, numbers: StatsNumbers },
+    /// Prometheus text-format exposition of the metrics registry.
+    Metrics { exposition: String },
     /// A successful answer computed while some remote shards were
     /// unreachable: `inner` holds the result renormalized over the
     /// `ok_shards` surviving shards (of `shards` total). On the wire this
@@ -132,9 +157,19 @@ impl Response {
             Response::Tv { bound } => {
                 Json::obj(vec![("ok", Json::Bool(true)), ("tv_bound", Json::num(*bound))])
             }
-            Response::Stats { text } => {
-                Json::obj(vec![("ok", Json::Bool(true)), ("stats", Json::str(text.clone()))])
-            }
+            Response::Stats { text, numbers } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("stats", Json::str(text.clone())),
+                ("certificate_hit_rate", Json::num(numbers.certificate_hit_rate)),
+                ("scanned_rows_per_request", Json::num(numbers.scanned_rows_per_request)),
+                ("queue_depth", Json::num(numbers.queue_depth as f64)),
+                ("shed", Json::num(numbers.shed as f64)),
+                ("snapshot_degraded", Json::Bool(numbers.snapshot_degraded)),
+            ]),
+            Response::Metrics { exposition } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("exposition", Json::str(exposition.clone())),
+            ]),
             Response::Degraded { inner, ok_shards, shards } => {
                 let mut j = inner.to_json();
                 if let Json::Obj(kvs) = &mut j {
@@ -175,11 +210,27 @@ impl Response {
 
     /// The non-degraded payload probes, shared by [`Response::from_json`].
     fn body_from_json(j: &Json) -> Result<Response> {
+        // "exposition" first: the metrics payload is arbitrary text and
+        // must never be mistaken for another shape
+        if let Some(e) = j.get("exposition") {
+            return Ok(Response::Metrics { exposition: e.as_str()?.to_string() });
+        }
         if let Some(b) = j.get("tv_bound") {
             return Ok(Response::Tv { bound: b.as_f64()? });
         }
         if let Some(s) = j.get("stats") {
-            return Ok(Response::Stats { text: s.as_str()?.to_string() });
+            let f = |key: &str| j.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            let numbers = StatsNumbers {
+                certificate_hit_rate: f("certificate_hit_rate"),
+                scanned_rows_per_request: f("scanned_rows_per_request"),
+                queue_depth: f("queue_depth") as u64,
+                shed: f("shed") as u64,
+                snapshot_degraded: j
+                    .get("snapshot_degraded")
+                    .and_then(|v| v.as_bool().ok())
+                    .unwrap_or(false),
+            };
+            return Ok(Response::Stats { text: s.as_str()?.to_string(), numbers });
         }
         if let Some(m) = j.get("mean") {
             return Ok(Response::Features {
@@ -235,6 +286,7 @@ mod tests {
         roundtrip_req(Request::ExpectFeatures { theta: vec![0.0, 0.25] });
         roundtrip_req(Request::TvCertify { theta: vec![1.5] });
         roundtrip_req(Request::Stats);
+        roundtrip_req(Request::Metrics);
     }
 
     #[test]
@@ -244,7 +296,19 @@ mod tests {
         roundtrip_resp(Response::LogPartition { log_z: 12.5, k: 10, l: 20 });
         roundtrip_resp(Response::Features { mean: vec![0.5], log_z: 1.0 });
         roundtrip_resp(Response::Tv { bound: 1e-4 });
-        roundtrip_resp(Response::Stats { text: "ok".into() });
+        roundtrip_resp(Response::Stats {
+            text: "ok".into(),
+            numbers: StatsNumbers {
+                certificate_hit_rate: 0.75,
+                scanned_rows_per_request: 128.0,
+                queue_depth: 3,
+                shed: 2,
+                snapshot_degraded: true,
+            },
+        });
+        roundtrip_resp(Response::Metrics {
+            exposition: "# TYPE gmips_requests_total counter\ngmips_requests_total 4\n".into(),
+        });
         roundtrip_resp(Response::Error { message: "boom".into() });
         roundtrip_resp(Response::Degraded {
             inner: Box::new(Response::LogPartition { log_z: 3.5, k: 4, l: 8 }),
@@ -281,6 +345,19 @@ mod tests {
         let j = Json::parse(r#"{"op":"sample","theta":[1,2]}"#).unwrap();
         match Request::from_json(&j).unwrap() {
             Request::Sample { count, .. } => assert_eq!(count, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_numbers_default_when_absent() {
+        // an old peer sends only the text — numbers fall back to zero
+        let j = Json::parse(r#"{"ok":true,"stats":"n=10"}"#).unwrap();
+        match Response::from_json(&j).unwrap() {
+            Response::Stats { text, numbers } => {
+                assert_eq!(text, "n=10");
+                assert_eq!(numbers, StatsNumbers::default());
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -156,6 +156,7 @@ impl Engine {
     fn wrap_status(r: Response, status: Option<(usize, usize)>) -> Response {
         match status {
             Some((ok, total)) if ok < total => {
+                crate::obs::registry().remote_degraded_merges.inc();
                 Response::Degraded { inner: Box::new(r), ok_shards: ok, shards: total }
             }
             _ => r,
@@ -175,14 +176,16 @@ impl Engine {
                     Ok(v) => v,
                     Err(e) => return Response::Error { message: e.to_string() },
                 };
+                let scanned = outs.first().map(|o| o.work.scanned).unwrap_or(0);
                 let r = Self::wrap_status(
                     Response::Samples {
                         ids: outs.iter().map(|o| o.id).collect(),
-                        scanned: outs.first().map(|o| o.work.scanned).unwrap_or(0),
+                        scanned,
                         tail_m: outs.iter().map(|o| o.work.m).sum(),
                     },
                     status,
                 );
+                crate::obs::registry().request_rows_scanned.add(scanned as u64);
                 self.metrics.sample.record(sw.micros());
                 r
             }
@@ -198,6 +201,7 @@ impl Engine {
                 } else {
                     (self.index.top_k(theta, (*k).max(1)), None)
                 };
+                crate::obs::registry().request_rows_scanned.add(top.scanned as u64);
                 let r = Self::wrap_status(
                     Response::TopK {
                         ids: top.items.iter().map(|s| s.id).collect(),
@@ -216,6 +220,7 @@ impl Engine {
                     Ok(v) => v,
                     Err(e) => return Response::Error { message: e.to_string() },
                 };
+                crate::obs::registry().request_rows_scanned.add(est.work.scanned as u64);
                 let r = Self::wrap_status(
                     Response::LogPartition { log_z: est.log_z, k: est.work.k, l: est.work.l },
                     status,
@@ -231,6 +236,7 @@ impl Engine {
                     Ok(v) => v,
                     Err(e) => return Response::Error { message: e.to_string() },
                 };
+                crate::obs::registry().request_rows_scanned.add(est.work.scanned as u64);
                 let r = Self::wrap_status(
                     Response::Features { mean: est.mean, log_z: est.log_z },
                     status,
@@ -250,23 +256,69 @@ impl Engine {
                 self.metrics.tv.record(sw.micros());
                 Response::Tv { bound }
             }
-            Request::Stats => Response::Stats {
-                text: format!(
-                    "{}\nbackend={} simd={} k={} sampler={} partition={} expectation={} \
-                     snapshot_degraded={}\n{}",
-                    self.index.describe(),
-                    self.backend.name(),
-                    crate::linalg::simd::kernel().name(),
-                    self.sampler.k(),
-                    self.sampler.name(),
-                    self.partition.name(),
-                    self.expectation.name(),
-                    self.snapshot_degraded,
-                    self.metrics.summary()
-                ),
-            },
+            Request::Stats => {
+                let obs = crate::obs::registry();
+                Response::Stats {
+                    text: format!(
+                        "{}\nbackend={} simd={} k={} sampler={} partition={} expectation={} \
+                         snapshot_degraded={}\n{}",
+                        self.index.describe(),
+                        self.backend.name(),
+                        crate::linalg::simd::kernel().name(),
+                        self.sampler.k(),
+                        self.sampler.name(),
+                        self.partition.name(),
+                        self.expectation.name(),
+                        self.snapshot_degraded,
+                        self.metrics.summary()
+                    ),
+                    // queue_depth/shed are coordinator state: the server
+                    // front-end fills them in before answering
+                    numbers: super::api::StatsNumbers {
+                        certificate_hit_rate: obs.cert_hit_rate(),
+                        scanned_rows_per_request: obs.rows_per_request(),
+                        queue_depth: 0,
+                        shed: 0,
+                        snapshot_degraded: self.snapshot_degraded,
+                    },
+                }
+            }
+            Request::Metrics => self.handle_metrics(),
         };
+        // the metrics op itself stays out of the request counters so a
+        // scrape doesn't perturb what it reports
+        if !matches!(req, Request::Metrics) {
+            crate::obs::registry().requests.inc();
+        }
         resp
+    }
+
+    /// Render the obs registry (plus this engine's per-op latency
+    /// histograms); when fronting remote shards, fan the `metrics` op out
+    /// and merge the shard expositions under `shard="<id>"` labels.
+    fn handle_metrics(&self) -> Response {
+        let m = &self.metrics;
+        let extra = crate::obs::ExtraMetrics {
+            op_hists: vec![
+                ("sample", &m.sample),
+                ("topk", &m.topk),
+                ("partition", &m.partition),
+                ("expect", &m.expect),
+                ("tv", &m.tv),
+            ],
+            ..Default::default()
+        };
+        let local = crate::obs::render_with(&extra);
+        match &self.remote {
+            None => Response::Metrics { exposition: local },
+            Some(stack) => match stack.metrics_status() {
+                Ok((shards, status)) => Self::wrap_status(
+                    Response::Metrics { exposition: crate::obs::aggregate(&local, &shards) },
+                    Some(status),
+                ),
+                Err(e) => Response::Error { message: e.to_string() },
+            },
+        }
     }
 
     /// Handle a drained batch of requests, grouping batchable operations
@@ -312,10 +364,12 @@ impl Engine {
                 Ok((all, status)) => {
                     let micros = sw.micros() / samples.len() as f64;
                     for (&i, outs) in samples.iter().zip(all) {
+                        let scanned = outs.first().map(|o| o.work.scanned).unwrap_or(0);
+                        crate::obs::registry().request_rows_scanned.add(scanned as u64);
                         resps[i] = Some(Self::wrap_status(
                             Response::Samples {
                                 ids: outs.iter().map(|o| o.id).collect(),
-                                scanned: outs.first().map(|o| o.work.scanned).unwrap_or(0),
+                                scanned,
                                 tail_m: outs.iter().map(|o| o.work.m).sum(),
                             },
                             status,
@@ -329,6 +383,7 @@ impl Engine {
                     }
                 }
             }
+            crate::obs::registry().requests.add(samples.len() as u64);
         }
 
         if !partitions.is_empty() {
@@ -343,6 +398,7 @@ impl Engine {
                 Ok((ests, status)) => {
                     let micros = sw.micros() / partitions.len() as f64;
                     for (&i, est) in partitions.iter().zip(ests) {
+                        crate::obs::registry().request_rows_scanned.add(est.work.scanned as u64);
                         resps[i] = Some(Self::wrap_status(
                             Response::LogPartition {
                                 log_z: est.log_z,
@@ -360,6 +416,7 @@ impl Engine {
                     }
                 }
             }
+            crate::obs::registry().requests.add(partitions.len() as u64);
         }
 
         if !expects.is_empty() {
@@ -374,6 +431,7 @@ impl Engine {
                 Ok((ests, status)) => {
                     let micros = sw.micros() / expects.len() as f64;
                     for (&i, est) in expects.iter().zip(ests) {
+                        crate::obs::registry().request_rows_scanned.add(est.work.scanned as u64);
                         resps[i] = Some(Self::wrap_status(
                             Response::Features { mean: est.mean, log_z: est.log_z },
                             status,
@@ -387,6 +445,7 @@ impl Engine {
                     }
                 }
             }
+            crate::obs::registry().requests.add(expects.len() as u64);
         }
 
         for (k, idxs) in topks {
@@ -411,7 +470,9 @@ impl Engine {
                 (self.index.top_k_batch(&qs, k), None)
             };
             let micros = sw.micros() / idxs.len() as f64;
+            crate::obs::registry().requests.add(idxs.len() as u64);
             for (&i, top) in idxs.iter().zip(tops) {
+                crate::obs::registry().request_rows_scanned.add(top.scanned as u64);
                 resps[i] = Some(Self::wrap_status(
                     Response::TopK {
                         ids: top.items.iter().map(|s| s.id).collect(),
@@ -491,9 +552,18 @@ mod tests {
             other => panic!("{other:?}"),
         }
         match e.handle(&Request::Stats, &mut rng) {
-            Response::Stats { text } => {
+            Response::Stats { text, numbers } => {
                 assert!(text.contains("ivf"));
                 assert!(text.contains("sample:"));
+                assert!(!numbers.snapshot_degraded);
+            }
+            other => panic!("{other:?}"),
+        }
+        match e.handle(&Request::Metrics, &mut rng) {
+            Response::Metrics { exposition } => {
+                assert!(exposition.contains("gmips_requests_total"), "{exposition}");
+                assert!(exposition.contains(r#"gmips_engine_op_micros_count{op="sample"}"#));
+                crate::obs::parse_exposition(&exposition).unwrap();
             }
             other => panic!("{other:?}"),
         }
@@ -564,7 +634,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         match &resps[7] {
-            Response::Stats { text } => assert!(text.contains("simd=")),
+            Response::Stats { text, .. } => assert!(text.contains("simd=")),
             other => panic!("{other:?}"),
         }
     }

@@ -20,7 +20,7 @@
 pub mod api;
 pub mod engine;
 
-pub use api::{Request, Response};
+pub use api::{Request, Response, StatsNumbers};
 pub use engine::{Engine, EngineMetrics};
 
 use crate::error::{Error, Result};
@@ -48,6 +48,17 @@ impl Ticket {
 struct Job {
     req: Request,
     tx: mpsc::Sender<Response>,
+    /// when the request entered the queue (queue-wait attribution)
+    enq: std::time::Instant,
+    /// chosen for request tracing at submit time (1-in-N sampling)
+    traced: bool,
+}
+
+impl Job {
+    fn new(req: Request, tx: mpsc::Sender<Response>) -> Job {
+        let traced = crate::obs::trace_try_sample();
+        Job { req, tx, enq: std::time::Instant::now(), traced }
+    }
 }
 
 /// Most requests a worker drains from the queue in one go. Bounds the
@@ -96,20 +107,53 @@ impl Coordinator {
             let mut rng = Pcg64::new_stream(seed, w as u64 + 1);
             handles.push(std::thread::spawn(move || {
                 while let Some(jobs) = queue.pop_batch_wait(MAX_BATCH, wait) {
+                    let obs = crate::obs::registry();
+                    if crate::obs::enabled() {
+                        obs.batches.inc();
+                        obs.batched_requests.add(jobs.len() as u64);
+                        for job in &jobs {
+                            obs.queue_wait_micros.record(job.enq.elapsed().as_secs_f64() * 1e6);
+                        }
+                    }
                     if jobs.len() == 1 {
                         let job = jobs.into_iter().next().unwrap();
+                        let traced = job.traced;
+                        let sw = crate::util::timing::Stopwatch::start();
+                        if traced {
+                            crate::obs::trace_begin();
+                            crate::obs::trace_stage(
+                                crate::obs::Stage::Queue,
+                                job.enq.elapsed().as_secs_f64() * 1e6,
+                            );
+                        }
                         let resp = engine.handle(&job.req, &mut rng);
+                        if traced {
+                            crate::obs::trace_end(job.req.op_name(), sw.micros(), 1);
+                        }
                         // receiver may have given up; that's fine
                         let _ = job.tx.send(resp);
                         continue;
                     }
+                    // a batch carries at most one trace: the first sampled
+                    // job stands in for the whole drained batch
+                    let traced_at = jobs.iter().position(|j| j.traced);
                     let mut reqs = Vec::with_capacity(jobs.len());
                     let mut txs = Vec::with_capacity(jobs.len());
+                    let mut waits = Vec::with_capacity(jobs.len());
                     for job in jobs {
+                        waits.push(job.enq.elapsed().as_secs_f64() * 1e6);
                         reqs.push(job.req);
                         txs.push(job.tx);
                     }
+                    let sw = crate::util::timing::Stopwatch::start();
+                    if let Some(i) = traced_at {
+                        crate::obs::trace_begin();
+                        crate::obs::trace_stage(crate::obs::Stage::Queue, waits[i]);
+                    }
                     let resps = engine.handle_batch(&reqs, &mut rng);
+                    if let Some(i) = traced_at {
+                        crate::obs::trace_end(reqs[i].op_name(), sw.micros(), reqs.len());
+                    }
                     for (tx, resp) in txs.into_iter().zip(resps) {
                         let _ = tx.send(resp);
                     }
@@ -122,7 +166,7 @@ impl Coordinator {
     /// Enqueue a request (blocks when the queue is full — backpressure).
     pub fn submit(&self, req: Request) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
-        if !self.queue.push(Job { req, tx }) {
+        if !self.queue.push(Job::new(req, tx)) {
             return Err(Error::serve("coordinator is shut down"));
         }
         Ok(Ticket { rx })
@@ -132,7 +176,7 @@ impl Coordinator {
     pub fn try_submit(&self, req: Request) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
         self.queue
-            .try_push(Job { req, tx })
+            .try_push(Job::new(req, tx))
             .map_err(|_| Error::serve("queue full"))?;
         Ok(Ticket { rx })
     }
@@ -155,6 +199,7 @@ impl Coordinator {
     /// deadline and the request was answered `overloaded`).
     pub fn note_shed(&self) {
         self.shed.fetch_add(1, Ordering::Relaxed);
+        crate::obs::registry().shed.inc();
     }
 
     /// Total requests shed so far.
@@ -227,7 +272,7 @@ mod tests {
         coord.call(Request::LogPartition { theta: theta.clone() }).unwrap();
         coord.call(Request::ExpectFeatures { theta }).unwrap();
         match coord.call(Request::Stats).unwrap() {
-            Response::Stats { text } => assert!(text.contains("n=2000")),
+            Response::Stats { text, .. } => assert!(text.contains("n=2000")),
             other => panic!("{other:?}"),
         }
     }

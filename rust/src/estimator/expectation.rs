@@ -144,6 +144,9 @@ impl ExpectationEstimator {
         }
         let mut mean = wsum;
         linalg::scale(&mut mean, (1.0 / z_hat) as f32);
+        let obs = crate::obs::registry();
+        obs.estimator_rounds.inc();
+        obs.estimator_tail_draws.add(t_ids.len() as u64);
         FeatureExpectation {
             mean,
             log_z: m + z_hat.ln(),

@@ -86,6 +86,9 @@ impl PartitionEstimator {
         tail.push_all(&t_scores);
 
         let log_z = combine_head_tail(&head, &tail, n, k, t_ids.len());
+        let obs = crate::obs::registry();
+        obs.estimator_rounds.inc();
+        obs.estimator_tail_draws.add(t_ids.len() as u64);
         PartitionEstimate {
             log_z,
             work: EstimateWork { scanned: top.scanned, k, l: t_ids.len() },
@@ -148,6 +151,7 @@ pub fn combine_head_tail(
 /// the backend's fused `(max, Σexp)` reduction block by block — no score
 /// buffer, single memory pass per block on the native backend.
 pub fn exact_log_partition(ds: &Dataset, backend: &dyn ScoreBackend, q: &[f32]) -> f64 {
+    crate::obs::registry().estimator_exact_evals.inc();
     let mut acc = MaxSumExp::default();
     const BLOCK: usize = 8192;
     let d = ds.d;

@@ -96,6 +96,7 @@ pub mod gumbel;
 pub mod learner;
 pub mod linalg;
 pub mod mips;
+pub mod obs;
 pub mod remote;
 pub mod runtime;
 pub mod sampler;

@@ -11,6 +11,8 @@
 //!   serve        start the TCP inference server (--remote: fan out to
 //!                shard servers listed in remote.addrs)
 //!   shard-serve  start one shard server (--shard-id S) for the remote tier
+//!   metrics      scrape a running server's Prometheus exposition
+//!                (--addr HOST:PORT; --shutdown stops the server after)
 //!   eval <exp>   regenerate a paper table/figure
 //!                (fig2|table1|fig4|table2|fig7|fig8|walk|all)
 //!   selfcheck    load artifacts, compare PJRT vs native numerics
@@ -68,6 +70,7 @@ fn print_help() {
          \u{20}  walk [--n N] [--queries Q]\n\
          \u{20}  serve [--addr HOST:PORT] [--workers W] [--remote]\n\
          \u{20}  shard-serve --shard-id S [--addr HOST:PORT]\n\
+         \u{20}  metrics [--addr HOST:PORT] [--shutdown]\n\
          \u{20}  eval fig2|table1|fig4|table2|fig7|fig8|walk|all [--n N] [--queries Q]\n\
          \u{20}  selfcheck [--artifacts DIR]\n\n\
          common options: --preset P --config FILE --set sec.key=v,... --n N --d D --seed S\n\
@@ -104,6 +107,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "walk" => cmd_walk(args),
         "serve" => cmd_serve(args),
         "shard-serve" => cmd_shard_serve(args),
+        "metrics" => cmd_metrics(args),
         "eval" => cmd_eval(args),
         "selfcheck" => cmd_selfcheck(args),
         other => Err(Error::Cli(format!("unknown subcommand '{other}' (try --help)"))),
@@ -244,6 +248,7 @@ fn cmd_walk(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = Config::from_args(args)?;
+    gmips::obs::configure(&cfg.obs)?;
     let addr = args.get_str("addr", &cfg.serve.addr);
     let workers = args.get_usize("workers", cfg.serve.workers)?;
     let engine = if args.has_flag("remote") {
@@ -269,6 +274,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_shard_serve(args: &Args) -> Result<()> {
     let cfg = Config::from_args(args)?;
+    gmips::obs::configure(&cfg.obs)?;
     let shard = args.get_usize("shard-id", 0)?;
     let addr = args.get_str("addr", &cfg.serve.addr);
     let backend = make_backend(&cfg)?;
@@ -279,6 +285,28 @@ fn cmd_shard_serve(args: &Args) -> Result<()> {
     let server = Server::bind_handler(handler, &addr, &cfg.serve)?;
     println!("gmips shard {shard} serving on {}", server.local_addr()?);
     server.serve()
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let cfg = Config::from_args(args)?;
+    let addr = args.get_str("addr", &cfg.serve.addr);
+    let mut client = gmips::server::Client::connect(&addr)?;
+    match client.call(&gmips::coordinator::Request::Metrics)? {
+        gmips::coordinator::Response::Metrics { exposition } => print!("{exposition}"),
+        gmips::coordinator::Response::Degraded { inner, ok_shards, shards } => {
+            eprintln!("warning: metrics aggregated over {ok_shards}/{shards} shards");
+            match *inner {
+                gmips::coordinator::Response::Metrics { exposition } => print!("{exposition}"),
+                other => return Err(Error::serve(format!("unexpected reply: {other:?}"))),
+            }
+        }
+        gmips::coordinator::Response::Error { message } => return Err(Error::serve(message)),
+        other => return Err(Error::serve(format!("unexpected reply: {other:?}"))),
+    }
+    if args.has_flag("shutdown") {
+        client.shutdown_server()?;
+    }
+    Ok(())
 }
 
 fn eval_opts(args: &Args) -> Result<EvalOpts> {

@@ -244,6 +244,7 @@ impl IvfIndex {
 
     /// Query with an explicit probe count (ablations sweep this).
     pub fn top_k_probes(&self, q: &[f32], k: usize, n_probe: usize) -> TopKResult {
+        crate::obs::registry().ivf_queries.inc();
         let n_probe = n_probe.clamp(1, self.km.c);
         let order = rank_clusters(&self.km, q, n_probe);
         let mut r = self.top_k_clusters(q, k, &order);
@@ -272,6 +273,7 @@ impl IvfIndex {
         let mut tk = TopK::new(k.min(self.n).max(1));
         let mut buf: Vec<f32> = Vec::new();
         let mut scanned = 0usize;
+        let mut filtered = 0u64;
         for &c in clusters {
             let (s, e) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
             if s == e {
@@ -286,6 +288,8 @@ impl IvfIndex {
                 for (j, &id) in self.ids[s..e].iter().enumerate() {
                     if !self.stale.contains(&id) {
                         tk.push(id, buf[j]);
+                    } else {
+                        filtered += 1;
                     }
                 }
             }
@@ -298,6 +302,11 @@ impl IvfIndex {
             tk.push_ids(&self.pending_ids, &buf);
             scanned += self.pending_ids.len();
         }
+        let obs = crate::obs::registry();
+        obs.ivf_probes_scanned.add(clusters.len() as u64);
+        obs.ivf_rows_scanned.add(scanned as u64);
+        obs.ivf_pending_rows.add(self.pending_ids.len() as u64);
+        obs.ivf_tombstone_filtered.add(filtered);
         TopKResult { items: tk.into_sorted(), scanned }
     }
 
@@ -358,6 +367,7 @@ impl IvfIndex {
             let mut tk = TopK::new(cap);
             let mut scanned = 0usize;
             let mut pushed = 0usize;
+            let mut filtered = 0u64;
             for &c in clusters {
                 let (s, e) = (self.offsets[c as usize], self.offsets[c as usize + 1]);
                 if s == e {
@@ -373,11 +383,17 @@ impl IvfIndex {
                         if !self.stale.contains(&id) {
                             tk.push((s + j) as u32, buf[j]);
                             pushed += 1;
+                        } else {
+                            filtered += 1;
                         }
                     }
                 }
                 scanned += e - s;
             }
+            let obs = crate::obs::registry();
+            obs.ivf_probes_scanned.add(clusters.len() as u64);
+            obs.ivf_rows_scanned.add(scanned as u64);
+            obs.ivf_tombstone_filtered.add(filtered);
             let finished = two_stage::finish_screen(
                 tier,
                 &tq,
@@ -393,6 +409,7 @@ impl IvfIndex {
                     self.backend.scores(&self.pending_rows, self.d, q, &mut buf);
                     tk2.push_ids(&self.pending_ids, &buf);
                     scanned += self.pending_ids.len();
+                    obs.ivf_pending_rows.add(self.pending_ids.len() as u64);
                 }
                 return Some(TopKResult { items: tk2.into_sorted(), scanned });
             }
@@ -417,6 +434,7 @@ impl IvfIndex {
         if qs.is_empty() {
             return Vec::new();
         }
+        crate::obs::registry().ivf_queries.add(qs.len() as u64);
         let n_probe = n_probe.clamp(1, self.km.c);
         let orders = rank_clusters_batch(&self.km, qs, n_probe);
         let mut results = self.scan_clusters_batch(qs, k, &orders);
@@ -569,6 +587,10 @@ impl IvfIndex {
                                 tk2.push_ids(&self.pending_ids, &pend[j * np..(j + 1) * np]);
                                 sc += np;
                             }
+                            let obs = crate::obs::registry();
+                            obs.ivf_probes_scanned.add(orders[j].len() as u64);
+                            obs.ivf_rows_scanned.add(sc as u64);
+                            obs.ivf_pending_rows.add(np as u64);
                             TopKResult { items: tk2.into_sorted(), scanned: sc }
                         }
                     }
@@ -634,6 +656,10 @@ impl IvfIndex {
             }
         }
 
+        let obs = crate::obs::registry();
+        obs.ivf_probes_scanned.add(orders.iter().map(|o| o.len() as u64).sum());
+        obs.ivf_rows_scanned.add(scanned.iter().map(|&s| s as u64).sum());
+        obs.ivf_pending_rows.add((self.pending_ids.len() * nq) as u64);
         tks.into_iter()
             .zip(scanned)
             .map(|(tk, sc)| TopKResult { items: tk.into_sorted(), scanned: sc })

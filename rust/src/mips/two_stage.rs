@@ -392,9 +392,15 @@ pub(crate) fn finish_screen(
     let ids: Vec<u32> = cands.iter().map(|s| s.id).collect();
     let mut tk = TopK::new(kk);
     rerank(&ids, &mut tk);
+    let obs = crate::obs::registry();
+    obs.screen_rows_screened.add(pushed as u64);
+    obs.screen_rows_reranked.add(ids.len() as u64);
+    let rung = crate::obs::tier_index(tier.name());
     if !coverage_proved(dropped, q_floor, tier.error_bound(tq), tk.threshold()) {
+        obs.screen_cert_misses[rung].inc();
         return None;
     }
+    obs.screen_cert_hits[rung].inc();
     Some(tk)
 }
 
@@ -470,6 +476,7 @@ pub(crate) fn scan_candidates_quant(
             return Some(TopKResult { items: tk2.into_sorted(), scanned: cands.len() });
         }
     }
+    crate::obs::registry().screen_f32_fallbacks.inc();
     None
 }
 

@@ -1,0 +1,1121 @@
+//! Process-wide observability: a lock-free metrics registry + sampled
+//! request tracing.
+//!
+//! The paper's headline claim is *sublinear amortized* cost per query;
+//! this module is how the running system reports what it actually pays.
+//! Every hot path increments plain relaxed atomics here (coarse,
+//! per-query/per-block granularity — never per-row — so the overhead on
+//! the brute-scan hot path stays under the 2% budget enforced by
+//! `benches/bench_perf_hotpath.rs`), and the `metrics` wire op renders
+//! the registry as Prometheus text exposition:
+//!
+//! * **tier ladder** — per-rung certificate hits/misses, rows screened
+//!   vs re-ranked, f32 fallbacks ([`crate::mips::two_stage`]);
+//! * **IVF** — probes ranked/scanned, pending-segment rows, tombstone
+//!   filters ([`crate::mips::ivf`]);
+//! * **samplers/estimators** — rounds, lazy-tail lengths, exact
+//!   evaluations ([`crate::sampler`], [`crate::estimator`]);
+//! * **remote** — per-shard call latency, retries, backoff waits,
+//!   degraded merges, health transitions ([`crate::remote`]);
+//! * **store** — snapshot open mode + degraded flag ([`crate::store`]);
+//! * **coordinator/server** — queue wait, batch sizes, shed count,
+//!   queue depth ([`crate::coordinator`], [`crate::server`]).
+//!
+//! The registry is a process singleton ([`registry`]): in-process shard
+//! fleets (tests) share one registry, while real deployments give each
+//! shard-server process its own — [`aggregate`] merges per-shard
+//! expositions into coordinator-level families with `shard` labels.
+//!
+//! Tracing records a per-request span breakdown
+//! (queue → encode → screen → re-rank → merge) for 1-in-N sampled
+//! requests ([`trace_try_sample`], counter-based and deterministic) and
+//! emits each as one JSON line to a configurable sink. The active trace
+//! is thread-local: deep code marks stages with [`trace_stage`] without
+//! any parameter plumbing, and only the sampled request pays for the
+//! stopwatches (everything else sees one thread-local bool load).
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::timing::LatencyHistogram;
+use std::cell::{Cell, RefCell};
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Runtime enable gate for all registry writes (`[obs] enabled`).
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Whether registry instrumentation is on. One relaxed load; counters
+/// check it themselves, histogram/stopwatch sites should check it before
+/// doing non-trivial work.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Monotone counter (relaxed atomic; disabled registry → no-op).
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge.
+#[derive(Default, Debug)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Poison-tolerant lock (registry readers must survive a panicked
+/// writer; the guarded Vec is only ever pushed to).
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Labeled counter family. `handle` interns the label once and returns a
+/// shared [`Counter`] the caller caches — the hot path then touches only
+/// that atomic, never this lock.
+#[derive(Default)]
+pub struct CounterFamily {
+    entries: Mutex<Vec<(String, Arc<Counter>)>>,
+}
+
+impl CounterFamily {
+    pub fn handle(&self, label: &str) -> Arc<Counter> {
+        let mut g = locked(&self.entries);
+        if let Some((_, c)) = g.iter().find(|(l, _)| l == label) {
+            return c.clone();
+        }
+        let c = Arc::new(Counter::default());
+        g.push((label.to_string(), c.clone()));
+        c
+    }
+    fn snapshot(&self) -> Vec<(String, u64)> {
+        locked(&self.entries).iter().map(|(l, c)| (l.clone(), c.get())).collect()
+    }
+}
+
+/// Labeled histogram family (same handle-caching contract as
+/// [`CounterFamily`]).
+#[derive(Default)]
+pub struct HistFamily {
+    entries: Mutex<Vec<(String, Arc<LatencyHistogram>)>>,
+}
+
+impl HistFamily {
+    pub fn handle(&self, label: &str) -> Arc<LatencyHistogram> {
+        let mut g = locked(&self.entries);
+        if let Some((_, h)) = g.iter().find(|(l, _)| l == label) {
+            return h.clone();
+        }
+        let h = Arc::new(LatencyHistogram::new());
+        g.push((label.to_string(), h.clone()));
+        h
+    }
+    fn labels(&self) -> Vec<(String, Arc<LatencyHistogram>)> {
+        locked(&self.entries).clone()
+    }
+}
+
+/// Index of a screening tier in the per-rung counter arrays.
+pub fn tier_index(name: &str) -> usize {
+    match name {
+        "sq8" => 0,
+        "sq4" => 1,
+        _ => 2, // "pq"
+    }
+}
+
+const TIER_NAMES: [&str; 3] = ["sq8", "sq4", "pq"];
+const HEALTH_NAMES: [&str; 3] = ["up", "degraded", "down"];
+
+/// The process-wide metric set. All fields are wait-free to update; the
+/// labeled families take a short lock only when a NEW label is interned
+/// (callers cache handles at construction time).
+#[derive(Default)]
+pub struct Registry {
+    // --- tier ladder (mips/two_stage) ---------------------------------
+    /// per-rung coverage-certificate successes, indexed by [`tier_index`]
+    pub screen_cert_hits: [Counter; 3],
+    /// per-rung coverage-certificate failures
+    pub screen_cert_misses: [Counter; 3],
+    /// rows offered to a quantized pass-1 screen
+    pub screen_rows_screened: Counter,
+    /// rows exact-re-ranked in pass 2
+    pub screen_rows_reranked: Counter,
+    /// screens where the whole ladder failed to certify (f32 fallback)
+    pub screen_f32_fallbacks: Counter,
+    // --- IVF (mips/ivf) -----------------------------------------------
+    /// probe scans answered (single queries; batch entries count once
+    /// per query)
+    pub ivf_queries: Counter,
+    /// clusters actually scanned
+    pub ivf_probes_scanned: Counter,
+    /// rows scanned in probed clusters (incl. screening passes)
+    pub ivf_rows_scanned: Counter,
+    /// pending-segment (LSM ingest) rows scanned
+    pub ivf_pending_rows: Counter,
+    /// rows skipped by the stale-tombstone filter
+    pub ivf_tombstone_filtered: Counter,
+    // --- samplers / estimators ----------------------------------------
+    /// Algorithm 1/2 sampling rounds served
+    pub sampler_rounds: Counter,
+    /// lazily materialized tail Gumbels (Σ m)
+    pub sampler_tail_gumbels: Counter,
+    /// Algorithm 3/4 estimation rounds served
+    pub estimator_rounds: Counter,
+    /// uniform tail draws (Σ realized |T|)
+    pub estimator_tail_draws: Counter,
+    /// exact O(n) partition/expectation evaluations (the fallback the
+    /// amortized path is supposed to avoid)
+    pub estimator_exact_evals: Counter,
+    // --- remote fan-out -----------------------------------------------
+    /// per-shard retried attempts (label: shard id)
+    pub remote_retries: CounterFamily,
+    /// per-shard backoff sleep, milliseconds (label: shard id)
+    pub remote_backoff_ms: CounterFamily,
+    /// per-shard call latency incl. retries (label: shard id)
+    pub remote_call_micros: HistFamily,
+    /// merges that renormalized over a shard subset (degraded answers)
+    pub remote_degraded_merges: Counter,
+    /// health-state transitions, indexed up/degraded/down
+    pub health_transitions: [Counter; 3],
+    // --- store --------------------------------------------------------
+    /// how the index came up: 0 = built fresh, 1 = snapshot (read),
+    /// 2 = snapshot (mmap)
+    pub store_open_mode: Gauge,
+    /// 1 when quantized snapshot sections were corrupt (serving f32)
+    pub store_snapshot_degraded: Gauge,
+    // --- coordinator / server -----------------------------------------
+    /// queue wait per request (enqueue → worker pop)
+    pub queue_wait_micros: LatencyHistogram,
+    /// batches drained by workers
+    pub batches: Counter,
+    /// requests inside those batches (ratio = mean batch depth)
+    pub batched_requests: Counter,
+    /// requests shed under saturation
+    pub shed: Counter,
+    /// coordinator queue depth at last request admission
+    pub queue_depth: Gauge,
+    /// requests answered by the engine
+    pub requests: Counter,
+    /// database rows scanned answering those requests
+    pub request_rows_scanned: Counter,
+    /// trace lines emitted
+    pub traces_emitted: Counter,
+}
+
+impl Registry {
+    /// Certificate hit rate across all rungs in `[0, 1]` (0 when no
+    /// screens ran).
+    pub fn cert_hit_rate(&self) -> f64 {
+        let hits: u64 = self.screen_cert_hits.iter().map(|c| c.get()).sum();
+        let misses: u64 = self.screen_cert_misses.iter().map(|c| c.get()).sum();
+        if hits + misses == 0 {
+            0.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        }
+    }
+
+    /// Mean database rows scanned per engine request (0 before traffic).
+    pub fn rows_per_request(&self) -> f64 {
+        let r = self.requests.get();
+        if r == 0 {
+            0.0
+        } else {
+            self.request_rows_scanned.get() as f64 / r as f64
+        }
+    }
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::default)
+}
+
+// ----------------------------------------------------------------------
+// Prometheus text exposition
+// ----------------------------------------------------------------------
+
+/// Escape a label value per the Prometheus text format.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+struct Renderer {
+    out: String,
+}
+
+impl Renderer {
+    fn new() -> Renderer {
+        Renderer { out: String::with_capacity(4096) }
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(&format!("{name}{} {}\n", fmt_labels(labels), fmt_value(value)));
+    }
+
+    fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.family(name, help, "counter");
+        self.sample(name, &[], value as f64);
+    }
+
+    fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.family(name, help, "gauge");
+        self.sample(name, &[], value);
+    }
+
+    /// One histogram sample set under an already-emitted family header.
+    fn hist_samples(&mut self, name: &str, labels: &[(&str, &str)], h: &LatencyHistogram) {
+        let bucket = format!("{name}_bucket");
+        let mut prev = 0u64;
+        for (le, cum) in h.cumulative_buckets() {
+            if cum != prev {
+                let le_s = fmt_value(le);
+                let mut ls: Vec<(&str, &str)> = labels.to_vec();
+                ls.push(("le", &le_s));
+                self.sample(&bucket, &ls, cum as f64);
+                prev = cum;
+            }
+        }
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", "+Inf"));
+        self.sample(&bucket, &ls, h.count() as f64);
+        self.sample(&format!("{name}_sum"), labels, h.sum());
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+}
+
+/// Render `v` the way Prometheus expects: integral values without a
+/// fraction, everything else via the shortest `{}` float form.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Extra per-component metrics merged into one exposition alongside the
+/// global registry (the engine's per-op latency histograms, a shard
+/// engine's local request counter, ...).
+#[derive(Default)]
+pub struct ExtraMetrics<'a> {
+    /// rendered as `gmips_engine_op_micros{op="<name>"}` histograms
+    pub op_hists: Vec<(&'static str, &'a LatencyHistogram)>,
+    /// standalone counter families: (name, help, value)
+    pub counters: Vec<(&'static str, &'static str, u64)>,
+    /// standalone gauge families: (name, help, value)
+    pub gauges: Vec<(&'static str, &'static str, f64)>,
+}
+
+/// Render the global registry as Prometheus text exposition.
+pub fn render() -> String {
+    render_with(&ExtraMetrics::default())
+}
+
+/// [`render`] plus caller-scoped extras.
+pub fn render_with(extra: &ExtraMetrics<'_>) -> String {
+    let r = registry();
+    let mut w = Renderer::new();
+
+    // tier ladder
+    w.family(
+        "gmips_screen_certificate_hits_total",
+        "Coverage-certificate successes per screening rung",
+        "counter",
+    );
+    for (i, name) in TIER_NAMES.iter().enumerate() {
+        w.sample(
+            "gmips_screen_certificate_hits_total",
+            &[("tier", name)],
+            r.screen_cert_hits[i].get() as f64,
+        );
+    }
+    w.family(
+        "gmips_screen_certificate_misses_total",
+        "Coverage-certificate failures per screening rung",
+        "counter",
+    );
+    for (i, name) in TIER_NAMES.iter().enumerate() {
+        w.sample(
+            "gmips_screen_certificate_misses_total",
+            &[("tier", name)],
+            r.screen_cert_misses[i].get() as f64,
+        );
+    }
+    w.counter(
+        "gmips_screen_rows_screened_total",
+        "Rows offered to quantized pass-1 screens",
+        r.screen_rows_screened.get(),
+    );
+    w.counter(
+        "gmips_screen_rows_reranked_total",
+        "Rows exact-re-ranked in pass 2",
+        r.screen_rows_reranked.get(),
+    );
+    w.counter(
+        "gmips_screen_f32_fallbacks_total",
+        "Screens where no ladder rung certified (fell back to f32)",
+        r.screen_f32_fallbacks.get(),
+    );
+
+    // IVF
+    w.counter("gmips_ivf_queries_total", "IVF probe scans answered", r.ivf_queries.get());
+    w.counter(
+        "gmips_ivf_probes_scanned_total",
+        "IVF clusters scanned",
+        r.ivf_probes_scanned.get(),
+    );
+    w.counter(
+        "gmips_ivf_rows_scanned_total",
+        "Rows scanned inside probed IVF clusters",
+        r.ivf_rows_scanned.get(),
+    );
+    w.counter(
+        "gmips_ivf_pending_rows_total",
+        "Pending-segment (unmerged ingest) rows scanned",
+        r.ivf_pending_rows.get(),
+    );
+    w.counter(
+        "gmips_ivf_tombstone_filtered_total",
+        "Rows skipped by the stale-tombstone filter",
+        r.ivf_tombstone_filtered.get(),
+    );
+
+    // samplers / estimators
+    w.counter("gmips_sampler_rounds_total", "Sampling rounds served", r.sampler_rounds.get());
+    w.counter(
+        "gmips_sampler_tail_gumbels_total",
+        "Lazily materialized tail Gumbels",
+        r.sampler_tail_gumbels.get(),
+    );
+    w.counter(
+        "gmips_estimator_rounds_total",
+        "Partition/expectation estimation rounds served",
+        r.estimator_rounds.get(),
+    );
+    w.counter(
+        "gmips_estimator_tail_draws_total",
+        "Uniform tail draws across estimation rounds",
+        r.estimator_tail_draws.get(),
+    );
+    w.counter(
+        "gmips_estimator_exact_evals_total",
+        "Exact O(n) partition/expectation evaluations",
+        r.estimator_exact_evals.get(),
+    );
+
+    // remote
+    w.family("gmips_remote_retries_total", "Shard call retry attempts", "counter");
+    for (shard, v) in r.remote_retries.snapshot() {
+        w.sample("gmips_remote_retries_total", &[("shard", &shard)], v as f64);
+    }
+    w.family(
+        "gmips_remote_backoff_ms_total",
+        "Milliseconds slept in retry backoff",
+        "counter",
+    );
+    for (shard, v) in r.remote_backoff_ms.snapshot() {
+        w.sample("gmips_remote_backoff_ms_total", &[("shard", &shard)], v as f64);
+    }
+    w.family(
+        "gmips_remote_call_micros",
+        "Shard call latency incl. retries (microseconds)",
+        "histogram",
+    );
+    for (shard, h) in r.remote_call_micros.labels() {
+        w.hist_samples("gmips_remote_call_micros", &[("shard", &shard)], &h);
+    }
+    w.counter(
+        "gmips_remote_degraded_merges_total",
+        "Fan-out merges renormalized over a shard subset",
+        r.remote_degraded_merges.get(),
+    );
+    w.family("gmips_health_transitions_total", "Shard health-state transitions", "counter");
+    for (i, name) in HEALTH_NAMES.iter().enumerate() {
+        w.sample(
+            "gmips_health_transitions_total",
+            &[("to", name)],
+            r.health_transitions[i].get() as f64,
+        );
+    }
+
+    // store
+    w.gauge(
+        "gmips_store_open_mode",
+        "Index origin: 0 built fresh, 1 snapshot read, 2 snapshot mmap",
+        r.store_open_mode.get() as f64,
+    );
+    w.gauge(
+        "gmips_store_snapshot_degraded",
+        "1 when corrupt quantized snapshot sections degraded to the f32 tier",
+        r.store_snapshot_degraded.get() as f64,
+    );
+
+    // coordinator / server
+    w.family(
+        "gmips_queue_wait_micros",
+        "Request wait in the coordinator queue (microseconds)",
+        "histogram",
+    );
+    w.hist_samples("gmips_queue_wait_micros", &[], &r.queue_wait_micros);
+    w.counter("gmips_batches_total", "Batches drained by coordinator workers", r.batches.get());
+    w.counter(
+        "gmips_batched_requests_total",
+        "Requests inside drained batches",
+        r.batched_requests.get(),
+    );
+    w.counter("gmips_shed_total", "Requests shed under saturation", r.shed.get());
+    w.gauge(
+        "gmips_queue_depth",
+        "Coordinator queue depth at last admission",
+        r.queue_depth.get() as f64,
+    );
+    w.counter("gmips_requests_total", "Requests answered by the engine", r.requests.get());
+    w.counter(
+        "gmips_request_rows_scanned_total",
+        "Database rows scanned answering requests",
+        r.request_rows_scanned.get(),
+    );
+    w.counter("gmips_traces_emitted_total", "Sampled trace lines emitted", r.traces_emitted.get());
+
+    // caller extras
+    if !extra.op_hists.is_empty() {
+        w.family(
+            "gmips_engine_op_micros",
+            "Engine handle latency per operation (microseconds)",
+            "histogram",
+        );
+        for (op, h) in &extra.op_hists {
+            w.hist_samples("gmips_engine_op_micros", &[("op", op)], h);
+        }
+    }
+    for (name, help, v) in &extra.counters {
+        w.counter(name, help, *v);
+    }
+    for (name, help, v) in &extra.gauges {
+        w.gauge(name, help, *v);
+    }
+    w.out
+}
+
+// ----------------------------------------------------------------------
+// Exposition parsing + shard aggregation
+// ----------------------------------------------------------------------
+
+/// One parsed exposition sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// A parsed exposition: samples in document order plus the `# TYPE`
+/// declarations in first-seen order.
+#[derive(Default, Debug)]
+pub struct Exposition {
+    pub samples: Vec<Sample>,
+    pub types: Vec<(String, String)>,
+}
+
+impl Exposition {
+    /// First sample value matching `name` (and `label`, when given).
+    pub fn value(&self, name: &str, label: Option<(&str, &str)>) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| {
+                s.name == name
+                    && label
+                        .map(|(k, v)| s.labels.iter().any(|(lk, lv)| lk == k && lv == v))
+                        .unwrap_or(true)
+            })
+            .map(|s| s.value)
+    }
+}
+
+fn unescape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    let mut chars = v.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some(other) => out.push(other),
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Parse Prometheus text exposition into samples + types. Strict enough
+/// for conformance tests (malformed lines are errors, not skips).
+pub fn parse_exposition(text: &str) -> Result<Exposition> {
+    let mut exp = Exposition::default();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(t) = rest.strip_prefix("TYPE ") {
+                let mut it = t.split_whitespace();
+                let name = it
+                    .next()
+                    .ok_or_else(|| Error::serve(format!("line {}: TYPE without name", ln + 1)))?;
+                let kind = it.next().unwrap_or("untyped");
+                exp.types.push((name.to_string(), kind.to_string()));
+            }
+            continue; // HELP and comments
+        }
+        exp.samples.push(parse_sample(line, ln + 1)?);
+    }
+    Ok(exp)
+}
+
+fn parse_sample(line: &str, ln: usize) -> Result<Sample> {
+    let bad = |what: &str| Error::serve(format!("exposition line {ln}: {what}: {line}"));
+    let (name_part, rest) = match line.find('{') {
+        Some(b) => (&line[..b], &line[b..]),
+        None => match line.find(char::is_whitespace) {
+            Some(sp) => (&line[..sp], &line[sp..]),
+            None => return Err(bad("no value")),
+        },
+    };
+    let name = name_part.trim();
+    if name.is_empty() {
+        return Err(bad("empty metric name"));
+    }
+    let mut labels = Vec::new();
+    let value_part = if let Some(body) = rest.strip_prefix('{') {
+        // scan to the UNESCAPED closing brace (label values may contain
+        // any character except a raw newline)
+        let bytes = body.as_bytes();
+        let mut i = 0usize;
+        let mut in_str = false;
+        let mut esc = false;
+        let mut close = None;
+        while i < bytes.len() {
+            let c = bytes[i] as char;
+            if esc {
+                esc = false;
+            } else if in_str && c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = !in_str;
+            } else if !in_str && c == '}' {
+                close = Some(i);
+                break;
+            }
+            i += 1;
+        }
+        let close = close.ok_or_else(|| bad("unterminated label set"))?;
+        let labels_src = &body[..close];
+        let mut cursor = labels_src;
+        while !cursor.trim().is_empty() {
+            let eq = cursor.find('=').ok_or_else(|| bad("label without ="))?;
+            let key = cursor[..eq].trim().to_string();
+            let after = cursor[eq + 1..].trim_start();
+            let after =
+                after.strip_prefix('"').ok_or_else(|| bad("label value must be quoted"))?;
+            // find the unescaped closing quote
+            let mut end = None;
+            let mut esc = false;
+            for (i, c) in after.char_indices() {
+                if esc {
+                    esc = false;
+                } else if c == '\\' {
+                    esc = true;
+                } else if c == '"' {
+                    end = Some(i);
+                    break;
+                }
+            }
+            let end = end.ok_or_else(|| bad("unterminated label value"))?;
+            labels.push((key, unescape_label(&after[..end])));
+            let mut tail = &after[end + 1..];
+            tail = tail.trim_start();
+            if let Some(t) = tail.strip_prefix(',') {
+                cursor = t;
+            } else if tail.is_empty() {
+                cursor = tail;
+            } else {
+                return Err(bad("labels must be comma-separated"));
+            }
+        }
+        &body[close + 1..]
+    } else {
+        rest
+    };
+    let vstr = value_part.trim().split_whitespace().next().ok_or_else(|| bad("no value"))?;
+    let value = match vstr {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        s => s.parse::<f64>().map_err(|_| bad("unparseable value"))?,
+    };
+    Ok(Sample { name: name.to_string(), labels, value })
+}
+
+/// Merge a coordinator's local exposition with per-shard expositions
+/// into one document: families keep a single `# TYPE` header and every
+/// shard sample gains a `shard="<id>"` label. Unparseable shard answers
+/// are noted as comments instead of poisoning the whole document.
+pub fn aggregate(local: &str, shards: &[(usize, String)]) -> String {
+    let mut family_order: Vec<String> = Vec::new();
+    let mut types: Vec<(String, String)> = Vec::new();
+    // (family, sample-line) in arrival order
+    let mut lines: Vec<(String, String)> = Vec::new();
+    let mut notes: Vec<String> = Vec::new();
+
+    let mut absorb = |text: &str, shard: Option<usize>, notes: &mut Vec<String>| {
+        let exp = match parse_exposition(text) {
+            Ok(e) => e,
+            Err(e) => {
+                if let Some(s) = shard {
+                    notes.push(format!("# shard {s}: unparseable metrics: {e}\n"));
+                }
+                return;
+            }
+        };
+        for (name, kind) in exp.types {
+            if !types.iter().any(|(n, _)| *n == name) {
+                types.push((name, kind));
+            }
+        }
+        for s in exp.samples {
+            // histogram series (`x_bucket`/`x_sum`/`x_count`) group under
+            // their base family name
+            let fam = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suf| {
+                    s.name.strip_suffix(suf).filter(|base| {
+                        types.iter().any(|(n, k)| n == base && k == "histogram")
+                    })
+                })
+                .unwrap_or(&s.name)
+                .to_string();
+            if !family_order.contains(&fam) {
+                family_order.push(fam.clone());
+            }
+            let mut labels: Vec<(String, String)> = s.labels;
+            if let Some(id) = shard {
+                labels.insert(0, ("shard".to_string(), id.to_string()));
+            }
+            let rendered: Vec<(&str, &str)> =
+                labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            lines.push((
+                fam,
+                format!("{}{} {}\n", s.name, fmt_labels(&rendered), fmt_value(s.value)),
+            ));
+        }
+    };
+
+    absorb(local, None, &mut notes);
+    for (id, text) in shards {
+        absorb(text, Some(*id), &mut notes);
+    }
+
+    let mut out = String::with_capacity(local.len() * (shards.len() + 1));
+    for note in &notes {
+        out.push_str(note);
+    }
+    for fam in &family_order {
+        if let Some((_, kind)) = types.iter().find(|(n, _)| n == fam) {
+            out.push_str(&format!("# TYPE {fam} {kind}\n"));
+        }
+        for (f, line) in &lines {
+            if f == fam {
+                out.push_str(line);
+            }
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------------------
+// Sampled request tracing
+// ----------------------------------------------------------------------
+
+/// Trace sampling rate: a request is traced iff its sequence number is
+/// ≡ 0 (mod rate). 0 disables tracing.
+static TRACE_RATE: AtomicU64 = AtomicU64::new(0);
+static TRACE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+pub fn set_trace_rate(rate: u64) {
+    TRACE_RATE.store(rate, Ordering::Relaxed);
+}
+
+/// Deterministic 1-in-N sampling decision for the next request (counter
+/// based: rate 1 traces every request, rate 0 none).
+pub fn trace_try_sample() -> bool {
+    let rate = TRACE_RATE.load(Ordering::Relaxed);
+    if rate == 0 {
+        return false;
+    }
+    TRACE_SEQ.fetch_add(1, Ordering::Relaxed) % rate == 0
+}
+
+/// Stages of the per-request span breakdown.
+#[derive(Clone, Copy, Debug)]
+pub enum Stage {
+    /// coordinator queue wait
+    Queue,
+    /// query encoding for the quantized screens
+    Encode,
+    /// quantized pass-1 screen
+    Screen,
+    /// exact pass-2 re-rank
+    Rerank,
+    /// fragment/top-k merge
+    Merge,
+}
+
+const NSTAGES: usize = 5;
+const STAGE_KEYS: [&str; NSTAGES] = ["queue_us", "encode_us", "screen_us", "rerank_us", "merge_us"];
+
+thread_local! {
+    static TRACE_ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static TRACE_STAGES: RefCell<[f64; NSTAGES]> = const { RefCell::new([0.0; NSTAGES]) };
+}
+
+/// Whether a trace is active on this thread — the only cost non-sampled
+/// work pays at a stage mark.
+#[inline]
+pub fn trace_active() -> bool {
+    TRACE_ACTIVE.with(|a| a.get())
+}
+
+/// Activate a trace on this thread (stages cleared). Pair with
+/// [`trace_end`].
+pub fn trace_begin() {
+    TRACE_STAGES.with(|s| *s.borrow_mut() = [0.0; NSTAGES]);
+    TRACE_ACTIVE.with(|a| a.set(true));
+}
+
+/// Add `micros` to a stage of the active trace (no-op otherwise).
+pub fn trace_stage(stage: Stage, micros: f64) {
+    if !trace_active() {
+        return;
+    }
+    TRACE_STAGES.with(|s| s.borrow_mut()[stage as usize] += micros);
+}
+
+/// Finish the active trace: emit one JSON line
+/// `{"op":..,"total_us":..,"batch":..,"queue_us":..,...}` to the sink.
+pub fn trace_end(op: &str, total_micros: f64, batch: usize) {
+    if !trace_active() {
+        return;
+    }
+    TRACE_ACTIVE.with(|a| a.set(false));
+    let stages = TRACE_STAGES.with(|s| *s.borrow());
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("op", Json::str(op)),
+        ("total_us", Json::num(total_micros)),
+        ("batch", Json::num(batch as f64)),
+    ];
+    for (i, key) in STAGE_KEYS.iter().enumerate() {
+        fields.push((key, Json::num(stages[i])));
+    }
+    emit_trace_line(&Json::obj(fields).to_string());
+}
+
+/// Where sampled trace lines go.
+enum Sink {
+    None,
+    Memory(Vec<String>),
+    File(std::io::BufWriter<std::fs::File>),
+}
+
+fn sink() -> &'static Mutex<Sink> {
+    static SINK: OnceLock<Mutex<Sink>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Sink::None))
+}
+
+fn emit_trace_line(line: &str) {
+    let mut g = locked(sink());
+    match &mut *g {
+        Sink::None => return,
+        Sink::Memory(v) => v.push(line.to_string()),
+        Sink::File(w) => {
+            let _ = writeln!(w, "{line}");
+            let _ = w.flush();
+        }
+    }
+    registry().traces_emitted.inc();
+}
+
+/// Route traces to an in-memory buffer (tests).
+pub fn set_trace_sink_memory() {
+    *locked(sink()) = Sink::Memory(Vec::new());
+}
+
+/// Route traces to a JSON-lines file (append).
+pub fn set_trace_sink_file(path: &str) -> Result<()> {
+    let f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| Error::config(format!("cannot open obs.trace_sink '{path}': {e}")))?;
+    *locked(sink()) = Sink::File(std::io::BufWriter::new(f));
+    Ok(())
+}
+
+/// Drop the sink (traces discarded).
+pub fn set_trace_sink_none() {
+    *locked(sink()) = Sink::None;
+}
+
+/// Drain the in-memory sink (empty when the sink is not memory).
+pub fn take_trace_lines() -> Vec<String> {
+    match &mut *locked(sink()) {
+        Sink::Memory(v) => std::mem::take(v),
+        _ => Vec::new(),
+    }
+}
+
+/// Apply the `[obs]` config: enable flag, trace sample rate, sink path.
+pub fn configure(cfg: &crate::config::ObsConfig) -> Result<()> {
+    set_enabled(cfg.enabled);
+    set_trace_rate(cfg.trace_sample);
+    if !cfg.trace_sink.is_empty() {
+        set_trace_sink_file(&cfg.trace_sink)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool;
+
+    /// Serializes tests that read or mutate process-global obs state
+    /// (the ENABLED gate, the trace rate/sink, the shared registry):
+    /// without it, `disabled_registry_drops_writes` could drop another
+    /// test's increments mid-flight.
+    fn global_state_guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn exposition_renders_and_parses_with_unique_families() {
+        let _g = global_state_guard();
+        let r = registry();
+        r.screen_cert_hits[0].inc();
+        r.ivf_rows_scanned.add(100);
+        r.remote_retries.handle("0").add(2);
+        r.remote_call_micros.handle("0").record(350.0);
+        r.queue_wait_micros.record(42.0);
+        let text = render();
+        let exp = parse_exposition(&text).unwrap();
+        // every emitted TYPE is unique
+        for (i, (n, _)) in exp.types.iter().enumerate() {
+            assert!(
+                !exp.types[i + 1..].iter().any(|(m, _)| m == n),
+                "duplicate family {n}"
+            );
+        }
+        // headline families present with sane values
+        assert!(
+            exp.value("gmips_screen_certificate_hits_total", Some(("tier", "sq8"))).unwrap()
+                >= 1.0
+        );
+        assert!(exp.value("gmips_ivf_rows_scanned_total", None).unwrap() >= 100.0);
+        assert!(
+            exp.value("gmips_remote_retries_total", Some(("shard", "0"))).unwrap() >= 2.0
+        );
+        // histogram series parse: +Inf bucket equals _count
+        let inf = exp
+            .samples
+            .iter()
+            .find(|s| {
+                s.name == "gmips_queue_wait_micros_bucket"
+                    && s.labels.iter().any(|(k, v)| k == "le" && v == "+Inf")
+            })
+            .unwrap()
+            .value;
+        let count = exp.value("gmips_queue_wait_micros_count", None).unwrap();
+        assert_eq!(inf, count);
+        let sum = exp.value("gmips_queue_wait_micros_sum", None).unwrap();
+        assert!(sum > 0.0);
+    }
+
+    #[test]
+    fn label_escaping_roundtrips() {
+        let weird = "a\\b\"c\nd";
+        let rendered = format!("m{} 1\n", fmt_labels(&[("k", weird)]));
+        let exp = parse_exposition(&rendered).unwrap();
+        assert_eq!(exp.samples.len(), 1);
+        assert_eq!(exp.samples[0].labels, vec![("k".to_string(), weird.to_string())]);
+        assert_eq!(exp.samples[0].value, 1.0);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_exposition("justaname").is_err());
+        assert!(parse_exposition("m{k=\"unterminated} 1").is_err());
+        assert!(parse_exposition("m{k=unquoted} 1").is_err());
+        assert!(parse_exposition("m 1 2 ok").is_ok()); // timestamp tolerated
+        assert!(parse_exposition("m nope").is_err());
+    }
+
+    #[test]
+    fn trace_sampling_is_deterministic_at_the_rate_extremes() {
+        // one test on purpose: TRACE_RATE is process-global, so the two
+        // extremes must not run concurrently from separate #[test]s
+        let _g = global_state_guard();
+        set_trace_sink_memory();
+        set_trace_rate(0);
+        for _ in 0..50 {
+            assert!(!trace_try_sample());
+        }
+        set_trace_rate(1);
+        for i in 0..50 {
+            assert!(trace_try_sample(), "request {i} must be sampled at rate 1");
+            trace_begin();
+            trace_stage(Stage::Screen, 10.0);
+            trace_stage(Stage::Rerank, 5.0);
+            trace_end("topk", 20.0, 1);
+        }
+        let lines = take_trace_lines();
+        assert_eq!(lines.len(), 50);
+        let j = Json::parse(&lines[0]).unwrap();
+        assert_eq!(j.req("op").unwrap().as_str().unwrap(), "topk");
+        assert_eq!(j.req("screen_us").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(j.req("rerank_us").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.req("total_us").unwrap().as_f64().unwrap(), 20.0);
+        set_trace_rate(0);
+        set_trace_sink_none();
+    }
+
+    #[test]
+    fn stage_marks_without_active_trace_are_noops() {
+        assert!(!trace_active());
+        trace_stage(Stage::Merge, 1.0); // must not panic or record
+        trace_end("noop", 1.0, 1); // inactive: no line emitted
+    }
+
+    #[test]
+    fn counters_are_exact_under_pool_threads() {
+        let _g = global_state_guard();
+        let c = Counter::default();
+        let h = LatencyHistogram::new();
+        pool::parallel_chunks(8, 8, |_, s, e| {
+            for _ in s..e {
+                for _ in 0..10_000 {
+                    c.inc();
+                    h.record(1.5);
+                }
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+        assert_eq!(h.count(), 80_000);
+        assert!((h.sum() - 120_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn disabled_registry_drops_writes() {
+        let _g = global_state_guard();
+        let c = Counter::default();
+        set_enabled(false);
+        c.add(5);
+        set_enabled(true);
+        c.add(3);
+        assert_eq!(c.get(), 3);
+    }
+
+    #[test]
+    fn family_handles_are_shared() {
+        let _g = global_state_guard();
+        let fam = CounterFamily::default();
+        let a = fam.handle("7");
+        let b = fam.handle("7");
+        a.add(2);
+        b.add(3);
+        assert_eq!(fam.snapshot(), vec![("7".to_string(), 5u64)]);
+    }
+
+    #[test]
+    fn aggregate_labels_shards_and_keeps_one_type_per_family() {
+        let local = "# TYPE m counter\nm 1\n# TYPE h histogram\nh_bucket{le=\"+Inf\"} 2\nh_sum 3\nh_count 2\n";
+        let s0 = "# TYPE m counter\nm 10\n".to_string();
+        let s1 = "# TYPE m counter\nm 20\n# TYPE extra counter\nextra 7\n".to_string();
+        let agg = aggregate(local, &[(0, s0), (1, s1)]);
+        let exp = parse_exposition(&agg).unwrap();
+        for (i, (n, _)) in exp.types.iter().enumerate() {
+            assert!(!exp.types[i + 1..].iter().any(|(m, _)| m == n), "dup family {n}");
+        }
+        assert_eq!(exp.value("m", None).unwrap(), 1.0); // local first, unlabeled
+        assert_eq!(exp.value("m", Some(("shard", "0"))).unwrap(), 10.0);
+        assert_eq!(exp.value("m", Some(("shard", "1"))).unwrap(), 20.0);
+        assert_eq!(exp.value("extra", Some(("shard", "1"))).unwrap(), 7.0);
+        // histogram series survived grouped under one TYPE header
+        assert_eq!(exp.value("h_count", None).unwrap(), 2.0);
+        let unparseable = aggregate(local, &[(3, "%%%garbage 1 2 3{".to_string())]);
+        assert!(unparseable.contains("# shard 3"), "{unparseable}");
+    }
+
+    #[test]
+    fn tier_index_covers_ladder_names() {
+        assert_eq!(tier_index("sq8"), 0);
+        assert_eq!(tier_index("sq4"), 1);
+        assert_eq!(tier_index("pq"), 2);
+    }
+}

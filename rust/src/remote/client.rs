@@ -36,10 +36,17 @@ pub struct ShardClient {
     retries: u32,
     backoff_ms: u64,
     conn: Mutex<Option<Client>>,
+    // obs handles interned once here so the call path never touches the
+    // registry's family lock
+    obs_retries: std::sync::Arc<crate::obs::Counter>,
+    obs_backoff_ms: std::sync::Arc<crate::obs::Counter>,
+    obs_call_micros: std::sync::Arc<crate::util::timing::LatencyHistogram>,
 }
 
 impl ShardClient {
     pub fn new(addr: &str, shard: usize, cfg: &RemoteConfig) -> ShardClient {
+        let obs = crate::obs::registry();
+        let label = shard.to_string();
         ShardClient {
             addr: addr.to_string(),
             shard,
@@ -48,6 +55,9 @@ impl ShardClient {
             retries: cfg.retries,
             backoff_ms: cfg.backoff_ms,
             conn: Mutex::new(None),
+            obs_retries: obs.remote_retries.handle(&label),
+            obs_backoff_ms: obs.remote_backoff_ms.handle(&label),
+            obs_call_micros: obs.remote_call_micros.handle(&label),
         }
     }
 
@@ -71,6 +81,15 @@ impl ShardClient {
         req: &ShardRequest,
         deadline: Instant,
     ) -> Result<ShardResponse> {
+        let sw = crate::util::timing::Stopwatch::start();
+        let r = self.call_attempts(req, deadline);
+        if crate::obs::enabled() {
+            self.obs_call_micros.record(sw.micros());
+        }
+        r
+    }
+
+    fn call_attempts(&self, req: &ShardRequest, deadline: Instant) -> Result<ShardResponse> {
         let line = req.to_json().to_string();
         let mut last: Option<Error> = None;
         for attempt in 0..=self.retries {
@@ -100,6 +119,8 @@ impl ShardClient {
                 if Instant::now() + sleep >= deadline {
                     break; // backoff would blow the deadline: give up now
                 }
+                self.obs_retries.inc();
+                self.obs_backoff_ms.add(sleep.as_millis() as u64);
                 std::thread::sleep(sleep);
             }
         }

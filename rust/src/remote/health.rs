@@ -79,7 +79,10 @@ impl HealthBoard {
     /// A successful probe/request: straight back to `Up`.
     pub fn record_success(&self, s: usize) {
         self.fails[s].store(0, Ordering::Relaxed);
-        self.states[s].store(UP, Ordering::Relaxed);
+        let prev = self.states[s].swap(UP, Ordering::Relaxed);
+        if prev != UP {
+            crate::obs::registry().health_transitions[UP as usize].inc();
+        }
     }
 
     /// A failed probe/request (after the caller's retry budget):
@@ -87,7 +90,10 @@ impl HealthBoard {
     pub fn record_failure(&self, s: usize) {
         let f = self.fails[s].fetch_add(1, Ordering::Relaxed).saturating_add(1);
         let state = if f >= self.down_after { DOWN } else { DEGRADED };
-        self.states[s].store(state, Ordering::Relaxed);
+        let prev = self.states[s].swap(state, Ordering::Relaxed);
+        if prev != state {
+            crate::obs::registry().health_transitions[state as usize].inc();
+        }
     }
 
     /// Number of shards not currently `Down`.

@@ -88,6 +88,9 @@ pub enum ShardRequest {
     Alg4 { thetas: Vec<Vec<f32>>, r0: u64 },
     /// Exact scores `θ·φ(x)` for global ids owned by this shard.
     ScoreIds { theta: Vec<f32>, ids: Vec<u32> },
+    /// This shard's metrics registry as Prometheus text (aggregated by
+    /// the coordinator under `shard="<id>"` labels).
+    Metrics,
 }
 
 impl ShardRequest {
@@ -98,6 +101,7 @@ impl ShardRequest {
             ShardRequest::Alg3 { .. } => "shard_alg3",
             ShardRequest::Alg4 { .. } => "shard_alg4",
             ShardRequest::ScoreIds { .. } => "score_ids",
+            ShardRequest::Metrics => "metrics",
         }
     }
 
@@ -124,6 +128,7 @@ impl ShardRequest {
                 ("theta", Json::arr_f32(theta)),
                 ("ids", arr_u32(ids)),
             ]),
+            ShardRequest::Metrics => Json::obj(vec![("op", Json::str("metrics"))]),
         }
     }
 
@@ -147,6 +152,7 @@ impl ShardRequest {
                 theta: v.req("theta")?.as_f32_vec()?,
                 ids: as_u32_vec(v.req("ids")?)?,
             }),
+            "metrics" => Ok(ShardRequest::Metrics),
             other => Err(Error::serve(format!("unknown shard op '{other}'"))),
         }
     }
@@ -174,6 +180,8 @@ pub enum ShardResponse {
     Alg4 { frags: Vec<ShardFragment> },
     /// Scores aligned with the requested ids.
     Scores { scores: Vec<f32> },
+    /// This shard's metrics registry as Prometheus text.
+    Metrics { exposition: String },
     /// Shard-side failure.
     Error { message: String },
 }
@@ -260,6 +268,9 @@ impl ShardResponse {
                 ),
             )]),
             ShardResponse::Scores { scores } => ok(vec![("scores", Json::arr_f32(scores))]),
+            ShardResponse::Metrics { exposition } => {
+                ok(vec![("exposition", Json::str(exposition.clone()))])
+            }
             ShardResponse::Error { message } => Json::obj(vec![
                 ("ok", Json::Bool(false)),
                 ("error", Json::str(message.clone())),
@@ -338,6 +349,9 @@ impl ShardResponse {
         if let Some(sc) = v.get("scores") {
             return Ok(ShardResponse::Scores { scores: sc.as_f32_vec()? });
         }
+        if let Some(e) = v.get("exposition") {
+            return Ok(ShardResponse::Metrics { exposition: e.as_str()?.to_string() });
+        }
         Err(Error::serve("unrecognized shard response shape"))
     }
 }
@@ -362,6 +376,17 @@ mod tests {
         roundtrip_req(ShardRequest::Alg3 { thetas: vec![vec![1.0]], r0: 42 });
         roundtrip_req(ShardRequest::Alg4 { thetas: vec![vec![1.0, 2.0]], r0: 0 });
         roundtrip_req(ShardRequest::ScoreIds { theta: vec![0.5], ids: vec![3, 9, 4_000_000] });
+        roundtrip_req(ShardRequest::Metrics);
+    }
+
+    #[test]
+    fn metrics_response_roundtrips() {
+        let text = "# TYPE gmips_requests_total counter\ngmips_requests_total 7\n";
+        let r = ShardResponse::Metrics { exposition: text.into() };
+        match ShardResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap() {
+            ShardResponse::Metrics { exposition } => assert_eq!(exposition, text),
+            other => panic!("wrong variant: {other:?}"),
+        }
     }
 
     #[test]

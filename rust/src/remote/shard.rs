@@ -42,6 +42,12 @@ pub struct ShardEngine {
     /// True when the index came from a snapshot whose quantized shadow
     /// sections were corrupt (answers unchanged, served from f32).
     snapshot_degraded: bool,
+    /// Work requests handled by *this* engine (ping and metrics scrapes
+    /// excluded, so a scrape reads a quiescent value). A plain atomic,
+    /// not the process-global registry: in-process test fleets share one
+    /// registry, but each engine's own count must stay distinct — and
+    /// exact regardless of the registry enable flag.
+    ops: std::sync::atomic::AtomicU64,
 }
 
 impl ShardEngine {
@@ -102,7 +108,16 @@ impl ShardEngine {
             l,
             cfg.index.seed,
         );
-        Ok(ShardEngine { ds, index, backend, partition, expectation, shard, snapshot_degraded })
+        Ok(ShardEngine {
+            ds,
+            index,
+            backend,
+            partition,
+            expectation,
+            shard,
+            snapshot_degraded,
+            ops: std::sync::atomic::AtomicU64::new(0),
+        })
     }
 
     pub fn shard(&self) -> usize {
@@ -125,7 +140,20 @@ impl ShardEngine {
     /// Answer one shard request. Never panics on malformed input —
     /// dimension/range problems come back as [`ShardResponse::Error`].
     pub fn handle(&self, req: &ShardRequest) -> ShardResponse {
+        if !matches!(req, ShardRequest::Ping | ShardRequest::Metrics) {
+            self.ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
         match req {
+            ShardRequest::Metrics => ShardResponse::Metrics {
+                exposition: crate::obs::render_with(&crate::obs::ExtraMetrics {
+                    counters: vec![(
+                        "gmips_shard_requests_total",
+                        "Work requests handled by this shard engine",
+                        self.ops.load(std::sync::atomic::Ordering::Relaxed),
+                    )],
+                    ..Default::default()
+                }),
+            },
             ShardRequest::Ping => ShardResponse::Pong {
                 shard: self.shard,
                 shards: self.index.n_shards(),
@@ -277,6 +305,17 @@ mod tests {
         }
         match eng.handle(&ShardRequest::ScoreIds { theta, ids: vec![0, 3, 599] }) {
             ShardResponse::Scores { scores } => assert_eq!(scores.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        // four work ops above (ping excluded); the metrics op reports
+        // them without counting itself
+        match eng.handle(&ShardRequest::Metrics) {
+            ShardResponse::Metrics { exposition } => {
+                assert!(
+                    exposition.contains("gmips_shard_requests_total 4"),
+                    "{exposition}"
+                );
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -386,6 +386,25 @@ impl RemoteStack {
         Ok((merged, (ok, ns)))
     }
 
+    /// Fan the `metrics` op out to every shard: each answering shard's
+    /// Prometheus exposition comes back as `(shard_id, text)` for
+    /// [`crate::obs::aggregate`]. Errors only when zero shards answer.
+    pub fn metrics_status(&self) -> Result<(Vec<(usize, String)>, (usize, usize))> {
+        let ns = self.clients.len();
+        let replies = self.fan_out(|s| match self.call_shard(s, &ShardRequest::Metrics) {
+            Some(ShardResponse::Metrics { exposition }) => Some((s, exposition)),
+            _ => None,
+        });
+        let shards: Vec<(usize, String)> = replies.into_iter().flatten().collect();
+        let ok = shards.len();
+        if ok == 0 {
+            return Err(Error::serve(format!(
+                "metrics fan-out failed: all {ns} shard servers unreachable"
+            )));
+        }
+        Ok((shards, (ok, ns)))
+    }
+
     /// Score global ids for `q`, each id routed to its owning shard.
     /// Ids owned by a shard that fails come back `None` (the caller —
     /// the remote sampler's lazy tail — drops them and degrades instead

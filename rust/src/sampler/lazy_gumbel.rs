@@ -97,6 +97,9 @@ impl LazyGumbelSampler {
                 }
             }
         }
+        let obs = crate::obs::registry();
+        obs.sampler_rounds.inc();
+        obs.sampler_tail_gumbels.add(m as u64);
         SampleOutcome {
             id: best_id,
             work: SampleWork { scanned: top.scanned, k: top.items.len(), m },

@@ -93,14 +93,20 @@ impl ServeHandler for CoordHandler {
                 Err(e) => Response::Error { message: e.to_string() },
             },
         };
+        crate::obs::registry().queue_depth.set(self.coordinator.queue_depth() as i64);
         let resp = match resp {
-            Response::Stats { text } => Response::Stats {
-                text: format!(
-                    "{text}\nserve: queue_depth={} shed={}",
-                    self.coordinator.queue_depth(),
-                    self.coordinator.shed_count()
-                ),
-            },
+            Response::Stats { text, mut numbers } => {
+                numbers.queue_depth = self.coordinator.queue_depth() as u64;
+                numbers.shed = self.coordinator.shed_count();
+                Response::Stats {
+                    text: format!(
+                        "{text}\nserve: queue_depth={} shed={}",
+                        self.coordinator.queue_depth(),
+                        self.coordinator.shed_count()
+                    ),
+                    numbers,
+                }
+            }
             r => r,
         };
         resp.to_json()
@@ -475,9 +481,19 @@ mod tests {
         }
         // stats now carry the front-end's queue/shed counters
         match client.call(&Request::Stats).unwrap() {
-            Response::Stats { text } => {
+            Response::Stats { text, numbers } => {
                 assert!(text.contains("queue_depth="), "{text}");
                 assert!(text.contains("shed="), "{text}");
+                assert_eq!(numbers.shed, 0);
+                assert!(!numbers.snapshot_degraded);
+            }
+            other => panic!("{other:?}"),
+        }
+        // the metrics op answers with a parseable Prometheus exposition
+        match client.call(&Request::Metrics).unwrap() {
+            Response::Metrics { exposition } => {
+                assert!(exposition.contains("gmips_requests_total"), "{exposition}");
+                crate::obs::parse_exposition(&exposition).unwrap();
             }
             other => panic!("{other:?}"),
         }

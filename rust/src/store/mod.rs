@@ -207,6 +207,9 @@ pub fn open_index(path: &str, cfg: &Config, backend: Arc<dyn ScoreBackend>) -> R
              serving from the f32 tier (answers unchanged, screening bandwidth lost)"
         );
     }
+    let obs = crate::obs::registry();
+    obs.store_open_mode.set(if cfg.index.mmap { 2 } else { 1 });
+    obs.store_snapshot_degraded.set(degraded as i64);
     Ok(Opened { ds, index, degraded, built: false })
 }
 
@@ -228,6 +231,9 @@ pub fn load_or_build(
     if !path.is_empty() && save_on_build {
         save_index(&path, cfg, &ds, &index)?;
     }
+    let obs = crate::obs::registry();
+    obs.store_open_mode.set(0); // built fresh
+    obs.store_snapshot_degraded.set(0);
     Ok(Opened { ds, index, degraded: false, built: true })
 }
 

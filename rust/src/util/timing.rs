@@ -34,8 +34,11 @@ impl Stopwatch {
 pub struct LatencyHistogram {
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
-    sum_micros: AtomicU64,
-    max_micros: AtomicU64,
+    /// Accumulated in tenths of a microsecond: a plain `micros as u64`
+    /// add truncates every sub-microsecond observation to 0, skewing
+    /// `mean()` toward zero on fast paths.
+    sum_tenth_micros: AtomicU64,
+    max_tenth_micros: AtomicU64,
 }
 
 const NBUCKETS: usize = 52;
@@ -65,18 +68,19 @@ impl LatencyHistogram {
         LatencyHistogram {
             buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
-            sum_micros: AtomicU64::new(0),
-            max_micros: AtomicU64::new(0),
+            sum_tenth_micros: AtomicU64::new(0),
+            max_tenth_micros: AtomicU64::new(0),
         }
     }
 
     /// Record one observation in microseconds.
     pub fn record(&self, micros: f64) {
         let b = bucket_of(micros);
+        let tenths = (micros * 10.0).round().max(0.0) as u64;
         self.buckets[b].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_micros.fetch_add(micros as u64, Ordering::Relaxed);
-        self.max_micros.fetch_max(micros as u64, Ordering::Relaxed);
+        self.sum_tenth_micros.fetch_add(tenths, Ordering::Relaxed);
+        self.max_tenth_micros.fetch_max(tenths, Ordering::Relaxed);
     }
 
     pub fn record_duration(&self, d: Duration) {
@@ -93,11 +97,30 @@ impl LatencyHistogram {
         if c == 0 {
             return 0.0;
         }
-        self.sum_micros.load(Ordering::Relaxed) as f64 / c as f64
+        self.sum() / c as f64
+    }
+
+    /// Sum of all observations in microseconds (Prometheus `_sum`).
+    pub fn sum(&self) -> f64 {
+        self.sum_tenth_micros.load(Ordering::Relaxed) as f64 / 10.0
     }
 
     pub fn max(&self) -> f64 {
-        self.max_micros.load(Ordering::Relaxed) as f64
+        self.max_tenth_micros.load(Ordering::Relaxed) as f64 / 10.0
+    }
+
+    /// Cumulative bucket snapshot for exposition: `(upper_edge_micros,
+    /// cumulative_count)` per bucket, in ascending edge order. The last
+    /// entry's count equals [`count`](Self::count) (the `+Inf` bucket is
+    /// the renderer's job).
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(NBUCKETS);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            out.push((bucket_upper(i), seen));
+        }
+        out
     }
 
     /// Approximate quantile (`q` in [0,1]) in microseconds.
@@ -216,7 +239,13 @@ impl Bench {
         }
         let n = means.len() as f64;
         let mean = means.iter().sum::<f64>() / n;
-        let var = means.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>() / n.max(2.0);
+        // sample variance: /(n-1), zero when a single batch gives no
+        // spread information (the old /max(n,2) was neither estimator)
+        let var = if means.len() < 2 {
+            0.0
+        } else {
+            means.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>() / (n - 1.0)
+        };
         BenchStats {
             name: name.to_string(),
             iters: total_iters,
@@ -296,6 +325,44 @@ mod tests {
         assert!(p50 > 250.0 && p50 < 1000.0, "p50={p50}");
         assert!((h.mean() - 500.0).abs() < 5.0);
         assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn histogram_submicro_observations_are_not_truncated() {
+        // regression: `micros as u64` truncated every sub-µs observation
+        // to 0, dragging mean() to zero on fast paths
+        let h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record(0.4);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.4).abs() < 0.05, "mean={}", h.mean());
+        assert!((h.sum() - 400.0).abs() < 1.0, "sum={}", h.sum());
+        assert!((h.max() - 0.4).abs() < 0.05, "max={}", h.max());
+    }
+
+    #[test]
+    fn cumulative_buckets_end_at_total_count() {
+        let h = LatencyHistogram::new();
+        for us in [0.5, 3.0, 40.0, 900.0, 2e5] {
+            h.record(us);
+        }
+        let cum = h.cumulative_buckets();
+        assert_eq!(cum.last().unwrap().1, h.count());
+        for w in cum.windows(2) {
+            assert!(w[0].0 < w[1].0, "edges ascend");
+            assert!(w[0].1 <= w[1].1, "counts cumulative");
+        }
+    }
+
+    #[test]
+    fn bench_variance_is_sample_variance() {
+        // n < 2 batches must report zero spread, not a bogus /2 estimate
+        let b = Bench { budget: Duration::ZERO, warmup: Duration::from_millis(5), max_batches: 1 };
+        let stats = b.run("noop", || {
+            std::hint::black_box(1u64);
+        });
+        assert!(stats.std_s >= 0.0);
     }
 
     #[test]

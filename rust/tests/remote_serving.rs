@@ -18,7 +18,7 @@ use gmips::coordinator::{Coordinator, Engine, Request, Response};
 use gmips::data;
 use gmips::dispatch::{ExpectationDispatch, PartitionDispatch, SamplerDispatch};
 use gmips::mips::MipsIndex;
-use gmips::remote::{FaultPlan, ShardEngine, ShardHandler, ShardHealth};
+use gmips::remote::{FaultPlan, ShardEngine, ShardHandler, ShardHealth, ShardRequest, ShardResponse};
 use gmips::scorer::{NativeScorer, ScoreBackend};
 use gmips::server::{Client, Server};
 use gmips::shard::ShardedIndex;
@@ -162,7 +162,7 @@ fn engine_routes_to_the_remote_stack() {
     assert_eq!(remote.index.name(), "remote");
     let mut rng = Pcg64::new(1);
     match remote.handle(&Request::Stats, &mut rng) {
-        Response::Stats { text } => {
+        Response::Stats { text, .. } => {
             assert!(text.contains("remote[2 shards"), "{text}");
             assert!(text.contains("sampler=remote-gumbel"), "{text}");
             assert!(text.contains("partition=remote-alg3"), "{text}");
@@ -275,6 +275,62 @@ fn killed_shard_degrades_then_recovers() {
 }
 
 #[test]
+fn metrics_aggregation_matches_per_shard_scrapes() {
+    let mut cfg = remote_cfg(2);
+    let fleet = ShardFleet::spawn(&cfg);
+    cfg.remote.addrs = fleet.addr_csv();
+    let remote = Engine::from_remote(&cfg, None).unwrap();
+    let mut rng = Pcg64::new(21);
+    let theta = data::random_theta(&remote.ds, 0.05, &mut rng);
+
+    // TopK fans exactly one shard op per shard per request, and ping /
+    // metrics traffic is not counted, so after q requests every shard's
+    // local counter reads exactly q.
+    let q = 5u64;
+    for _ in 0..q {
+        match remote.handle(&Request::TopK { theta: theta.clone(), k: 4 }, &mut rng) {
+            Response::TopK { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // direct per-shard scrape over the wire protocol
+    let mut direct = Vec::new();
+    for addr in &fleet.addrs {
+        let mut c = Client::connect(addr).unwrap();
+        let line = c.call_line(&ShardRequest::Metrics.to_json().to_string()).unwrap();
+        let resp =
+            ShardResponse::from_json(&gmips::util::json::Json::parse(&line).unwrap()).unwrap();
+        match resp {
+            ShardResponse::Metrics { exposition } => {
+                let exp = gmips::obs::parse_exposition(&exposition).unwrap();
+                let v = exp.value("gmips_shard_requests_total", None).unwrap();
+                assert_eq!(v as u64, q, "{exposition}");
+                direct.push(v);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // coordinator aggregation: the same values resurface under
+    // shard="<id>" labels in one merged exposition
+    match remote.handle(&Request::Metrics, &mut rng) {
+        Response::Metrics { exposition } => {
+            let exp = gmips::obs::parse_exposition(&exposition).unwrap();
+            for (s, want) in direct.iter().enumerate() {
+                let label = s.to_string();
+                let got = exp
+                    .value("gmips_shard_requests_total", Some(("shard", &label)))
+                    .unwrap_or_else(|| panic!("missing shard={s} sample:\n{exposition}"));
+                assert_eq!(got, *want, "shard {s}");
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    fleet.shutdown();
+}
+
+#[test]
 fn saturation_sheds_with_explicit_overload() {
     let mut cfg = remote_cfg(1);
     cfg.serve.shed_ms = 1;
@@ -327,11 +383,12 @@ fn saturation_sheds_with_explicit_overload() {
     fleet.plans[0].set_delay_ms(0);
     let mut client = Client::connect(&addr).unwrap();
     match client.call(&Request::Stats).unwrap() {
-        Response::Stats { text } => {
+        Response::Stats { text, numbers } => {
             assert!(text.contains("queue_depth="), "{text}");
             let counted: usize =
                 text.rsplit("shed=").next().unwrap().trim().parse().expect("shed count");
             assert!(counted >= shed, "sheds must be counted: {text}");
+            assert_eq!(numbers.shed as usize, counted, "structured shed must match the text");
         }
         other => panic!("{other:?}"),
     }

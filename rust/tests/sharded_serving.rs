@@ -38,7 +38,7 @@ fn engine_routes_to_the_sharded_stack() {
     assert_eq!(sharded.index.name(), "sharded");
     let mut rng = Pcg64::new(1);
     match sharded.handle(&Request::Stats, &mut rng) {
-        Response::Stats { text } => {
+        Response::Stats { text, .. } => {
             assert!(text.contains("sampler=sharded-gumbel"), "{text}");
             assert!(text.contains("partition=sharded-alg3"), "{text}");
             assert!(text.contains("expectation=sharded-alg4"), "{text}");
@@ -51,7 +51,7 @@ fn engine_routes_to_the_sharded_stack() {
     assert!(matches!(mono.partition, PartitionDispatch::Mono(_)));
     assert!(matches!(mono.expectation, ExpectationDispatch::Mono(_)));
     match mono.handle(&Request::Stats, &mut rng) {
-        Response::Stats { text } => {
+        Response::Stats { text, .. } => {
             assert!(text.contains("sampler=lazy-gumbel"), "{text}");
             assert!(text.contains("partition=alg3"), "{text}");
             assert!(text.contains("expectation=alg4"), "{text}");
