@@ -109,7 +109,7 @@ impl Dataset {
         let max_id = ids.iter().copied().max().unwrap() as usize;
         assert!(max_id < self.n, "gather: id {max_id} out of range (n={})", self.n);
         for (j, &id) in ids.iter().enumerate() {
-            // Safety: id ≤ max_id < n so the source row [id·d, (id+1)·d)
+            // SAFETY: id ≤ max_id < n so the source row [id·d, (id+1)·d)
             // lies inside `data` (len n·d), and j < ids.len() so the
             // destination [j·d, (j+1)·d) lies inside `out` (len ≥
             // ids.len()·d, asserted above). Source and destination are
@@ -189,19 +189,28 @@ impl Dataset {
 
 fn bytemuck_cast_f32(x: &[f32]) -> &[u8] {
     assert!(cfg!(target_endian = "little"), "GMD1 format requires little-endian");
-    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+    // SAFETY: the byte view covers exactly the slice's own allocation
+    // (len·4 bytes at its base); u8 has no alignment requirement and any
+    // initialized f32 bytes are valid u8s; the borrow pins the source.
+    unsafe { std::slice::from_raw_parts(x.as_ptr().cast::<u8>(), x.len() * 4) }
 }
 fn bytemuck_cast_f32_mut(x: &mut [f32]) -> &mut [u8] {
     assert!(cfg!(target_endian = "little"));
-    unsafe { std::slice::from_raw_parts_mut(x.as_mut_ptr() as *mut u8, x.len() * 4) }
+    // SAFETY: same extent argument as `bytemuck_cast_f32`; the &mut
+    // borrow makes this the unique view, and every u8 pattern written
+    // back is a valid f32 bit pattern (no invalid values for f32).
+    unsafe { std::slice::from_raw_parts_mut(x.as_mut_ptr().cast::<u8>(), x.len() * 4) }
 }
 fn bytemuck_cast_u32(x: &[u32]) -> &[u8] {
     assert!(cfg!(target_endian = "little"));
-    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) }
+    // SAFETY: as `bytemuck_cast_f32` — exact-extent read-only byte view.
+    unsafe { std::slice::from_raw_parts(x.as_ptr().cast::<u8>(), x.len() * 4) }
 }
 fn bytemuck_cast_u32_mut(x: &mut [u32]) -> &mut [u8] {
     assert!(cfg!(target_endian = "little"));
-    unsafe { std::slice::from_raw_parts_mut(x.as_mut_ptr() as *mut u8, x.len() * 4) }
+    // SAFETY: as `bytemuck_cast_f32_mut` — unique exact-extent byte view;
+    // every bit pattern is a valid u32.
+    unsafe { std::slice::from_raw_parts_mut(x.as_mut_ptr().cast::<u8>(), x.len() * 4) }
 }
 
 #[cfg(test)]
@@ -276,5 +285,27 @@ mod tests {
         let mut out = vec![0f32; 6];
         ds.gather(&[3, 1], &mut out);
         assert_eq!(out, vec![9.0, 10.0, 11.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn miri_gather_and_byte_casts() {
+        // Miri-lane subset: the unchecked-copy gather loop and the
+        // slice byte reinterpretations, on tiny inputs
+        let ds = Dataset::new((0..20).map(|x| x as f32 * 0.5).collect(), 5, 4).unwrap();
+        let mut out = vec![0f32; 12];
+        ds.gather(&[4, 0, 2], &mut out);
+        assert_eq!(&out[..4], ds.row(4));
+        assert_eq!(&out[4..8], ds.row(0));
+        assert_eq!(&out[8..], ds.row(2));
+        let f = [1.0f32, -2.5];
+        assert_eq!(bytemuck_cast_f32(&f).len(), 8);
+        assert_eq!(&bytemuck_cast_f32(&f)[..4], &1.0f32.to_le_bytes());
+        let mut u = [0u32; 2];
+        bytemuck_cast_u32_mut(&mut u)[4] = 7;
+        assert_eq!(u, [0, 7]);
+        assert_eq!(&bytemuck_cast_u32(&u)[4..], &7u32.to_le_bytes());
+        let mut back = [0f32; 1];
+        bytemuck_cast_f32_mut(&mut back).copy_from_slice(&3.25f32.to_le_bytes());
+        assert_eq!(back[0], 3.25);
     }
 }

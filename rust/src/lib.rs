@@ -77,6 +77,21 @@
 //! println!("sampled state {}", sample.id);
 //! ```
 
+// Unsafe-code policy (see rust/UNSAFE_POLICY.md): every unsafe operation
+// inside an `unsafe fn` must sit in its own explicitly justified block —
+// the function-level `unsafe` stops implying body-wide license. Together
+// with the `// SAFETY:` comment convention and `# Safety` doc sections
+// this is enforced by `cargo xtask lint`.
+#![deny(unsafe_op_in_unsafe_fn)]
+// Curated pedantic subset (warn-level so local builds stay usable; the
+// clippy CI lane promotes warnings to errors with `-D warnings`):
+// `ptr_as_ptr` keeps raw-pointer reinterpretation explicit via
+// `.cast::<T>()` instead of `as` chains — the store/linalg unsafe code is
+// exactly where a silently retyped pointer becomes UB. The wire/store
+// truncation-cast policy (`cast_possible_truncation` on the codecs) is
+// scoped to `remote/protocol.rs` and `store/format.rs` via module-level
+// attributes there, and re-checked textually by `cargo xtask lint`.
+#![warn(clippy::ptr_as_ptr)]
 // Style lint tolerated crate-wide (deliberately broad): the blocked
 // numeric kernels and the row-major index arithmetic around them
 // (linalg, mips, data::pca/synth) use explicit index loops on purpose —

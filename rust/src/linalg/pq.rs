@@ -393,12 +393,20 @@ impl PqView {
     fn accum_into(&self, row_start: usize, row_end: usize, lut: &[u8], acc: &mut [u32]) {
         debug_assert_eq!(acc.len(), row_end - row_start);
         acc.iter_mut().for_each(|x| *x = 0);
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        debug_assert!(lut.len() >= self.m * self.k);
         match simd::kernel() {
             #[cfg(target_arch = "x86_64")]
+            // SAFETY: avx2 verified by `simd::detect()`; the guard pins
+            // bits == 4 (so each plane holds ⌈n/2⌉ packed bytes and each
+            // subspace LUT is k = 16 bytes) and the row range / LUT sizes
+            // are debug-asserted above — the kernel's contract.
             Kernel::Avx2 if self.bits == 4 && self.m <= 256 => unsafe {
                 self.accum4_avx2(row_start, row_end, lut, acc)
             },
             #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON verified by `simd::detect()`; same bits == 4 /
+            // range-containment argument as the AVX2 arm.
             Kernel::Neon if self.bits == 4 && self.m <= 256 => unsafe {
                 self.accum4_neon(row_start, row_end, lut, acc)
             },
@@ -431,36 +439,70 @@ impl PqView {
     /// u16 lanes (exact: `m ≤ 256` ⇒ sums ≤ 255·256 < 2¹⁶) and widen to
     /// u32 on store. Scalar prologue/epilogue handle the odd-row nibble
     /// phase and the ragged tail.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2 availability (guaranteed via
+    /// [`crate::linalg::simd::kernel`]), `self.bits == 4` (so every code
+    /// plane holds `stride = ⌈n/2⌉` packed bytes and every subspace LUT
+    /// is `k = 16` bytes), `row_start ≤ row_end ≤ self.n`,
+    /// `acc.len() == row_end − row_start`, and `lut.len() ≥ m·k`.
+    // See `linalg::simd`'s `avx2` module for why `unused_unsafe` is
+    // tolerated on the SIMD kernels.
     #[cfg(target_arch = "x86_64")]
+    #[allow(unused_unsafe)]
     #[target_feature(enable = "avx2")]
     unsafe fn accum4_avx2(&self, row_start: usize, row_end: usize, lut: &[u8], acc: &mut [u32]) {
         use std::arch::x86_64::*;
+        debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+        debug_assert_eq!(self.bits, 4);
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        debug_assert_eq!(acc.len(), row_end - row_start);
+        debug_assert!(lut.len() >= self.m * self.k);
         let mut r = row_start;
         if r % 2 == 1 && r < row_end {
             self.accum_scalar(r, r + 1, lut, &mut acc[..1]);
             r += 1;
         }
-        let mask = _mm_set1_epi8(0x0f);
+        // SAFETY: value-only constant splat.
+        let mask = unsafe { _mm_set1_epi8(0x0f) };
         while r + 32 <= row_end {
             let base = r - row_start;
-            let mut a0 = _mm256_setzero_si256(); // rows r..r+16, u16 lanes
-            let mut a1 = _mm256_setzero_si256(); // rows r+16..r+32
+            // SAFETY: value-only accumulator zeroing.
+            let mut a0 = unsafe { _mm256_setzero_si256() }; // rows r..r+16, u16 lanes
+            let mut a1 = unsafe { _mm256_setzero_si256() }; // rows r+16..r+32
             for sub in 0..self.m {
-                let raw = _mm_loadu_si128(
-                    self.codes.as_ptr().add(sub * self.stride + r / 2) as *const __m128i
-                );
-                let lo = _mm_and_si128(raw, mask);
-                let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
-                let tbl = _mm_loadu_si128(lut.as_ptr().add(sub * self.k) as *const __m128i);
-                let tlo = _mm_shuffle_epi8(tbl, lo);
-                let thi = _mm_shuffle_epi8(tbl, hi);
-                let even = _mm_unpacklo_epi8(tlo, thi); // rows r..r+16 in order
-                let odd = _mm_unpackhi_epi8(tlo, thi); // rows r+16..r+32
-                a0 = _mm256_add_epi16(a0, _mm256_cvtepu8_epi16(even));
-                a1 = _mm256_add_epi16(a1, _mm256_cvtepu8_epi16(odd));
+                // SAFETY: r is even here and r + 32 ≤ row_end ≤ n, so the
+                // 16-byte packed load covers bytes r/2..r/2+16 with
+                // r/2 + 15 ≤ (row_end − 32)/2 + 15 < ⌈n/2⌉ = stride,
+                // inside plane `sub` of the codes blob (m·stride bytes).
+                let raw = unsafe {
+                    _mm_loadu_si128(
+                        self.codes.as_ptr().add(sub * self.stride + r / 2).cast::<__m128i>(),
+                    )
+                };
+                // SAFETY: the 16-byte LUT load reads lut[sub·k..sub·k+16]
+                // with k = 16 and lut.len() ≥ m·k; the shuffle/unpack/
+                // widen/add chain is value-only.
+                unsafe {
+                    let lo = _mm_and_si128(raw, mask);
+                    let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
+                    let tbl =
+                        _mm_loadu_si128(lut.as_ptr().add(sub * self.k).cast::<__m128i>());
+                    let tlo = _mm_shuffle_epi8(tbl, lo);
+                    let thi = _mm_shuffle_epi8(tbl, hi);
+                    let even = _mm_unpacklo_epi8(tlo, thi); // rows r..r+16 in order
+                    let odd = _mm_unpackhi_epi8(tlo, thi); // rows r+16..r+32
+                    a0 = _mm256_add_epi16(a0, _mm256_cvtepu8_epi16(even));
+                    a1 = _mm256_add_epi16(a1, _mm256_cvtepu8_epi16(odd));
+                }
             }
-            store_u16_as_u32(a0, acc.as_mut_ptr().add(base));
-            store_u16_as_u32(a1, acc.as_mut_ptr().add(base + 16));
+            // SAFETY: `store_u16_as_u32` writes 16 u32 each at `base` and
+            // `base + 16`; the largest index touched is base + 31 =
+            // r + 31 − row_start ≤ row_end − 1 − row_start < acc.len().
+            unsafe {
+                store_u16_as_u32(a0, acc.as_mut_ptr().add(base));
+                store_u16_as_u32(a1, acc.as_mut_ptr().add(base + 16));
+            }
             r += 32;
         }
         if r < row_end {
@@ -471,10 +513,22 @@ impl PqView {
 
     /// NEON 4-bit kernel: `tbl` (vqtbl1q) gathers 32 rows' entries per
     /// subspace from the 16-byte LUT; u16 widening accumulate, u32 store.
+    ///
+    /// # Safety
+    /// Same contract as [`accum4_avx2`](Self::accum4_avx2) with NEON in
+    /// place of AVX2.
+    // See `linalg::simd`'s `avx2` module for why `unused_unsafe` is
+    // tolerated on the SIMD kernels.
     #[cfg(target_arch = "aarch64")]
+    #[allow(unused_unsafe)]
     #[target_feature(enable = "neon")]
     unsafe fn accum4_neon(&self, row_start: usize, row_end: usize, lut: &[u8], acc: &mut [u32]) {
         use std::arch::aarch64::*;
+        debug_assert!(std::arch::is_aarch64_feature_detected!("neon"));
+        debug_assert_eq!(self.bits, 4);
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        debug_assert_eq!(acc.len(), row_end - row_start);
+        debug_assert!(lut.len() >= self.m * self.k);
         let mut r = row_start;
         if r % 2 == 1 && r < row_end {
             self.accum_scalar(r, r + 1, lut, &mut acc[..1]);
@@ -482,27 +536,42 @@ impl PqView {
         }
         while r + 32 <= row_end {
             let base = r - row_start;
-            let mut a = [vdupq_n_u16(0); 4]; // rows r+0..8, 8..16, 16..24, 24..32
+            // SAFETY: value-only accumulator zeroing.
+            let mut a = unsafe { [vdupq_n_u16(0); 4] }; // rows r+0..8, 8..16, 16..24, 24..32
             for sub in 0..self.m {
-                let raw = vld1q_u8(self.codes.as_ptr().add(sub * self.stride + r / 2));
-                let lo = vandq_u8(raw, vdupq_n_u8(0x0f));
-                let hi = vshrq_n_u8::<4>(raw);
-                let tbl = vld1q_u8(lut.as_ptr().add(sub * self.k));
-                let tlo = vqtbl1q_u8(tbl, lo);
-                let thi = vqtbl1q_u8(tbl, hi);
-                let even = vzip1q_u8(tlo, thi); // rows r..r+16 in order
-                let odd = vzip2q_u8(tlo, thi); // rows r+16..r+32
-                a[0] = vaddw_u8(a[0], vget_low_u8(even));
-                a[1] = vaddw_u8(a[1], vget_high_u8(even));
-                a[2] = vaddw_u8(a[2], vget_low_u8(odd));
-                a[3] = vaddw_u8(a[3], vget_high_u8(odd));
+                // SAFETY: r is even and r + 32 ≤ row_end ≤ n, so the
+                // 16-byte packed load covers bytes r/2..r/2+16 with
+                // r/2 + 15 < ⌈n/2⌉ = stride inside plane `sub`; the LUT
+                // load reads lut[sub·k..sub·k+16] with k = 16 and
+                // lut.len() ≥ m·k; the tbl/zip/widening-add chain is
+                // value-only.
+                unsafe {
+                    let raw = vld1q_u8(self.codes.as_ptr().add(sub * self.stride + r / 2));
+                    let lo = vandq_u8(raw, vdupq_n_u8(0x0f));
+                    let hi = vshrq_n_u8::<4>(raw);
+                    let tbl = vld1q_u8(lut.as_ptr().add(sub * self.k));
+                    let tlo = vqtbl1q_u8(tbl, lo);
+                    let thi = vqtbl1q_u8(tbl, hi);
+                    let even = vzip1q_u8(tlo, thi); // rows r..r+16 in order
+                    let odd = vzip2q_u8(tlo, thi); // rows r+16..r+32
+                    a[0] = vaddw_u8(a[0], vget_low_u8(even));
+                    a[1] = vaddw_u8(a[1], vget_high_u8(even));
+                    a[2] = vaddw_u8(a[2], vget_low_u8(odd));
+                    a[3] = vaddw_u8(a[3], vget_high_u8(odd));
+                }
             }
             for (t, &av) in a.iter().enumerate() {
-                vst1q_u32(acc.as_mut_ptr().add(base + t * 8), vmovl_u16(vget_low_u16(av)));
-                vst1q_u32(
-                    acc.as_mut_ptr().add(base + t * 8 + 4),
-                    vmovl_u16(vget_high_u16(av)),
-                );
+                // SAFETY: the two 4-lane stores per accumulator write
+                // acc[base + t·8 .. base + t·8 + 8]; the largest index is
+                // base + 31 < acc.len() (see the loop bound r + 32 ≤
+                // row_end and acc.len() == row_end − row_start).
+                unsafe {
+                    vst1q_u32(acc.as_mut_ptr().add(base + t * 8), vmovl_u16(vget_low_u16(av)));
+                    vst1q_u32(
+                        acc.as_mut_ptr().add(base + t * 8 + 4),
+                        vmovl_u16(vget_high_u16(av)),
+                    );
+                }
             }
             r += 32;
         }
@@ -576,14 +645,25 @@ impl PqView {
 }
 
 /// Widen 16 u16 lanes to u32 and store (AVX2 helper).
+///
+/// # Safety
+/// Caller must guarantee AVX2 availability and that `dst` is valid for
+/// 16 u32 writes (`dst..dst + 16`).
+// See `linalg::simd`'s `avx2` module for why `unused_unsafe` is
+// tolerated on the SIMD kernels.
 #[cfg(target_arch = "x86_64")]
+#[allow(unused_unsafe)]
 #[target_feature(enable = "avx2")]
 unsafe fn store_u16_as_u32(v: std::arch::x86_64::__m256i, dst: *mut u32) {
     use std::arch::x86_64::*;
-    let lo = _mm256_castsi256_si128(v);
-    let hi = _mm256_extracti128_si256::<1>(v);
-    _mm256_storeu_si256(dst as *mut __m256i, _mm256_cvtepu16_epi32(lo));
-    _mm256_storeu_si256(dst.add(8) as *mut __m256i, _mm256_cvtepu16_epi32(hi));
+    // SAFETY: lane split/widen are value-only; the two unaligned 8-lane
+    // stores cover exactly dst..dst+16, valid per this fn's contract.
+    unsafe {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        _mm256_storeu_si256(dst.cast::<__m256i>(), _mm256_cvtepu16_epi32(lo));
+        _mm256_storeu_si256(dst.add(8).cast::<__m256i>(), _mm256_cvtepu16_epi32(hi));
+    }
 }
 
 /// Nearest centroid among the first `cs` of `cents` (L2), returning
@@ -722,6 +802,33 @@ mod tests {
         for r in 0..n {
             let exact = linalg::dot(&rows[r * d..(r + 1) * d], &q) as f64;
             assert!((exact - out[r] as f64).abs() <= eps, "row {r}");
+        }
+    }
+
+    #[test]
+    fn miri_pq_scalar_accum_and_bound_small() {
+        // Miri-lane subset (scalar kernel pinned by cfg(miri)): the 4-bit
+        // nibble gather and the certificate bound on a tiny instance
+        let (n, d, m) = (37usize, 8usize, 4usize);
+        let rows = random_rows(n, d, 31);
+        let mut rng = Pcg64::new(33);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        for bits in [4usize, 8] {
+            let pv = PqView::train(&rows, d, m, bits, n, 2, 35);
+            let lut = pv.encode_query(&q);
+            let eps = pv.error_bound(&lut) as f64;
+            let mut out = vec![0f32; n];
+            pv.scores(0, n, &lut, &mut out);
+            for r in 0..n {
+                let exact = linalg::dot(&rows[r * d..(r + 1) * d], &q) as f64;
+                assert!((exact - out[r] as f64).abs() <= eps, "bits={bits} row={r}");
+            }
+            // odd start exercises the nibble-phase prologue
+            let mut a = vec![0u32; 5];
+            pv.accum_into(1, 6, &lut.lut, &mut a);
+            let mut w = vec![0u32; 5];
+            pv.accum_scalar(1, 6, &lut.lut, &mut w);
+            assert_eq!(a, w, "bits={bits}");
         }
     }
 

@@ -791,8 +791,14 @@ pub fn dot_u8i16(codes: &[u8], u: &[i16]) -> i32 {
     debug_assert_eq!(codes.len(), u.len());
     match simd::kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `simd::detect()` returned Avx2 only after verifying avx2
+        // on this CPU; the kernel reads exactly `min(codes.len(), u.len())`
+        // elements of each slice (equal lengths are this fn's contract,
+        // debug-asserted above and re-checked inside the kernel).
         Kernel::Avx2 => unsafe { avx2::dot(codes, u) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON verified by `simd::detect()`; same slice-bounds
+        // argument as the AVX2 arm.
         Kernel::Neon => unsafe { neon::dot(codes, u) },
         _ => dot_u8i16_scalar(codes, u),
     }
@@ -809,8 +815,14 @@ fn matvec_u8i16(codes: &[u8], d: usize, u: &[i16], out: &mut [i32]) {
     }
     match simd::kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2 verified by `simd::detect()`; the layout contract
+        // (`u.len() == d`, `codes.len() == out.len()·d`) is debug-asserted
+        // above and inside the kernel, which reads row `r` only at offsets
+        // `r·d..r·d+d`.
         Kernel::Avx2 => unsafe { avx2::matvec(codes, d, u, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON verified by `simd::detect()`; same layout argument
+        // as the AVX2 arm.
         Kernel::Neon => unsafe { neon::matvec(codes, d, u, out) },
         _ => {
             for (r, o) in out.iter_mut().enumerate() {
@@ -889,8 +901,13 @@ fn dot_u8i16_x4(codes: &[u8], u0: &[i16], u1: &[i16], u2: &[i16], u3: &[i16]) ->
     );
     match simd::kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2 verified by `simd::detect()`; all five slices have
+        // equal length (debug-asserted above and re-checked inside the
+        // kernel), which reads that many elements from each.
         Kernel::Avx2 => unsafe { avx2::dot_x4(codes, u0, u1, u2, u3) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON verified by `simd::detect()`; same equal-length
+        // argument as the AVX2 arm.
         Kernel::Neon => unsafe { neon::dot_x4(codes, u0, u1, u2, u3) },
         _ => [
             dot_u8i16_scalar(codes, u0),
@@ -912,8 +929,14 @@ fn dot_u4i16(codes: &[u8], d: usize, u: &[i16]) -> i32 {
     debug_assert_eq!(u.len(), d);
     match simd::kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2 verified by `simd::detect()`; the packed layout
+        // (`codes.len() == ⌈d/2⌉`, `u.len() == d`) is debug-asserted above
+        // and inside the kernel, which touches bytes only below ⌈d/2⌉ and
+        // query codes only below d.
         Kernel::Avx2 => unsafe { avx2::dot4(codes, d, u) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON verified by `simd::detect()`; same packed-layout
+        // argument as the AVX2 arm.
         Kernel::Neon => unsafe { neon::dot4(codes, d, u) },
         _ => dot_u4i16_scalar(codes, d, u),
     }
@@ -933,8 +956,13 @@ fn dot_u4i16_x4(
     debug_assert!(u0.len() == d && u1.len() == d && u2.len() == d && u3.len() == d);
     match simd::kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2 verified by `simd::detect()`; the packed layout
+        // (`codes.len() == ⌈d/2⌉`, four d-length query-code slices) is
+        // debug-asserted above and inside the kernel.
         Kernel::Avx2 => unsafe { avx2::dot4_x4(codes, d, u0, u1, u2, u3) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON verified by `simd::detect()`; same packed-layout
+        // argument as the AVX2 arm.
         Kernel::Neon => unsafe { neon::dot4_x4(codes, d, u0, u1, u2, u3) },
         _ => [
             dot_u4i16_scalar(codes, d, u0),
@@ -962,51 +990,95 @@ fn dot_u4i16_scalar(codes: &[u8], d: usize, u: &[i16]) -> i32 {
     s
 }
 
+// `unused_unsafe` tolerated inside the arch modules only: value-only
+// `std::arch` intrinsics became safe inside `#[target_feature]` fns in
+// Rust 1.87, so the explicit blocks below — required pre-1.87 under
+// `deny(unsafe_op_in_unsafe_fn)` — are redundant-but-correct on newer
+// toolchains (see `linalg::simd` for the full rationale).
 #[cfg(target_arch = "x86_64")]
+#[allow(unused_unsafe)]
 mod avx2 {
     use std::arch::x86_64::*;
 
+    /// Dispatcher invariant, re-checked (debug only) at kernel entries.
+    fn feature_ok() -> bool {
+        is_x86_feature_detected!("avx2")
+    }
+
+    /// Horizontal sum of the 8 i32 lanes. Value-only intrinsics.
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_i32(v: __m256i) -> i32 {
-        let lo = _mm256_castsi256_si128(v);
-        let hi = _mm256_extracti128_si256::<1>(v);
-        let s = _mm_add_epi32(lo, hi);
-        let s = _mm_add_epi32(s, _mm_srli_si128::<8>(s));
-        let s = _mm_add_epi32(s, _mm_srli_si128::<4>(s));
-        _mm_cvtsi128_si32(s)
+        // SAFETY: value-only shuffles/adds on register operands — no
+        // memory access; avx2 enabled on this fn.
+        unsafe {
+            let lo = _mm256_castsi256_si128(v);
+            let hi = _mm256_extracti128_si256::<1>(v);
+            let s = _mm_add_epi32(lo, hi);
+            let s = _mm_add_epi32(s, _mm_srli_si128::<8>(s));
+            let s = _mm_add_epi32(s, _mm_srli_si128::<4>(s));
+            _mm_cvtsi128_si32(s)
+        }
     }
 
     /// u8×i16 dot: widen 16 codes to i16 lanes, `madd_epi16` against the
     /// query codes, accumulate the i32 pair-sums. Exact i32 arithmetic —
     /// `madd` pair-sums stay ≤ 2·255·16383 and the total is bounded by
     /// the `QuantQuery` range cap, so nothing can saturate or wrap.
+    /// Contract: `c` valid for `n` byte reads, `u` for `n` i16 reads.
     #[target_feature(enable = "avx2")]
     unsafe fn dot_raw(c: *const u8, u: *const i16, n: usize) -> i32 {
+        debug_assert!(feature_ok());
         let chunks = n / 16;
-        let mut acc = _mm256_setzero_si256();
+        // SAFETY: value-only accumulator zeroing.
+        let mut acc = unsafe { _mm256_setzero_si256() };
         for k in 0..chunks {
             let i = k * 16;
-            let cv = _mm256_cvtepu8_epi16(_mm_loadu_si128(c.add(i) as *const __m128i));
-            let uv = _mm256_loadu_si256(u.add(i) as *const __m256i);
-            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv, uv));
+            // SAFETY: the highest element touched is i + 15 ≤ chunks·16 − 1
+            // < n, so the 16-byte code load and the 16-lane i16 load stay
+            // inside the buffers the contract promises; widen/madd/add are
+            // value-only.
+            unsafe {
+                let cv = _mm256_cvtepu8_epi16(_mm_loadu_si128(c.add(i).cast::<__m128i>()));
+                let uv = _mm256_loadu_si256(u.add(i).cast::<__m256i>());
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv, uv));
+            }
         }
-        let mut s = hsum_i32(acc);
+        // SAFETY: `hsum_i32` is value-only; avx2 enabled here.
+        let mut s = unsafe { hsum_i32(acc) };
         for i in chunks * 16..n {
-            s += *c.add(i) as i32 * *u.add(i) as i32;
+            // SAFETY: scalar tail, i < n — in bounds for both buffers.
+            s += unsafe { *c.add(i) as i32 * *u.add(i) as i32 };
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee `codes.len() == u.len()` and avx2
+    /// availability (guaranteed when reached through
+    /// [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn dot(codes: &[u8], u: &[i16]) -> i32 {
-        dot_raw(codes.as_ptr(), u.as_ptr(), codes.len())
+        debug_assert_eq!(codes.len(), u.len());
+        let n = codes.len().min(u.len());
+        // SAFETY: both pointers come from live slices covering ≥ n
+        // elements, satisfying `dot_raw`'s read contract.
+        unsafe { dot_raw(codes.as_ptr(), u.as_ptr(), n) }
     }
 
+    /// # Safety
+    /// Caller must guarantee `u.len() == d`, `codes.len() == out.len()·d`,
+    /// and avx2 availability (guaranteed via
+    /// [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn matvec(codes: &[u8], d: usize, u: &[i16], out: &mut [i32]) {
+        debug_assert_eq!(u.len(), d);
+        debug_assert_eq!(codes.len(), out.len() * d);
         for (r, o) in out.iter_mut().enumerate() {
-            *o = dot_raw(codes.as_ptr().add(r * d), u.as_ptr(), d);
+            // SAFETY: row r occupies codes[r·d .. r·d+d] — in bounds
+            // because codes.len() == out.len()·d and r < out.len(); u
+            // covers d elements by contract.
+            *o = unsafe { dot_raw(codes.as_ptr().add(r * d), u.as_ptr(), d) };
         }
     }
 
@@ -1015,6 +1087,8 @@ mod avx2 {
     /// register-blocked kernel behind the multi-query batch scan. Each
     /// lane follows the exact arithmetic of [`dot_raw`], so per-query
     /// integers are identical to single-query calls.
+    /// Contract: `c` valid for `n` byte reads, each `u*` for `n` i16
+    /// reads.
     #[target_feature(enable = "avx2")]
     unsafe fn dot_x4_raw(
         c: *const u8,
@@ -1024,34 +1098,52 @@ mod avx2 {
         u3: *const i16,
         n: usize,
     ) -> [i32; 4] {
+        debug_assert!(feature_ok());
         let chunks = n / 16;
-        let mut a0 = _mm256_setzero_si256();
-        let mut a1 = _mm256_setzero_si256();
-        let mut a2 = _mm256_setzero_si256();
-        let mut a3 = _mm256_setzero_si256();
+        // SAFETY: value-only accumulator zeroing.
+        let (mut a0, mut a1, mut a2, mut a3) = unsafe {
+            (
+                _mm256_setzero_si256(),
+                _mm256_setzero_si256(),
+                _mm256_setzero_si256(),
+                _mm256_setzero_si256(),
+            )
+        };
         for k in 0..chunks {
             let i = k * 16;
-            let cv = _mm256_cvtepu8_epi16(_mm_loadu_si128(c.add(i) as *const __m128i));
-            let l0 = _mm256_loadu_si256(u0.add(i) as *const __m256i);
-            let l1 = _mm256_loadu_si256(u1.add(i) as *const __m256i);
-            let l2 = _mm256_loadu_si256(u2.add(i) as *const __m256i);
-            let l3 = _mm256_loadu_si256(u3.add(i) as *const __m256i);
-            a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(cv, l0));
-            a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(cv, l1));
-            a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(cv, l2));
-            a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(cv, l3));
+            // SAFETY: the highest element touched is i + 15 < n, so the
+            // 16-byte code load and all four 16-lane i16 loads stay inside
+            // the contract's buffers; widen/madd/add are value-only.
+            unsafe {
+                let cv = _mm256_cvtepu8_epi16(_mm_loadu_si128(c.add(i).cast::<__m128i>()));
+                let l0 = _mm256_loadu_si256(u0.add(i).cast::<__m256i>());
+                let l1 = _mm256_loadu_si256(u1.add(i).cast::<__m256i>());
+                let l2 = _mm256_loadu_si256(u2.add(i).cast::<__m256i>());
+                let l3 = _mm256_loadu_si256(u3.add(i).cast::<__m256i>());
+                a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(cv, l0));
+                a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(cv, l1));
+                a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(cv, l2));
+                a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(cv, l3));
+            }
         }
-        let mut s = [hsum_i32(a0), hsum_i32(a1), hsum_i32(a2), hsum_i32(a3)];
+        // SAFETY: `hsum_i32` is value-only; avx2 enabled here.
+        let mut s = unsafe { [hsum_i32(a0), hsum_i32(a1), hsum_i32(a2), hsum_i32(a3)] };
         for i in chunks * 16..n {
-            let cc = *c.add(i) as i32;
-            s[0] += cc * *u0.add(i) as i32;
-            s[1] += cc * *u1.add(i) as i32;
-            s[2] += cc * *u2.add(i) as i32;
-            s[3] += cc * *u3.add(i) as i32;
+            // SAFETY: scalar tail, i < n — in bounds for all five buffers.
+            unsafe {
+                let cc = *c.add(i) as i32;
+                s[0] += cc * *u0.add(i) as i32;
+                s[1] += cc * *u1.add(i) as i32;
+                s[2] += cc * *u2.add(i) as i32;
+                s[3] += cc * *u3.add(i) as i32;
+            }
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee all five slices share one length and avx2
+    /// availability (guaranteed via [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn dot_x4(
         codes: &[u8],
@@ -1060,7 +1152,18 @@ mod avx2 {
         u2: &[i16],
         u3: &[i16],
     ) -> [i32; 4] {
-        dot_x4_raw(codes.as_ptr(), u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr(), codes.len())
+        debug_assert!(
+            codes.len() == u0.len()
+                && codes.len() == u1.len()
+                && codes.len() == u2.len()
+                && codes.len() == u3.len()
+        );
+        let n = codes.len().min(u0.len()).min(u1.len()).min(u2.len()).min(u3.len());
+        // SAFETY: all five pointers come from live slices covering ≥ n
+        // elements, satisfying `dot_x4_raw`'s read contract.
+        unsafe {
+            dot_x4_raw(codes.as_ptr(), u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr(), n)
+        }
     }
 
     /// Unpack 16 packed bytes (32 nibble codes, dim `2p` in byte `p`'s
@@ -1070,44 +1173,76 @@ mod avx2 {
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn unpack32(raw: __m128i) -> (__m256i, __m256i) {
-        let mask = _mm_set1_epi8(0x0f);
-        let lo = _mm_and_si128(raw, mask);
-        let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
-        let even = _mm_unpacklo_epi8(lo, hi); // dims 0..16 in order
-        let odd = _mm_unpackhi_epi8(lo, hi); // dims 16..32
-        (_mm256_cvtepu8_epi16(even), _mm256_cvtepu8_epi16(odd))
+        // SAFETY: value-only mask/shift/interleave/widen on register
+        // operands — no memory access; avx2 enabled on this fn.
+        unsafe {
+            let mask = _mm_set1_epi8(0x0f);
+            let lo = _mm_and_si128(raw, mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
+            let even = _mm_unpacklo_epi8(lo, hi); // dims 0..16 in order
+            let odd = _mm_unpackhi_epi8(lo, hi); // dims 16..32
+            (_mm256_cvtepu8_epi16(even), _mm256_cvtepu8_epi16(odd))
+        }
     }
 
     /// Packed-nibble (SQ4) × i16 dot: 32 dims per iteration through
     /// [`unpack32`], two `madd` accumulations per chunk; scalar tail.
+    /// Contract: `c` valid for `⌈d/2⌉` byte reads, `u` for `d` i16 reads.
+    /// The 16-byte vector loads never read past `⌈d/2⌉`: they run only
+    /// for full 32-dim chunks, i.e. bytes `k·16..k·16+16 ≤ d/2`.
     #[target_feature(enable = "avx2")]
     unsafe fn dot4_raw(c: *const u8, u: *const i16, d: usize) -> i32 {
+        debug_assert!(feature_ok());
         let chunks = d / 32;
-        let mut acc = _mm256_setzero_si256();
+        // SAFETY: value-only accumulator zeroing.
+        let mut acc = unsafe { _mm256_setzero_si256() };
         for k in 0..chunks {
-            let raw = _mm_loadu_si128(c.add(k * 16) as *const __m128i);
-            let (cv0, cv1) = unpack32(raw);
-            let uv0 = _mm256_loadu_si256(u.add(k * 32) as *const __m256i);
-            let uv1 = _mm256_loadu_si256(u.add(k * 32 + 16) as *const __m256i);
-            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv0, uv0));
-            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv1, uv1));
+            // SAFETY: k·16 + 15 < chunks·16 ≤ d/2 ≤ ⌈d/2⌉ keeps the packed
+            // load inside the code row; the two i16 loads read lanes
+            // k·32..k·32+32 ≤ d of `u`; unpack/madd/add are value-only.
+            unsafe {
+                let raw = _mm_loadu_si128(c.add(k * 16).cast::<__m128i>());
+                let (cv0, cv1) = unpack32(raw);
+                let uv0 = _mm256_loadu_si256(u.add(k * 32).cast::<__m256i>());
+                let uv1 = _mm256_loadu_si256(u.add(k * 32 + 16).cast::<__m256i>());
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv0, uv0));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(cv1, uv1));
+            }
         }
-        let mut s = hsum_i32(acc);
+        // SAFETY: `hsum_i32` is value-only; avx2 enabled here.
+        let mut s = unsafe { hsum_i32(acc) };
         for j in chunks * 32..d {
-            let b = *c.add(j / 2);
-            let nib = if j % 2 == 0 { b & 0x0f } else { b >> 4 };
-            s += nib as i32 * *u.add(j) as i32;
+            // SAFETY: scalar nibble tail — j < d means byte j/2 < ⌈d/2⌉
+            // and query lane j < d, both in bounds.
+            unsafe {
+                let b = *c.add(j / 2);
+                let nib = if j % 2 == 0 { b & 0x0f } else { b >> 4 };
+                s += nib as i32 * *u.add(j) as i32;
+            }
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee `codes.len() == ⌈d/2⌉`, `u.len() == d`, and
+    /// avx2 availability (guaranteed via
+    /// [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn dot4(codes: &[u8], d: usize, u: &[i16]) -> i32 {
-        dot4_raw(codes.as_ptr(), u.as_ptr(), d)
+        debug_assert_eq!(codes.len(), d.div_ceil(2));
+        debug_assert_eq!(u.len(), d);
+        // SAFETY: the slices cover ⌈d/2⌉ bytes / d lanes per this fn's
+        // contract (debug-asserted above), matching `dot4_raw`'s extents.
+        unsafe { dot4_raw(codes.as_ptr(), u.as_ptr(), d) }
     }
 
     /// 4-query packed-nibble dot: nibbles unpacked once per 32-dim chunk,
     /// `madd`-accumulated against four queries' codes.
+    ///
+    /// # Safety
+    /// Caller must guarantee `codes.len() == ⌈d/2⌉`, each `u*.len() == d`,
+    /// and avx2 availability (guaranteed via
+    /// [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn dot4_x4(
         codes: &[u8],
@@ -1117,76 +1252,127 @@ mod avx2 {
         u2: &[i16],
         u3: &[i16],
     ) -> [i32; 4] {
+        debug_assert!(feature_ok());
+        debug_assert_eq!(codes.len(), d.div_ceil(2));
+        debug_assert!(u0.len() == d && u1.len() == d && u2.len() == d && u3.len() == d);
         let c = codes.as_ptr();
         let us = [u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr()];
         let chunks = d / 32;
-        let mut acc = [
-            _mm256_setzero_si256(),
-            _mm256_setzero_si256(),
-            _mm256_setzero_si256(),
-            _mm256_setzero_si256(),
-        ];
+        // SAFETY: value-only accumulator zeroing.
+        let mut acc = unsafe {
+            [
+                _mm256_setzero_si256(),
+                _mm256_setzero_si256(),
+                _mm256_setzero_si256(),
+                _mm256_setzero_si256(),
+            ]
+        };
         for k in 0..chunks {
-            let raw = _mm_loadu_si128(c.add(k * 16) as *const __m128i);
-            let (cv0, cv1) = unpack32(raw);
+            // SAFETY: k·16 + 15 < chunks·16 ≤ d/2 ≤ codes.len() keeps the
+            // packed load inside the code row; `unpack32` is value-only.
+            let (cv0, cv1) = unsafe { unpack32(_mm_loadu_si128(c.add(k * 16).cast::<__m128i>())) };
             for (a, &u) in acc.iter_mut().zip(&us) {
-                let uv0 = _mm256_loadu_si256(u.add(k * 32) as *const __m256i);
-                let uv1 = _mm256_loadu_si256(u.add(k * 32 + 16) as *const __m256i);
-                *a = _mm256_add_epi32(*a, _mm256_madd_epi16(cv0, uv0));
-                *a = _mm256_add_epi32(*a, _mm256_madd_epi16(cv1, uv1));
+                // SAFETY: the two i16 loads read lanes k·32..k·32+32 ≤ d of
+                // each d-length query slice; madd/add are value-only.
+                unsafe {
+                    let uv0 = _mm256_loadu_si256(u.add(k * 32).cast::<__m256i>());
+                    let uv1 = _mm256_loadu_si256(u.add(k * 32 + 16).cast::<__m256i>());
+                    *a = _mm256_add_epi32(*a, _mm256_madd_epi16(cv0, uv0));
+                    *a = _mm256_add_epi32(*a, _mm256_madd_epi16(cv1, uv1));
+                }
             }
         }
-        let mut s = [hsum_i32(acc[0]), hsum_i32(acc[1]), hsum_i32(acc[2]), hsum_i32(acc[3])];
+        // SAFETY: `hsum_i32` is value-only; avx2 enabled here.
+        let mut s =
+            unsafe { [hsum_i32(acc[0]), hsum_i32(acc[1]), hsum_i32(acc[2]), hsum_i32(acc[3])] };
         for j in chunks * 32..d {
-            let b = *c.add(j / 2);
+            // SAFETY: scalar nibble tail — j < d means byte j/2 < ⌈d/2⌉,
+            // in bounds of the code row.
+            let b = unsafe { *c.add(j / 2) };
             let nib = (if j % 2 == 0 { b & 0x0f } else { b >> 4 }) as i32;
             for (t, &u) in us.iter().enumerate() {
-                s[t] += nib * *u.add(j) as i32;
+                // SAFETY: query lane j < d of a d-length slice.
+                s[t] += nib * unsafe { *u.add(j) } as i32;
             }
         }
         s
     }
 }
 
+// See the `avx2` module above for why `unused_unsafe` is tolerated here.
 #[cfg(target_arch = "aarch64")]
+#[allow(unused_unsafe)]
 mod neon {
     use std::arch::aarch64::*;
 
+    /// Dispatcher invariant, re-checked (debug only) at kernel entries.
+    fn feature_ok() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
     /// u8×i16 dot via widening to i16 and `vmlal_s16` (u8 values fit
     /// i16, so the widened multiply-accumulate is exact i32 arithmetic).
+    /// Contract: `c` valid for `n` byte reads, `u` for `n` i16 reads.
     #[target_feature(enable = "neon")]
     unsafe fn dot_raw(c: *const u8, u: *const i16, n: usize) -> i32 {
+        debug_assert!(feature_ok());
         let chunks = n / 8;
-        let mut acc = vdupq_n_s32(0);
+        // SAFETY: value-only accumulator zeroing.
+        let mut acc = unsafe { vdupq_n_s32(0) };
         for k in 0..chunks {
             let i = k * 8;
-            let cv = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(c.add(i))));
-            let uv = vld1q_s16(u.add(i));
-            acc = vmlal_s16(acc, vget_low_s16(cv), vget_low_s16(uv));
-            acc = vmlal_s16(acc, vget_high_s16(cv), vget_high_s16(uv));
+            // SAFETY: the highest element touched is i + 7 ≤ chunks·8 − 1
+            // < n, so the 8-byte code load and the 8-lane i16 load stay
+            // inside the contract's buffers; widen/mlal are value-only.
+            unsafe {
+                let cv = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(c.add(i))));
+                let uv = vld1q_s16(u.add(i));
+                acc = vmlal_s16(acc, vget_low_s16(cv), vget_low_s16(uv));
+                acc = vmlal_s16(acc, vget_high_s16(cv), vget_high_s16(uv));
+            }
         }
-        let mut s = vaddvq_s32(acc);
+        // SAFETY: value-only horizontal reduction.
+        let mut s = unsafe { vaddvq_s32(acc) };
         for i in chunks * 8..n {
-            s += *c.add(i) as i32 * *u.add(i) as i32;
+            // SAFETY: scalar tail, i < n — in bounds for both buffers.
+            s += unsafe { *c.add(i) as i32 * *u.add(i) as i32 };
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee `codes.len() == u.len()` and NEON
+    /// availability (guaranteed via [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn dot(codes: &[u8], u: &[i16]) -> i32 {
-        dot_raw(codes.as_ptr(), u.as_ptr(), codes.len())
+        debug_assert_eq!(codes.len(), u.len());
+        let n = codes.len().min(u.len());
+        // SAFETY: both pointers come from live slices covering ≥ n
+        // elements, satisfying `dot_raw`'s read contract.
+        unsafe { dot_raw(codes.as_ptr(), u.as_ptr(), n) }
     }
 
+    /// # Safety
+    /// Caller must guarantee `u.len() == d`, `codes.len() == out.len()·d`,
+    /// and NEON availability (guaranteed via
+    /// [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn matvec(codes: &[u8], d: usize, u: &[i16], out: &mut [i32]) {
+        debug_assert_eq!(u.len(), d);
+        debug_assert_eq!(codes.len(), out.len() * d);
         for (r, o) in out.iter_mut().enumerate() {
-            *o = dot_raw(codes.as_ptr().add(r * d), u.as_ptr(), d);
+            // SAFETY: row r occupies codes[r·d .. r·d+d] — in bounds
+            // because codes.len() == out.len()·d and r < out.len(); u
+            // covers d elements by contract.
+            *o = unsafe { dot_raw(codes.as_ptr().add(r * d), u.as_ptr(), d) };
         }
     }
 
     /// 4-query u8×i16 dot: codes widened once per 8-code chunk, `vmlal`
     /// chains into four per-query accumulators (register-blocked batch
     /// kernel; per-query integers identical to [`dot_raw`]).
+    /// Contract: `c` valid for `n` byte reads, each `u*` for `n` i16
+    /// reads.
     #[target_feature(enable = "neon")]
     unsafe fn dot_x4_raw(
         c: *const u8,
@@ -1196,29 +1382,47 @@ mod neon {
         u3: *const i16,
         n: usize,
     ) -> [i32; 4] {
+        debug_assert!(feature_ok());
         let chunks = n / 8;
-        let mut acc = [vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0)];
+        // SAFETY: value-only accumulator zeroing.
+        let mut acc = unsafe { [vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0)] };
         let us = [u0, u1, u2, u3];
         for k in 0..chunks {
             let i = k * 8;
-            let cv = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(c.add(i))));
-            let (clo, chi) = (vget_low_s16(cv), vget_high_s16(cv));
+            // SAFETY: i + 7 < n keeps the 8-byte code load inside the code
+            // buffer; widen/splits are value-only.
+            let (clo, chi) = unsafe {
+                let cv = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(c.add(i))));
+                (vget_low_s16(cv), vget_high_s16(cv))
+            };
             for (a, &u) in acc.iter_mut().zip(&us) {
-                let uv = vld1q_s16(u.add(i));
-                *a = vmlal_s16(*a, clo, vget_low_s16(uv));
-                *a = vmlal_s16(*a, chi, vget_high_s16(uv));
+                // SAFETY: same i + 7 < n bound for each query buffer's
+                // 8-lane load; mlal is value-only.
+                unsafe {
+                    let uv = vld1q_s16(u.add(i));
+                    *a = vmlal_s16(*a, clo, vget_low_s16(uv));
+                    *a = vmlal_s16(*a, chi, vget_high_s16(uv));
+                }
             }
         }
-        let mut s = [vaddvq_s32(acc[0]), vaddvq_s32(acc[1]), vaddvq_s32(acc[2]), vaddvq_s32(acc[3])];
+        // SAFETY: value-only horizontal reductions.
+        let mut s = unsafe {
+            [vaddvq_s32(acc[0]), vaddvq_s32(acc[1]), vaddvq_s32(acc[2]), vaddvq_s32(acc[3])]
+        };
         for i in chunks * 8..n {
-            let cc = *c.add(i) as i32;
+            // SAFETY: scalar tail, i < n — in bounds for all five buffers.
+            let cc = unsafe { *c.add(i) } as i32;
             for (t, &u) in us.iter().enumerate() {
-                s[t] += cc * *u.add(i) as i32;
+                // SAFETY: same i < n bound per query buffer.
+                s[t] += cc * unsafe { *u.add(i) } as i32;
             }
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee all five slices share one length and NEON
+    /// availability (guaranteed via [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn dot_x4(
         codes: &[u8],
@@ -1227,7 +1431,18 @@ mod neon {
         u2: &[i16],
         u3: &[i16],
     ) -> [i32; 4] {
-        dot_x4_raw(codes.as_ptr(), u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr(), codes.len())
+        debug_assert!(
+            codes.len() == u0.len()
+                && codes.len() == u1.len()
+                && codes.len() == u2.len()
+                && codes.len() == u3.len()
+        );
+        let n = codes.len().min(u0.len()).min(u1.len()).min(u2.len()).min(u3.len());
+        // SAFETY: all five pointers come from live slices covering ≥ n
+        // elements, satisfying `dot_x4_raw`'s read contract.
+        unsafe {
+            dot_x4_raw(codes.as_ptr(), u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr(), n)
+        }
     }
 
     /// Unpack 8 packed bytes (16 nibble codes, dim `2p` in byte `p`'s low
@@ -1236,45 +1451,77 @@ mod neon {
     #[inline]
     #[target_feature(enable = "neon")]
     unsafe fn unpack16(raw: uint8x8_t) -> (int16x8_t, int16x8_t) {
-        let lo = vand_u8(raw, vdup_n_u8(0x0f));
-        let hi = vshr_n_u8::<4>(raw);
-        let even = vzip1_u8(lo, hi); // dims 0..8 in order
-        let odd = vzip2_u8(lo, hi); // dims 8..16
-        (
-            vreinterpretq_s16_u16(vmovl_u8(even)),
-            vreinterpretq_s16_u16(vmovl_u8(odd)),
-        )
+        // SAFETY: value-only mask/shift/zip/widen on register operands —
+        // no memory access; NEON enabled on this fn.
+        unsafe {
+            let lo = vand_u8(raw, vdup_n_u8(0x0f));
+            let hi = vshr_n_u8::<4>(raw);
+            let even = vzip1_u8(lo, hi); // dims 0..8 in order
+            let odd = vzip2_u8(lo, hi); // dims 8..16
+            (
+                vreinterpretq_s16_u16(vmovl_u8(even)),
+                vreinterpretq_s16_u16(vmovl_u8(odd)),
+            )
+        }
     }
 
-    /// Packed-nibble (SQ4) × i16 dot: 16 dims per iteration.
+    /// Packed-nibble (SQ4) × i16 dot: 16 dims per iteration. Contract:
+    /// `c` valid for `⌈d/2⌉` byte reads, `u` for `d` i16 reads; the
+    /// 8-byte vector loads run only for full 16-dim chunks, i.e. bytes
+    /// `k·8..k·8+8 ≤ d/2`.
     #[target_feature(enable = "neon")]
     unsafe fn dot4_raw(c: *const u8, u: *const i16, d: usize) -> i32 {
+        debug_assert!(feature_ok());
         let chunks = d / 16;
-        let mut acc = vdupq_n_s32(0);
+        // SAFETY: value-only accumulator zeroing.
+        let mut acc = unsafe { vdupq_n_s32(0) };
         for k in 0..chunks {
-            let (cv0, cv1) = unpack16(vld1_u8(c.add(k * 8)));
-            let uv0 = vld1q_s16(u.add(k * 16));
-            let uv1 = vld1q_s16(u.add(k * 16 + 8));
-            acc = vmlal_s16(acc, vget_low_s16(cv0), vget_low_s16(uv0));
-            acc = vmlal_s16(acc, vget_high_s16(cv0), vget_high_s16(uv0));
-            acc = vmlal_s16(acc, vget_low_s16(cv1), vget_low_s16(uv1));
-            acc = vmlal_s16(acc, vget_high_s16(cv1), vget_high_s16(uv1));
+            // SAFETY: k·8 + 7 < chunks·8 ≤ d/2 ≤ ⌈d/2⌉ keeps the packed
+            // load inside the code row; the two i16 loads read lanes
+            // k·16..k·16+16 ≤ d of `u`; unpack/mlal are value-only.
+            unsafe {
+                let (cv0, cv1) = unpack16(vld1_u8(c.add(k * 8)));
+                let uv0 = vld1q_s16(u.add(k * 16));
+                let uv1 = vld1q_s16(u.add(k * 16 + 8));
+                acc = vmlal_s16(acc, vget_low_s16(cv0), vget_low_s16(uv0));
+                acc = vmlal_s16(acc, vget_high_s16(cv0), vget_high_s16(uv0));
+                acc = vmlal_s16(acc, vget_low_s16(cv1), vget_low_s16(uv1));
+                acc = vmlal_s16(acc, vget_high_s16(cv1), vget_high_s16(uv1));
+            }
         }
-        let mut s = vaddvq_s32(acc);
+        // SAFETY: value-only horizontal reduction.
+        let mut s = unsafe { vaddvq_s32(acc) };
         for j in chunks * 16..d {
-            let b = *c.add(j / 2);
-            let nib = if j % 2 == 0 { b & 0x0f } else { b >> 4 };
-            s += nib as i32 * *u.add(j) as i32;
+            // SAFETY: scalar nibble tail — j < d means byte j/2 < ⌈d/2⌉
+            // and query lane j < d, both in bounds.
+            unsafe {
+                let b = *c.add(j / 2);
+                let nib = if j % 2 == 0 { b & 0x0f } else { b >> 4 };
+                s += nib as i32 * *u.add(j) as i32;
+            }
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee `codes.len() == ⌈d/2⌉`, `u.len() == d`, and
+    /// NEON availability (guaranteed via
+    /// [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn dot4(codes: &[u8], d: usize, u: &[i16]) -> i32 {
-        dot4_raw(codes.as_ptr(), u.as_ptr(), d)
+        debug_assert_eq!(codes.len(), d.div_ceil(2));
+        debug_assert_eq!(u.len(), d);
+        // SAFETY: the slices cover ⌈d/2⌉ bytes / d lanes per this fn's
+        // contract (debug-asserted above), matching `dot4_raw`'s extents.
+        unsafe { dot4_raw(codes.as_ptr(), u.as_ptr(), d) }
     }
 
     /// 4-query packed-nibble dot: nibbles unpacked once per 16-dim chunk.
+    ///
+    /// # Safety
+    /// Caller must guarantee `codes.len() == ⌈d/2⌉`, each `u*.len() == d`,
+    /// and NEON availability (guaranteed via
+    /// [`crate::linalg::simd::kernel`]).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn dot4_x4(
         codes: &[u8],
@@ -1284,27 +1531,43 @@ mod neon {
         u2: &[i16],
         u3: &[i16],
     ) -> [i32; 4] {
+        debug_assert!(feature_ok());
+        debug_assert_eq!(codes.len(), d.div_ceil(2));
+        debug_assert!(u0.len() == d && u1.len() == d && u2.len() == d && u3.len() == d);
         let c = codes.as_ptr();
         let us = [u0.as_ptr(), u1.as_ptr(), u2.as_ptr(), u3.as_ptr()];
         let chunks = d / 16;
-        let mut acc = [vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0)];
+        // SAFETY: value-only accumulator zeroing.
+        let mut acc = unsafe { [vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0), vdupq_n_s32(0)] };
         for k in 0..chunks {
-            let (cv0, cv1) = unpack16(vld1_u8(c.add(k * 8)));
+            // SAFETY: k·8 + 7 < chunks·8 ≤ d/2 ≤ codes.len() keeps the
+            // packed load inside the code row; `unpack16` is value-only.
+            let (cv0, cv1) = unsafe { unpack16(vld1_u8(c.add(k * 8))) };
             for (a, &u) in acc.iter_mut().zip(&us) {
-                let uv0 = vld1q_s16(u.add(k * 16));
-                let uv1 = vld1q_s16(u.add(k * 16 + 8));
-                *a = vmlal_s16(*a, vget_low_s16(cv0), vget_low_s16(uv0));
-                *a = vmlal_s16(*a, vget_high_s16(cv0), vget_high_s16(uv0));
-                *a = vmlal_s16(*a, vget_low_s16(cv1), vget_low_s16(uv1));
-                *a = vmlal_s16(*a, vget_high_s16(cv1), vget_high_s16(uv1));
+                // SAFETY: the two i16 loads read lanes k·16..k·16+16 ≤ d of
+                // each d-length query slice; mlal is value-only.
+                unsafe {
+                    let uv0 = vld1q_s16(u.add(k * 16));
+                    let uv1 = vld1q_s16(u.add(k * 16 + 8));
+                    *a = vmlal_s16(*a, vget_low_s16(cv0), vget_low_s16(uv0));
+                    *a = vmlal_s16(*a, vget_high_s16(cv0), vget_high_s16(uv0));
+                    *a = vmlal_s16(*a, vget_low_s16(cv1), vget_low_s16(uv1));
+                    *a = vmlal_s16(*a, vget_high_s16(cv1), vget_high_s16(uv1));
+                }
             }
         }
-        let mut s = [vaddvq_s32(acc[0]), vaddvq_s32(acc[1]), vaddvq_s32(acc[2]), vaddvq_s32(acc[3])];
+        // SAFETY: value-only horizontal reductions.
+        let mut s = unsafe {
+            [vaddvq_s32(acc[0]), vaddvq_s32(acc[1]), vaddvq_s32(acc[2]), vaddvq_s32(acc[3])]
+        };
         for j in chunks * 16..d {
-            let b = *c.add(j / 2);
+            // SAFETY: scalar nibble tail — j < d means byte j/2 < ⌈d/2⌉,
+            // in bounds of the code row.
+            let b = unsafe { *c.add(j / 2) };
             let nib = (if j % 2 == 0 { b & 0x0f } else { b >> 4 }) as i32;
             for (t, &u) in us.iter().enumerate() {
-                s[t] += nib * *u.add(j) as i32;
+                // SAFETY: query lane j < d of a d-length slice.
+                s[t] += nib * unsafe { *u.add(j) } as i32;
             }
         }
         s
@@ -1664,5 +1927,77 @@ mod tests {
         let mut out = [0f32; 2];
         qv.scores(0, 2, &qq, &mut out);
         assert_eq!(out, [0.0, 0.0]);
+    }
+
+    // ---- Miri-scoped subset ------------------------------------------
+    // `miri_`-prefixed tests form the CI Miri lane's filter
+    // (`cargo miri test --lib -- miri_`). Under Miri the dispatcher pins
+    // Kernel::Scalar (cfg(miri) defaults GMIPS_FORCE_SCALAR on), so these
+    // exercise the scalar dots, the SQ4 nibble pack/unpack, and the
+    // encode/score round-trips with small, deterministic inputs.
+
+    #[test]
+    fn miri_scalar_dot_parity_small() {
+        let mut rng = Pcg64::new(7);
+        for len in [0usize, 1, 7, 8, 9, 17] {
+            let codes: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+            let u: Vec<i16> =
+                (0..len).map(|_| (rng.next_below(32767) as i32 - 16383) as i16).collect();
+            assert_eq!(dot_u8i16(&codes, &u), dot_u8i16_scalar(&codes, &u), "len={len}");
+            // packed-nibble variant: pack `len` 4-bit codes into ⌈len/2⌉
+            // bytes (even index → low nibble) and compare dispatch vs the
+            // scalar reference on the same layout
+            let mut packed = vec![0u8; len.div_ceil(2)];
+            for (i, &c) in codes.iter().enumerate() {
+                packed[i / 2] |= (c & 0x0f) << ((i % 2) * 4);
+            }
+            assert_eq!(
+                dot_u4i16(&packed, len, &u),
+                dot_u4i16_scalar(&packed, len, &u),
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn miri_sq4_nibble_pack_roundtrip_odd_dims() {
+        // odd dims exercise the half-byte tail: byte ⌈d/2⌉−1 carries only
+        // a low nibble, the adversarial case for OOB / uninit reads
+        for d in [1usize, 3, 5, 7, 15, 17] {
+            let n = 4;
+            let rows: Vec<f32> =
+                (0..n * d).map(|i| ((i * 37 % 97) as f32 / 96.0) * 2.0 - 1.0).collect();
+            let qv = Sq4View::encode(&rows, d, 2);
+            assert_eq!(qv.n(), n);
+            let q: Vec<f32> = (0..d).map(|j| (j as f32 * 0.3).cos()).collect();
+            let qq = QuantQuery::encode(&q);
+            let eps = qv.error_bound(&qq) as f64;
+            let mut out = vec![0f32; n];
+            qv.scores(0, n, &qq, &mut out);
+            for r in 0..n {
+                let exact = linalg::dot(&rows[r * d..(r + 1) * d], &q) as f64;
+                assert!(
+                    (exact - out[r] as f64).abs() <= eps,
+                    "d={d} row={r}: |{exact} - {}| > {eps}",
+                    out[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn miri_quant_encode_score_roundtrip() {
+        let d = 6;
+        let rows: Vec<f32> = (0..5 * d).map(|i| (i as f32 * 0.11).sin()).collect();
+        let qv = QuantView::encode(&rows, d, 2);
+        let q: Vec<f32> = (0..d).map(|j| 0.5 - j as f32 * 0.1).collect();
+        let qq = QuantQuery::encode(&q);
+        let eps = qv.error_bound(&qq) as f64;
+        let mut out = vec![0f32; 5];
+        qv.scores(0, 5, &qq, &mut out);
+        for r in 0..5 {
+            let exact = linalg::dot(&rows[r * d..(r + 1) * d], &q) as f64;
+            assert!((exact - out[r] as f64).abs() <= eps, "row {r}");
+        }
     }
 }

@@ -71,6 +71,9 @@ pub fn kernel() -> Kernel {
 }
 
 fn detect() -> Kernel {
+    if force_scalar() {
+        return Kernel::Scalar;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
@@ -86,6 +89,24 @@ fn detect() -> Kernel {
     Kernel::Scalar
 }
 
+/// Forced-scalar seam: `GMIPS_FORCE_SCALAR` set to anything but `0`/empty
+/// pins the process to the portable scalar kernels. Every kernel family —
+/// the f32 kernels here, SQ8/SQ4 integer scans in [`crate::linalg::quant`]
+/// and PQ accumulation in [`crate::linalg::pq`] — dispatches through
+/// [`kernel`], so one override covers them all. Under Miri the default
+/// flips on (`cfg(miri)`) so the interpreter executes the scalar paths
+/// instead of `std::arch` intrinsics it cannot run; an explicit
+/// `GMIPS_FORCE_SCALAR=0` still wins over that default. Because the
+/// scalar kernels are the bit-level reference the SIMD parity tests
+/// compare against, a forced-scalar run is a drop-in replacement, not a
+/// semantic variant.
+fn force_scalar() -> bool {
+    match std::env::var("GMIPS_FORCE_SCALAR") {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => cfg!(miri),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // public dispatching entry points
 // ---------------------------------------------------------------------------
@@ -96,8 +117,14 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     match kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `detect()` returned Avx2 only after verifying avx2+fma on
+        // this CPU, and the kernel reads exactly `min(a.len(), b.len())`
+        // lanes from each slice (equal lengths are this fn's contract,
+        // debug-asserted above and re-checked inside the kernel).
         Kernel::Avx2 => unsafe { avx2::dot(a, b) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `detect()` verified NEON; same slice-bounds argument as
+        // the AVX2 arm.
         Kernel::Neon => unsafe { neon::dot(a, b) },
         _ => dot_scalar(a, b),
     }
@@ -113,8 +140,14 @@ pub fn matvec_block(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
     }
     match kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `detect()`; the layout contract
+        // (`q.len() == d`, `rows.len() == out.len()·d`) is debug-asserted
+        // above and re-checked by the kernel's own debug_asserts, and the
+        // kernel reads row `r` only at offsets `r·d..r·d+d`.
         Kernel::Avx2 => unsafe { avx2::matvec(rows, d, q, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON verified by `detect()`; same layout argument as the
+        // AVX2 arm.
         Kernel::Neon => unsafe { neon::matvec(rows, d, q, out) },
         _ => matvec_scalar(rows, d, q, out),
     }
@@ -135,8 +168,15 @@ pub fn matvec_block_multi(rows: &[f32], d: usize, qs: &[f32], nq: usize, out: &m
     debug_assert_eq!(out.len(), nq * nrows);
     match kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `detect()`; the batched layout
+        // (`qs.len() == nq·d`, `out.len() == nq·nrows`,
+        // `rows.len() == nrows·d`) is debug-asserted above and re-checked
+        // inside the kernel, which indexes queries and rows only inside
+        // those extents.
         Kernel::Avx2 => unsafe { avx2::matvec_multi(rows, d, qs, nq, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON verified by `detect()`; same batched-layout
+        // argument as the AVX2 arm.
         Kernel::Neon => unsafe { neon::matvec_multi(rows, d, qs, nq, out) },
         _ => {
             for j in 0..nq {
@@ -153,6 +193,9 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     match kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `detect()`; the kernel reads/writes
+        // only `min(x.len(), y.len())` lanes (equal lengths debug-asserted
+        // above and inside the kernel).
         Kernel::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
         _ => {
             for (yi, xi) in y.iter_mut().zip(x) {
@@ -247,7 +290,7 @@ pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
     for c in 0..chunks {
         let i = c * 8;
-        // Safety: the largest index touched below is i + 7, and
+        // SAFETY: the largest index touched below is i + 7, and
         // i + 7 <= (chunks - 1)·8 + 7 = chunks·8 − 1 < n, so all eight
         // offsets i..=i+7 are in bounds for both slices (equal lengths
         // asserted above).
@@ -279,6 +322,8 @@ fn max_slice(xs: &[f32]) -> f32 {
     debug_assert!(!xs.is_empty());
     match kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `detect()`; the kernel reads only
+        // within `xs` (vector body over `len/8` chunks, scalar tail).
         Kernel::Avx2 => unsafe { avx2::max_slice(xs) },
         _ => xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
     }
@@ -287,6 +332,8 @@ fn max_slice(xs: &[f32]) -> f32 {
 fn sum_exp_sub(xs: &[f32], m: f32) -> f32 {
     match kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `detect()`; the kernel reads only
+        // within `xs` and the exp polynomial is value-only arithmetic.
         Kernel::Avx2 => unsafe { avx2::sum_exp_sub(xs, m) },
         _ => xs.iter().map(|&x| exp_f32(x - m)).sum(),
     }
@@ -296,6 +343,10 @@ fn exp_sub_into(xs: &[f32], m: f32, out: &mut [f32]) {
     debug_assert_eq!(xs.len(), out.len());
     match kernel() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `detect()`; the kernel reads
+        // `min(xs.len(), out.len())` lanes from `xs` and writes the same
+        // extent of `out` (equal lengths debug-asserted above and inside
+        // the kernel).
         Kernel::Avx2 => unsafe { avx2::exp_sub_into(xs, m, out) },
         _ => {
             for (o, &x) in out.iter_mut().zip(xs) {
@@ -336,56 +387,111 @@ pub(crate) fn exp_f32(x: f32) -> f32 {
 // AVX2 + FMA kernels (x86-64)
 // ---------------------------------------------------------------------------
 
+// `unused_unsafe` tolerated inside the arch modules only: the value-only
+// `std::arch` intrinsics (no pointer operands) flipped from `unsafe fn` to
+// safe-in-`#[target_feature]` in Rust 1.87, so the explicit `unsafe { .. }`
+// blocks below — required by `deny(unsafe_op_in_unsafe_fn)` on pre-1.87
+// toolchains — become redundant (but still correct) on newer ones. Every
+// block still carries its SAFETY justification; `cargo xtask lint`
+// enforces that.
 #[cfg(target_arch = "x86_64")]
+#[allow(unused_unsafe)]
 mod avx2 {
     use std::arch::x86_64::*;
 
+    /// True iff this CPU really has the features these kernels are compiled
+    /// for — the dispatcher's invariant, re-checked (debug only) at every
+    /// kernel entry.
+    fn feature_ok() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    /// Horizontal sum of the 8 lanes. Value-only intrinsics.
     #[inline]
     #[target_feature(enable = "avx2,fma")]
     unsafe fn hsum(v: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps::<1>(v);
-        let s = _mm_add_ps(lo, hi);
-        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-        let s = _mm_add_ss(s, _mm_movehdup_ps(s));
-        _mm_cvtss_f32(s)
+        // SAFETY: value-only shuffles/adds on register operands — no memory
+        // access; avx2+fma is enabled on this fn and holds for the process
+        // per the dispatcher's `detect()`.
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps::<1>(v);
+            let s = _mm_add_ps(lo, hi);
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_movehdup_ps(s));
+            _mm_cvtss_f32(s)
+        }
     }
 
+    /// Horizontal max of the 8 lanes. Value-only intrinsics.
     #[inline]
     #[target_feature(enable = "avx2,fma")]
     unsafe fn hmax(v: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps::<1>(v);
-        let m = _mm_max_ps(lo, hi);
-        let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
-        let m = _mm_max_ss(m, _mm_movehdup_ps(m));
-        _mm_cvtss_f32(m)
+        // SAFETY: value-only shuffles/maxes on register operands — no
+        // memory access; avx2+fma enabled on this fn.
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps::<1>(v);
+            let m = _mm_max_ps(lo, hi);
+            let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+            let m = _mm_max_ss(m, _mm_movehdup_ps(m));
+            _mm_cvtss_f32(m)
+        }
     }
 
+    /// Raw dot kernel. Contract: `a` and `b` are valid for reads of `n`
+    /// f32s each, and avx2+fma is available (callers come through the
+    /// dispatcher).
     #[target_feature(enable = "avx2,fma")]
     unsafe fn dot_raw(a: *const f32, b: *const f32, n: usize) -> f32 {
+        debug_assert!(feature_ok());
         let chunks = n / 8;
-        let mut acc = _mm256_setzero_ps();
+        // SAFETY: value-only zeroing of a register accumulator.
+        let mut acc = unsafe { _mm256_setzero_ps() };
         for c in 0..chunks {
             let i = c * 8;
-            acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(i)), _mm256_loadu_ps(b.add(i)), acc);
+            // SAFETY: the highest lane touched is i + 7 ≤ chunks·8 − 1 < n,
+            // so both unaligned 8-lane loads are inside the `n`-element
+            // buffers the contract promises.
+            acc = unsafe {
+                _mm256_fmadd_ps(_mm256_loadu_ps(a.add(i)), _mm256_loadu_ps(b.add(i)), acc)
+            };
         }
-        let mut s = hsum(acc);
+        // SAFETY: `hsum` is value-only; avx2+fma enabled on this fn.
+        let mut s = unsafe { hsum(acc) };
         for i in chunks * 8..n {
-            s += *a.add(i) * *b.add(i);
+            // SAFETY: scalar tail, i < n — in bounds for both buffers.
+            s += unsafe { *a.add(i) * *b.add(i) };
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee `a.len() == b.len()` and that avx2+fma are
+    /// available (guaranteed when reached through [`super::kernel`]).
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
-        dot_raw(a.as_ptr(), b.as_ptr(), a.len())
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len().min(b.len());
+        // SAFETY: both pointers come from live slices covering ≥ n
+        // elements (n is the min of the two lengths), satisfying
+        // `dot_raw`'s read contract; feature availability is this fn's
+        // own contract.
+        unsafe { dot_raw(a.as_ptr(), b.as_ptr(), n) }
     }
 
+    /// # Safety
+    /// Caller must guarantee `q.len() == d`, `rows.len() == out.len()·d`,
+    /// and avx2+fma availability (guaranteed via [`super::kernel`]).
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn matvec(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(rows.len(), out.len() * d);
         for (r, o) in out.iter_mut().enumerate() {
-            *o = dot_raw(rows.as_ptr().add(r * d), q.as_ptr(), d);
+            // SAFETY: row r occupies rows[r·d .. r·d+d] — in bounds because
+            // rows.len() == out.len()·d and r < out.len(); q covers d
+            // elements by contract. Both satisfy `dot_raw`'s read extents.
+            *o = unsafe { dot_raw(rows.as_ptr().add(r * d), q.as_ptr(), d) };
         }
     }
 
@@ -393,6 +499,11 @@ mod avx2 {
     /// row load, so a batch streams the row block from memory once. The
     /// per-query FMA sequence matches `dot_raw` exactly (bit-identical
     /// scores to the single-query path).
+    ///
+    /// # Safety
+    /// Caller must guarantee `qs.len() == nq·d`, `out.len() == nq·nrows`
+    /// with `nrows = rows.len()/d` and `d | rows.len()`, and avx2+fma
+    /// availability (guaranteed via [`super::kernel`]).
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn matvec_multi(
         rows: &[f32],
@@ -401,38 +512,63 @@ mod avx2 {
         nq: usize,
         out: &mut [f32],
     ) {
+        debug_assert!(feature_ok());
         let nrows = rows.len() / d;
+        debug_assert_eq!(rows.len(), nrows * d);
+        debug_assert_eq!(qs.len(), nq * d);
+        debug_assert_eq!(out.len(), nq * nrows);
         let chunks = d / 8;
         let mut j = 0;
         while j + 4 <= nq {
-            let q0 = qs.as_ptr().add(j * d);
-            let q1 = qs.as_ptr().add((j + 1) * d);
-            let q2 = qs.as_ptr().add((j + 2) * d);
-            let q3 = qs.as_ptr().add((j + 3) * d);
+            // SAFETY: queries j..j+3 satisfy (j+3)·d + d ≤ nq·d == qs.len(),
+            // so each base pointer heads a full d-element query lane.
+            let (q0, q1, q2, q3) = unsafe {
+                (
+                    qs.as_ptr().add(j * d),
+                    qs.as_ptr().add((j + 1) * d),
+                    qs.as_ptr().add((j + 2) * d),
+                    qs.as_ptr().add((j + 3) * d),
+                )
+            };
             for r in 0..nrows {
-                let row = rows.as_ptr().add(r * d);
-                let mut a0 = _mm256_setzero_ps();
-                let mut a1 = _mm256_setzero_ps();
-                let mut a2 = _mm256_setzero_ps();
-                let mut a3 = _mm256_setzero_ps();
+                // SAFETY: r < nrows so row r spans rows[r·d .. r·d+d],
+                // inside the slice.
+                let row = unsafe { rows.as_ptr().add(r * d) };
+                // SAFETY: value-only accumulator zeroing.
+                let (mut a0, mut a1, mut a2, mut a3) = unsafe {
+                    (
+                        _mm256_setzero_ps(),
+                        _mm256_setzero_ps(),
+                        _mm256_setzero_ps(),
+                        _mm256_setzero_ps(),
+                    )
+                };
                 for c in 0..chunks {
                     let i = c * 8;
-                    let rv = _mm256_loadu_ps(row.add(i));
-                    a0 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q0.add(i)), a0);
-                    a1 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q1.add(i)), a1);
-                    a2 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q2.add(i)), a2);
-                    a3 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q3.add(i)), a3);
+                    // SAFETY: i + 7 < chunks·8 ≤ d, so the 8-lane loads stay
+                    // inside the d-element row and query lanes established
+                    // above; FMA itself is value-only.
+                    unsafe {
+                        let rv = _mm256_loadu_ps(row.add(i));
+                        a0 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q0.add(i)), a0);
+                        a1 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q1.add(i)), a1);
+                        a2 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q2.add(i)), a2);
+                        a3 = _mm256_fmadd_ps(rv, _mm256_loadu_ps(q3.add(i)), a3);
+                    }
                 }
-                let mut s0 = hsum(a0);
-                let mut s1 = hsum(a1);
-                let mut s2 = hsum(a2);
-                let mut s3 = hsum(a3);
+                // SAFETY: `hsum` is value-only; avx2+fma enabled here.
+                let (mut s0, mut s1, mut s2, mut s3) =
+                    unsafe { (hsum(a0), hsum(a1), hsum(a2), hsum(a3)) };
                 for i in chunks * 8..d {
-                    let x = *row.add(i);
-                    s0 += x * *q0.add(i);
-                    s1 += x * *q1.add(i);
-                    s2 += x * *q2.add(i);
-                    s3 += x * *q3.add(i);
+                    // SAFETY: scalar tail, i < d — inside the same row and
+                    // query lanes as the vector body.
+                    unsafe {
+                        let x = *row.add(i);
+                        s0 += x * *q0.add(i);
+                        s1 += x * *q1.add(i);
+                        s2 += x * *q2.add(i);
+                        s3 += x * *q3.add(i);
+                    }
                 }
                 out[j * nrows + r] = s0;
                 out[(j + 1) * nrows + r] = s1;
@@ -442,38 +578,62 @@ mod avx2 {
             j += 4;
         }
         while j < nq {
-            matvec(rows, d, &qs[j * d..(j + 1) * d], &mut out[j * nrows..(j + 1) * nrows]);
+            // SAFETY: the per-query remainder reuses `matvec` on in-bounds
+            // subslices (j < nq), under this fn's own feature contract.
+            unsafe {
+                matvec(rows, d, &qs[j * d..(j + 1) * d], &mut out[j * nrows..(j + 1) * nrows]);
+            }
             j += 1;
         }
     }
 
+    /// # Safety
+    /// Caller must guarantee `x.len() == y.len()` and avx2+fma
+    /// availability (guaranteed via [`super::kernel`]).
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-        let n = x.len();
+        debug_assert!(feature_ok());
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len().min(y.len());
         let chunks = n / 8;
-        let va = _mm256_set1_ps(alpha);
+        // SAFETY: value-only broadcast.
+        let va = unsafe { _mm256_set1_ps(alpha) };
         for c in 0..chunks {
             let i = c * 8;
-            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
-            let r = _mm256_fmadd_ps(va, _mm256_loadu_ps(x.as_ptr().add(i)), yv);
-            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            // SAFETY: i + 7 < chunks·8 ≤ n ≤ both lengths, so the loads and
+            // the store stay inside `x`/`y`; `y`'s store never overlaps the
+            // `x` load (distinct slices by &/&mut aliasing rules).
+            unsafe {
+                let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+                let r = _mm256_fmadd_ps(va, _mm256_loadu_ps(x.as_ptr().add(i)), yv);
+                _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            }
         }
         for i in chunks * 8..n {
             y[i] += alpha * x[i];
         }
     }
 
+    /// # Safety
+    /// Caller must guarantee avx2+fma availability (guaranteed via
+    /// [`super::kernel`]); any slice length is handled.
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn max_slice(xs: &[f32]) -> f32 {
+        debug_assert!(feature_ok());
         let n = xs.len();
         let chunks = n / 8;
         let mut s = f32::NEG_INFINITY;
         if chunks > 0 {
-            let mut m = _mm256_loadu_ps(xs.as_ptr());
-            for c in 1..chunks {
-                m = _mm256_max_ps(m, _mm256_loadu_ps(xs.as_ptr().add(c * 8)));
+            // SAFETY: chunks ≥ 1 means n ≥ 8, so the head load and every
+            // load at c·8 (c < chunks, c·8 + 7 < n) are in bounds; `hmax`
+            // is value-only.
+            unsafe {
+                let mut m = _mm256_loadu_ps(xs.as_ptr());
+                for c in 1..chunks {
+                    m = _mm256_max_ps(m, _mm256_loadu_ps(xs.as_ptr().add(c * 8)));
+                }
+                s = hmax(m);
             }
-            s = hmax(m);
         }
         for i in chunks * 8..n {
             s = s.max(xs[i]);
@@ -485,61 +645,85 @@ mod avx2 {
     /// `exp_f32`, |rel err| ≲ 2e-7 on the clamped range).
     #[target_feature(enable = "avx2,fma")]
     unsafe fn exp256(x: __m256) -> __m256 {
-        // upper clamp 87.0: keeps fx ≤ 126 so the exponent-bit scaling
-        // cannot overflow to Inf (see the scalar `exp_f32`)
-        let hi = _mm256_set1_ps(87.0);
-        let lo = _mm256_set1_ps(-87.336_54);
-        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
-        let c1 = _mm256_set1_ps(0.693_359_375);
-        let c2 = _mm256_set1_ps(-2.121_944_4e-4);
-        let one = _mm256_set1_ps(1.0);
-        let half = _mm256_set1_ps(0.5);
+        // SAFETY: the whole polynomial is value-only register arithmetic —
+        // no memory access anywhere; avx2+fma enabled on this fn. The
+        // upper clamp 87.0 keeps fx ≤ 126 so the exponent-bit scaling
+        // cannot overflow to Inf (see the scalar `exp_f32`).
+        unsafe {
+            let hi = _mm256_set1_ps(87.0);
+            let lo = _mm256_set1_ps(-87.336_54);
+            let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+            let c1 = _mm256_set1_ps(0.693_359_375);
+            let c2 = _mm256_set1_ps(-2.121_944_4e-4);
+            let one = _mm256_set1_ps(1.0);
+            let half = _mm256_set1_ps(0.5);
 
-        let x = _mm256_min_ps(_mm256_max_ps(x, lo), hi);
-        let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, log2e, half));
-        let x = _mm256_fnmadd_ps(fx, c1, x);
-        let x = _mm256_fnmadd_ps(fx, c2, x);
-        let z = _mm256_mul_ps(x, x);
-        let mut y = _mm256_set1_ps(1.987_569_2e-4);
-        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.398_199_9e-3));
-        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(8.333_452e-3));
-        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(4.166_579_6e-2));
-        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.666_666_5e-1));
-        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(5.000_000_3e-1));
-        y = _mm256_fmadd_ps(y, z, x);
-        y = _mm256_add_ps(y, one);
-        let n = _mm256_cvtps_epi32(fx);
-        let n = _mm256_add_epi32(n, _mm256_set1_epi32(127));
-        let n = _mm256_slli_epi32::<23>(n);
-        _mm256_mul_ps(y, _mm256_castsi256_ps(n))
+            let x = _mm256_min_ps(_mm256_max_ps(x, lo), hi);
+            let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, log2e, half));
+            let x = _mm256_fnmadd_ps(fx, c1, x);
+            let x = _mm256_fnmadd_ps(fx, c2, x);
+            let z = _mm256_mul_ps(x, x);
+            let mut y = _mm256_set1_ps(1.987_569_2e-4);
+            y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.398_199_9e-3));
+            y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(8.333_452e-3));
+            y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(4.166_579_6e-2));
+            y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.666_666_5e-1));
+            y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(5.000_000_3e-1));
+            y = _mm256_fmadd_ps(y, z, x);
+            y = _mm256_add_ps(y, one);
+            let n = _mm256_cvtps_epi32(fx);
+            let n = _mm256_add_epi32(n, _mm256_set1_epi32(127));
+            let n = _mm256_slli_epi32::<23>(n);
+            _mm256_mul_ps(y, _mm256_castsi256_ps(n))
+        }
     }
 
+    /// # Safety
+    /// Caller must guarantee avx2+fma availability (guaranteed via
+    /// [`super::kernel`]); any slice length is handled.
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn sum_exp_sub(xs: &[f32], m: f32) -> f32 {
+        debug_assert!(feature_ok());
         let n = xs.len();
         let chunks = n / 8;
-        let vm = _mm256_set1_ps(m);
-        let mut acc = _mm256_setzero_ps();
+        // SAFETY: value-only broadcast and accumulator zeroing.
+        let (vm, mut acc) = unsafe { (_mm256_set1_ps(m), _mm256_setzero_ps()) };
         for c in 0..chunks {
-            let v = _mm256_loadu_ps(xs.as_ptr().add(c * 8));
-            acc = _mm256_add_ps(acc, exp256(_mm256_sub_ps(v, vm)));
+            // SAFETY: c·8 + 7 < chunks·8 ≤ n keeps the load inside `xs`;
+            // `exp256` and the adds are value-only.
+            unsafe {
+                let v = _mm256_loadu_ps(xs.as_ptr().add(c * 8));
+                acc = _mm256_add_ps(acc, exp256(_mm256_sub_ps(v, vm)));
+            }
         }
-        let mut s = hsum(acc);
+        // SAFETY: `hsum` is value-only; avx2+fma enabled here.
+        let mut s = unsafe { hsum(acc) };
         for i in chunks * 8..n {
             s += super::exp_f32(xs[i] - m);
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee `xs.len() == out.len()` and avx2+fma
+    /// availability (guaranteed via [`super::kernel`]).
     #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn exp_sub_into(xs: &[f32], m: f32, out: &mut [f32]) {
-        let n = xs.len();
+        debug_assert!(feature_ok());
+        debug_assert_eq!(xs.len(), out.len());
+        let n = xs.len().min(out.len());
         let chunks = n / 8;
-        let vm = _mm256_set1_ps(m);
+        // SAFETY: value-only broadcast.
+        let vm = unsafe { _mm256_set1_ps(m) };
         for c in 0..chunks {
             let i = c * 8;
-            let v = exp256(_mm256_sub_ps(_mm256_loadu_ps(xs.as_ptr().add(i)), vm));
-            _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+            // SAFETY: i + 7 < chunks·8 ≤ n ≤ both lengths, so the load from
+            // `xs` and the store into `out` are in bounds; the two slices
+            // cannot alias (& vs &mut).
+            unsafe {
+                let v = exp256(_mm256_sub_ps(_mm256_loadu_ps(xs.as_ptr().add(i)), vm));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+            }
         }
         for i in chunks * 8..n {
             out[i] = super::exp_f32(xs[i] - m);
@@ -552,39 +736,79 @@ mod avx2 {
 // to the portable exp path (see the `_` dispatch arms above)
 // ---------------------------------------------------------------------------
 
+// See the `avx2` module for why `unused_unsafe` is tolerated here: the
+// explicit blocks are required pre-1.87 (`deny(unsafe_op_in_unsafe_fn)`)
+// and redundant-but-correct once value-only intrinsics became safe inside
+// `#[target_feature]` fns.
 #[cfg(target_arch = "aarch64")]
+#[allow(unused_unsafe)]
 mod neon {
     use std::arch::aarch64::*;
 
+    /// Dispatcher invariant, re-checked (debug only) at kernel entries.
+    fn feature_ok() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    /// Raw dot kernel. Contract: `a` and `b` are valid for reads of `n`
+    /// f32s each, and NEON is available (callers come through the
+    /// dispatcher).
     #[target_feature(enable = "neon")]
     unsafe fn dot_raw(a: *const f32, b: *const f32, n: usize) -> f32 {
+        debug_assert!(feature_ok());
         let chunks = n / 4;
-        let mut acc = vdupq_n_f32(0.0);
+        // SAFETY: value-only accumulator zeroing.
+        let mut acc = unsafe { vdupq_n_f32(0.0) };
         for c in 0..chunks {
             let i = c * 4;
-            acc = vfmaq_f32(acc, vld1q_f32(a.add(i)), vld1q_f32(b.add(i)));
+            // SAFETY: the highest lane touched is i + 3 ≤ chunks·4 − 1 < n,
+            // so both 4-lane loads are inside the `n`-element buffers the
+            // contract promises; the FMA is value-only.
+            acc = unsafe { vfmaq_f32(acc, vld1q_f32(a.add(i)), vld1q_f32(b.add(i))) };
         }
-        let mut s = vaddvq_f32(acc);
+        // SAFETY: value-only horizontal reduction.
+        let mut s = unsafe { vaddvq_f32(acc) };
         for i in chunks * 4..n {
-            s += *a.add(i) * *b.add(i);
+            // SAFETY: scalar tail, i < n — in bounds for both buffers.
+            s += unsafe { *a.add(i) * *b.add(i) };
         }
         s
     }
 
+    /// # Safety
+    /// Caller must guarantee `a.len() == b.len()` and NEON availability
+    /// (guaranteed when reached through [`super::kernel`]).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
-        dot_raw(a.as_ptr(), b.as_ptr(), a.len())
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len().min(b.len());
+        // SAFETY: both pointers come from live slices covering ≥ n
+        // elements, satisfying `dot_raw`'s read contract.
+        unsafe { dot_raw(a.as_ptr(), b.as_ptr(), n) }
     }
 
+    /// # Safety
+    /// Caller must guarantee `q.len() == d`, `rows.len() == out.len()·d`,
+    /// and NEON availability (guaranteed via [`super::kernel`]).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn matvec(rows: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(rows.len(), out.len() * d);
         for (r, o) in out.iter_mut().enumerate() {
-            *o = dot_raw(rows.as_ptr().add(r * d), q.as_ptr(), d);
+            // SAFETY: row r occupies rows[r·d .. r·d+d] — in bounds because
+            // rows.len() == out.len()·d and r < out.len(); q covers d
+            // elements by contract.
+            *o = unsafe { dot_raw(rows.as_ptr().add(r * d), q.as_ptr(), d) };
         }
     }
 
     /// 2-query blocking: each row load feeds both query accumulators; the
     /// per-query FMA sequence matches `dot_raw` (bit-identical scores).
+    ///
+    /// # Safety
+    /// Caller must guarantee `qs.len() == nq·d`, `out.len() == nq·nrows`
+    /// with `nrows = rows.len()/d` and `d | rows.len()`, and NEON
+    /// availability (guaranteed via [`super::kernel`]).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn matvec_multi(
         rows: &[f32],
@@ -593,28 +817,44 @@ mod neon {
         nq: usize,
         out: &mut [f32],
     ) {
+        debug_assert!(feature_ok());
         let nrows = rows.len() / d;
+        debug_assert_eq!(rows.len(), nrows * d);
+        debug_assert_eq!(qs.len(), nq * d);
+        debug_assert_eq!(out.len(), nq * nrows);
         let chunks = d / 4;
         let mut j = 0;
         while j + 2 <= nq {
-            let q0 = qs.as_ptr().add(j * d);
-            let q1 = qs.as_ptr().add((j + 1) * d);
+            // SAFETY: queries j and j+1 satisfy (j+1)·d + d ≤ nq·d ==
+            // qs.len(), so each base pointer heads a full d-element lane.
+            let (q0, q1) = unsafe { (qs.as_ptr().add(j * d), qs.as_ptr().add((j + 1) * d)) };
             for r in 0..nrows {
-                let row = rows.as_ptr().add(r * d);
-                let mut a0 = vdupq_n_f32(0.0);
-                let mut a1 = vdupq_n_f32(0.0);
+                // SAFETY: r < nrows so row r spans rows[r·d .. r·d+d],
+                // inside the slice.
+                let row = unsafe { rows.as_ptr().add(r * d) };
+                // SAFETY: value-only accumulator zeroing.
+                let (mut a0, mut a1) = unsafe { (vdupq_n_f32(0.0), vdupq_n_f32(0.0)) };
                 for c in 0..chunks {
                     let i = c * 4;
-                    let rv = vld1q_f32(row.add(i));
-                    a0 = vfmaq_f32(a0, rv, vld1q_f32(q0.add(i)));
-                    a1 = vfmaq_f32(a1, rv, vld1q_f32(q1.add(i)));
+                    // SAFETY: i + 3 < chunks·4 ≤ d keeps the 4-lane loads
+                    // inside the d-element row and query lanes; FMA is
+                    // value-only.
+                    unsafe {
+                        let rv = vld1q_f32(row.add(i));
+                        a0 = vfmaq_f32(a0, rv, vld1q_f32(q0.add(i)));
+                        a1 = vfmaq_f32(a1, rv, vld1q_f32(q1.add(i)));
+                    }
                 }
-                let mut s0 = vaddvq_f32(a0);
-                let mut s1 = vaddvq_f32(a1);
+                // SAFETY: value-only horizontal reductions.
+                let (mut s0, mut s1) = unsafe { (vaddvq_f32(a0), vaddvq_f32(a1)) };
                 for i in chunks * 4..d {
-                    let x = *row.add(i);
-                    s0 += x * *q0.add(i);
-                    s1 += x * *q1.add(i);
+                    // SAFETY: scalar tail, i < d — inside the same row and
+                    // query lanes as the vector body.
+                    unsafe {
+                        let x = *row.add(i);
+                        s0 += x * *q0.add(i);
+                        s1 += x * *q1.add(i);
+                    }
                 }
                 out[j * nrows + r] = s0;
                 out[(j + 1) * nrows + r] = s1;
@@ -622,7 +862,11 @@ mod neon {
             j += 2;
         }
         while j < nq {
-            matvec(rows, d, &qs[j * d..(j + 1) * d], &mut out[j * nrows..(j + 1) * nrows]);
+            // SAFETY: the per-query remainder reuses `matvec` on in-bounds
+            // subslices (j < nq), under this fn's own feature contract.
+            unsafe {
+                matvec(rows, d, &qs[j * d..(j + 1) * d], &mut out[j * nrows..(j + 1) * nrows]);
+            }
             j += 1;
         }
     }
@@ -654,6 +898,50 @@ mod tests {
         let k = kernel();
         assert_eq!(k, kernel(), "dispatch must be stable");
         assert!(!k.name().is_empty());
+    }
+
+    #[test]
+    fn forced_scalar_env_pins_dispatch() {
+        // `kernel()` caches on first use, so this test can only assert the
+        // direction that holds for the current process environment: when
+        // the seam is active (env var set, or running under Miri where the
+        // default flips on), dispatch must be Scalar. The CI forced-scalar
+        // lane runs the whole suite with GMIPS_FORCE_SCALAR=1, which makes
+        // every SIMD-vs-scalar parity test above exercise scalar==scalar
+        // (bit-identical by construction) and proves the seam is a drop-in.
+        if force_scalar() {
+            assert_eq!(kernel(), Kernel::Scalar);
+        }
+        // And the seam's parser: explicit "0"/empty must not force scalar.
+        assert!(!matches!(std::env::var("GMIPS_FORCE_SCALAR").as_deref(), Ok("0")) || !force_scalar());
+    }
+
+    /// Miri-sized kernel subset: under Miri the seam pins dispatch to the
+    /// scalar kernels, so this exercises `dot_scalar`'s unchecked indexing,
+    /// the fused reductions' chunk loop, and `exp_f32`'s bit manipulation
+    /// on sizes an interpreter can afford.
+    #[test]
+    fn miri_scalar_kernel_subset() {
+        let mut rng = Pcg64::new(11);
+        for len in [0usize, 1, 7, 8, 9, 17] {
+            let a: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let got = dot(&a, &b) as f64;
+            let want = naive_dot_f64(&a, &b);
+            assert!((got - want).abs() <= 1e-3 * (1.0 + want.abs()), "dot len={len}");
+        }
+        let (n, d) = (9, 5);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let got = block_max_sumexp(&rows, d, &q);
+        let want = reference_max_sumexp(&rows, d, &q);
+        assert_eq!(got.count, n as u64);
+        assert!((got.logsumexp() - want.logsumexp()).abs() <= 1e-4);
+        let mut out = vec![0f32; 2 * n];
+        matvec_block_multi(&rows, d, &q.repeat(2), 2, &mut out);
+        assert_eq!(&out[..n], &out[n..], "identical queries, identical lanes");
+        assert_eq!(exp_f32(0.0), 1.0);
+        assert!(exp_f32(1000.0).is_finite());
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //! Non-finite values (an empty shard's `log Ẑ_s = -∞`) are tagged as
 //! strings since JSON has no literal for them.
 
+// Wire-codec truncation policy (see `store::format` and
+// rust/UNSAFE_POLICY.md): decoded integers come off an untrusted wire,
+// so narrowing `as` casts are banned in favor of checked conversions
+// that turn out-of-range values into protocol errors. Enforced here at
+// deny level and re-checked textually by `cargo xtask lint`.
+#![deny(clippy::cast_possible_truncation)]
+
 use crate::error::{Error, Result};
 use crate::estimator::EstimateWork;
 use crate::mips::TopKResult;
@@ -60,7 +67,13 @@ fn arr_u32(ids: &[u32]) -> Json {
 }
 
 fn as_u32_vec(j: &Json) -> Result<Vec<u32>> {
-    j.as_arr()?.iter().map(|x| x.as_usize().map(|v| v as u32)).collect()
+    j.as_arr()?
+        .iter()
+        .map(|x| {
+            let v = x.as_usize()?;
+            u32::try_from(v).map_err(|_| Error::json(format!("id {v} exceeds u32 range")))
+        })
+        .collect()
 }
 
 fn as_f64_vec(j: &Json) -> Result<Vec<f64>> {

@@ -37,11 +37,14 @@ pub struct PjrtScorer {
     d: usize,
 }
 
-// Safety: see module docs — every touch of the non-Send internals happens
+// SAFETY: see module docs — every touch of the non-Send internals happens
 // under `self.inner`'s mutex, including Drop (the scorer is dropped on
 // whichever thread holds the last Arc, with no concurrent access by
 // construction).
 unsafe impl Send for PjrtScorer {}
+// SAFETY: same serialization argument as Send — `&PjrtScorer` exposes the
+// inner state only through the mutex, so shared references never touch
+// the thread-incompatible internals concurrently.
 unsafe impl Sync for PjrtScorer {}
 
 impl PjrtScorer {

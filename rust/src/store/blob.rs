@@ -75,9 +75,13 @@ pub struct Mmap {
     len: usize,
 }
 
-// The mapping is read-only for its entire lifetime, so shared access
-// from any thread is safe.
+// SAFETY: the mapping is created PROT_READ and never remapped, so it is
+// immutable for its entire lifetime; the raw pointer is only ever read
+// through `bytes()`. Immutable data is safe to share and send across
+// threads, and unmapping happens exactly once (Drop takes `&mut self`).
 unsafe impl Send for Mmap {}
+// SAFETY: same immutability argument as Send — concurrent `&Mmap` access
+// only performs reads of read-only pages.
 unsafe impl Sync for Mmap {}
 
 impl Mmap {
@@ -93,6 +97,10 @@ impl Mmap {
         if len == 0 {
             return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0 });
         }
+        // SAFETY: plain FFI syscall with a live fd (borrowed from `file`
+        // for the duration of the call), a null addr hint, and len > 0
+        // checked above; the kernel validates the rest and reports
+        // failure via MAP_FAILED, handled below.
         let ptr = unsafe {
             sys::mmap(
                 std::ptr::null_mut(),
@@ -120,7 +128,11 @@ impl Mmap {
         if self.len == 0 {
             &[]
         } else {
-            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+            // SAFETY: `map()` succeeded, so `ptr` points at a live
+            // read-only mapping of exactly `len` bytes that outlives
+            // `&self` (unmapped only in Drop); u8 has no alignment or
+            // validity requirements.
+            unsafe { std::slice::from_raw_parts(self.ptr.cast::<u8>(), self.len) }
         }
     }
 }
@@ -129,6 +141,9 @@ impl Drop for Mmap {
     fn drop(&mut self) {
         #[cfg(all(unix, target_pointer_width = "64"))]
         if self.len > 0 {
+            // SAFETY: `(ptr, len)` is exactly the region returned by the
+            // successful `mmap` in `map()`, unmapped only here (Drop runs
+            // once); no `&[u8]` view can outlive `self` by borrow rules.
             // Failure leaks the mapping; there is no recovery path and
             // the process is usually exiting anyway.
             let _ = unsafe { sys::munmap(self.ptr, self.len) };
@@ -187,12 +202,14 @@ impl<T: Pod> Blob<T> {
         match self {
             Blob::Owned(v) => v,
             Blob::Mapped { map, off, len } => {
-                // Safety: bounds, alignment and element-size divisibility
-                // were validated in `from_map`; `T: Pod` means every bit
+                // SAFETY: bounds (`off + len·size_of::<T>() ≤ map len`),
+                // alignment (`off % align_of::<T>() == 0` on a
+                // page-aligned base), and element-size divisibility were
+                // validated in `from_map`; `T: Pod` means every bit
                 // pattern is a valid value; the map is immutable and kept
-                // alive by the Arc.
+                // alive by the Arc for at least the borrow's lifetime.
                 unsafe {
-                    std::slice::from_raw_parts(map.bytes().as_ptr().add(*off) as *const T, *len)
+                    std::slice::from_raw_parts(map.bytes().as_ptr().add(*off).cast::<T>(), *len)
                 }
             }
         }
@@ -292,5 +309,60 @@ mod tests {
             Err(e) => assert_eq!(e.kind(), io::ErrorKind::Unsupported),
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn from_map_rejects_every_misaligned_offset() {
+        // adversarial alignment sweep: for each Pod width, every offset
+        // that is not a multiple of the alignment must be rejected —
+        // from_map is the sole gate between untrusted snapshot offsets
+        // and the `from_raw_parts` reinterpretation in as_slice
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("gmips_blob_align_{}", std::process::id()));
+        {
+            let mut f = File::create(&path).unwrap();
+            f.write_all(&[0xabu8; 256]).unwrap();
+        }
+        let file = File::open(&path).unwrap();
+        if let Ok(map) = Mmap::map(&file) {
+            let map = Arc::new(map);
+            for off in 0..16usize {
+                let ok_u32 = Blob::<u32>::from_map(map.clone(), off, 4).is_some();
+                assert_eq!(ok_u32, off % 4 == 0, "u32 off={off}");
+                let ok_u64 = Blob::<u64>::from_map(map.clone(), off, 8).is_some();
+                assert_eq!(ok_u64, off % 8 == 0, "u64 off={off}");
+                let ok_i16 = Blob::<i16>::from_map(map.clone(), off, 2).is_some();
+                assert_eq!(ok_i16, off % 2 == 0, "i16 off={off}");
+                // u8 has alignment 1: every offset is fine
+                assert!(Blob::<u8>::from_map(map.clone(), off, 1).is_some(), "u8 off={off}");
+            }
+            // ragged byte lengths (not a whole number of elements)
+            for bytes in [1usize, 2, 3, 5, 6, 7] {
+                assert!(Blob::<u32>::from_map(map.clone(), 0, bytes).is_none(), "bytes={bytes}");
+            }
+            // off + bytes overflow must not wrap past the bounds check
+            assert!(Blob::<u8>::from_map(map.clone(), usize::MAX, 2).is_none());
+            assert!(Blob::<u8>::from_map(map, 8, usize::MAX - 4).is_none());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    // Miri-lane subset: owned-mode views only (the mmap syscall is
+    // outside Miri's supported FFI surface, so mapped mode is covered by
+    // the ASan lane instead).
+    #[test]
+    fn miri_owned_blob_views_and_cow() {
+        let mut b: Blob<f32> = vec![0.5f32, -1.0, 2.0].into();
+        assert!(!b.is_mapped());
+        assert_eq!(b.len(), 3);
+        assert_eq!(&b[1..], &[-1.0, 2.0]);
+        assert_eq!(b.iter().copied().sum::<f32>(), 1.5);
+        b.to_mut()[2] = 4.0;
+        assert_eq!(b[2], 4.0);
+        let c = b.clone();
+        assert_eq!(c, b);
+        let empty: Blob<u64> = Blob::default();
+        assert!(empty.is_empty());
+        assert_eq!(format!("{empty:?}"), "[]");
     }
 }

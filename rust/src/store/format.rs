@@ -41,6 +41,14 @@
 //! shadow sections use the `_soft` accessors so the caller can degrade
 //! to the f32 tier instead of refusing to serve.
 
+// Wire-codec truncation policy: this module decodes untrusted on-disk
+// integers, so every narrowing `as` cast is banned in favor of
+// `usize::try_from`/checked conversions that surface corruption as
+// errors instead of silently wrapping. Enforced here at deny level (the
+// lint is allow-by-default pedantic) and re-checked textually by
+// `cargo xtask lint`.
+#![deny(clippy::cast_possible_truncation)]
+
 use std::fs::{self, File};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -129,8 +137,11 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// Reinterpret a Pod slice as its raw little-endian bytes.
 pub fn as_bytes<T: Pod>(v: &[T]) -> &[u8] {
     le_guard();
-    // Safety: T is Pod (no padding, fixed layout); lifetime is tied to v.
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+    // SAFETY: the byte view covers exactly the slice's own allocation
+    // (`size_of_val` bytes at its base); T is Pod (no padding, fixed
+    // layout, every byte initialized); u8 has no alignment requirement;
+    // the borrow ties the view's lifetime to `v`.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v)) }
 }
 
 /// The format stores native little-endian bytes; refuse to run
@@ -190,7 +201,7 @@ impl SnapshotWriter {
     }
 
     fn pad_to_align(&mut self) -> Result<()> {
-        let rem = (self.pos % ALIGN as u64) as usize;
+        let rem = usize::try_from(self.pos % ALIGN as u64).expect("x mod 64 fits usize");
         if rem != 0 {
             let pad = ALIGN - rem;
             self.file.write_all(&ZEROS[..pad])?;
@@ -373,9 +384,13 @@ impl Snapshot {
                  {n_sections} entries, file {flen} bytes) — file is corrupt or truncated"
             )));
         }
-        let mut sections = Vec::with_capacity(n_sections as usize);
-        for i in 0..n_sections as usize {
-            let b = &data[table_off as usize + i * ENTRY_LEN..][..ENTRY_LEN];
+        // lossless: n_sections ≤ MAX_SECTIONS and table_off < flen =
+        // data.len() (a usize) were both checked above
+        let n_sections = usize::try_from(n_sections).expect("bounded by MAX_SECTIONS");
+        let table_base = usize::try_from(table_off).expect("bounded by file length");
+        let mut sections = Vec::with_capacity(n_sections);
+        for i in 0..n_sections {
+            let b = &data[table_base + i * ENTRY_LEN..][..ENTRY_LEN];
             let e = SectionEntry {
                 tag: u32::from_le_bytes(b[0..4].try_into().unwrap()),
                 arg: u32::from_le_bytes(b[4..8].try_into().unwrap()),
@@ -428,8 +443,11 @@ impl Snapshot {
     }
 
     fn section_slice(&self, e: &SectionEntry) -> &[u8] {
-        // bounds were validated in validate_layout
-        &self.data()[e.off as usize..(e.off + e.len) as usize]
+        // lossless: validate_layout checked off + len ≤ table_off ≤
+        // data.len() (a usize), so both endpoints fit usize
+        let off = usize::try_from(e.off).expect("validated section offset");
+        let end = usize::try_from(e.off + e.len).expect("validated section end");
+        &self.data()[off..end]
     }
 
     /// Checksum-verified bytes of a required section; missing or
@@ -477,15 +495,24 @@ impl Snapshot {
                 }
                 let len = b.len() / size;
                 let mut v: Vec<T> = Vec::with_capacity(len);
-                // Safety: T is Pod; byte-for-byte copy of exactly len
-                // elements into a fresh, properly aligned Vec buffer.
+                // SAFETY: the fresh Vec's buffer holds capacity ≥ len
+                // elements = b.len() bytes, aligned for T; the source and
+                // the new allocation cannot overlap; T is Pod so the
+                // copied bytes form valid values, making set_len(len)
+                // sound after the copy.
                 unsafe {
-                    std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, b.len());
+                    std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr().cast::<u8>(), b.len());
                     v.set_len(len);
                 }
                 Some(Blob::Owned(v))
             }
-            SnapBytes::Mapped(m) => Blob::from_map(m.clone(), e.off as usize, e.len as usize),
+            SnapBytes::Mapped(m) => {
+                // lossless: validate_layout bounded off + len by the
+                // mapped file length (a usize)
+                let off = usize::try_from(e.off).ok()?;
+                let len = usize::try_from(e.len).ok()?;
+                Blob::from_map(m.clone(), off, len)
+            }
         }
     }
 
@@ -638,10 +665,12 @@ impl<'a> ByteReader<'a> {
         })?;
         let b = self.take(nbytes)?;
         let mut v: Vec<T> = Vec::with_capacity(len);
-        // Safety: T is Pod; byte copy of exactly len elements into a
-        // fresh Vec buffer (which is aligned for T).
+        // SAFETY: the fresh Vec's buffer holds capacity ≥ len elements =
+        // nbytes bytes (b.len() == nbytes by `take`), aligned for T and
+        // disjoint from the source section; T is Pod so the copied bytes
+        // form valid values, making set_len(len) sound after the copy.
         unsafe {
-            std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr() as *mut u8, nbytes);
+            std::ptr::copy_nonoverlapping(b.as_ptr(), v.as_mut_ptr().cast::<u8>(), nbytes);
             v.set_len(len);
         }
         Ok(v)
@@ -717,6 +746,62 @@ mod tests {
         let _ = r.u64().unwrap();
         let _ = r.f64().unwrap();
         assert!(r.vec::<u32>().is_err());
+    }
+
+    #[test]
+    fn miri_byte_codec_roundtrip() {
+        // Miri-lane subset: the ByteWriter/ByteReader pair, including the
+        // Pod-slice reinterpretation in `slice`/`vec`
+        let mut bw = ByteWriter::default();
+        bw.u8(3);
+        bw.u32(0xdead_beef);
+        bw.u64(1 << 40);
+        bw.f32(2.5);
+        bw.f64(-0.125);
+        bw.slice(&[1.0f32, -2.0, 3.5]);
+        bw.slice(&[9u64, 10]);
+        bw.str("φ(x)·θ");
+        let buf = bw.bytes().to_vec();
+        let mut r = ByteReader::new(&buf, "miri");
+        assert_eq!(r.u8().unwrap(), 3);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), 2.5);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.vec::<f32>().unwrap(), vec![1.0, -2.0, 3.5]);
+        assert_eq!(r.vec::<u64>().unwrap(), vec![9, 10]);
+        assert_eq!(r.str().unwrap(), "φ(x)·θ");
+        // the cursor is exactly drained: one more read must error
+        assert!(r.u8().is_err());
+    }
+
+    #[test]
+    fn miri_byte_reader_truncation_and_corrupt_lengths() {
+        // every read past the end must error (not panic), including
+        // adversarial length prefixes that would overflow len·size
+        let mut bw = ByteWriter::default();
+        bw.slice(&[1u32, 2, 3]);
+        let buf = bw.bytes().to_vec();
+        for cut in 0..buf.len() {
+            let mut r = ByteReader::new(&buf[..cut], "miri");
+            assert!(r.vec::<u32>().is_err(), "cut={cut}");
+        }
+        // length prefix claiming usize::MAX elements: checked_mul catches
+        let mut bad = buf.clone();
+        bad[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = ByteReader::new(&bad, "miri");
+        assert!(r.vec::<u32>().is_err());
+        // length prefix that fits u64 but not the buffer
+        let mut bad2 = buf.clone();
+        bad2[..8].copy_from_slice(&1024u64.to_le_bytes());
+        let mut r = ByteReader::new(&bad2, "miri");
+        assert!(r.vec::<u32>().is_err());
+        // empty buffer: every typed read errors
+        let mut r = ByteReader::new(&[], "miri");
+        assert!(r.u8().is_err());
+        assert!(r.u32().is_err());
+        assert!(r.u64().is_err());
+        assert!(r.str().is_err());
     }
 
     #[test]

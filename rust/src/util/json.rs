@@ -430,4 +430,21 @@ mod tests {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.25).to_string(), "5.25");
     }
+
+    #[test]
+    fn miri_parse_roundtrip_and_malformed() {
+        // Miri-lane subset: the byte-cursor parser over nesting, escapes,
+        // and malformed input (the wire protocol's trust boundary)
+        let s = r#"{"ids":[1,2,3],"s":"a\"b\\\n\u2603","neg":-0.5,"deep":[[[]]],"t":true}"#;
+        let v = Json::parse(s).unwrap();
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "a\"b\\\n☃");
+        assert_eq!(
+            v.get("ids").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        for bad in ["", "{", "[1,", "\"\\u12", "\"\\q\"", "truX", "1e", "{\"a\":}", "nul"] {
+            assert!(Json::parse(bad).is_err(), "input {bad:?} must error");
+        }
+    }
 }

@@ -1,0 +1,284 @@
+//! Repo-local dev tasks (`cargo xtask <cmd>`).
+//!
+//! `lint` is the only task so far: a textual policy checker for the
+//! unsafe-code and determinism conventions documented in
+//! rust/UNSAFE_POLICY.md. It is deliberately a line scanner, not a
+//! parser — the rules are formatted-source conventions (rustfmt-shaped
+//! code), and a scanner keeps the tool std-only so it runs offline and
+//! compiles in under a second as the CI fast-fail step.
+//!
+//! Rules enforced over `rust/src/**/*.rs`:
+//!
+//! 1. every `unsafe {` block and `unsafe impl` must have a `SAFETY:`
+//!    comment on the same line or within the preceding few lines;
+//! 2. every `pub`/`pub(...)` `unsafe fn` must carry a `# Safety` doc
+//!    section;
+//! 3. `.lock().unwrap()` is banned — poisoned mutexes must recover via
+//!    `.lock().unwrap_or_else(|p| p.into_inner())` (the PR-7 helpers);
+//! 4. nondeterminism APIs (`SystemTime::now`, `thread_rng`) are banned
+//!    outside `util/timing.rs` and `benches/` — seeded determinism is
+//!    the repo's reproducibility contract;
+//! 5. narrowing `as` casts are banned in the wire codecs
+//!    (`remote/protocol.rs`, `store/format.rs`) outside test code —
+//!    untrusted integers must go through checked conversions.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// How many lines above an `unsafe` site may hold its `SAFETY:` comment.
+/// Generous enough for a multi-line justification plus one code line
+/// (e.g. a `let` binding the comment precedes), tight enough that a
+/// stale comment three screens up does not count.
+const SAFETY_LOOKBACK: usize = 10;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(),
+        Some(other) => {
+            eprintln!("unknown xtask '{other}'\n");
+            usage();
+            ExitCode::FAILURE
+        }
+        None => {
+            usage();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    eprintln!("usage: cargo xtask <command>\n\ncommands:\n  lint    check unsafe-code & determinism policy (rust/UNSAFE_POLICY.md)");
+}
+
+struct Violation {
+    file: PathBuf,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+fn lint() -> ExitCode {
+    let root = repo_root();
+    let src = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    files.sort();
+    if files.is_empty() {
+        eprintln!("xtask lint: no .rs files found under {}", src.display());
+        return ExitCode::FAILURE;
+    }
+    let mut violations = Vec::new();
+    for f in &files {
+        let text = match std::fs::read_to_string(f) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("xtask lint: cannot read {}: {e}", f.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        lint_file(f, &text, &mut violations);
+    }
+    if violations.is_empty() {
+        println!("xtask lint: {} files checked, 0 violations", files.len());
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            println!(
+                "{}:{}: [{}] {}",
+                v.file.strip_prefix(&root).unwrap_or(&v.file).display(),
+                v.line,
+                v.rule,
+                v.message
+            );
+        }
+        println!(
+            "xtask lint: {} files checked, {} violation(s) — see rust/UNSAFE_POLICY.md",
+            files.len(),
+            violations.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+/// The workspace root: walk up from CWD until Cargo.toml + rust/ exist
+/// (cargo runs xtask with CWD at the workspace root, but be tolerant).
+fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().expect("cwd");
+    loop {
+        if dir.join("Cargo.toml").is_file() && dir.join("rust").join("src").is_dir() {
+            return dir;
+        }
+        if !dir.pop() {
+            return std::env::current_dir().expect("cwd");
+        }
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// The code part of a line: everything before the first `//` (naive —
+/// a `//` inside a string literal would truncate early, which can only
+/// under-report tokens in strings, never miss real code tokens, because
+/// the scanned sources keep `//` out of string literals).
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Whether `hay` contains `needle` bounded by non-identifier characters.
+fn has_token(hay: &str, needle: &str) -> bool {
+    let is_ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    let h = hay.as_bytes();
+    let mut start = 0;
+    while let Some(i) = hay[start..].find(needle) {
+        let at = start + i;
+        let before_ok = at == 0 || !is_ident(h[at - 1]);
+        let end = at + needle.len();
+        let after_ok = end >= h.len() || !is_ident(h[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+fn lint_file(path: &Path, text: &str, out: &mut Vec<Violation>) {
+    let lines: Vec<&str> = text.lines().collect();
+    let rel = path.to_string_lossy().replace('\\', "/");
+    let is_wire_codec =
+        rel.ends_with("src/remote/protocol.rs") || rel.ends_with("src/store/format.rs");
+    let nondet_allowed = rel.ends_with("src/util/timing.rs");
+    // test code starts at the first #[cfg(test)] — by repo convention the
+    // test module is the tail of the file
+    let test_start =
+        lines.iter().position(|l| l.trim_start().starts_with("#[cfg(test)]")).unwrap_or(usize::MAX);
+
+    for (idx, &line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = code_part(line);
+        let in_test = idx >= test_start;
+
+        // rule 3: raw lock().unwrap() — everywhere, tests included (a
+        // poisoned-mutex panic cascade in a test is still a flake)
+        if code.contains(".lock().unwrap()") {
+            out.push(Violation {
+                file: path.to_path_buf(),
+                line: lineno,
+                rule: "lock-unwrap",
+                message: "raw `.lock().unwrap()` — use the poison-recovering \
+                          `.lock().unwrap_or_else(|p| p.into_inner())` pattern"
+                    .into(),
+            });
+        }
+
+        // rule 4: nondeterminism APIs
+        if !nondet_allowed {
+            for api in ["SystemTime::now", "thread_rng"] {
+                if code.contains(api) {
+                    out.push(Violation {
+                        file: path.to_path_buf(),
+                        line: lineno,
+                        rule: "nondeterminism",
+                        message: format!(
+                            "`{api}` outside util/timing.rs — derive times/randomness \
+                             from the seeded Pcg64 streams or util::timing"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // rule 5: narrowing casts in the wire codecs
+        if is_wire_codec && !in_test {
+            for cast in [" as u8", " as u16", " as u32", " as i8", " as i16", " as i32",
+                " as usize"]
+            {
+                if has_token(code, cast.trim_start()) && code.contains(cast) {
+                    out.push(Violation {
+                        file: path.to_path_buf(),
+                        line: lineno,
+                        rule: "truncating-cast",
+                        message: format!(
+                            "narrowing `{}` in a wire codec — use a checked conversion \
+                             (`try_from`) so corrupt input errors instead of wrapping",
+                            cast.trim_start()
+                        ),
+                    });
+                }
+            }
+        }
+
+        // rules 1 + 2: unsafe hygiene
+        if !has_token(code, "unsafe") {
+            continue;
+        }
+        let after = code[code.find("unsafe").expect("token present") + "unsafe".len()..].trim_start();
+        if after.starts_with("fn") {
+            // rule 2: pub unsafe fn needs # Safety docs; private unsafe
+            // fns discharge their obligations at call sites (rule 1)
+            if code.trim_start().starts_with("pub") {
+                let mut has_safety_doc = false;
+                let mut j = idx;
+                while j > 0 {
+                    j -= 1;
+                    let t = lines[j].trim_start();
+                    if t.starts_with("///") || t.starts_with("//") || t.starts_with("#[") {
+                        if t.starts_with("///") && t.contains("# Safety") {
+                            has_safety_doc = true;
+                            break;
+                        }
+                    } else {
+                        break;
+                    }
+                }
+                if !has_safety_doc {
+                    out.push(Violation {
+                        file: path.to_path_buf(),
+                        line: lineno,
+                        rule: "missing-safety-doc",
+                        message: "`pub unsafe fn` without a `# Safety` doc section".into(),
+                    });
+                }
+            }
+        } else {
+            // rule 1: unsafe block / unsafe impl needs an adjacent SAFETY:
+            let mut has_safety = line.contains("SAFETY:");
+            if !has_safety {
+                for j in idx.saturating_sub(SAFETY_LOOKBACK)..idx {
+                    if lines[j].contains("SAFETY:") {
+                        has_safety = true;
+                        break;
+                    }
+                }
+            }
+            if !has_safety {
+                let what = if after.starts_with("impl") { "unsafe impl" } else { "unsafe block" };
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line: lineno,
+                    rule: "missing-safety-comment",
+                    message: format!(
+                        "{what} without a `SAFETY:` comment within {SAFETY_LOOKBACK} lines"
+                    ),
+                });
+            }
+        }
+    }
+}
