@@ -6,6 +6,10 @@ Emits, for the configured (block, d):
     artifacts/scores_{B}x{d}.hlo.txt
     artifacts/partition_{B}x{d}.hlo.txt
     artifacts/expect_{B}x{d}.hlo.txt
+    artifacts/scores_batch_{B}x{d}.hlo.txt     (Q-query batched variants)
+    artifacts/partition_batch_{B}x{d}.hlo.txt
+    artifacts/expect_batch_{B}x{d}.hlo.txt
+    artifacts/sq8_screen_{B}x{d}.hlo.txt       (integer u8×i16 screen)
     artifacts/manifest.json
 
 HLO *text* is the interchange format (NOT ``lowered.compile()`` /
@@ -43,13 +47,23 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def lower_entries(block: int, dim: int):
-    """Lower the three entry points for one (block, d) shape."""
+def lower_entries(block: int, dim: int, qbatch: int = 8):
+    """Lower the entry points for one (block, d) shape.
+
+    Besides the three per-query entries, emits the Q-query batched
+    variants (fixed ``qbatch`` group; rust pads short groups) and the
+    integer SQ8 screening entry. The rust loader derives the group size
+    from the ``scores_batch`` entry's input shapes, so older artifact
+    sets without the batched entries keep working (per-query fallback).
+    """
     f32 = jnp.float32
     i32 = jnp.int32
     v = jax.ShapeDtypeStruct((block, dim), f32)
     q = jax.ShapeDtypeStruct((dim,), f32)
+    qs = jax.ShapeDtypeStruct((qbatch, dim), f32)
     cnt = jax.ShapeDtypeStruct((), i32)
+    codes = jax.ShapeDtypeStruct((block, dim), jnp.uint8)
+    qi16 = jax.ShapeDtypeStruct((dim,), jnp.int16)
 
     entries = [
         (
@@ -70,6 +84,30 @@ def lower_entries(block: int, dim: int):
             [[block, dim], [dim], []],
             [[1], [1], [dim]],
         ),
+        (
+            "scores_batch",
+            jax.jit(model.scores_batch_entry).lower(v, qs),
+            [[block, dim], [qbatch, dim]],
+            [[qbatch, block]],
+        ),
+        (
+            "partition_batch",
+            jax.jit(model.partition_batch_entry).lower(v, qs, cnt),
+            [[block, dim], [qbatch, dim], []],
+            [[qbatch], [qbatch]],
+        ),
+        (
+            "expect_batch",
+            jax.jit(model.expect_batch_entry).lower(v, qs, cnt),
+            [[block, dim], [qbatch, dim], []],
+            [[qbatch], [qbatch], [qbatch, dim]],
+        ),
+        (
+            "sq8_screen",
+            jax.jit(model.sq8_screen_entry).lower(codes, qi16),
+            [[block, dim], [dim]],
+            [[block]],
+        ),
     ]
     return entries
 
@@ -79,6 +117,9 @@ def main() -> None:
     ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
     ap.add_argument("--block", type=int, default=4096, help="rows per executable call")
     ap.add_argument("--dim", type=int, default=64, help="feature dimension d")
+    ap.add_argument(
+        "--qbatch", type=int, default=8, help="queries per batched executable call"
+    )
     # legacy single-file mode kept for the Makefile's convenience target
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
@@ -91,8 +132,15 @@ def main() -> None:
         print(f"error: --block must be a multiple of the Pallas TILE (256)", file=sys.stderr)
         sys.exit(2)
 
-    manifest = {"block": args.block, "d": args.dim, "entries": []}
-    for name, lowered, inputs, outputs in lower_entries(args.block, args.dim):
+    if args.qbatch < 1:
+        print("error: --qbatch must be >= 1", file=sys.stderr)
+        sys.exit(2)
+
+    # "qbatch" is informational (the rust loader derives the group size
+    # from the scores_batch entry's input shapes); extra keys are ignored
+    # by older manifest parsers.
+    manifest = {"block": args.block, "d": args.dim, "qbatch": args.qbatch, "entries": []}
+    for name, lowered, inputs, outputs in lower_entries(args.block, args.dim, args.qbatch):
         text = to_hlo_text(lowered)
         fname = f"{name}_{args.block}x{args.dim}.hlo.txt"
         path = os.path.join(out_dir, fname)

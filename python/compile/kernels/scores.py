@@ -82,6 +82,49 @@ def scores_block(v, q, tile=None):
 
 
 # --------------------------------------------------------------------------
+# batched scores: one row block scored for a whole query batch
+# --------------------------------------------------------------------------
+
+def _scores_batch_kernel(v_ref, qs_ref, o_ref):
+    # (TILE, d) @ (d, Q) -> stored query-major (Q, TILE): the row tile is
+    # loaded once and reused across the whole query batch
+    o_ref[...] = (v_ref[...] @ qs_ref[...].T).T
+
+
+def scores_batch_block(v, qs, tile=None):
+    """Batched tiled Pallas matvec: scores of a row block for Q queries.
+
+    v: (B, d) f32, qs: (Q, d) f32 -> (Q, B) f32 (query-major — the
+    layout of ``ScoreBackend::scores_batch`` on the rust side). Each row
+    tile crosses HBM once per *batch* instead of once per query — the
+    accelerator analogue of the native register-blocked multi-query
+    kernels (same amortization the fast-scan PQ tiles give the CPU).
+    """
+    b, d = v.shape
+    qn = qs.shape[0]
+    tile = tile or TILE
+    if b % tile == 0 and b >= tile:
+        grid = (b // tile,)
+        return pl.pallas_call(
+            _scores_batch_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tile, d), lambda i: (i, 0)),
+                pl.BlockSpec((qn, d), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((qn, tile), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((qn, b), v.dtype),
+            interpret=True,
+        )(v, qs)
+    # ragged fallback: one whole-block tile
+    return pl.pallas_call(
+        _scores_batch_kernel,
+        out_shape=jax.ShapeDtypeStruct((qn, b), v.dtype),
+        interpret=True,
+    )(v, qs)
+
+
+# --------------------------------------------------------------------------
 # partition: fused masked (max, sumexp)
 # --------------------------------------------------------------------------
 
@@ -115,6 +158,37 @@ def partition_block(v, q, count):
         ),
         interpret=True,
     )(v, q, cnt)
+    return m, se
+
+
+def _partition_batch_kernel(v_ref, qs_ref, cnt_ref, m_ref, se_ref):
+    s = qs_ref[...] @ v_ref[...].T  # (Q, B): rows cross VMEM once
+    cnt = cnt_ref[0]
+    valid = jnp.arange(s.shape[1]) < cnt
+    s = jnp.where(valid[None, :], s, -1e30)
+    m = jnp.max(s, axis=1)
+    se = jnp.sum(jnp.where(valid[None, :], jnp.exp(s - m[:, None]), 0.0), axis=1)
+    m_ref[...] = m
+    se_ref[...] = se
+
+
+def partition_batch_block(v, qs, count):
+    """Fused masked partition fragments for a whole query batch.
+
+    v: (B, d), qs: (Q, d), count: () i32 -> (max (Q,), sumexp (Q,)).
+    One kernel invocation serves all Q queries' (max, Σexp) fragments —
+    per-query results identical to ``partition_block`` per row of ``qs``.
+    """
+    qn = qs.shape[0]
+    cnt = jnp.reshape(count.astype(jnp.int32), (1,))
+    m, se = pl.pallas_call(
+        _partition_batch_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((qn,), v.dtype),
+            jax.ShapeDtypeStruct((qn,), v.dtype),
+        ),
+        interpret=True,
+    )(v, qs, cnt)
     return m, se
 
 
@@ -153,6 +227,67 @@ def expect_block(v, q, count):
         interpret=True,
     )(v, q, cnt)
     return m, se, ws
+
+
+def _expect_batch_kernel(v_ref, qs_ref, cnt_ref, m_ref, se_ref, ws_ref):
+    v = v_ref[...]
+    s = qs_ref[...] @ v.T  # (Q, B)
+    cnt = cnt_ref[0]
+    valid = jnp.arange(s.shape[1]) < cnt
+    s = jnp.where(valid[None, :], s, -1e30)
+    m = jnp.max(s, axis=1)
+    w = jnp.where(valid[None, :], jnp.exp(s - m[:, None]), 0.0)
+    m_ref[...] = m
+    se_ref[...] = jnp.sum(w, axis=1)
+    ws_ref[...] = w @ v  # (Q, d)
+
+
+def expect_batch_block(v, qs, count):
+    """Fused masked expectation fragments for a whole query batch.
+
+    v: (B, d), qs: (Q, d), count: () i32 ->
+    (max (Q,), sumexp (Q,), wsum (Q, d)). Per-query results identical to
+    ``expect_block`` per row of ``qs``.
+    """
+    qn = qs.shape[0]
+    d = v.shape[1]
+    cnt = jnp.reshape(count.astype(jnp.int32), (1,))
+    m, se, ws = pl.pallas_call(
+        _expect_batch_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((qn,), v.dtype),
+            jax.ShapeDtypeStruct((qn,), v.dtype),
+            jax.ShapeDtypeStruct((qn, d), v.dtype),
+        ),
+        interpret=True,
+    )(v, qs, cnt)
+    return m, se, ws
+
+
+# --------------------------------------------------------------------------
+# sq8 screen: exact integer u8-codes × i16-query dot
+# --------------------------------------------------------------------------
+
+def _sq8_screen_kernel(c_ref, q_ref, o_ref):
+    o_ref[...] = c_ref[...].astype(jnp.int32) @ q_ref[...].astype(jnp.int32)
+
+
+def sq8_screen_block(codes, q):
+    """Integer SQ8 screening sums: u8 codes × i16 query -> i32 per row.
+
+    codes: (B, d) u8, q: (d,) i16 -> (B,) i32. The per-block affine
+    dequant (scale/offset) stays on the rust host exactly as the native
+    integer kernels do it: this executable returns the *same exact
+    integer sums* the native u8×i16 kernels accumulate, so a PJRT-served
+    screen is bit-identical by construction. The i32 accumulator is
+    exact for d·255·32767 < 2³¹ (d ≤ 257 — far above any compiled d).
+    """
+    b, _d = codes.shape
+    return pl.pallas_call(
+        _sq8_screen_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(codes, q)
 
 
 @functools.lru_cache(maxsize=None)

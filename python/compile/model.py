@@ -46,6 +46,31 @@ def expect_entry(v, q, count):
     return (m, se, ws)
 
 
+def scores_batch_entry(v, qs):
+    """AOT entry: one row block scored for a Q-query batch, query-major
+    (Q, B) — the layout of ``ScoreBackend::scores_batch`` on the rust
+    side. Replaces the per-query executable loop for batched requests."""
+    return (K.scores_batch_block(v, qs, tile=v.shape[0]),)
+
+
+def partition_batch_entry(v, qs, count):
+    """AOT entry: masked partition fragments for a Q-query batch."""
+    m, se = K.partition_batch_block(v, qs, count)
+    return (m, se)
+
+
+def expect_batch_entry(v, qs, count):
+    """AOT entry: masked expectation fragments for a Q-query batch."""
+    m, se, ws = K.expect_batch_block(v, qs, count)
+    return (m, se, ws)
+
+
+def sq8_screen_entry(codes, q):
+    """AOT entry: exact integer SQ8 screening sums (u8 codes × i16
+    query); the affine dequant stays on the rust host for bit parity."""
+    return (K.sq8_screen_block(codes, q),)
+
+
 # --------------------------------------------------------------------------
 # whole-database compositions (test/reference only; L3 does this in rust)
 # --------------------------------------------------------------------------

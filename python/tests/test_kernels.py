@@ -149,3 +149,91 @@ def test_cpu_and_tpu_schedules_agree():
     tiled = K.scores_block(v, q)
     whole = K.scores_block(v, q, tile=v.shape[0])
     np.testing.assert_allclose(tiled, whole, rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------------------------------------------------
+# batched kernels (PR 10): one row block, a whole query group
+# -------------------------------------------------------------------------
+
+def rand_batch(b, d, qn, scale=1.0):
+    v = RNG.normal(size=(b, d)).astype(np.float32) * scale
+    qs = RNG.normal(size=(qn, d)).astype(np.float32) * scale
+    return jnp.asarray(v), jnp.asarray(qs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    d=st.integers(min_value=1, max_value=48),
+    qn=st.integers(min_value=1, max_value=9),
+)
+def test_scores_batch_matches_per_query(b, d, qn):
+    v, qs = rand_batch(b, d, qn)
+    got = K.scores_batch_block(v, qs)
+    assert got.shape == (qn, b)
+    for j in range(qn):
+        np.testing.assert_allclose(got[j], ref.scores(v, qs[j]), rtol=1e-5, atol=1e-5)
+
+
+def test_scores_batch_tiled_matches_whole_block():
+    # row-tiled grid (TPU shape) vs the one-step CPU AOT schedule
+    v, qs = rand_batch(2 * K.TILE, 32, 8)
+    tiled = K.scores_batch_block(v, qs)
+    whole = K.scores_batch_block(v, qs, tile=v.shape[0])
+    np.testing.assert_allclose(tiled, whole, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=2, max_value=200),
+    d=st.integers(min_value=1, max_value=48),
+    qn=st.integers(min_value=1, max_value=9),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+)
+def test_partition_batch_matches_per_query(b, d, qn, frac):
+    v, qs = rand_batch(b, d, qn)
+    count = max(1, int(b * frac))
+    m, se = K.partition_batch_block(v, qs, jnp.int32(count))
+    for j in range(qn):
+        rm, rse = ref.partition(v, qs[j], jnp.int32(count))
+        np.testing.assert_allclose(m[j], rm, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(se[j], rse, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=2, max_value=200),
+    d=st.integers(min_value=1, max_value=48),
+    qn=st.integers(min_value=1, max_value=9),
+    frac=st.floats(min_value=0.05, max_value=1.0),
+)
+def test_expect_batch_matches_per_query(b, d, qn, frac):
+    v, qs = rand_batch(b, d, qn)
+    count = max(1, int(b * frac))
+    m, se, ws = K.expect_batch_block(v, qs, jnp.int32(count))
+    assert ws.shape == (qn, d)
+    for j in range(qn):
+        rm, rse, rws = ref.expect(v, qs[j], jnp.int32(count))
+        np.testing.assert_allclose(m[j], rm, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(se[j], rse, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(ws[j], rws, rtol=1e-4, atol=1e-4)
+
+
+def test_batch_padding_rows_ignored():
+    # masked rows' content must not affect any query's fragments
+    v, qs = rand_batch(96, 12, 5)
+    v2 = v.at[80:].set(-777.0)
+    out1 = K.expect_batch_block(v, qs, jnp.int32(80))
+    out2 = K.expect_batch_block(v2, qs, jnp.int32(80))
+    for a, b_ in zip(out1, out2):
+        np.testing.assert_allclose(a, b_)
+
+
+def test_sq8_screen_exact_integer_sums():
+    # the screen's contract is EXACT integer sums (dequant is host-side)
+    codes = RNG.integers(0, 256, size=(200, 48), dtype=np.uint8)
+    q = RNG.integers(-(2 ** 15), 2 ** 15, size=(48,), dtype=np.int16)
+    got = K.sq8_screen_block(jnp.asarray(codes), jnp.asarray(q))
+    assert got.dtype == jnp.int32
+    want = codes.astype(np.int64) @ q.astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.int64), want)

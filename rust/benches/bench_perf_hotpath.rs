@@ -9,8 +9,11 @@
 //! SQ8/SQ4/PQ quantized scans vs f32 scan (plus the end-to-end
 //! two-stage/ladder brute top-k) and the register-blocked multi-query
 //! integer kernel vs sequential single-query scoring
-//! (`quant_batch_kernel_speedup`) on a ≥100k × 128 dataset, sharded
-//! fan-out scan at 1/4/8
+//! (`quant_batch_kernel_speedup`) on a ≥100k × 128 dataset, the PQ
+//! fast-scan tile batched scan vs the plane-major batched LUT scan on
+//! the same dataset (`pq_fastscan_speedup`), the PJRT batched
+//! executable vs the per-query executable loop when artifacts exist
+//! (`pjrt_batch_speedup`), sharded fan-out scan at 1/4/8
 //! shards on the same dataset (`shard_scan_speedup`), sharded
 //! Algorithm-4 expect-features vs monolithic on the same dataset
 //! (`sharded_expect_speedup`), the obs metrics/trace instrumentation
@@ -146,6 +149,7 @@ fn main() {
     record(&mut results, s, Some(2.0 * block_flops));
 
     // ---- PJRT block scoring (optional) ----------------------------------------
+    let mut pjrt_batch_speedup: Option<f64> = None;
     if std::path::Path::new("artifacts/manifest.json").exists() {
         match PjrtScorer::load("artifacts") {
             Ok(scorer) if scorer.d() == d => {
@@ -158,6 +162,27 @@ fn main() {
                     std::hint::black_box(sc.max_sumexp(rows, d, &q));
                 });
                 record(&mut results, s, None);
+                // batched executable vs the per-query executable loop:
+                // with a `scores_batch` artifact each row block crosses
+                // the device boundary once per 8-query group
+                let s = bench.run("pjrt scores 4096x64 x8q sequential", || {
+                    for j in 0..NQ {
+                        let (qj, oj) = (
+                            &qflat[j * d..(j + 1) * d],
+                            &mut out_multi[j * block..(j + 1) * block],
+                        );
+                        sc.scores(std::hint::black_box(rows), d, qj, oj);
+                    }
+                });
+                let seq_mean = s.mean_s;
+                record(&mut results, s, Some(block_flops * NQ as f64));
+                let s = bench.run("pjrt scores_batch 4096x64 x8q", || {
+                    sc.scores_batch(std::hint::black_box(rows), d, &qflat, NQ, &mut out_multi);
+                });
+                let speedup = seq_mean / s.mean_s;
+                pjrt_batch_speedup = Some(speedup);
+                record(&mut results, s, Some(block_flops * NQ as f64));
+                println!("pjrt 8-query batch speedup vs 8 sequential: {speedup:.2}x");
             }
             _ => println!("(skipping pjrt benches: artifacts missing/unloadable or wrong d)"),
         }
@@ -230,6 +255,7 @@ fn main() {
     let sq4_scan_speedup;
     let pq_scan_speedup;
     let quant_batch_kernel_speedup;
+    let pq_fastscan_speedup;
     {
         use gmips::linalg::quant::{QuantQuery, QuantView};
         use gmips::mips::brute::BruteForce;
@@ -381,6 +407,48 @@ fn main() {
             println!(
                 "sq8 multi-query kernel speedup vs 8 sequential: {quant_batch_kernel_speedup:.2}x"
             );
+        }
+
+        // ---- PQ fast-scan tiles: plane-major batched scan vs tile dispatch -
+        // acceptance (PR 10): on 8-query batches the register-resident
+        // 32-row nibble tiles (one shuffle per subspace serving a
+        // 4-query block) must beat the plane-major batched LUT scan over
+        // the full ≥100k × 128 dataset; dispatch is bit-identical by the
+        // tiled-parity property tests, so only throughput is at stake
+        {
+            use gmips::linalg::pq::{PqLut, PqView};
+            let pv = PqView::train(&qds.data, qd, qd / 8, 4, 4096, 8, 17);
+            assert!(pv.serves_fastscan(NQ), "bench PQ view must carry fast-scan tiles");
+            let mut qrng3 = Pcg64::new(31);
+            let qs_owned: Vec<Vec<f32>> = (0..NQ)
+                .map(|_| data::random_theta(&qds, cfg.data.temperature, &mut qrng3))
+                .collect();
+            let luts: Vec<PqLut> = qs_owned.iter().map(|t| pv.encode_query(t)).collect();
+            let lut_refs: Vec<&PqLut> = luts.iter().collect();
+            let mut out_multi = vec![0f32; NQ * 4096];
+            let s = bench.run(&format!("pq plane scores_batch x8q {qn}x{qd}"), || {
+                let mut start = 0;
+                while start < qn {
+                    let end = (start + 4096).min(qn);
+                    let out = &mut out_multi[..NQ * (end - start)];
+                    pv.scores_batch_plane(start, end, std::hint::black_box(&lut_refs), out);
+                    start = end;
+                }
+            });
+            let plane_mean = s.mean_s;
+            record(&mut results, s, Some(scan_flops * NQ as f64));
+            let s = bench.run(&format!("pq fastscan scores_batch x8q {qn}x{qd}"), || {
+                let mut start = 0;
+                while start < qn {
+                    let end = (start + 4096).min(qn);
+                    let out = &mut out_multi[..NQ * (end - start)];
+                    pv.scores_batch(start, end, std::hint::black_box(&lut_refs), out);
+                    start = end;
+                }
+            });
+            pq_fastscan_speedup = plane_mean / s.mean_s;
+            record(&mut results, s, Some(scan_flops * NQ as f64));
+            println!("pq fast-scan batched speedup vs plane: {pq_fastscan_speedup:.2}x");
         }
     }
 
@@ -606,7 +674,7 @@ fn main() {
             Json::obj(kv)
         })
         .collect();
-    let doc = Json::obj(vec![
+    let mut top = vec![
         ("bench", Json::str("perf_hotpath")),
         ("kernel", Json::str(simd::kernel().name())),
         ("n", Json::num(ds.n as f64)),
@@ -616,11 +684,16 @@ fn main() {
         ("sq4_scan_speedup", Json::num(sq4_scan_speedup)),
         ("pq_scan_speedup", Json::num(pq_scan_speedup)),
         ("quant_batch_kernel_speedup", Json::num(quant_batch_kernel_speedup)),
+        ("pq_fastscan_speedup", Json::num(pq_fastscan_speedup)),
         ("obs_overhead_pct", Json::num(obs_overhead_pct)),
         ("shard_scan_speedup", Json::num(shard_scan_speedup)),
         ("sharded_expect_speedup", Json::num(sharded_expect_speedup)),
-        ("stages", Json::Arr(stages)),
-    ]);
+    ];
+    if let Some(v) = pjrt_batch_speedup {
+        top.push(("pjrt_batch_speedup", Json::num(v)));
+    }
+    top.push(("stages", Json::Arr(stages)));
+    let doc = Json::obj(top);
     // temp-file + rename so a crash mid-write never leaves a truncated
     // JSON for downstream tooling to choke on
     match write_atomic("BENCH_perf_hotpath.json", doc.to_string().as_bytes()) {

@@ -51,6 +51,33 @@
 //! rows. The bound is far looser than SQ8's, so PQ certifies less often
 //! — a miss rides the tier ladder (`mips::two_stage`) down to SQ8/f32
 //! and correctness never depends on it firing.
+//!
+//! ## Fast-scan tiles (register-resident batched scan)
+//!
+//! The plane-major layout is optimal for one query but makes a batch
+//! re-read every code byte per query: the [`PQ_CHUNK`] segments stay
+//! L1-resident across the batch, yet each query still re-issues all the
+//! loads and nibble unpacking. The FAISS-style **fast-scan** layout
+//! re-blocks the 4-bit codes into [`FS_TILE`] = 32-row tiles, tile-major
+//! `tiles[tile][sub][16 bytes]`: the 16 packed bytes a tile needs from
+//! subspace `sub` sit contiguously, so a 4-query register block loads
+//! and unpacks each subspace's codes **once** and runs four
+//! `pshufb`/`tbl` gathers against them — codes stay in registers across
+//! the query dimension, with u16 lane accumulators carried per query per
+//! tile (exact for `m ≤ 256`, the same guard as the single-query
+//! kernel). Because tile byte `b` is plane byte `16·tile + b` verbatim,
+//! re-blocking is a pure copy and the integer sums are the **identical
+//! integers** the plane kernels produce; the per-row affine conversion
+//! is shared, so fast-scan output is bit-identical to the plane path on
+//! every rung of the certificate contract (property-tested, and pinned
+//! to the scalar reference under `GMIPS_FORCE_SCALAR`/Miri).
+//!
+//! [`PqView::scores_batch`] dispatches to the tiles for batches of
+//! [`FS_MIN_BATCH`] = 4+ queries when the view carries them (4-bit
+//! codes, `m ≤ 256`, `n ≥ 32`); ragged heads/tails of a row range and
+//! leftover queries ride the plane path. Tiles persist as their own
+//! snapshot section and are re-blocked in memory when absent (old
+//! snapshots) — see `save_sections`/`open_sections`.
 
 use crate::error::Result;
 use crate::linalg::simd::{self, Kernel};
@@ -61,6 +88,15 @@ use crate::store::format::{tag, ByteWriter, Snapshot, SnapshotWriter};
 /// Rows per scoring chunk (keeps the u32 scratch on the stack and the
 /// plane segments L1-resident across a batch's queries).
 const PQ_CHUNK: usize = 256;
+
+/// Rows per fast-scan tile: one 16-byte packed-nibble group per subspace
+/// (32 rows × 4 bits = 16 bytes — exactly one `pshufb`/`tbl` shuffle).
+pub const FS_TILE: usize = 32;
+
+/// Smallest batch the fast-scan path serves: a 4-query register block is
+/// the unit the tiled kernels amortize code loads over (module docs);
+/// below it the plane path is the better schedule.
+pub const FS_MIN_BATCH: usize = 4;
 
 /// Product-quantized shadow copy of a row-major `[n × d]` f32 matrix.
 #[derive(Clone, Debug)]
@@ -85,6 +121,10 @@ pub struct PqView {
     codes: Blob<u8>,
     /// bytes per plane
     stride: usize,
+    /// fast-scan tile-major codes `[n/32 tiles × m subspaces × 16 bytes]`
+    /// (module docs); empty when the view is not fast-scan eligible
+    /// (bits ≠ 4, m > 256, or n < 32); owned or snapshot-mapped
+    tiles: Blob<u8>,
     /// per-subspace max residual norm `max_r ‖x_sub − cent(code)‖₂`
     maxres: Vec<f32>,
     /// `max |x|` over the encoded matrix (fp-slack ingredient)
@@ -137,6 +177,7 @@ impl PqView {
             csub: vec![0usize; m],
             codes: vec![0u8; m * stride].into(),
             stride,
+            tiles: Vec::new().into(),
             maxres: vec![0f32; m],
             max_abs: 0.0,
         };
@@ -224,6 +265,58 @@ impl PqView {
             codes[s0 * stride..(s0 + nsub) * stride].copy_from_slice(&planes);
             self.maxres[s0..s0 + nsub].copy_from_slice(&worsts);
         }
+        // re-block the fast-scan tiles against the fresh planes — the
+        // compact()/update coherence hook for the tiled layout
+        self.rebuild_tiles();
+    }
+
+    /// Whether this view's shape can carry fast-scan tiles: 4-bit codes
+    /// (16-entry in-register LUT), `m ≤ 256` (exact u16 accumulators),
+    /// and at least one full 32-row tile.
+    fn fastscan_eligible(&self) -> bool {
+        self.bits == 4 && self.m <= 256 && self.n >= FS_TILE
+    }
+
+    /// Bytes the fast-scan tile blob must hold: `⌊n/32⌋` tiles × m
+    /// subspaces × 16 packed bytes.
+    fn tile_bytes(&self) -> usize {
+        (self.n / FS_TILE) * self.m * 16
+    }
+
+    /// Whether the tiled layout is present and will serve batches.
+    pub fn fastscan_ready(&self) -> bool {
+        !self.tiles.is_empty()
+    }
+
+    /// Whether [`scores_batch`](Self::scores_batch) will serve a batch of
+    /// `nq` queries from the fast-scan tiles (the `layout` the obs
+    /// counters attribute screened rows to).
+    pub fn serves_fastscan(&self, nq: usize) -> bool {
+        nq >= FS_MIN_BATCH && self.fastscan_ready()
+    }
+
+    /// (Re-)derive the tile-major fast-scan blob from the plane-major
+    /// codes. Tile byte `b` of subspace `sub` is plane byte
+    /// `sub·stride + 16·tile + b` **verbatim** — a tile starts at row
+    /// `32·tile` (even), so the nibble phase of the packed bytes is
+    /// unchanged and re-blocking is a pure gather copy; rows past the
+    /// last full tile stay plane-only and ride the scalar/plane tail
+    /// paths.
+    fn rebuild_tiles(&mut self) {
+        if !self.fastscan_eligible() {
+            self.tiles = Vec::new().into();
+            return;
+        }
+        let nt = self.n / FS_TILE;
+        let mut t = vec![0u8; nt * self.m * 16];
+        for ti in 0..nt {
+            for sub in 0..self.m {
+                let src = sub * self.stride + ti * 16;
+                let dst = (ti * self.m + sub) * 16;
+                t[dst..dst + 16].copy_from_slice(&self.codes[src..src + 16]);
+            }
+        }
+        self.tiles = t.into();
     }
 
     /// Number of encoded rows.
@@ -355,11 +448,32 @@ impl PqView {
     }
 
     /// Multi-query PQ scores — query-major
-    /// `out[j·nr + i] = Q_{row_start+i}(luts[j])`. The whole batch works
-    /// through each [`PQ_CHUNK`]-row segment of the (tiny) code planes
-    /// while it is L1-resident, so codes stream from memory once per
-    /// batch. Bit-identical to per-query [`scores`](Self::scores) calls.
+    /// `out[j·nr + i] = Q_{row_start+i}(luts[j])`. Batches of
+    /// [`FS_MIN_BATCH`]+ queries on a fast-scan-ready view serve from the
+    /// register-resident tiles ([`scores_batch_fastscan`]); everything
+    /// else takes the plane path. Both are bit-identical to per-query
+    /// [`scores`](Self::scores) calls (module docs), so the dispatch is
+    /// invisible to the certificate contract.
     pub fn scores_batch(
+        &self,
+        row_start: usize,
+        row_end: usize,
+        luts: &[&PqLut],
+        out: &mut [f32],
+    ) {
+        if self.serves_fastscan(luts.len()) {
+            self.scores_batch_fastscan(row_start, row_end, luts, out);
+        } else {
+            self.scores_batch_plane(row_start, row_end, luts, out);
+        }
+    }
+
+    /// Plane-major multi-query scores: the whole batch works through each
+    /// [`PQ_CHUNK`]-row segment of the (tiny) code planes while it is
+    /// L1-resident, so codes stream from memory once per batch — but each
+    /// query still re-issues the loads and nibble unpacking. Public so
+    /// the perf bench can hold it against the tiled path.
+    pub fn scores_batch_plane(
         &self,
         row_start: usize,
         row_end: usize,
@@ -383,6 +497,102 @@ impl PqView {
                 }
             }
             r = e;
+        }
+    }
+
+    /// Fast-scan multi-query scores over the 32-row tiles (module docs):
+    /// the tile-aligned middle of `[row_start, row_end)` is served per
+    /// 4-query register block — each subspace's 16 code bytes are loaded
+    /// and unpacked once per block and gathered against all four queries'
+    /// LUTs with u16 lane accumulators carried across subspaces — while
+    /// the ragged head/tail rows and any leftover (`nq mod 4`) queries
+    /// ride the plane path. Integer sums equal the plane kernels' and the
+    /// affine conversion is shared, so output is bit-identical to
+    /// [`scores_batch_plane`](Self::scores_batch_plane).
+    pub fn scores_batch_fastscan(
+        &self,
+        row_start: usize,
+        row_end: usize,
+        luts: &[&PqLut],
+        out: &mut [f32],
+    ) {
+        debug_assert!(row_start <= row_end && row_end <= self.n);
+        debug_assert!(self.fastscan_ready() && self.bits == 4);
+        let nr = row_end - row_start;
+        let nq = luts.len();
+        debug_assert_eq!(out.len(), nq * nr);
+        let tile_lo = row_start.next_multiple_of(FS_TILE);
+        // full tiles only: rows past ⌊n/32⌋·32 have no tile at all
+        let tile_hi = (row_end / FS_TILE) * FS_TILE;
+        if tile_lo >= tile_hi {
+            return self.scores_batch_plane(row_start, row_end, luts, out);
+        }
+        // ragged head/tail rows: plane path per query (bit-identical by
+        // the shared integer/affine arithmetic)
+        for (j, lut) in luts.iter().enumerate() {
+            if row_start < tile_lo {
+                let h = tile_lo - row_start;
+                self.scores(row_start, tile_lo, lut, &mut out[j * nr..j * nr + h]);
+            }
+            if tile_hi < row_end {
+                let o = tile_hi - row_start;
+                self.scores(tile_hi, row_end, lut, &mut out[j * nr + o..j * nr + nr]);
+            }
+        }
+        let groups = nq / 4 * 4;
+        let mut sums = [0u32; 4 * FS_TILE];
+        let tbytes = self.m * 16;
+        for t in tile_lo / FS_TILE..tile_hi / FS_TILE {
+            let base = t * FS_TILE - row_start;
+            let tile = &self.tiles[t * tbytes..(t + 1) * tbytes];
+            let mut j = 0;
+            while j < groups {
+                self.fs_accum_tile4(
+                    tile,
+                    [&luts[j].lut, &luts[j + 1].lut, &luts[j + 2].lut, &luts[j + 3].lut],
+                    &mut sums,
+                );
+                for (g, lut) in luts[j..j + 4].iter().enumerate() {
+                    let dst = (j + g) * nr + base;
+                    let qsums = &sums[g * FS_TILE..(g + 1) * FS_TILE];
+                    for (o, &a) in out[dst..dst + FS_TILE].iter_mut().zip(qsums) {
+                        *o = (lut.scale * a as f64 + lut.off_sum) as f32;
+                    }
+                }
+                j += 4;
+            }
+        }
+        // leftover queries (nq mod 4) score the tiled middle on the
+        // plane path
+        for (j, lut) in luts.iter().enumerate().skip(groups) {
+            let o0 = tile_lo - row_start;
+            let o1 = tile_hi - row_start;
+            self.scores(tile_lo, tile_hi, lut, &mut out[j * nr + o0..j * nr + o1]);
+        }
+    }
+
+    /// Integer LUT sums of one fast-scan tile for a 4-query register
+    /// block: `sums[qi·32 + r] = Σ_sub lut_qi[sub][code(row, sub)]` for
+    /// the tile's 32 rows. Dispatches on the one-time CPU probe; every
+    /// kernel computes the identical integers (and exactly the integers
+    /// [`accum_scalar`](Self::accum_scalar) computes for the same rows).
+    fn fs_accum_tile4(&self, tile: &[u8], luts: [&[u8]; 4], sums: &mut [u32; 4 * FS_TILE]) {
+        debug_assert_eq!(tile.len(), self.m * 16);
+        debug_assert_eq!(self.bits, 4);
+        debug_assert!(self.m <= 256);
+        debug_assert!(luts.iter().all(|l| l.len() >= self.m * self.k));
+        match simd::kernel() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: avx2 verified by `simd::detect()`; the fast-scan
+            // eligibility gate pins bits == 4 (k = 16-byte subspace LUTs)
+            // and m ≤ 256 (exact u16 lanes); tile/LUT sizes are
+            // debug-asserted above — the kernel's contract.
+            Kernel::Avx2 => unsafe { fs_tile4_avx2(tile, self.m, self.k, luts, sums) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON verified by `simd::detect()`; same
+            // eligibility/size argument as the AVX2 arm.
+            Kernel::Neon => unsafe { fs_tile4_neon(tile, self.m, self.k, luts, sums) },
+            _ => fs_tile4_scalar(tile, self.m, self.k, luts, sums),
         }
     }
 
@@ -587,7 +797,13 @@ impl PqView {
 // ---------------------------------------------------------------------------
 
 impl PqView {
-    /// Write this view as `PQ_META` + `PQ_CODES` sections under `arg`.
+    /// Write this view as `PQ_META` + `PQ_CODES` (+ `PQ_TILES` when the
+    /// fast-scan layout is carried) sections under `arg`. The tiles
+    /// section is *optional* by design: snapshots from before the tiled
+    /// layout lack it and still open (see
+    /// [`open_sections`](Self::open_sections)), so the section tag is the
+    /// format's version gate — no header-version bump, old files never
+    /// error.
     pub(crate) fn save_sections(&self, w: &mut SnapshotWriter, arg: u32) -> Result<()> {
         let mut m = ByteWriter::default();
         m.u64(self.m as u64);
@@ -603,12 +819,21 @@ impl PqView {
         m.slice(&self.maxres);
         m.slice(&self.cents);
         w.section(tag::PQ_META, arg, m.bytes())?;
-        w.section(tag::PQ_CODES, arg, &self.codes)
+        w.section(tag::PQ_CODES, arg, &self.codes)?;
+        if self.fastscan_ready() {
+            w.section(tag::PQ_TILES, arg, &self.tiles)?;
+        }
+        Ok(())
     }
 
-    /// Reopen from a snapshot; the code planes serve zero-copy when the
-    /// snapshot is mapped. `None` when the sections are missing, corrupt,
-    /// or shape-inconsistent — the tier ladder then degrades.
+    /// Reopen from a snapshot; the code planes (and fast-scan tiles)
+    /// serve zero-copy when the snapshot is mapped. `None` when the
+    /// META/CODES sections are missing, corrupt, or shape-inconsistent —
+    /// the tier ladder then degrades. The `PQ_TILES` section is **soft in
+    /// a stronger sense**: a snapshot written before the tiled layout (or
+    /// with a corrupt/mis-shaped tiles section) re-blocks the tiles in
+    /// memory from the validated plane codes — a one-time migration, with
+    /// bit-identical answers, never an error and never a degrade.
     pub(crate) fn open_sections(snap: &Snapshot, arg: u32) -> Option<PqView> {
         let mut r = snap.reader_soft(tag::PQ_META, arg)?;
         let m = r.usize().ok()?;
@@ -640,7 +865,31 @@ impl PqView {
         {
             return None;
         }
-        Some(PqView { m, dsub, k, bits, n, d, cents, csub, codes, stride, maxres, max_abs })
+        let mut pv = PqView {
+            m,
+            dsub,
+            k,
+            bits,
+            n,
+            d,
+            cents,
+            csub,
+            codes,
+            stride,
+            tiles: Vec::new().into(),
+            maxres,
+            max_abs,
+        };
+        if pv.fastscan_eligible() {
+            match snap.blob_soft(tag::PQ_TILES, arg) {
+                Some(t) if t.len() == pv.tile_bytes() => pv.tiles = t,
+                // pre-tiles snapshot, or a corrupt/mis-shaped tiles
+                // section: one-time in-memory re-block from the plane
+                // codes (the migration path — never an error)
+                _ => pv.rebuild_tiles(),
+            }
+        }
+        Some(pv)
     }
 }
 
@@ -663,6 +912,168 @@ unsafe fn store_u16_as_u32(v: std::arch::x86_64::__m256i, dst: *mut u32) {
         let hi = _mm256_extracti128_si256::<1>(v);
         _mm256_storeu_si256(dst.cast::<__m256i>(), _mm256_cvtepu16_epi32(lo));
         _mm256_storeu_si256(dst.add(8).cast::<__m256i>(), _mm256_cvtepu16_epi32(hi));
+    }
+}
+
+/// Scalar fast-scan tile kernel — the dispatch fallback and the test /
+/// Miri reference. Tile byte `b` of subspace group `sub` packs rows
+/// `2b` (low nibble) and `2b + 1` (high nibble) of the tile, exactly as
+/// the plane bytes it was copied from, so each sum is the same integer
+/// [`PqView::accum_scalar`] computes for that row.
+fn fs_tile4_scalar(
+    tile: &[u8],
+    m: usize,
+    k: usize,
+    luts: [&[u8]; 4],
+    sums: &mut [u32; 4 * FS_TILE],
+) {
+    debug_assert_eq!(tile.len(), m * 16);
+    sums.fill(0);
+    for sub in 0..m {
+        let grp = &tile[sub * 16..sub * 16 + 16];
+        for (qi, lut) in luts.iter().enumerate() {
+            let l = &lut[sub * k..sub * k + 16];
+            let s = &mut sums[qi * FS_TILE..(qi + 1) * FS_TILE];
+            for (b, &byte) in grp.iter().enumerate() {
+                s[2 * b] += l[(byte & 0x0f) as usize] as u32;
+                s[2 * b + 1] += l[(byte >> 4) as usize] as u32;
+            }
+        }
+    }
+}
+
+/// AVX2 fast-scan tile kernel: per subspace, ONE 16-byte code load +
+/// nibble unpack feeds FOUR `pshufb` LUT gathers — codes stay in
+/// registers across the query dimension. Eight u16-lane accumulators
+/// (2 per query: rows 0..16 / 16..32) are carried across all `m`
+/// subspaces (exact: `m ≤ 256` ⇒ sums ≤ 255·256 < 2¹⁶) and widen to u32
+/// on store. The unpack order matches [`PqView::accum4_avx2`], so per-row
+/// integers equal the single-query kernel's.
+///
+/// # Safety
+/// Caller must guarantee AVX2 availability (guaranteed via
+/// [`crate::linalg::simd::kernel`]), `tile.len() == m·16`, `k == 16`
+/// (4-bit codes), `m ≤ 256`, and every LUT valid for `m·k` byte reads.
+// See `linalg::simd`'s `avx2` module for why `unused_unsafe` is
+// tolerated on the SIMD kernels.
+#[cfg(target_arch = "x86_64")]
+#[allow(unused_unsafe)]
+#[target_feature(enable = "avx2")]
+unsafe fn fs_tile4_avx2(
+    tile: &[u8],
+    m: usize,
+    k: usize,
+    luts: [&[u8]; 4],
+    sums: &mut [u32; 4 * FS_TILE],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+    debug_assert_eq!(tile.len(), m * 16);
+    debug_assert_eq!(k, 16);
+    debug_assert!(m <= 256);
+    debug_assert!(luts.iter().all(|l| l.len() >= m * k));
+    // SAFETY: value-only constant splat / accumulator zeroing.
+    let mask = unsafe { _mm_set1_epi8(0x0f) };
+    // SAFETY: value-only accumulator zeroing.
+    let mut acc = unsafe { [[_mm256_setzero_si256(); 2]; 4] };
+    for sub in 0..m {
+        // SAFETY: tile.len() == m·16, so the 16-byte load at sub·16 reads
+        // bytes sub·16..sub·16+16 ≤ m·16 — in bounds; the nibble split is
+        // value-only.
+        let (lo, hi) = unsafe {
+            let raw = _mm_loadu_si128(tile.as_ptr().add(sub * 16).cast::<__m128i>());
+            (_mm_and_si128(raw, mask), _mm_and_si128(_mm_srli_epi16::<4>(raw), mask))
+        };
+        for (qi, lut) in luts.iter().enumerate() {
+            // SAFETY: the 16-byte LUT load reads lut[sub·k..sub·k+16]
+            // with k = 16 and lut.len() ≥ m·k; the shuffle/unpack/widen/
+            // add chain is value-only.
+            unsafe {
+                let tbl = _mm_loadu_si128(lut.as_ptr().add(sub * k).cast::<__m128i>());
+                let tlo = _mm_shuffle_epi8(tbl, lo);
+                let thi = _mm_shuffle_epi8(tbl, hi);
+                let even = _mm_unpacklo_epi8(tlo, thi); // tile rows 0..16 in order
+                let odd = _mm_unpackhi_epi8(tlo, thi); // tile rows 16..32
+                acc[qi][0] = _mm256_add_epi16(acc[qi][0], _mm256_cvtepu8_epi16(even));
+                acc[qi][1] = _mm256_add_epi16(acc[qi][1], _mm256_cvtepu8_epi16(odd));
+            }
+        }
+    }
+    for (qi, a) in acc.iter().enumerate() {
+        // SAFETY: `store_u16_as_u32` writes 16 u32 each at qi·32 and
+        // qi·32 + 16; the largest index touched is 3·32 + 31 = 127 <
+        // sums.len() = 128.
+        unsafe {
+            store_u16_as_u32(a[0], sums.as_mut_ptr().add(qi * FS_TILE));
+            store_u16_as_u32(a[1], sums.as_mut_ptr().add(qi * FS_TILE + 16));
+        }
+    }
+}
+
+/// NEON fast-scan tile kernel: one `vqtbl1q` source load per subspace
+/// serves four queries' table gathers; sixteen u16 accumulators (4 per
+/// query) carried across subspaces, widened to u32 on store. Unzip order
+/// matches [`PqView::accum4_neon`].
+///
+/// # Safety
+/// Same contract as [`fs_tile4_avx2`] with NEON in place of AVX2.
+// See `linalg::simd`'s `avx2` module for why `unused_unsafe` is
+// tolerated on the SIMD kernels.
+#[cfg(target_arch = "aarch64")]
+#[allow(unused_unsafe)]
+#[target_feature(enable = "neon")]
+unsafe fn fs_tile4_neon(
+    tile: &[u8],
+    m: usize,
+    k: usize,
+    luts: [&[u8]; 4],
+    sums: &mut [u32; 4 * FS_TILE],
+) {
+    use std::arch::aarch64::*;
+    debug_assert!(std::arch::is_aarch64_feature_detected!("neon"));
+    debug_assert_eq!(tile.len(), m * 16);
+    debug_assert_eq!(k, 16);
+    debug_assert!(m <= 256);
+    debug_assert!(luts.iter().all(|l| l.len() >= m * k));
+    // SAFETY: value-only accumulator zeroing.
+    let mut acc = unsafe { [[vdupq_n_u16(0); 4]; 4] };
+    for sub in 0..m {
+        // SAFETY: tile.len() == m·16, so the 16-byte load at sub·16 is in
+        // bounds; the nibble split is value-only.
+        let (lo, hi) = unsafe {
+            let raw = vld1q_u8(tile.as_ptr().add(sub * 16));
+            (vandq_u8(raw, vdupq_n_u8(0x0f)), vshrq_n_u8::<4>(raw))
+        };
+        for (qi, lut) in luts.iter().enumerate() {
+            // SAFETY: the LUT load reads lut[sub·k..sub·k+16] with k = 16
+            // and lut.len() ≥ m·k; the tbl/zip/widening-add chain is
+            // value-only.
+            unsafe {
+                let tbl = vld1q_u8(lut.as_ptr().add(sub * k));
+                let tlo = vqtbl1q_u8(tbl, lo);
+                let thi = vqtbl1q_u8(tbl, hi);
+                let even = vzip1q_u8(tlo, thi); // tile rows 0..16 in order
+                let odd = vzip2q_u8(tlo, thi); // tile rows 16..32
+                acc[qi][0] = vaddw_u8(acc[qi][0], vget_low_u8(even));
+                acc[qi][1] = vaddw_u8(acc[qi][1], vget_high_u8(even));
+                acc[qi][2] = vaddw_u8(acc[qi][2], vget_low_u8(odd));
+                acc[qi][3] = vaddw_u8(acc[qi][3], vget_high_u8(odd));
+            }
+        }
+    }
+    for (qi, a) in acc.iter().enumerate() {
+        for (t, &av) in a.iter().enumerate() {
+            // SAFETY: the two 4-lane stores per accumulator write
+            // sums[qi·32 + t·8 .. qi·32 + t·8 + 8]; the largest index is
+            // 3·32 + 3·8 + 7 = 127 < sums.len() = 128.
+            unsafe {
+                vst1q_u32(sums.as_mut_ptr().add(qi * FS_TILE + t * 8), vmovl_u16(vget_low_u16(av)));
+                vst1q_u32(
+                    sums.as_mut_ptr().add(qi * FS_TILE + t * 8 + 4),
+                    vmovl_u16(vget_high_u16(av)),
+                );
+            }
+        }
     }
 }
 
@@ -829,6 +1240,122 @@ mod tests {
             let mut w = vec![0u32; 5];
             pv.accum_scalar(1, 6, &lut.lut, &mut w);
             assert_eq!(a, w, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn fastscan_batch_bit_identical_to_plane() {
+        // the tentpole contract: the tiled path must produce bit-identical
+        // f32 scores to the plane-major batch path, across ragged row
+        // ranges (unaligned starts/ends — tile boundaries hit mid-range),
+        // batch sizes around the 4-query register block, and n not a
+        // multiple of the tile height
+        let (n, d, m) = (301usize, 16usize, 8usize);
+        let rows = random_rows(n, d, 41);
+        let pv = PqView::train(&rows, d, m, 4, n, 4, 43);
+        assert!(pv.fastscan_ready());
+        let mut rng = Pcg64::new(45);
+        let qs: Vec<Vec<f32>> = (0..9)
+            .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let luts: Vec<PqLut> = qs.iter().map(|q| pv.encode_query(q)).collect();
+        for nq in [4usize, 5, 8, 9] {
+            let refs: Vec<&PqLut> = luts[..nq].iter().collect();
+            for (s, e) in [(0usize, 301usize), (1, 300), (17, 290), (0, 64), (31, 33), (64, 96)] {
+                let nr = e - s;
+                let mut fast = vec![0f32; nq * nr];
+                pv.scores_batch_fastscan(s, e, &refs, &mut fast);
+                let mut plane = vec![0f32; nq * nr];
+                pv.scores_batch_plane(s, e, &refs, &mut plane);
+                for (i, (a, b)) in fast.iter().zip(&plane).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "nq={nq} range=({s},{e}) i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fastscan_dispatch_and_eligibility() {
+        // scores_batch must route 4+-query batches through the tiles and
+        // smaller batches / ineligible shapes through the plane path,
+        // with identical bits either way; 8-bit and tiny-n views carry no
+        // tiles at all
+        let (n, d, m) = (96usize, 8usize, 4usize);
+        let rows = random_rows(n, d, 51);
+        let pv = PqView::train(&rows, d, m, 4, n, 4, 53);
+        assert!(pv.serves_fastscan(4) && !pv.serves_fastscan(3));
+        let pv8 = PqView::train(&rows, d, m, 8, n, 4, 53);
+        assert!(!pv8.fastscan_ready());
+        let tiny = PqView::train(&rows[..16 * d], d, m, 4, 16, 4, 53);
+        assert!(!tiny.fastscan_ready());
+        let mut rng = Pcg64::new(55);
+        let qs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let luts: Vec<PqLut> = qs.iter().map(|q| pv.encode_query(q)).collect();
+        let refs: Vec<&PqLut> = luts.iter().collect();
+        let mut auto = vec![0f32; 4 * n];
+        pv.scores_batch(0, n, &refs, &mut auto);
+        let mut plane = vec![0f32; 4 * n];
+        pv.scores_batch_plane(0, n, &refs, &mut plane);
+        for (a, b) in auto.iter().zip(&plane) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fastscan_tiles_follow_reencode() {
+        // compact()-style row rewrites re-encode the planes; the tiles
+        // must be re-blocked against the fresh codes, not serve stale ones
+        let (n, d, m) = (160usize, 8usize, 4usize);
+        let mut rows = random_rows(n, d, 61);
+        let mut pv = PqView::train(&rows, d, m, 4, n, 4, 63);
+        let mut rng = Pcg64::new(65);
+        for x in rows[40 * d..80 * d].iter_mut() {
+            *x = rng.gaussian() as f32 * 2.0;
+        }
+        pv.reencode(&rows);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let luts: Vec<PqLut> = (0..4).map(|_| pv.encode_query(&q)).collect();
+        let refs: Vec<&PqLut> = luts.iter().collect();
+        let mut fast = vec![0f32; 4 * n];
+        pv.scores_batch_fastscan(0, n, &refs, &mut fast);
+        let mut plane = vec![0f32; 4 * n];
+        pv.scores_batch_plane(0, n, &refs, &mut plane);
+        for (a, b) in fast.iter().zip(&plane) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn miri_fastscan_tile_parity_ragged() {
+        // Miri-lane subset (scalar kernels pinned by cfg(miri)): the tile
+        // re-block + scalar tile kernel vs the plane scalar reference on
+        // adversarial shapes — n not a multiple of 32 (ragged tail rows
+        // with no tile), odd m, and row ranges whose ends land on every
+        // nibble phase around a tile boundary
+        for (n, m) in [(67usize, 3usize), (40, 1), (33, 5)] {
+            let d = m * 2; // dsub = 2 keeps the Miri run small
+            let rows = random_rows(n, d, 71 + n as u64);
+            let pv = PqView::train(&rows, d, m, 4, n, 2, 73);
+            assert!(pv.fastscan_ready(), "n={n} m={m}");
+            let mut rng = Pcg64::new(75);
+            let qs: Vec<Vec<f32>> = (0..5)
+                .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+                .collect();
+            let luts: Vec<PqLut> = qs.iter().map(|q| pv.encode_query(q)).collect();
+            // 5 queries: one 4-query tile block + one leftover plane query
+            let refs: Vec<&PqLut> = luts.iter().collect();
+            for (s, e) in [(0usize, n), (1, n - 1), (31, 33.min(n)), (30, n), (32.min(n - 1), n)] {
+                let nr = e - s;
+                let mut fast = vec![0f32; 5 * nr];
+                pv.scores_batch_fastscan(s, e, &refs, &mut fast);
+                let mut plane = vec![0f32; 5 * nr];
+                pv.scores_batch_plane(s, e, &refs, &mut plane);
+                for (a, b) in fast.iter().zip(&plane) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} m={m} range=({s},{e})");
+                }
+            }
         }
     }
 

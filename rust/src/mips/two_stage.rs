@@ -108,7 +108,11 @@ impl QuantTier {
 
     /// Multi-query quantized scores, query-major `[nq × nrows]` — each
     /// code block streams once for the whole batch; output bit-identical
-    /// to per-query [`scores`](Self::scores) calls.
+    /// to per-query [`scores`](Self::scores) calls. On a 4-bit PQ tier
+    /// with built tiles and `nq ≥ `[`crate::linalg::pq::FS_MIN_BATCH`],
+    /// the scan rides the register-resident fast-scan layout
+    /// ([`PqView::scores_batch`] dispatches; [`Self::batch_layout`]
+    /// names the path taken).
     pub fn scores_batch(
         &self,
         row_start: usize,
@@ -132,6 +136,20 @@ impl QuantTier {
         }
     }
 
+    /// Which batched-scan layout a `nq`-query pass-1 screen rides on
+    /// this tier: `"fastscan"` for a 4-bit PQ tier whose register-
+    /// resident tiles serve the batch (built tiles and
+    /// `nq ≥ `[`crate::linalg::pq::FS_MIN_BATCH`]), `"plane"` otherwise.
+    /// Dispatch itself lives in [`PqView::scores_batch`]; this predicate
+    /// mirrors it for the `layout` label on
+    /// `gmips_tier_rows_screened_total` and for describe strings.
+    pub fn batch_layout(&self, nq: usize) -> &'static str {
+        match self {
+            QuantTier::Pq(v) if v.serves_fastscan(nq) => "fastscan",
+            _ => "plane",
+        }
+    }
+
     /// Tier name for logs/describe strings.
     pub fn name(&self) -> &'static str {
         match self {
@@ -152,6 +170,11 @@ pub struct TierBatch<'a> {
     lut: Vec<&'a PqLut>,
     int_sel: Vec<&'a QuantQuery>,
     lut_sel: Vec<&'a PqLut>,
+    /// `gmips_tier_rows_screened_total{layout=...}` handles, interned
+    /// once per batch so the per-block/per-cluster scoring calls touch
+    /// only the cached atomic.
+    rows_plane: std::sync::Arc<crate::obs::Counter>,
+    rows_fastscan: std::sync::Arc<crate::obs::Counter>,
 }
 
 impl<'a> TierBatch<'a> {
@@ -164,7 +187,26 @@ impl<'a> TierBatch<'a> {
             QuantTier::Sq8(_) | QuantTier::Sq4(_) => int.extend(tqs.iter().map(|t| t.int())),
             QuantTier::Pq(_) => lut.extend(tqs.iter().map(|t| t.lut())),
         }
-        TierBatch { tier, int, lut, int_sel: Vec::new(), lut_sel: Vec::new() }
+        let obs = crate::obs::registry();
+        TierBatch {
+            tier,
+            int,
+            lut,
+            int_sel: Vec::new(),
+            lut_sel: Vec::new(),
+            rows_plane: obs.tier_rows_screened.handle("plane"),
+            rows_fastscan: obs.tier_rows_screened.handle("fastscan"),
+        }
+    }
+
+    /// Account `nq × nrows` row-scores to the layout that served them
+    /// (coarse, per scoring call — never per row).
+    fn note_rows(&self, nq: usize, nrows: usize) {
+        let c = match self.tier.batch_layout(nq) {
+            "fastscan" => &self.rows_fastscan,
+            _ => &self.rows_plane,
+        };
+        c.add((nq * nrows) as u64);
     }
 
     /// Multi-query scores for the whole batch, query-major
@@ -176,6 +218,7 @@ impl<'a> TierBatch<'a> {
             QuantTier::Sq4(v) => v.scores_batch(row_start, row_end, &self.int, out),
             QuantTier::Pq(v) => v.scores_batch(row_start, row_end, &self.lut, out),
         }
+        self.note_rows(self.int.len().max(self.lut.len()), row_end - row_start);
     }
 
     /// Multi-query scores for the query subset `qsel` (indices into the
@@ -199,6 +242,7 @@ impl<'a> TierBatch<'a> {
                 v.scores_batch(row_start, row_end, &self.lut_sel, out);
             }
         }
+        self.note_rows(qsel.len(), row_end - row_start);
     }
 }
 
@@ -567,5 +611,39 @@ mod tests {
                 assert!(tier.error_bound(&tq) >= 0.0);
             }
         }
+    }
+
+    #[test]
+    fn batch_layout_tracks_fastscan_dispatch() {
+        let mut rng = Pcg64::new(7);
+        let (n, d) = (200usize, 16usize);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.gaussian() as f32).collect();
+        let mut cfg = Config::default().index;
+        cfg.quant = crate::config::QuantKind::Pq;
+        cfg.pq_bits = 4;
+        let ladder = TierLadder::from_cfg(&rows, d, &cfg).unwrap();
+        let pq = ladder.primary();
+        // the label predicate mirrors PqView's dispatch thresholds
+        assert_eq!(pq.batch_layout(crate::linalg::pq::FS_MIN_BATCH), "fastscan");
+        assert_eq!(pq.batch_layout(crate::linalg::pq::FS_MIN_BATCH - 1), "plane");
+        assert_eq!(ladder.tiers()[1].batch_layout(64), "plane"); // sq8 never tiles
+        // a fast-scan batch through TierBatch stays bit-identical to
+        // per-query scoring and moves the labeled family monotonically
+        let obs = crate::obs::registry();
+        let before = obs.tier_rows_screened.handle("fastscan").get();
+        let qs: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..d).map(|_| rng.gaussian() as f32).collect()).collect();
+        let tqs: Vec<TierQuery> = qs.iter().map(|q| pq.encode_query(q)).collect();
+        let tb = TierBatch::new(pq, &tqs);
+        let mut out = vec![0f32; 4 * n];
+        tb.scores_all(0, n, &mut out);
+        for (j, tq) in tqs.iter().enumerate() {
+            let mut one = vec![0f32; n];
+            pq.scores(0, n, tq, &mut one);
+            for (a, b) in out[j * n..(j + 1) * n].iter().zip(&one) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fastscan batch q{j}");
+            }
+        }
+        assert!(obs.tier_rows_screened.handle("fastscan").get() >= before);
     }
 }

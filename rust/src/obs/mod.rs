@@ -167,6 +167,10 @@ pub struct Registry {
     pub screen_cert_misses: [Counter; 3],
     /// rows offered to a quantized pass-1 screen
     pub screen_rows_screened: Counter,
+    /// rows served by batched pass-1 scans per code layout (label:
+    /// `plane` / `fastscan`) — the adaptive controller's signal for
+    /// which scan path answered a request
+    pub tier_rows_screened: CounterFamily,
     /// rows exact-re-ranked in pass 2
     pub screen_rows_reranked: Counter,
     /// screens where the whole ladder failed to certify (f32 fallback)
@@ -400,6 +404,14 @@ pub fn render_with(extra: &ExtraMetrics<'_>) -> String {
         "Rows offered to quantized pass-1 screens",
         r.screen_rows_screened.get(),
     );
+    w.family(
+        "gmips_tier_rows_screened_total",
+        "Rows served by batched pass-1 scans per code layout",
+        "counter",
+    );
+    for (layout, v) in r.tier_rows_screened.snapshot() {
+        w.sample("gmips_tier_rows_screened_total", &[("layout", &layout)], v as f64);
+    }
     w.counter(
         "gmips_screen_rows_reranked_total",
         "Rows exact-re-ranked in pass 2",
@@ -959,6 +971,7 @@ mod tests {
         let _g = global_state_guard();
         let r = registry();
         r.screen_cert_hits[0].inc();
+        r.tier_rows_screened.handle("fastscan").add(4);
         r.ivf_rows_scanned.add(100);
         r.remote_retries.handle("0").add(2);
         r.remote_call_micros.handle("0").record(350.0);
@@ -978,6 +991,10 @@ mod tests {
                 >= 1.0
         );
         assert!(exp.value("gmips_ivf_rows_scanned_total", None).unwrap() >= 100.0);
+        assert!(
+            exp.value("gmips_tier_rows_screened_total", Some(("layout", "fastscan"))).unwrap()
+                >= 4.0
+        );
         assert!(
             exp.value("gmips_remote_retries_total", Some(("shard", "0"))).unwrap() >= 2.0
         );

@@ -7,6 +7,16 @@
 //! Larger inputs are chunked. One compiled executable per entry point,
 //! reused for the life of the process — no per-call compilation anywhere.
 //!
+//! Batched artifact sets (PR 10) additionally carry `scores_batch` /
+//! `partition_batch` / `expect_batch` over `[Q × d]` query groups and an
+//! integer `sq8_screen` entry (see `python/compile/aot.py`). This scorer
+//! derives the group size `Q` from the `scores_batch` entry's input
+//! shapes and overrides [`ScoreBackend::scores_batch`] to cross the
+//! device boundary once per query group instead of once per query;
+//! without the entry (older artifacts) it falls back to the per-query
+//! loop. The remaining batched entries are lowered and validated by the
+//! Python-side tests, ready for fused batch estimation to adopt.
+//!
 //! ## Thread safety
 //!
 //! The `xla` crate's PJRT wrappers hold `Rc` internals and raw pointers,
@@ -28,6 +38,8 @@ struct Inner {
     rt: Runtime,
     /// staging buffer for padded blocks
     stage: Vec<f32>,
+    /// staging buffer for padded query groups (`qbatch × d`)
+    qstage: Vec<f32>,
 }
 
 /// PJRT-backed scorer. All XLA access is serialized internally.
@@ -35,6 +47,10 @@ pub struct PjrtScorer {
     inner: Mutex<Inner>,
     block: usize,
     d: usize,
+    /// query-group size of the batched executables, derived from the
+    /// `scores_batch` entry's input shapes; `None` with older artifact
+    /// sets (batched calls fall back to the per-query executable loop)
+    qbatch: Option<usize>,
 }
 
 // SAFETY: see module docs — every touch of the non-Send internals happens
@@ -56,10 +72,21 @@ impl PjrtScorer {
         }
         let block = rt.manifest.block;
         let d = rt.manifest.d;
+        // Batched entries are optional: their presence (and the query
+        // group size) is read off the manifest shapes, so older artifact
+        // directories load unchanged and simply skip the batched path.
+        let qbatch = match rt.manifest.entry("scores_batch") {
+            Some(e) if rt.executable("scores_batch").is_ok() => {
+                e.inputs.get(1).and_then(|s| s.first()).copied().filter(|&q| q > 0)
+            }
+            _ => None,
+        };
+        let qstage = vec![0f32; qbatch.unwrap_or(0) * d];
         Ok(PjrtScorer {
-            inner: Mutex::new(Inner { rt, stage: vec![0f32; block * d] }),
+            inner: Mutex::new(Inner { rt, stage: vec![0f32; block * d], qstage }),
             block,
             d,
+            qbatch,
         })
     }
 
@@ -114,6 +141,30 @@ impl Inner {
         Ok(())
     }
 
+    /// One batched-executable call: a (possibly short) row block scored
+    /// for a (possibly short) query group. Returns the full query-major
+    /// `[qb × block]` output; the caller slices out the live region.
+    fn scores_batch_block(
+        &mut self,
+        rows: &[f32],
+        qgroup: &[f32],
+        block: usize,
+        d: usize,
+        qb: usize,
+    ) -> Result<Vec<f32>> {
+        let vlit = self.pad_literal(rows, block, d)?;
+        let qslit = if qgroup.len() == qb * d {
+            literal_f32(qgroup, &[qb as i64, d as i64])?
+        } else {
+            self.qstage[..qgroup.len()].copy_from_slice(qgroup);
+            self.qstage[qgroup.len()..].fill(0.0);
+            literal_f32(&self.qstage, &[qb as i64, d as i64])?
+        };
+        let exe = self.rt.executable("scores_batch")?;
+        let outs = exe.run(&[vlit, qslit])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
     fn partition_block(
         &mut self,
         rows: &[f32],
@@ -165,6 +216,47 @@ impl ScoreBackend for PjrtScorer {
             Ok(())
         })
         .expect("PJRT scores execution failed");
+    }
+
+    /// Batched scoring through the `scores_batch` executable: each row
+    /// block crosses the device boundary once per query *group* (the
+    /// manifest's `qbatch`) instead of once per query — the same
+    /// amortization the register-blocked native kernels get on the CPU.
+    /// Artifact sets without the batched entry fall back to the
+    /// per-query loop, so old artifacts keep working unchanged.
+    fn scores_batch(&self, rows: &[f32], d: usize, qs: &[f32], nq: usize, out: &mut [f32]) {
+        assert_eq!(d, self.d, "PjrtScorer compiled for d={}, got {d}", self.d);
+        let nrows = if d == 0 { 0 } else { rows.len() / d };
+        debug_assert_eq!(qs.len(), nq * d);
+        debug_assert_eq!(out.len(), nq * nrows);
+        let Some(qb) = self.qbatch else {
+            for j in 0..nq {
+                let (qj, oj) = (&qs[j * d..(j + 1) * d], &mut out[j * nrows..(j + 1) * nrows]);
+                self.scores(rows, d, qj, oj);
+            }
+            return;
+        };
+        let block = self.block;
+        self.with_inner(|inner| {
+            for j0 in (0..nq).step_by(qb) {
+                let j1 = (j0 + qb).min(nq);
+                let qgroup = &qs[j0 * d..j1 * d];
+                let mut start = 0;
+                while start < nrows {
+                    let end = (start + block).min(nrows);
+                    let full =
+                        inner.scores_batch_block(&rows[start * d..end * d], qgroup, block, d, qb)?;
+                    for g in 0..j1 - j0 {
+                        let dst = (j0 + g) * nrows + start;
+                        out[dst..dst + (end - start)]
+                            .copy_from_slice(&full[g * block..g * block + (end - start)]);
+                    }
+                    start = end;
+                }
+            }
+            Ok(())
+        })
+        .expect("PJRT batched scores execution failed");
     }
 
     fn max_sumexp(&self, rows: &[f32], d: usize, q: &[f32]) -> MaxSumExp {

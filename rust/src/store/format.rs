@@ -94,6 +94,9 @@ pub mod tag {
     pub const SQ4_CODES: u32 = 14;
     pub const PQ_META: u32 = 15;
     pub const PQ_CODES: u32 = 16;
+    /// Fast-scan tile-major PQ codes (PR 10). Optional: readers re-block
+    /// from `PQ_CODES` when absent, so pre-tiles snapshots open unchanged.
+    pub const PQ_TILES: u32 = 17;
 }
 
 /// Human name for a tag, for error messages.
@@ -115,6 +118,7 @@ pub fn tag_name(t: u32) -> &'static str {
         tag::SQ4_CODES => "sq4-codes",
         tag::PQ_META => "pq-meta",
         tag::PQ_CODES => "pq-codes",
+        tag::PQ_TILES => "pq-fastscan-tiles",
         _ => "unknown-section",
     }
 }

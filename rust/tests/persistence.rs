@@ -321,7 +321,11 @@ fn corruption_drill_errors_or_degrades_but_never_panics() {
             b[pos] ^= 0xFF;
             let label = format!("section tag={} byte {pos}", e.tag);
             let got = try_open(&b, &label);
-            if quant_tag(e.tag) {
+            if e.tag == tag::PQ_TILES {
+                // softer than the quant shadows: tiles re-block from the
+                // validated plane codes — clean open, not even degraded
+                assert_eq!(got, Some(false), "{label}: corrupt tiles must re-block cleanly");
+            } else if quant_tag(e.tag) {
                 assert_eq!(got, Some(true), "{label}: quantized shadow must degrade, not fail");
             } else {
                 assert!(got.is_none(), "{label}: non-quant corruption must be an error");
@@ -342,6 +346,97 @@ fn corruption_drill_errors_or_degrades_but_never_panics() {
     }
 
     let _ = std::fs::remove_file(&drill);
+}
+
+/// Snapshot version migration (PR 10): a PR-7-era snapshot carries only
+/// plane-major `PQ_META`/`PQ_CODES` sections. Opening one must re-block
+/// the fast-scan tiles in memory (clean open — no error, no degrade),
+/// answer bit-identically on single and batched queries, and re-save in
+/// the tiled format. Also drills the new `PQ_TILES` tag: corrupting its
+/// payload re-blocks cleanly instead of degrading.
+#[test]
+fn pre_tiles_pq_snapshot_migrates_and_resaves_tiled() {
+    let mut cfg = base_cfg(IndexKind::Brute, QuantKind::Pq);
+    cfg.index.pq_bits = 4; // 4-bit codes are the fast-scan-eligible tier
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let ds = Arc::new(data::load_or_generate(&cfg.data));
+    let index = mips::build_index_typed(&ds, &cfg.index, backend.clone()).unwrap();
+    let path = tmp_path("pretiles_src");
+    let _ = std::fs::remove_file(&path);
+    store::save_index(&path, &cfg, &ds, &index).unwrap();
+
+    let mut rng = Pcg64::new(0x99);
+    let theta = data::random_theta(&ds, 0.05, &mut rng);
+    let qs_owned: Vec<Vec<f32>> =
+        (0..8).map(|_| data::random_theta(&ds, 0.05, &mut rng)).collect();
+    let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+    let want = index.as_dyn().top_k(&theta, 12);
+    let want_batch = index.as_dyn().top_k_batch(&qs, 12);
+
+    // a fresh 4-bit PQ save must carry the tiled section
+    let good = std::fs::read(&path).unwrap();
+    let entries: Vec<store::SectionEntry> =
+        Snapshot::open(&path, OpenMode::Read).unwrap().sections().to_vec();
+    let tiles_at =
+        entries.iter().position(|e| e.tag == tag::PQ_TILES).expect("fresh save must write tiles");
+    assert!(entries[tiles_at].len > 0, "tiles section must be non-empty");
+    let table_off = u64::from_le_bytes(good[24..32].try_into().unwrap()) as usize;
+    let _ = std::fs::remove_file(&path);
+
+    // opens bit-identically (single + 8-query batch), never degraded
+    let open_and_check = |bytes: &[u8], label: &str| {
+        let p = tmp_path("pretiles_mut");
+        std::fs::write(&p, bytes).unwrap();
+        for mmap in [false, true] {
+            let mut c = cfg.clone();
+            c.index.mmap = mmap;
+            let opened = store::open_index(&p, &c, backend.clone())
+                .unwrap_or_else(|e| panic!("{label} mmap={mmap}: must open: {e}"));
+            assert!(!opened.degraded, "{label} mmap={mmap}: migration must not degrade");
+            let got = opened.index.as_dyn().top_k(&theta, 12);
+            assert_topk_parity(&got, &want, &format!("{label} mmap={mmap}"));
+            let got_batch = opened.index.as_dyn().top_k_batch(&qs, 12);
+            for (g, w) in got_batch.iter().zip(&want_batch) {
+                assert_topk_parity(g, w, &format!("{label} mmap={mmap} batch"));
+            }
+            if !mmap {
+                // the migrated view must re-save in the tiled format
+                let resave = tmp_path("pretiles_resave");
+                let _ = std::fs::remove_file(&resave);
+                store::save_index(&resave, &c, &opened.ds, &opened.index).unwrap();
+                let resaved = Snapshot::open(&resave, OpenMode::Read).unwrap();
+                let te = resaved
+                    .sections()
+                    .iter()
+                    .find(|e| e.tag == tag::PQ_TILES)
+                    .unwrap_or_else(|| panic!("{label}: re-save must write tiles"));
+                assert_eq!(te.len, entries[tiles_at].len, "{label}: re-saved tile bytes");
+                let _ = std::fs::remove_file(&resave);
+            }
+        }
+        let _ = std::fs::remove_file(&p);
+    };
+
+    // (a) PR-7-era file: no PQ_TILES section at all. Simulated by
+    // retagging the entry as an unknown section — readers skip unknown
+    // tags, which is byte-for-byte what an old writer's table looks like
+    // to the PQ loader. Payload checksums are untouched.
+    let mut pre_tiles = good.clone();
+    let tag_pos = table_off + tiles_at * store::format::ENTRY_LEN;
+    pre_tiles[tag_pos..tag_pos + 4].copy_from_slice(&0xFFFF_FFFEu32.to_le_bytes());
+    open_and_check(&pre_tiles, "pre-tiles snapshot");
+
+    // (b) corrupt tiles payload: first and last byte — re-block, not
+    // degrade (the drill-style check for the new tag)
+    let te = &entries[tiles_at];
+    for pos in [te.off as usize, (te.off + te.len - 1) as usize] {
+        let mut b = good.clone();
+        b[pos] ^= 0xFF;
+        open_and_check(&b, &format!("corrupt tiles byte {pos}"));
+    }
+
+    // (c) untouched file still opens with tiles served from the snapshot
+    open_and_check(&good, "tiled snapshot");
 }
 
 #[test]

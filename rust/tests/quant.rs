@@ -397,6 +397,73 @@ fn adversarial_flat_data_walks_the_ladder() {
 }
 
 #[test]
+fn pq_fastscan_batches_bit_parity_through_update_and_compact() {
+    // PR 10 acceptance: batches of ≥ 4 queries on the 4-bit PQ tier ride
+    // the register-resident fast-scan tiles (`PqView::scores_batch`
+    // dispatches internally), and results stay bit-identical to the
+    // f32-only scan on brute, IVF — through update_row + compact, which
+    // re-blocks the tiles — and the sharded index.
+    let ds = Arc::new(synth::imagenet_like(3_000, 16, 25, 0.25, 71));
+    let backend: Arc<dyn ScoreBackend> = Arc::new(NativeScorer);
+    let mut cfg = ivf_cfg(QuantKind::Pq);
+    cfg.pq_bits = 4;
+    let mut rng = Pcg64::new(72);
+    // the trained tier really carries tiles at this shape
+    let pv = PqView::train(&ds.data, ds.d, 2, 4, 1_024, 5, 73);
+    assert!(pv.serves_fastscan(8) && !pv.serves_fastscan(3));
+    let batch8 = |rng: &mut Pcg64| -> Vec<Vec<f32>> {
+        (0..8).map(|_| data::random_theta(&ds, 0.05, rng)).collect()
+    };
+    // brute
+    let fb = BruteForce::new(ds.clone(), backend.clone());
+    let qb = BruteForce::new(ds.clone(), backend.clone()).with_tier_cfg(&cfg);
+    let qs_owned = batch8(&mut rng);
+    let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+    let got = qb.top_k_batch(&qs, 25);
+    let want = fb.top_k_batch(&qs, 25);
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_parity(g, w, &format!("brute fastscan q{j}"));
+    }
+    // IVF through the update lifecycle (compact() re-encodes → re-tiles)
+    let mut qi = IvfIndex::build(ds.clone(), &cfg, backend.clone()).unwrap();
+    let mut fi = IvfIndex::build(ds.clone(), &ivf_cfg(QuantKind::Off), backend.clone()).unwrap();
+    let mut urng = Pcg64::new(74);
+    for stage in ["fresh", "pending", "compacted"] {
+        if stage == "pending" {
+            for id in [5u32, 1_024, 2_900] {
+                let v: Vec<f32> = (0..ds.d).map(|_| urng.gaussian() as f32 * 0.3).collect();
+                qi.update_row(id, &v);
+                fi.update_row(id, &v);
+            }
+        }
+        if stage == "compacted" {
+            qi.compact();
+            fi.compact();
+        }
+        let qs_owned = batch8(&mut rng);
+        let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+        let got = qi.top_k_batch(&qs, 30);
+        let want = fi.top_k_batch(&qs, 30);
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_parity(g, w, &format!("ivf fastscan {stage} q{j}"));
+            assert_parity(g, &qi.top_k(qs[j], 30), &format!("ivf fastscan {stage} single q{j}"));
+        }
+    }
+    // sharded (per-shard codebooks + per-shard tiles)
+    let mono = gmips::mips::build_index(&ds, &cfg, backend.clone()).unwrap();
+    let mut scfg = cfg.clone();
+    scfg.shards = 3;
+    let sharded = ShardedIndex::build(&ds, &scfg, backend.clone()).unwrap();
+    let qs_owned = batch8(&mut rng);
+    let qs: Vec<&[f32]> = qs_owned.iter().map(|v| v.as_slice()).collect();
+    let got = sharded.top_k_batch(&qs, 21);
+    let want = mono.top_k_batch(&qs, 21);
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_parity(g, w, &format!("sharded fastscan q{j}"));
+    }
+}
+
+#[test]
 fn multi_query_batches_bit_identical_to_singles_on_all_tiers() {
     // satellite (d): the batched (register-blocked / shared-LUT) kernels
     // drive top_k_batch to exactly the per-query results on every tier
